@@ -1,0 +1,101 @@
+//! Serving scenario: the activation-accelerator coordinator under a
+//! bursty multi-tenant load — mixed methods, mixed request sizes,
+//! many client threads — reporting throughput, latency and batching
+//! efficiency, plus a backpressure demonstration.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example accelerator_serve
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tanh_vlsi::approx::MethodId;
+use tanh_vlsi::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend,
+};
+use tanh_vlsi::runtime::{ArtifactDir, EngineServer};
+use tanh_vlsi::util::prng::Prng;
+
+fn run_load(coord: Arc<Coordinator>, clients: usize, reqs_per_client: usize) -> f64 {
+    let start = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                let mut g = Prng::new(c as u64 + 1);
+                for i in 0..reqs_per_client {
+                    let method = MethodId::all()[(c + i) % 6];
+                    // bursty sizes: mostly small, occasionally large
+                    let n = if g.bool(0.9) { 8 + g.usize_below(56) } else { 512 };
+                    let values: Vec<f32> =
+                        (0..n).map(|_| g.f64_in(-6.0, 6.0) as f32).collect();
+                    match coord.submit(method, values) {
+                        Ok(rx) => {
+                            let _ = rx.recv();
+                        }
+                        Err(_) => {
+                            // backpressure: shed + retry once after a beat
+                            std::thread::sleep(std::time::Duration::from_micros(100));
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    start.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    // Prefer the compiled-PJRT backend; fall back to the golden models
+    // when artifacts are absent so the example always runs.
+    let (backend, backend_name): (Arc<dyn tanh_vlsi::coordinator::ExecBackend>, &str) =
+        match ArtifactDir::open(ArtifactDir::default_path()) {
+            Ok(dir) => {
+                let engine = Arc::new(EngineServer::spawn(dir)?);
+                println!("PJRT platform: {}", engine.platform());
+                (Arc::new(GraphBackend::load_all(engine, 1024)?), "pjrt")
+            }
+            Err(_) => {
+                println!("artifacts not found — using golden-model backend");
+                (Arc::new(GoldenBackend::table1(1024)), "golden")
+            }
+        };
+
+    let coord = Arc::new(Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_wait: std::time::Duration::from_micros(300),
+                ..Default::default()
+            },
+        },
+    ));
+
+    let clients = 8;
+    let reqs = 400;
+    println!("\ndriving {clients} client threads × {reqs} requests on '{backend_name}' ...");
+    let secs = run_load(coord.clone(), clients, reqs);
+
+    let m = coord.metrics();
+    println!("\n== results ==");
+    println!("requests completed : {}", m.requests);
+    println!("activations        : {}", m.elements);
+    println!("wall time          : {secs:.3} s");
+    println!("request throughput : {:.0} req/s", m.requests as f64 / secs);
+    println!("activation rate    : {:.2} Mact/s", m.elements as f64 / secs / 1e6);
+    println!("batches executed   : {} ({:.1} req/batch)", m.batches, m.requests as f64 / m.batches.max(1) as f64);
+    println!("batch efficiency   : {:.1} %", 100.0 * m.batch_efficiency());
+    println!("mean latency       : {:.0} µs", m.mean_latency_us());
+    println!("max latency        : {} µs", m.latency_us_max);
+    println!("rejected (backpressure): {}", m.rejected);
+    println!("errors             : {}", m.errors);
+    assert_eq!(m.errors, 0);
+    assert!(m.requests > 0);
+
+    Arc::try_unwrap(coord).ok().map(|c| c.shutdown());
+    Ok(())
+}

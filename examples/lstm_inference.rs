@@ -1,0 +1,131 @@
+//! End-to-end driver: LSTM sequence classification served through the
+//! full three-layer stack.
+//!
+//! The LSTM was trained at build time (`make artifacts`) with exact f32
+//! tanh on the sign-of-running-sum task (see `python/compile/model.py`);
+//! here the rust runtime loads the AOT'd inference graphs — one with
+//! exact tanh, one with every tanh/sigmoid routed through the PWL
+//! approximation kernel — generates a fresh synthetic test set, and
+//! reports accuracy, prediction agreement and serving latency. This is
+//! the paper's motivating scenario (§I: LSTMs need hardware tanh) made
+//! concrete.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example lstm_inference
+//! ```
+
+use std::time::Instant;
+
+use tanh_vlsi::runtime::{ArtifactDir, EngineServer, TensorValue};
+use tanh_vlsi::util::prng::Prng;
+
+const BATCH: usize = 32;
+const SEQ: usize = 16;
+const DIM: usize = 4;
+
+/// Synthetic test batch matching `model.make_toy_batch`.
+fn make_batch(g: &mut Prng) -> (Vec<f32>, Vec<i32>) {
+    let mut seq = Vec::with_capacity(BATCH * SEQ * DIM);
+    let mut labels = Vec::with_capacity(BATCH);
+    for _ in 0..BATCH {
+        let mut sum = 0.0f32;
+        for _ in 0..SEQ * DIM {
+            let v = if g.bool(0.5) { 1.0 } else { -1.0 };
+            sum += v;
+            seq.push(v);
+        }
+        labels.push(if sum > 0.0 { 1 } else { 0 });
+    }
+    (seq, labels)
+}
+
+fn accuracy(logits: &[f32], labels: &[i32]) -> f64 {
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|(i, &l)| {
+            let pred = if logits[2 * i + 1] > logits[2 * i] { 1 } else { 0 };
+            pred == l
+        })
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = EngineServer::spawn(ArtifactDir::open(ArtifactDir::default_path())?)?;
+    println!("PJRT platform: {}", engine.platform());
+    engine
+        .preload(&["lstm_logits_ref", "lstm_logits_pwl", "lstm_logits_taylor1"])
+        .map_err(anyhow::Error::msg)?;
+
+    let mut g = Prng::new(0xFEED);
+    let batches = 32;
+    let mut stats: Vec<(String, f64, f64, f64)> = Vec::new(); // (name, acc, agree, ms)
+
+    for method in ["ref", "pwl", "taylor1"] {
+        let name = format!("lstm_logits_{method}");
+        let mut g2 = Prng::new(0xFEED); // same test set for every method
+        let mut acc_sum = 0.0;
+        let mut agree_sum = 0.0;
+        let mut elapsed = 0.0;
+        for _ in 0..batches {
+            let (seq, labels) = make_batch(&mut g2);
+            let t0 = Instant::now();
+            let out = engine
+                .execute(&name, vec![TensorValue::F32(seq.clone())])
+                .map_err(anyhow::Error::msg)?;
+            elapsed += t0.elapsed().as_secs_f64();
+            let logits = out[0].as_f32()?;
+            acc_sum += accuracy(logits, &labels);
+            // agreement vs exact-tanh model on the same batch
+            let ref_out = engine
+                .execute("lstm_logits_ref", vec![TensorValue::F32(seq)])
+                .map_err(anyhow::Error::msg)?;
+            let ref_logits = ref_out[0].as_f32()?;
+            let agree = labels
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| {
+                    (logits[2 * i + 1] > logits[2 * i])
+                        == (ref_logits[2 * i + 1] > ref_logits[2 * i])
+                })
+                .count();
+            agree_sum += agree as f64 / labels.len() as f64;
+        }
+        stats.push((
+            method.to_string(),
+            acc_sum / batches as f64,
+            agree_sum / batches as f64,
+            1e3 * elapsed / batches as f64,
+        ));
+        let _ = g.next_u64();
+    }
+
+    println!(
+        "\nLSTM sign-of-running-sum classification, {} batches × {} sequences (seq len {}):\n",
+        batches, BATCH, SEQ
+    );
+    println!(
+        "{:10} {:>9} {:>18} {:>14}",
+        "tanh", "accuracy", "agreement w/ ref", "latency/batch"
+    );
+    for (name, acc, agree, ms) in &stats {
+        println!("{name:10} {:>8.1}% {:>17.1}% {:>11.2} ms", 100.0 * acc, 100.0 * agree, ms);
+    }
+
+    let ref_acc = stats[0].1;
+    for (name, acc, agree, _) in &stats[1..] {
+        assert!(
+            (acc - ref_acc).abs() < 0.02,
+            "{name}: accuracy drop {:.3} vs ref {:.3}",
+            acc,
+            ref_acc
+        );
+        assert!(*agree > 0.97, "{name}: agreement {agree}");
+    }
+    println!(
+        "\n✓ approximated activations preserve model quality \
+         (Δaccuracy < 2%, agreement > 97%)"
+    );
+    Ok(())
+}

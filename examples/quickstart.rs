@@ -1,0 +1,80 @@
+//! Quickstart: evaluate all six approximations, inspect their errors,
+//! hardware inventories and pipelined datapaths — the library's public
+//! API in one page.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tanh_vlsi::approx::{table1_suite, IoSpec, TanhApprox};
+use tanh_vlsi::cost::{CostModel, UnitLibrary};
+use tanh_vlsi::error::{measure, InputGrid};
+use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::hw::table1_pipeline;
+
+fn main() {
+    let io = IoSpec::table1(); // S3.12 in → S.15 out, the paper's setup
+    let x = Fx::from_f64(1.25, io.input);
+    println!("tanh({}) = {:.9}\n", x.to_f64(), x.to_f64().tanh());
+
+    // 1. Evaluate each Table I configuration through its bit-exact
+    //    fixed-point datapath model.
+    println!("== datapath evaluation ==");
+    for m in table1_suite() {
+        let y = m.eval_fx(x, io.output);
+        println!(
+            "{:28} -> {:.9}  (error {:+.2e})",
+            m.describe(),
+            y.to_f64(),
+            y.to_f64() - x.to_f64().tanh()
+        );
+    }
+
+    // 2. Exhaustive error metrics over the analysis grid (Table I).
+    println!("\n== exhaustive error (|x| < 6, every S3.12 point) ==");
+    let grid = InputGrid::table1();
+    for m in table1_suite() {
+        let e = measure(m.as_ref(), grid, io.output);
+        println!(
+            "{:28} max {:.2e} @ x={:+.3}   rms {:.2e}   ({} points)",
+            m.describe(),
+            e.max_abs,
+            e.argmax,
+            e.rms,
+            e.points
+        );
+    }
+
+    // 3. Hardware cost (paper §IV): component inventory priced by the
+    //    unit gate library.
+    println!("\n== hardware cost (unit gate library) ==");
+    let model = CostModel::new();
+    for m in table1_suite() {
+        let inv = m.inventory(io);
+        let cost = model.price(&inv);
+        println!(
+            "{:28} {} add, {} mul, {} div, {} LUT entries -> {:.0} GE",
+            m.describe(),
+            inv.adders,
+            inv.multipliers,
+            inv.dividers,
+            inv.lut_entries,
+            cost.area_ge
+        );
+    }
+
+    // 4. The cycle-level pipelined datapath (Figs 3/4/5).
+    println!("\n== pipelined datapaths ==");
+    let lib = UnitLibrary::default();
+    for m in table1_suite() {
+        let pipe = table1_pipeline(m.id(), io.output);
+        let y = pipe.eval(x);
+        assert_eq!(y.raw(), m.eval_fx(x, io.output).raw(), "pipeline != golden");
+        println!(
+            "{:20} latency {:2} cycles, critical stage {:.1} FO4, bit-exact ✓",
+            pipe.name,
+            pipe.latency(),
+            pipe.critical_delay(&lib)
+        );
+    }
+}

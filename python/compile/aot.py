@@ -1,0 +1,148 @@
+"""AOT pipeline: lower every L2 graph to HLO **text** artifacts.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_module().serialize()``
+— is the interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 (behind the
+published ``xla`` 0.1.6 crate) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+
+- ``tanh_<method>_<n>.hlo.txt``  — activation graphs, 6 methods + ref;
+- ``tanh_pwl_raw_<n>.hlo.txt``   — bit-exact int32 PWL graph;
+- ``lstm_cell_<m>.hlo.txt``      — single-step LSTM, exact + pwl tanh;
+- ``lstm_logits_<m>.hlo.txt``    — full-sequence LSTM classifier;
+- ``manifest.json``              — shapes/dtypes/metadata for the rust
+  runtime loader;
+- ``test_vectors.json``          — input/output probes for the rust
+  integration tests (the cross-language bit-exactness check).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+#: Serving batch for the activation graphs (multiple of the kernel block).
+TANH_N = 1024
+#: LSTM export shape.
+LSTM_BATCH = 32
+LSTM_SEQ = 16
+LSTM_INPUT = 4
+LSTM_HIDDEN = 64
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """jit → lower → StableHLO → XlaComputation → HLO text
+    (``return_tuple=True`` so the rust side unwraps a tuple)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides dense array literals as `constant({...})`, which the old
+    # text parser silently reads back as zeros — every baked LUT would
+    # vanish (guarded by test_aot::test_no_elided_constants).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def emit(out_dir: pathlib.Path, name: str, fn, args, manifest: dict):
+    """Lowers one graph and records its manifest entry."""
+    text = to_hlo_text(fn, args)
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    manifest[name] = {
+        "file": path.name,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+        ],
+    }
+    print(f"  wrote {path.name} ({len(text)} chars)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--train-steps", type=int, default=300)
+    parser.add_argument("--seed", type=int, default=42)
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {}
+    t0 = time.time()
+
+    # --- activation graphs -------------------------------------------------
+    print("[aot] activation graphs")
+    for method in list(M.KERNELS) + ["ref"]:
+        fn, a = M.tanh_graph(method, TANH_N)
+        emit(out_dir, f"tanh_{method}_{TANH_N}", fn, a, manifest)
+    fn, a = M.tanh_raw_graph(TANH_N)
+    emit(out_dir, f"tanh_pwl_raw_{TANH_N}", fn, a, manifest)
+
+    # --- build-time training ----------------------------------------------
+    print(f"[aot] training toy LSTM ({args.train_steps} steps)")
+    params, curve, acc = M.train_toy_lstm(
+        seed=args.seed, steps=args.train_steps, hidden=LSTM_HIDDEN,
+        seq_len=LSTM_SEQ, input_dim=LSTM_INPUT, verbose=True,
+    )
+    print(f"  final train-dist accuracy (exact tanh): {acc:.3f}")
+
+    # --- LSTM graphs (exact + the Table I flagship approximations) ---------
+    print("[aot] LSTM graphs")
+    for method in ["ref", "pwl", "taylor1"]:
+        fn, a = M.lstm_cell_graph(params, method, LSTM_BATCH, LSTM_INPUT, LSTM_HIDDEN)
+        emit(out_dir, f"lstm_cell_{method}", fn, a, manifest)
+        fn, a = M.lstm_logits_graph(params, method, LSTM_BATCH, LSTM_SEQ, LSTM_INPUT)
+        emit(out_dir, f"lstm_logits_{method}", fn, a, manifest)
+
+    # --- test vectors for the rust integration suite -----------------------
+    print("[aot] test vectors")
+    rng = np.random.default_rng(7)
+    xs = rng.uniform(-7, 7, TANH_N).astype(np.float32)
+    vectors = {
+        "tanh_input_f32": xs.tolist(),
+        "tanh_expected": {},
+        "lstm": {},
+        "training": {
+            "loss_curve": curve,
+            "final_accuracy": acc,
+            "steps": args.train_steps,
+        },
+    }
+    for method in list(M.KERNELS) + ["ref"]:
+        fn, _ = M.tanh_graph(method, TANH_N)
+        vectors["tanh_expected"][method] = np.asarray(fn(jnp.asarray(xs))[0]).tolist()
+    raws = rng.integers(-32768, 32768, TANH_N).astype(np.int32)
+    fn, _ = M.tanh_raw_graph(TANH_N)
+    vectors["tanh_raw_input"] = raws.tolist()
+    vectors["tanh_raw_expected"] = np.asarray(fn(jnp.asarray(raws))[0]).tolist()
+
+    seq, labels = M.make_toy_batch(rng, LSTM_BATCH, LSTM_SEQ, LSTM_INPUT)
+    vectors["lstm"]["seq"] = seq.reshape(-1).tolist()
+    vectors["lstm"]["labels"] = labels.tolist()
+    for method in ["ref", "pwl"]:
+        fn, _ = M.lstm_logits_graph(params, method, LSTM_BATCH, LSTM_SEQ, LSTM_INPUT)
+        logits = np.asarray(fn(jnp.asarray(seq))[0])
+        vectors["lstm"][f"logits_{method}"] = logits.reshape(-1).tolist()
+
+    (out_dir / "test_vectors.json").write_text(json.dumps(vectors))
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] done in {time.time() - t0:.1f}s — {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""L1 — Pallas kernels for the six tanh approximations.
+
+One module per method (mirroring ``rust/src/approx/``), a shared
+fixed-point emulation layer, the pure-jnp oracles in :mod:`.ref`, and a
+dispatch table used by the L2 model and the AOT pipeline.
+"""
+
+from __future__ import annotations
+
+from .catmull_rom import catmull_rom_tanh_f32
+from .lambert import lambert_tanh_f32
+from .pwl import pwl_tanh_f32, pwl_tanh_raw
+from .taylor import taylor_tanh_f32
+from .velocity import velocity_tanh_f32
+
+#: Table I kernel configurations, keyed by the method names the rust
+#: coordinator uses in artifact filenames.
+KERNELS = {
+    "pwl": lambda x: pwl_tanh_f32(x, step=1.0 / 64.0),
+    "taylor1": lambda x: taylor_tanh_f32(x, step=1.0 / 16.0, terms=3),
+    "taylor2": lambda x: taylor_tanh_f32(x, step=1.0 / 8.0, terms=4),
+    "catmull_rom": lambda x: catmull_rom_tanh_f32(x, step=1.0 / 16.0),
+    "velocity": lambda x: velocity_tanh_f32(x, threshold=1.0 / 128.0),
+    "lambert": lambda x: lambert_tanh_f32(x, k_terms=7),
+}
+
+__all__ = [
+    "KERNELS",
+    "catmull_rom_tanh_f32",
+    "lambert_tanh_f32",
+    "pwl_tanh_f32",
+    "pwl_tanh_raw",
+    "taylor_tanh_f32",
+    "velocity_tanh_f32",
+]

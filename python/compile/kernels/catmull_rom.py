@@ -1,0 +1,78 @@
+"""Method C — Catmull-Rom spline as a Pallas kernel (float math model).
+
+Control points tanh(i·step) live in a broadcast LUT; the negative-index
+point of the first segment uses odd reflection (P_{−1} = −P_1) exactly
+like the rust datapath. The 4-element dot product against the cubic
+basis is the paper's eq. (17) MAC.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DEFAULT_BLOCK, elementwise_call
+
+
+def make_point_lut(step: float, domain_max: float, guard: int = 2) -> np.ndarray:
+    """Control points tanh(i·step), two guard points past the domain."""
+    n = math.ceil(domain_max / step) + 1 + guard
+    return np.tanh(np.arange(n) * step).astype(np.float32)
+
+
+def make_catmull_rom_kernel(step: float = 1.0 / 16.0, domain_max: float = 6.0):
+    """Builds the kernel body.
+
+    Perf (EXPERIMENTS.md §Perf iter 3): all four control points come
+    from ONE one-hot matmul against a pre-reflected [segments, 4] table
+    (row k = [P_{k−1}, P_k, P_{k+1}, P_{k+2}], odd reflection baked in)
+    instead of four separate lookups — 4× fewer LUT fetch FLOPs and the
+    MXU-shaped access pattern.
+    """
+    lut = make_point_lut(step, domain_max)
+    n_lut = int(lut.shape[0])
+    n_seg = n_lut - 2  # need k+2 ≤ n_lut-1
+
+    def p(i: int) -> float:
+        return -float(lut[-i]) if i < 0 else float(lut[i])
+
+    quad_table = jnp.asarray(
+        np.array(
+            [[p(k - 1), p(k), p(k + 1), p(k + 2)] for k in range(n_seg)],
+            dtype=np.float32,
+        )
+    )
+    inv_step = 1.0 / step
+
+    def kernel(x_ref, table_ref, o_ref):
+        x = x_ref[...]
+        table_v = table_ref[...]
+        neg = x < 0
+        mag = jnp.abs(x)
+        sat = mag >= domain_max
+        k = jnp.clip(jnp.floor(mag * inv_step).astype(jnp.int32), 0, n_seg - 1)
+        t = mag * inv_step - k.astype(jnp.float32)
+        t2, t3 = t * t, t * t * t
+        b0 = 0.5 * (-t3 + 2.0 * t2 - t)
+        b1 = 0.5 * (3.0 * t3 - 5.0 * t2 + 2.0)
+        b2 = 0.5 * (-3.0 * t3 + 4.0 * t2 + t)
+        b3 = 0.5 * (t3 - t2)
+        iota = jnp.arange(n_seg, dtype=jnp.int32)
+        onehot = (k[:, None] == iota[None, :]).astype(jnp.float32)
+        pts = onehot @ table_v  # [block, 4]
+        y = b0 * pts[:, 0] + b1 * pts[:, 1] + b2 * pts[:, 2] + b3 * pts[:, 3]
+        y = jnp.clip(y, 0.0, 1.0)
+        y = jnp.where(sat, 1.0, y)
+        o_ref[...] = jnp.where(neg, -y, y).astype(jnp.float32)
+
+    return kernel, quad_table
+
+
+def catmull_rom_tanh_f32(x, step: float = 1.0 / 16.0, domain_max: float = 6.0,
+                         block: int = DEFAULT_BLOCK):
+    """Applies the Catmull-Rom kernel to an f32 batch."""
+    kernel, lut = make_catmull_rom_kernel(step, domain_max)
+    return elementwise_call(kernel, jnp.asarray(x, jnp.float32), jnp.float32, block,
+                            consts=(lut,))

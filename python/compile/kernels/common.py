@@ -1,0 +1,75 @@
+"""Shared Pallas glue: elementwise-map kernel launcher.
+
+Every approximation kernel is an elementwise map over a batch vector,
+tiled along the batch dimension by BlockSpec — the TPU-shaped analogue of
+the paper's streaming datapath (HBM→VMEM tiles instead of input
+registers; see DESIGN.md §5 Hardware-Adaptation).
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md), and correctness is validated through the
+interpret path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def lut_lookup(lut, idx):
+    """LUT fetch as a one-hot matmul instead of a gather.
+
+    Two reasons: (a) on TPU a small-table lookup via one-hot × table on
+    the MXU beats a serialized gather — this is the idiomatic Pallas
+    shape for the paper's hardwired LUTs; (b) the deployment bridge
+    (HLO text → xla_extension 0.5.1) mis-executes `gather`, so emitted
+    graphs must avoid it entirely (guarded by test_aot's no-gather
+    check).
+
+    Float tables go through a dot; integer tables through an exact
+    masked sum (both bit-preserving for the paper's word widths).
+    """
+    n = lut.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    onehot = idx[:, None] == iota[None, :]
+    if jnp.issubdtype(lut.dtype, jnp.integer):
+        return jnp.sum(jnp.where(onehot, lut[None, :], 0), axis=1, dtype=lut.dtype)
+    return onehot.astype(lut.dtype) @ lut
+
+
+#: Default block (tile) length along the batch dimension. 256 elements
+#: keeps each tile's I/O + the broadcast LUT well under VMEM (~16 MiB):
+#: the largest Table I LUT is 387 × int32 ≈ 1.5 KiB, tiles are 1-4 KiB.
+DEFAULT_BLOCK = 256
+
+
+def elementwise_call(kernel_fn, x, out_dtype, block: int = DEFAULT_BLOCK, consts=()):
+    """Launches ``kernel_fn(x_ref, *const_refs, o_ref)`` tiled over a 1-D
+    batch.
+
+    ``consts`` are whole-array inputs (LUTs / register files) broadcast
+    into every block — the VMEM-resident tables of the paper's datapaths
+    (Pallas kernels cannot capture traced constants; tables enter as
+    explicit operands with a constant index map).
+
+    The batch length must be a multiple of ``block`` (the AOT pipeline
+    pads to this; the rust coordinator batches to fixed shapes anyway —
+    one compiled executable per batch size).
+    """
+    n = x.shape[0]
+    if n % block != 0:
+        raise ValueError(f"batch {n} not a multiple of block {block}")
+    grid = (n // block,)
+    in_specs = [pl.BlockSpec((block,), lambda i: (i,))]
+    for c in consts:
+        ndim = c.ndim
+        in_specs.append(pl.BlockSpec(c.shape, lambda i, _n=ndim: (0,) * _n))
+    return pl.pallas_call(
+        kernel_fn,
+        out_shape=jax.ShapeDtypeStruct((n,), out_dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x, *consts)

@@ -1,0 +1,106 @@
+"""Fixed-point (Q-format) emulation in JAX — mirrors ``rust/src/fixed/``.
+
+The rust layer-3 golden models compute in signed Q-formats; these helpers
+reproduce the same semantics (two's-complement raw words, saturating
+quantization, round-half-away / round-half-even right shifts) on int32
+words so the PWL Pallas kernel is *bit-exact* against the rust datapath.
+
+All functions are jittable and usable inside Pallas kernels (they are
+pure jnp ops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Signed fixed-point format: 1 sign bit + int_bits + frac_bits.
+
+    Mirrors ``rust/src/fixed/format.rs``.
+    """
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def width(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def max_raw(self) -> int:
+        return (1 << (self.int_bits + self.frac_bits)) - 1
+
+    @property
+    def min_raw(self) -> int:
+        return -(1 << (self.int_bits + self.frac_bits))
+
+    @property
+    def ulp(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"S{self.int_bits or ''}.{self.frac_bits}"
+
+
+#: The paper's formats (Table I / Table III).
+S3_12 = QFormat(3, 12)
+S2_13 = QFormat(2, 13)
+S_15 = QFormat(0, 15)
+S2_5 = QFormat(2, 5)
+S_7 = QFormat(0, 7)
+
+
+def quantize(values, fmt: QFormat, dtype=jnp.int32):
+    """f64/f32 → raw words, round-half-away-from-zero, saturating.
+
+    Matches ``Fx::from_f64`` (Round::NearestAway) in rust. Computation
+    stays in the input dtype: f32 is exact here because all paper
+    formats have raw magnitudes < 2^24.
+    """
+    scaled = jnp.asarray(values) * float(1 << fmt.frac_bits)
+    # jnp.round is half-to-even; implement half-away explicitly.
+    r = jnp.where(scaled >= 0, jnp.floor(scaled + 0.5), jnp.ceil(scaled - 0.5))
+    r = jnp.clip(r, fmt.min_raw, fmt.max_raw)
+    return r.astype(dtype)
+
+
+def dequantize(raw, fmt: QFormat, dtype=jnp.float64):
+    """raw words → real values (exact)."""
+    return raw.astype(dtype) * fmt.ulp
+
+
+def shift_right_nearest_away(v, sh: int):
+    """Arithmetic right shift with round-half-away-from-zero.
+
+    Matches ``Round::NearestAway.shift_right`` in rust. ``sh`` must be a
+    static python int ≥ 0.
+    """
+    if sh == 0:
+        return v
+    half = 1 << (sh - 1)
+    pos = (v + half) >> sh
+    neg = -((-v + half) >> sh)
+    return jnp.where(v >= 0, pos, neg)
+
+
+def shift_right_nearest_even(v, sh: int):
+    """Arithmetic right shift with round-half-to-even.
+
+    Matches ``Round::NearestEven.shift_right`` in rust.
+    """
+    if sh == 0:
+        return v
+    floor = v >> sh
+    rem = v - (floor << sh)
+    half = 1 << (sh - 1)
+    round_up = (rem > half) | ((rem == half) & ((floor & 1) == 1))
+    return floor + round_up.astype(v.dtype)
+
+
+def saturate(raw, fmt: QFormat):
+    """Clamp raw words into the format's representable range."""
+    return jnp.clip(raw, fmt.min_raw, fmt.max_raw)

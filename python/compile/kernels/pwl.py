@@ -1,0 +1,105 @@
+"""Method A — PWL interpolation as a *bit-exact* int32 Pallas kernel.
+
+This is the flagship kernel: it reproduces the rust fixed-point datapath
+(``rust/src/approx/pwl.rs`` / ``rust/src/hw/poly_dp.rs``) raw-word for
+raw-word. Inputs are S3.12 raw words, outputs S.15 raw words; the LUT is
+generated at trace time with the same round-half-even quantization as
+``UniformLut::sample``.
+
+TPU adaptation (DESIGN.md §5): the endpoint LUT (387 × int32 ≈ 1.5 KiB)
+is embedded as a constant and broadcast into every block — the VMEM
+analogue of the paper's hardwired bitmapped LUT (§IV.B). The gather +
+integer MAC is the VPU analogue of the paper's two-bank fetch + one
+multiplier datapath (Fig 3).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fixed_point as fp
+from .common import DEFAULT_BLOCK, elementwise_call
+
+
+def make_lut(step: float, domain_max: float, guard: int = 1) -> np.ndarray:
+    """Endpoint LUT: tanh(i·step) quantized to S.15, round-half-even —
+    mirrors ``UniformLut::sample`` (guard entry included)."""
+    n = math.ceil(domain_max / step) + 1 + guard
+    xs = np.arange(n) * step
+    vals = np.tanh(xs) * (1 << fp.S_15.frac_bits)
+    raw = np.clip(np.round(vals), fp.S_15.min_raw, fp.S_15.max_raw)  # np.round = half-even
+    return raw.astype(np.int32)
+
+
+def make_pwl_kernel(
+    step: float = 1.0 / 64.0,
+    domain_max: float = 6.0,
+    in_fmt: fp.QFormat = fp.S3_12,
+    out_fmt: fp.QFormat = fp.S_15,
+):
+    """Builds the kernel body. Returns ``(kernel, lut)`` where the LUT
+    enters the pallas_call as a broadcast operand."""
+    inv = 1.0 / step
+    if inv != int(inv) or (int(inv) & (int(inv) - 1)):
+        raise ValueError(f"step {step} must be a reciprocal power of two")
+    step_shift = int(inv).bit_length() - 1
+    t_bits = in_fmt.frac_bits - step_shift
+    if t_bits < 0:
+        raise ValueError("input precision coarser than LUT step")
+    domain_raw = int(domain_max * (1 << in_fmt.frac_bits))
+
+    # Perf (EXPERIMENTS.md §Perf iter 2): both interpolation endpoints
+    # come from ONE one-hot matmul against a stacked [N-1, 2] table
+    # (columns = lut[i], lut[i+1]) instead of two masked-sum lookups —
+    # the MXU-shaped form, exact in f32 because |raw| < 2^24.
+    import numpy as _np
+
+    lut_np = make_lut(step, domain_max)
+    n_lut = int(lut_np.shape[0])
+    pair_table = jnp.asarray(
+        _np.stack([lut_np[:-1], lut_np[1:]], axis=1).astype(_np.float32)
+    )
+
+    def kernel(x_ref, lut_ref, o_ref):
+        x = x_ref[...]
+        pair_v = lut_ref[...]
+        neg = x < 0
+        # |x| with two's-complement min clamped (Fx::abs saturates).
+        mag = jnp.minimum(jnp.abs(x), in_fmt.max_raw)
+        sat = mag >= domain_raw
+        idx = jnp.clip(mag >> t_bits, 0, n_lut - 2)
+        t = mag & ((1 << t_bits) - 1)
+        iota = jnp.arange(n_lut - 1, dtype=jnp.int32)
+        onehot = (idx[:, None] == iota[None, :]).astype(jnp.float32)
+        pair = onehot @ pair_v  # [block, 2] — exact (values < 2^24)
+        y0 = pair[:, 0].astype(jnp.int32)
+        y1 = pair[:, 1].astype(jnp.int32)
+        # y = y0 + (y1-y0)·t, product kept wide (frac 15+t_bits), one
+        # round-half-even narrow — identical to the rust FxWide path.
+        acc = (y0.astype(jnp.int32) << t_bits) + (y1 - y0) * t
+        y = fp.shift_right_nearest_even(acc, t_bits)
+        y = jnp.clip(y, 0, out_fmt.max_raw)
+        y = jnp.where(sat, out_fmt.max_raw, y)
+        o_ref[...] = jnp.where(neg, -y, y).astype(jnp.int32)
+
+    return kernel, pair_table
+
+
+def pwl_tanh_raw(x_raw, step: float = 1.0 / 64.0, domain_max: float = 6.0,
+                 block: int = DEFAULT_BLOCK):
+    """Applies the bit-exact PWL kernel to a batch of S3.12 raw words."""
+    kernel, table = make_pwl_kernel(step, domain_max)
+    return elementwise_call(kernel, x_raw, jnp.int32, block, consts=(table,))
+
+
+def pwl_tanh_f32(x, step: float = 1.0 / 64.0, domain_max: float = 6.0,
+                 block: int = DEFAULT_BLOCK):
+    """Float front-end: quantize → fixed-point kernel → dequantize.
+    This is what the L2 model graphs call (the accelerator's fixed-point
+    boundary made explicit)."""
+    x_raw = fp.quantize(x, fp.S3_12)
+    y_raw = pwl_tanh_raw(x_raw, step, domain_max, block)
+    return fp.dequantize(y_raw, fp.S_15, jnp.float32)

@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for every approximation — the correctness yardstick.
+
+Each ``*_ref`` mirrors the rust ``eval_f64`` math model (same anchor
+placement, same saturation, same linear-NR divider model where the rust
+model uses one), evaluated vectorized in float64. The pytest suite
+asserts (a) kernel ↔ oracle agreement and (b) oracle ↔ numpy-tanh error
+bands matching the paper's Table I.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: NR iteration count shared with the rust divider model
+#: (``approx::newton::NR_ITERS``).
+NR_ITERS = 3
+
+
+def tanh_ref(x):
+    """The reference: numpy/XLA tanh in float64 (paper §III.C)."""
+    return jnp.tanh(jnp.asarray(x, jnp.float64))
+
+
+def _odd_saturating(x, domain_max, core):
+    """Odd symmetry + domain saturation + output clamp shared by all
+    methods (a fixed-point output format cannot exceed ±1, so every
+    hardware datapath clamps; low-K continued fractions overshoot near
+    the domain edge without it)."""
+    x = jnp.asarray(x, jnp.float64)
+    mag = jnp.abs(x)
+    y = jnp.clip(core(jnp.minimum(mag, domain_max)), 0.0, 1.0)
+    y = jnp.where(mag >= domain_max, 1.0, y)
+    return jnp.sign(x) * y
+
+
+def div_nr(num, den, iters: int = NR_ITERS):
+    """The finite-iteration Newton-Raphson divider model
+    (``approx::newton::div_f64``): normalize → linear seed → NR steps."""
+    e = jnp.floor(jnp.log2(den)) + 1.0
+    m = den / jnp.exp2(e)
+    xk = 48.0 / 17.0 - 32.0 / 17.0 * m
+    for _ in range(iters):
+        xk = xk * (2.0 - m * xk)
+    return num * xk / jnp.exp2(e)
+
+
+def pwl_ref(x, step: float, domain_max: float = 6.0):
+    """Method A: piecewise-linear interpolation (paper eq. 2)."""
+
+    def core(mag):
+        k = jnp.floor(mag / step)
+        a = k * step
+        t = (mag - a) / step
+        y0 = jnp.tanh(a)
+        y1 = jnp.tanh(a + step)
+        return y0 + (y1 - y0) * t
+
+    return _odd_saturating(x, domain_max, core)
+
+
+def taylor_ref(x, step: float, terms: int, domain_max: float = 6.0):
+    """Methods B1/B2: Taylor expansion around interval centres with
+    runtime-derived coefficients (paper eqs. 3-7)."""
+
+    def core(mag):
+        k = jnp.floor(mag / step)
+        xc = (k + 0.5) * step
+        dx = mag - xc
+        t = jnp.tanh(xc)
+        d1 = 1.0 - t * t
+        c2 = -t * d1
+        c3 = -d1 * (1.0 - 3.0 * t * t) / 3.0
+        acc = jnp.zeros_like(mag)
+        if terms >= 4:
+            acc = c3
+        if terms >= 3:
+            acc = c2 + dx * acc
+        acc = d1 + dx * acc
+        return t + dx * acc
+
+    return _odd_saturating(x, domain_max, core)
+
+
+def catmull_rom_ref(x, step: float, domain_max: float = 6.0):
+    """Method C: uniform cubic Catmull-Rom spline (paper eqs. 8/17)."""
+
+    def core(mag):
+        k = jnp.floor(mag / step)
+        t = mag / step - k
+        t2, t3 = t * t, t * t * t
+        b0 = 0.5 * (-t3 + 2.0 * t2 - t)
+        b1 = 0.5 * (3.0 * t3 - 5.0 * t2 + 2.0)
+        b2 = 0.5 * (-3.0 * t3 + 4.0 * t2 + t)
+        b3 = 0.5 * (t3 - t2)
+        p = lambda i: jnp.tanh((k + i) * step)  # noqa: E731
+        return b0 * p(-1.0) + b1 * p(0.0) + b2 * p(1.0) + b3 * p(2.0)
+
+    return _odd_saturating(x, domain_max, core)
+
+
+def velocity_ref(x, threshold: float, domain_max: float = 6.0):
+    """Method D: velocity-factor expansion (paper eqs. 9-13) with the
+    eq. (10) linear compensation below ``threshold``."""
+
+    def core(mag):
+        scale = 1.0 / threshold
+        a = jnp.floor(mag * scale) / scale
+        b = mag - a
+        f = jnp.exp(2.0 * a)  # product of stored factors = e^{2a}
+        t = div_nr(f - 1.0, f + 1.0)
+        return t + b * (1.0 - t * t)
+
+    return _odd_saturating(x, domain_max, core)
+
+
+def lambert_ref(x, k_terms: int, domain_max: float = 6.0):
+    """Method E: Lambert continued fraction via the eq. (15) recurrence."""
+
+    def core(mag):
+        x2 = mag * mag
+        kk = 2 * k_terms + 1
+        tm1 = jnp.ones_like(mag)
+        t0 = jnp.full_like(mag, float(kk))
+        for n in range(1, k_terms + 1):
+            c = float(kk - 2 * n)
+            t = c * t0 + x2 * tm1
+            tm1, t0 = t0, t
+        return div_nr(mag * tm1, t0)
+
+    return _odd_saturating(x, domain_max, core)
+
+
+def sigmoid_ref(x):
+    """Reference sigmoid (for the LSTM model tests)."""
+    return 1.0 / (1.0 + np.exp(-np.asarray(x, np.float64)))
+
+
+#: Table I configurations: (name, ref_fn, kwargs) — mirrors
+#: ``approx::table1_suite`` in rust.
+TABLE1 = [
+    ("pwl", pwl_ref, {"step": 1.0 / 64.0}),
+    ("taylor1", taylor_ref, {"step": 1.0 / 16.0, "terms": 3}),
+    ("taylor2", taylor_ref, {"step": 1.0 / 8.0, "terms": 4}),
+    ("catmull_rom", catmull_rom_ref, {"step": 1.0 / 16.0}),
+    ("velocity", velocity_ref, {"threshold": 1.0 / 128.0}),
+    ("lambert", lambert_ref, {"k_terms": 7}),
+]

@@ -1,0 +1,25 @@
+"""Sigmoid via the tanh identity σ(x) = (1 + tanh(x/2))/2 — the gate
+nonlinearity the L2 LSTM uses, derived from any approximation kernel
+(mirrors ``rust/src/approx/sigmoid.rs``)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import KERNELS
+
+
+def make_sigmoid_kernel(method: str = "pwl"):
+    """Returns σ(x) built on the named tanh approximation kernel."""
+    tanh_fn = KERNELS[method]
+
+    def sigmoid(x):
+        x = jnp.asarray(x, jnp.float32)
+        return 0.5 * (1.0 + tanh_fn(0.5 * x))
+
+    return sigmoid
+
+
+def sigmoid_f32(x, method: str = "pwl"):
+    """One-shot sigmoid evaluation."""
+    return make_sigmoid_kernel(method)(x)

@@ -1,0 +1,69 @@
+"""Methods B1/B2 — Taylor expansion as a Pallas kernel (float math model).
+
+The anchor LUT stores tanh at interval *centres* (matching the rust
+model); coefficients are derived in-kernel from the stored value via the
+paper's eqs. (5)-(7) — the datapath trick that keeps the LUT at one word
+per anchor. Computation is f32 (the TPU VPU's native width); bit-exact
+fixed-point is exercised by the PWL kernel, and this kernel is validated
+against the f64 oracle within the f32 rounding band.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DEFAULT_BLOCK, elementwise_call, lut_lookup
+
+
+def make_anchor_lut(step: float, domain_max: float, guard: int = 1) -> np.ndarray:
+    """Anchors tanh((i + ½)·step) in f32 — mirrors the rust LUT."""
+    n = math.ceil(domain_max / step) + 1 + guard
+    xs = (np.arange(n) + 0.5) * step
+    return np.tanh(xs).astype(np.float32)
+
+
+def make_taylor_kernel(step: float = 1.0 / 16.0, terms: int = 3,
+                       domain_max: float = 6.0):
+    """Builds the kernel body for a (step, terms) configuration."""
+    if terms not in (2, 3, 4):
+        raise ValueError(f"terms must be 2..4, got {terms}")
+    lut = jnp.asarray(make_anchor_lut(step, domain_max))
+    n_lut = int(lut.shape[0])
+    inv_step = 1.0 / step
+
+    def kernel(x_ref, lut_ref, o_ref):
+        x = x_ref[...]
+        lut_v = lut_ref[...]
+        neg = x < 0
+        mag = jnp.abs(x)
+        sat = mag >= domain_max
+        k = jnp.clip(jnp.floor(mag * inv_step).astype(jnp.int32), 0, n_lut - 1)
+        xc = (k.astype(jnp.float32) + 0.5) * step
+        dx = mag - xc
+        # Runtime coefficients from the stored tanh value (eqs. 5-7).
+        t = lut_lookup(lut_v, k)
+        d1 = 1.0 - t * t
+        c2 = -t * d1
+        acc = jnp.zeros_like(mag)
+        if terms >= 4:
+            acc = -d1 * (1.0 - 3.0 * t * t) * (1.0 / 3.0)
+        if terms >= 3:
+            acc = c2 + dx * acc
+        acc = d1 + dx * acc
+        y = t + dx * acc
+        y = jnp.clip(y, 0.0, 1.0)
+        y = jnp.where(sat, 1.0, y)
+        o_ref[...] = jnp.where(neg, -y, y).astype(jnp.float32)
+
+    return kernel, lut
+
+
+def taylor_tanh_f32(x, step: float = 1.0 / 16.0, terms: int = 3,
+                    domain_max: float = 6.0, block: int = DEFAULT_BLOCK):
+    """Applies the Taylor kernel to an f32 batch."""
+    kernel, lut = make_taylor_kernel(step, terms, domain_max)
+    return elementwise_call(kernel, jnp.asarray(x, jnp.float32), jnp.float32, block,
+                            consts=(lut,))

@@ -1,0 +1,86 @@
+"""Method D — velocity-factor expansion as a Pallas kernel (float model).
+
+The stored registers hold f_{2^k} = e^{2·2^k}; the kernel selects and
+multiplies them per input bit (paper Fig 4), recovers tanh with the
+eq. (12) division through the same finite-NR divider model as the rust
+datapath, and applies the eq. (10) linear compensation. Unlike the f64
+oracle (which collapses the product to exp(2a)), this kernel performs
+the actual per-bit register product — the Fig 4 structure — so the
+register quantization story carries over.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DEFAULT_BLOCK, elementwise_call
+from .ref import NR_ITERS
+
+
+def make_vf_registers(threshold: float, domain_max: float) -> tuple[np.ndarray, int, int]:
+    """Registers e^{2·2^k} for k = kmax … −m, highest weight first —
+    mirrors ``Velocity::new``. Returns (registers, m, kmax)."""
+    m = int(round(-math.log2(threshold)))
+    kmax = math.ceil(math.log2(domain_max)) - 1
+    ks = list(range(kmax, -m - 1, -1))
+    regs = np.exp([2.0 * (2.0 ** k) for k in ks]).astype(np.float32)
+    return regs, m, kmax
+
+
+def div_nr_f32(num, den, iters: int = NR_ITERS):
+    """f32 finite-NR divider (same seed/iteration schedule as rust)."""
+    e = jnp.floor(jnp.log2(den)) + 1.0
+    scale = jnp.exp2(-e)
+    mant = den * scale
+    xk = jnp.float32(48.0 / 17.0) - jnp.float32(32.0 / 17.0) * mant
+    for _ in range(iters):
+        xk = xk * (2.0 - mant * xk)
+    return num * xk * scale
+
+
+def make_velocity_kernel(threshold: float = 1.0 / 128.0, domain_max: float = 6.0,
+                         frac_bits: int = 12):
+    """Builds the kernel body; inputs are treated on the S?.frac_bits
+    grid (matching the fixed-point front end)."""
+    regs, m, kmax = make_vf_registers(threshold, domain_max)
+    regs = jnp.asarray(regs)
+    scale = float(1 << frac_bits)
+    res_bits = max(frac_bits - m, 0)
+
+    def kernel(x_ref, regs_ref, o_ref):
+        x = x_ref[...]
+        regs_v = regs_ref[...]
+        neg = x < 0
+        mag = jnp.abs(x)
+        sat = mag >= domain_max
+        raw = jnp.floor(mag * scale).astype(jnp.int32)
+        coarse = raw >> res_bits  # units of θ
+        # Residue kept in f32 (not truncated to the S?.frac grid): for
+        # float inputs the sub-ulp part still participates in the
+        # eq. (10) compensation, mirroring b = x − a in the paper.
+        a = (coarse << res_bits).astype(jnp.float32) / scale
+        residue = mag - a
+        # Per-bit register product (Fig 4 mux + multiplier chain).
+        f = jnp.ones_like(mag)
+        for i, k in enumerate(range(kmax, -m - 1, -1)):
+            bitpos = k + m  # bit position within `coarse`
+            bit = (coarse >> bitpos) & 1
+            f = f * jnp.where(bit == 1, regs_v[i], jnp.float32(1.0))
+        t = div_nr_f32(f - 1.0, f + 1.0)
+        y = t + residue * (1.0 - t * t)
+        y = jnp.clip(y, 0.0, 1.0)
+        y = jnp.where(sat, 1.0, y)
+        o_ref[...] = jnp.where(neg, -y, y).astype(jnp.float32)
+
+    return kernel, regs
+
+
+def velocity_tanh_f32(x, threshold: float = 1.0 / 128.0, domain_max: float = 6.0,
+                      block: int = DEFAULT_BLOCK):
+    """Applies the velocity-factor kernel to an f32 batch."""
+    kernel, regs = make_velocity_kernel(threshold, domain_max)
+    return elementwise_call(kernel, jnp.asarray(x, jnp.float32), jnp.float32, block,
+                            consts=(regs,))

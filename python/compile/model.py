@@ -1,0 +1,229 @@
+"""L2 — JAX compute graphs built on the L1 kernels.
+
+Two graph families, both AOT-lowered to HLO text by :mod:`compile.aot`:
+
+1. **Batched activation graphs** — ``tanh_graph(method, n)``: the
+   activation-accelerator surface the rust coordinator serves (one
+   compiled executable per (method, batch) pair), plus the bit-exact
+   int32 PWL raw-word graph used for the rust↔pallas cross-check.
+
+2. **LSTM inference graphs** — the paper's motivating workload (§I:
+   "some applications require sequence modelling and use RNNs and LSTM
+   topologies. Tanh is still an integral part of these"). A small LSTM
+   is *trained at build time* with exact f32 tanh (the usual
+   train-in-float, deploy-fixed-point flow), then exported twice: with
+   the exact tanh and with an approximation kernel in every tanh/sigmoid
+   position — so the rust layer can measure end-to-end accuracy impact
+   and serving throughput of each approximation.
+
+The toy task is sign-of-running-sum sequence classification: inputs are
+random ±1 steps, the label is whether the final prefix sum is positive —
+learnable by a small LSTM in a few hundred SGD steps, and sensitive to
+the tanh path (both gates and cell output use it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import KERNELS, pwl_tanh_raw
+
+# ---------------------------------------------------------------------------
+# Elementwise adaptation: the 1-D block kernels over arbitrary 2-D tensors.
+# ---------------------------------------------------------------------------
+
+BLOCK = 256
+
+
+def apply_elementwise(fn1d, x):
+    """Applies a 1-D batch kernel to a tensor of any shape by
+    flattening + padding to the kernel's block multiple."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    padded = (n + BLOCK - 1) // BLOCK * BLOCK
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    out = fn1d(flat)
+    return out[:n].reshape(x.shape)
+
+
+def make_tanh_fn(method: str | None):
+    """Returns an elementwise tanh callable: the exact jnp.tanh for
+    ``None``/"ref", or the named approximation kernel."""
+    if method in (None, "ref"):
+        return jnp.tanh
+    kernel = KERNELS[method]
+    return functools.partial(apply_elementwise, kernel)
+
+
+def make_sigmoid_fn(tanh_fn):
+    """σ(x) = (1 + tanh(x/2))/2 — the hardware identity
+    (``approx::sigmoid`` in rust): gates reuse the tanh unit."""
+
+    def sigmoid(x):
+        return 0.5 * (1.0 + tanh_fn(0.5 * x))
+
+    return sigmoid
+
+
+# ---------------------------------------------------------------------------
+# Activation graphs (the serving surface).
+# ---------------------------------------------------------------------------
+
+
+def tanh_graph(method: str, n: int):
+    """f32[n] → (f32[n],) activation graph for one method."""
+    tanh_fn = make_tanh_fn(method)
+
+    def fn(x):
+        return (tanh_fn(x),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.float32),)
+
+
+def tanh_raw_graph(n: int):
+    """int32[n] → (int32[n],) bit-exact PWL raw-word graph (S3.12 →
+    S.15) — the rust↔pallas cross-validation surface."""
+
+    def fn(x_raw):
+        return (pwl_tanh_raw(x_raw),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),)
+
+
+# ---------------------------------------------------------------------------
+# LSTM (paper §I motivation).
+# ---------------------------------------------------------------------------
+
+
+def init_lstm_params(seed: int, input_dim: int, hidden: int, out_dim: int):
+    """Glorot-ish LSTM + readout parameters as a flat dict of f32."""
+    rng = np.random.default_rng(seed)
+
+    def mat(shape, scale):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    d, h = input_dim, hidden
+    s_in = 1.0 / np.sqrt(d + h)
+    return {
+        # gates packed [i, f, g, o] along the output axis.
+        "w_x": mat((d, 4 * h), s_in),
+        "w_h": mat((h, 4 * h), s_in),
+        "b": np.zeros(4 * h, np.float32),
+        "w_out": mat((h, out_dim), 1.0 / np.sqrt(h)),
+        "b_out": np.zeros(out_dim, np.float32),
+    }
+
+
+def lstm_cell(params, x, h, c, tanh_fn):
+    """One LSTM step. ``x``: [b, d], ``h``/``c``: [b, hidden].
+
+    All four gates and the cell nonlinearity route through ``tanh_fn``
+    (sigmoid via the tanh identity) — every nonlinear op in the cell
+    exercises the approximation under test.
+    """
+    sigmoid = make_sigmoid_fn(tanh_fn)
+    hidden = h.shape[-1]
+    z = x @ params["w_x"] + h @ params["w_h"] + params["b"]
+    i = sigmoid(z[:, 0 * hidden : 1 * hidden])
+    f = sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g = tanh_fn(z[:, 2 * hidden : 3 * hidden])
+    o = sigmoid(z[:, 3 * hidden : 4 * hidden])
+    c_new = f * c + i * g
+    h_new = o * tanh_fn(c_new)
+    return h_new, c_new
+
+
+def lstm_logits(params, seq, tanh_fn):
+    """Runs the LSTM over ``seq`` [b, t, d] and returns logits [b, out]."""
+    b, t, _ = seq.shape
+    hidden = params["w_h"].shape[0]
+    h = jnp.zeros((b, hidden), jnp.float32)
+    c = jnp.zeros((b, hidden), jnp.float32)
+    for step in range(t):  # static unroll: kernels stay traceable
+        h, c = lstm_cell(params, seq[:, step, :], h, c, tanh_fn)
+    return h @ params["w_out"] + params["b_out"]
+
+
+def lstm_cell_graph(params, method: str | None, batch: int, input_dim: int, hidden: int):
+    """(x, h, c) → (h', c') single-step graph with baked weights — the
+    serving artifact (decode-step shape, the LSTM analogue of a
+    KV-cache-style stepwise server)."""
+    tanh_fn = make_tanh_fn(method)
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(x, h, c):
+        h2, c2 = lstm_cell(p, x, h, c, tanh_fn)
+        return (h2, c2)
+
+    args = (
+        jax.ShapeDtypeStruct((batch, input_dim), jnp.float32),
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+    )
+    return fn, args
+
+
+def lstm_logits_graph(params, method: str | None, batch: int, seq_len: int, input_dim: int):
+    """seq → logits full-sequence graph with baked weights."""
+    tanh_fn = make_tanh_fn(method)
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(seq):
+        return (lstm_logits(p, seq, tanh_fn),)
+
+    return fn, (jax.ShapeDtypeStruct((batch, seq_len, input_dim), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# Build-time training on the toy task.
+# ---------------------------------------------------------------------------
+
+
+def make_toy_batch(rng, batch: int, seq_len: int, input_dim: int):
+    """Sign-of-running-sum task: ±1 step sequences, binary label."""
+    steps = rng.choice([-1.0, 1.0], size=(batch, seq_len, input_dim)).astype(np.float32)
+    labels = (steps.sum(axis=(1, 2)) > 0).astype(np.int32)
+    return steps, labels
+
+
+def train_toy_lstm(
+    seed: int = 42,
+    steps: int = 300,
+    batch: int = 64,
+    seq_len: int = 16,
+    input_dim: int = 4,
+    hidden: int = 64,
+    lr: float = 0.05,
+    log_every: int = 50,
+    verbose: bool = False,
+):
+    """Trains the toy LSTM with exact tanh; returns (params, loss_curve,
+    final_accuracy). A few hundred SGD steps reach >95% accuracy."""
+    params = init_lstm_params(seed, input_dim, hidden, out_dim=2)
+    params = {k: jnp.asarray(v) for k, v in params.items()}
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(p, seq, labels):
+        logits = lstm_logits(p, seq, jnp.tanh)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    curve = []
+    for step in range(steps):
+        seq, labels = make_toy_batch(rng, batch, seq_len, input_dim)
+        loss, grads = grad_fn(params, jnp.asarray(seq), jnp.asarray(labels))
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        curve.append(float(loss))
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"  step {step:4d} loss {float(loss):.4f}")
+    # final eval
+    seq, labels = make_toy_batch(rng, 512, seq_len, input_dim)
+    logits = lstm_logits(params, jnp.asarray(seq), jnp.tanh)
+    acc = float(jnp.mean((jnp.argmax(logits, axis=1) == jnp.asarray(labels))))
+    return {k: np.asarray(v) for k, v in params.items()}, curve, acc

@@ -1,0 +1,6 @@
+"""pytest root conftest: make ``compile`` importable from anywhere."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

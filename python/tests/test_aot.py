@@ -1,0 +1,93 @@
+"""AOT pipeline tests: HLO text is parseable-shaped, manifest matches
+emitted files, and the lowering round-trips through the XLA client the
+same way the rust loader will."""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+class TestToHloText:
+    def test_tanh_graph_lowering(self):
+        fn, args = M.tanh_graph("taylor1", 256)
+        text = aot.to_hlo_text(fn, args)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # return_tuple=True → root is a tuple
+        assert "tuple(" in text.replace(" ", "")
+
+    def test_raw_graph_lowering_is_integer(self):
+        fn, args = M.tanh_raw_graph(256)
+        text = aot.to_hlo_text(fn, args)
+        assert "s32[256]" in text
+
+    def test_lowered_graph_still_executes(self):
+        # The jitted fn used for lowering must agree with eager.
+        fn, _ = M.tanh_graph("pwl", 256)
+        x = jnp.linspace(-3, 3, 256, dtype=jnp.float32)
+        import jax
+
+        (eager,) = fn(x)
+        (jitted,) = jax.jit(fn)(x)
+        np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    def test_manifest_files_exist(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        assert len(manifest) >= 14
+        for name, entry in manifest.items():
+            assert (ARTIFACTS / entry["file"]).exists(), name
+
+    def test_expected_artifact_set(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        for method in ["pwl", "taylor1", "taylor2", "catmull_rom", "velocity", "lambert", "ref"]:
+            assert f"tanh_{method}_{aot.TANH_N}" in manifest
+        assert f"tanh_pwl_raw_{aot.TANH_N}" in manifest
+        for m in ["ref", "pwl", "taylor1"]:
+            assert f"lstm_cell_{m}" in manifest
+            assert f"lstm_logits_{m}" in manifest
+
+    def test_test_vectors_consistency(self):
+        v = json.loads((ARTIFACTS / "test_vectors.json").read_text())
+        xs = np.asarray(v["tanh_input_f32"], np.float32)
+        ref = np.asarray(v["tanh_expected"]["ref"])
+        np.testing.assert_allclose(ref, np.tanh(xs), atol=1e-6)
+        # approximations stay within the paper band of the reference
+        for method, band in [("pwl", 2e-4), ("taylor1", 5e-5), ("lambert", 1e-4)]:
+            approx = np.asarray(v["tanh_expected"][method])
+            assert np.max(np.abs(approx - np.tanh(xs))) < band, method
+
+    def test_no_elided_constants(self):
+        # The default HLO printer elides big dense literals as
+        # `constant({...})`; the deployment parser reads those back as
+        # ZEROS. aot.to_hlo_text must print full constants.
+        for f in ARTIFACTS.glob("*.hlo.txt"):
+            assert "{...}" not in f.read_text(), f"{f.name} has elided constants"
+
+    def test_no_gather_in_emitted_hlo(self):
+        # The deployment bridge (HLO text → xla_extension 0.5.1)
+        # mis-executes `gather`; LUT fetches must lower to the one-hot
+        # matmul form instead (see kernels/common.py::lut_lookup).
+        for f in ARTIFACTS.glob("*.hlo.txt"):
+            text = f.read_text()
+            assert " gather(" not in text, f"{f.name} contains a gather op"
+
+    def test_training_record(self):
+        v = json.loads((ARTIFACTS / "test_vectors.json").read_text())
+        tr = v["training"]
+        assert tr["final_accuracy"] > 0.85
+        assert tr["loss_curve"][0] > tr["loss_curve"][-1]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,100 @@
+"""Tests for the jnp fixed-point emulation layer against numpy goldens
+and against the semantics documented for the rust ``fixed`` module."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fixed_point as fp
+
+
+class TestQFormat:
+    def test_paper_formats(self):
+        assert fp.S3_12.width == 16
+        assert fp.S2_13.width == 16
+        assert fp.S_15.width == 16
+        assert fp.S2_5.width == 8
+        assert fp.S_7.width == 8
+
+    def test_ranges(self):
+        assert fp.S3_12.min_raw == -(1 << 15)
+        assert fp.S3_12.max_raw == (1 << 15) - 1
+        assert fp.S_15.ulp == 2.0**-15
+
+
+class TestQuantize:
+    def test_exact_values(self):
+        raw = np.asarray(fp.quantize(np.array([0.0, 0.5, -0.5, 1.0]), fp.S3_12))
+        np.testing.assert_array_equal(raw, [0, 2048, -2048, 4096])
+
+    def test_saturates(self):
+        raw = np.asarray(fp.quantize(np.array([100.0, -100.0]), fp.S3_12))
+        np.testing.assert_array_equal(raw, [fp.S3_12.max_raw, fp.S3_12.min_raw])
+
+    def test_half_away_rounding(self):
+        # 0.5 ulp cases round away from zero (rust Round::NearestAway).
+        ulp = fp.S3_12.ulp
+        raw = np.asarray(fp.quantize(np.array([0.5 * ulp, -0.5 * ulp, 1.5 * ulp]), fp.S3_12))
+        np.testing.assert_array_equal(raw, [1, -1, 2])
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=-7.9, max_value=7.9, allow_nan=False))
+    def test_roundtrip_error_half_ulp(self, v):
+        raw = np.asarray(fp.quantize(np.array([v], np.float64), fp.S3_12))
+        back = float(np.asarray(fp.dequantize(raw, fp.S3_12))[0])
+        # jnp computes in f32 (x64 disabled): allow the f32
+        # representation error of v on top of the half-ulp bound.
+        f32_eps = abs(v) * 2.0**-23
+        assert abs(back - v) <= fp.S3_12.ulp / 2 + f32_eps + 1e-12
+
+
+class TestShifts:
+    def test_nearest_away_halfway(self):
+        import jax.numpy as jnp
+
+        v = jnp.array([5, -5, 7, -7], jnp.int32)
+        out = np.asarray(fp.shift_right_nearest_away(v, 1))
+        np.testing.assert_array_equal(out, [3, -3, 4, -4])
+
+    def test_nearest_even_halfway(self):
+        import jax.numpy as jnp
+
+        v = jnp.array([5, 7, -5], jnp.int32)
+        out = np.asarray(fp.shift_right_nearest_even(v, 1))
+        # 2.5 -> 2 (even), 3.5 -> 4 (even), -2.5 -> -2 (even)
+        np.testing.assert_array_equal(out, [2, 4, -2])
+
+    def test_zero_shift_identity(self):
+        import jax.numpy as jnp
+
+        v = jnp.array([3, -3], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(fp.shift_right_nearest_away(v, 0)), [3, -3])
+        np.testing.assert_array_equal(np.asarray(fp.shift_right_nearest_even(v, 0)), [3, -3])
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.integers(min_value=-(1 << 24), max_value=(1 << 24) - 1),
+        st.integers(min_value=1, max_value=8),
+    )
+    def test_shift_matches_float_rounding(self, v, sh):
+        import jax.numpy as jnp
+
+        got = int(np.asarray(fp.shift_right_nearest_away(jnp.array([v], jnp.int32), sh))[0])
+        exact = v / (1 << sh)
+        # round half away from zero
+        want = int(np.floor(exact + 0.5)) if exact >= 0 else int(np.ceil(exact - 0.5))
+        assert got == want, f"v={v} sh={sh}: {got} vs {want}"
+
+
+class TestSaturate:
+    def test_clamps_both_ends(self):
+        import jax.numpy as jnp
+
+        v = jnp.array([1 << 20, -(1 << 20), 5], jnp.int32)
+        out = np.asarray(fp.saturate(v, fp.S_15))
+        np.testing.assert_array_equal(out, [fp.S_15.max_raw, fp.S_15.min_raw, 5])
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,221 @@
+"""L1 kernel correctness: every Pallas kernel against its pure-jnp
+oracle, against numpy tanh (paper Table I error bands), and — for the
+bit-exact PWL kernel — against a numpy reimplementation of the rust
+integer datapath.
+
+The hypothesis sweeps vary batch shapes, parameter settings and input
+distributions, asserting ``assert_allclose`` against ref.py exactly as
+the session architecture prescribes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    KERNELS,
+    catmull_rom_tanh_f32,
+    lambert_tanh_f32,
+    pwl_tanh_raw,
+    taylor_tanh_f32,
+    velocity_tanh_f32,
+)
+from compile.kernels import fixed_point as fp
+from compile.kernels import ref
+from compile.kernels.pwl import make_lut
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def grid(n=2048, lo=-7.0, hi=7.0):
+    return np.linspace(lo, hi, n).astype(np.float32)
+
+
+class TestAgainstTanh:
+    """Paper Table I error bands (float path: no 15-bit output
+    quantization, so bands are the algorithmic error + saturation-to-1
+    at the domain edge ≈ 1.23e-5)."""
+
+    BANDS = {
+        "pwl": 1.5e-4,  # includes S3.12 input-quantization boundary
+        "taylor1": 3e-5,
+        "taylor2": 3e-5,
+        "catmull_rom": 3e-5,
+        "velocity": 5e-5,
+        "lambert": 7e-5,
+    }
+
+    @pytest.mark.parametrize("name", list(KERNELS))
+    def test_error_band(self, name):
+        x = grid()
+        y = np.asarray(KERNELS[name](x))
+        err = np.max(np.abs(y - np.tanh(x.astype(np.float64))))
+        assert err < self.BANDS[name], f"{name}: {err:.3e}"
+
+    @pytest.mark.parametrize("name", list(KERNELS))
+    def test_odd_symmetry(self, name):
+        x = grid(512)
+        y_pos = np.asarray(KERNELS[name](x))
+        y_neg = np.asarray(KERNELS[name](-x))
+        np.testing.assert_allclose(y_pos, -y_neg, atol=1e-7)
+
+    @pytest.mark.parametrize("name", list(KERNELS))
+    def test_saturation_beyond_domain(self, name):
+        x = np.full(256, 6.5, np.float32)
+        y = np.asarray(KERNELS[name](x))
+        np.testing.assert_allclose(y, 1.0, atol=4e-5)  # S.15 max = 1 − 2^-15
+
+
+class TestAgainstOracles:
+    """Kernel ↔ ref.py agreement (the f64 oracle, f32 rounding band)."""
+
+    def test_taylor_matches_ref(self):
+        x = grid()
+        y = np.asarray(taylor_tanh_f32(x, step=1 / 16, terms=3))
+        want = np.asarray(ref.taylor_ref(x, step=1 / 16, terms=3))
+        np.testing.assert_allclose(y, want, atol=3e-6)
+
+    def test_taylor_cubic_matches_ref(self):
+        x = grid()
+        y = np.asarray(taylor_tanh_f32(x, step=1 / 8, terms=4))
+        want = np.asarray(ref.taylor_ref(x, step=1 / 8, terms=4))
+        np.testing.assert_allclose(y, want, atol=3e-6)
+
+    def test_catmull_rom_matches_ref(self):
+        x = grid()
+        y = np.asarray(catmull_rom_tanh_f32(x, step=1 / 16))
+        want = np.asarray(ref.catmull_rom_ref(x, step=1 / 16))
+        np.testing.assert_allclose(y, want, atol=3e-6)
+
+    def test_velocity_matches_ref(self):
+        x = grid()
+        y = np.asarray(velocity_tanh_f32(x, threshold=1 / 128))
+        want = np.asarray(ref.velocity_ref(x, threshold=1 / 128))
+        # The kernel does the per-bit register product in f32 (Fig 4);
+        # the oracle collapses it to exp(2a) in f64.
+        np.testing.assert_allclose(y, want, atol=1e-5)
+
+    def test_lambert_matches_ref(self):
+        x = grid()
+        y = np.asarray(lambert_tanh_f32(x, k_terms=7))
+        want = np.asarray(ref.lambert_ref(x, k_terms=7))
+        # f32 recurrence vs f64: T_K reaches ~2e6, so ~1e-5 relative.
+        np.testing.assert_allclose(y, want, atol=5e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        terms=st.sampled_from([2, 3, 4]),
+        log_inv_step=st.integers(min_value=3, max_value=6),
+        n_blocks=st.integers(min_value=1, max_value=4),
+    )
+    def test_taylor_hypothesis_sweep(self, terms, log_inv_step, n_blocks):
+        step = 2.0**-log_inv_step
+        n = 256 * n_blocks
+        x = RNG.uniform(-7, 7, n).astype(np.float32)
+        y = np.asarray(taylor_tanh_f32(x, step=step, terms=terms))
+        want = np.asarray(ref.taylor_ref(x, step=step, terms=terms))
+        np.testing.assert_allclose(y, want, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(k=st.integers(min_value=2, max_value=9))
+    def test_lambert_hypothesis_sweep(self, k):
+        x = RNG.uniform(-6.5, 6.5, 512).astype(np.float32)
+        y = np.asarray(lambert_tanh_f32(x, k_terms=k))
+        want = np.asarray(ref.lambert_ref(x, k_terms=k))
+        np.testing.assert_allclose(y, want, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(log_inv_thr=st.integers(min_value=4, max_value=9))
+    def test_velocity_hypothesis_sweep(self, log_inv_thr):
+        thr = 2.0**-log_inv_thr
+        x = RNG.uniform(-6.5, 6.5, 512).astype(np.float32)
+        y = np.asarray(velocity_tanh_f32(x, threshold=thr))
+        want = np.asarray(ref.velocity_ref(x, threshold=thr))
+        np.testing.assert_allclose(y, want, atol=1e-4)
+
+
+def pwl_numpy_golden(x_raw, step=1 / 64, domain_max=6.0):
+    """Numpy reimplementation of the rust PWL integer datapath
+    (``approx::pwl`` with S3.12 → S.15) for bit-exactness checks."""
+    lut = make_lut(step, domain_max).astype(np.int64)
+    t_bits = 12 - int(round(np.log2(1.0 / step)))
+    neg = x_raw < 0
+    mag = np.minimum(np.abs(x_raw.astype(np.int64)), fp.S3_12.max_raw)
+    sat = mag >= int(domain_max * 4096)
+    idx = np.clip(mag >> t_bits, 0, len(lut) - 2)
+    t = mag & ((1 << t_bits) - 1)
+    y0, y1 = lut[idx], lut[idx + 1]
+    acc = (y0 << t_bits) + (y1 - y0) * t
+    # round-half-even shift
+    floor = acc >> t_bits
+    rem = acc - (floor << t_bits)
+    half = 1 << (t_bits - 1)
+    y = floor + ((rem > half) | ((rem == half) & (floor & 1 == 1)))
+    y = np.clip(y, 0, fp.S_15.max_raw)
+    y = np.where(sat, fp.S_15.max_raw, y)
+    return np.where(neg, -y, y).astype(np.int32)
+
+
+class TestPwlBitExact:
+    """The flagship claim: the Pallas PWL kernel is bit-identical to the
+    rust fixed-point datapath (via the shared numpy golden)."""
+
+    def test_exhaustive_grid(self):
+        # Every S3.12 raw word in (−6, 6) — padded to a block multiple.
+        raws = np.arange(-6 * 4096, 6 * 4096 + 1, dtype=np.int32)
+        pad = (-len(raws)) % 256
+        raws = np.concatenate([raws, np.zeros(pad, np.int32)])
+        got = np.asarray(pwl_tanh_raw(raws))
+        want = pwl_numpy_golden(raws)
+        np.testing.assert_array_equal(got, want)
+
+    def test_saturated_region(self):
+        raws = np.array([32767, -32768, 30000, -30000] * 64, np.int32)
+        got = np.asarray(pwl_tanh_raw(raws))
+        want = pwl_numpy_golden(raws)
+        np.testing.assert_array_equal(got, want)
+        assert got[0] == fp.S_15.max_raw
+        assert got[1] == -fp.S_15.max_raw  # symmetric saturation
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        log_inv_step=st.integers(min_value=3, max_value=8),
+        n_blocks=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_random_raws(self, log_inv_step, n_blocks, seed):
+        step = 2.0**-log_inv_step
+        rng = np.random.default_rng(seed)
+        raws = rng.integers(-32768, 32768, 256 * n_blocks).astype(np.int32)
+        got = np.asarray(pwl_tanh_raw(raws, step=step))
+        want = pwl_numpy_golden(raws, step=step)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestOracleErrorBands:
+    """ref.py itself must reproduce the paper's Table I max errors (the
+    float-domain algorithmic component)."""
+
+    @pytest.mark.parametrize(
+        "name,fn,kwargs,band",
+        [(n, f, kw, b) for (n, f, kw), b in zip(
+            ref.TABLE1, [2.5e-5, 1.5e-5, 1.5e-5, 1.5e-5, 3e-5, 5e-5])],
+    )
+    def test_table1_band(self, name, fn, kwargs, band):
+        # dense f64 grid, inside the domain (no saturation component)
+        x = np.linspace(-5.99, 5.99, 200_001)
+        y = np.asarray(fn(x, **kwargs))
+        err = np.max(np.abs(y - np.tanh(x)))
+        assert err < band, f"{name}: {err:.3e}"
+
+    def test_velocity_factor_identity(self):
+        # eq. 13: f_{a+b} = f_a·f_b — sanity of the oracle's exp form.
+        a, b = 0.7, 0.45
+        fa = np.exp(2 * a)
+        fb = np.exp(2 * b)
+        np.testing.assert_allclose(fa * fb, np.exp(2 * (a + b)), rtol=1e-12)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

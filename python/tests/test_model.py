@@ -1,0 +1,119 @@
+"""L2 model tests: LSTM cell/sequence shapes, the sigmoid identity,
+approximation-swap behaviour, and the toy-task learnability that the
+end-to-end example depends on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.ref import sigmoid_ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in
+            M.init_lstm_params(0, 4, 64, 2).items()}
+
+
+class TestElementwiseAdapter:
+    def test_pads_and_reshapes(self):
+        x = jnp.arange(10, dtype=jnp.float32).reshape(2, 5)
+        y = M.apply_elementwise(lambda v: v * 2.0, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x) * 2)
+
+    def test_kernel_through_adapter_matches_direct(self):
+        from compile.kernels import KERNELS
+
+        x2d = np.linspace(-3, 3, 512).astype(np.float32).reshape(16, 32)
+        got = np.asarray(M.apply_elementwise(KERNELS["taylor1"], jnp.asarray(x2d)))
+        want = np.asarray(KERNELS["taylor1"](x2d.reshape(-1))).reshape(16, 32)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestSigmoidIdentity:
+    def test_exact_tanh_sigmoid(self):
+        f = M.make_sigmoid_fn(jnp.tanh)
+        x = jnp.linspace(-8, 8, 100)
+        np.testing.assert_allclose(np.asarray(f(x)), sigmoid_ref(np.asarray(x)), atol=1e-6)
+
+    def test_approx_tanh_sigmoid_close(self):
+        f = M.make_sigmoid_fn(M.make_tanh_fn("pwl"))
+        x = jnp.linspace(-8, 8, 512)
+        np.testing.assert_allclose(np.asarray(f(x)), sigmoid_ref(np.asarray(x)), atol=2e-4)
+
+
+class TestLstm:
+    def test_cell_shapes(self, params):
+        b, d, h = 8, 4, 64
+        x = jnp.zeros((b, d))
+        hh = jnp.zeros((b, h))
+        cc = jnp.zeros((b, h))
+        h2, c2 = M.lstm_cell(params, x, hh, cc, jnp.tanh)
+        assert h2.shape == (b, h) and c2.shape == (b, h)
+
+    def test_logits_shape(self, params):
+        seq = jnp.zeros((8, 16, 4))
+        logits = M.lstm_logits(params, seq, jnp.tanh)
+        assert logits.shape == (8, 2)
+
+    def test_cell_state_bounded(self, params):
+        # |h| ≤ 1 by construction (o·tanh(c)); a sane-dataflow check.
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+        h = jnp.zeros((8, 64))
+        c = jnp.zeros((8, 64))
+        for _ in range(20):
+            h, c = M.lstm_cell(params, x, h, c, jnp.tanh)
+        assert float(jnp.max(jnp.abs(h))) <= 1.0 + 1e-6
+
+    def test_approx_tanh_close_to_exact_on_cell(self, params):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+        h0 = jnp.asarray(rng.uniform(-0.5, 0.5, (8, 64)).astype(np.float32))
+        c0 = jnp.asarray(rng.uniform(-0.5, 0.5, (8, 64)).astype(np.float32))
+        h_ref, c_ref = M.lstm_cell(params, x, h0, c0, jnp.tanh)
+        h_pwl, c_pwl = M.lstm_cell(params, x, h0, c0, M.make_tanh_fn("pwl"))
+        # Single-step divergence bounded by a few approximation ulps.
+        assert float(jnp.max(jnp.abs(h_ref - h_pwl))) < 1e-3
+        assert float(jnp.max(jnp.abs(c_ref - c_pwl))) < 1e-3
+
+
+class TestToyTask:
+    def test_task_labels_are_balanced(self):
+        rng = np.random.default_rng(3)
+        _, labels = M.make_toy_batch(rng, 2048, 16, 4)
+        frac = labels.mean()
+        assert 0.4 < frac < 0.6
+
+    def test_short_training_reduces_loss(self):
+        # 60 steps is enough to move the loss visibly (full 300-step run
+        # happens in `make artifacts`).
+        _, curve, _ = M.train_toy_lstm(steps=60, hidden=32, batch=32)
+        first = np.mean(curve[:10])
+        last = np.mean(curve[-10:])
+        assert last < first - 0.02, f"{first:.4f} -> {last:.4f}"
+
+
+class TestGraphBuilders:
+    def test_tanh_graph_runs(self):
+        fn, args = M.tanh_graph("lambert", 256)
+        x = jnp.linspace(-2, 2, 256, dtype=jnp.float32)
+        (y,) = fn(x)
+        assert y.shape == (256,)
+
+    def test_raw_graph_dtype(self):
+        fn, args = M.tanh_raw_graph(256)
+        assert args[0].dtype == jnp.int32
+        (y,) = fn(jnp.zeros(256, jnp.int32))
+        assert y.dtype == jnp.int32
+
+    def test_lstm_cell_graph_bakes_weights(self, params):
+        np_params = {k: np.asarray(v) for k, v in params.items()}
+        fn, args = M.lstm_cell_graph(np_params, "ref", 4, 4, 64)
+        h2, c2 = fn(jnp.zeros((4, 4)), jnp.zeros((4, 64)), jnp.zeros((4, 64)))
+        assert h2.shape == (4, 64)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,38 @@
+"""Sigmoid-kernel tests: the tanh identity, reference agreement, range
+and complementary symmetry — per approximation method."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import KERNELS
+from compile.kernels.ref import sigmoid_ref
+from compile.kernels.sigmoid import sigmoid_f32
+
+
+@pytest.mark.parametrize("method", list(KERNELS))
+class TestSigmoid:
+    def test_matches_reference(self, method):
+        x = np.linspace(-10, 10, 1024).astype(np.float32)
+        y = np.asarray(sigmoid_f32(x, method))
+        err = np.max(np.abs(y - sigmoid_ref(x)))
+        # half the tanh band (the ½ scaling) + f32 rounding
+        assert err < 1.5e-4, f"{method}: {err:.3e}"
+
+    def test_range_0_1(self, method):
+        x = np.linspace(-20, 20, 512).astype(np.float32)
+        y = np.asarray(sigmoid_f32(x, method))
+        assert np.all(y >= 0.0) and np.all(y <= 1.0)
+
+    def test_midpoint_half(self, method):
+        y = np.asarray(sigmoid_f32(np.zeros(256, np.float32), method))
+        np.testing.assert_allclose(y, 0.5, atol=2e-4)
+
+    def test_complementary_symmetry(self, method):
+        x = np.linspace(0.1, 6, 512).astype(np.float32)
+        yp = np.asarray(sigmoid_f32(x, method))
+        yn = np.asarray(sigmoid_f32(-x, method))
+        np.testing.assert_allclose(yp + yn, 1.0, atol=3e-4)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

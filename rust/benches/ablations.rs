@@ -1,0 +1,96 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Taylor anchor placement** (centred vs left) — explains why this
+//!    repo's B1/B2 errors land below the paper's Table I values;
+//! 2. **Output rounding mode** (trunc vs nearest) — the cheapest
+//!    hardware option costs ~half an ulp of worst-case error;
+//! 3. **Newton-Raphson iteration count** — divider accuracy vs pipeline
+//!    depth for the rational methods;
+//! 4. **Velocity-factor register organization** (single-bit vs Table II
+//!    paired) — area/multiplier trade at identical numerics.
+
+use tanh_vlsi::approx::reference::tanh_ref;
+use tanh_vlsi::approx::taylor::{AnchorMode, Taylor};
+use tanh_vlsi::approx::velocity::{Velocity, VfLookupMode};
+use tanh_vlsi::approx::{newton, IoSpec, TanhApprox};
+use tanh_vlsi::cost::CostModel;
+use tanh_vlsi::error::{measure, InputGrid};
+use tanh_vlsi::fixed::{Fx, QFormat, Round};
+
+fn main() {
+    let grid = InputGrid::table1();
+    let out = QFormat::S_15;
+
+    // ---- 1. anchor placement -------------------------------------------
+    println!("=== ablation 1: Taylor anchor placement (step 1/16, quadratic) ===");
+    let centered = Taylor::with_anchor(1.0 / 16.0, 3, 6.0, AnchorMode::Centered);
+    let left = Taylor::with_anchor(1.0 / 16.0, 3, 6.0, AnchorMode::Left);
+    let ec = measure(&centered, grid, out);
+    let el = measure(&left, grid, out);
+    println!("centered: max {:.2e}  rms {:.2e}", ec.max_abs, ec.rms);
+    println!("left:     max {:.2e}  rms {:.2e}   (paper Table I B1: 3.65e-5 / 1.16e-5)", el.max_abs, el.rms);
+    assert!(el.max_abs > ec.max_abs * 1.5, "centred must win clearly");
+    // Left-anchored lands in the paper's band — the likely original setup.
+    assert!(
+        el.max_abs > 2.5e-5 && el.max_abs < 9.0e-5,
+        "left-anchor error {:.2e} should bracket the paper's 3.65e-5",
+        el.max_abs
+    );
+
+    // ---- 2. output rounding mode ----------------------------------------
+    println!("\n=== ablation 2: PWL output rounding (step 1/64) ===");
+    // Same datapath, different final-narrow rounding: emulate by
+    // re-quantizing the ideal f64 PWL output under each mode.
+    for mode in [Round::Trunc, Round::NearestAway, Round::NearestEven] {
+        let pwl = tanh_vlsi::approx::pwl::Pwl::table1();
+        let mut max_err: f64 = 0.0;
+        for x in grid.iter() {
+            let ideal = pwl.eval_f64(x.to_f64());
+            let y = Fx::from_f64_round(ideal, out, mode);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        println!("{:13} max {:.2e}", mode.name(), max_err);
+        if mode == Round::Trunc {
+            // truncation adds up to one extra ulp of bias
+            assert!(max_err < 2.4e-5 + out.ulp() * 1.5);
+        }
+    }
+
+    // ---- 3. NR iteration count ------------------------------------------
+    println!("\n=== ablation 3: Newton-Raphson iterations (Lambert K=7 divider) ===");
+    let mut prev = f64::INFINITY;
+    for iters in 0..=4 {
+        // measure divider-only error on representative quotients
+        let mut max_rel: f64 = 0.0;
+        for i in 1..500 {
+            let den = 0.5 + (i as f64) * 0.123;
+            let num = 0.77;
+            let q = newton::div_f64(num, den, iters);
+            max_rel = max_rel.max(((q - num / den) / (num / den)).abs());
+        }
+        println!("iters {iters}: max rel err {max_rel:.2e}  (pipeline +{} stages)", 2 * iters);
+        assert!(max_rel <= prev, "NR must converge monotonically");
+        prev = max_rel;
+    }
+
+    // ---- 4. VF register organization --------------------------------------
+    println!("\n=== ablation 4: velocity-factor register file (θ=1/128, ±6) ===");
+    let io = IoSpec::table1();
+    let model = CostModel::new();
+    let single = Velocity::table1().inventory(io);
+    let paired = Velocity::table1().with_lookup_mode(VfLookupMode::PairedBits).inventory(io);
+    let (cs, cp) = (model.price(&single), model.price(&paired));
+    println!(
+        "single-bit: {} mult, {} mux2, {} entries -> {:.0} GE",
+        single.multipliers, single.mux2, single.lut_entries, cs.area_ge
+    );
+    println!(
+        "paired:     {} mult, {} mux4, {} entries -> {:.0} GE",
+        paired.multipliers, paired.mux4, paired.lut_entries, cp.area_ge
+    );
+    assert!(paired.multipliers < single.multipliers, "pairing must halve the chain");
+    assert!(paired.lut_entries > single.lut_entries, "pairing costs storage");
+    assert!(cp.area_ge < cs.area_ge, "paper's optimization should save area overall");
+
+    println!("\n✓ all ablations behave as DESIGN.md documents");
+}

@@ -1,0 +1,49 @@
+//! Bench/regeneration target for the paper's **§IV design-complexity
+//! analysis** (the block diagrams of Figs 3-5 and the component counts
+//! in the text): prints the priced inventory table, validates the
+//! §IV.H orderings, and measures the cycle-level datapath simulator's
+//! streaming throughput per method.
+
+use tanh_vlsi::approx::{table1_suite, IoSpec, MethodId};
+use tanh_vlsi::bench::bench_n;
+use tanh_vlsi::cost::CostModel;
+use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::hw::table1_pipeline;
+use tanh_vlsi::report::complexity;
+
+fn main() {
+    println!("=== §IV complexity regeneration ===\n");
+    println!("{}", complexity::render());
+
+    // §IV.H orderings.
+    let io = IoSpec::table1();
+    let model = CostModel::new();
+    let price =
+        |id: MethodId| {
+            let m = table1_suite().into_iter().find(|m| m.id() == id).unwrap();
+            model.price(&m.inventory(io))
+        };
+    let pwl = price(MethodId::Pwl);
+    let b1 = price(MethodId::TaylorQuadratic);
+    let lam = price(MethodId::Lambert);
+    let vf = price(MethodId::Velocity);
+    assert!(pwl.lut_area_ge > b1.lut_area_ge, "PWL LUT must dominate Taylor's");
+    assert!(lam.area_ge > b1.area_ge && vf.area_ge > b1.area_ge, "rational area higher");
+    println!("✓ §IV.H area/LUT orderings hold\n");
+
+    // Streaming throughput of the cycle-level datapath simulator: one
+    // result per cycle once the pipe fills (Fig 5's pipelining claim).
+    println!("=== datapath simulator streaming (1024-element batches) ===");
+    let inputs: Vec<Fx> = (0..1024)
+        .map(|i| Fx::from_f64((i as f64) * 0.0117 - 6.0, QFormat::S3_12))
+        .collect();
+    for id in MethodId::all() {
+        let pipe = table1_pipeline(id, QFormat::S_15);
+        let res = pipe.simulate(&inputs);
+        assert_eq!(res.cycles, pipe.latency() + inputs.len() - 1, "throughput must be 1/cycle");
+        bench_n(&format!("simulate/{}", pipe.name), inputs.len(), || {
+            pipe.simulate(&inputs).outputs.len()
+        });
+    }
+    println!("\n✓ every datapath sustains one result per cycle when streamed");
+}

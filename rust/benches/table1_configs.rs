@@ -1,0 +1,41 @@
+//! Bench/regeneration target for **Table I**: computes the exhaustive
+//! error metrics of the six selected configurations, prints the
+//! ours-vs-paper table, and times a full-grid sweep per method.
+
+use tanh_vlsi::approx::table1_suite;
+use tanh_vlsi::bench::bench_n;
+use tanh_vlsi::error::{measure, InputGrid};
+use tanh_vlsi::fixed::QFormat;
+use tanh_vlsi::report::table1;
+
+fn main() {
+    println!("=== TABLE I regeneration ===\n");
+    let rows = table1::compute();
+    println!("{}", table1::render(&rows));
+
+    // Reproduction check: every row within 2× of the paper in both
+    // metrics (exact agreement is not expected: our LUT quantization
+    // and anchor placement choices differ in the two Taylor rows).
+    let mut ok = true;
+    for r in &rows {
+        let fits = r.max_err < 2.0 * r.paper_max && r.rms < 2.0 * r.paper_mse;
+        println!(
+            "  {}  max {:>8.2e} vs paper {:>8.2e}  ({})",
+            r.label,
+            r.max_err,
+            r.paper_max,
+            if fits { "within 2x" } else { "OUT OF BAND" }
+        );
+        ok &= fits;
+    }
+    assert!(ok, "Table I reproduction out of band");
+
+    println!("\n=== sweep timing (full S3.12 grid, 49k points) ===");
+    let grid = InputGrid::table1();
+    for m in table1_suite() {
+        let n = grid.len();
+        bench_n(&format!("sweep/{}", m.describe()), n, || {
+            measure(m.as_ref(), grid, QFormat::S_15).max_abs
+        });
+    }
+}

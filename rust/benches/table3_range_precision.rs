@@ -1,0 +1,75 @@
+//! Bench/regeneration target for **Table III**: for each of the paper's
+//! four I/O-format rows, search the cheapest parameter per method that
+//! achieves ≤ 1 output ulp, and compare the shape against the paper's
+//! values (same order of magnitude; finer formats need finer
+//! parameters; B2 ≥ B1 step; row 4 is cheap for everything).
+
+use tanh_vlsi::approx::MethodId;
+use tanh_vlsi::error::table3_rows;
+use tanh_vlsi::report::table3::{self, PAPER_VALUES};
+
+fn main() {
+    println!("=== TABLE III regeneration (exhaustive 1-ulp searches) ===\n");
+    let mut rows = Vec::new();
+    for spec in table3_rows() {
+        eprintln!("  row {} -> {} ±{} ...", spec.input, spec.output, spec.range);
+        rows.push(table3::compute_table3_row(spec, 1.0));
+    }
+    println!("{}", table3::render(&rows));
+
+    // Shape checks.
+    // (1) every method finds a passing parameter in every row;
+    for (r, row) in rows.iter().enumerate() {
+        for (i, p) in row.params.iter().enumerate() {
+            assert!(
+                p.is_some(),
+                "row {r}: {:?} found no passing parameter",
+                MethodId::all()[i]
+            );
+        }
+    }
+    // (2) the 8-bit row (row 4) passes with coarser-or-equal parameters
+    //     than the 16-bit rows for every method;
+    for (i, id) in MethodId::all().into_iter().enumerate() {
+        let p8 = rows[3].params[i].unwrap();
+        let p16 = rows[1].params[i].unwrap();
+        match id {
+            MethodId::Lambert => assert!(
+                p8 <= p16,
+                "{id:?}: 8-bit K {p8} > 16-bit K {p16}"
+            ),
+            _ => assert!(
+                p8 >= p16,
+                "{id:?}: 8-bit step {p8} finer than 16-bit {p16}"
+            ),
+        }
+    }
+    // (3) within each row, cubic Taylor allows a coarser-or-equal step
+    //     than quadratic (paper rows 1-3: 1/16 vs 1/32);
+    for row in &rows {
+        let (b1, b2) = (row.params[1].unwrap(), row.params[2].unwrap());
+        assert!(b2 >= b1, "B2 step {b2} finer than B1 {b1}");
+    }
+    // (4) never *finer* than ~4x the paper's parameter (our search may
+    //     legitimately find coarser/cheaper passing parameters — e.g.
+    //     quadratic Taylor's 1-ulp bound for a 7-bit output is met at
+    //     step 1/2, far coarser than the paper's conservative 1/32; the
+    //     reproduction claim is that we never need *more* hardware).
+    for (r, row) in rows.iter().enumerate() {
+        for (i, id) in MethodId::all().into_iter().enumerate() {
+            let ours = row.params[i].unwrap();
+            let paper = PAPER_VALUES[r][i];
+            match id {
+                MethodId::Lambert => assert!(
+                    ours <= paper + 2.0,
+                    "row {r} {id:?}: needs K={ours} vs paper {paper}"
+                ),
+                _ => assert!(
+                    ours >= paper / 4.0,
+                    "row {r} {id:?}: needs step {ours} finer than paper {paper}/4"
+                ),
+            }
+        }
+    }
+    println!("✓ Table III shape checks passed");
+}

@@ -1,0 +1,117 @@
+//! End-to-end serving benchmark: scalar golden-model evaluation rates
+//! (the L3 hot path), PJRT batched-graph execution rates, and the full
+//! coordinator pipeline under load — the numbers EXPERIMENTS.md §Perf
+//! tracks.
+
+use std::sync::Arc;
+
+use tanh_vlsi::approx::{table1_suite, MethodId, TanhApprox};
+use tanh_vlsi::bench::{bench_n, Bencher};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend};
+use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::runtime::{ArtifactDir, EngineServer};
+use tanh_vlsi::util::prng::Prng;
+
+fn main() {
+    // --- L3 scalar hot path: evals/s per method -------------------------
+    println!("=== golden-model scalar evaluation (S3.12 -> S.15) ===");
+    let inputs: Vec<Fx> = {
+        let mut g = Prng::new(1);
+        (0..4096).map(|_| Fx::from_f64(g.f64_in(-6.0, 6.0), QFormat::S3_12)).collect()
+    };
+    for m in table1_suite() {
+        bench_n(&format!("eval_fx/{}", m.describe()), inputs.len(), || {
+            let mut acc = 0i64;
+            for &x in &inputs {
+                acc = acc.wrapping_add(m.eval_fx(x, QFormat::S_15).raw());
+            }
+            acc
+        });
+    }
+    // Production compiled fast path (PWL): integer-only closure over a
+    // dense table — the serving backend's per-activation cost.
+    {
+        let fast = tanh_vlsi::approx::pwl::Pwl::table1().compile_raw();
+        let raws: Vec<i64> = inputs.iter().map(|x| x.raw()).collect();
+        bench_n("eval_raw/PWL(compiled)", raws.len(), || {
+            let mut acc = 0i64;
+            for &r in &raws {
+                acc = acc.wrapping_add(fast(r));
+            }
+            acc
+        });
+    }
+
+    // --- PJRT batched graphs --------------------------------------------
+    let Ok(dir) = ArtifactDir::open(ArtifactDir::default_path()) else {
+        println!("\n(artifacts missing — skipping PJRT + coordinator benches; run `make artifacts`)");
+        return;
+    };
+    println!("\n=== PJRT compiled activation graphs (batch 1024) ===");
+    let engine = Arc::new(EngineServer::spawn(dir).expect("engine"));
+    let flat: Vec<f32> = {
+        let mut g = Prng::new(2);
+        (0..1024).map(|_| g.f64_in(-6.0, 6.0) as f32).collect()
+    };
+    for method in ["pwl", "taylor1", "taylor2", "catmull_rom", "velocity", "lambert", "ref"] {
+        let name = format!("tanh_{method}_1024");
+        engine.preload(&[&name]).expect("preload");
+        let e = engine.clone();
+        let b = Bencher::quick();
+        let r = b.run(&format!("pjrt/{name}"), || {
+            e.run_f32(&name, flat.clone()).unwrap().len()
+        });
+        println!("{}  [{:.2} Mact/s]", r.report(), 1024.0 * r.per_second() / 1e6);
+    }
+
+    // --- full coordinator under load --------------------------------------
+    println!("\n=== coordinator end-to-end (8 clients, mixed methods) ===");
+    for (label, backend) in [
+        ("golden", Arc::new(GoldenBackend::table1(1024)) as Arc<dyn tanh_vlsi::coordinator::ExecBackend>),
+        ("pjrt", Arc::new(GraphBackend::load_all(engine.clone(), 1024).expect("backend")) as Arc<dyn tanh_vlsi::coordinator::ExecBackend>),
+    ] {
+        let coord = Arc::new(Coordinator::start(backend, CoordinatorConfig::default()));
+        let start = std::time::Instant::now();
+        let clients = 8;
+        let per_client = 200;
+        let window = 32; // pipelined load: keep 32 requests in flight
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let coord = coord.clone();
+                std::thread::spawn(move || {
+                    let mut g = Prng::new(c as u64);
+                    let mut inflight = Vec::with_capacity(window);
+                    for i in 0..per_client {
+                        let method = MethodId::all()[(c + i) % 6];
+                        let values: Vec<f32> =
+                            (0..64).map(|_| g.f64_in(-6.0, 6.0) as f32).collect();
+                        if let Ok(rx) = coord.submit(method, values) {
+                            inflight.push(rx);
+                        }
+                        if inflight.len() >= window {
+                            for rx in inflight.drain(..) {
+                                let _ = rx.recv();
+                            }
+                        }
+                    }
+                    for rx in inflight {
+                        let _ = rx.recv();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let secs = start.elapsed().as_secs_f64();
+        let m = coord.metrics();
+        println!(
+            "coordinator/{label:6}  {:.0} req/s  {:.2} Mact/s  {} batches (eff {:.1}%)  mean lat {:.0} µs",
+            m.requests as f64 / secs,
+            m.elements as f64 / secs / 1e6,
+            m.batches,
+            100.0 * m.batch_efficiency(),
+            m.mean_latency_us()
+        );
+    }
+}

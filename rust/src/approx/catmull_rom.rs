@@ -1,0 +1,315 @@
+//! Method C — uniform cubic Catmull-Rom spline (paper §II.C, §IV.D).
+//!
+//! An interpolating spline through uniformly spaced control points
+//! `P_i = tanh(i·s)`. For `x` in segment k with local parameter
+//! `t ∈ [0, 1)` the paper's eq. (17) form is a dot product
+//!
+//! ```text
+//! f(x) = [P_{k−1} P_k P_{k+1} P_{k+2}] · ½[−t³+2t²−t, 3t³−5t²+2,
+//!                                          −3t³+4t²+t, t³−t²]ᵀ
+//! ```
+//!
+//! i.e. a 4-element MAC against a "t-vector" that is either computed by
+//! a small cubic-polynomial circuit or pre-stored in a LUT (the paper's
+//! performance/area trade-off). Catmull-Rom's integer basis coefficients
+//! (−1, 2, −5, 3, 4…) make the circuit multiplier-free shifts/adds.
+//!
+//! The first segment needs `P_{−1} = tanh(−s) = −P_1` (odd symmetry);
+//! the top segments need two guard points beyond the domain.
+
+use super::lut::UniformLut;
+use super::reference::tanh_ref;
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{fx_mul, fx_mul_wide, Fx, FxWide, QFormat, Round};
+
+/// Internal format for basis evaluation: basis values lie in (−1, 1.2],
+/// t powers in [0, 1); 2 integer bits cover every intermediate. Public
+/// for the hw pipeline's register sizing.
+pub const INT_FMT: QFormat = QFormat::new(2, 26);
+
+/// Whether the t-vector (4 cubic basis values) is computed by logic or
+/// fetched from a LUT addressed by the t bits (paper §IV.D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TVectorMode {
+    /// Evaluate the four cubic polynomials in logic (smaller area).
+    Computed,
+    /// Store the t-vector in a LUT (higher frequency, more area).
+    Stored,
+}
+
+/// Catmull-Rom spline approximator.
+#[derive(Clone, Debug)]
+pub struct CatmullRom {
+    lut: UniformLut,
+    step: f64,
+    domain_max: f64,
+    tvec_mode: TVectorMode,
+}
+
+impl CatmullRom {
+    /// Builds with control points every `step` over `[0, domain_max]`
+    /// plus the two guard points the last segments need.
+    pub fn new(step: f64, domain_max: f64) -> CatmullRom {
+        let lut = UniformLut::sample(tanh_ref, step, domain_max, 2, QFormat::new(0, 17));
+        CatmullRom { lut, step, domain_max, tvec_mode: TVectorMode::Computed }
+    }
+
+    /// Table I row "C": step 1/16, domain (-6, 6).
+    pub fn table1() -> CatmullRom {
+        CatmullRom::new(1.0 / 16.0, 6.0)
+    }
+
+    /// Selects t-vector realization (inventory only; numerics identical).
+    pub fn with_tvector_mode(mut self, mode: TVectorMode) -> CatmullRom {
+        self.tvec_mode = mode;
+        self
+    }
+
+    /// Control-point spacing.
+    pub fn step(&self) -> f64 {
+        self.step
+    }
+
+    /// Control-point LUT.
+    pub fn lut(&self) -> &UniformLut {
+        &self.lut
+    }
+
+    /// Signed control-point fetch: `P_{−i} = −P_i` (odd function).
+    /// Public for the hw pipeline's fetch stage.
+    #[inline]
+    pub fn p(&self, i: isize) -> Fx {
+        if i < 0 {
+            self.lut.at((-i) as usize).neg()
+        } else {
+            self.lut.at(i as usize)
+        }
+    }
+
+    /// The four basis values at parameter `t` — f64 model.
+    pub fn basis_f64(t: f64) -> [f64; 4] {
+        let t2 = t * t;
+        let t3 = t2 * t;
+        [
+            0.5 * (-t3 + 2.0 * t2 - t),
+            0.5 * (3.0 * t3 - 5.0 * t2 + 2.0),
+            0.5 * (-3.0 * t3 + 4.0 * t2 + t),
+            0.5 * (t3 - t2),
+        ]
+    }
+
+    /// Fixed-point basis evaluation in [`INT_FMT`] — the "t-vector"
+    /// computation circuit of Fig 3's Catmull-Rom variant. Public so the
+    /// hw pipeline stage reuses the identical arithmetic.
+    pub fn basis_fx(t: Fx) -> [Fx; 4] {
+        let t = t.convert(INT_FMT, Round::NearestEven);
+        let t2 = fx_mul(t, t, INT_FMT, Round::NearestAway);
+        let t3 = fx_mul(t2, t, INT_FMT, Round::NearestAway);
+        let half = |w: FxWide| w.narrow(INT_FMT, Round::NearestAway);
+        // All coefficients are small integers — shifts and adds in hw.
+        let c = |v: f64| Fx::from_f64(v, INT_FMT);
+        [
+            half(
+                fx_mul_wide(t3, c(-0.5))
+                    .add(fx_mul_wide(t2, c(1.0)))
+                    .add(fx_mul_wide(t, c(-0.5))),
+            ),
+            half(
+                fx_mul_wide(t3, c(1.5))
+                    .add(fx_mul_wide(t2, c(-2.5)))
+                    .add(FxWide::from_fx(c(1.0))),
+            ),
+            half(
+                fx_mul_wide(t3, c(-1.5))
+                    .add(fx_mul_wide(t2, c(2.0)))
+                    .add(fx_mul_wide(t, c(0.5))),
+            ),
+            half(fx_mul_wide(t3, c(0.5)).add(fx_mul_wide(t2, c(-0.5)))),
+        ]
+    }
+}
+
+impl TanhApprox for CatmullRom {
+    fn id(&self) -> MethodId {
+        MethodId::CatmullRom
+    }
+
+    fn describe(&self) -> String {
+        format!("CatmullRom(step={})", crate::util::table::step_str(self.step))
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let x = x.abs();
+        let y = if x >= self.domain_max {
+            1.0
+        } else {
+            let k = (x / self.step).floor();
+            let t = x / self.step - k;
+            let k = k as isize;
+            let b = Self::basis_f64(t);
+            let p = |i: isize| {
+                let xi = i as f64 * self.step;
+                tanh_ref(xi)
+            };
+            b[0] * p(k - 1) + b[1] * p(k) + b[2] * p(k + 1) + b[3] * p(k + 2)
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        let (idx, t) = self.lut.split_index(x);
+        let k = idx as isize;
+        let b = Self::basis_fx(t);
+        let p = [self.p(k - 1), self.p(k), self.p(k + 1), self.p(k + 2)];
+        // 4-element MAC kept wide; single rounding into the output.
+        let mut acc = fx_mul_wide(b[0], p[0].convert(INT_FMT, Round::NearestEven));
+        for i in 1..4 {
+            acc = acc.add(fx_mul_wide(b[i], p[i].convert(INT_FMT, Round::NearestEven)));
+        }
+        acc.narrow(out, Round::NearestEven)
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.domain_max
+    }
+
+    fn inventory(&self, io: IoSpec) -> Inventory {
+        // Dot product: 4 multipliers + 3 adders (paper: "a simple MAC and
+        // vector computation units").
+        let mac = Inventory {
+            adders: 3,
+            multipliers: 4,
+            mult_width: io.output.width().max(INT_FMT.width()),
+            add_width: INT_FMT.width(),
+            pipeline_stages: 4, // fetch | t-vector | multiply | reduce
+            ..Default::default()
+        };
+        let points = Inventory {
+            lut_entries: self.lut.len() as u32,
+            lut_bits: self.lut.total_bits(),
+            ..Default::default()
+        };
+        match self.tvec_mode {
+            TVectorMode::Computed => {
+                // t², t³ + four 3-term integer-coefficient polynomials:
+                // coefficients are shifts/adds, counted as adders.
+                mac.plus(points).plus(Inventory {
+                    adders: 8,
+                    squarers: 1,
+                    multipliers: 1, // t³ = t²·t
+                    ..Default::default()
+                })
+            }
+            TVectorMode::Stored => {
+                // Paper: store the 4 basis values per t in a LUT indexed
+                // by the t bits (t resolution = input frac − step bits).
+                let t_bits = io.input.frac_bits - (1.0 / self.step).log2() as u32;
+                let entries = (1u32 << t_bits) * 4;
+                mac.plus(points).plus(Inventory {
+                    lut_entries: entries,
+                    lut_bits: entries * INT_FMT.width(),
+                    ..Default::default()
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::eval_odd_saturating;
+
+    const OUT: QFormat = QFormat::S_15;
+    const INP: QFormat = QFormat::S3_12;
+
+    #[test]
+    fn basis_partition_of_unity() {
+        // Catmull-Rom basis sums to 1 for every t (affine invariance).
+        let mut t = 0.0;
+        while t < 1.0 {
+            let b = CatmullRom::basis_f64(t);
+            let sum: f64 = b.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "t={t} sum={sum}");
+            t += 0.01;
+        }
+    }
+
+    #[test]
+    fn interpolates_control_points() {
+        // At t=0 the spline passes through P_k exactly.
+        let b = CatmullRom::basis_f64(0.0);
+        assert_eq!(b, [0.0, 1.0, 0.0, 0.0]);
+        let cr = CatmullRom::table1();
+        for i in [0usize, 1, 16, 40] {
+            let x = Fx::from_f64(i as f64 / 16.0, INP);
+            let y = cr.eval_fx(x, OUT);
+            let want = tanh_ref(x.to_f64());
+            assert!(
+                (y.to_f64() - want).abs() <= OUT.ulp() + 1e-9,
+                "i={i}: {} vs {want}",
+                y.to_f64()
+            );
+        }
+    }
+
+    #[test]
+    fn table1_error_bounds() {
+        // Paper Table I row C: step 1/16 → max err 3.63e-5.
+        let cr = CatmullRom::table1();
+        let mut max_err: f64 = 0.0;
+        for raw in -(INP.max_raw())..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            let y = eval_odd_saturating(&cr, x, OUT);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        assert!(max_err < 5.5e-5, "max_err {max_err} (paper 3.63e-5)");
+        assert!(max_err > 1.0e-5);
+    }
+
+    #[test]
+    fn fx_basis_matches_f64_basis() {
+        for tv in [0.0, 0.25, 0.5, 0.875] {
+            let t = Fx::from_f64(tv, QFormat::new(0, 8));
+            let bf = CatmullRom::basis_fx(t);
+            let bd = CatmullRom::basis_f64(t.to_f64());
+            for i in 0..4 {
+                assert!(
+                    (bf[i].to_f64() - bd[i]).abs() < 1e-6,
+                    "t={tv} i={i}: {} vs {}",
+                    bf[i].to_f64(),
+                    bd[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_segment_uses_odd_reflection() {
+        // Near x=0 the spline needs P_{-1} = -tanh(step); the result must
+        // still track tanh closely (and pass through 0 at 0).
+        let cr = CatmullRom::table1();
+        let y0 = cr.eval_fx(Fx::zero(INP), OUT);
+        assert_eq!(y0.raw(), 0);
+        let x = Fx::from_f64(0.02, INP);
+        let y = cr.eval_fx(x, OUT);
+        assert!((y.to_f64() - tanh_ref(x.to_f64())).abs() < 1e-4);
+    }
+
+    #[test]
+    fn stored_tvector_trades_lut_for_logic() {
+        let io = IoSpec::table1();
+        let computed = CatmullRom::table1().inventory(io);
+        let stored = CatmullRom::table1().with_tvector_mode(TVectorMode::Stored).inventory(io);
+        assert!(stored.lut_bits > computed.lut_bits);
+        assert!(stored.adders < computed.adders);
+        // Both share the 4-mult MAC core.
+        assert!(computed.multipliers >= 4 && stored.multipliers >= 4);
+    }
+}

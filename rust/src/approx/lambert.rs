@@ -1,0 +1,294 @@
+//! Method E — Lambert's continued fraction (paper §II.E, §IV.F).
+//!
+//! ```text
+//! tanh(x) = x / (1 + x²/(3 + x²/(7 + …)))
+//! ```
+//!
+//! truncated at K division terms and evaluated bottom-up with the
+//! paper's eq. (15) recurrence (after Beebe), which maps directly onto a
+//! pipeline of identical stages (Fig 5):
+//!
+//! ```text
+//! T_{−1} = 1,  T_0 = 2K+1
+//! T_n = (2K+1−2n)·T_{n−1} + x²·T_{n−2}     1 ≤ n ≤ K
+//! f(x) ≈ x·T_{K−1} / T_K
+//! ```
+//!
+//! The T values grow like (2K+1)!!·cosh(x), so the datapath needs the
+//! paper's "larger multipliers": the model sizes a wide internal format
+//! from K and the domain at construction time (a real implementation
+//! would instead block-normalize per stage; the width model upper-bounds
+//! that design — see DESIGN.md §3). The final division reuses the shared
+//! Newton-Raphson divider.
+
+use super::newton::{div_f64, fx_div, NR_ITERS};
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{fx_mul, fx_mul_wide, Fx, QFormat, Round};
+
+/// Lambert continued-fraction approximator.
+#[derive(Clone, Debug)]
+pub struct Lambert {
+    /// Number of continued-fraction division terms K.
+    k: usize,
+    domain_max: f64,
+    /// Wide internal format sized for the T recurrence at this (K, domain).
+    wide_fmt: QFormat,
+}
+
+impl Lambert {
+    /// Builds a K-term continued-fraction evaluator over `[0, domain_max]`.
+    pub fn new(k: usize, domain_max: f64) -> Lambert {
+        assert!((1..=16).contains(&k), "K must be 1..=16, got {k}");
+        // Size the internal format by running the recurrence in f64 at
+        // the worst-case |x| = domain_max and adding 2 bits of margin.
+        let tk = Self::recurrence_f64(k, domain_max * domain_max);
+        let max_t = tk.0.abs().max(tk.1.abs());
+        let int_bits = (max_t.log2().ceil() as u32 + 2).min(44);
+        let wide_fmt = QFormat::new(int_bits, 18);
+        Lambert { k, domain_max, wide_fmt }
+    }
+
+    /// Table I row "E": K = 7 fraction terms, domain (-6, 6).
+    pub fn table1() -> Lambert {
+        Lambert::new(7, 6.0)
+    }
+
+    /// Number of continued-fraction terms.
+    pub fn terms(&self) -> usize {
+        self.k
+    }
+
+    /// The wide internal format (for the cost model / hw simulator).
+    pub fn wide_format(&self) -> QFormat {
+        self.wide_fmt
+    }
+
+    /// Runs the T recurrence in f64; returns (T_{K−1}, T_K).
+    fn recurrence_f64(k: usize, x2: f64) -> (f64, f64) {
+        let kk = (2 * k + 1) as f64;
+        let mut tm1 = 1.0; // T_{-1}
+        let mut t0 = kk; // T_0
+        for n in 1..=k {
+            let c = kk - 2.0 * n as f64;
+            let t = c * t0 + x2 * tm1;
+            tm1 = t0;
+            t0 = t;
+        }
+        (tm1, t0)
+    }
+}
+
+impl TanhApprox for Lambert {
+    fn id(&self) -> MethodId {
+        MethodId::Lambert
+    }
+
+    fn describe(&self) -> String {
+        format!("Lambert(K={})", self.k)
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let x = x.abs();
+        let y = if x >= self.domain_max {
+            1.0
+        } else {
+            let (tkm1, tk) = Self::recurrence_f64(self.k, x * x);
+            div_f64(x * tkm1, tk, NR_ITERS)
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        let wf = self.wide_fmt;
+        // x² via the input squarer, renormalized into the wide format.
+        let x2 = fx_mul_wide(x, x).narrow(wf, Round::NearestAway);
+        let kk = 2 * self.k as i64 + 1;
+
+        // T_{-1} = 1, T_0 = 2K+1 — exact constants in the wide format.
+        let mut tm1 = Fx::one(wf);
+        let mut t0 = Fx::from_f64(kk as f64, wf);
+        for n in 1..=self.k {
+            // T_n = c_n·T_{n-1} + x²·T_{n-2}; c_n is a small odd constant
+            // (shift-add in hardware). Wide MAC, one rounding per stage —
+            // exactly what a pipeline register between stages does.
+            let c = Fx::from_f64((kk - 2 * n as i64) as f64, wf);
+            let t = fx_mul_wide(c, t0)
+                .add(fx_mul_wide(x2, tm1))
+                .narrow(wf, Round::NearestAway);
+            tm1 = t0;
+            t0 = t;
+        }
+
+        // f = x·T_{K-1} / T_K via the NR divider.
+        let num = fx_mul(x, tm1, wf, Round::NearestAway);
+        if t0.raw() <= 0 {
+            // Cannot happen for x in domain (T_K > 0); defensive clamp.
+            return Fx::max(out);
+        }
+        fx_div(num, t0, out, NR_ITERS)
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.domain_max
+    }
+
+    fn inventory(&self, _io: IoSpec) -> Inventory {
+        // Paper §IV.F: "two adders and two multipliers in each stage
+        // except the first two. … The last step requires one divider and
+        // one multiplier."
+        let stages = self.k as u32;
+        let per_stage = Inventory {
+            adders: 2,
+            multipliers: 2,
+            mult_width: self.wide_fmt.width(),
+            add_width: self.wide_fmt.width(),
+            pipeline_stages: 1,
+            ..Default::default()
+        };
+        let mut inv = Inventory {
+            squarers: 1, // x²
+            pipeline_stages: 1,
+            ..Default::default()
+        };
+        for _ in 0..stages.saturating_sub(2) {
+            inv = inv.plus(per_stage);
+        }
+        // First two stages are constant-fed (T_{-1}, T_0 constants):
+        // single multiplier + adder each.
+        inv = inv.plus(Inventory {
+            adders: 2,
+            multipliers: 2,
+            pipeline_stages: 2,
+            ..Default::default()
+        });
+        // Final: one multiplier (x·T_{K-1}) + one NR divider.
+        inv.plus(Inventory {
+            multipliers: 1,
+            dividers: 1,
+            mult_width: self.wide_fmt.width(),
+            add_width: self.wide_fmt.width(),
+            pipeline_stages: 1 + 2 * (NR_ITERS as u32),
+            ..Default::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::eval_odd_saturating;
+    use crate::approx::reference::tanh_ref;
+
+    const OUT: QFormat = QFormat::S_15;
+    const INP: QFormat = QFormat::S3_12;
+
+    #[test]
+    fn recurrence_equals_continued_fraction() {
+        // Direct top-down CF evaluation vs the eq. (15) recurrence.
+        for &x in &[0.1, 0.5, 1.0, 2.0, 4.0] {
+            for k in 1..=8 {
+                let x2 = x * x;
+                // top-down: start at the innermost denominator 2K+1? The
+                // K-term truncation uses denominators 1, 3, 5, …, 2K+1.
+                let mut d = (2 * k + 1) as f64;
+                for n in (1..=k).rev() {
+                    d = (2 * n - 1) as f64 + x2 / d;
+                }
+                let topdown = x / d;
+                let (tkm1, tk) = Lambert::recurrence_f64(k, x2);
+                let rec = x * tkm1 / tk;
+                assert!(
+                    (topdown - rec).abs() < 1e-9,
+                    "x={x} K={k}: {topdown} vs {rec}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn converges_with_k() {
+        // More fraction terms → strictly smaller math-model error.
+        let probe = |k: usize| {
+            let m = Lambert::new(k, 6.0);
+            let mut e: f64 = 0.0;
+            let mut x = 0.0;
+            while x < 6.0 {
+                e = e.max((m.eval_f64(x) - tanh_ref(x)).abs());
+                x += 0.01;
+            }
+            e
+        };
+        let (e3, e5, e7) = (probe(3), probe(5), probe(7));
+        assert!(e3 > e5 && e5 > e7, "{e3} {e5} {e7}");
+    }
+
+    #[test]
+    fn table1_error_bounds() {
+        // Paper Table I row E: K = 7 → max err 4.87e-5.
+        let m = Lambert::table1();
+        let mut max_err: f64 = 0.0;
+        for raw in -(INP.max_raw())..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            let y = eval_odd_saturating(&m, x, OUT);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        assert!(max_err < 8.0e-5, "max_err {max_err} (paper 4.87e-5)");
+        assert!(max_err > 1.0e-5);
+    }
+
+    #[test]
+    fn small_x_nearly_exact() {
+        // CF truncation error vanishes for small x; only quantization
+        // remains.
+        let m = Lambert::table1();
+        for xv in [0.01, 0.1, 0.3] {
+            let x = Fx::from_f64(xv, INP);
+            let y = m.eval_fx(x, OUT);
+            let err = (y.to_f64() - tanh_ref(x.to_f64())).abs();
+            assert!(err <= 2.0 * OUT.ulp(), "x={xv} err={err}");
+        }
+    }
+
+    #[test]
+    fn wide_format_is_wide_enough() {
+        // The sized format must hold the worst-case T_K without
+        // saturating: evaluate at the domain edge and check against f64.
+        let m = Lambert::table1();
+        let x = Fx::from_f64(5.999, INP);
+        let y = m.eval_fx(x, OUT);
+        let err = (y.to_f64() - tanh_ref(x.to_f64())).abs();
+        assert!(err < 1e-3, "edge err {err}");
+    }
+
+    #[test]
+    fn inventory_scales_with_k() {
+        // Paper §IV.F: pipelined implementation scales with fraction
+        // count; stage cost is constant.
+        let io = IoSpec::table1();
+        let i5 = Lambert::new(5, 6.0).inventory(io);
+        let i7 = Lambert::new(7, 6.0).inventory(io);
+        assert_eq!(i7.multipliers - i5.multipliers, 4); // 2 per stage
+        assert_eq!(i7.adders - i5.adders, 4);
+        assert!(i7.pipeline_stages > i5.pipeline_stages);
+        assert_eq!(i7.dividers, 1);
+    }
+
+    #[test]
+    fn scaling_headroom_for_k_up_to_10() {
+        // §IV.H: "Lambert's continued function can be scaled for better
+        // accuracy" — the model must stay numerically sound as K grows.
+        for k in [8, 9, 10] {
+            let m = Lambert::new(k, 6.0);
+            let x = Fx::from_f64(1.5, INP);
+            let y = m.eval_fx(x, OUT);
+            let err = (y.to_f64() - tanh_ref(1.5f64)).abs();
+            assert!(err < 1e-4, "K={k} err={err}");
+        }
+    }
+}

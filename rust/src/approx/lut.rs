@@ -1,0 +1,164 @@
+//! Lookup-table generation shared by the table-driven methods (A, B, C)
+//! and the velocity-factor registers (D).
+//!
+//! The paper stores function values at uniformly spaced sample points
+//! (`step` apart) in hardwired LUTs (§IV.B: "we can use bitmapping
+//! (combinatorial) logic instead of a memory cut"). This module builds
+//! those tables from the f64 reference, quantized once into the storage
+//! format — exactly what a synthesis script would emit.
+
+use crate::fixed::{Fx, QFormat, Round};
+
+/// A uniformly sampled LUT of a scalar function over `[0, x_max]`.
+#[derive(Clone, Debug)]
+pub struct UniformLut {
+    /// Quantized entries; `entries[i]` holds `f(i * step)`.
+    entries: Vec<Fx>,
+    /// Sample spacing (a power of two in all paper configurations).
+    step: f64,
+    /// log2(1/step) when step is a reciprocal power of two.
+    step_shift: u32,
+    /// Storage format of each entry.
+    fmt: QFormat,
+}
+
+impl UniformLut {
+    /// Samples `f` at `0, step, 2·step, …, n·step ≥ x_max` (inclusive of
+    /// one point at/above `x_max`, plus `guard` extra points beyond — the
+    /// Catmull-Rom datapath needs P_{k+2}).
+    ///
+    /// `step` must be a reciprocal power of two (all paper configs are),
+    /// so that LUT addressing is a pure bit-slice of the input word.
+    pub fn sample(
+        f: impl Fn(f64) -> f64,
+        step: f64,
+        x_max: f64,
+        guard: usize,
+        fmt: QFormat,
+    ) -> UniformLut {
+        let inv = 1.0 / step;
+        assert!(
+            inv.fract() == 0.0 && (inv as u64).is_power_of_two(),
+            "step {step} must be a reciprocal power of two"
+        );
+        let step_shift = (inv as u64).trailing_zeros();
+        let n = (x_max / step).ceil() as usize + 1 + guard;
+        let entries = (0..n)
+            .map(|i| Fx::from_f64_round(f(i as f64 * step), fmt, Round::NearestEven))
+            .collect();
+        UniformLut { entries, step, step_shift, fmt }
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if the table is empty (never the case for valid configs).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sample spacing.
+    pub fn step(&self) -> f64 {
+        self.step
+    }
+
+    /// Entry storage format.
+    pub fn format(&self) -> QFormat {
+        self.fmt
+    }
+
+    /// Total storage in bits (entries × word width) — the cost model's
+    /// LUT size input.
+    pub fn total_bits(&self) -> u32 {
+        self.len() as u32 * self.fmt.width()
+    }
+
+    /// Direct indexed access (clamped to the last entry, which models the
+    /// saturated guard region).
+    #[inline]
+    pub fn at(&self, idx: usize) -> Fx {
+        self.entries[idx.min(self.entries.len() - 1)]
+    }
+
+    /// Splits a non-negative input into (LUT index, interpolation
+    /// fraction) exactly the way the datapath does: the top bits of the
+    /// input word address the LUT, the remaining LSBs are the fraction
+    /// `t ∈ [0, 1)` with `frac_bits(x) - step_shift` bits (paper Fig 3).
+    ///
+    /// Returns `(index, t)` where `t` is expressed in the given fraction
+    /// format (fraction-only, non-negative).
+    #[inline]
+    pub fn split_index(&self, x: Fx) -> (usize, Fx) {
+        debug_assert!(!x.is_negative());
+        let in_frac = x.format().frac_bits;
+        assert!(
+            in_frac >= self.step_shift,
+            "input precision 2^-{in_frac} coarser than LUT step 2^-{}",
+            self.step_shift
+        );
+        let t_bits = in_frac - self.step_shift;
+        let idx = (x.raw() >> t_bits) as usize;
+        let t_raw = x.raw() & ((1i64 << t_bits) - 1);
+        // t as a fraction in [0,1): t_raw * 2^-t_bits, stored in S.t_bits.
+        let t = Fx::from_raw_unchecked(t_raw, QFormat::new(0, t_bits));
+        (idx, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::reference::tanh_ref;
+
+    #[test]
+    fn samples_tanh_grid() {
+        let lut = UniformLut::sample(tanh_ref, 1.0 / 64.0, 6.0, 0, QFormat::S_15);
+        assert_eq!(lut.len(), 6 * 64 + 1);
+        assert_eq!(lut.at(0).raw(), 0);
+        // entry 64 = tanh(1.0)
+        let want = tanh_ref(1.0);
+        assert!((lut.at(64).to_f64() - want).abs() <= QFormat::S_15.ulp() / 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn split_index_reassembles_input() {
+        let lut = UniformLut::sample(tanh_ref, 1.0 / 64.0, 6.0, 0, QFormat::S_15);
+        let x = Fx::from_f64(3.14159, QFormat::S3_12);
+        let (idx, t) = lut.split_index(x);
+        // x == idx*step + t*step exactly.
+        let rebuilt = idx as f64 / 64.0 + t.to_f64() / 64.0;
+        assert!((rebuilt - x.to_f64()).abs() < 1e-12);
+        assert!(t.to_f64() < 1.0);
+    }
+
+    #[test]
+    fn guard_entries_extend_table() {
+        let plain = UniformLut::sample(tanh_ref, 1.0 / 16.0, 6.0, 0, QFormat::S_15);
+        let guarded = UniformLut::sample(tanh_ref, 1.0 / 16.0, 6.0, 2, QFormat::S_15);
+        assert_eq!(guarded.len(), plain.len() + 2);
+    }
+
+    #[test]
+    fn at_clamps_past_end() {
+        let lut = UniformLut::sample(tanh_ref, 1.0 / 16.0, 2.0, 0, QFormat::S_15);
+        let last = lut.at(lut.len() - 1);
+        assert_eq!(lut.at(lut.len() + 100).raw(), last.raw());
+    }
+
+    #[test]
+    #[should_panic(expected = "reciprocal power of two")]
+    fn non_pow2_step_rejected() {
+        UniformLut::sample(tanh_ref, 0.3, 6.0, 0, QFormat::S_15);
+    }
+
+    #[test]
+    fn total_bits_matches_paper_pwl_sizing() {
+        // Paper §IV.B: step 1/64 over (0,6) — 384 intervals, 385 sampled
+        // endpoints, 16-bit entries.
+        let lut = UniformLut::sample(tanh_ref, 1.0 / 64.0, 6.0, 0, QFormat::S_15);
+        assert_eq!(lut.len(), 385);
+        assert_eq!(lut.total_bits(), 385 * 16);
+    }
+}

@@ -1,0 +1,263 @@
+//! The six tanh approximations compared by the paper, as bit-exact
+//! fixed-point datapath golden models plus f64 math models.
+//!
+//! Every method implements [`TanhApprox`]:
+//!
+//! - `eval_f64` — the *math model*: the approximation computed in f64,
+//!   isolating algorithmic error from quantization error;
+//! - `eval_fx` — the *datapath model*: every intermediate uses the
+//!   fixed-point widths a synthesized implementation would, built only
+//!   from [`crate::fixed`] primitives, so the result is bit-exact
+//!   reproducible (and matches the Pallas kernels' int32 emulation);
+//! - `inventory` — the hardware component inventory used by the cost
+//!   model ([`crate::cost`]) to reproduce the paper's §IV analysis.
+//!
+//! All methods exploit tanh's odd symmetry (paper §IV: "the main
+//! algorithm can be implemented for positive values only") via
+//! [`eval_odd_saturating`], and saturate to the output format's max
+//! beyond the configured domain (paper §III.A).
+
+pub mod catmull_rom;
+pub mod lambert;
+pub mod lut;
+pub mod newton;
+pub mod pwl;
+pub mod pwl_nonuniform;
+pub mod reference;
+pub mod regions;
+pub mod sigmoid;
+pub mod taylor;
+pub mod velocity;
+
+use crate::cost::Inventory;
+use crate::fixed::{Fx, QFormat};
+
+/// Paper method identifiers (Table I heading row).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum MethodId {
+    /// A — piecewise linear interpolation.
+    Pwl,
+    /// B1 — Taylor series, quadratic (3 terms).
+    TaylorQuadratic,
+    /// B2 — Taylor series, cubic (4 terms).
+    TaylorCubic,
+    /// C — uniform cubic Catmull-Rom spline.
+    CatmullRom,
+    /// D — trigonometric expansion via velocity factors.
+    Velocity,
+    /// E — Lambert continued fraction.
+    Lambert,
+}
+
+impl MethodId {
+    /// The paper's single-letter label.
+    pub fn label(self) -> &'static str {
+        match self {
+            MethodId::Pwl => "A",
+            MethodId::TaylorQuadratic => "B1",
+            MethodId::TaylorCubic => "B2",
+            MethodId::CatmullRom => "C",
+            MethodId::Velocity => "D",
+            MethodId::Lambert => "E",
+        }
+    }
+
+    /// Human-readable method name as used in Table I.
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodId::Pwl => "PWL",
+            MethodId::TaylorQuadratic => "Taylor 1",
+            MethodId::TaylorCubic => "Taylor 2",
+            MethodId::CatmullRom => "Catmull Rom",
+            MethodId::Velocity => "Trig Expansion",
+            MethodId::Lambert => "Lambert",
+        }
+    }
+
+    /// All six methods in paper order.
+    pub fn all() -> [MethodId; 6] {
+        [
+            MethodId::Pwl,
+            MethodId::TaylorQuadratic,
+            MethodId::TaylorCubic,
+            MethodId::CatmullRom,
+            MethodId::Velocity,
+            MethodId::Lambert,
+        ]
+    }
+
+    /// Parses CLI names: `pwl|taylor1|taylor2|catmull|velocity|lambert`
+    /// or the paper letters `A|B1|B2|C|D|E`.
+    pub fn parse(s: &str) -> Option<MethodId> {
+        match s.to_ascii_lowercase().as_str() {
+            "a" | "pwl" => Some(MethodId::Pwl),
+            "b1" | "taylor1" | "taylor-quadratic" => Some(MethodId::TaylorQuadratic),
+            "b2" | "taylor2" | "taylor-cubic" => Some(MethodId::TaylorCubic),
+            "c" | "catmull" | "catmull-rom" => Some(MethodId::CatmullRom),
+            "d" | "velocity" | "trig" => Some(MethodId::Velocity),
+            "e" | "lambert" => Some(MethodId::Lambert),
+            _ => None,
+        }
+    }
+}
+
+/// Common interface over the six approximations.
+pub trait TanhApprox: Send + Sync {
+    /// Which paper method this is.
+    fn id(&self) -> MethodId;
+
+    /// A descriptive name including the configuration, e.g. `PWL(step=1/64)`.
+    fn describe(&self) -> String;
+
+    /// The math model: approximation computed in f64 over the full real
+    /// line (odd symmetry + saturation applied).
+    fn eval_f64(&self, x: f64) -> f64;
+
+    /// The datapath model: bit-exact fixed-point evaluation for
+    /// non-negative in-domain `x` (sign and saturation handled by
+    /// [`eval_odd_saturating`], which `eval_fx` routes through).
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx;
+
+    /// Upper edge of the approximation domain; inputs at or beyond this
+    /// magnitude return the saturated output (paper §III.A).
+    fn domain_max(&self) -> f64;
+
+    /// Hardware component inventory for the cost model (paper §IV).
+    fn inventory(&self, io: IoSpec) -> Inventory;
+
+    /// Full datapath evaluation: sign split + saturation + positive core.
+    fn eval_fx(&self, x: Fx, out: QFormat) -> Fx {
+        eval_odd_saturating(self, x, out)
+    }
+}
+
+/// Input/output format pair used for inventory sizing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IoSpec {
+    /// Input fixed-point format (e.g. S3.12).
+    pub input: QFormat,
+    /// Output fixed-point format (e.g. S.15).
+    pub output: QFormat,
+}
+
+impl IoSpec {
+    /// The Table I analysis spec: S3.12 in, S.15 out, domain (-6, 6).
+    pub fn table1() -> IoSpec {
+        IoSpec { input: QFormat::S3_12, output: QFormat::S_15 }
+    }
+}
+
+/// Applies tanh's odd symmetry and output saturation around a method's
+/// positive-domain core — the shared front/back-end every datapath in
+/// the paper has (sign bit peel-off + clamp beyond the domain).
+pub fn eval_odd_saturating<M: TanhApprox + ?Sized>(m: &M, x: Fx, out: QFormat) -> Fx {
+    let neg = x.is_negative();
+    let mag = x.abs();
+    let y = if mag.to_f64() >= m.domain_max() {
+        Fx::max(out) // ±(1 - 2^-b), paper §III.A
+    } else {
+        m.eval_positive_fx(mag, out)
+    };
+    // Clamp to [0, max]: approximation wiggle must never exceed ±1.
+    let y = if y.is_negative() { Fx::zero(out) } else { y };
+    if neg {
+        y.neg()
+    } else {
+        y
+    }
+}
+
+/// Builds the Table I configuration of every method, in paper order.
+/// These are the six rows of Table I (max input 6.0, 12-bit input
+/// precision, 15-bit output precision).
+pub fn table1_suite() -> Vec<Box<dyn TanhApprox>> {
+    vec![
+        Box::new(pwl::Pwl::table1()),
+        Box::new(taylor::Taylor::table1_quadratic()),
+        Box::new(taylor::Taylor::table1_cubic()),
+        Box::new(catmull_rom::CatmullRom::table1()),
+        Box::new(velocity::Velocity::table1()),
+        Box::new(lambert::Lambert::table1()),
+    ]
+}
+
+/// Builds a method with an explicit tunable parameter:
+/// step size for A/B1/B2/C, threshold for D, term count for E.
+///
+/// `param` is the step/threshold as a value (e.g. `1.0/64.0`) for
+/// A..D and the number of fraction terms (as f64) for E. `domain_max`
+/// bounds the approximation domain.
+pub fn build(id: MethodId, param: f64, domain_max: f64) -> Box<dyn TanhApprox> {
+    match id {
+        MethodId::Pwl => Box::new(pwl::Pwl::new(param, domain_max)),
+        MethodId::TaylorQuadratic => Box::new(taylor::Taylor::new(param, 3, domain_max)),
+        MethodId::TaylorCubic => Box::new(taylor::Taylor::new(param, 4, domain_max)),
+        MethodId::CatmullRom => Box::new(catmull_rom::CatmullRom::new(param, domain_max)),
+        MethodId::Velocity => Box::new(velocity::Velocity::new(param, domain_max)),
+        MethodId::Lambert => Box::new(lambert::Lambert::new(param as usize, domain_max)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels_match_paper() {
+        let labels: Vec<&str> = MethodId::all().iter().map(|m| m.label()).collect();
+        assert_eq!(labels, vec!["A", "B1", "B2", "C", "D", "E"]);
+    }
+
+    #[test]
+    fn parse_accepts_letters_and_names() {
+        assert_eq!(MethodId::parse("A"), Some(MethodId::Pwl));
+        assert_eq!(MethodId::parse("b2"), Some(MethodId::TaylorCubic));
+        assert_eq!(MethodId::parse("velocity"), Some(MethodId::Velocity));
+        assert_eq!(MethodId::parse("nope"), None);
+    }
+
+    #[test]
+    fn table1_suite_has_six_methods_in_order() {
+        let suite = table1_suite();
+        assert_eq!(suite.len(), 6);
+        let ids: Vec<MethodId> = suite.iter().map(|m| m.id()).collect();
+        assert_eq!(ids, MethodId::all().to_vec());
+    }
+
+    #[test]
+    fn odd_symmetry_holds_for_every_method() {
+        let io = IoSpec::table1();
+        for m in table1_suite() {
+            for v in [0.1, 0.5, 1.0, 2.5, 5.9] {
+                let xp = Fx::from_f64(v, io.input);
+                let xn = Fx::from_f64(-v, io.input);
+                let yp = m.eval_fx(xp, io.output);
+                let yn = m.eval_fx(xn, io.output);
+                assert_eq!(yp.raw(), -yn.raw(), "{} at {v}", m.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_beyond_domain() {
+        let io = IoSpec::table1();
+        for m in table1_suite() {
+            let x = Fx::from_f64(7.5, io.input);
+            let y = m.eval_fx(x, io.output);
+            assert_eq!(y.raw(), io.output.max_raw(), "{}", m.describe());
+            // Paper §III.A: the saturated output is ±(1 − 2^-b), i.e.
+            // symmetric ±max_raw (not the asymmetric two's-complement min).
+            let y = m.eval_fx(x.neg(), io.output);
+            assert_eq!(y.raw(), -io.output.max_raw(), "{}", m.describe());
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let io = IoSpec::table1();
+        for m in table1_suite() {
+            let y = m.eval_fx(Fx::zero(io.input), io.output);
+            assert_eq!(y.raw(), 0, "{}", m.describe());
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Newton-Raphson reciprocal and division — the divider substrate the
+//! rational methods (D, E) share (paper §IV.E eq. 19 / §IV.F).
+//!
+//! The paper's divider "can be implemented by multiplying numerator with
+//! the reciprocal of denominator which can be computed using Newton
+//! Raphson method": x_{i+1} = x_i (2 - b·x_i), which doubles the number
+//! of correct bits per iteration. The hardware realization normalizes
+//! the denominator into [0.5, 1) with a leading-zero count + barrel
+//! shift, runs a fixed number of multiply-subtract iterations in an
+//! internal S1.30 format, and denormalizes.
+
+use crate::fixed::{fx_mul_wide, Fx, FxWide, QFormat, Round};
+
+/// Internal format for NR iterations: 32-bit word, 30 fraction bits.
+/// The reciprocal of a mantissa in [0.5, 1) lies in (1, 2], so one
+/// integer bit suffices.
+pub const NR_FMT: QFormat = QFormat::new(1, 30);
+
+/// Default iteration count. The linear seed is accurate to ~2^-4.8;
+/// with quadratic convergence 3 iterations reach ~2^-38, beyond the
+/// S1.30 internal precision — matching a 3-stage pipelined divider.
+pub const NR_ITERS: usize = 3;
+
+/// The linear NR seed `x0 = 48/17 − 32/17·m` for a normalized mantissa
+/// `m ∈ [0.5, 1)` — the standard hardware choice (max seed error 1/17).
+/// One constant multiplier + one adder in the datapath.
+pub fn nr_seed(m: Fx) -> Fx {
+    debug_assert_eq!(m.format(), NR_FMT);
+    let c1 = Fx::from_f64(48.0 / 17.0, QFormat::new(2, 29));
+    let c2 = Fx::from_f64(32.0 / 17.0, QFormat::new(2, 29));
+    FxWide::from_fx(c1)
+        .add(fx_mul_wide(c2, m).mul(FxWide { raw: -1, frac: 0 }))
+        .narrow(NR_FMT, Round::NearestAway)
+}
+
+/// One NR refinement `x ← x·(2 − m·x)` — two dependent multiplies, i.e.
+/// two pipeline stages in the hw model.
+pub fn nr_step(m: Fx, x: Fx) -> Fx {
+    let two = FxWide { raw: 2i128 << NR_FMT.frac_bits, frac: NR_FMT.frac_bits };
+    let bx = fx_mul_wide(m, x);
+    let corr = two
+        .add(bx.mul(FxWide { raw: -1, frac: 0 }))
+        .narrow(QFormat::new(2, 29), Round::NearestAway);
+    fx_mul_wide(x, corr).narrow(NR_FMT, Round::NearestAway)
+}
+
+/// Normalizes a positive denominator into a mantissa `m ∈ [0.5, 1)` in
+/// [`NR_FMT`] and the exponent `e` with `den = m·2^e` — the
+/// leading-zero-count + barrel-shift front end of the divider.
+pub fn normalize_den(den: Fx) -> (Fx, i32) {
+    debug_assert!(den.raw() > 0);
+    let raw = den.raw();
+    let p = 63 - raw.leading_zeros(); // msb index
+    let mut e = p as i32 + 1 - den.format().frac_bits as i32;
+    let mut m_raw = if p + 1 <= NR_FMT.frac_bits {
+        raw << (NR_FMT.frac_bits - (p + 1))
+    } else {
+        let sh = p + 1 - NR_FMT.frac_bits;
+        Round::NearestAway.shift_right(raw as i128, sh) as i64
+    };
+    // Rounding in the narrow can carry all the way up to m == 1.0
+    // (e.g. raw = 2^(p+1) − 1): renormalize into [0.5, 1) by bumping
+    // the exponent, exactly what the hardware's carry-out path does.
+    if m_raw >= 1i64 << NR_FMT.frac_bits {
+        m_raw >>= 1;
+        e += 1;
+    }
+    (Fx::from_raw_unchecked(m_raw, NR_FMT), e)
+}
+
+/// Back end of the divider: `num·(1/m)·2^−e` narrowed once into `out`.
+pub fn finish_div(num: Fx, recip: Fx, e: i32, out: QFormat) -> Fx {
+    let wide = fx_mul_wide(num, recip);
+    let shifted = if e >= 0 {
+        FxWide { raw: wide.raw, frac: wide.frac + e as u32 }
+    } else {
+        FxWide { raw: wide.raw << (-e) as u32, frac: wide.frac }
+    };
+    shifted.narrow(out, Round::NearestAway)
+}
+
+/// Newton-Raphson reciprocal of a *normalized* mantissa `m ∈ [0.5, 1)`
+/// held in [`NR_FMT`]. Returns `1/m ∈ (1, 2]` in [`NR_FMT`].
+pub fn recip_mantissa(m: Fx, iters: usize) -> Fx {
+    debug_assert!(m.to_f64() >= 0.5 && m.to_f64() < 1.0, "m={} not normalized", m.to_f64());
+    let mut x = nr_seed(m);
+    for _ in 0..iters {
+        x = nr_step(m, x);
+    }
+    x
+}
+
+/// Full fixed-point division `num / den` via normalize → NR reciprocal →
+/// multiply → denormalize, rounded once into `out`.
+///
+/// `den` must be strictly positive. This is the divider block instanced
+/// by the velocity-factor (D) and Lambert (E) datapaths.
+pub fn fx_div(num: Fx, den: Fx, out: QFormat, iters: usize) -> Fx {
+    assert!(den.raw() > 0, "fx_div: denominator must be positive, got {den:?}");
+    let (m, e) = normalize_den(den);
+    let r = recip_mantissa(m, iters); // 1/m in (1,2]
+    finish_div(num, r, e, out)
+}
+
+/// f64 math model of the same divider (seed + `iters` NR refinements) —
+/// used by `eval_f64` paths so math and datapath models share the
+/// algorithmic error of a finite-iteration divider.
+pub fn div_f64(num: f64, den: f64, iters: usize) -> f64 {
+    debug_assert!(den > 0.0);
+    let e = den.log2().floor() as i32 + 1;
+    let m = den / (2f64).powi(e); // in [0.5, 1)
+    let mut x = 48.0 / 17.0 - 32.0 / 17.0 * m;
+    for _ in 0..iters {
+        x = x * (2.0 - m * x);
+    }
+    num * x / (2f64).powi(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_check, Prng};
+
+    #[test]
+    fn recip_mantissa_converges() {
+        for &mv in &[0.5, 0.6, 0.75, 0.9, 0.999] {
+            let m = Fx::from_f64(mv, NR_FMT);
+            let r = recip_mantissa(m, NR_ITERS);
+            let err = (r.to_f64() - 1.0 / m.to_f64()).abs();
+            assert!(err < 1e-8, "m={mv} err={err}");
+        }
+    }
+
+    #[test]
+    fn recip_fewer_iters_less_accurate() {
+        let m = Fx::from_f64(0.7, NR_FMT);
+        let e0 = (recip_mantissa(m, 0).to_f64() - 1.0 / 0.7).abs();
+        let e1 = (recip_mantissa(m, 1).to_f64() - 1.0 / 0.7).abs();
+        let e2 = (recip_mantissa(m, 2).to_f64() - 1.0 / 0.7).abs();
+        assert!(e0 > e1 && e1 > e2, "{e0} {e1} {e2}");
+    }
+
+    #[test]
+    fn fx_div_basic() {
+        let f = QFormat::S7_24;
+        let num = Fx::from_f64(1.0, f);
+        let den = Fx::from_f64(3.0, f);
+        let q = fx_div(num, den, QFormat::S_15, NR_ITERS);
+        assert!((q.to_f64() - 1.0 / 3.0).abs() <= QFormat::S_15.ulp(), "{}", q.to_f64());
+    }
+
+    #[test]
+    fn prop_fx_div_accurate_to_out_ulp() {
+        prop_check("fx_div error ≤ 1 out-ulp", 2000, |g: &mut Prng| {
+            let f = QFormat::S7_24;
+            let out = QFormat::new(1, 20);
+            let den_v = g.f64_in(0.01, 100.0);
+            // keep quotient in out's range (-2, 2)
+            let q_target = g.f64_in(-1.9, 1.9);
+            let num_v = q_target * den_v;
+            if num_v.abs() >= f.max_value() {
+                return Ok(());
+            }
+            let num = Fx::from_f64(num_v, f);
+            let den = Fx::from_f64(den_v, f);
+            if den.raw() <= 0 {
+                return Ok(());
+            }
+            let q = fx_div(num, den, out, NR_ITERS);
+            let exact = num.to_f64() / den.to_f64();
+            let err = (q.to_f64() - exact).abs();
+            if err > out.ulp() {
+                return Err(format!("num={num_v} den={den_v} q={} exact={exact} err={err}", q.to_f64()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn div_f64_matches_exact_division() {
+        prop_check("div_f64 ≈ /", 1000, |g: &mut Prng| {
+            let num = g.f64_in(-10.0, 10.0);
+            let den = g.f64_in(0.01, 1000.0);
+            let q = div_f64(num, den, NR_ITERS);
+            let rel = ((q - num / den) / (num / den).abs().max(1e-30)).abs();
+            if rel > 1e-9 {
+                return Err(format!("num={num} den={den} rel={rel}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "denominator must be positive")]
+    fn div_by_nonpositive_panics() {
+        let f = QFormat::S7_24;
+        fx_div(Fx::from_f64(1.0, f), Fx::zero(f), QFormat::S_15, 3);
+    }
+}

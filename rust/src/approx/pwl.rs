@@ -1,0 +1,262 @@
+//! Method A — piecewise-linear interpolation (paper §II.A, §IV.B).
+//!
+//! The function is sampled uniformly every `step`; between samples the
+//! datapath computes `y = y0 + (y1 - y0)·t` where `t` is the low bits of
+//! the input word (Fig 3). No divider is needed because `b - a = step`
+//! is a power of two. Hardware: two LUT fetches (split odd/even banks to
+//! fetch both endpoints in one cycle — §IV.B), one subtractor, one
+//! multiplier, one adder.
+
+use super::lut::UniformLut;
+use super::reference::tanh_ref;
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{fx_mul_wide, Fx, FxWide, QFormat, Round};
+
+/// PWL approximator: uniform step, LUT of endpoint values.
+#[derive(Clone, Debug)]
+pub struct Pwl {
+    lut: UniformLut,
+    step: f64,
+    domain_max: f64,
+}
+
+impl Pwl {
+    /// Builds a PWL approximator with the given step (a reciprocal power
+    /// of two) over `[0, domain_max]`. LUT entries stored in `S.15` plus
+    /// two guard integer bits headroom is unnecessary — tanh ≤ 1, so the
+    /// paper's `S.15` output format is also the storage format.
+    pub fn new(step: f64, domain_max: f64) -> Pwl {
+        // One guard entry so the interval containing domain_max has an
+        // upper endpoint.
+        let lut = UniformLut::sample(tanh_ref, step, domain_max, 1, QFormat::S_15);
+        Pwl { lut, step, domain_max }
+    }
+
+    /// Table I row "A": step 1/64, domain (-6, 6).
+    pub fn table1() -> Pwl {
+        Pwl::new(1.0 / 64.0, 6.0)
+    }
+
+    /// The endpoint LUT (exposed for the hw datapath simulator).
+    pub fn lut(&self) -> &UniformLut {
+        &self.lut
+    }
+
+    /// Compiles the production scalar hot path: a closure over a dense
+    /// raw-word table doing integer-only arithmetic (no `Fx` wrappers,
+    /// no float conversions). Bit-identical to `eval_fx(S3.12 → S.15)`
+    /// — asserted by the tests — and ~4× faster (EXPERIMENTS.md §Perf
+    /// iter 5); this is what the serving backend uses per activation.
+    pub fn compile_raw(&self) -> impl Fn(i64) -> i64 + Send + Sync + 'static {
+        let in_fmt = QFormat::S3_12;
+        let out_max = QFormat::S_15.max_raw();
+        let step_shift = (1.0 / self.step).log2() as u32;
+        let t_bits = in_fmt.frac_bits - step_shift;
+        let domain_raw = (self.domain_max * (1i64 << in_fmt.frac_bits) as f64) as i64;
+        let lut: Vec<i64> = (0..self.lut.len()).map(|i| self.lut.at(i).raw()).collect();
+        let in_max = in_fmt.max_raw();
+        let t_mask = (1i64 << t_bits) - 1;
+        let half = 1i64 << (t_bits - 1);
+        move |raw: i64| {
+            let neg = raw < 0;
+            let mag = raw.abs().min(in_max);
+            if mag >= domain_raw {
+                return if neg { -out_max } else { out_max };
+            }
+            let idx = (mag >> t_bits) as usize;
+            let t = mag & t_mask;
+            let y0 = lut[idx];
+            let y1 = lut[idx + 1];
+            // wide accumulate + round-half-even narrow (same as FxWide)
+            let acc = (y0 << t_bits) + (y1 - y0) * t;
+            let floor = acc >> t_bits;
+            let rem = acc - (floor << t_bits);
+            let up = (rem > half) as i64 | ((rem == half) as i64 & (floor & 1));
+            let y = (floor + up).clamp(0, out_max);
+            if neg {
+                -y
+            } else {
+                y
+            }
+        }
+    }
+
+    /// Step size.
+    pub fn step(&self) -> f64 {
+        self.step
+    }
+}
+
+impl TanhApprox for Pwl {
+    fn id(&self) -> MethodId {
+        MethodId::Pwl
+    }
+
+    fn describe(&self) -> String {
+        format!("PWL(step={})", crate::util::table::step_str(self.step))
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let x = x.abs();
+        let y = if x >= self.domain_max {
+            1.0
+        } else {
+            let k = (x / self.step).floor();
+            let a = k * self.step;
+            let t = (x - a) / self.step;
+            let y0 = tanh_ref(a);
+            let y1 = tanh_ref(a + self.step);
+            y0 + (y1 - y0) * t
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        let (idx, t) = self.lut.split_index(x);
+        let y0 = self.lut.at(idx);
+        let y1 = self.lut.at(idx + 1);
+        // delta = y1 - y0 (exact in storage format: both are S.15).
+        let delta = Fx::from_raw(y1.raw() - y0.raw(), y0.format());
+        // y = y0 + delta * t, multiply kept wide, single rounding at the end.
+        let prod = fx_mul_wide(delta, t);
+        let y = FxWide::from_fx(y0).add(prod).narrow(out, Round::NearestEven);
+        y
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.domain_max
+    }
+
+    fn inventory(&self, io: IoSpec) -> Inventory {
+        // Paper §IV.B: two adders (delta subtract + final add), one
+        // multiplier, LUT split in two banks with alternate entries.
+        let t_bits = io.input.frac_bits - (1.0 / self.step).log2() as u32;
+        Inventory {
+            adders: 2,
+            multipliers: 1,
+            lut_entries: self.lut.len() as u32,
+            lut_bits: self.lut.total_bits(),
+            mult_width: io.output.width().max(t_bits),
+            add_width: io.output.width(),
+            // fetch | subtract | multiply | add  (Fig 3 pipeline)
+            pipeline_stages: 4,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::eval_odd_saturating;
+
+    const OUT: QFormat = QFormat::S_15;
+    const INP: QFormat = QFormat::S3_12;
+
+    #[test]
+    fn exact_at_lut_points() {
+        let pwl = Pwl::table1();
+        for i in [0usize, 1, 64, 128, 300] {
+            let x = Fx::from_f64(i as f64 / 64.0, INP);
+            let y = pwl.eval_fx(x, OUT);
+            let want = tanh_ref(x.to_f64());
+            assert!(
+                (y.to_f64() - want).abs() <= OUT.ulp() / 2.0 + 1e-12,
+                "i={i} y={} want={want}",
+                y.to_f64()
+            );
+        }
+    }
+
+    #[test]
+    fn table1_error_bounds() {
+        // Paper Table I row A: step 1/64 → max err 4.65e-5.
+        let pwl = Pwl::table1();
+        let mut max_err: f64 = 0.0;
+        for raw in -(INP.max_raw())..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            let y = eval_odd_saturating(&pwl, x, OUT);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        assert!(max_err < 6.0e-5, "max_err {max_err} (paper: 4.65e-5)");
+        assert!(max_err > 1.0e-5, "suspiciously small {max_err}");
+    }
+
+    #[test]
+    fn math_model_is_above_datapath_accuracy() {
+        // f64 model has no quantization: its error is the pure PWL
+        // interpolation error h²/8·max|f''| ≈ 2.3e-5 for h=1/64.
+        let pwl = Pwl::table1();
+        let mut max_err: f64 = 0.0;
+        let mut x = -6.0;
+        while x < 6.0 {
+            max_err = max_err.max((pwl.eval_f64(x) - tanh_ref(x)).abs());
+            x += 1e-3;
+        }
+        assert!(max_err < 2.5e-5, "math-model err {max_err}");
+    }
+
+    #[test]
+    fn monotone_on_grid() {
+        // tanh is monotone; PWL interpolation of a monotone function is
+        // monotone, and quantization can only flatten, never invert.
+        let pwl = Pwl::table1();
+        let mut prev = i64::MIN;
+        for raw in 0..INP.max_raw() {
+            let y = eval_odd_saturating(&pwl, Fx::from_raw(raw, INP), OUT);
+            assert!(y.raw() >= prev, "non-monotone at raw {raw}");
+            prev = y.raw();
+        }
+    }
+
+    #[test]
+    fn coarser_step_more_error() {
+        let fine = Pwl::new(1.0 / 128.0, 6.0);
+        let coarse = Pwl::new(1.0 / 16.0, 6.0);
+        let probe = |m: &Pwl| {
+            let mut e: f64 = 0.0;
+            for raw in 0..INP.max_raw() {
+                let x = Fx::from_raw(raw, INP);
+                let y = m.eval_fx(x, OUT);
+                e = e.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+            }
+            e
+        };
+        assert!(probe(&coarse) > probe(&fine) * 4.0);
+    }
+
+    #[test]
+    fn compiled_raw_path_bit_matches_eval_fx() {
+        // The production fast path must agree with the golden model on
+        // every S3.12 word (full exhaustive check).
+        let pwl = Pwl::table1();
+        let fast = pwl.compile_raw();
+        for raw in -(INP.max_raw() + 1)..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(
+                fast(raw),
+                pwl.eval_fx(x, OUT).raw(),
+                "raw {raw}"
+            );
+        }
+    }
+
+    #[test]
+    fn inventory_matches_paper_iv_b() {
+        let inv = Pwl::table1().inventory(IoSpec::table1());
+        assert_eq!(inv.adders, 2);
+        assert_eq!(inv.multipliers, 1);
+        // Paper: 2 banks × 384 entries = 768 endpoints ≈ our 385+guard
+        // sampled points for step 1/64... the paper sizes at step 1/128
+        // in §IV.B text (128×6/2 per bank); our table is entry-exact for
+        // the Table I configuration (6·64 + 1 + guard).
+        assert_eq!(inv.lut_entries, 6 * 64 + 2);
+        assert_eq!(inv.dividers, 0);
+    }
+}

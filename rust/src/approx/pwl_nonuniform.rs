@@ -1,0 +1,264 @@
+//! Non-uniform PWL segmentation (paper §II.A: "The domain may be
+//! divided uniformly or non-uniformly. The uniform division simplifies
+//! the implementation while the non-uniform division reduces storage
+//! requirement. Algorithms are available for selecting most significant
+//! points given error tolerance.").
+//!
+//! This module implements that algorithm: a greedy maximal-segment
+//! sweep that, given an error tolerance ε, emits the fewest breakpoints
+//! such that linear interpolation between stored tanh values stays
+//! within ε everywhere. The hardware realization stores breakpoints +
+//! values and finds the segment with a small binary-search comparator
+//! tree (range-addressable LUT, the Leboeuf et al. [3] structure),
+//! which the inventory prices accordingly.
+
+use super::reference::tanh_ref;
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{fx_mul_wide, Fx, FxWide, QFormat, Round};
+
+/// Non-uniform PWL approximator with greedily-chosen breakpoints.
+#[derive(Clone, Debug)]
+pub struct PwlNonUniform {
+    /// Breakpoints x_i (ascending, starting at 0, ending ≥ domain_max),
+    /// stored in the input format.
+    breaks: Vec<Fx>,
+    /// tanh(x_i) quantized to the storage format.
+    values: Vec<Fx>,
+    /// Per-segment reciprocal slope scale: precomputed
+    /// (y_{i+1} − y_i) / (x_{i+1} − x_i) in a wide format, so the
+    /// datapath needs no divider.
+    slopes: Vec<Fx>,
+    tolerance: f64,
+    domain_max: f64,
+}
+
+/// Wide slope format (slope ≤ 1 for tanh; 24 fraction bits).
+const SLOPE_FMT: QFormat = QFormat::new(1, 24);
+
+impl PwlNonUniform {
+    /// Greedy segmentation: from each breakpoint, extend the segment as
+    /// far as the chord error stays ≤ `tolerance` (checked on the input
+    /// grid), then place the next breakpoint.
+    pub fn build(tolerance: f64, domain_max: f64, input: QFormat, storage: QFormat) -> Self {
+        assert!(tolerance > 0.0);
+        let step = input.ulp();
+        let n_grid = (domain_max / step).ceil() as i64;
+        let mut breaks_raw = vec![0i64];
+        let mut cur = 0i64;
+        while cur < n_grid {
+            // Exponential probe + binary search for the farthest end
+            // whose chord error is within tolerance.
+            let mut lo = cur + 1;
+            let mut hi = (cur + 2).min(n_grid);
+            while hi < n_grid && Self::chord_ok(cur, hi, step, tolerance) {
+                lo = hi;
+                hi = (hi * 2 - cur).min(n_grid);
+            }
+            // binary search in (lo, hi]
+            while lo < hi {
+                let mid = (lo + hi + 1) / 2;
+                if Self::chord_ok(cur, mid, step, tolerance) {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            cur = lo.max(cur + 1);
+            breaks_raw.push(cur);
+        }
+        let breaks: Vec<Fx> = breaks_raw.iter().map(|&r| Fx::from_raw(r, input)).collect();
+        let values: Vec<Fx> = breaks
+            .iter()
+            .map(|b| Fx::from_f64_round(tanh_ref(b.to_f64()), storage, Round::NearestEven))
+            .collect();
+        let slopes: Vec<Fx> = breaks
+            .windows(2)
+            .map(|w| {
+                let dx = w[1].to_f64() - w[0].to_f64();
+                let dy = tanh_ref(w[1].to_f64()) - tanh_ref(w[0].to_f64());
+                Fx::from_f64(dy / dx, SLOPE_FMT)
+            })
+            .collect();
+        PwlNonUniform { breaks, values, slopes, tolerance, domain_max }
+    }
+
+    /// Max deviation of the chord from tanh over [a, b] (grid points).
+    fn chord_ok(a_raw: i64, b_raw: i64, step: f64, tol: f64) -> bool {
+        let (a, b) = (a_raw as f64 * step, b_raw as f64 * step);
+        let (ya, yb) = (tanh_ref(a), tanh_ref(b));
+        let slope = (yb - ya) / (b - a);
+        // tanh is concave on [0, ∞): the max chord error is at the
+        // interior point where tanh'(x) == slope ⇒ x = atanh(sqrt(1 −
+        // slope)); cheaper and exact vs sampling.
+        if slope >= 1.0 {
+            return true;
+        }
+        let x_star = (1.0 - slope).sqrt().atanh();
+        if x_star <= a || x_star >= b {
+            return true;
+        }
+        let err = (tanh_ref(x_star) - (ya + slope * (x_star - a))).abs();
+        err <= tol
+    }
+
+    /// Number of segments (storage cost driver).
+    pub fn segments(&self) -> usize {
+        self.slopes.len()
+    }
+
+    /// The chosen breakpoints.
+    pub fn breakpoints(&self) -> &[Fx] {
+        &self.breaks
+    }
+
+    /// Locates the segment containing `x` (binary search — the
+    /// comparator tree of the range-addressable LUT).
+    fn locate(&self, x: Fx) -> usize {
+        match self.breaks.binary_search_by(|b| b.raw().cmp(&x.raw())) {
+            Ok(i) => i.min(self.slopes.len() - 1),
+            Err(i) => (i - 1).min(self.slopes.len() - 1),
+        }
+    }
+}
+
+impl TanhApprox for PwlNonUniform {
+    fn id(&self) -> MethodId {
+        MethodId::Pwl // variants share the paper's method family A
+    }
+
+    fn describe(&self) -> String {
+        format!("PWL-nonuniform(tol={:.1e}, {} segs)", self.tolerance, self.segments())
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let x = x.abs();
+        let y = if x >= self.domain_max {
+            1.0
+        } else {
+            let i = self.locate(Fx::from_f64(x, self.breaks[0].format()));
+            let a = self.breaks[i].to_f64();
+            tanh_ref(a) + (tanh_ref(self.breaks[i + 1].to_f64()) - tanh_ref(a))
+                / (self.breaks[i + 1].to_f64() - a)
+                * (x - a)
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        let i = self.locate(x);
+        // y = y_i + slope_i · (x − x_i): one subtract, one multiply,
+        // one add — same arithmetic as uniform PWL, but the segment
+        // index comes from the comparator tree instead of a bit-slice.
+        let dx = Fx::from_raw(x.raw() - self.breaks[i].raw(), x.format());
+        fx_mul_wide(self.slopes[i], dx)
+            .add(FxWide::from_fx(self.values[i]))
+            .narrow(out, Round::NearestEven)
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.domain_max
+    }
+
+    fn inventory(&self, io: IoSpec) -> Inventory {
+        let n = self.segments() as u32;
+        // Range-addressable LUT: n breakpoints (input width), n values
+        // (output width), n slopes (SLOPE_FMT width) + a log2(n)-deep
+        // comparator tree (priced as adders).
+        let cmp_depth = 32 - n.leading_zeros();
+        Inventory {
+            adders: 2 + cmp_depth,
+            multipliers: 1,
+            lut_entries: 3 * n,
+            lut_bits: n * (io.input.width() + io.output.width() + SLOPE_FMT.width()),
+            mult_width: SLOPE_FMT.width(),
+            add_width: io.output.width(),
+            pipeline_stages: 2 + cmp_depth, // locate | subtract | mac
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::pwl::Pwl;
+    use crate::error::{measure, InputGrid};
+
+    const INP: QFormat = QFormat::S3_12;
+    const OUT: QFormat = QFormat::S_15;
+
+    fn build_t1() -> PwlNonUniform {
+        PwlNonUniform::build(2.0e-5, 6.0, INP, QFormat::new(0, 17))
+    }
+
+    #[test]
+    fn respects_tolerance() {
+        let m = build_t1();
+        let e = measure(&m, InputGrid::table1(), OUT);
+        // algorithmic tolerance + output quantization half-ulp
+        assert!(
+            e.max_abs <= 2.0e-5 + OUT.ulp(),
+            "max err {} vs tolerance 2e-5",
+            e.max_abs
+        );
+    }
+
+    #[test]
+    fn fewer_segments_than_uniform_at_same_accuracy() {
+        // The paper's §II.A claim: non-uniform division reduces storage.
+        let nonuni = build_t1();
+        let uniform = Pwl::new(1.0 / 64.0, 6.0);
+        let e_n = measure(&nonuni, InputGrid::table1(), OUT);
+        let e_u = measure(&uniform, InputGrid::table1(), OUT);
+        assert!(e_n.max_abs <= e_u.max_abs * 1.2, "{} vs {}", e_n.max_abs, e_u.max_abs);
+        // uniform stores 385 endpoint entries; non-uniform should need
+        // far fewer segments for the same tolerance.
+        assert!(
+            nonuni.segments() < 180,
+            "{} segments — no storage win over 385 uniform entries",
+            nonuni.segments()
+        );
+    }
+
+    #[test]
+    fn segments_shrink_with_looser_tolerance() {
+        let tight = PwlNonUniform::build(1.0e-5, 6.0, INP, QFormat::new(0, 17));
+        let loose = PwlNonUniform::build(1.0e-3, 6.0, INP, QFormat::new(0, 17));
+        assert!(loose.segments() < tight.segments() / 3);
+    }
+
+    #[test]
+    fn breakpoints_dense_near_zero_sparse_in_tail() {
+        // tanh curves hardest near 0: the greedy algorithm must place
+        // most breakpoints there (the motivation for non-uniform LUTs).
+        let m = build_t1();
+        let below_1 = m.breakpoints().iter().filter(|b| b.to_f64() < 1.0).count();
+        let above_3 = m.breakpoints().iter().filter(|b| b.to_f64() > 3.0).count();
+        assert!(below_1 > 4 * above_3, "below1={below_1} above3={above_3}");
+    }
+
+    #[test]
+    fn odd_and_saturating_like_all_methods() {
+        let m = build_t1();
+        let x = Fx::from_f64(1.234, INP);
+        assert_eq!(m.eval_fx(x, OUT).raw(), -m.eval_fx(x.neg(), OUT).raw());
+        assert_eq!(m.eval_fx(Fx::from_f64(7.0, INP), OUT).raw(), OUT.max_raw());
+    }
+
+    #[test]
+    fn locate_finds_correct_segment() {
+        let m = build_t1();
+        for v in [0.0, 0.013, 0.5, 2.7, 5.9] {
+            let x = Fx::from_f64(v, INP);
+            let i = m.locate(x);
+            assert!(m.breaks[i].raw() <= x.raw(), "v={v}");
+            assert!(m.breaks[i + 1].raw() > x.raw() || i == m.slopes.len() - 1, "v={v}");
+        }
+    }
+}

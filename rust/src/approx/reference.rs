@@ -1,0 +1,115 @@
+//! The f64 tanh reference the paper measures against (numpy's tanh; rust
+//! libm agrees to < 1 ulp of f64 — cross-checked by the pytest suite).
+
+use crate::fixed::{Fx, QFormat, Round};
+
+/// Reference tanh in f64.
+#[inline]
+pub fn tanh_ref(x: f64) -> f64 {
+    x.tanh()
+}
+
+/// The *ideal quantized* tanh: tanh computed in f64 then rounded to the
+/// output format. No approximation can beat this; its max error is
+/// ulp/2 and it is the yardstick for the paper's "error ≤ 1 ulp" target
+/// (Table III).
+#[inline]
+pub fn tanh_ideal_fx(x: Fx, out: QFormat) -> Fx {
+    Fx::from_f64_round(tanh_ref(x.to_f64()), out, Round::NearestEven)
+}
+
+/// Derivatives of tanh expressed through the function value itself —
+/// paper eqs. (5)-(7). Given `t = tanh(x)` returns (f', f'', f''').
+///
+/// f'   = 1 - t²
+/// f''  = -2 t (1 - t²)          = 2(t³ - t)
+/// f''' = -2 (1 - 4t² + 3t⁴)
+#[inline]
+pub fn tanh_derivatives(t: f64) -> (f64, f64, f64) {
+    let t2 = t * t;
+    let d1 = 1.0 - t2;
+    let d2 = -2.0 * t * d1;
+    let d3 = -2.0 * (1.0 - 4.0 * t2 + 3.0 * t2 * t2);
+    (d1, d2, d3)
+}
+
+/// Velocity factor (paper eq. 11): `f_a = (1 + tanh a) / (1 - tanh a)`.
+/// Algebraically `f_a = e^{2a}`, which is how we generate LUT entries.
+#[inline]
+pub fn velocity_factor(a: f64) -> f64 {
+    (2.0 * a).exp()
+}
+
+/// Inverse of the velocity factor map (paper eq. 12):
+/// `tanh a = (f_a - 1) / (f_a + 1)`.
+#[inline]
+pub fn tanh_from_velocity(f: f64) -> f64 {
+    (f - 1.0) / (f + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_check, Prng};
+
+    #[test]
+    fn derivative_identities_match_numeric_differentiation() {
+        for &x in &[0.0, 0.25, 0.5, 1.0, 2.0, 3.5] {
+            let t = tanh_ref(x);
+            let (d1, d2, d3) = tanh_derivatives(t);
+            let h = 1e-5;
+            let num_d1 = (tanh_ref(x + h) - tanh_ref(x - h)) / (2.0 * h);
+            let num_d2 = (tanh_ref(x + h) - 2.0 * t + tanh_ref(x - h)) / (h * h);
+            // f''' needs a larger step: the O(h³) denominator amplifies
+            // f64 roundoff below h ≈ 1e-3.
+            let h3 = 1e-3;
+            let num_d3 = (tanh_ref(x + 2.0 * h3) - 2.0 * tanh_ref(x + h3)
+                + 2.0 * tanh_ref(x - h3)
+                - tanh_ref(x - 2.0 * h3))
+                / (2.0 * h3 * h3 * h3);
+            assert!((d1 - num_d1).abs() < 1e-8, "f' at {x}: {d1} vs {num_d1}");
+            assert!((d2 - num_d2).abs() < 1e-5, "f'' at {x}: {d2} vs {num_d2}");
+            assert!((d3 - num_d3).abs() < 1e-4, "f''' at {x}: {d3} vs {num_d3}");
+        }
+    }
+
+    #[test]
+    fn velocity_factor_roundtrip() {
+        prop_check("tanh_from_velocity(velocity_factor(a)) == tanh(a)", 1000, |g: &mut Prng| {
+            let a = g.f64_in(-5.0, 5.0);
+            let t = tanh_from_velocity(velocity_factor(a));
+            if (t - tanh_ref(a)).abs() > 1e-12 {
+                return Err(format!("a={a}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn velocity_factor_is_multiplicative() {
+        // Paper eq. (13): f_{a+b} = f_a * f_b.
+        prop_check("f_{a+b} = f_a f_b", 1000, |g: &mut Prng| {
+            let a = g.f64_in(-2.0, 2.0);
+            let b = g.f64_in(-2.0, 2.0);
+            let lhs = velocity_factor(a + b);
+            let rhs = velocity_factor(a) * velocity_factor(b);
+            if ((lhs - rhs) / lhs).abs() > 1e-12 {
+                return Err(format!("a={a} b={b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ideal_quantizer_error_is_half_ulp() {
+        let out = QFormat::S_15;
+        let inp = QFormat::S3_12;
+        let mut max_err: f64 = 0.0;
+        for raw in 0..(1 << 14) {
+            let x = Fx::from_raw(raw, inp);
+            let y = tanh_ideal_fx(x, out);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        assert!(max_err <= out.ulp() / 2.0 + 1e-15, "max_err {max_err}");
+    }
+}

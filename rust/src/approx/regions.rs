@@ -1,0 +1,205 @@
+//! Three-region tanh implementation — the Zamanlooy & Mirhassani [5]
+//! baseline the paper's related-work section describes: "designed the
+//! hardware by dividing it in three regions and optimizing the design
+//! specific to each of them".
+//!
+//! Regions for positive x:
+//!
+//! 1. **pass region** `x < a`: tanh(x) ≈ x (error < x³/3 — free: the
+//!    output is the wired-through input);
+//! 2. **processing region** `a ≤ x < b`: any inner approximation (we
+//!    parameterize over a [`TanhApprox`], default PWL);
+//! 3. **saturation region** `x ≥ b`: constant 1 − 2⁻ᵇ.
+//!
+//! The region bounds are chosen from the error budget: the pass bound
+//! from x − tanh(x) ≤ ε (a ≈ (3ε)^{1/3}) and the saturation bound from
+//! 1 − tanh(b) ≤ ε. The win: the inner LUT only covers [a, b), so the
+//! baseline quantifies how much of the paper's LUT budget the regions
+//! trick saves.
+
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{Fx, QFormat};
+
+/// Region-split wrapper around an inner approximation.
+pub struct ThreeRegion<M: TanhApprox> {
+    inner: M,
+    /// Pass-region bound a (in f64; compared on raw words).
+    pass_bound: f64,
+    /// Saturation bound b.
+    sat_bound: f64,
+}
+
+/// Solves x − tanh(x) = ε for the pass bound (cube-root seed + a couple
+/// of Newton steps; the function is monotone).
+pub fn pass_bound_for(eps: f64) -> f64 {
+    let mut x = (3.0 * eps).cbrt();
+    for _ in 0..20 {
+        let f = x - x.tanh() - eps;
+        let df = x.tanh().powi(2); // 1 − (1 − tanh²) = tanh²
+        if df.abs() < 1e-30 {
+            break;
+        }
+        x -= f / df;
+        if x < 0.0 {
+            x = 1e-6;
+        }
+    }
+    x
+}
+
+/// Solves 1 − tanh(b) = ε: b = atanh(1 − ε).
+pub fn sat_bound_for(eps: f64) -> f64 {
+    (1.0f64 - eps).atanh()
+}
+
+impl<M: TanhApprox> ThreeRegion<M> {
+    /// Builds with bounds derived from the error budget ε.
+    pub fn new(inner: M, eps: f64) -> Self {
+        ThreeRegion { inner, pass_bound: pass_bound_for(eps), sat_bound: sat_bound_for(eps) }
+    }
+
+    /// The pass/processing boundary.
+    pub fn pass_bound(&self) -> f64 {
+        self.pass_bound
+    }
+
+    /// The processing/saturation boundary.
+    pub fn sat_bound(&self) -> f64 {
+        self.sat_bound
+    }
+
+    /// Fraction of the ±domain covered by the processing region — the
+    /// share of the domain that still needs the inner LUT.
+    pub fn processing_fraction(&self, domain: f64) -> f64 {
+        ((self.sat_bound.min(domain) - self.pass_bound) / domain).max(0.0)
+    }
+}
+
+impl<M: TanhApprox> TanhApprox for ThreeRegion<M> {
+    fn id(&self) -> MethodId {
+        self.inner.id()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "ThreeRegion(pass<{:.3}, sat≥{:.3}, inner={})",
+            self.pass_bound,
+            self.sat_bound,
+            self.inner.describe()
+        )
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let m = x.abs();
+        let y = if m < self.pass_bound {
+            m
+        } else if m >= self.sat_bound {
+            1.0
+        } else {
+            self.inner.eval_f64(m)
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        let v = x.to_f64();
+        if v < self.pass_bound {
+            // pass region: wire-through (format conversion only)
+            x.convert(out, crate::fixed::Round::NearestEven)
+        } else if v >= self.sat_bound {
+            Fx::max(out)
+        } else {
+            self.inner.eval_positive_fx(x, out)
+        }
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.inner.domain_max()
+    }
+
+    fn inventory(&self, io: IoSpec) -> Inventory {
+        // Inner inventory shrunk by the processing fraction (its LUT
+        // only spans [a, b)) + two comparators (adders) for the region
+        // select + a 4:1 output mux.
+        let inner = self.inner.inventory(io);
+        let frac = self.processing_fraction(self.inner.domain_max());
+        Inventory {
+            lut_entries: (inner.lut_entries as f64 * frac).ceil() as u32,
+            lut_bits: (inner.lut_bits as f64 * frac).ceil() as u32,
+            adders: inner.adders + 2,
+            mux4: inner.mux4 + 1,
+            ..inner
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::pwl::Pwl;
+    use crate::error::{measure, InputGrid};
+
+    const OUT: QFormat = QFormat::S_15;
+
+    #[test]
+    fn bounds_match_closed_forms() {
+        let eps = 3.05e-5; // 1 ulp of S.15
+        let a = pass_bound_for(eps);
+        // check the defining equation
+        assert!((a - a.tanh() - eps).abs() < 1e-9, "a={a}");
+        let b = sat_bound_for(eps);
+        assert!((1.0 - b.tanh() - eps).abs() < 1e-9, "b={b}");
+        // the paper's §III.A numbers: atanh(1 − 2^-15) ≈ 5.55
+        assert!((sat_bound_for(2f64.powi(-15)) - 5.55).abs() < 0.01);
+    }
+
+    #[test]
+    fn error_stays_within_budget() {
+        let eps = 3.05e-5;
+        let m = ThreeRegion::new(Pwl::table1(), eps);
+        let e = measure(&m, InputGrid::table1(), OUT);
+        // inner PWL band + region-boundary budget + quantization
+        assert!(e.max_abs < 6.0e-5, "max err {}", e.max_abs);
+    }
+
+    #[test]
+    fn pass_region_is_exact_wire_through() {
+        let m = ThreeRegion::new(Pwl::table1(), 3.05e-5);
+        let x = Fx::from_f64(0.01, QFormat::S3_12);
+        let y = m.eval_fx(x, OUT);
+        // y == x converted (identity), not a LUT interpolation
+        assert_eq!(y.raw(), x.convert(OUT, crate::fixed::Round::NearestEven).raw());
+    }
+
+    #[test]
+    fn saves_lut_versus_plain_inner() {
+        let io = IoSpec::table1();
+        let plain = Pwl::table1().inventory(io);
+        let split = ThreeRegion::new(Pwl::table1(), 3.05e-5).inventory(io);
+        assert!(
+            split.lut_bits < plain.lut_bits,
+            "region split must shrink the LUT: {} vs {}",
+            split.lut_bits,
+            plain.lut_bits
+        );
+        // and the processing window is a strict sub-interval
+        let m = ThreeRegion::new(Pwl::table1(), 3.05e-5);
+        assert!(m.pass_bound() > 0.01);
+        assert!(m.sat_bound() < 6.0);
+    }
+
+    #[test]
+    fn odd_symmetry_via_wrapper() {
+        let m = ThreeRegion::new(Pwl::table1(), 3.05e-5);
+        for v in [0.005, 0.5, 5.9] {
+            let x = Fx::from_f64(v, QFormat::S3_12);
+            assert_eq!(m.eval_fx(x, OUT).raw(), -m.eval_fx(x.neg(), OUT).raw(), "v={v}");
+        }
+    }
+}

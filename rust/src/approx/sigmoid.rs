@@ -1,0 +1,142 @@
+//! Sigmoid via tanh — the paper's conclusion notes the analysis "can be
+//! easily adapted to other applications"; LSTM gates need sigmoid, and
+//! hardware implementations derive it from the tanh unit through the
+//! identity
+//!
+//! ```text
+//! σ(x) = (1 + tanh(x/2)) / 2
+//! ```
+//!
+//! which costs one right-shift on the input, one increment and one
+//! right-shift on the output — no extra multipliers. This wrapper turns
+//! any [`TanhApprox`] into a sigmoid evaluator and is what the L2 LSTM
+//! model's gate nonlinearities lower to.
+
+use super::{IoSpec, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{Fx, QFormat, Round};
+
+/// Sigmoid evaluator wrapping a tanh approximation.
+pub struct SigmoidFromTanh<M: TanhApprox> {
+    inner: M,
+}
+
+impl<M: TanhApprox> SigmoidFromTanh<M> {
+    /// Wraps a tanh approximator.
+    pub fn new(inner: M) -> Self {
+        SigmoidFromTanh { inner }
+    }
+
+    /// The wrapped tanh method.
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// f64 math model.
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        0.5 * (1.0 + self.inner.eval_f64(0.5 * x))
+    }
+
+    /// Bit-exact datapath model. The output format must leave one
+    /// integer bit of headroom during the internal add; the final result
+    /// lies in (0, 1) so any fraction-only output format works.
+    pub fn eval_fx(&self, x: Fx, out: QFormat) -> Fx {
+        // x/2: arithmetic shift right by one — in Fx terms, reinterpret
+        // with one more fraction bit (exact, no rounding).
+        let half_fmt = QFormat::new(
+            x.format().int_bits.saturating_sub(1),
+            x.format().frac_bits + 1,
+        );
+        let half_x = Fx::from_raw(x.raw(), half_fmt);
+        // tanh(x/2) in an internal format with an integer bit for the +1.
+        let t_fmt = QFormat::new(1, out.frac_bits + 1);
+        let t = self.inner.eval_fx(half_x, t_fmt);
+        // (1 + t) / 2: increment then shift right once.
+        let raw = (1i64 << t_fmt.frac_bits) + t.raw();
+        let shifted = Round::NearestEven.shift_right(raw as i128, 1 + t_fmt.frac_bits - out.frac_bits) as i64;
+        Fx::from_raw(shifted, out)
+    }
+
+    /// Hardware inventory: the tanh core plus the shift/increment glue
+    /// (one adder; shifts are wiring).
+    pub fn inventory(&self, io: IoSpec) -> Inventory {
+        self.inner.inventory(io).plus(Inventory { adders: 1, ..Default::default() })
+    }
+
+    /// Description string.
+    pub fn describe(&self) -> String {
+        format!("Sigmoid[{}]", self.inner.describe())
+    }
+}
+
+/// Reference sigmoid in f64.
+#[inline]
+pub fn sigmoid_ref(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::pwl::Pwl;
+    use crate::approx::taylor::Taylor;
+
+    const INP: QFormat = QFormat::S3_12;
+    const OUT: QFormat = QFormat::S_15;
+
+    #[test]
+    fn identity_holds_in_f64() {
+        for &x in &[-4.0, -1.0, 0.0, 0.5, 3.0] {
+            let direct = sigmoid_ref(x);
+            let via = 0.5 * (1.0 + (0.5 * x).tanh());
+            assert!((direct - via).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn sigmoid_from_pwl_tracks_reference() {
+        let s = SigmoidFromTanh::new(Pwl::table1());
+        let mut max_err: f64 = 0.0;
+        for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(5) {
+            let x = Fx::from_raw(raw, INP);
+            let y = s.eval_fx(x, OUT);
+            max_err = max_err.max((y.to_f64() - sigmoid_ref(x.to_f64())).abs());
+        }
+        // Half the tanh error (the ½ scaling) plus rounding.
+        assert!(max_err < 4.0e-5, "max_err {max_err}");
+    }
+
+    #[test]
+    fn sigmoid_range_is_0_1() {
+        let s = SigmoidFromTanh::new(Taylor::table1_quadratic());
+        for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(101) {
+            let y = s.eval_fx(Fx::from_raw(raw, INP), OUT);
+            assert!(y.raw() >= 0, "sigmoid must be non-negative");
+        }
+        // Tails: σ(7.99) = 0.99966… (x/2 = 3.995 is still inside the
+        // tanh domain, so this is a computed value, not a clamp) and
+        // σ(−7.99) = 3.4e-4.
+        let hi = s.eval_fx(Fx::from_f64(7.99, INP), OUT).to_f64();
+        assert!((hi - sigmoid_ref(7.99)).abs() < 1e-4, "hi={hi}");
+        let lo = s.eval_fx(Fx::from_f64(-7.99, INP), OUT).to_f64();
+        assert!((lo - sigmoid_ref(-7.99)).abs() < 1e-4, "lo={lo}");
+    }
+
+    #[test]
+    fn midpoint_is_half() {
+        let s = SigmoidFromTanh::new(Pwl::table1());
+        let y = s.eval_fx(Fx::zero(INP), OUT);
+        assert!((y.to_f64() - 0.5).abs() <= OUT.ulp());
+    }
+
+    #[test]
+    fn complementary_symmetry() {
+        // σ(−x) = 1 − σ(x) up to rounding.
+        let s = SigmoidFromTanh::new(Pwl::table1());
+        for v in [0.3, 1.1, 2.4] {
+            let yp = s.eval_fx(Fx::from_f64(v, INP), OUT).to_f64();
+            let yn = s.eval_fx(Fx::from_f64(-v, INP), OUT).to_f64();
+            assert!((yp + yn - 1.0).abs() <= 3.0 * OUT.ulp(), "v={v}");
+        }
+    }
+}

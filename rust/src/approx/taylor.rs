@@ -1,0 +1,396 @@
+//! Methods B1/B2 — Taylor series expansion (paper §II.B, §IV.C).
+//!
+//! tanh is expanded around the nearest stored anchor point; the paper's
+//! key observation is eqs. (5)-(7): every derivative of tanh is a
+//! polynomial in tanh itself, so the LUT need only store the function
+//! value `T = tanh(x_c)` and the datapath derives the Taylor
+//! coefficients at runtime:
+//!
+//! ```text
+//! f'       = 1 − T²
+//! f''/2!   = −T·(1 − T²)
+//! f'''/3!  = −(1 − T²)(1 − 3T²)/3
+//! ```
+//!
+//! Anchors are placed at interval *centres* `(i + ½)·h` so the expansion
+//! distance is at most `h/2` (this is what makes B1 at step 1/16 match
+//! PWL at step 1/64 — paper Table I). Evaluation uses Horner form
+//! (paper eq. 16), one adder + one multiplier per degree.
+
+use super::lut::UniformLut;
+use super::reference::{tanh_derivatives, tanh_ref};
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{fx_mul, fx_mul_wide, fx_sub, Fx, FxWide, QFormat, Round};
+
+/// Where the expansion anchor sits within each step interval — an
+/// ablation axis: centred anchors halve the worst-case expansion
+/// distance (|dx| ≤ h/2 instead of h), which is why this repo's B1/B2
+/// errors land below the paper's Table I values. `Left` reproduces the
+/// paper's numbers (see the ablations bench).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnchorMode {
+    /// Anchor at the interval centre (i + ½)·h — this repo's default.
+    Centered,
+    /// Anchor at the interval start i·h — the straightforward reading
+    /// of the paper's "msbs address the LUT" description.
+    Left,
+}
+
+/// Whether Taylor coefficients are derived at runtime from the stored
+/// tanh value (paper's preferred trick) or pre-stored per anchor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoeffMode {
+    /// Compute 1−T², −T(1−T²), … in the datapath (small LUT, more logic).
+    Runtime,
+    /// Store each coefficient alongside T (bigger LUT, runs faster —
+    /// paper §IV.H: "the circuit runs faster if LUTs are used … however,
+    /// the area is larger").
+    Stored,
+}
+
+/// Internal computation format for the Horner chain: 2 integer bits
+/// (coefficients are in (−2, 2)) and 26 fraction bits. Public so the hw
+/// datapath simulator instantiates registers of the same width.
+pub const INT_FMT: QFormat = QFormat::new(2, 26);
+
+/// Taylor-series approximator.
+#[derive(Clone, Debug)]
+pub struct Taylor {
+    /// Anchor tanh values at interval centres, high-precision storage.
+    lut: UniformLut,
+    step: f64,
+    /// Number of series terms: 3 = quadratic (B1), 4 = cubic (B2).
+    terms: usize,
+    domain_max: f64,
+    coeff_mode: CoeffMode,
+    anchor_mode: AnchorMode,
+}
+
+impl Taylor {
+    /// Builds a Taylor approximator with anchors every `step` (reciprocal
+    /// power of two) and `terms` series terms (3 or 4 in the paper).
+    pub fn new(step: f64, terms: usize, domain_max: f64) -> Taylor {
+        Taylor::with_anchor(step, terms, domain_max, AnchorMode::Centered)
+    }
+
+    /// Builds with an explicit anchor placement (ablation axis).
+    pub fn with_anchor(
+        step: f64,
+        terms: usize,
+        domain_max: f64,
+        anchor_mode: AnchorMode,
+    ) -> Taylor {
+        assert!((2..=4).contains(&terms), "terms must be 2..=4, got {terms}");
+        // The LUT is indexed by the interval number but stores the value
+        // at the anchor point (centre or left edge).
+        // UniformLut samples f(i*step); shift the function for centres.
+        let offset = match anchor_mode {
+            AnchorMode::Centered => step / 2.0,
+            AnchorMode::Left => 0.0,
+        };
+        let lut = UniformLut::sample(
+            move |x| tanh_ref(x + offset),
+            step,
+            domain_max,
+            1,
+            // Store anchors with 2 extra fraction bits over S.15: the
+            // anchor is the zeroth Horner coefficient and its
+            // quantization error passes straight through to the output.
+            QFormat::new(0, 17),
+        );
+        Taylor { lut, step, terms, domain_max, coeff_mode: CoeffMode::Runtime, anchor_mode }
+    }
+
+    /// Table I row "B1": quadratic, step 1/16.
+    pub fn table1_quadratic() -> Taylor {
+        Taylor::new(1.0 / 16.0, 3, 6.0)
+    }
+
+    /// Table I row "B2": cubic, step 1/8.
+    pub fn table1_cubic() -> Taylor {
+        Taylor::new(1.0 / 8.0, 4, 6.0)
+    }
+
+    /// Selects stored-vs-runtime coefficient mode (affects inventory
+    /// only; numerics are identical by construction in this model).
+    pub fn with_coeff_mode(mut self, mode: CoeffMode) -> Taylor {
+        self.coeff_mode = mode;
+        self
+    }
+
+    /// Series term count (3 = quadratic, 4 = cubic).
+    pub fn terms(&self) -> usize {
+        self.terms
+    }
+
+    /// Anchor spacing.
+    pub fn step(&self) -> f64 {
+        self.step
+    }
+
+    /// Anchor LUT (for the hw simulator).
+    pub fn lut(&self) -> &UniformLut {
+        &self.lut
+    }
+
+    /// Taylor coefficients (c0..c3) at anchor value `t` — f64 model.
+    fn coeffs_f64(&self, t: f64) -> [f64; 4] {
+        let (d1, d2, d3) = tanh_derivatives(t);
+        [t, d1, d2 / 2.0, d3 / 6.0]
+    }
+
+    /// Splits a positive input into (LUT index, signed expansion distance
+    /// dx = x − centre) — the address/offset decode of Fig 3. Shared by
+    /// `eval_positive_fx` and the hw pipeline so they stay bit-identical.
+    pub fn split_fx(&self, x: Fx) -> (usize, Fx) {
+        let (idx, t_frac) = self.lut.split_index(x);
+        let t_bits = t_frac.format().frac_bits;
+        let dx_raw = match self.anchor_mode {
+            AnchorMode::Centered => t_frac.raw() - (1i64 << (t_bits - 1)),
+            AnchorMode::Left => t_frac.raw(),
+        };
+        let step_shift = (1.0 / self.step).log2() as u32;
+        (idx, Fx::from_raw(dx_raw, QFormat::new(0, t_bits + step_shift)))
+    }
+
+    /// Runtime coefficient derivation from the stored anchor value
+    /// (paper eqs. 5-7), in [`INT_FMT`]: returns `(T, c1, c2, c3)` with
+    /// `c3 = 0` for the quadratic configuration.
+    pub fn coeffs_fx(&self, anchor: Fx) -> (Fx, Fx, Fx, Fx) {
+        let t = anchor.convert(INT_FMT, Round::NearestEven);
+        let one = Fx::from_raw_unchecked(1i64 << INT_FMT.frac_bits, INT_FMT);
+        let t2 = fx_mul(t, t, INT_FMT, Round::NearestAway); // squarer
+        let d1 = fx_sub(one, t2, INT_FMT, Round::NearestAway); // 1 − T²
+        let c2 = fx_mul(t, d1, INT_FMT, Round::NearestAway).neg(); // −T(1−T²)
+        let c3 = if self.terms == 4 {
+            // f'''/3! = −(1−T²)(1−3T²)/3.
+            let three_t2 = fx_mul(Fx::from_f64(3.0, INT_FMT), t2, INT_FMT, Round::NearestAway);
+            let g = fx_sub(one, three_t2, INT_FMT, Round::NearestAway); // 1 − 3T²
+            let c3 = fx_mul(d1, g, INT_FMT, Round::NearestAway);
+            let third = Fx::from_f64(1.0 / 3.0, INT_FMT);
+            fx_mul(c3, third, INT_FMT, Round::NearestAway).neg()
+        } else {
+            Fx::zero(INT_FMT)
+        };
+        (t, d1, c2, c3)
+    }
+
+    /// One Horner stage `acc ← c + dx·acc` in [`INT_FMT`] (wide multiply,
+    /// single rounding — what a pipeline register boundary does).
+    pub fn horner_step(dx: Fx, acc: Fx, c: Fx) -> Fx {
+        fx_mul_wide(dx, acc).add(FxWide::from_fx(c)).narrow(INT_FMT, Round::NearestAway)
+    }
+
+    /// Final Horner stage `y = T + dx·acc`, rounded once into `out`.
+    pub fn horner_final(dx: Fx, acc: Fx, t: Fx, out: QFormat) -> Fx {
+        fx_mul_wide(dx, acc).add(FxWide::from_fx(t)).narrow(out, Round::NearestEven)
+    }
+}
+
+impl TanhApprox for Taylor {
+    fn id(&self) -> MethodId {
+        if self.terms == 3 {
+            MethodId::TaylorQuadratic
+        } else {
+            MethodId::TaylorCubic
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Taylor(step={}, terms={})",
+            crate::util::table::step_str(self.step),
+            self.terms
+        )
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let x = x.abs();
+        let y = if x >= self.domain_max {
+            1.0
+        } else {
+            let k = (x / self.step).floor();
+            let frac = match self.anchor_mode {
+                AnchorMode::Centered => 0.5,
+                AnchorMode::Left => 0.0,
+            };
+            let xc = (k + frac) * self.step;
+            let dx = x - xc;
+            let c = self.coeffs_f64(tanh_ref(xc));
+            let mut acc = c[self.terms - 1];
+            for i in (0..self.terms - 1).rev() {
+                acc = c[i] + dx * acc;
+            }
+            acc
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        // Address/offset decode (Fig 3), anchor fetch, runtime
+        // coefficient derivation (eqs. 5-7), then the Horner chain —
+        // all through the helpers shared with the hw pipeline.
+        let (idx, dx) = self.split_fx(x);
+        let (t, d1, c2, c3) = self.coeffs_fx(self.lut.at(idx));
+        let mut acc = match self.terms {
+            4 => c3,
+            3 => c2,
+            _ => Fx::zero(INT_FMT), // linear: y = T + dx·d1
+        };
+        if self.terms == 4 {
+            acc = Self::horner_step(dx, acc, c2);
+        }
+        acc = Self::horner_step(dx, acc, d1);
+        Self::horner_final(dx, acc, t, out)
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.domain_max
+    }
+
+    fn inventory(&self, io: IoSpec) -> Inventory {
+        let degree = (self.terms - 1) as u32;
+        // Horner: one adder + one multiplier per degree (paper eq. 16).
+        let horner = Inventory {
+            adders: degree,
+            multipliers: degree,
+            mult_width: io.output.width().max(INT_FMT.width()),
+            add_width: INT_FMT.width(),
+            pipeline_stages: 1 + 2 * degree, // fetch + (mul, add) per degree
+            ..Default::default()
+        };
+        match self.coeff_mode {
+            CoeffMode::Runtime => {
+                // Coefficient derivation: T² (squarer), 1−T² (adder),
+                // −T·d1 (multiplier); cubic adds 3T² (const-mult folded
+                // into the squarer tree), 1−3T² (adder), d1·g (multiplier)
+                // and the ⅓ constant multiplier.
+                let coeff = if self.terms == 3 {
+                    Inventory { adders: 1, multipliers: 1, squarers: 1, ..Default::default() }
+                } else {
+                    Inventory { adders: 2, multipliers: 3, squarers: 1, ..Default::default() }
+                };
+                horner.plus(coeff).plus(Inventory {
+                    lut_entries: self.lut.len() as u32,
+                    lut_bits: self.lut.total_bits(),
+                    ..Default::default()
+                })
+            }
+            CoeffMode::Stored => {
+                // Each anchor stores T plus (terms−1) coefficients.
+                let words = self.terms as u32;
+                horner.plus(Inventory {
+                    lut_entries: self.lut.len() as u32 * words,
+                    lut_bits: self.lut.total_bits() * words,
+                    ..Default::default()
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::eval_odd_saturating;
+
+    const OUT: QFormat = QFormat::S_15;
+    const INP: QFormat = QFormat::S3_12;
+
+    fn sweep_max_err(m: &Taylor) -> f64 {
+        let mut max_err: f64 = 0.0;
+        for raw in -(INP.max_raw())..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            let y = eval_odd_saturating(m, x, OUT);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        max_err
+    }
+
+    #[test]
+    fn b1_table1_error_bounds() {
+        // Paper Table I row B1: step 1/16, quadratic → max err 3.65e-5.
+        let e = sweep_max_err(&Taylor::table1_quadratic());
+        assert!(e < 5.5e-5, "B1 max_err {e} (paper 3.65e-5)");
+        assert!(e > 1.0e-5);
+    }
+
+    #[test]
+    fn b2_table1_error_bounds() {
+        // Paper Table I row B2: step 1/8, cubic → max err 3.23e-5.
+        let e = sweep_max_err(&Taylor::table1_cubic());
+        assert!(e < 5.5e-5, "B2 max_err {e} (paper 3.23e-5)");
+        assert!(e > 1.0e-5);
+    }
+
+    #[test]
+    fn quadratic_beats_linear_taylor() {
+        let lin = sweep_max_err(&Taylor::new(1.0 / 16.0, 2, 6.0));
+        let quad = sweep_max_err(&Taylor::new(1.0 / 16.0, 3, 6.0));
+        assert!(quad < lin, "quad {quad} vs lin {lin}");
+    }
+
+    #[test]
+    fn math_model_tracks_series_order() {
+        // Pure-f64 error should shrink ~(h/2)^K with term count K.
+        let t3 = Taylor::new(1.0 / 16.0, 3, 6.0);
+        let t4 = Taylor::new(1.0 / 16.0, 4, 6.0);
+        let probe = |m: &Taylor| {
+            let mut e: f64 = 0.0;
+            let mut x = 0.0;
+            while x < 6.0 {
+                e = e.max((m.eval_f64(x) - tanh_ref(x)).abs());
+                x += 1e-3;
+            }
+            e
+        };
+        let (e3, e4) = (probe(&t3), probe(&t4));
+        assert!(e4 < e3 / 4.0, "e3={e3} e4={e4}");
+    }
+
+    #[test]
+    fn lut_sizes_match_paper_iv_c() {
+        // Paper §IV.C: 96 entries (B1, step 1/16 over 6) / 48 (B2, 1/8).
+        // We carry one guard entry for the boundary interval.
+        assert_eq!(Taylor::table1_quadratic().lut().len(), 96 + 2);
+        assert_eq!(Taylor::table1_cubic().lut().len(), 48 + 2);
+    }
+
+    #[test]
+    fn inventory_matches_paper_counts() {
+        // Paper: "two adders, two multipliers and an LUT of 96 entries,
+        // or three adders, three multipliers and an LUT of 48 entries"
+        // (Horner datapath; runtime coefficient derivation adds logic).
+        let b1 = Taylor::table1_quadratic()
+            .with_coeff_mode(CoeffMode::Stored)
+            .inventory(IoSpec::table1());
+        assert_eq!(b1.adders, 2);
+        assert_eq!(b1.multipliers, 2);
+        let b2 = Taylor::table1_cubic()
+            .with_coeff_mode(CoeffMode::Stored)
+            .inventory(IoSpec::table1());
+        assert_eq!(b2.adders, 3);
+        assert_eq!(b2.multipliers, 3);
+        // Runtime mode trades LUT bits for arithmetic.
+        let rt = Taylor::table1_quadratic().inventory(IoSpec::table1());
+        let st = b1;
+        assert!(rt.lut_bits < st.lut_bits);
+        assert!(rt.multipliers + rt.squarers > st.multipliers);
+    }
+
+    #[test]
+    fn stored_and_runtime_modes_agree_numerically() {
+        let rt = Taylor::table1_quadratic();
+        let st = Taylor::table1_quadratic().with_coeff_mode(CoeffMode::Stored);
+        for v in [0.01, 0.7, 1.9, 4.2] {
+            let x = Fx::from_f64(v, INP);
+            assert_eq!(rt.eval_fx(x, OUT).raw(), st.eval_fx(x, OUT).raw());
+        }
+    }
+}

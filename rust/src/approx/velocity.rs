@@ -1,0 +1,362 @@
+//! Method D — trigonometric expansion via velocity factors
+//! (paper §II.D, §IV.E; after Doerfler's fast-approximation method).
+//!
+//! Instead of tanh values the registers store *velocity factors*
+//! `f_a = (1 + tanh a)/(1 − tanh a) = e^{2a}` (eq. 11) for the powers of
+//! two `2^k` down to a threshold θ. Because `f_{a+b} = f_a·f_b`
+//! (eq. 13), the factor for the top bits of the input is a product of
+//! the stored registers selected by the input's bit pattern (Fig 4's
+//! multiplexer network); tanh is recovered with one division,
+//! `tanh a = (F − 1)/(F + 1)` (eq. 12), and the sub-threshold residue
+//! `b < θ` is compensated linearly with eq. (10):
+//! `tanh(a+b) ≈ T + b·(1 − T²)`.
+//!
+//! The divider is the shared Newton-Raphson unit ([`super::newton`]).
+//! Table II's multi-bit (paired) lookup halves the multiplier chain at
+//! the cost of 4-to-1 muxes and more stored entries; it is numerically
+//! identical here (pair entries are exact products of the singles) and
+//! is exposed through [`VfLookupMode`] for the cost model and the hw
+//! simulator.
+
+use super::newton::{div_f64, fx_div, NR_ITERS};
+use super::reference::velocity_factor;
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::cost::Inventory;
+use crate::fixed::{fx_mul, fx_mul_wide, fx_sub, Fx, FxWide, QFormat, Round};
+
+/// Single-bit vs Table II paired-bit register file organization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VfLookupMode {
+    /// One register + one multiplier per input bit (Fig 4).
+    SingleBit,
+    /// Table II: one 4-to-1 mux per *pair* of bits, halving the
+    /// multiplier chain (20 entries / 4 multipliers at θ = 1/256).
+    PairedBits,
+}
+
+/// Velocity-factor tanh approximator.
+#[derive(Clone, Debug)]
+pub struct Velocity {
+    /// Linear-compensation threshold θ = 2^-m.
+    threshold: f64,
+    /// m: bit position of the threshold.
+    m: u32,
+    domain_max: f64,
+    /// Highest power-of-two bit weight covered (2^kmax ≤ domain_max).
+    kmax: i32,
+    /// Stored VF registers: `vf[i]` = quantized e^{2·2^(kmax−i)}.
+    vf: Vec<Fx>,
+    /// Internal wide format for the factor product.
+    wide_fmt: QFormat,
+    mode: VfLookupMode,
+}
+
+impl Velocity {
+    /// Builds with linear threshold `threshold = 2^-m` over
+    /// `[0, domain_max]`.
+    pub fn new(threshold: f64, domain_max: f64) -> Velocity {
+        let inv = 1.0 / threshold;
+        assert!(
+            inv.fract() == 0.0 && (inv as u64).is_power_of_two(),
+            "threshold {threshold} must be a reciprocal power of two"
+        );
+        let m = (inv as u64).trailing_zeros();
+        // Highest bit weight needed to cover values < domain_max:
+        // 2^(kmax+1) ≥ domain_max ⇒ kmax = ceil(log2(domain)) − 1.
+        let kmax = domain_max.log2().ceil() as i32 - 1;
+        // Wide format: F ≤ e^(2·domain_max) ⇒ int bits = ceil(2·domain·log2 e) + 1.
+        let int_bits = (2.0 * domain_max * std::f64::consts::LOG2_E).ceil() as u32 + 1;
+        let wide_fmt = QFormat::new(int_bits, 24);
+        let vf = (-(m as i32)..=kmax)
+            .rev()
+            .map(|k| {
+                Fx::from_f64_round(velocity_factor((2f64).powi(k)), wide_fmt, Round::NearestEven)
+            })
+            .collect();
+        Velocity { threshold, m, domain_max, kmax, vf, wide_fmt, mode: VfLookupMode::SingleBit }
+    }
+
+    /// Table I row "D": threshold 1/128, domain (-6, 6).
+    pub fn table1() -> Velocity {
+        Velocity::new(1.0 / 128.0, 6.0)
+    }
+
+    /// Selects the Table II paired-bit register organization (inventory /
+    /// hw-simulator concern; numerics are identical).
+    pub fn with_lookup_mode(mut self, mode: VfLookupMode) -> Velocity {
+        self.mode = mode;
+        self
+    }
+
+    /// The compensation threshold θ.
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Number of stored velocity-factor registers (paper: 10 for θ=1/128
+    /// covering 2^-7 … 2^2 — we store up to 2^kmax within the domain).
+    pub fn register_count(&self) -> usize {
+        self.vf.len()
+    }
+
+    /// The threshold bit position m (θ = 2^-m).
+    pub fn threshold_shift(&self) -> u32 {
+        self.m
+    }
+
+    /// Highest stored bit weight exponent (registers cover 2^kmax … θ).
+    pub fn kmax(&self) -> i32 {
+        self.kmax
+    }
+
+    /// The stored velocity-factor registers, highest weight first.
+    pub fn registers(&self) -> &[Fx] {
+        &self.vf
+    }
+
+    /// The wide internal format of the factor product.
+    pub fn wide_format(&self) -> QFormat {
+        self.wide_fmt
+    }
+
+    /// Splits a non-negative input into (coarse bits ≥ θ, residue < θ)
+    /// in raw input-format terms. Public for the hw pipeline.
+    #[inline]
+    pub fn split(&self, x: Fx) -> (i64, i64) {
+        let frac = x.format().frac_bits;
+        // A threshold finer than the input resolution means every input
+        // bit is covered by a stored register — residue is always zero.
+        let res_bits = frac.saturating_sub(self.m);
+        let mask = (1i64 << res_bits) - 1;
+        (x.raw() & !mask, x.raw() & mask)
+    }
+}
+
+impl TanhApprox for Velocity {
+    fn id(&self) -> MethodId {
+        MethodId::Velocity
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Velocity(threshold={})",
+            crate::util::table::step_str(self.threshold)
+        )
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        let neg = x < 0.0;
+        let x = x.abs();
+        let y = if x >= self.domain_max {
+            1.0
+        } else {
+            // Quantize to the bit grid of the datapath: a = bits ≥ θ.
+            let scale = (2f64).powi(self.m as i32);
+            let a = (x * scale).floor() / scale;
+            let b = x - a;
+            // F = product of stored factors for set bits = e^{2a} exactly.
+            let f = velocity_factor(a);
+            // Divider shares the finite-NR model.
+            let t = div_f64(f - 1.0, f + 1.0, NR_ITERS);
+            t + b * (1.0 - t * t)
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        let (coarse, residue) = self.split(x);
+        let frac = x.format().frac_bits;
+        let wf = self.wide_fmt;
+
+        // --- Stage 1: multiplexed product of velocity-factor registers.
+        // Walk bit weights 2^kmax … 2^-m; multiply in the register when
+        // the input bit is set (Fig 4's mux + multiplier chain).
+        let mut f = Fx::one(wf);
+        for (i, k) in (-(self.m as i32)..=self.kmax).rev().enumerate() {
+            let bitpos = k + frac as i32; // position in the raw word
+            if bitpos < 0 {
+                continue;
+            }
+            if (coarse >> bitpos) & 1 == 1 {
+                f = fx_mul(f, self.vf[i], wf, Round::NearestAway);
+            }
+        }
+
+        // --- Stage 2: tanh a = (F − 1)/(F + 1) (eq. 12), NR divider.
+        let one = Fx::one(wf);
+        let num = fx_sub(f, one, wf, Round::NearestAway);
+        let den = crate::fixed::fx_add(f, one, wf, Round::NearestAway);
+        // T in an internal S1.30-style format for the refinement stage.
+        let t_fmt = QFormat::new(1, 24);
+        let t = if num.raw() == 0 {
+            Fx::zero(t_fmt)
+        } else {
+            fx_div(num, den, t_fmt, NR_ITERS)
+        };
+
+        // --- Stage 3: linear compensation (eq. 10): y = T + b·(1 − T²).
+        let b = Fx::from_raw(residue, QFormat::new(0, frac)); // b < θ, ≥ 0
+        let t2 = fx_mul(t, t, t_fmt, Round::NearestAway); // square unit
+        let d1 = fx_sub(Fx::one(t_fmt), t2, t_fmt, Round::NearestAway);
+        fx_mul_wide(b, d1)
+            .add(FxWide::from_fx(t))
+            .narrow(out, Round::NearestEven)
+    }
+
+    fn domain_max(&self) -> f64 {
+        self.domain_max
+    }
+
+    fn inventory(&self, _io: IoSpec) -> Inventory {
+        let n = self.vf.len() as u32;
+        let core = match self.mode {
+            VfLookupMode::SingleBit => Inventory {
+                // Paper §IV.E: one register per bit, mux2 selects
+                // {1.0, VF}, n−1 multipliers chain the product.
+                multipliers: n.saturating_sub(1),
+                mux2: n,
+                lut_entries: n,
+                lut_bits: n * self.wide_fmt.width(),
+                ..Default::default()
+            },
+            VfLookupMode::PairedBits => {
+                // Table II: pairs of bits share a 4-to-1 mux whose
+                // entries are {1, f_lsb, f_msb, f_lsb·f_msb}; the "1"
+                // needs no storage ⇒ ~3 stored per pair plus the chain.
+                let pairs = n.div_ceil(2);
+                Inventory {
+                    multipliers: pairs.saturating_sub(1),
+                    mux4: pairs,
+                    lut_entries: pairs * 4,
+                    lut_bits: pairs * 4 * self.wide_fmt.width(),
+                    ..Default::default()
+                }
+            }
+        };
+        core.plus(Inventory {
+            // (F−1), (F+1), NR divider, then eq. 10: 2 adders, 1 mult,
+            // 1 squarer.
+            adders: 4,
+            multipliers: 1,
+            squarers: 1,
+            dividers: 1,
+            mult_width: self.wide_fmt.width(),
+            add_width: self.wide_fmt.width(),
+            // mux/product chain + add | divide (NR: 3 iter × 2 mult) | refine
+            pipeline_stages: core.multipliers + 1 + 2 * (NR_ITERS as u32) + 2,
+            ..Default::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::eval_odd_saturating;
+    use crate::approx::reference::tanh_ref;
+
+    const OUT: QFormat = QFormat::S_15;
+    const INP: QFormat = QFormat::S3_12;
+
+    #[test]
+    fn register_count_matches_paper() {
+        // Paper §IV.E: θ = 1/128 stores VF for 2^k, −7 ≤ k ≤ 2 → 10
+        // registers. Our domain (−6,6) also tops out at 2^2.
+        assert_eq!(Velocity::table1().register_count(), 10);
+    }
+
+    #[test]
+    fn exact_on_coarse_grid() {
+        // For inputs with no sub-threshold bits the only errors are VF
+        // quantization + divider truncation — well under 1.5 output ulp.
+        let v = Velocity::table1();
+        for xv in [0.5, 1.0, 1.5, 2.25, 3.0, 5.0] {
+            let x = Fx::from_f64(xv, INP);
+            let y = v.eval_fx(x, OUT);
+            let err = (y.to_f64() - tanh_ref(x.to_f64())).abs();
+            assert!(err <= 1.5 * OUT.ulp(), "x={xv} err={err}");
+        }
+    }
+
+    #[test]
+    fn table1_error_bounds() {
+        // Paper Table I row D: θ = 1/128 → max err 3.85e-5.
+        let v = Velocity::table1();
+        let mut max_err: f64 = 0.0;
+        for raw in -(INP.max_raw())..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            let y = eval_odd_saturating(&v, x, OUT);
+            max_err = max_err.max((y.to_f64() - tanh_ref(x.to_f64())).abs());
+        }
+        assert!(max_err < 6.0e-5, "max_err {max_err} (paper 3.85e-5)");
+        assert!(max_err > 1.0e-5);
+    }
+
+    #[test]
+    fn smaller_threshold_less_error() {
+        let coarse = Velocity::new(1.0 / 32.0, 6.0);
+        let fine = Velocity::new(1.0 / 256.0, 6.0);
+        let probe = |m: &Velocity| {
+            let mut e: f64 = 0.0;
+            for raw in (0..INP.max_raw()).step_by(7) {
+                let x = Fx::from_raw(raw, INP);
+                e = e.max((m.eval_fx(x, OUT).to_f64() - tanh_ref(x.to_f64())).abs());
+            }
+            e
+        };
+        assert!(probe(&coarse) > 2.0 * probe(&fine));
+    }
+
+    #[test]
+    fn split_reassembles() {
+        let v = Velocity::table1();
+        let x = Fx::from_f64(2.71828, INP);
+        let (a, b) = v.split(x);
+        assert_eq!(a + b, x.raw());
+        // residue strictly below threshold
+        assert!((b as f64) * INP.ulp() < v.threshold());
+        // coarse part has no sub-threshold bits
+        assert_eq!(a & ((1 << (INP.frac_bits - v.m)) - 1), 0);
+    }
+
+    #[test]
+    fn paired_mode_inventory_matches_table2_shape() {
+        // Paper: "This scheme requires 20 LUT entries and 4 multipliers
+        // (for 1/256 threshold)" — θ=1/256 over ±4 ⇒ bits 2^-8..2^1 = 10
+        // registers ⇒ 5 pairs ⇒ 20 entries, 4 chain multipliers.
+        let v = Velocity::new(1.0 / 256.0, 4.0).with_lookup_mode(VfLookupMode::PairedBits);
+        let inv = v.inventory(IoSpec::table1());
+        assert_eq!(inv.mux4, 5);
+        assert_eq!(inv.lut_entries, 20);
+        // 4 chain multipliers + 1 refinement multiplier.
+        assert_eq!(inv.multipliers, 5);
+        assert_eq!(inv.dividers, 1);
+    }
+
+    #[test]
+    fn single_bit_inventory_matches_paper_counts() {
+        // Paper §IV.E basic implementation: 10 registers, 9 multipliers.
+        let inv = Velocity::table1().inventory(IoSpec::table1());
+        assert_eq!(inv.lut_entries, 10);
+        assert_eq!(inv.mux2, 10);
+        // 9 chain multipliers + 1 refinement multiplier.
+        assert_eq!(inv.multipliers, 10);
+        assert_eq!(inv.dividers, 1);
+        assert_eq!(inv.squarers, 1);
+    }
+
+    #[test]
+    fn math_model_close_to_datapath() {
+        let v = Velocity::table1();
+        for xv in [0.1, 0.77, 1.3, 2.9, 4.5] {
+            let x = Fx::from_f64(xv, INP);
+            let fx = v.eval_fx(x, OUT).to_f64();
+            let f64v = v.eval_f64(x.to_f64());
+            assert!((fx - f64v).abs() < 4.0 * OUT.ulp(), "x={xv}: {fx} vs {f64v}");
+        }
+    }
+}

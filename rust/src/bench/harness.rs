@@ -1,0 +1,182 @@
+//! Minimal benchmarking core: adaptive iteration count, median +
+//! median-absolute-deviation statistics, black-box value sinking.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+    /// Number of samples.
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// Nanoseconds per iteration (median).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Iterations per second.
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.ns_per_iter().max(1e-3)
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        let ns = self.ns_per_iter();
+        let (val, unit) = if ns < 1_000.0 {
+            (ns, "ns")
+        } else if ns < 1_000_000.0 {
+            (ns / 1_000.0, "µs")
+        } else {
+            (ns / 1_000_000.0, "ms")
+        };
+        format!(
+            "{:40} {:>10.2} {}/iter  (±{:.1}%, {} samples × {} iters)",
+            self.name,
+            val,
+            unit,
+            100.0 * self.mad.as_nanos() as f64 / self.median.as_nanos().max(1) as f64,
+            self.samples,
+            self.iters_per_sample
+        )
+    }
+}
+
+/// Benchmark driver with fixed sample/target-time policy.
+pub struct Bencher {
+    /// Target wall time per sample.
+    pub sample_target: Duration,
+    /// Number of samples collected.
+    pub samples: usize,
+    /// Warmup duration before calibration.
+    pub warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            sample_target: Duration::from_millis(40),
+            samples: 11,
+            warmup: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for slow end-to-end benches.
+    pub fn quick() -> Bencher {
+        Bencher {
+            sample_target: Duration::from_millis(20),
+            samples: 5,
+            warmup: Duration::from_millis(10),
+        }
+    }
+
+    /// Runs `f` repeatedly, returning robust per-iteration timing.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + calibration: find iters such that a sample hits the
+        // target duration.
+        let warm_end = Instant::now() + self.warmup;
+        let mut calib_iters: u64 = 0;
+        let calib_start = Instant::now();
+        while Instant::now() < warm_end {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.sample_target.as_secs_f64() / per_iter.max(1e-9)) as u64).max(1);
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            times.push(start.elapsed() / iters as u32);
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mut devs: Vec<i128> =
+            times.iter().map(|t| (t.as_nanos() as i128 - median.as_nanos() as i128).abs()).collect();
+        devs.sort();
+        let mad = Duration::from_nanos(devs[devs.len() / 2] as u64);
+        BenchResult {
+            name: name.to_string(),
+            median,
+            mad,
+            iters_per_sample: iters,
+            samples: self.samples,
+        }
+    }
+}
+
+/// One-shot bench with default settings; prints the report line.
+pub fn bench<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
+    let r = Bencher::default().run(name, f);
+    println!("{}", r.report());
+    r
+}
+
+/// One-shot bench normalizing to `n` items per iteration; prints
+/// items/second.
+pub fn bench_n<T>(name: &str, n: usize, f: impl FnMut() -> T) -> BenchResult {
+    let r = Bencher::default().run(name, f);
+    println!(
+        "{}  [{:.2} Mitems/s]",
+        r.report(),
+        n as f64 * r.per_second() / 1e6
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_trivial_op() {
+        let b = Bencher {
+            sample_target: Duration::from_micros(200),
+            samples: 3,
+            warmup: Duration::from_micros(100),
+        };
+        let r = b.run("noop-add", || std::hint::black_box(1u64) + 1);
+        assert!(r.ns_per_iter() < 1_000.0, "{}", r.ns_per_iter());
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn slower_op_times_slower() {
+        let b = Bencher {
+            sample_target: Duration::from_micros(500),
+            samples: 3,
+            warmup: Duration::from_micros(100),
+        };
+        let fast = b.run("fast", || 1u64 + 1);
+        let slow = b.run("slow", || (0..1000u64).sum::<u64>());
+        assert!(slow.ns_per_iter() > fast.ns_per_iter());
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            median: Duration::from_nanos(1500),
+            mad: Duration::from_nanos(10),
+            iters_per_sample: 100,
+            samples: 5,
+        };
+        assert!(r.report().contains("µs/iter"));
+        assert!((r.per_second() - 1e9 / 1500.0).abs() < 1.0);
+    }
+}

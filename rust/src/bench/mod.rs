@@ -1,0 +1,7 @@
+//! Self-contained benchmark harness (criterion is not in the offline
+//! crate set): warmup + timed iterations + robust statistics, with the
+//! paper-table renderers layered on top in `rust/benches/*.rs`.
+
+mod harness;
+
+pub use harness::{bench, bench_n, BenchResult, Bencher};

@@ -1,0 +1,148 @@
+//! Dynamic batching: packing variable-size requests into the fixed
+//! batch shape the compiled executable expects.
+
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// The compiled executable's batch (element) capacity.
+    pub batch_elements: usize,
+    /// Flush a partial batch after this long even if not full.
+    pub max_wait: Duration,
+    /// Backpressure bound: max queued elements per method.
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            batch_elements: 1024,
+            max_wait: Duration::from_micros(200),
+            max_queue: 64 * 1024,
+        }
+    }
+}
+
+/// A batch under construction: requests packed head-to-tail into the
+/// executable's flat input vector.
+#[derive(Debug, Default)]
+pub struct PendingBatch {
+    /// Requests in pack order.
+    pub requests: Vec<Request>,
+    /// Total packed elements.
+    pub elements: usize,
+    /// When the oldest member arrived (flush deadline base).
+    pub oldest: Option<Instant>,
+}
+
+impl PendingBatch {
+    /// True if no requests are pending.
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Whether `req` still fits under `capacity`.
+    pub fn fits(&self, req: &Request, capacity: usize) -> bool {
+        self.elements + req.values.len() <= capacity
+    }
+
+    /// Adds a request (caller checked `fits`).
+    pub fn push(&mut self, req: Request) {
+        self.oldest.get_or_insert(req.enqueued_at);
+        self.elements += req.values.len();
+        self.requests.push(req);
+    }
+
+    /// True once the batch should flush: full enough that the next
+    /// typical request won't fit, or the oldest member exceeded
+    /// `max_wait`.
+    pub fn should_flush(&self, cfg: &BatcherConfig, now: Instant) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        if self.elements >= cfg.batch_elements {
+            return true;
+        }
+        match self.oldest {
+            Some(t) => now.duration_since(t) >= cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Packs into the executable's flat input, zero-padded to
+    /// `capacity`; returns (flat_input, per-request (offset, len)).
+    pub fn pack(&self, capacity: usize) -> (Vec<f32>, Vec<(usize, usize)>) {
+        let mut flat = Vec::with_capacity(capacity);
+        let mut spans = Vec::with_capacity(self.requests.len());
+        for req in &self.requests {
+            spans.push((flat.len(), req.values.len()));
+            flat.extend_from_slice(&req.values);
+        }
+        flat.resize(capacity, 0.0);
+        (flat, spans)
+    }
+
+    /// Takes the batch, leaving an empty one.
+    pub fn take(&mut self) -> PendingBatch {
+        std::mem::take(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::MethodId;
+    use std::sync::mpsc;
+
+    fn req(n: usize) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id: 0,
+            method: MethodId::Pwl,
+            values: vec![0.5; n],
+            enqueued_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn packs_head_to_tail_with_padding() {
+        let mut b = PendingBatch::default();
+        b.push(req(3));
+        b.push(req(5));
+        let (flat, spans) = b.pack(16);
+        assert_eq!(flat.len(), 16);
+        assert_eq!(spans, vec![(0, 3), (3, 5)]);
+        assert_eq!(&flat[8..], &[0.0; 8]);
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let cfg = BatcherConfig { batch_elements: 8, ..Default::default() };
+        let mut b = PendingBatch::default();
+        b.push(req(8));
+        assert!(b.should_flush(&cfg, Instant::now()));
+    }
+
+    #[test]
+    fn flushes_on_timeout_only_when_nonempty() {
+        let cfg = BatcherConfig { max_wait: Duration::from_millis(1), ..Default::default() };
+        let b = PendingBatch::default();
+        assert!(!b.should_flush(&cfg, Instant::now() + Duration::from_secs(1)));
+        let mut b = PendingBatch::default();
+        b.push(req(1));
+        assert!(!b.should_flush(&cfg, Instant::now()));
+        assert!(b.should_flush(&cfg, Instant::now() + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn fits_respects_capacity() {
+        let mut b = PendingBatch::default();
+        b.push(req(1000));
+        assert!(b.fits(&req(24), 1024));
+        assert!(!b.fits(&req(25), 1024));
+    }
+}

@@ -1,0 +1,127 @@
+//! Lock-free-ish serving metrics (atomics; snapshot on demand).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative counters for one coordinator.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    requests: AtomicU64,
+    elements: AtomicU64,
+    batches: AtomicU64,
+    rejected: AtomicU64,
+    errors: AtomicU64,
+    latency_us_sum: AtomicU64,
+    latency_us_max: AtomicU64,
+    padded_elements: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Completed requests.
+    pub requests: u64,
+    /// Total activation elements processed.
+    pub elements: u64,
+    /// Executed batches.
+    pub batches: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Failed executions.
+    pub errors: u64,
+    /// Sum of per-request latency (µs).
+    pub latency_us_sum: u64,
+    /// Max per-request latency (µs).
+    pub latency_us_max: u64,
+    /// Zero-pad elements wasted by fixed-shape batching.
+    pub padded_elements: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean request latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / self.requests as f64
+        }
+    }
+
+    /// Mean batch occupancy (useful elements / capacity-elements).
+    pub fn batch_efficiency(&self) -> f64 {
+        let total = self.elements + self.padded_elements;
+        if total == 0 {
+            1.0
+        } else {
+            self.elements as f64 / total as f64
+        }
+    }
+}
+
+impl ServerMetrics {
+    /// Records a completed request.
+    pub fn record_request(&self, elements: usize, latency_us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.elements.fetch_add(elements as u64, Ordering::Relaxed);
+        self.latency_us_sum.fetch_add(latency_us, Ordering::Relaxed);
+        self.latency_us_max.fetch_max(latency_us, Ordering::Relaxed);
+    }
+
+    /// Records an executed batch and its padding waste.
+    pub fn record_batch(&self, padded: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_elements.fetch_add(padded as u64, Ordering::Relaxed);
+    }
+
+    /// Records a backpressure rejection.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records an execution error.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshots all counters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            elements: self.elements.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
+            latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
+            padded_elements: self.padded_elements.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = ServerMetrics::default();
+        m.record_request(100, 50);
+        m.record_request(50, 150);
+        m.record_batch(874);
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.elements, 150);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.mean_latency_us(), 100.0);
+        assert_eq!(s.latency_us_max, 150);
+        assert!((s.batch_efficiency() - 150.0 / 1024.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_benign() {
+        let s = ServerMetrics::default().snapshot();
+        assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.batch_efficiency(), 1.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! The activation-accelerator coordinator — L3 of the stack.
+//!
+//! The paper positions its tanh units inside neural-network
+//! accelerators (§I); this module is the driver such an accelerator
+//! ships with: a request **router** that steers work to per-method
+//! executors, a **dynamic batcher** that packs scalar/short-vector
+//! activation requests into the fixed-batch compiled executables
+//! (PJRT graphs are compiled per shape), a **worker pool** holding the
+//! hot executables, **metrics**, and **backpressure** via a bounded
+//! queue.
+//!
+//! Design notes:
+//! - std-thread + mpsc architecture (tokio is not in the offline crate
+//!   set); one batcher/worker pair per method keeps the lock surface
+//!   per-queue, not global.
+//! - The batch size is the compiled executable's shape (default 1024);
+//!   partial batches are padded with zeros and sliced on the way out —
+//!   the same trick serving systems use for fixed-shape accelerators.
+//! - Backpressure: `submit` fails fast once a method's queue holds
+//!   `max_queue` pending elements (the caller sheds load instead of the
+//!   coordinator dying of memory).
+
+mod batcher;
+mod metrics;
+mod net;
+mod request;
+mod server;
+mod worker;
+
+pub use batcher::{BatcherConfig, PendingBatch};
+pub use metrics::{MetricsSnapshot, ServerMetrics};
+pub use request::{Request, RequestResult};
+pub use server::{Coordinator, CoordinatorConfig, ExecBackend};
+pub use net::{NetClient, NetServer};
+pub use worker::{GoldenBackend, GraphBackend};

@@ -1,0 +1,272 @@
+//! TCP front-end: the coordinator as a network service.
+//!
+//! Line-delimited JSON over TCP (std::net; tokio is not in the offline
+//! crate set — one thread per connection, which is fine for an
+//! accelerator-driver control plane):
+//!
+//! ```text
+//! → {"method": "pwl", "values": [0.5, -1.25]}
+//! ← {"ok": true, "values": [0.4621, -0.8482], "latency_us": 412}
+//! → {"cmd": "metrics"}
+//! ← {"ok": true, "requests": 2, "batches": 1, ...}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::approx::MethodId;
+use crate::util::json::{self, Json};
+
+use super::server::Coordinator;
+
+/// A running TCP server wrapping a coordinator.
+pub struct NetServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Binds `addr` (use port 0 for an ephemeral port) and starts
+    /// accepting connections.
+    pub fn start(coord: Arc<Coordinator>, addr: &str) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name("tanh-net-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let coord = coord.clone();
+                            // Connection threads are detached: they end
+                            // when the client disconnects. Joining them
+                            // from stop() would deadlock against
+                            // still-connected clients.
+                            let _ = std::thread::Builder::new()
+                                .name("tanh-net-conn".into())
+                                .spawn(move || handle_conn(stream, coord));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (for clients when started on port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stops accepting and joins the accept thread (open connections
+    /// close as clients disconnect).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&line, &coord);
+        let mut text = response.to_string_compact();
+        text.push('\n');
+        if writer.write_all(text.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer; // reserved for per-peer metrics
+}
+
+fn handle_line(line: &str, coord: &Coordinator) -> Json {
+    let doc = match json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return err(format!("bad json: {e}")),
+    };
+    if let Some(cmd) = doc.get("cmd").and_then(|c| c.str()) {
+        return match cmd {
+            "metrics" => {
+                let m = coord.metrics();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("requests", Json::i(m.requests as i64)),
+                    ("elements", Json::i(m.elements as i64)),
+                    ("batches", Json::i(m.batches as i64)),
+                    ("rejected", Json::i(m.rejected as i64)),
+                    ("errors", Json::i(m.errors as i64)),
+                    ("mean_latency_us", Json::n(m.mean_latency_us())),
+                    ("batch_efficiency", Json::n(m.batch_efficiency())),
+                ])
+            }
+            "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+            other => err(format!("unknown cmd '{other}'")),
+        };
+    }
+    let Some(method) = doc.get("method").and_then(|m| m.str()).and_then(MethodId::parse) else {
+        return err("missing or unknown 'method'".into());
+    };
+    let Some(values) = doc.get("values").and_then(|v| v.as_arr()) else {
+        return err("missing 'values' array".into());
+    };
+    let values: Vec<f32> = values.iter().filter_map(|v| v.num()).map(|v| v as f32).collect();
+    let t0 = std::time::Instant::now();
+    match coord.evaluate(method, values) {
+        Ok(out) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("values", Json::arr(out.into_iter().map(|v| Json::n(v as f64)).collect())),
+            ("latency_us", Json::i(t0.elapsed().as_micros() as i64)),
+        ]),
+        Err(e) => err(e),
+    }
+}
+
+fn err(msg: String) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::s(msg))])
+}
+
+/// Minimal blocking client for the line protocol (used by the example
+/// and the tests).
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    /// Connects to a server.
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(NetClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Sends one request document, waits for the response line.
+    pub fn call(&mut self, req: &Json) -> Result<Json, String> {
+        let mut text = req.to_string_compact();
+        text.push('\n');
+        self.writer.write_all(text.as_bytes()).map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        json::parse(&line)
+    }
+
+    /// Evaluates a batch of activations.
+    pub fn evaluate(&mut self, method: &str, values: &[f32]) -> Result<Vec<f32>, String> {
+        let req = Json::obj(vec![
+            ("method", Json::s(method)),
+            ("values", Json::arr(values.iter().map(|v| Json::n(*v as f64)).collect())),
+        ]);
+        let resp = self.call(&req)?;
+        if resp.get("ok").map(|o| *o == Json::Bool(true)) != Some(true) {
+            return Err(resp
+                .get("error")
+                .and_then(|e| e.str())
+                .unwrap_or("unknown error")
+                .to_string());
+        }
+        Ok(resp
+            .get("values")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing values")?
+            .iter()
+            .filter_map(|v| v.num())
+            .map(|v| v as f32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, GoldenBackend};
+
+    fn start_server() -> (NetServer, Arc<Coordinator>) {
+        let coord = Arc::new(Coordinator::start(
+            Arc::new(GoldenBackend::table1(256)),
+            CoordinatorConfig::default(),
+        ));
+        let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+        (server, coord)
+    }
+
+    #[test]
+    fn roundtrip_evaluate() {
+        let (server, _coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let out = client.evaluate("pwl", &[0.5, -0.5, 0.0]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!((out[0] - 0.4621f32).abs() < 1e-3);
+        assert_eq!(out[2], 0.0);
+        server.stop();
+    }
+
+    #[test]
+    fn metrics_and_ping() {
+        let (server, _coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let pong = client.call(&Json::obj(vec![("cmd", Json::s("ping"))])).unwrap();
+        assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+        client.evaluate("lambert", &[1.0]).unwrap();
+        let m = client.call(&Json::obj(vec![("cmd", Json::s("metrics"))])).unwrap();
+        assert!(m.get("requests").unwrap().num().unwrap() >= 1.0);
+        server.stop();
+    }
+
+    #[test]
+    fn error_paths() {
+        let (server, _coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        // bad json
+        let resp = client.call(&Json::s("not an object")).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // unknown method
+        let err = client.evaluate("sinh", &[1.0]).unwrap_err();
+        assert!(err.contains("method"), "{err}");
+        // empty values
+        let err = client.evaluate("pwl", &[]).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn multiple_clients_interleave() {
+        let (server, _coord) = start_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = NetClient::connect(addr).unwrap();
+                    for j in 0..10 {
+                        let x = (i * 10 + j) as f32 * 0.07 - 1.0;
+                        let out = c.evaluate("taylor1", &[x]).unwrap();
+                        assert!((out[0] - x.tanh()).abs() < 1e-3, "x={x}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+}

@@ -1,0 +1,43 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::approx::MethodId;
+
+/// A tanh-activation request: a vector of f32 inputs to be evaluated
+/// with a given approximation method.
+#[derive(Debug)]
+pub struct Request {
+    /// Monotonic id assigned by the coordinator.
+    pub id: u64,
+    /// Which approximation to use.
+    pub method: MethodId,
+    /// Input activations.
+    pub values: Vec<f32>,
+    /// Enqueue timestamp (for latency metrics).
+    pub enqueued_at: Instant,
+    /// Completion channel.
+    pub reply: mpsc::Sender<RequestResult>,
+}
+
+/// The outcome delivered on the reply channel.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    /// Request id (matches [`Request::id`]).
+    pub id: u64,
+    /// Outputs, in input order, or the error message.
+    pub outcome: Result<Vec<f32>, String>,
+    /// Queue + execute latency in microseconds.
+    pub latency_us: u64,
+}
+
+impl RequestResult {
+    /// Unwraps the outputs, panicking on a failed request (tests).
+    pub fn expect_values(self) -> Vec<f32> {
+        match self.outcome {
+            Ok(v) => v,
+            Err(e) => panic!("request {} failed: {e}", self.id),
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! The coordinator: router + per-method batcher/worker threads.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::approx::MethodId;
+
+use super::batcher::{BatcherConfig, PendingBatch};
+use super::metrics::{MetricsSnapshot, ServerMetrics};
+use super::request::{Request, RequestResult};
+
+/// Something that can evaluate a fixed-size flat batch for a method.
+/// Implemented by the PJRT [`super::GraphBackend`] and the golden-model
+/// fallback ([`super::worker::GoldenBackend`]).
+pub trait ExecBackend: Send + Sync + 'static {
+    /// Evaluates a full batch (length == `batch_elements`).
+    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String>;
+    /// The fixed batch size the backend was compiled for.
+    fn batch_elements(&self) -> usize;
+}
+
+/// Coordinator tuning knobs.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorConfig {
+    /// Batching policy (batch size is overridden by the backend's).
+    pub batcher: BatcherConfig,
+}
+
+struct MethodQueue {
+    tx: mpsc::Sender<Request>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// The activation-accelerator service.
+pub struct Coordinator {
+    queues: HashMap<MethodId, MethodQueue>,
+    metrics: Arc<ServerMetrics>,
+    next_id: AtomicU64,
+    cfg: BatcherConfig,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Coordinator {
+    /// Starts one batcher/worker thread per method over the backend.
+    pub fn start(backend: Arc<dyn ExecBackend>, cfg: CoordinatorConfig) -> Coordinator {
+        let mut batcher_cfg = cfg.batcher;
+        batcher_cfg.batch_elements = backend.batch_elements();
+        let metrics = Arc::new(ServerMetrics::default());
+        let mut queues = HashMap::new();
+        let mut workers = Vec::new();
+        for method in MethodId::all() {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let handle = spawn_worker(
+                method,
+                rx,
+                depth.clone(),
+                backend.clone(),
+                batcher_cfg,
+                metrics.clone(),
+            );
+            queues.insert(method, MethodQueue { tx, depth });
+            workers.push(handle);
+        }
+        Coordinator {
+            queues,
+            metrics,
+            next_id: AtomicU64::new(0),
+            cfg: batcher_cfg,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Submits a request; the reply arrives on the returned channel.
+    /// Fails fast under backpressure or oversized input.
+    pub fn submit(
+        &self,
+        method: MethodId,
+        values: Vec<f32>,
+    ) -> Result<mpsc::Receiver<RequestResult>, String> {
+        if values.is_empty() {
+            return Err("empty request".into());
+        }
+        if values.len() > self.cfg.batch_elements {
+            return Err(format!(
+                "request of {} elements exceeds the compiled batch {}",
+                values.len(),
+                self.cfg.batch_elements
+            ));
+        }
+        let q = self.queues.get(&method).ok_or("unknown method")?;
+        let depth = q.depth.load(Ordering::Relaxed);
+        if depth + values.len() > self.cfg.max_queue {
+            self.metrics.record_rejected();
+            return Err(format!("backpressure: queue at {depth} elements"));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            method,
+            values,
+            enqueued_at: Instant::now(),
+            reply: reply_tx,
+        };
+        q.depth.fetch_add(req.values.len(), Ordering::Relaxed);
+        q.tx.send(req).map_err(|_| "worker shut down".to_string())?;
+        Ok(reply_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn evaluate(&self, method: MethodId, values: Vec<f32>) -> Result<Vec<f32>, String> {
+        let rx = self.submit(method, values)?;
+        let result = rx.recv().map_err(|_| "worker dropped reply".to_string())?;
+        result.outcome
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Shuts down the workers (drops the senders, joins the threads).
+    pub fn shutdown(self) {
+        drop(self.queues);
+        let mut workers = self.workers.lock().unwrap();
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn spawn_worker(
+    method: MethodId,
+    rx: mpsc::Receiver<Request>,
+    depth: Arc<AtomicUsize>,
+    backend: Arc<dyn ExecBackend>,
+    cfg: BatcherConfig,
+    metrics: Arc<ServerMetrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("tanh-worker-{}", method.label()))
+        .spawn(move || {
+            let mut pending = PendingBatch::default();
+            loop {
+                // Wait for work: block when idle, poll with the flush
+                // deadline when a partial batch is open.
+                let timeout = if pending.is_empty() { cfg.max_wait * 50 } else { cfg.max_wait };
+                match rx.recv_timeout(timeout) {
+                    Ok(req) => {
+                        if !pending.fits(&req, cfg.batch_elements) {
+                            flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
+                        }
+                        pending.push(req);
+                        // Greedy drain: requests that queued up while
+                        // the previous batch executed are packed NOW
+                        // rather than one-per-loop — without this,
+                        // their queue age exceeds max_wait and every
+                        // request flushes as its own batch (perf log
+                        // iteration 1: batch efficiency 6% → see
+                        // EXPERIMENTS.md §Perf).
+                        while let Ok(req) = rx.try_recv() {
+                            if !pending.fits(&req, cfg.batch_elements) {
+                                flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
+                            }
+                            pending.push(req);
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
+                        return;
+                    }
+                }
+                if pending.should_flush(&cfg, Instant::now()) {
+                    flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
+                }
+            }
+        })
+        .expect("spawning worker thread")
+}
+
+fn flush(
+    pending: &mut PendingBatch,
+    method: MethodId,
+    backend: &Arc<dyn ExecBackend>,
+    cfg: &BatcherConfig,
+    metrics: &Arc<ServerMetrics>,
+    depth: &Arc<AtomicUsize>,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let batch = pending.take();
+    let (flat, spans) = batch.pack(cfg.batch_elements);
+    let padded = cfg.batch_elements - batch.elements;
+    metrics.record_batch(padded);
+    depth.fetch_sub(batch.elements, Ordering::Relaxed);
+    let result = backend.execute(method, &flat);
+    let now = Instant::now();
+    match result {
+        Ok(outputs) => {
+            for (req, (off, len)) in batch.requests.into_iter().zip(spans) {
+                let latency_us = now.duration_since(req.enqueued_at).as_micros() as u64;
+                metrics.record_request(len, latency_us);
+                let _ = req.reply.send(RequestResult {
+                    id: req.id,
+                    outcome: Ok(outputs[off..off + len].to_vec()),
+                    latency_us,
+                });
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            for req in batch.requests {
+                let latency_us = now.duration_since(req.enqueued_at).as_micros() as u64;
+                let _ = req.reply.send(RequestResult {
+                    id: req.id,
+                    outcome: Err(e.clone()),
+                    latency_us,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::GoldenBackend;
+
+    fn start_golden(batch: usize) -> Coordinator {
+        Coordinator::start(Arc::new(GoldenBackend::table1(batch)), CoordinatorConfig::default())
+    }
+
+    #[test]
+    fn evaluate_roundtrip_all_methods() {
+        let c = start_golden(64);
+        for method in MethodId::all() {
+            let out = c.evaluate(method, vec![0.5, -0.5, 3.0]).unwrap();
+            assert_eq!(out.len(), 3);
+            assert!((out[0] - 0.462).abs() < 1e-3, "{method:?}");
+            assert_eq!(out[0], -out[1]);
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 6);
+        assert!(m.batches >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let c = Arc::new(start_golden(256));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let method = MethodId::all()[i % 6];
+                let values: Vec<f32> = (0..50).map(|j| (j as f32) * 0.1 - 2.5).collect();
+                let out = c.evaluate(method, values.clone()).unwrap();
+                for (x, y) in values.iter().zip(&out) {
+                    assert!((x.tanh() - y).abs() < 2e-4, "{method:?} x={x} y={y}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let c = start_golden(16);
+        let err = c.submit(MethodId::Pwl, vec![0.0; 17]).unwrap_err();
+        assert!(err.contains("exceeds"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn empty_request_rejected() {
+        let c = start_golden(16);
+        assert!(c.submit(MethodId::Pwl, vec![]).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn batching_packs_multiple_requests() {
+        let c = start_golden(1024);
+        // Submit many tiny requests quickly: they should share batches.
+        let rxs: Vec<_> =
+            (0..64).map(|_| c.submit(MethodId::Pwl, vec![0.1, 0.2]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().expect_values();
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 64);
+        assert!(m.batches < 64, "batching collapsed {} batches", m.batches);
+        c.shutdown();
+    }
+}

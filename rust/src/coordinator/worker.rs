@@ -1,0 +1,139 @@
+//! Execution backends the coordinator's workers drive.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::approx::{table1_suite, MethodId, TanhApprox};
+use crate::fixed::{Fx, QFormat};
+use crate::runtime::EngineServer;
+
+use super::server::ExecBackend;
+
+/// PJRT-backed execution: each method maps to one compiled activation
+/// graph (`tanh_<method>_<batch>`), preloaded at startup so the hot
+/// path never compiles. Execution goes through the engine thread
+/// ([`EngineServer`]) because PJRT handles are not `Send`.
+pub struct GraphBackend {
+    engine: Arc<EngineServer>,
+    batch: usize,
+}
+
+impl GraphBackend {
+    /// Artifact name for a method's activation graph.
+    pub fn artifact_name(method: MethodId, batch: usize) -> String {
+        let key = match method {
+            MethodId::Pwl => "pwl",
+            MethodId::TaylorQuadratic => "taylor1",
+            MethodId::TaylorCubic => "taylor2",
+            MethodId::CatmullRom => "catmull_rom",
+            MethodId::Velocity => "velocity",
+            MethodId::Lambert => "lambert",
+        };
+        format!("tanh_{key}_{batch}")
+    }
+
+    /// Preloads all six method graphs at the given batch size.
+    pub fn load_all(engine: Arc<EngineServer>, batch: usize) -> anyhow::Result<GraphBackend> {
+        let names: Vec<String> =
+            MethodId::all().iter().map(|m| Self::artifact_name(*m, batch)).collect();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        engine.preload(&refs).map_err(|e| anyhow::anyhow!("preload: {e}"))?;
+        Ok(GraphBackend { engine, batch })
+    }
+
+    /// The compiled batch size.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+impl ExecBackend for GraphBackend {
+    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+        if flat.len() != self.batch {
+            return Err(format!("batch mismatch: {} vs {}", flat.len(), self.batch));
+        }
+        let name = Self::artifact_name(method, self.batch);
+        self.engine.run_f32(&name, flat.to_vec())
+    }
+
+    fn batch_elements(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Golden-model execution: the rust fixed-point datapaths (S3.12 →
+/// S.15). Used by tests and as a no-artifacts fallback; also the
+/// numerically authoritative path the PJRT outputs are compared to.
+pub struct GoldenBackend {
+    methods: HashMap<MethodId, Box<dyn TanhApprox>>,
+    /// Compiled integer fast path for PWL (EXPERIMENTS.md §Perf iter 5:
+    /// 182 M evals/s vs 34 M through the generic Fx path).
+    pwl_fast: Box<dyn Fn(i64) -> i64 + Send + Sync>,
+    batch: usize,
+}
+
+impl GoldenBackend {
+    /// Builds the Table I suite as the backend.
+    pub fn table1(batch: usize) -> GoldenBackend {
+        let methods: HashMap<_, _> = table1_suite().into_iter().map(|m| (m.id(), m)).collect();
+        let pwl_fast = Box::new(crate::approx::pwl::Pwl::table1().compile_raw());
+        GoldenBackend { methods, pwl_fast, batch }
+    }
+}
+
+impl ExecBackend for GoldenBackend {
+    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+        if method == MethodId::Pwl {
+            // f32 → S3.12 raw → compiled path → S.15 raw → f32.
+            let scale = (1i64 << 12) as f32;
+            let inv = 1.0 / (1i64 << 15) as f32;
+            return Ok(flat
+                .iter()
+                .map(|&v| {
+                    let raw = (v * scale).round() as i64; // half-away, like Fx::from_f64
+                    let raw = raw.clamp(QFormat::S3_12.min_raw(), QFormat::S3_12.max_raw());
+                    (self.pwl_fast)(raw) as f32 * inv
+                })
+                .collect());
+        }
+        let m = self.methods.get(&method).ok_or_else(|| format!("no model for {method:?}"))?;
+        Ok(flat
+            .iter()
+            .map(|&v| {
+                let x = Fx::from_f64(v as f64, QFormat::S3_12);
+                m.eval_fx(x, QFormat::S_15).to_f64() as f32
+            })
+            .collect())
+    }
+
+    fn batch_elements(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_backend_evaluates_all_methods() {
+        let b = GoldenBackend::table1(8);
+        for method in MethodId::all() {
+            let out = b.execute(method, &[0.0, 0.5, -0.5, 2.0, -2.0, 6.5, -6.5, 0.1]).unwrap();
+            assert_eq!(out.len(), 8);
+            assert_eq!(out[0], 0.0);
+            assert!((out[1] - 0.46).abs() < 0.01, "{method:?}: {}", out[1]);
+            assert_eq!(out[1], -out[2]);
+            assert!(out[5] > 0.9999);
+        }
+    }
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        assert_eq!(GraphBackend::artifact_name(MethodId::Pwl, 1024), "tanh_pwl_1024");
+        assert_eq!(
+            GraphBackend::artifact_name(MethodId::CatmullRom, 1024),
+            "tanh_catmull_rom_1024"
+        );
+    }
+}

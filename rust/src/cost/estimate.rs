@@ -1,0 +1,128 @@
+//! Pricing an [`Inventory`](super::Inventory) into area / delay /
+//! latency — the quantitative form of the paper's §IV.H assessment.
+
+use super::{Inventory, UnitLibrary};
+
+/// Priced hardware cost for one tanh unit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostEstimate {
+    /// Total NAND2-equivalent area.
+    pub area_ge: f64,
+    /// Area of LUT storage alone (the paper's scaling concern).
+    pub lut_area_ge: f64,
+    /// Critical combinational-path delay per pipeline stage, FO4 units —
+    /// the reciprocal of achievable frequency.
+    pub stage_delay_fo4: f64,
+    /// Latency in cycles (pipeline depth).
+    pub latency_cycles: u32,
+    /// Throughput in results per cycle (1 for all pipelined designs).
+    pub throughput_per_cycle: f64,
+}
+
+impl CostEstimate {
+    /// Area-delay product — the figure of merit used for Pareto ranking.
+    pub fn area_delay(&self) -> f64 {
+        self.area_ge * self.stage_delay_fo4
+    }
+}
+
+/// Prices inventories with a given unit library.
+#[derive(Clone, Debug, Default)]
+pub struct CostModel {
+    /// The unit library in effect.
+    pub lib: UnitLibrary,
+}
+
+impl CostModel {
+    /// Builds a model with the default (textbook) library.
+    pub fn new() -> CostModel {
+        CostModel::default()
+    }
+
+    /// Prices one inventory.
+    pub fn price(&self, inv: &Inventory) -> CostEstimate {
+        let lib = &self.lib;
+        let mw = inv.mult_width.max(16);
+        let aw = inv.add_width.max(16);
+        let lut_area = lib.lut_ge_per_bit * inv.lut_bits as f64;
+        let area = inv.adders as f64 * lib.adder_area(aw)
+            + inv.multipliers as f64 * lib.mult_area(mw)
+            + inv.squarers as f64 * lib.squarer_area(mw)
+            + inv.dividers as f64 * lib.divider_area(mw)
+            + lut_area
+            + inv.mux2 as f64 * lib.mux2_ge_per_bit * mw as f64
+            + inv.mux4 as f64 * lib.mux4_ge_per_bit * mw as f64
+            + inv.pipeline_stages as f64 * lib.reg_ge_per_bit * aw as f64;
+        // Stage delay: the slowest single block on the path (pipelined
+        // designs register between blocks). LUT fetch, multiplier, adder.
+        let mut stage = lib.adder_delay(aw);
+        if inv.multipliers + inv.squarers + inv.dividers > 0 {
+            stage = stage.max(lib.mult_delay(mw));
+        }
+        if inv.lut_entries > 0 {
+            stage = stage.max(lib.lut_delay(inv.lut_entries));
+        }
+        let latency = inv.pipeline_stages.max(1)
+            + inv.dividers * 0; // divider stages already folded into pipeline_stages
+        CostEstimate {
+            area_ge: area,
+            lut_area_ge: lut_area,
+            stage_delay_fo4: stage,
+            latency_cycles: latency,
+            throughput_per_cycle: 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{table1_suite, IoSpec, MethodId};
+
+    #[test]
+    fn paper_iv_h_orderings_hold() {
+        // Quantitative form of the paper's assessment:
+        //  - PWL has the largest LUT area of the polynomial methods;
+        //  - rational methods (D, E) have higher latency than polynomial;
+        //  - Taylor-quadratic LUT is smaller than PWL's.
+        let io = IoSpec::table1();
+        let model = CostModel::new();
+        let mut by_id = std::collections::HashMap::new();
+        for m in table1_suite() {
+            by_id.insert(m.id(), model.price(&m.inventory(io)));
+        }
+        let pwl = &by_id[&MethodId::Pwl];
+        let b1 = &by_id[&MethodId::TaylorQuadratic];
+        let b2 = &by_id[&MethodId::TaylorCubic];
+        let cr = &by_id[&MethodId::CatmullRom];
+        let vf = &by_id[&MethodId::Velocity];
+        let lam = &by_id[&MethodId::Lambert];
+
+        assert!(pwl.lut_area_ge > b1.lut_area_ge, "PWL LUT > Taylor LUT");
+        assert!(pwl.lut_area_ge > b2.lut_area_ge);
+        assert!(pwl.lut_area_ge > cr.lut_area_ge);
+        assert!(vf.latency_cycles > pwl.latency_cycles, "rational latency higher");
+        assert!(lam.latency_cycles > b1.latency_cycles);
+        // Rational methods burn more total area (wide multipliers + divider).
+        assert!(lam.area_ge > b1.area_ge, "Lambert area > Taylor area");
+        assert!(vf.area_ge > b1.area_ge);
+    }
+
+    #[test]
+    fn price_is_monotone_in_components() {
+        let model = CostModel::new();
+        let base = Inventory { adders: 1, mult_width: 16, add_width: 16, pipeline_stages: 1, ..Default::default() };
+        let more = Inventory { adders: 2, multipliers: 1, ..base };
+        assert!(model.price(&more).area_ge > model.price(&base).area_ge);
+    }
+
+    #[test]
+    fn area_delay_product_positive() {
+        let model = CostModel::new();
+        for m in table1_suite() {
+            let c = model.price(&m.inventory(IoSpec::table1()));
+            assert!(c.area_delay() > 0.0, "{}", m.describe());
+            assert!(c.latency_cycles >= 1);
+        }
+    }
+}

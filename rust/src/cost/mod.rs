@@ -1,0 +1,79 @@
+//! Hardware cost model — reproduces the paper's §IV design-complexity
+//! analysis.
+//!
+//! Each approximation reports an [`Inventory`] of datapath components
+//! (the paper counts adders, multipliers, LUT entries, multiplexers and
+//! dividers); [`UnitLibrary`] prices those into gate-equivalent area and
+//! critical-path delay so the §IV.H qualitative ranking becomes a
+//! quantitative table. The unit library is a standard-cell-flavoured
+//! model (ripple/booth multiplier gate counts), not a signoff flow — see
+//! DESIGN.md §3 for the substitution rationale.
+
+mod estimate;
+mod unit_library;
+
+pub use estimate::{CostEstimate, CostModel};
+pub use unit_library::UnitLibrary;
+
+/// Datapath component inventory for one tanh unit (paper §IV).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Inventory {
+    /// Two-operand adders/subtractors.
+    pub adders: u32,
+    /// General multipliers (width × width).
+    pub multipliers: u32,
+    /// Squaring units (≈ half a multiplier in area).
+    pub squarers: u32,
+    /// Newton-Raphson reciprocal dividers (each ≈ `nr_iters` multiplier
+    /// stages + control).
+    pub dividers: u32,
+    /// Total LUT entries across all tables.
+    pub lut_entries: u32,
+    /// Total LUT storage in bits.
+    pub lut_bits: u32,
+    /// 2-to-1 multiplexers (velocity-factor selection network).
+    pub mux2: u32,
+    /// 4-to-1 multiplexers (Table II multi-bit lookup optimization).
+    pub mux4: u32,
+    /// Operand width in bits of the widest multiplier.
+    pub mult_width: u32,
+    /// Adder operand width in bits.
+    pub add_width: u32,
+    /// Pipeline depth in stages (latency in cycles at full throughput).
+    pub pipeline_stages: u32,
+}
+
+impl Inventory {
+    /// Component-wise sum (for composite datapaths).
+    pub fn plus(mut self, other: Inventory) -> Inventory {
+        self.adders += other.adders;
+        self.multipliers += other.multipliers;
+        self.squarers += other.squarers;
+        self.dividers += other.dividers;
+        self.lut_entries += other.lut_entries;
+        self.lut_bits += other.lut_bits;
+        self.mux2 += other.mux2;
+        self.mux4 += other.mux4;
+        self.mult_width = self.mult_width.max(other.mult_width);
+        self.add_width = self.add_width.max(other.add_width);
+        self.pipeline_stages += other.pipeline_stages;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plus_sums_counts_and_maxes_widths() {
+        let a = Inventory { adders: 2, multipliers: 1, mult_width: 16, pipeline_stages: 2, ..Default::default() };
+        let b = Inventory { adders: 1, dividers: 1, mult_width: 32, pipeline_stages: 3, ..Default::default() };
+        let c = a.plus(b);
+        assert_eq!(c.adders, 3);
+        assert_eq!(c.multipliers, 1);
+        assert_eq!(c.dividers, 1);
+        assert_eq!(c.mult_width, 32);
+        assert_eq!(c.pipeline_stages, 5);
+    }
+}

@@ -1,0 +1,142 @@
+//! Standard-cell-flavoured unit cost library.
+//!
+//! The paper reports complexity in component counts and qualitative
+//! area/frequency statements; to turn those into comparable numbers the
+//! library prices each component in NAND2-equivalent gate area (GE) and
+//! FO4-normalized delay, using the classic textbook figures for
+//! ripple-carry adders, Wallace/Booth array multipliers, and mux trees.
+//! Absolute values are not meant to match any particular node — ratios
+//! and orderings are what the reproduction checks (DESIGN.md §3).
+
+/// Unit cost parameters (NAND2-equivalent gate counts / FO4 delays).
+#[derive(Clone, Debug)]
+pub struct UnitLibrary {
+    /// GE per full-adder bit (carry-lookahead amortized).
+    pub adder_ge_per_bit: f64,
+    /// GE per multiplier bit² (array multiplier ≈ 1 FA per bit pair).
+    pub mult_ge_per_bit2: f64,
+    /// Squarer discount vs general multiplier (symmetry halves the array).
+    pub squarer_factor: f64,
+    /// GE per stored LUT bit (hardwired bitmapping logic, §IV.B).
+    pub lut_ge_per_bit: f64,
+    /// GE per 2-to-1 mux per bit.
+    pub mux2_ge_per_bit: f64,
+    /// GE per 4-to-1 mux per bit.
+    pub mux4_ge_per_bit: f64,
+    /// GE per pipeline register bit.
+    pub reg_ge_per_bit: f64,
+    /// FO4 delay of an n-bit adder: `adder_delay_base + log2(n)·adder_delay_log`.
+    pub adder_delay_base: f64,
+    /// Log coefficient of adder delay.
+    pub adder_delay_log: f64,
+    /// FO4 delay of an n-bit multiplier: `mult_delay_base + log2(n)·mult_delay_log`.
+    pub mult_delay_base: f64,
+    /// Log coefficient of multiplier delay.
+    pub mult_delay_log: f64,
+    /// FO4 delay of a LUT with n entries: `log2(n)·lut_delay_log` (mux tree).
+    pub lut_delay_log: f64,
+    /// Newton-Raphson divider: iterations modeled as `2·iters` dependent
+    /// multiplies; this is the iteration count.
+    pub nr_iterations: u32,
+}
+
+impl Default for UnitLibrary {
+    fn default() -> Self {
+        UnitLibrary {
+            adder_ge_per_bit: 3.0,
+            mult_ge_per_bit2: 1.2,
+            squarer_factor: 0.55,
+            lut_ge_per_bit: 0.35,
+            mux2_ge_per_bit: 1.6,
+            mux4_ge_per_bit: 2.8,
+            reg_ge_per_bit: 4.5,
+            adder_delay_base: 4.0,
+            adder_delay_log: 2.0,
+            mult_delay_base: 8.0,
+            mult_delay_log: 3.5,
+            lut_delay_log: 1.2,
+            nr_iterations: 3,
+        }
+    }
+}
+
+impl UnitLibrary {
+    /// GE area of an n-bit adder.
+    pub fn adder_area(&self, bits: u32) -> f64 {
+        self.adder_ge_per_bit * bits as f64
+    }
+
+    /// GE area of an n×n multiplier.
+    pub fn mult_area(&self, bits: u32) -> f64 {
+        self.mult_ge_per_bit2 * (bits as f64) * (bits as f64)
+    }
+
+    /// GE area of an n-bit squarer.
+    pub fn squarer_area(&self, bits: u32) -> f64 {
+        self.squarer_factor * self.mult_area(bits)
+    }
+
+    /// GE area of an NR divider built from 2·iters multiplies worth of
+    /// hardware (iterative reuse assumed: 2 multipliers + control).
+    pub fn divider_area(&self, bits: u32) -> f64 {
+        2.0 * self.mult_area(bits) + self.adder_area(bits)
+    }
+
+    /// FO4 delay of an n-bit adder.
+    pub fn adder_delay(&self, bits: u32) -> f64 {
+        self.adder_delay_base + self.adder_delay_log * (bits.max(2) as f64).log2()
+    }
+
+    /// FO4 delay of an n×n multiplier.
+    pub fn mult_delay(&self, bits: u32) -> f64 {
+        self.mult_delay_base + self.mult_delay_log * (bits.max(2) as f64).log2()
+    }
+
+    /// FO4 delay of a LUT fetch (mux-tree depth).
+    pub fn lut_delay(&self, entries: u32) -> f64 {
+        self.lut_delay_log * (entries.max(2) as f64).log2()
+    }
+
+    /// Latency in dependent-multiply units of the NR divider.
+    pub fn divider_latency_mults(&self) -> u32 {
+        2 * self.nr_iterations + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn areas_scale_sanely() {
+        let lib = UnitLibrary::default();
+        // Multiplier grows quadratically, adder linearly.
+        assert!(lib.mult_area(32) / lib.mult_area(16) > 3.9);
+        assert!((lib.adder_area(32) / lib.adder_area(16) - 2.0).abs() < 1e-12);
+        // A 16-bit multiplier dwarfs a 16-bit adder.
+        assert!(lib.mult_area(16) > 5.0 * lib.adder_area(16));
+        // Squarer cheaper than multiplier.
+        assert!(lib.squarer_area(16) < lib.mult_area(16));
+    }
+
+    #[test]
+    fn delays_grow_with_width() {
+        let lib = UnitLibrary::default();
+        assert!(lib.mult_delay(32) > lib.mult_delay(16));
+        assert!(lib.adder_delay(32) > lib.adder_delay(16));
+        assert!(lib.lut_delay(1024) > lib.lut_delay(64));
+    }
+
+    #[test]
+    fn bigger_lut_slower_paper_claim() {
+        // §IV.B: "Increasing LUT size results in reduced operating
+        // frequency" — delay must be monotone in entries.
+        let lib = UnitLibrary::default();
+        let mut prev = 0.0;
+        for entries in [16u32, 64, 256, 1024, 4096] {
+            let d = lib.lut_delay(entries);
+            assert!(d > prev);
+            prev = d;
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Exhaustive fixed-point input grids.
+
+use crate::fixed::{Fx, QFormat};
+
+/// An exhaustive sweep specification over a fixed-point input format,
+/// optionally restricted to a symmetric range (the paper's analyses use
+/// either the full format range or ±range).
+#[derive(Clone, Copy, Debug)]
+pub struct InputGrid {
+    /// Input format.
+    pub fmt: QFormat,
+    /// Symmetric range bound: sweep |x| ≤ range (inclusive of the raws
+    /// that quantize into it). `None` sweeps the full format.
+    pub range: Option<f64>,
+}
+
+impl InputGrid {
+    /// Full-format grid.
+    pub fn full(fmt: QFormat) -> InputGrid {
+        InputGrid { fmt, range: None }
+    }
+
+    /// Grid restricted to |x| ≤ range.
+    pub fn ranged(fmt: QFormat, range: f64) -> InputGrid {
+        InputGrid { fmt, range: Some(range) }
+    }
+
+    /// The Table I grid: S3.12 over (−6, 6).
+    pub fn table1() -> InputGrid {
+        InputGrid::ranged(QFormat::S3_12, 6.0)
+    }
+
+    /// Raw bounds of the sweep (inclusive).
+    pub fn raw_bounds(&self) -> (i64, i64) {
+        match self.range {
+            None => (self.fmt.min_raw(), self.fmt.max_raw()),
+            Some(r) => {
+                let hi = ((r * (1i64 << self.fmt.frac_bits) as f64).floor() as i64)
+                    .min(self.fmt.max_raw());
+                (-hi, hi)
+            }
+        }
+    }
+
+    /// Number of grid points.
+    pub fn len(&self) -> usize {
+        let (lo, hi) = self.raw_bounds();
+        (hi - lo + 1) as usize
+    }
+
+    /// True if the grid is empty (cannot happen for valid formats).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterates every grid point.
+    pub fn iter(&self) -> impl Iterator<Item = Fx> + '_ {
+        let (lo, hi) = self.raw_bounds();
+        let fmt = self.fmt;
+        (lo..=hi).map(move |raw| Fx::from_raw(raw, fmt))
+    }
+
+    /// Iterates a strided subsample (for quick sweeps in benches).
+    pub fn iter_strided(&self, stride: usize) -> impl Iterator<Item = Fx> + '_ {
+        let (lo, hi) = self.raw_bounds();
+        let fmt = self.fmt;
+        (lo..=hi).step_by(stride.max(1)).map(move |raw| Fx::from_raw(raw, fmt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_grid_spans_pm6() {
+        let g = InputGrid::table1();
+        let (lo, hi) = g.raw_bounds();
+        assert_eq!(hi, 6 * 4096);
+        assert_eq!(lo, -6 * 4096);
+        assert_eq!(g.len(), 2 * 6 * 4096 + 1);
+    }
+
+    #[test]
+    fn full_grid_covers_format() {
+        let g = InputGrid::full(QFormat::S2_5);
+        assert_eq!(g.len(), 256);
+        let first = g.iter().next().unwrap();
+        assert_eq!(first.raw(), QFormat::S2_5.min_raw());
+    }
+
+    #[test]
+    fn ranged_grid_clamps_to_format() {
+        // range beyond the format max clamps.
+        let g = InputGrid::ranged(QFormat::S2_13, 100.0);
+        let (lo, hi) = g.raw_bounds();
+        assert_eq!(hi, QFormat::S2_13.max_raw());
+        assert_eq!(lo, -QFormat::S2_13.max_raw());
+    }
+
+    #[test]
+    fn strided_iter_subsamples() {
+        let g = InputGrid::table1();
+        let n_full = g.iter().count();
+        let n_strided = g.iter_strided(16).count();
+        assert!(n_strided <= n_full / 16 + 1);
+    }
+}

@@ -1,0 +1,179 @@
+//! Error-distribution analysis: histograms and per-region statistics.
+//!
+//! The paper's related work (Zamanlooy [5]) splits tanh into pass /
+//! processing / saturation regions; this module measures where each
+//! approximation actually spends its error budget, which is what
+//! motivates the [`crate::approx::regions`] baseline and explains the
+//! Fig 2 curves (error concentrates where |f''| peaks, x ≈ 0.66).
+
+use crate::approx::reference::tanh_ref;
+use crate::approx::TanhApprox;
+use crate::fixed::QFormat;
+
+use super::InputGrid;
+
+/// Error statistics for one region of the input domain.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegionStats {
+    /// Max abs error within the region.
+    pub max_abs: f64,
+    /// RMS error within the region.
+    pub rms: f64,
+    /// Points in the region.
+    pub points: usize,
+}
+
+/// Per-region error split.
+#[derive(Clone, Debug)]
+pub struct RegionBreakdown {
+    /// |x| < pass_bound.
+    pub pass: RegionStats,
+    /// pass_bound ≤ |x| < sat_bound.
+    pub processing: RegionStats,
+    /// |x| ≥ sat_bound.
+    pub saturation: RegionStats,
+    /// The bounds used.
+    pub bounds: (f64, f64),
+}
+
+/// A log-scale error histogram: bucket i counts errors in
+/// [2^(i-shift), 2^(i-shift+1)) ulps.
+#[derive(Clone, Debug)]
+pub struct ErrorHistogram {
+    /// Bucket counts; bucket 0 is "exact (0 error)".
+    pub buckets: Vec<usize>,
+    /// Output ulp used for normalization.
+    pub ulp: f64,
+}
+
+impl ErrorHistogram {
+    /// Fraction of points with error ≤ `ulps`.
+    pub fn fraction_within(&self, ulps: f64) -> f64 {
+        let total: usize = self.buckets.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        // bucket b (≥1) spans (2^(b-2), 2^(b-1)] ulps
+        let mut acc = self.buckets[0];
+        for (b, &c) in self.buckets.iter().enumerate().skip(1) {
+            let upper = (2f64).powi(b as i32 - 1);
+            if upper <= ulps {
+                acc += c;
+            }
+        }
+        acc as f64 / total as f64
+    }
+
+    /// Renders a text bar chart.
+    pub fn render(&self) -> String {
+        let total: usize = self.buckets.iter().sum::<usize>().max(1);
+        let mut out = String::new();
+        for (b, &c) in self.buckets.iter().enumerate() {
+            let label = if b == 0 {
+                "exact    ".to_string()
+            } else {
+                format!("≤{:>5.2} ulp", (2f64).powi(b as i32 - 1))
+            };
+            let bar = "#".repeat((60 * c / total).max(usize::from(c > 0)));
+            out.push_str(&format!("{label} {c:>7} {bar}\n"));
+        }
+        out
+    }
+}
+
+/// Computes the log-ulp error histogram of a method over a grid.
+pub fn histogram(m: &dyn TanhApprox, grid: InputGrid, out: QFormat) -> ErrorHistogram {
+    let ulp = out.ulp();
+    let mut buckets = vec![0usize; 12];
+    for x in grid.iter() {
+        let y = m.eval_fx(x, out);
+        let err = (y.to_f64() - tanh_ref(x.to_f64())).abs() / ulp;
+        let b = if err == 0.0 {
+            0
+        } else {
+            // err in (2^(b-2), 2^(b-1)] → bucket b
+            (err.log2().floor() as i32 + 2).clamp(1, buckets.len() as i32 - 1) as usize
+        };
+        buckets[b] += 1;
+    }
+    ErrorHistogram { buckets, ulp }
+}
+
+/// Splits error stats into the three Zamanlooy-style regions.
+pub fn region_breakdown(
+    m: &dyn TanhApprox,
+    grid: InputGrid,
+    out: QFormat,
+    pass_bound: f64,
+    sat_bound: f64,
+) -> RegionBreakdown {
+    let mut acc = [(0f64, 0f64, 0usize); 3];
+    for x in grid.iter() {
+        let v = x.to_f64().abs();
+        let idx = if v < pass_bound {
+            0
+        } else if v < sat_bound {
+            1
+        } else {
+            2
+        };
+        let y = m.eval_fx(x, out);
+        let err = y.to_f64() - tanh_ref(x.to_f64());
+        acc[idx].0 = acc[idx].0.max(err.abs());
+        acc[idx].1 += err * err;
+        acc[idx].2 += 1;
+    }
+    let stats = |(max_abs, sq, n): (f64, f64, usize)| RegionStats {
+        max_abs,
+        rms: (sq / n.max(1) as f64).sqrt(),
+        points: n,
+    };
+    RegionBreakdown {
+        pass: stats(acc[0]),
+        processing: stats(acc[1]),
+        saturation: stats(acc[2]),
+        bounds: (pass_bound, sat_bound),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::pwl::Pwl;
+
+    #[test]
+    fn histogram_covers_all_points() {
+        let m = Pwl::table1();
+        let grid = InputGrid::table1();
+        let h = histogram(&m, grid, QFormat::S_15);
+        assert_eq!(h.buckets.iter().sum::<usize>(), grid.len());
+        // the Table I PWL config stays within 2 ulp everywhere
+        assert!(h.fraction_within(2.0) > 0.999, "{}", h.fraction_within(2.0));
+        // and the chart renders
+        assert!(h.render().contains("ulp"));
+    }
+
+    #[test]
+    fn most_error_lives_in_the_processing_region() {
+        // tanh's curvature peaks at x≈0.66: the processing region must
+        // hold the max error; the saturation region is almost exact.
+        let m = Pwl::table1();
+        let b = region_breakdown(&m, InputGrid::table1(), QFormat::S_15, 0.1, 5.2);
+        assert!(b.processing.max_abs >= b.saturation.max_abs);
+        assert!(b.processing.max_abs >= b.pass.max_abs);
+        assert!(b.saturation.max_abs < 2.0 * QFormat::S_15.ulp());
+        assert_eq!(
+            b.pass.points + b.processing.points + b.saturation.points,
+            InputGrid::table1().len()
+        );
+    }
+
+    #[test]
+    fn fraction_within_monotone() {
+        let m = Pwl::table1();
+        let h = histogram(&m, InputGrid::table1(), QFormat::S_15);
+        assert!(h.fraction_within(0.5) <= h.fraction_within(1.0));
+        assert!(h.fraction_within(1.0) <= h.fraction_within(4.0));
+        assert_eq!(h.fraction_within(1e9), 1.0);
+    }
+}

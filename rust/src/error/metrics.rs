@@ -1,0 +1,129 @@
+//! Error metrics vs the tanh reference (paper §III.C).
+
+use super::InputGrid;
+use crate::approx::reference::tanh_ref;
+use crate::approx::TanhApprox;
+use crate::fixed::QFormat;
+
+/// Error statistics of one approximation configuration over a grid.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorMetrics {
+    /// Maximum absolute error (the paper's "Max Error").
+    pub max_abs: f64,
+    /// Input value at which the maximum occurs.
+    pub argmax: f64,
+    /// True mean squared error.
+    pub mse: f64,
+    /// Root-mean-square error (what Table I's "MSE" column actually
+    /// matches — see module docs).
+    pub rms: f64,
+    /// Mean absolute error.
+    pub mean_abs: f64,
+    /// Max error expressed in output ulps.
+    pub max_ulp: f64,
+    /// Number of grid points evaluated.
+    pub points: usize,
+}
+
+/// Measures the *datapath* model (`eval_fx`) of `m` over `grid`,
+/// quantizing outputs to `out`.
+pub fn measure(m: &dyn TanhApprox, grid: InputGrid, out: QFormat) -> ErrorMetrics {
+    let mut acc = Accum::default();
+    for x in grid.iter() {
+        let y = m.eval_fx(x, out);
+        let want = tanh_ref(x.to_f64());
+        acc.push(x.to_f64(), y.to_f64() - want);
+    }
+    acc.finish(out)
+}
+
+/// Measures the f64 *math* model (`eval_f64`) over the same grid —
+/// isolates algorithmic error from quantization (used by the Fig 2
+/// discussion and the ablation benches).
+pub fn measure_f64_model(m: &dyn TanhApprox, grid: InputGrid, out: QFormat) -> ErrorMetrics {
+    let mut acc = Accum::default();
+    for x in grid.iter() {
+        let y = m.eval_f64(x.to_f64());
+        let want = tanh_ref(x.to_f64());
+        acc.push(x.to_f64(), y - want);
+    }
+    acc.finish(out)
+}
+
+#[derive(Default)]
+struct Accum {
+    max_abs: f64,
+    argmax: f64,
+    sum_sq: f64,
+    sum_abs: f64,
+    n: usize,
+}
+
+impl Accum {
+    #[inline]
+    fn push(&mut self, x: f64, err: f64) {
+        let a = err.abs();
+        if a > self.max_abs {
+            self.max_abs = a;
+            self.argmax = x;
+        }
+        self.sum_sq += err * err;
+        self.sum_abs += a;
+        self.n += 1;
+    }
+
+    fn finish(self, out: QFormat) -> ErrorMetrics {
+        let n = self.n.max(1) as f64;
+        let mse = self.sum_sq / n;
+        ErrorMetrics {
+            max_abs: self.max_abs,
+            argmax: self.argmax,
+            mse,
+            rms: mse.sqrt(),
+            mean_abs: self.sum_abs / n,
+            max_ulp: self.max_abs / out.ulp(),
+            points: self.n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::pwl::Pwl;
+    use crate::approx::table1_suite;
+
+    #[test]
+    fn rms_le_max_and_mse_is_rms_squared() {
+        let m = Pwl::table1();
+        let e = measure(&m, InputGrid::table1(), QFormat::S_15);
+        assert!(e.rms <= e.max_abs);
+        assert!((e.mse - e.rms * e.rms).abs() < 1e-20);
+        assert!(e.mean_abs <= e.rms + 1e-15); // AM-QM inequality
+        assert_eq!(e.points, InputGrid::table1().len());
+    }
+
+    #[test]
+    fn table1_all_methods_in_paper_error_band() {
+        // Table I reports max errors between 3.2e-5 and 4.9e-5 and RMS
+        // ("MSE" column) around 1e-5. Our datapaths must land in the
+        // same band: max < 1e-4, rms < 3e-5.
+        for m in table1_suite() {
+            let e = measure(m.as_ref(), InputGrid::table1(), QFormat::S_15);
+            assert!(e.max_abs < 1.0e-4, "{}: max {}", m.describe(), e.max_abs);
+            assert!(e.rms < 3.0e-5, "{}: rms {}", m.describe(), e.rms);
+            assert!(e.max_ulp < 3.5, "{}: {} ulp", m.describe(), e.max_ulp);
+        }
+    }
+
+    #[test]
+    fn math_model_error_below_datapath_error() {
+        // Quantization can only add error on top of the algorithmic one
+        // (up to one rounding quantum of slack).
+        let m = Pwl::table1();
+        let grid = InputGrid::table1();
+        let fx = measure(&m, grid, QFormat::S_15);
+        let f64m = measure_f64_model(&m, grid, QFormat::S_15);
+        assert!(f64m.max_abs <= fx.max_abs + QFormat::S_15.ulp());
+    }
+}

@@ -1,0 +1,26 @@
+//! Error-analysis engine (paper §III).
+//!
+//! Computes the paper's metrics — maximum absolute error and MSE against
+//! the f64 tanh reference — by *exhaustively* sweeping the fixed-point
+//! input grid (§III.C "the code was written in python and the maximum
+//! absolute error and mean square error (MSE) is computed"), plus the
+//! ulp-denominated variants Table III's 1-ulp search needs.
+//!
+//! Note on the paper's "MSE" column: Table I reports e.g. PWL
+//! MSE 1.24×10⁻⁵ alongside max error 4.65×10⁻⁵. A true mean-*squared*
+//! error can never exceed max_err² ≈ 2×10⁻⁹, so the column is consistent
+//! with the *root*-mean-square error instead; we therefore report both
+//! `mse` and `rms` and compare the paper's column against `rms`
+//! (EXPERIMENTS.md discusses the discrepancy).
+
+mod grid;
+pub mod histogram;
+mod metrics;
+mod sweep;
+pub mod ulp_search;
+
+pub use grid::InputGrid;
+pub use histogram::{histogram, region_breakdown, ErrorHistogram, RegionBreakdown};
+pub use metrics::{measure, measure_f64_model, ErrorMetrics};
+pub use sweep::{fig2_params, sweep_fig2, Fig2Point, Fig2Series};
+pub use ulp_search::{search_1ulp_param, table3_rows, Table3Row, Table3Spec};

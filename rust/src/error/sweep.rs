@@ -1,0 +1,109 @@
+//! Fig 2 parameter sweeps: max-abs error and MSE as a function of each
+//! method's tunable parameter (paper §III.D).
+
+use super::{measure, ErrorMetrics, InputGrid};
+use crate::approx::{build, MethodId};
+use crate::fixed::QFormat;
+
+/// One point of a Fig 2 panel.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig2Point {
+    /// The method's tunable parameter (step / threshold / K).
+    pub param: f64,
+    /// Measured error metrics at this parameter.
+    pub metrics: ErrorMetrics,
+}
+
+/// One Fig 2 panel: a method's error-vs-parameter curve.
+#[derive(Clone, Debug)]
+pub struct Fig2Series {
+    /// Which method.
+    pub id: MethodId,
+    /// Axis label for the parameter (paper uses "step size", "threshold",
+    /// "number of fractions").
+    pub param_name: &'static str,
+    /// Curve points, ordered as swept.
+    pub points: Vec<Fig2Point>,
+}
+
+/// The parameter grids the paper's Fig 2 panels sweep: step sizes (or
+/// thresholds) 1/8 … 1/256 for A–D, fraction counts 2…10 for E.
+pub fn fig2_params(id: MethodId) -> (&'static str, Vec<f64>) {
+    match id {
+        MethodId::Pwl | MethodId::CatmullRom => (
+            "step size",
+            vec![1.0 / 8.0, 1.0 / 16.0, 1.0 / 32.0, 1.0 / 64.0, 1.0 / 128.0, 1.0 / 256.0],
+        ),
+        MethodId::TaylorQuadratic | MethodId::TaylorCubic => (
+            "step size",
+            vec![1.0 / 4.0, 1.0 / 8.0, 1.0 / 16.0, 1.0 / 32.0, 1.0 / 64.0],
+        ),
+        MethodId::Velocity => (
+            "threshold",
+            vec![1.0 / 16.0, 1.0 / 32.0, 1.0 / 64.0, 1.0 / 128.0, 1.0 / 256.0, 1.0 / 512.0],
+        ),
+        MethodId::Lambert => ("number of fractions", (2..=10).map(|k| k as f64).collect()),
+    }
+}
+
+/// Sweeps one method's Fig 2 panel over the given grid/output format.
+pub fn sweep_fig2(id: MethodId, grid: InputGrid, out: QFormat) -> Fig2Series {
+    let (param_name, params) = fig2_params(id);
+    let domain = grid.range.unwrap_or(grid.fmt.max_value());
+    let points = params
+        .into_iter()
+        .map(|param| {
+            let m = build(id, param, domain);
+            Fig2Point { param, metrics: measure(m.as_ref(), grid, out) }
+        })
+        .collect();
+    Fig2Series { id, param_name, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_grid() -> InputGrid {
+        // Strided-equivalent small grid: 8-bit-ish resolution keeps the
+        // sweep tests fast while preserving orderings.
+        InputGrid::ranged(QFormat::new(3, 8), 6.0)
+    }
+
+    #[test]
+    fn error_decreases_with_finer_step_pwl() {
+        let s = sweep_fig2(MethodId::Pwl, quick_grid(), QFormat::S_15);
+        // max error must be non-increasing as the step shrinks (up to the
+        // quantization floor — allow a 1.5 ulp slack band).
+        let slack = 1.5 * QFormat::S_15.ulp();
+        for w in s.points.windows(2) {
+            assert!(
+                w[1].metrics.max_abs <= w[0].metrics.max_abs + slack,
+                "step {} -> {}: {} -> {}",
+                w[0].param,
+                w[1].param,
+                w[0].metrics.max_abs,
+                w[1].metrics.max_abs
+            );
+        }
+        // And strictly improves from the coarsest to the finest point.
+        assert!(s.points.last().unwrap().metrics.max_abs < s.points[0].metrics.max_abs / 4.0);
+    }
+
+    #[test]
+    fn error_decreases_with_terms_lambert() {
+        let s = sweep_fig2(MethodId::Lambert, quick_grid(), QFormat::S_15);
+        let first = s.points.first().unwrap().metrics.max_abs;
+        let last = s.points.last().unwrap().metrics.max_abs;
+        assert!(last < first / 10.0, "K=2: {first} vs K=10: {last}");
+    }
+
+    #[test]
+    fn all_panels_have_points() {
+        for id in MethodId::all() {
+            let s = sweep_fig2(id, quick_grid(), QFormat::S_15);
+            assert!(s.points.len() >= 5, "{:?}", id);
+            assert!(!s.param_name.is_empty());
+        }
+    }
+}

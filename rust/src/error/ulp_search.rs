@@ -1,0 +1,113 @@
+//! Table III: the coarsest (cheapest) parameter per method that keeps
+//! the maximum error within 1 output ulp, across I/O formats and ranges
+//! (paper §IV.G "Tolerance to precision and input range").
+
+use super::{measure, InputGrid};
+use crate::approx::{build, MethodId};
+use crate::fixed::QFormat;
+
+/// One Table III row specification: I/O formats and the input range.
+#[derive(Clone, Copy, Debug)]
+pub struct Table3Spec {
+    /// Input fixed-point format.
+    pub input: QFormat,
+    /// Output fixed-point format.
+    pub output: QFormat,
+    /// Symmetric input range bound.
+    pub range: f64,
+}
+
+/// The paper's four Table III rows.
+pub fn table3_rows() -> Vec<Table3Spec> {
+    vec![
+        Table3Spec { input: QFormat::S2_13, output: QFormat::S2_13, range: 4.0 },
+        Table3Spec { input: QFormat::S2_13, output: QFormat::S_15, range: 4.0 },
+        Table3Spec { input: QFormat::S3_12, output: QFormat::S_15, range: 6.0 },
+        Table3Spec { input: QFormat::S2_5, output: QFormat::S_7, range: 4.0 },
+    ]
+}
+
+/// A computed Table III row: per-method cheapest parameter meeting the
+/// 1-ulp target (`None` if no candidate parameter achieves it).
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    /// The row spec.
+    pub spec: Table3Spec,
+    /// Cheapest passing parameter per method, in `MethodId::all()` order.
+    pub params: [Option<f64>; 6],
+}
+
+/// Candidate parameters from cheapest to most precise for a method,
+/// bounded by what the input format can address (a step of 2^-k needs
+/// k ≤ frac_bits).
+fn candidates(id: MethodId, input: QFormat) -> Vec<f64> {
+    match id {
+        MethodId::Lambert => (1..=14).map(|k| k as f64).collect(),
+        _ => (1..=input.frac_bits)
+            .map(|k| (2f64).powi(-(k as i32)))
+            .collect(),
+    }
+}
+
+/// Finds the cheapest parameter of `id` whose exhaustive max error is
+/// ≤ `ulp_budget` output ulps for the given spec.
+pub fn search_1ulp_param(id: MethodId, spec: Table3Spec, ulp_budget: f64) -> Option<f64> {
+    let grid = InputGrid::ranged(spec.input, spec.range);
+    for param in candidates(id, spec.input) {
+        let m = build(id, param, spec.range);
+        let e = measure(m.as_ref(), grid, spec.output);
+        if e.max_ulp <= ulp_budget {
+            return Some(param);
+        }
+    }
+    None
+}
+
+/// Computes a full Table III row.
+pub fn compute_table3_row(spec: Table3Spec, ulp_budget: f64) -> Table3Row {
+    let mut params = [None; 6];
+    for (i, id) in MethodId::all().into_iter().enumerate() {
+        params[i] = search_1ulp_param(id, spec, ulp_budget);
+    }
+    Table3Row { spec, params }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_bit_row_is_cheap() {
+        // Paper Table III row 4 (S2.5 → S.7, ±4): coarse parameters
+        // (1/8-ish steps) already reach 1 ulp of a 7-bit output.
+        let spec = Table3Spec { input: QFormat::S2_5, output: QFormat::S_7, range: 4.0 };
+        let p = search_1ulp_param(MethodId::Pwl, spec, 1.0).expect("PWL must pass");
+        assert!(p >= 1.0 / 32.0, "paper: 1/8, got {p}");
+        let k = search_1ulp_param(MethodId::Lambert, spec, 1.0).expect("Lambert must pass");
+        assert!(k <= 6.0, "paper: 4 terms, got {k}");
+    }
+
+    #[test]
+    fn sixteen_bit_rows_need_finer_params() {
+        // Row 2 targets a 15-bit output: every polynomial method needs a
+        // much finer step than the 8-bit row.
+        let spec8 = Table3Spec { input: QFormat::S2_5, output: QFormat::S_7, range: 4.0 };
+        let spec16 = Table3Spec { input: QFormat::S2_13, output: QFormat::S_15, range: 4.0 };
+        for id in [MethodId::Pwl, MethodId::CatmullRom] {
+            let p8 = search_1ulp_param(id, spec8, 1.0).unwrap();
+            let p16 = search_1ulp_param(id, spec16, 1.0).unwrap_or(0.0);
+            assert!(p16 < p8, "{id:?}: 16-bit param {p16} not finer than 8-bit {p8}");
+        }
+    }
+
+    #[test]
+    fn taylor_cubic_passes_with_coarser_step_than_quadratic() {
+        // Paper rows 1-3: B2's step (1/16) is coarser than B1's (1/32).
+        let spec = Table3Spec { input: QFormat::S2_13, output: QFormat::S2_13, range: 4.0 };
+        let b1 = search_1ulp_param(MethodId::TaylorQuadratic, spec, 1.0);
+        let b2 = search_1ulp_param(MethodId::TaylorCubic, spec, 1.0);
+        if let (Some(b1), Some(b2)) = (b1, b2) {
+            assert!(b2 >= b1, "B2 {b2} should be ≥ B1 {b1}");
+        }
+    }
+}

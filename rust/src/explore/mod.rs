@@ -1,0 +1,10 @@
+//! Design-space exploration: the quantitative version of the paper's
+//! §IV.H assessment. Sweeps (method × parameter), measures error,
+//! prices hardware, and extracts the Pareto frontier over
+//! (max error, area, latency).
+
+mod pareto;
+mod space;
+
+pub use pareto::{pareto_frontier, DesignPoint};
+pub use space::{explore, ExploreConfig};

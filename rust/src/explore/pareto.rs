@@ -1,0 +1,86 @@
+//! Pareto frontier over (error, area, latency).
+
+use crate::approx::MethodId;
+
+/// One evaluated design: a (method, parameter) configuration with its
+/// measured error and priced hardware cost.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// Method.
+    pub id: MethodId,
+    /// Tunable parameter (step/threshold/K).
+    pub param: f64,
+    /// Exhaustive max abs error on the analysis grid.
+    pub max_err: f64,
+    /// RMS error.
+    pub rms: f64,
+    /// Priced area in gate equivalents.
+    pub area_ge: f64,
+    /// Pipeline latency in cycles.
+    pub latency_cycles: u32,
+    /// Critical stage delay (FO4) — reciprocal of frequency.
+    pub stage_delay_fo4: f64,
+}
+
+impl DesignPoint {
+    /// True if `self` dominates `other` (≤ in every objective, < in one).
+    pub fn dominates(&self, other: &DesignPoint) -> bool {
+        let le = self.max_err <= other.max_err
+            && self.area_ge <= other.area_ge
+            && self.latency_cycles <= other.latency_cycles;
+        let lt = self.max_err < other.max_err
+            || self.area_ge < other.area_ge
+            || self.latency_cycles < other.latency_cycles;
+        le && lt
+    }
+}
+
+/// Extracts the non-dominated subset, sorted by error.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    let mut frontier: Vec<DesignPoint> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+    frontier.sort_by(|a, b| a.max_err.partial_cmp(&b.max_err).unwrap());
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(err: f64, area: f64, lat: u32) -> DesignPoint {
+        DesignPoint {
+            id: MethodId::Pwl,
+            param: 0.0,
+            max_err: err,
+            rms: err / 3.0,
+            area_ge: area,
+            latency_cycles: lat,
+            stage_delay_fo4: 10.0,
+        }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let points = vec![
+            pt(1e-5, 100.0, 5),
+            pt(1e-5, 200.0, 5), // dominated (more area, same rest)
+            pt(1e-4, 50.0, 5),  // frontier (cheaper)
+            pt(1e-6, 500.0, 10), // frontier (more accurate)
+        ];
+        let f = pareto_frontier(&points);
+        assert_eq!(f.len(), 3);
+        assert!(f.iter().all(|p| p.area_ge != 200.0));
+        // sorted by error ascending
+        assert!(f.windows(2).all(|w| w[0].max_err <= w[1].max_err));
+    }
+
+    #[test]
+    fn identical_points_both_survive() {
+        // Neither strictly dominates the other.
+        let points = vec![pt(1e-5, 100.0, 5), pt(1e-5, 100.0, 5)];
+        assert_eq!(pareto_frontier(&points).len(), 2);
+    }
+}

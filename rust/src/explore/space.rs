@@ -1,0 +1,145 @@
+//! The sweep itself: evaluate (method × parameter) against error and
+//! hardware cost.
+
+use super::pareto::DesignPoint;
+use crate::approx::{build, IoSpec, MethodId};
+use crate::cost::CostModel;
+use crate::error::{fig2_params, measure, InputGrid};
+use crate::fixed::QFormat;
+
+/// Exploration configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreConfig {
+    /// Input grid (domain + precision).
+    pub grid: InputGrid,
+    /// Output format.
+    pub out: QFormat,
+    /// Grid stride (>1 subsamples for speed; 1 = exhaustive).
+    pub stride: usize,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig { grid: InputGrid::table1(), out: QFormat::S_15, stride: 1 }
+    }
+}
+
+/// Sweeps every method over its Fig 2 parameter range, measuring error
+/// and pricing the inventory.
+pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
+    let io = IoSpec { input: cfg.grid.fmt, output: cfg.out };
+    let model = CostModel::new();
+    let domain = cfg.grid.range.unwrap_or(cfg.grid.fmt.max_value());
+    let mut points = Vec::new();
+    for id in MethodId::all() {
+        let (_, params) = fig2_params(id);
+        for param in params {
+            let m = build(id, param, domain);
+            let e = if cfg.stride <= 1 {
+                measure(m.as_ref(), cfg.grid, cfg.out)
+            } else {
+                measure_strided(m.as_ref(), cfg, cfg.stride)
+            };
+            let inv = m.inventory(io);
+            let cost = model.price(&inv);
+            points.push(DesignPoint {
+                id,
+                param,
+                max_err: e.max_abs,
+                rms: e.rms,
+                area_ge: cost.area_ge,
+                latency_cycles: inv.pipeline_stages.max(1),
+                stage_delay_fo4: cost.stage_delay_fo4,
+            });
+        }
+    }
+    points
+}
+
+fn measure_strided(
+    m: &dyn crate::approx::TanhApprox,
+    cfg: ExploreConfig,
+    stride: usize,
+) -> crate::error::ErrorMetrics {
+    use crate::approx::reference::tanh_ref;
+    let mut max_abs: f64 = 0.0;
+    let mut argmax = 0.0;
+    let mut sum_sq = 0.0;
+    let mut sum_abs = 0.0;
+    let mut n = 0usize;
+    for x in cfg.grid.iter_strided(stride) {
+        let y = m.eval_fx(x, cfg.out);
+        let err = y.to_f64() - tanh_ref(x.to_f64());
+        let a = err.abs();
+        if a > max_abs {
+            max_abs = a;
+            argmax = x.to_f64();
+        }
+        sum_sq += err * err;
+        sum_abs += a;
+        n += 1;
+    }
+    let nf = n.max(1) as f64;
+    crate::error::ErrorMetrics {
+        max_abs,
+        argmax,
+        mse: sum_sq / nf,
+        rms: (sum_sq / nf).sqrt(),
+        mean_abs: sum_abs / nf,
+        max_ulp: max_abs / cfg.out.ulp(),
+        points: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::pareto_frontier;
+
+    fn quick_cfg() -> ExploreConfig {
+        ExploreConfig {
+            grid: InputGrid::ranged(QFormat::new(3, 8), 6.0),
+            out: QFormat::S_15,
+            stride: 1,
+        }
+    }
+
+    #[test]
+    fn explores_all_methods() {
+        let points = explore(quick_cfg());
+        assert!(points.len() >= 30);
+        for id in MethodId::all() {
+            assert!(points.iter().any(|p| p.id == id), "{id:?} missing");
+        }
+    }
+
+    #[test]
+    fn frontier_reflects_paper_iv_h() {
+        // §IV.H: "For reasonable accuracy, the polynomial approximation
+        // such as PWL and Taylor series expansion yield good results" —
+        // the low-latency end of the frontier must be polynomial, and
+        // the frontier must include at least one Taylor point.
+        let points = explore(quick_cfg());
+        let frontier = pareto_frontier(&points);
+        assert!(!frontier.is_empty());
+        let min_latency = frontier.iter().min_by_key(|p| p.latency_cycles).unwrap();
+        assert!(
+            matches!(
+                min_latency.id,
+                MethodId::Pwl | MethodId::TaylorQuadratic | MethodId::TaylorCubic
+                    | MethodId::CatmullRom
+            ),
+            "lowest-latency frontier point is {:?}",
+            min_latency.id
+        );
+    }
+
+    #[test]
+    fn strided_measure_close_to_full() {
+        let cfg = quick_cfg();
+        let m = crate::approx::pwl::Pwl::table1();
+        let full = measure(&m, cfg.grid, cfg.out);
+        let strided = measure_strided(&m, cfg, 7);
+        assert!((full.max_abs - strided.max_abs).abs() < full.max_abs * 0.5);
+    }
+}

@@ -1,0 +1,118 @@
+//! Signed Q-format descriptors.
+
+use std::fmt;
+
+/// A signed fixed-point format: one sign bit, `int_bits` integer bits and
+/// `frac_bits` fractional bits, two's complement, total width
+/// `1 + int_bits + frac_bits`.
+///
+/// The paper writes these as `S<int>.<frac>` — e.g. `S3.12` is a 16-bit
+/// word holding values in `[-8, 8)` with resolution `2^-12`; `S.15` is a
+/// 16-bit fraction-only word holding `[-1, 1)` with resolution `2^-15`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    /// Number of integer (magnitude) bits, excluding the sign bit.
+    pub int_bits: u32,
+    /// Number of fractional bits.
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// `S2.13`: 16-bit, range (-4, 4), resolution 2^-13 (paper Table III rows 1-2).
+    pub const S2_13: QFormat = QFormat::new(2, 13);
+    /// `S3.12`: 16-bit, range (-8, 8), resolution 2^-12 (paper Table I / §IV.A).
+    pub const S3_12: QFormat = QFormat::new(3, 12);
+    /// `S.15`: 16-bit fraction-only output format, resolution 2^-15.
+    pub const S_15: QFormat = QFormat::new(0, 15);
+    /// `S2.5`: 8-bit input format of Table III row 4.
+    pub const S2_5: QFormat = QFormat::new(2, 5);
+    /// `S.7`: 8-bit fraction-only output format of Table III row 4.
+    pub const S_7: QFormat = QFormat::new(0, 7);
+    /// `S4.11`: 16-bit wide-range format used by internal VF datapaths.
+    pub const S4_11: QFormat = QFormat::new(4, 11);
+    /// `S7.24`: 32-bit extended internal format for rational intermediates
+    /// (the paper's "larger multipliers" remark in §IV.H).
+    pub const S7_24: QFormat = QFormat::new(7, 24);
+
+    /// Builds a format with the given integer/fraction widths.
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        QFormat { int_bits, frac_bits }
+    }
+
+    /// Total word width in bits, including the sign bit.
+    pub const fn width(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable raw value: `2^(int+frac) - 1`.
+    pub const fn max_raw(&self) -> i64 {
+        (1i64 << (self.int_bits + self.frac_bits)) - 1
+    }
+
+    /// Smallest representable raw value: `-2^(int+frac)`.
+    pub const fn min_raw(&self) -> i64 {
+        -(1i64 << (self.int_bits + self.frac_bits))
+    }
+
+    /// Value of one least-significant bit, `2^-frac_bits`.
+    ///
+    /// Constructed directly from the IEEE-754 exponent bits — this is
+    /// on the `Fx::to_f64` hot path, where `powi` showed up at ~4% of
+    /// the exhaustive-sweep profile (EXPERIMENTS.md §Perf iter 4).
+    #[inline]
+    pub fn ulp(&self) -> f64 {
+        debug_assert!(self.frac_bits < 1023);
+        f64::from_bits((1023 - self.frac_bits as u64) << 52)
+    }
+
+    /// Largest representable value as f64: `2^int - 2^-frac`.
+    pub fn max_value(&self) -> f64 {
+        self.max_raw() as f64 * self.ulp()
+    }
+
+    /// Smallest representable value as f64: `-2^int`.
+    pub fn min_value(&self) -> f64 {
+        self.min_raw() as f64 * self.ulp()
+    }
+
+    /// The largest |x| for which tanh(x) is still distinguishable from the
+    /// saturated output in this output format: `atanh(1 - 2^-frac)`.
+    ///
+    /// Paper §III.A: beyond this the error of simply emitting the max
+    /// representable value is below one LSB. For S.15 this is ±5.55;
+    /// for S.7 it is ±2.77.
+    pub fn tanh_saturation_domain(&self) -> f64 {
+        let b = 1.0 - self.ulp();
+        // atanh(b) = 0.5 * ln((1+b)/(1-b))
+        0.5 * ((1.0 + b) / (1.0 - b)).ln()
+    }
+
+    /// Parses `"S3.12"` / `"s.15"`-style names.
+    pub fn parse(s: &str) -> Option<QFormat> {
+        let s = s.trim();
+        let rest = s.strip_prefix('S').or_else(|| s.strip_prefix('s'))?;
+        let (int_part, frac_part) = rest.split_once('.')?;
+        let int_bits: u32 = if int_part.is_empty() { 0 } else { int_part.parse().ok()? };
+        let frac_bits: u32 = frac_part.parse().ok()?;
+        if frac_bits == 0 || int_bits + frac_bits + 1 > 63 {
+            return None;
+        }
+        Some(QFormat::new(int_bits, frac_bits))
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.int_bits == 0 {
+            write!(f, "S.{}", self.frac_bits)
+        } else {
+            write!(f, "S{}.{}", self.int_bits, self.frac_bits)
+        }
+    }
+}
+
+impl fmt::Debug for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}

@@ -1,0 +1,30 @@
+//! Fixed-point (Q-format) arithmetic substrate.
+//!
+//! The paper's entire analysis is phrased in signed fixed-point formats:
+//! `S3.12` (1 sign + 3 integer + 12 fraction bits = 16-bit input used for
+//! Table I), `S2.13`, `S.15` (fraction-only 16-bit output), `S2.5` and
+//! `S.7` (8-bit formats of Table III). This module provides:
+//!
+//! - [`QFormat`] — a signed Q-format descriptor (integer/fraction widths),
+//! - [`Fx`] — a raw-integer fixed-point value tagged with its format,
+//! - [`Round`] — the rounding modes hardware datapaths actually use,
+//! - saturating arithmetic that models what a synthesized datapath does
+//!   on overflow (clamp to the format's min/max rather than wrap).
+//!
+//! All datapath golden models in [`crate::approx`] are built exclusively
+//! from these primitives so that the rust model, the Pallas kernel (which
+//! emulates the same ops with int32 words) and a hypothetical RTL
+//! implementation agree bit-for-bit.
+
+mod format;
+mod ops;
+mod round;
+mod value;
+
+pub use format::QFormat;
+pub use ops::{fx_add, fx_mul, fx_mul_wide, fx_sub, FxWide};
+pub use round::Round;
+pub use value::Fx;
+
+#[cfg(test)]
+mod tests;

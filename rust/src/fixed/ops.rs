@@ -1,0 +1,93 @@
+//! Saturating fixed-point arithmetic primitives.
+//!
+//! These model the arithmetic blocks a synthesized datapath is built
+//! from: same-format saturating adders and format-aware multipliers whose
+//! product is renormalized (shifted + rounded) back into a destination
+//! format. Wide intermediates use `i128` so no host-side overflow can
+//! hide a modelling bug.
+
+use super::{Fx, QFormat, Round};
+
+/// A double-width product before renormalization: `raw * 2^-frac`.
+///
+/// Exposed so datapath models can keep full precision across a
+/// multiply-accumulate chain and round exactly once — the paper's MAC
+/// blocks (Catmull-Rom §IV.D) do this.
+#[derive(Clone, Copy, Debug)]
+pub struct FxWide {
+    /// Full-precision raw value.
+    pub raw: i128,
+    /// Fractional bits of `raw`.
+    pub frac: u32,
+}
+
+impl FxWide {
+    /// Wraps an `Fx` without any precision change.
+    #[inline]
+    pub fn from_fx(v: Fx) -> FxWide {
+        FxWide { raw: v.raw() as i128, frac: v.format().frac_bits }
+    }
+
+    /// Exact wide addition; operands are aligned to the larger fraction.
+    #[inline]
+    pub fn add(self, other: FxWide) -> FxWide {
+        let frac = self.frac.max(other.frac);
+        let a = self.raw << (frac - self.frac);
+        let b = other.raw << (frac - other.frac);
+        FxWide { raw: a + b, frac }
+    }
+
+    /// Exact wide multiplication (fractions add).
+    #[inline]
+    pub fn mul(self, other: FxWide) -> FxWide {
+        FxWide { raw: self.raw * other.raw, frac: self.frac + other.frac }
+    }
+
+    /// Renormalizes into `dst`, rounding once and saturating.
+    #[inline]
+    pub fn narrow(self, dst: QFormat, round: Round) -> Fx {
+        let raw = if self.frac >= dst.frac_bits {
+            round.shift_right(self.raw, self.frac - dst.frac_bits)
+        } else {
+            self.raw << (dst.frac_bits - self.frac)
+        };
+        let raw = raw.clamp(dst.min_raw() as i128, dst.max_raw() as i128) as i64;
+        Fx::from_raw_unchecked(raw, dst)
+    }
+
+    /// Exact value as f64 (may lose precision past 2^53 — fine for
+    /// debugging, never used in the datapath).
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 * (2f64).powi(-(self.frac as i32))
+    }
+}
+
+/// Saturating same-format addition: the paper's "adder" block.
+/// Operands in different formats are first aligned to `dst`.
+#[inline]
+pub fn fx_add(a: Fx, b: Fx, dst: QFormat, round: Round) -> Fx {
+    let a = a.convert(dst, round);
+    let b = b.convert(dst, round);
+    Fx::from_raw(a.raw() + b.raw(), dst)
+}
+
+/// Saturating subtraction `a - b` into `dst`.
+#[inline]
+pub fn fx_sub(a: Fx, b: Fx, dst: QFormat, round: Round) -> Fx {
+    let a = a.convert(dst, round);
+    let b = b.convert(dst, round);
+    Fx::from_raw(a.raw() - b.raw(), dst)
+}
+
+/// Fixed-point multiplication with single renormalization into `dst`:
+/// the paper's "multiplier" block.
+#[inline]
+pub fn fx_mul(a: Fx, b: Fx, dst: QFormat, round: Round) -> Fx {
+    FxWide::from_fx(a).mul(FxWide::from_fx(b)).narrow(dst, round)
+}
+
+/// Full-precision multiplication kept wide (for MAC chains).
+#[inline]
+pub fn fx_mul_wide(a: Fx, b: Fx) -> FxWide {
+    FxWide::from_fx(a).mul(FxWide::from_fx(b))
+}

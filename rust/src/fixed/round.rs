@@ -1,0 +1,96 @@
+//! Rounding modes for fixed-point right shifts and f64 quantization.
+//!
+//! Hardware datapaths almost never round the IEEE way; the cheap options
+//! are truncation (drop LSBs — zero extra gates) and round-half-up (one
+//! adder on the guard bit). Round-to-nearest-even is what numpy uses when
+//! quantizing, so it is also provided for apples-to-apples comparisons
+//! with the python reference pipeline.
+
+/// A rounding rule applied when discarding low-order bits.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, Default)]
+pub enum Round {
+    /// Truncate toward negative infinity (arithmetic shift right).
+    /// Free in hardware; adds a -0.5ulp bias.
+    Trunc,
+    /// Round half away from zero ("add guard bit then shift").
+    /// One extra adder; what the paper's datapaths assume.
+    #[default]
+    NearestAway,
+    /// Round half to even (banker's rounding, numpy `np.round` semantics).
+    NearestEven,
+}
+
+impl Round {
+    /// Shifts `v` right by `sh` bits applying this rounding rule.
+    /// `sh == 0` returns `v` unchanged. Works on wide intermediates.
+    #[inline]
+    pub fn shift_right(self, v: i128, sh: u32) -> i128 {
+        if sh == 0 {
+            return v;
+        }
+        match self {
+            Round::Trunc => v >> sh,
+            Round::NearestAway => {
+                let half = 1i128 << (sh - 1);
+                if v >= 0 {
+                    (v + half) >> sh
+                } else {
+                    // Round half away from zero for negatives: -x.5 -> -(x+1)
+                    -(((-v) + half) >> sh)
+                }
+            }
+            Round::NearestEven => {
+                let floor = v >> sh;
+                let rem = v - (floor << sh);
+                let half = 1i128 << (sh - 1);
+                if rem > half || (rem == half && (floor & 1) == 1) {
+                    floor + 1
+                } else {
+                    floor
+                }
+            }
+        }
+    }
+
+    /// Rounds an f64 to an integer under this rule.
+    #[inline]
+    pub fn round_f64(self, v: f64) -> f64 {
+        match self {
+            Round::Trunc => v.trunc(),
+            Round::NearestAway => v.round(), // f64::round is half-away-from-zero
+            Round::NearestEven => {
+                let r = v.round();
+                if (v - v.trunc()).abs() == 0.5 {
+                    // Exactly halfway: pick the even neighbour.
+                    let f = v.floor();
+                    if (f as i64) % 2 == 0 {
+                        f
+                    } else {
+                        f + 1.0
+                    }
+                } else {
+                    r
+                }
+            }
+        }
+    }
+
+    /// Human-readable name (used by the CLI / reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Round::Trunc => "trunc",
+            Round::NearestAway => "nearest-away",
+            Round::NearestEven => "nearest-even",
+        }
+    }
+
+    /// Parses a rounding-mode name as accepted by the CLI.
+    pub fn parse(s: &str) -> Option<Round> {
+        match s {
+            "trunc" | "truncate" => Some(Round::Trunc),
+            "nearest" | "nearest-away" | "rna" => Some(Round::NearestAway),
+            "nearest-even" | "rne" => Some(Round::NearestEven),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Unit + property tests for the fixed-point substrate.
+
+use super::*;
+use crate::util::proptest::{prop_check, Prng};
+
+#[test]
+fn format_widths_match_paper() {
+    assert_eq!(QFormat::S3_12.width(), 16);
+    assert_eq!(QFormat::S2_13.width(), 16);
+    assert_eq!(QFormat::S_15.width(), 16);
+    assert_eq!(QFormat::S2_5.width(), 8);
+    assert_eq!(QFormat::S_7.width(), 8);
+}
+
+#[test]
+fn format_ranges() {
+    // S3.12 covers (-8, 8)
+    assert_eq!(QFormat::S3_12.min_value(), -8.0);
+    assert!((QFormat::S3_12.max_value() - (8.0 - 2f64.powi(-12))).abs() < 1e-15);
+    // S.15 covers (-1, 1)
+    assert_eq!(QFormat::S_15.min_value(), -1.0);
+    assert!((QFormat::S_15.max_value() - (1.0 - 2f64.powi(-15))).abs() < 1e-18);
+}
+
+#[test]
+fn saturation_domain_matches_paper_section_iii_a() {
+    // Paper §III.A: atanh(1 - 2^-b) for b = 7, 11..? It quotes
+    // ±2.77 for 8-bit, ±4.16 for 12-bit, ±5.55 for 16-bit fraction-only.
+    let d7 = QFormat::S_7.tanh_saturation_domain();
+    assert!((d7 - 2.77).abs() < 0.01, "S.7 domain {d7}");
+    let d15 = QFormat::S_15.tanh_saturation_domain();
+    assert!((d15 - 5.55).abs() < 0.01, "S.15 domain {d15}");
+    let d11 = QFormat::new(0, 11).tanh_saturation_domain();
+    assert!((d11 - 4.16).abs() < 0.01, "S.11 domain {d11}");
+}
+
+#[test]
+fn parse_roundtrip() {
+    for s in ["S3.12", "S2.13", "S.15", "S2.5", "S.7", "S4.11"] {
+        let f = QFormat::parse(s).unwrap();
+        assert_eq!(format!("{f}"), s);
+    }
+    assert!(QFormat::parse("").is_none());
+    assert!(QFormat::parse("3.12").is_none());
+    assert!(QFormat::parse("S3").is_none());
+    assert!(QFormat::parse("S3.0").is_none());
+}
+
+#[test]
+fn from_f64_quantizes_and_saturates() {
+    let f = QFormat::S_15;
+    assert_eq!(Fx::from_f64(0.0, f).raw(), 0);
+    assert_eq!(Fx::from_f64(1.0, f).raw(), f.max_raw()); // saturates: 1.0 not representable
+    assert_eq!(Fx::from_f64(-1.0, f).raw(), f.min_raw());
+    assert_eq!(Fx::from_f64(2.0, f).raw(), f.max_raw());
+    assert_eq!(Fx::from_f64(0.5, f).raw(), 1 << 14);
+}
+
+#[test]
+fn rounding_modes_on_halfway() {
+    // 2.5 ulp in S.15 context: raw 5 shifted right by 1.
+    assert_eq!(Round::Trunc.shift_right(5, 1), 2);
+    assert_eq!(Round::NearestAway.shift_right(5, 1), 3);
+    assert_eq!(Round::NearestEven.shift_right(5, 1), 2); // 2.5 -> 2 (even)
+    assert_eq!(Round::NearestEven.shift_right(7, 1), 4); // 3.5 -> 4 (even)
+    // Negative halfway
+    assert_eq!(Round::Trunc.shift_right(-5, 1), -3); // floor
+    assert_eq!(Round::NearestAway.shift_right(-5, 1), -3); // -2.5 -> -3
+    assert_eq!(Round::NearestEven.shift_right(-5, 1), -2); // -2.5 -> -2 (even)
+}
+
+#[test]
+fn convert_widening_is_exact() {
+    let x = Fx::from_f64(0.3, QFormat::S3_12);
+    let wide = x.convert(QFormat::S7_24, Round::Trunc);
+    assert_eq!(wide.to_f64(), x.to_f64());
+    // and converting back loses nothing
+    let back = wide.convert(QFormat::S3_12, Round::NearestAway);
+    assert_eq!(back.raw(), x.raw());
+}
+
+#[test]
+fn add_saturates() {
+    let f = QFormat::S_15;
+    let big = Fx::from_f64(0.9, f);
+    let s = fx_add(big, big, f, Round::NearestAway);
+    assert_eq!(s.raw(), f.max_raw());
+    let neg = Fx::from_f64(-0.9, f);
+    let s = fx_add(neg, neg, f, Round::NearestAway);
+    assert_eq!(s.raw(), f.min_raw());
+}
+
+#[test]
+fn mul_basics() {
+    let f = QFormat::S3_12;
+    let half = Fx::from_f64(0.5, f);
+    let q = fx_mul(half, half, f, Round::NearestAway);
+    assert_eq!(q.to_f64(), 0.25);
+    // sign handling
+    let q = fx_mul(half.neg(), half, f, Round::NearestAway);
+    assert_eq!(q.to_f64(), -0.25);
+}
+
+#[test]
+fn wide_mac_rounds_once() {
+    // 3-term MAC in wide precision vs naive per-step rounding:
+    // wide must equal the exact f64 computation to 1 narrow-rounding.
+    let f = QFormat::S3_12;
+    let a = Fx::from_f64(1.234, f);
+    let b = Fx::from_f64(-0.777, f);
+    let c = Fx::from_f64(0.333, f);
+    let acc = fx_mul_wide(a, b).add(FxWide::from_fx(c));
+    let exact = a.to_f64() * b.to_f64() + c.to_f64();
+    let narrowed = acc.narrow(f, Round::NearestAway);
+    assert!((narrowed.to_f64() - exact).abs() <= f.ulp() / 2.0 + 1e-15);
+}
+
+#[test]
+fn one_saturates_in_fraction_only_formats() {
+    assert_eq!(Fx::one(QFormat::S_15).raw(), QFormat::S_15.max_raw());
+    assert_eq!(Fx::one(QFormat::S3_12).to_f64(), 1.0);
+}
+
+// ---------- property tests ----------
+
+#[test]
+fn prop_quantization_error_bounded_by_half_ulp() {
+    prop_check("quantization error ≤ ulp/2", 5000, |g: &mut Prng| {
+        let f = QFormat::S3_12;
+        let v = g.f64_in(-7.9, 7.9);
+        let q = Fx::from_f64(v, f);
+        let err = (q.to_f64() - v).abs();
+        if err > f.ulp() / 2.0 + 1e-12 {
+            return Err(format!("v={v} q={} err={err}", q.to_f64()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_convert_narrow_error_bounded() {
+    prop_check("narrowing error ≤ dst ulp/2", 5000, |g: &mut Prng| {
+        let src = QFormat::S7_24;
+        let dst = QFormat::S3_12;
+        let v = g.f64_in(-7.9, 7.9);
+        let x = Fx::from_f64(v, src);
+        let y = x.convert(dst, Round::NearestAway);
+        let err = (y.to_f64() - x.to_f64()).abs();
+        if err > dst.ulp() / 2.0 + 1e-12 {
+            return Err(format!("x={} y={} err={err}", x.to_f64(), y.to_f64()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_add_matches_f64_when_in_range() {
+    prop_check("fx_add == f64 add (in range)", 5000, |g: &mut Prng| {
+        let f = QFormat::S3_12;
+        let a = Fx::from_f64(g.f64_in(-3.9, 3.9), f);
+        let b = Fx::from_f64(g.f64_in(-3.9, 3.9), f);
+        let s = fx_add(a, b, f, Round::NearestAway);
+        let exact = a.to_f64() + b.to_f64();
+        if (s.to_f64() - exact).abs() > 1e-12 {
+            return Err(format!("a={a} b={b} s={s} exact={exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mul_error_bounded_by_half_ulp() {
+    prop_check("fx_mul error ≤ ulp/2", 5000, |g: &mut Prng| {
+        let f = QFormat::S3_12;
+        let a = Fx::from_f64(g.f64_in(-2.0, 2.0), f);
+        let b = Fx::from_f64(g.f64_in(-2.0, 2.0), f);
+        let p = fx_mul(a, b, f, Round::NearestAway);
+        let exact = a.to_f64() * b.to_f64();
+        if (p.to_f64() - exact).abs() > f.ulp() / 2.0 + 1e-12 {
+            return Err(format!("a={a} b={b} p={p} exact={exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_neg_involution() {
+    prop_check("neg(neg(x)) == x except at min", 2000, |g: &mut Prng| {
+        let f = QFormat::S2_13;
+        let raw = g.i64_in(f.min_raw() + 1, f.max_raw());
+        let x = Fx::from_raw(raw, f);
+        if x.neg().neg().raw() != x.raw() {
+            return Err(format!("x={x:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_convert_roundtrip_widening() {
+    prop_check("widen->narrow is identity", 2000, |g: &mut Prng| {
+        let src = QFormat::S2_13;
+        let raw = g.i64_in(src.min_raw(), src.max_raw());
+        let x = Fx::from_raw(raw, src);
+        let rt = x.convert(QFormat::S7_24, Round::Trunc).convert(src, Round::Trunc);
+        if rt.raw() != x.raw() {
+            return Err(format!("x={x:?} rt={rt:?}"));
+        }
+        Ok(())
+    });
+}

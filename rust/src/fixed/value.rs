@@ -1,0 +1,175 @@
+//! The tagged fixed-point value type.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+use super::{QFormat, Round};
+
+/// A fixed-point value: a raw two's-complement integer `raw` interpreted
+/// as `raw * 2^-fmt.frac_bits`, saturating at the format bounds.
+///
+/// `Fx` is deliberately *not* `Copy`-generic over the format: the format
+/// travels with the value so that datapath models can't accidentally mix
+/// Q-formats without an explicit [`Fx::convert`] (exactly the bug a
+/// fixed-point RTL review is looking for).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fx {
+    raw: i64,
+    fmt: QFormat,
+}
+
+impl Fx {
+    /// Builds from a raw integer, saturating to the format's range.
+    #[inline]
+    pub fn from_raw(raw: i64, fmt: QFormat) -> Fx {
+        Fx { raw: raw.clamp(fmt.min_raw(), fmt.max_raw()), fmt }
+    }
+
+    /// Builds from a raw integer that is known to be in range.
+    ///
+    /// Debug-asserts the invariant; use [`Fx::from_raw`] when the value
+    /// may overflow (e.g. datapath adder outputs).
+    #[inline]
+    pub fn from_raw_unchecked(raw: i64, fmt: QFormat) -> Fx {
+        debug_assert!(
+            raw >= fmt.min_raw() && raw <= fmt.max_raw(),
+            "raw {raw} out of range for {fmt}"
+        );
+        Fx { raw, fmt }
+    }
+
+    /// Quantizes an f64 under the given rounding rule, saturating.
+    #[inline]
+    pub fn from_f64_round(v: f64, fmt: QFormat, round: Round) -> Fx {
+        let scaled = v * (1i64 << fmt.frac_bits) as f64;
+        let r = round.round_f64(scaled);
+        let raw = if r >= fmt.max_raw() as f64 {
+            fmt.max_raw()
+        } else if r <= fmt.min_raw() as f64 {
+            fmt.min_raw()
+        } else {
+            r as i64
+        };
+        Fx { raw, fmt }
+    }
+
+    /// Quantizes an f64 with round-to-nearest (half away from zero).
+    #[inline]
+    pub fn from_f64(v: f64, fmt: QFormat) -> Fx {
+        Fx::from_f64_round(v, fmt, Round::NearestAway)
+    }
+
+    /// Zero in the given format.
+    #[inline]
+    pub fn zero(fmt: QFormat) -> Fx {
+        Fx { raw: 0, fmt }
+    }
+
+    /// One (1.0) in the given format, saturated if 1.0 is not
+    /// representable (e.g. `S.15` tops out at `1 - 2^-15`).
+    #[inline]
+    pub fn one(fmt: QFormat) -> Fx {
+        Fx::from_raw(1i64 << fmt.frac_bits, fmt)
+    }
+
+    /// The format's largest value (`1 - 2^-b` for fraction-only formats —
+    /// the paper's saturation output).
+    #[inline]
+    pub fn max(fmt: QFormat) -> Fx {
+        Fx { raw: fmt.max_raw(), fmt }
+    }
+
+    /// The format's smallest (most negative) value.
+    #[inline]
+    pub fn min(fmt: QFormat) -> Fx {
+        Fx { raw: fmt.min_raw(), fmt }
+    }
+
+    /// The raw two's-complement integer.
+    #[inline]
+    pub fn raw(self) -> i64 {
+        self.raw
+    }
+
+    /// The format tag.
+    #[inline]
+    pub fn format(self) -> QFormat {
+        self.fmt
+    }
+
+    /// Converts to f64 exactly (every Fx is exactly representable in f64
+    /// for widths ≤ 52 bits).
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 * self.fmt.ulp()
+    }
+
+    /// Re-quantizes into another format (saturating, rounded).
+    ///
+    /// This is the "width adapter" block of a datapath: widening is exact,
+    /// narrowing rounds the dropped fraction bits with `round` and clamps
+    /// into the destination range.
+    #[inline]
+    pub fn convert(self, dst: QFormat, round: Round) -> Fx {
+        if dst == self.fmt {
+            return self;
+        }
+        let raw = if dst.frac_bits >= self.fmt.frac_bits {
+            let sh = dst.frac_bits - self.fmt.frac_bits;
+            (self.raw as i128) << sh
+        } else {
+            let sh = self.fmt.frac_bits - dst.frac_bits;
+            round.shift_right(self.raw as i128, sh)
+        };
+        let raw = raw.clamp(dst.min_raw() as i128, dst.max_raw() as i128) as i64;
+        Fx { raw, fmt: dst }
+    }
+
+    /// Negation (saturating: `-min` clamps to `max`).
+    #[inline]
+    pub fn neg(self) -> Fx {
+        Fx::from_raw(-self.raw, self.fmt)
+    }
+
+    /// Absolute value (saturating).
+    #[inline]
+    pub fn abs(self) -> Fx {
+        Fx::from_raw(self.raw.abs(), self.fmt)
+    }
+
+    /// True if the value is negative. Datapaths use this as the sign bit
+    /// to exploit tanh's odd symmetry (paper §IV: "the main algorithm can
+    /// be implemented for positive values only").
+    #[inline]
+    pub fn is_negative(self) -> bool {
+        self.raw < 0
+    }
+
+    /// One ulp of this value's format as f64.
+    #[inline]
+    pub fn ulp(self) -> f64 {
+        self.fmt.ulp()
+    }
+}
+
+impl fmt::Display for Fx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+impl fmt::Debug for Fx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Fx({} = {} {})", self.raw, self.to_f64(), self.fmt)
+    }
+}
+
+impl PartialOrd for Fx {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        if self.fmt == other.fmt {
+            self.raw.partial_cmp(&other.raw)
+        } else {
+            self.to_f64().partial_cmp(&other.to_f64())
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Pipelined datapath for the Lambert continued fraction — the paper's
+//! Fig 5 ("High level block diagram of iterative continuous fraction
+//! method"): one identical recurrence stage per fraction term feeding a
+//! final multiplier + Newton-Raphson divider. This is the structure the
+//! paper highlights as "quite suitable for pipelined implementation".
+
+use super::pipeline::{
+    passthrough_ctl, sign_merge_stage, sign_split_input, BlockKind, Pipeline, Stage,
+};
+use super::signal::{sig, SignalMap, Value};
+use crate::approx::lambert::Lambert;
+use crate::approx::newton::{finish_div, normalize_den, nr_seed, nr_step, NR_ITERS};
+use crate::approx::TanhApprox;
+use crate::fixed::{fx_mul, fx_mul_wide, Fx, QFormat, Round};
+
+/// Builds the Fig 5 pipeline:
+/// `square → cf-stage ×K → numerator → normalize → nr-seed →
+///  nr-iter ×i → finish → sign`.
+pub fn lambert_pipeline(l: Lambert, out: QFormat) -> Pipeline {
+    let domain = l.domain_max();
+    let wf = l.wide_format();
+    let w = wf.width();
+    let k_terms = l.terms();
+    let kk = 2 * k_terms as i64 + 1;
+
+    let mut stages: Vec<Stage> = Vec::new();
+
+    // x² + constant initialization (T_{-1} = 1, T_0 = 2K+1).
+    stages.push(Stage::new("square", vec![BlockKind::Square(w)], move |r| {
+        let mag = sig(r, "mag").fx();
+        let x2 = fx_mul_wide(mag, mag).narrow(wf, Round::NearestAway);
+        let mut m = SignalMap::new();
+        m.insert("x", Value::Fx(mag));
+        m.insert("x2", Value::Fx(x2));
+        m.insert("tm1", Value::Fx(Fx::one(wf)));
+        m.insert("t0", Value::Fx(Fx::from_f64(kk as f64, wf)));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+
+    // K identical recurrence stages: T_n = c_n·T_{n−1} + x²·T_{n−2}.
+    for n in 1..=k_terms {
+        let c = (kk - 2 * n as i64) as f64;
+        stages.push(Stage::new(
+            format!("cf[{n}]"),
+            vec![BlockKind::Mul(w), BlockKind::Mul(w), BlockKind::Add(w)],
+            move |r| {
+                let x2 = sig(r, "x2").fx();
+                let tm1 = sig(r, "tm1").fx();
+                let t0 = sig(r, "t0").fx();
+                let cfx = Fx::from_f64(c, wf);
+                let t = fx_mul_wide(cfx, t0)
+                    .add(fx_mul_wide(x2, tm1))
+                    .narrow(wf, Round::NearestAway);
+                let mut m = SignalMap::new();
+                m.insert("x", sig(r, "x"));
+                m.insert("x2", sig(r, "x2"));
+                m.insert("tm1", Value::Fx(t0));
+                m.insert("t0", Value::Fx(t));
+                passthrough_ctl(r, &mut m);
+                m
+            },
+        ));
+    }
+
+    // Numerator x·T_{K−1}; flag the (unreachable in-domain) T_K ≤ 0 case
+    // the golden model clamps defensively.
+    stages.push(Stage::new("numerator", vec![BlockKind::Mul(w)], move |r| {
+        let x = sig(r, "x").fx();
+        let tm1 = sig(r, "tm1").fx();
+        let t0 = sig(r, "t0").fx();
+        let mut m = SignalMap::new();
+        m.insert("num", Value::Fx(fx_mul(x, tm1, wf, Round::NearestAway)));
+        m.insert("den", Value::Fx(t0));
+        m.insert("den_bad", Value::Flag(t0.raw() <= 0));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+
+    // Divider decomposition identical to `fx_div`.
+    stages.push(Stage::new("normalize", vec![BlockKind::Shift(w)], move |r| {
+        let den = sig(r, "den").fx();
+        let bad = sig(r, "den_bad").flag();
+        let (mant, e) = if bad { (Fx::from_f64(0.5, crate::approx::newton::NR_FMT), 1) } else { normalize_den(den) };
+        let mut m = r.clone();
+        m.insert("mant", Value::Fx(mant));
+        m.insert("exp", Value::Raw(e as i64));
+        m
+    }));
+    stages.push(Stage::new("nr-seed", vec![BlockKind::Mul(32), BlockKind::Add(32)], move |r| {
+        let mut m = r.clone();
+        m.insert("recip", Value::Fx(nr_seed(sig(r, "mant").fx())));
+        m
+    }));
+    for i in 0..NR_ITERS {
+        stages.push(Stage::new(
+            format!("nr-iter{i}"),
+            vec![BlockKind::Mul(32), BlockKind::Mul(32), BlockKind::Add(32)],
+            move |r| {
+                let mut m = r.clone();
+                m.insert("recip", Value::Fx(nr_step(sig(r, "mant").fx(), sig(r, "recip").fx())));
+                m
+            },
+        ));
+    }
+    stages.push(Stage::new("finish", vec![BlockKind::Mul(w)], move |r| {
+        let bad = sig(r, "den_bad").flag();
+        let y = if bad {
+            Fx::max(out)
+        } else {
+            finish_div(sig(r, "num").fx(), sig(r, "recip").fx(), sig(r, "exp").raw() as i32, out)
+        };
+        let mut m = SignalMap::new();
+        m.insert("y", Value::Fx(y));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+    stages.push(Stage::new("sign", vec![BlockKind::Mux(out.width())], sign_merge_stage(out)));
+
+    Pipeline::new("lambert/fig5", move |x| sign_split_input(x, domain), stages, "y")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const INP: QFormat = QFormat::S3_12;
+    const OUT: QFormat = QFormat::S_15;
+
+    #[test]
+    fn lambert_pipeline_matches_golden_sampled() {
+        let golden = Lambert::table1();
+        let pipe = lambert_pipeline(golden.clone(), OUT);
+        for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(173) {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(
+                pipe.eval(x).raw(),
+                golden.eval_fx(x, OUT).raw(),
+                "raw {raw} x={}",
+                x.to_f64()
+            );
+        }
+    }
+
+    #[test]
+    fn depth_is_k_plus_divider_overhead() {
+        // square + K cf stages + numerator + (normalize, seed, iters,
+        // finish) + sign.
+        let l = Lambert::table1();
+        let k = l.terms();
+        let pipe = lambert_pipeline(l, OUT);
+        assert_eq!(pipe.latency(), 1 + k + 1 + (3 + NR_ITERS) + 1);
+    }
+
+    #[test]
+    fn scaling_k_adds_exactly_one_stage_per_term() {
+        let p5 = lambert_pipeline(Lambert::new(5, 6.0), OUT);
+        let p9 = lambert_pipeline(Lambert::new(9, 6.0), OUT);
+        assert_eq!(p9.latency() - p5.latency(), 4);
+    }
+}

@@ -1,0 +1,110 @@
+//! Cycle-level pipelined datapath simulator — the "VLSI implementation"
+//! substrate of the paper's §IV, simulating the block diagrams of Fig 3
+//! (polynomial methods), Fig 4 (velocity-factor method) and Fig 5
+//! (iterative continued fraction).
+//!
+//! Each method is lowered to a [`Pipeline`] of combinational [`Stage`]s
+//! separated by registers. The simulator:
+//!
+//! - produces **bit-exact** outputs (each stage is built from the same
+//!   [`crate::fixed`] primitives as the golden `eval_fx` models, and the
+//!   test suite asserts equality input-by-input);
+//! - accounts **latency** (pipeline depth) and **throughput** (one
+//!   result per cycle once full — the paper's §IV.H remark that rational
+//!   methods hide their latency "if many back-to-back computations [are]
+//!   required");
+//! - reports per-stage **critical-path delay** via the cost library so
+//!   the achievable frequency claim of §IV.H ("the circuit runs faster
+//!   if LUTs are used") is checkable.
+
+mod lambert_dp;
+mod pipeline;
+mod poly_dp;
+mod signal;
+mod vf_dp;
+pub mod verilog;
+
+pub use lambert_dp::lambert_pipeline;
+pub use pipeline::{Pipeline, SimResult, Stage};
+pub use poly_dp::{catmull_rom_pipeline, pwl_pipeline, taylor_pipeline};
+pub use signal::{SignalMap, Value};
+pub use vf_dp::velocity_pipeline;
+
+use crate::approx::MethodId;
+use crate::fixed::QFormat;
+
+/// Builds the pipelined datapath for any Table I configuration.
+pub fn table1_pipeline(id: MethodId, out: QFormat) -> Pipeline {
+    match id {
+        MethodId::Pwl => pwl_pipeline(crate::approx::pwl::Pwl::table1(), out),
+        MethodId::TaylorQuadratic => {
+            taylor_pipeline(crate::approx::taylor::Taylor::table1_quadratic(), out)
+        }
+        MethodId::TaylorCubic => {
+            taylor_pipeline(crate::approx::taylor::Taylor::table1_cubic(), out)
+        }
+        MethodId::CatmullRom => {
+            catmull_rom_pipeline(crate::approx::catmull_rom::CatmullRom::table1(), out)
+        }
+        MethodId::Velocity => velocity_pipeline(crate::approx::velocity::Velocity::table1(), out),
+        MethodId::Lambert => lambert_pipeline(crate::approx::lambert::Lambert::table1(), out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::table1_suite;
+    use crate::fixed::Fx;
+
+    #[test]
+    fn every_pipeline_bit_matches_golden_model() {
+        // The load-bearing test of the hw layer: the cycle-level
+        // pipeline must agree with the golden datapath model on every
+        // probed input, including negatives and the saturated region.
+        let out = QFormat::S_15;
+        let inp = QFormat::S3_12;
+        for golden in table1_suite() {
+            let pipe = table1_pipeline(golden.id(), out);
+            for raw in (-(inp.max_raw())..=inp.max_raw()).step_by(997) {
+                let x = Fx::from_raw(raw, inp);
+                let want = golden.eval_fx(x, out);
+                let got = pipe.eval(x);
+                assert_eq!(
+                    got.raw(),
+                    want.raw(),
+                    "{} at x={} ({raw}): pipeline {} vs golden {}",
+                    golden.describe(),
+                    x.to_f64(),
+                    got.to_f64(),
+                    want.to_f64()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rational_pipelines_are_deeper_than_polynomial() {
+        // §IV.H: "the area and latency is more than the polynomial
+        // implementation".
+        let out = QFormat::S_15;
+        let poly = table1_pipeline(MethodId::Pwl, out).latency();
+        let taylor = table1_pipeline(MethodId::TaylorQuadratic, out).latency();
+        let vf = table1_pipeline(MethodId::Velocity, out).latency();
+        let lam = table1_pipeline(MethodId::Lambert, out).latency();
+        assert!(vf > poly && vf > taylor, "vf {vf} poly {poly} taylor {taylor}");
+        assert!(lam > poly && lam > taylor, "lambert {lam}");
+    }
+
+    #[test]
+    fn streaming_throughput_is_one_per_cycle() {
+        // Pipelined: N inputs complete in latency + N − 1 cycles.
+        let out = QFormat::S_15;
+        let pipe = table1_pipeline(MethodId::Lambert, out);
+        let inputs: Vec<Fx> =
+            (0..64).map(|i| Fx::from_f64(i as f64 * 0.09 - 3.0, QFormat::S3_12)).collect();
+        let res = pipe.simulate(&inputs);
+        assert_eq!(res.outputs.len(), inputs.len());
+        assert_eq!(res.cycles, pipe.latency() + inputs.len() - 1);
+    }
+}

@@ -1,0 +1,261 @@
+//! The pipeline model: stages, registers, cycle-accurate streaming.
+
+use super::signal::{sig, SignalMap, Value};
+use crate::cost::UnitLibrary;
+use crate::fixed::Fx;
+
+/// Combinational blocks a stage may contain, for delay/area accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockKind {
+    /// LUT fetch with the given entry count.
+    Lut(u32),
+    /// Adder of the given width.
+    Add(u32),
+    /// Multiplier of the given operand width.
+    Mul(u32),
+    /// Squarer of the given operand width.
+    Square(u32),
+    /// 2:1 or 4:1 mux network (width).
+    Mux(u32),
+    /// Barrel shifter / leading-zero count (width).
+    Shift(u32),
+}
+
+/// One pipeline stage: a named combinational function between registers.
+pub struct Stage {
+    /// Stage name (shows up in traces and delay reports).
+    pub name: String,
+    /// Blocks on this stage's combinational path (delay = max of blocks
+    /// in parallel branches is approximated by the max block delay; the
+    /// dominant block model matches how the paper discusses frequency).
+    pub blocks: Vec<BlockKind>,
+    /// The combinational function.
+    pub f: Box<dyn Fn(&SignalMap) -> SignalMap + Send + Sync>,
+}
+
+impl Stage {
+    /// Builds a stage.
+    pub fn new(
+        name: impl Into<String>,
+        blocks: Vec<BlockKind>,
+        f: impl Fn(&SignalMap) -> SignalMap + Send + Sync + 'static,
+    ) -> Stage {
+        Stage { name: name.into(), blocks, f: Box::new(f) }
+    }
+
+    /// Critical delay of this stage under a unit library (FO4).
+    pub fn delay(&self, lib: &UnitLibrary) -> f64 {
+        self.blocks
+            .iter()
+            .map(|b| match *b {
+                BlockKind::Lut(entries) => lib.lut_delay(entries),
+                BlockKind::Add(w) => lib.adder_delay(w),
+                BlockKind::Mul(w) => lib.mult_delay(w),
+                BlockKind::Square(w) => lib.mult_delay(w) * 0.8,
+                BlockKind::Mux(w) => lib.mux2_ge_per_bit.log2().max(1.0) + (w as f64).log2() * 0.1,
+                BlockKind::Shift(w) => 1.0 + (w.max(2) as f64).log2(),
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Result of streaming a batch through the pipeline.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// One output per input, in order.
+    pub outputs: Vec<Fx>,
+    /// Total cycles from first issue to last retire.
+    pub cycles: usize,
+    /// Peak number of in-flight items (== pipeline depth when saturated).
+    pub peak_in_flight: usize,
+}
+
+/// A pipelined datapath: input adapter → stages → output extractor.
+pub struct Pipeline {
+    /// Descriptive name, e.g. `pwl/fig3`.
+    pub name: String,
+    stages: Vec<Stage>,
+    /// Injects the scalar input into the first register bank.
+    input: Box<dyn Fn(Fx) -> SignalMap + Send + Sync>,
+    /// Extracts the scalar result from the last register bank.
+    output: &'static str,
+}
+
+impl Pipeline {
+    /// Builds a pipeline from stages plus input/output adapters.
+    pub fn new(
+        name: impl Into<String>,
+        input: impl Fn(Fx) -> SignalMap + Send + Sync + 'static,
+        stages: Vec<Stage>,
+        output: &'static str,
+    ) -> Pipeline {
+        assert!(!stages.is_empty());
+        Pipeline { name: name.into(), stages, input: Box::new(input), output }
+    }
+
+    /// Pipeline depth in cycles.
+    pub fn latency(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Stage names (for reports).
+    pub fn stage_names(&self) -> Vec<&str> {
+        self.stages.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Per-stage delays under a unit library; the max is the critical
+    /// path that sets the clock.
+    pub fn stage_delays(&self, lib: &UnitLibrary) -> Vec<f64> {
+        self.stages.iter().map(|s| s.delay(lib)).collect()
+    }
+
+    /// Critical-path delay (FO4) = slowest stage.
+    pub fn critical_delay(&self, lib: &UnitLibrary) -> f64 {
+        self.stage_delays(lib).into_iter().fold(0.0, f64::max)
+    }
+
+    /// Single-value evaluation (runs the data through all stages).
+    pub fn eval(&self, x: Fx) -> Fx {
+        let mut regs = (self.input)(x);
+        for stage in &self.stages {
+            regs = (stage.f)(&regs);
+        }
+        sig(&regs, self.output).fx()
+    }
+
+    /// Cycle-accurate streaming simulation: one new input issued per
+    /// cycle, every in-flight item advances one stage per cycle.
+    pub fn simulate(&self, inputs: &[Fx]) -> SimResult {
+        let depth = self.stages.len();
+        // slots[i] = register bank feeding stage i; during a cycle every
+        // stage computes from its input register and latches into the
+        // next register at the cycle edge (item issued in cycle c retires
+        // at the end of cycle c + depth − 1).
+        let mut slots: Vec<Option<SignalMap>> = vec![None; depth];
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut next_in = 0usize;
+        let mut cycles = 0usize;
+        let mut peak = 0usize;
+        while outputs.len() < inputs.len() {
+            // Issue this cycle's input into stage 0's register.
+            if next_in < inputs.len() {
+                slots[0] = Some((self.input)(inputs[next_in]));
+                next_in += 1;
+            }
+            peak = peak.max(slots.iter().filter(|s| s.is_some()).count());
+            // All stages compute in parallel; latch from the back so each
+            // item moves exactly one stage per cycle.
+            if let Some(regs) = slots[depth - 1].take() {
+                let out = (self.stages[depth - 1].f)(&regs);
+                outputs.push(sig(&out, self.output).fx());
+            }
+            for i in (0..depth.saturating_sub(1)).rev() {
+                if let Some(regs) = slots[i].take() {
+                    slots[i + 1] = Some((self.stages[i].f)(&regs));
+                }
+            }
+            cycles += 1;
+        }
+        SimResult { outputs, cycles, peak_in_flight: peak }
+    }
+}
+
+/// Shared front-end stage: sign peel-off + domain saturation check
+/// (paper §IV: "the main algorithm can be implemented for positive
+/// values only"). Produces `mag`, `neg`, `sat` signals.
+pub fn sign_split_input(x: Fx, domain_max: f64) -> SignalMap {
+    let neg = x.is_negative();
+    let mag = x.abs();
+    let sat = mag.to_f64() >= domain_max;
+    let mut m = SignalMap::new();
+    m.insert("mag", Value::Fx(mag));
+    m.insert("neg", Value::Flag(neg));
+    m.insert("sat", Value::Flag(sat));
+    m
+}
+
+/// Shared back-end stage function: clamp negatives to zero, apply
+/// saturation and re-apply the sign (mirrors
+/// [`crate::approx::eval_odd_saturating`]).
+pub fn sign_merge_stage(out_fmt: crate::fixed::QFormat) -> impl Fn(&SignalMap) -> SignalMap {
+    move |regs: &SignalMap| {
+        let y = sig(regs, "y").fx();
+        let neg = sig(regs, "neg").flag();
+        let sat = sig(regs, "sat").flag();
+        let y = if sat { Fx::max(out_fmt) } else { y };
+        let y = if y.is_negative() { Fx::zero(out_fmt) } else { y };
+        let y = if neg { y.neg() } else { y };
+        let mut m = SignalMap::new();
+        m.insert("y", Value::Fx(y));
+        m
+    }
+}
+
+/// Copies the sign/saturation control signals through a stage.
+pub fn passthrough_ctl(src: &SignalMap, dst: &mut SignalMap) {
+    dst.insert("neg", sig(src, "neg"));
+    dst.insert("sat", sig(src, "sat"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::QFormat;
+
+    fn double_then_inc_pipeline() -> Pipeline {
+        let fmt = QFormat::S3_12;
+        Pipeline::new(
+            "test",
+            move |x| {
+                let mut m = SignalMap::new();
+                m.insert("v", Value::Fx(x));
+                m
+            },
+            vec![
+                Stage::new("double", vec![BlockKind::Add(16)], move |r| {
+                    let v = sig(r, "v").fx();
+                    let mut m = SignalMap::new();
+                    m.insert("v", Value::Fx(Fx::from_raw(v.raw() * 2, fmt)));
+                    m
+                }),
+                Stage::new("inc", vec![BlockKind::Add(16)], move |r| {
+                    let v = sig(r, "v").fx();
+                    let mut m = SignalMap::new();
+                    m.insert("y", Value::Fx(Fx::from_raw(v.raw() + 1, fmt)));
+                    m
+                }),
+            ],
+            "y",
+        )
+    }
+
+    #[test]
+    fn eval_runs_all_stages() {
+        let p = double_then_inc_pipeline();
+        let x = Fx::from_raw(100, QFormat::S3_12);
+        assert_eq!(p.eval(x).raw(), 201);
+        assert_eq!(p.latency(), 2);
+    }
+
+    #[test]
+    fn simulate_matches_eval_and_counts_cycles() {
+        let p = double_then_inc_pipeline();
+        let inputs: Vec<Fx> = (0..10).map(|i| Fx::from_raw(i, QFormat::S3_12)).collect();
+        let res = p.simulate(&inputs);
+        assert_eq!(res.cycles, p.latency() + inputs.len() - 1);
+        assert_eq!(res.peak_in_flight, 2);
+        for (x, y) in inputs.iter().zip(&res.outputs) {
+            assert_eq!(y.raw(), p.eval(*x).raw());
+        }
+    }
+
+    #[test]
+    fn stage_delays_reflect_blocks() {
+        let p = double_then_inc_pipeline();
+        let lib = UnitLibrary::default();
+        let delays = p.stage_delays(&lib);
+        assert_eq!(delays.len(), 2);
+        assert!(delays.iter().all(|d| *d > 0.0));
+        assert_eq!(p.critical_delay(&lib), delays[0].max(delays[1]));
+    }
+}

@@ -1,0 +1,270 @@
+//! Pipelined datapaths for the polynomial methods — the paper's Fig 3
+//! block diagram ("High level Block diagram for polynomial approximation
+//! methods (A, B1, B2 and C)"): input decode → LUT fetch → interpolation
+//! arithmetic → output merge.
+//!
+//! Every stage reuses the *same* fixed-point helpers as the golden
+//! `eval_fx` models, so pipeline outputs are bit-identical by
+//! construction (and asserted by the module tests in [`super`]).
+
+use super::pipeline::{
+    passthrough_ctl, sign_merge_stage, sign_split_input, BlockKind, Pipeline, Stage,
+};
+use super::signal::{sig, SignalMap, Value};
+use crate::approx::catmull_rom::{CatmullRom, INT_FMT as CR_FMT};
+use crate::approx::pwl::Pwl;
+use crate::approx::taylor::Taylor;
+use crate::approx::TanhApprox;
+use crate::fixed::{fx_mul_wide, Fx, FxWide, QFormat, Round};
+
+/// Builds the Fig 3 pipeline for PWL (method A):
+/// `fetch → delta → multiply → accumulate → sign`.
+pub fn pwl_pipeline(pwl: Pwl, out: QFormat) -> Pipeline {
+    let domain = pwl.domain_max();
+    let lut_entries = pwl.lut().len() as u32;
+    let w = out.width();
+    let p1 = pwl.clone();
+
+    let fetch = Stage::new("fetch", vec![BlockKind::Lut(lut_entries)], move |r| {
+        let mag = sig(r, "mag").fx();
+        let (idx, t) = p1.lut().split_index(mag);
+        let mut m = SignalMap::new();
+        m.insert("y0", Value::Fx(p1.lut().at(idx)));
+        m.insert("y1", Value::Fx(p1.lut().at(idx + 1)));
+        m.insert("t", Value::Fx(t));
+        passthrough_ctl(r, &mut m);
+        m
+    });
+    let delta = Stage::new("delta", vec![BlockKind::Add(w)], move |r| {
+        let y0 = sig(r, "y0").fx();
+        let y1 = sig(r, "y1").fx();
+        let mut m = SignalMap::new();
+        m.insert("y0", Value::Fx(y0));
+        m.insert("delta", Value::Fx(Fx::from_raw(y1.raw() - y0.raw(), y0.format())));
+        m.insert("t", sig(r, "t"));
+        passthrough_ctl(r, &mut m);
+        m
+    });
+    let mul = Stage::new("multiply", vec![BlockKind::Mul(w)], move |r| {
+        let delta = sig(r, "delta").fx();
+        let t = sig(r, "t").fx();
+        let mut m = SignalMap::new();
+        m.insert("prod", Value::Wide(fx_mul_wide(delta, t)));
+        m.insert("y0", sig(r, "y0"));
+        passthrough_ctl(r, &mut m);
+        m
+    });
+    let acc = Stage::new("accumulate", vec![BlockKind::Add(w)], move |r| {
+        let y0 = sig(r, "y0").fx();
+        let prod = sig(r, "prod").wide();
+        let y = FxWide::from_fx(y0).add(prod).narrow(out, Round::NearestEven);
+        let mut m = SignalMap::new();
+        m.insert("y", Value::Fx(y));
+        passthrough_ctl(r, &mut m);
+        m
+    });
+    let sign = Stage::new("sign", vec![BlockKind::Mux(w)], sign_merge_stage(out));
+
+    Pipeline::new(
+        "pwl/fig3",
+        move |x| sign_split_input(x, domain),
+        vec![fetch, delta, mul, acc, sign],
+        "y",
+    )
+}
+
+/// Builds the Fig 3 pipeline for Taylor (methods B1/B2):
+/// `fetch → coeff derive (eqs. 5-7) → Horner ×(terms−1) → sign`.
+pub fn taylor_pipeline(t: Taylor, out: QFormat) -> Pipeline {
+    let domain = t.domain_max();
+    let lut_entries = t.lut().len() as u32;
+    let terms = t.terms();
+    let w = crate::approx::taylor::INT_FMT.width();
+    let t1 = t.clone();
+    let t2 = t.clone();
+
+    let mut stages = Vec::new();
+    stages.push(Stage::new("fetch", vec![BlockKind::Lut(lut_entries)], move |r| {
+        let mag = sig(r, "mag").fx();
+        let (idx, dx) = t1.split_fx(mag);
+        let mut m = SignalMap::new();
+        m.insert("anchor", Value::Fx(t1.lut().at(idx)));
+        m.insert("dx", Value::Fx(dx));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+    stages.push(Stage::new(
+        "coeff",
+        vec![BlockKind::Square(w), BlockKind::Mul(w), BlockKind::Add(w)],
+        move |r| {
+            let anchor = sig(r, "anchor").fx();
+            let (tt, d1, c2, c3) = t2.coeffs_fx(anchor);
+            let mut m = SignalMap::new();
+            m.insert("T", Value::Fx(tt));
+            m.insert("d1", Value::Fx(d1));
+            m.insert("c2", Value::Fx(c2));
+            m.insert("c3", Value::Fx(c3));
+            m.insert("dx", sig(r, "dx"));
+            passthrough_ctl(r, &mut m);
+            m
+        },
+    ));
+    if terms == 4 {
+        stages.push(Stage::new(
+            "horner3",
+            vec![BlockKind::Mul(w), BlockKind::Add(w)],
+            move |r| {
+                let dx = sig(r, "dx").fx();
+                let acc = Taylor::horner_step(dx, sig(r, "c3").fx(), sig(r, "c2").fx());
+                let mut m = SignalMap::new();
+                m.insert("acc", Value::Fx(acc));
+                m.insert("T", sig(r, "T"));
+                m.insert("d1", sig(r, "d1"));
+                m.insert("dx", sig(r, "dx"));
+                passthrough_ctl(r, &mut m);
+                m
+            },
+        ));
+    }
+    let first_key: &'static str = if terms == 4 { "acc" } else { "c2" };
+    stages.push(Stage::new(
+        "horner2",
+        vec![BlockKind::Mul(w), BlockKind::Add(w)],
+        move |r| {
+            let dx = sig(r, "dx").fx();
+            let acc = Taylor::horner_step(dx, sig(r, first_key).fx(), sig(r, "d1").fx());
+            let mut m = SignalMap::new();
+            m.insert("acc", Value::Fx(acc));
+            m.insert("T", sig(r, "T"));
+            m.insert("dx", sig(r, "dx"));
+            passthrough_ctl(r, &mut m);
+            m
+        },
+    ));
+    stages.push(Stage::new(
+        "horner1",
+        vec![BlockKind::Mul(w), BlockKind::Add(w)],
+        move |r| {
+            let dx = sig(r, "dx").fx();
+            let y = Taylor::horner_final(dx, sig(r, "acc").fx(), sig(r, "T").fx(), out);
+            let mut m = SignalMap::new();
+            m.insert("y", Value::Fx(y));
+            passthrough_ctl(r, &mut m);
+            m
+        },
+    ));
+    stages.push(Stage::new("sign", vec![BlockKind::Mux(out.width())], sign_merge_stage(out)));
+
+    let name = if terms == 3 { "taylor-quadratic/fig3" } else { "taylor-cubic/fig3" };
+    Pipeline::new(name, move |x| sign_split_input(x, domain), stages, "y")
+}
+
+/// Builds the Fig 3 pipeline for Catmull-Rom (method C):
+/// `fetch(P_{k−1}…P_{k+2}) → t-vector → MAC → sign`.
+pub fn catmull_rom_pipeline(cr: CatmullRom, out: QFormat) -> Pipeline {
+    let domain = cr.domain_max();
+    let lut_entries = cr.lut().len() as u32;
+    let w = CR_FMT.width();
+    let c1 = cr.clone();
+
+    let fetch = Stage::new("fetch", vec![BlockKind::Lut(lut_entries)], move |r| {
+        let mag = sig(r, "mag").fx();
+        let (idx, t) = c1.lut().split_index(mag);
+        let k = idx as isize;
+        let mut m = SignalMap::new();
+        m.insert("p0", Value::Fx(c1.p(k - 1)));
+        m.insert("p1", Value::Fx(c1.p(k)));
+        m.insert("p2", Value::Fx(c1.p(k + 1)));
+        m.insert("p3", Value::Fx(c1.p(k + 2)));
+        m.insert("t", Value::Fx(t));
+        passthrough_ctl(r, &mut m);
+        m
+    });
+    let tvec = Stage::new(
+        "t-vector",
+        vec![BlockKind::Square(w), BlockKind::Mul(w), BlockKind::Add(w)],
+        move |r| {
+            let t = sig(r, "t").fx();
+            let b = CatmullRom::basis_fx(t);
+            let mut m = SignalMap::new();
+            m.insert("b0", Value::Fx(b[0]));
+            m.insert("b1", Value::Fx(b[1]));
+            m.insert("b2", Value::Fx(b[2]));
+            m.insert("b3", Value::Fx(b[3]));
+            for key in ["p0", "p1", "p2", "p3"] {
+                m.insert(key, sig(r, key));
+            }
+            passthrough_ctl(r, &mut m);
+            m
+        },
+    );
+    let mac = Stage::new(
+        "mac",
+        vec![BlockKind::Mul(w), BlockKind::Add(w)],
+        move |r| {
+            let b = [sig(r, "b0").fx(), sig(r, "b1").fx(), sig(r, "b2").fx(), sig(r, "b3").fx()];
+            let p = [sig(r, "p0").fx(), sig(r, "p1").fx(), sig(r, "p2").fx(), sig(r, "p3").fx()];
+            let mut acc = fx_mul_wide(b[0], p[0].convert(CR_FMT, Round::NearestEven));
+            for i in 1..4 {
+                acc = acc.add(fx_mul_wide(b[i], p[i].convert(CR_FMT, Round::NearestEven)));
+            }
+            let mut m = SignalMap::new();
+            m.insert("y", Value::Fx(acc.narrow(out, Round::NearestEven)));
+            passthrough_ctl(r, &mut m);
+            m
+        },
+    );
+    let sign = Stage::new("sign", vec![BlockKind::Mux(out.width())], sign_merge_stage(out));
+
+    Pipeline::new(
+        "catmull-rom/fig3",
+        move |x| sign_split_input(x, domain),
+        vec![fetch, tvec, mac, sign],
+        "y",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::TanhApprox;
+
+    const INP: QFormat = QFormat::S3_12;
+    const OUT: QFormat = QFormat::S_15;
+
+    #[test]
+    fn pwl_pipeline_matches_golden_everywhere() {
+        // Exhaustive, not sampled — PWL is cheap enough.
+        let golden = Pwl::table1();
+        let pipe = pwl_pipeline(golden.clone(), OUT);
+        for raw in -(INP.max_raw())..=INP.max_raw() {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(pipe.eval(x).raw(), golden.eval_fx(x, OUT).raw(), "raw {raw}");
+        }
+    }
+
+    #[test]
+    fn taylor_pipeline_depth_scales_with_terms() {
+        let p3 = taylor_pipeline(Taylor::table1_quadratic(), OUT);
+        let p4 = taylor_pipeline(Taylor::table1_cubic(), OUT);
+        assert_eq!(p4.latency(), p3.latency() + 1);
+    }
+
+    #[test]
+    fn stage_names_follow_fig3() {
+        let p = pwl_pipeline(Pwl::table1(), OUT);
+        assert_eq!(p.stage_names(), vec!["fetch", "delta", "multiply", "accumulate", "sign"]);
+    }
+
+    #[test]
+    fn cr_pipeline_handles_boundaries() {
+        let golden = CatmullRom::table1();
+        let pipe = catmull_rom_pipeline(golden.clone(), OUT);
+        // first segment (negative-index reflection), last segment (guard
+        // points), saturated region.
+        for v in [-7.9, -6.0, -0.01, 0.0, 0.01, 5.99, 6.0, 7.9] {
+            let x = Fx::from_f64(v, INP);
+            assert_eq!(pipe.eval(x).raw(), golden.eval_fx(x, OUT).raw(), "x={v}");
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Signals carried between pipeline stages.
+
+use std::collections::HashMap;
+
+use crate::fixed::{Fx, FxWide};
+
+/// A value on a pipeline register: a fixed-point word, a wide
+/// (pre-renormalization) MAC accumulator, or a raw control field
+/// (sign/saturation flags, LUT indices, normalization exponents).
+#[derive(Clone, Copy, Debug)]
+pub enum Value {
+    /// A fixed-point word.
+    Fx(Fx),
+    /// A wide accumulator (kept across MAC chains).
+    Wide(FxWide),
+    /// A raw integer control signal.
+    Raw(i64),
+    /// A single-bit control signal.
+    Flag(bool),
+}
+
+impl Value {
+    /// Extracts the Fx, panicking with the signal name context if the
+    /// kind is wrong (a wiring bug in the datapath).
+    pub fn fx(&self) -> Fx {
+        match self {
+            Value::Fx(v) => *v,
+            other => panic!("signal is {other:?}, expected Fx"),
+        }
+    }
+
+    /// Extracts a wide accumulator.
+    pub fn wide(&self) -> FxWide {
+        match self {
+            Value::Wide(v) => *v,
+            other => panic!("signal is {other:?}, expected Wide"),
+        }
+    }
+
+    /// Extracts a raw integer.
+    pub fn raw(&self) -> i64 {
+        match self {
+            Value::Raw(v) => *v,
+            other => panic!("signal is {other:?}, expected Raw"),
+        }
+    }
+
+    /// Extracts a flag bit.
+    pub fn flag(&self) -> bool {
+        match self {
+            Value::Flag(v) => *v,
+            other => panic!("signal is {other:?}, expected Flag"),
+        }
+    }
+}
+
+/// The register bank between two stages: named signals.
+pub type SignalMap = HashMap<&'static str, Value>;
+
+/// Convenience: builds a signal map from pairs (used by tests and
+/// custom datapath assemblies).
+#[allow(dead_code)]
+pub fn signals(pairs: &[(&'static str, Value)]) -> SignalMap {
+    pairs.iter().cloned().collect()
+}
+
+/// Fetches a signal, panicking with a wiring diagnostic when absent.
+pub fn sig(map: &SignalMap, name: &'static str) -> Value {
+    *map.get(name)
+        .unwrap_or_else(|| panic!("missing signal '{name}' (present: {:?})", map.keys()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::QFormat;
+
+    #[test]
+    fn typed_extraction() {
+        let m = signals(&[
+            ("x", Value::Fx(Fx::from_f64(0.5, QFormat::S3_12))),
+            ("idx", Value::Raw(42)),
+            ("neg", Value::Flag(true)),
+        ]);
+        assert_eq!(sig(&m, "x").fx().to_f64(), 0.5);
+        assert_eq!(sig(&m, "idx").raw(), 42);
+        assert!(sig(&m, "neg").flag());
+    }
+
+    #[test]
+    #[should_panic(expected = "missing signal 'y'")]
+    fn missing_signal_panics() {
+        let m = signals(&[]);
+        sig(&m, "y");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Fx")]
+    fn wrong_kind_panics() {
+        let m = signals(&[("x", Value::Raw(1))]);
+        sig(&m, "x").fx();
+    }
+}

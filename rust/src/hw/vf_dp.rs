@@ -1,0 +1,197 @@
+//! Pipelined datapath for the velocity-factor method — the paper's
+//! Fig 4 ("High level Block diagram for trignometric expansion method"):
+//! a multiplexer-selected multiplier chain over the stored velocity
+//! factors, the (F−1)/(F+1) divider, and the eq. (10) linear
+//! compensation stage.
+
+use super::pipeline::{
+    passthrough_ctl, sign_merge_stage, sign_split_input, BlockKind, Pipeline, Stage,
+};
+use super::signal::{sig, SignalMap, Value};
+use crate::approx::newton::{finish_div, normalize_den, nr_seed, nr_step, NR_ITERS};
+use crate::approx::velocity::Velocity;
+use crate::approx::TanhApprox;
+use crate::fixed::{fx_add, fx_mul, fx_mul_wide, fx_sub, Fx, FxWide, QFormat, Round};
+
+/// Internal format of the recovered tanh value (matches the golden
+/// model's refinement stage).
+const T_FMT: QFormat = QFormat::new(1, 24);
+
+/// Builds the Fig 4 pipeline:
+/// `split → vf-mul ×N → add/sub → normalize → nr-seed → nr-iter ×i →
+///  recover-tanh → refine → sign`.
+pub fn velocity_pipeline(v: Velocity, out: QFormat) -> Pipeline {
+    let domain = v.domain_max();
+    let wf = v.wide_format();
+    let w = wf.width();
+    let m_shift = v.threshold_shift();
+    let kmax = v.kmax();
+    let regs: Vec<Fx> = v.registers().to_vec();
+    let v1 = v.clone();
+
+    let mut stages: Vec<Stage> = Vec::new();
+
+    // Split the magnitude into coarse bits (≥ θ) and residue (< θ).
+    stages.push(Stage::new("split", vec![BlockKind::Shift(w)], move |r| {
+        let mag = sig(r, "mag").fx();
+        let (coarse, residue) = v1.split(mag);
+        let mut m = SignalMap::new();
+        m.insert("coarse", Value::Raw(coarse));
+        m.insert("residue", Value::Raw(residue));
+        m.insert("frac", Value::Raw(mag.format().frac_bits as i64));
+        m.insert("F", Value::Fx(Fx::one(wf)));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+
+    // One mux+multiplier stage per stored register (Fig 4's chain).
+    for (i, k) in (-(m_shift as i32)..=kmax).rev().enumerate() {
+        let vf_i = regs[i];
+        stages.push(Stage::new(
+            format!("vfmul[2^{k}]"),
+            vec![BlockKind::Mux(w), BlockKind::Mul(w)],
+            move |r| {
+                let coarse = sig(r, "coarse").raw();
+                let frac = sig(r, "frac").raw() as i32;
+                let f = sig(r, "F").fx();
+                let bitpos = k + frac;
+                let f = if bitpos >= 0 && (coarse >> bitpos) & 1 == 1 {
+                    fx_mul(f, vf_i, wf, Round::NearestAway)
+                } else {
+                    f
+                };
+                let mut m = SignalMap::new();
+                m.insert("F", Value::Fx(f));
+                m.insert("coarse", sig(r, "coarse"));
+                m.insert("residue", sig(r, "residue"));
+                m.insert("frac", sig(r, "frac"));
+                passthrough_ctl(r, &mut m);
+                m
+            },
+        ));
+    }
+
+    // num = F − 1, den = F + 1 (two adders, parallel).
+    stages.push(Stage::new("addsub", vec![BlockKind::Add(w)], move |r| {
+        let f = sig(r, "F").fx();
+        let one = Fx::one(wf);
+        let mut m = SignalMap::new();
+        m.insert("num", Value::Fx(fx_sub(f, one, wf, Round::NearestAway)));
+        m.insert("den", Value::Fx(fx_add(f, one, wf, Round::NearestAway)));
+        m.insert("residue", sig(r, "residue"));
+        m.insert("frac", sig(r, "frac"));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+
+    // Divider front-end: leading-zero count + barrel shift.
+    stages.push(Stage::new("normalize", vec![BlockKind::Shift(w)], move |r| {
+        let den = sig(r, "den").fx();
+        let (mant, e) = normalize_den(den);
+        let mut m = SignalMap::new();
+        m.insert("mant", Value::Fx(mant));
+        m.insert("exp", Value::Raw(e as i64));
+        m.insert("num", sig(r, "num"));
+        m.insert("residue", sig(r, "residue"));
+        m.insert("frac", sig(r, "frac"));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+
+    // NR seed + iterations (each iteration: two dependent multiplies).
+    stages.push(Stage::new("nr-seed", vec![BlockKind::Mul(32), BlockKind::Add(32)], move |r| {
+        let mant = sig(r, "mant").fx();
+        let mut m = r.clone();
+        m.insert("recip", Value::Fx(nr_seed(mant)));
+        m
+    }));
+    for i in 0..NR_ITERS {
+        stages.push(Stage::new(
+            format!("nr-iter{i}"),
+            vec![BlockKind::Mul(32), BlockKind::Mul(32), BlockKind::Add(32)],
+            move |r| {
+                let mant = sig(r, "mant").fx();
+                let x = sig(r, "recip").fx();
+                let mut m = r.clone();
+                m.insert("recip", Value::Fx(nr_step(mant, x)));
+                m
+            },
+        ));
+    }
+
+    // Recover T = num · recip · 2^−e (the divider back end); the golden
+    // model short-circuits num == 0 to zero.
+    stages.push(Stage::new("recover", vec![BlockKind::Mul(w)], move |r| {
+        let num = sig(r, "num").fx();
+        let recip = sig(r, "recip").fx();
+        let e = sig(r, "exp").raw() as i32;
+        let t = if num.raw() == 0 { Fx::zero(T_FMT) } else { finish_div(num, recip, e, T_FMT) };
+        let mut m = SignalMap::new();
+        m.insert("T", Value::Fx(t));
+        m.insert("residue", sig(r, "residue"));
+        m.insert("frac", sig(r, "frac"));
+        passthrough_ctl(r, &mut m);
+        m
+    }));
+
+    // eq. (10) refinement: y = T + b·(1 − T²).
+    stages.push(Stage::new(
+        "refine",
+        vec![BlockKind::Square(w), BlockKind::Mul(w), BlockKind::Add(w)],
+        move |r| {
+            let t = sig(r, "T").fx();
+            let residue = sig(r, "residue").raw();
+            let frac = sig(r, "frac").raw() as u32;
+            let b = Fx::from_raw(residue, QFormat::new(0, frac));
+            let t2 = fx_mul(t, t, T_FMT, Round::NearestAway);
+            let d1 = fx_sub(Fx::one(T_FMT), t2, T_FMT, Round::NearestAway);
+            let y = fx_mul_wide(b, d1).add(FxWide::from_fx(t)).narrow(out, Round::NearestEven);
+            let mut m = SignalMap::new();
+            m.insert("y", Value::Fx(y));
+            passthrough_ctl(r, &mut m);
+            m
+        },
+    ));
+    stages.push(Stage::new("sign", vec![BlockKind::Mux(out.width())], sign_merge_stage(out)));
+
+    Pipeline::new("velocity/fig4", move |x| sign_split_input(x, domain), stages, "y")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const INP: QFormat = QFormat::S3_12;
+    const OUT: QFormat = QFormat::S_15;
+
+    #[test]
+    fn vf_pipeline_matches_golden_sampled() {
+        let golden = Velocity::table1();
+        let pipe = velocity_pipeline(golden.clone(), OUT);
+        for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(131) {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(
+                pipe.eval(x).raw(),
+                golden.eval_fx(x, OUT).raw(),
+                "raw {raw} x={}",
+                x.to_f64()
+            );
+        }
+    }
+
+    #[test]
+    fn chain_length_matches_register_count() {
+        let v = Velocity::table1();
+        let n = v.register_count();
+        let pipe = velocity_pipeline(v, OUT);
+        let vfmul_stages =
+            pipe.stage_names().iter().filter(|s| s.starts_with("vfmul")).count();
+        assert_eq!(vfmul_stages, n);
+    }
+
+    #[test]
+    fn zero_input_yields_zero() {
+        let pipe = velocity_pipeline(Velocity::table1(), OUT);
+        assert_eq!(pipe.eval(Fx::zero(INP)).raw(), 0);
+    }
+}

@@ -1,0 +1,76 @@
+//! # tanh-vlsi
+//!
+//! Full-stack reproduction of *"Comparative Analysis of Polynomial and
+//! Rational Approximations of Hyperbolic Tangent Function for VLSI
+//! Implementation"* (Mahesh Chandra, NXP Semiconductors, 2020).
+//!
+//! The paper compares six fixed-point tanh approximations intended for
+//! neural-network accelerator datapaths:
+//!
+//! | id | method                                   | module                 |
+//! |----|------------------------------------------|------------------------|
+//! | A  | piecewise-linear interpolation           | [`approx::pwl`]        |
+//! | B1 | Taylor series, quadratic (3 terms)       | [`approx::taylor`]     |
+//! | B2 | Taylor series, cubic (4 terms)           | [`approx::taylor`]     |
+//! | C  | uniform cubic Catmull-Rom spline         | [`approx::catmull_rom`]|
+//! | D  | velocity-factor trigonometric expansion  | [`approx::velocity`]   |
+//! | E  | Lambert continued fraction               | [`approx::lambert`]    |
+//!
+//! On top of the approximation library the crate provides:
+//!
+//! - [`fixed`] — the Q-format fixed-point substrate all datapath models
+//!   are built on (S3.12, S2.13, S.15, S2.5, S.7 …).
+//! - [`error`] — error-analysis engine (max abs error, MSE/RMS, ulp
+//!   metrics, exhaustive grid sweeps, 1-ulp parameter search) that
+//!   regenerates the paper's Fig 2 and Tables I & III.
+//! - [`cost`] — hardware cost model: component inventories per method
+//!   (paper §IV) priced by a unit gate library into area / delay.
+//! - [`hw`] — cycle-level pipelined datapath simulator for the block
+//!   diagrams of Fig 3 (polynomial), Fig 4 (velocity factor) and Fig 5
+//!   (continued fraction), including Table II's multi-bit VF lookup.
+//! - [`runtime`] — PJRT wrapper that loads the JAX/Pallas-AOT'd HLO
+//!   artifacts and executes them from rust.
+//! - [`coordinator`] — activation-accelerator service: request router,
+//!   dynamic batcher, worker pool, metrics, backpressure.
+//! - [`explore`] — design-space exploration / Pareto frontier over
+//!   (method × parameter × fixed-point format).
+//! - [`report`] — text/CSV renderers for every table and figure.
+//! - [`bench`] — self-contained benchmark harness (criterion is not
+//!   available in the offline crate set).
+//! - [`util`] — CLI parsing, JSON/CSV writers, PRNG, property-test
+//!   runner: small substrates the offline image forces us to own.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath; the same
+//! // code executes in examples/quickstart.rs and the unit tests.)
+//! use tanh_vlsi::approx::{pwl::Pwl, TanhApprox};
+//! use tanh_vlsi::fixed::{Fx, QFormat};
+//!
+//! // Table I configuration "A": PWL with step 1/64.
+//! let pwl = Pwl::table1();
+//! let x = Fx::from_f64(0.5, QFormat::S3_12);
+//! let y = pwl.eval_fx(x, QFormat::S_15);
+//! assert!((y.to_f64() - 0.5f64.tanh()).abs() < 1e-4);
+//! ```
+
+pub mod approx;
+pub mod bench;
+pub mod coordinator;
+pub mod cost;
+pub mod error;
+pub mod explore;
+pub mod fixed;
+pub mod hw;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Returns the crate name — used by the smoke tests.
+pub fn hello() -> &'static str {
+    "tanh-vlsi"
+}

@@ -1,0 +1,301 @@
+//! `tanh-vlsi` — CLI for the reproduction stack.
+//!
+//! ```text
+//! tanh-vlsi eval    --method pwl --x 0.5          evaluate one input
+//! tanh-vlsi table1                                 regenerate Table I
+//! tanh-vlsi table2                                 regenerate Table II
+//! tanh-vlsi table3  --rows 4                       regenerate Table III
+//! tanh-vlsi fig2    --csv-dir out/                 regenerate Fig 2
+//! tanh-vlsi cost                                   §IV complexity report
+//! tanh-vlsi explore --stride 8                     Pareto frontier
+//! tanh-vlsi serve   --requests 1000                run the coordinator
+//! tanh-vlsi pipeline --method lambert --x 1.0      cycle-level datapath
+//! ```
+
+use std::sync::Arc;
+
+use tanh_vlsi::approx::{table1_suite, MethodId, TanhApprox};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend};
+use tanh_vlsi::cost::UnitLibrary;
+use tanh_vlsi::explore::{explore, pareto_frontier, ExploreConfig};
+use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::hw::table1_pipeline;
+use tanh_vlsi::report;
+use tanh_vlsi::runtime::{ArtifactDir, EngineServer};
+use tanh_vlsi::util::cli::{App, Command};
+use tanh_vlsi::util::prng::Prng;
+
+fn app() -> App {
+    App {
+        prog: "tanh-vlsi",
+        about: "polynomial & rational tanh approximations for VLSI — paper reproduction stack",
+        commands: vec![
+            Command::new("eval", "evaluate tanh approximations at one input")
+                .opt("method", "pwl|taylor1|taylor2|catmull|velocity|lambert|all", Some("all"))
+                .opt("x", "input value", Some("0.5"))
+                .opt("input", "input Q-format", Some("S3.12"))
+                .opt("output", "output Q-format", Some("S.15")),
+            Command::new("table1", "regenerate Table I (errors of selected configurations)"),
+            Command::new("table2", "regenerate Table II (velocity-factor register file)"),
+            Command::new("table3", "regenerate Table III (1-ulp parameters per format)")
+                .opt("rows", "number of rows to compute (1-4)", Some("4"))
+                .opt("ulp", "ulp budget", Some("1.0")),
+            Command::new("fig2", "regenerate Fig 2 (error vs parameter, 6 panels)")
+                .opt("csv-dir", "write per-panel CSVs to this directory", None),
+            Command::new("cost", "regenerate §IV complexity analysis"),
+            Command::new("explore", "design-space exploration / Pareto frontier")
+                .opt("stride", "input-grid stride (1 = exhaustive)", Some("8")),
+            Command::new("pipeline", "run the cycle-level datapath for one input")
+                .opt("method", "method name", Some("pwl"))
+                .opt("x", "input value", Some("0.5")),
+            Command::new("report", "generate the consolidated markdown report")
+                .opt("out", "output file", Some("target/paper/REPORT.md"))
+                .flag("quick", "skip the slow Fig 2 / exploration sections"),
+            Command::new("verilog", "emit synthesizable Verilog for the PWL datapath")
+                .opt("out", "output file (default: stdout)", None)
+                .opt("step", "PWL step size (reciprocal power of two)", Some("0.015625")),
+            Command::new("serve", "run the activation coordinator under synthetic load")
+                .opt("requests", "number of requests", Some("1000"))
+                .opt("request-size", "activations per request", Some("64"))
+                .opt("backend", "pjrt|golden", Some("pjrt"))
+                .opt("batch", "compiled batch size", Some("1024")),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let (cmd, parsed) = match app.dispatch(&argv) {
+        Ok(x) => x,
+        Err(help_or_err) => {
+            eprintln!("{help_or_err}");
+            let is_help =
+                argv.is_empty() || argv.iter().any(|a| a == "--help" || a == "-h" || a == "help");
+            std::process::exit(if is_help { 0 } else { 2 });
+        }
+    };
+    let result = match cmd.name {
+        "eval" => cmd_eval(&parsed),
+        "table1" => {
+            println!("{}", report::table1::render(&report::table1::compute()));
+            Ok(())
+        }
+        "table2" => {
+            println!(
+                "{}",
+                report::table2::render(&tanh_vlsi::approx::velocity::Velocity::table1())
+            );
+            Ok(())
+        }
+        "table3" => cmd_table3(&parsed),
+        "fig2" => cmd_fig2(&parsed),
+        "cost" => {
+            println!("{}", report::complexity::render());
+            Ok(())
+        }
+        "explore" => cmd_explore(&parsed),
+        "pipeline" => cmd_pipeline(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "verilog" => cmd_verilog(&parsed),
+        "report" => cmd_report(&parsed),
+        other => Err(format!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_method(s: &str) -> Result<MethodId, String> {
+    MethodId::parse(s).ok_or_else(|| format!("unknown method '{s}'"))
+}
+
+fn cmd_eval(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let x: f64 = p.parse_or("x", 0.5)?;
+    let inp = QFormat::parse(p.get_or("input", "S3.12")).ok_or("bad input format")?;
+    let out = QFormat::parse(p.get_or("output", "S.15")).ok_or("bad output format")?;
+    let fx = Fx::from_f64(x, inp);
+    let want = x.tanh();
+    println!("x = {x} ({} raw {})   tanh(x) = {want:.9}\n", inp, fx.raw());
+    let methods: Vec<Box<dyn TanhApprox>> = match p.get_or("method", "all") {
+        "all" => table1_suite(),
+        name => {
+            let id = parse_method(name)?;
+            table1_suite().into_iter().filter(|m| m.id() == id).collect()
+        }
+    };
+    for m in methods {
+        let y = m.eval_fx(fx, out);
+        println!(
+            "{:28} {:>12.9}  err {:+.3e}  (raw {})",
+            m.describe(),
+            y.to_f64(),
+            y.to_f64() - want,
+            y.raw()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table3(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let n: usize = p.parse_or("rows", 4usize)?;
+    let ulp: f64 = p.parse_or("ulp", 1.0)?;
+    let specs = tanh_vlsi::error::table3_rows();
+    let rows: Vec<_> = specs
+        .into_iter()
+        .take(n.clamp(1, 4))
+        .map(|s| {
+            eprintln!("  computing {} -> {} ±{} ...", s.input, s.output, s.range);
+            report::table3::compute_table3_row(s, ulp)
+        })
+        .collect();
+    println!("{}", report::table3::render(&rows));
+    Ok(())
+}
+
+fn cmd_fig2(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let series = report::fig2::compute();
+    println!("{}", report::fig2::render(&series));
+    if let Some(dir) = p.get("csv-dir") {
+        report::fig2::write_csv(&series, std::path::Path::new(dir)).map_err(|e| e.to_string())?;
+        println!("wrote CSVs to {dir}");
+    }
+    Ok(())
+}
+
+fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let stride: usize = p.parse_or("stride", 8usize)?;
+    let points = explore(ExploreConfig { stride, ..Default::default() });
+    let frontier = pareto_frontier(&points);
+    println!("explored {} design points; Pareto frontier ({}):\n", points.len(), frontier.len());
+    let mut t = tanh_vlsi::util::table::TextTable::new(&[
+        "method", "param", "max err", "area (GE)", "latency", "stage FO4",
+    ]);
+    for pt in &frontier {
+        t.row(vec![
+            pt.id.name().to_string(),
+            format!("{}", pt.param),
+            format!("{:.2e}", pt.max_err),
+            format!("{:.0}", pt.area_ge),
+            pt.latency_cycles.to_string(),
+            format!("{:.1}", pt.stage_delay_fo4),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_pipeline(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let id = parse_method(p.get_or("method", "pwl"))?;
+    let x: f64 = p.parse_or("x", 0.5)?;
+    let pipe = table1_pipeline(id, QFormat::S_15);
+    let lib = UnitLibrary::default();
+    let fx = Fx::from_f64(x, QFormat::S3_12);
+    let y = pipe.eval(fx);
+    println!("pipeline {}  latency {} cycles", pipe.name, pipe.latency());
+    println!("stages:");
+    for (name, delay) in pipe.stage_names().iter().zip(pipe.stage_delays(&lib)) {
+        println!("  {name:16} {delay:5.1} FO4");
+    }
+    println!(
+        "\ncritical stage {:.1} FO4;  eval({x}) = {} (tanh = {:.9})",
+        pipe.critical_delay(&lib),
+        y.to_f64(),
+        x.tanh()
+    );
+    Ok(())
+}
+
+fn cmd_report(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let quick = p.flag("quick");
+    let opts = tanh_vlsi::report::full::ReportOptions {
+        fig2: !quick,
+        explore: !quick,
+        ..Default::default()
+    };
+    let text = tanh_vlsi::report::full::generate(opts);
+    let out = p.get_or("out", "target/paper/REPORT.md");
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent).map_err(|e| e.to_string())?;
+    }
+    std::fs::write(out, &text).map_err(|e| e.to_string())?;
+    println!("wrote {} bytes to {out}", text.len());
+    Ok(())
+}
+
+fn cmd_verilog(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let step: f64 = p.parse_or("step", 1.0 / 64.0)?;
+    let pwl = tanh_vlsi::approx::pwl::Pwl::new(step, 6.0);
+    let text = tanh_vlsi::hw::verilog::emit_pwl(&pwl, QFormat::S3_12, QFormat::S_15);
+    match p.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| e.to_string())?;
+            println!("wrote {} bytes of Verilog to {path}", text.len());
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let n: usize = p.parse_or("requests", 1000usize)?;
+    let req_size: usize = p.parse_or("request-size", 64usize)?;
+    let batch: usize = p.parse_or("batch", 1024usize)?;
+    let backend_name = p.get_or("backend", "pjrt");
+
+    let backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend> = match backend_name {
+        "golden" => Arc::new(GoldenBackend::table1(batch)),
+        "pjrt" => {
+            let engine = Arc::new(
+                EngineServer::spawn(
+                    ArtifactDir::open(ArtifactDir::default_path()).map_err(|e| e.to_string())?,
+                )
+                .map_err(|e| e.to_string())?,
+            );
+            println!("PJRT platform: {}", engine.platform());
+            Arc::new(GraphBackend::load_all(engine, batch).map_err(|e| e.to_string())?)
+        }
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+    let coord = Coordinator::start(backend, CoordinatorConfig::default());
+    let mut g = Prng::new(42);
+    let start = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let method = MethodId::all()[i % 6];
+        let values: Vec<f32> = (0..req_size).map(|_| g.f64_in(-6.0, 6.0) as f32).collect();
+        pending.push(coord.submit(method, values).map_err(|e| e.to_string())?);
+        // Drain in windows to bound memory.
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                rx.recv().map_err(|_| "reply dropped")?.outcome?;
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().map_err(|_| "reply dropped")?.outcome?;
+    }
+    let elapsed = start.elapsed();
+    let m = coord.metrics();
+    println!(
+        "\nserved {} requests ({} activations) in {:.3}s on '{backend_name}'",
+        m.requests,
+        m.elements,
+        elapsed.as_secs_f64()
+    );
+    println!(
+        "throughput: {:.0} req/s, {:.2} Mact/s",
+        m.requests as f64 / elapsed.as_secs_f64(),
+        m.elements as f64 / elapsed.as_secs_f64() / 1e6
+    );
+    println!(
+        "batches: {} (efficiency {:.1}%), mean latency {:.0} µs, max {} µs",
+        m.batches,
+        100.0 * m.batch_efficiency(),
+        m.mean_latency_us(),
+        m.latency_us_max
+    );
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! §IV design-complexity report: component inventories per method,
+//! priced into area/delay/latency by the cost model, plus the pipelined
+//! datapath depths from the hw simulator.
+
+use crate::approx::{table1_suite, IoSpec};
+use crate::cost::{CostModel, UnitLibrary};
+use crate::fixed::QFormat;
+use crate::hw::table1_pipeline;
+use crate::util::table::TextTable;
+
+/// Renders the full complexity comparison.
+pub fn render() -> String {
+    let io = IoSpec::table1();
+    let model = CostModel::new();
+    let lib = UnitLibrary::default();
+    let mut t = TextTable::new(&[
+        "id", "method", "add", "mul", "sq", "div", "LUT entries", "LUT bits", "mux2/4",
+        "area (GE)", "stage delay (FO4)", "pipeline (cyc)",
+    ]);
+    for m in table1_suite() {
+        let inv = m.inventory(io);
+        let cost = model.price(&inv);
+        let pipe = table1_pipeline(m.id(), QFormat::S_15);
+        t.row(vec![
+            m.id().label().to_string(),
+            m.describe(),
+            inv.adders.to_string(),
+            inv.multipliers.to_string(),
+            inv.squarers.to_string(),
+            inv.dividers.to_string(),
+            inv.lut_entries.to_string(),
+            inv.lut_bits.to_string(),
+            format!("{}/{}", inv.mux2, inv.mux4),
+            format!("{:.0}", cost.area_ge),
+            format!("{:.1}", pipe.critical_delay(&lib)),
+            pipe.latency().to_string(),
+        ]);
+    }
+    format!(
+        "DESIGN COMPLEXITY (paper §IV) — component inventory, priced by the\n\
+         unit gate library; pipeline depth from the cycle-level datapath\n\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_six_methods() {
+        let text = super::render();
+        for label in ["PWL", "Taylor", "CatmullRom", "Velocity", "Lambert"] {
+            assert!(text.contains(label), "{label}");
+        }
+        assert!(text.contains("area (GE)"));
+    }
+}

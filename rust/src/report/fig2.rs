@@ -1,0 +1,86 @@
+//! Fig 2 — max abs error and MSE vs tunable parameter, one panel per
+//! method. Rendered as text tables + CSV series for plotting.
+
+use std::path::Path;
+
+use crate::approx::MethodId;
+use crate::error::{sweep_fig2, Fig2Series, InputGrid};
+use crate::fixed::QFormat;
+use crate::util::csv::Csv;
+use crate::util::table::{sci, step_str, TextTable};
+
+/// Sweeps all six panels on the Table I grid.
+pub fn compute() -> Vec<Fig2Series> {
+    let grid = InputGrid::table1();
+    MethodId::all()
+        .into_iter()
+        .map(|id| sweep_fig2(id, grid, QFormat::S_15))
+        .collect()
+}
+
+/// Renders one panel as a text table.
+pub fn render_panel(s: &Fig2Series) -> String {
+    let mut t = TextTable::new(&[s.param_name, "max error", "MSE", "RMS"]);
+    for p in &s.points {
+        let param = if s.id == MethodId::Lambert {
+            format!("{}", p.param as u64)
+        } else {
+            step_str(p.param)
+        };
+        t.row(vec![param, sci(p.metrics.max_abs), sci(p.metrics.mse), sci(p.metrics.rms)]);
+    }
+    format!("Fig 2 panel — {} ({})\n{}", s.id.name(), s.id.label(), t.render())
+}
+
+/// Renders all panels.
+pub fn render(series: &[Fig2Series]) -> String {
+    let mut out = String::from(
+        "FIG 2 — maximum absolute and mean square error as a function of\n\
+         configuration parameter for various approximations\n\n",
+    );
+    for s in series {
+        out.push_str(&render_panel(s));
+        out.push('\n');
+    }
+    out
+}
+
+/// Writes one CSV per panel into `dir` (for external plotting).
+pub fn write_csv(series: &[Fig2Series], dir: &Path) -> std::io::Result<()> {
+    for s in series {
+        let mut csv = Csv::new(&["param", "max_error", "mse", "rms"]);
+        for p in &s.points {
+            csv.row(vec![
+                format!("{}", p.param),
+                format!("{:e}", p.metrics.max_abs),
+                format!("{:e}", p.metrics.mse),
+                format!("{:e}", p.metrics.rms),
+            ]);
+        }
+        csv.write_file(&dir.join(format!("fig2_{}.csv", s.id.name().replace(' ', "_"))))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panels_render_and_write() {
+        // Small grid for test speed: same code path, coarser input.
+        let grid = InputGrid::ranged(QFormat::new(3, 8), 6.0);
+        let series: Vec<Fig2Series> = MethodId::all()
+            .into_iter()
+            .map(|id| sweep_fig2(id, grid, QFormat::S_15))
+            .collect();
+        let text = render(&series);
+        assert!(text.contains("FIG 2"));
+        assert!(text.contains("PWL"));
+        assert!(text.contains("Lambert"));
+        let dir = std::env::temp_dir().join("tanh_vlsi_fig2_test");
+        write_csv(&series, &dir).unwrap();
+        assert!(dir.join("fig2_PWL.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,127 @@
+//! One-shot consolidated report: every paper artefact regenerated into
+//! a single markdown document (`tanh-vlsi report --out REPORT.md`).
+
+use std::fmt::Write as _;
+
+use crate::approx::velocity::Velocity;
+use crate::approx::{table1_suite, IoSpec};
+use crate::cost::CostModel;
+use crate::error::{histogram, InputGrid};
+use crate::explore::{explore, pareto_frontier, ExploreConfig};
+use crate::fixed::QFormat;
+
+use super::{complexity, fig2, table1, table2};
+
+/// Options for the consolidated report.
+#[derive(Clone, Copy, Debug)]
+pub struct ReportOptions {
+    /// Include the Fig 2 sweeps (the slowest section).
+    pub fig2: bool,
+    /// Include the design-space exploration.
+    pub explore: bool,
+    /// Grid stride for the exploration (1 = exhaustive).
+    pub explore_stride: usize,
+}
+
+impl Default for ReportOptions {
+    fn default() -> Self {
+        ReportOptions { fig2: true, explore: true, explore_stride: 8 }
+    }
+}
+
+/// Generates the full markdown report.
+pub fn generate(opts: ReportOptions) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# tanh-vlsi — regenerated evaluation\n\n\
+         Reproduction of Chandra (2020), every table and figure computed\n\
+         by this build. See EXPERIMENTS.md for the paper-vs-measured\n\
+         discussion.\n"
+    );
+
+    let _ = writeln!(out, "## Table I\n\n```\n{}```\n", table1::render(&table1::compute()));
+
+    if opts.fig2 {
+        let series = fig2::compute();
+        let _ = writeln!(out, "## Fig 2\n\n```\n{}```\n", fig2::render(&series));
+    }
+
+    let _ = writeln!(out, "## Table II\n\n```\n{}```\n", table2::render(&Velocity::table1()));
+
+    let _ = writeln!(out, "## §IV complexity\n\n```\n{}```\n", complexity::render());
+
+    // Error histograms (one per method) — the distribution view.
+    let _ = writeln!(out, "## Error distribution (output ulps, Table I grid)\n");
+    let grid = InputGrid::table1();
+    for m in table1_suite() {
+        let h = histogram(m.as_ref(), grid, QFormat::S_15);
+        let _ = writeln!(
+            out,
+            "### {}\n\n```\n{}```\n(≤1 ulp: {:.2}%)\n",
+            m.describe(),
+            h.render(),
+            100.0 * h.fraction_within(1.0)
+        );
+    }
+
+    if opts.explore {
+        let points = explore(ExploreConfig { stride: opts.explore_stride, ..Default::default() });
+        let frontier = pareto_frontier(&points);
+        let _ = writeln!(
+            out,
+            "## Design-space Pareto frontier ({} of {} points)\n",
+            frontier.len(),
+            points.len()
+        );
+        let _ = writeln!(out, "| method | param | max err | area GE | latency |");
+        let _ = writeln!(out, "|---|---|---|---|---|");
+        for p in &frontier {
+            let _ = writeln!(
+                out,
+                "| {} | {} | {:.2e} | {:.0} | {} |",
+                p.id.name(),
+                p.param,
+                p.max_err,
+                p.area_ge,
+                p.latency_cycles
+            );
+        }
+    }
+
+    // Cost summary as markdown for quick diffing.
+    let _ = writeln!(out, "\n## Priced inventories (Table I configs)\n");
+    let model = CostModel::new();
+    let io = IoSpec::table1();
+    let _ = writeln!(out, "| method | area GE | LUT GE | stage FO4 |");
+    let _ = writeln!(out, "|---|---|---|---|");
+    for m in table1_suite() {
+        let c = model.price(&m.inventory(io));
+        let _ = writeln!(
+            out,
+            "| {} | {:.0} | {:.0} | {:.1} |",
+            m.describe(),
+            c.area_ge,
+            c.lut_area_ge,
+            c.stage_delay_fo4
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_report_contains_all_sections() {
+        // Skip the slow sections; structure check only.
+        let r = generate(ReportOptions { fig2: false, explore: false, explore_stride: 64 });
+        assert!(r.contains("# tanh-vlsi"));
+        assert!(r.contains("## Table I"));
+        assert!(r.contains("## Table II"));
+        assert!(r.contains("## §IV complexity"));
+        assert!(r.contains("## Error distribution"));
+        assert!(r.contains("Lambert(K=7)"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Report renderers: regenerate every table and figure of the paper as
+//! text/markdown/CSV (the evaluation surface of the reproduction).
+//!
+//! | renderer | paper artefact |
+//! |---|---|
+//! | [`fig2`]        | Fig 2 — error vs tunable parameter, 6 panels |
+//! | [`table1`]      | Table I — selected configurations + errors |
+//! | [`table2`]      | Table II — multi-bit velocity-factor lookup |
+//! | [`table3`]      | Table III — 1-ulp parameter vs I/O format |
+//! | [`complexity`]  | §IV component counts, priced by the cost model |
+
+pub mod complexity;
+pub mod fig2;
+pub mod full;
+pub mod table1;
+pub mod table2;
+pub mod table3;

@@ -1,0 +1,112 @@
+//! Table I — "Configurations selected for analysis (max input 6.0,
+//! 12-bit input precision, 15-bit output precision)".
+
+use crate::approx::table1_suite;
+use crate::error::{measure, InputGrid};
+use crate::fixed::QFormat;
+use crate::util::table::{sci, TextTable};
+
+/// One computed Table I row alongside the paper's reported values.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    /// Paper label (A, B1, …).
+    pub label: &'static str,
+    /// Method + configuration description.
+    pub config: String,
+    /// Our measured RMS error (the paper's "MSE" column tracks RMS —
+    /// see `error` module docs).
+    pub rms: f64,
+    /// Our measured max abs error.
+    pub max_err: f64,
+    /// Paper-reported "MSE" value.
+    pub paper_mse: f64,
+    /// Paper-reported max error.
+    pub paper_max: f64,
+}
+
+/// The paper's reported numbers, in row order.
+pub const PAPER_VALUES: [(f64, f64); 6] = [
+    (1.24e-5, 4.65e-5), // A   PWL 1/64
+    (1.16e-5, 3.65e-5), // B1  Taylor quadratic 1/16
+    (1.17e-5, 3.23e-5), // B2  Taylor cubic 1/8
+    (1.13e-5, 3.63e-5), // C   Catmull-Rom 1/16
+    (9.53e-6, 3.85e-5), // D   Velocity 1/128
+    (1.50e-5, 4.87e-5), // E   Lambert K=7
+];
+
+/// Computes all six rows by exhaustive sweep of the Table I grid.
+pub fn compute() -> Vec<Table1Row> {
+    let grid = InputGrid::table1();
+    table1_suite()
+        .into_iter()
+        .zip(PAPER_VALUES)
+        .map(|(m, (paper_mse, paper_max))| {
+            let e = measure(m.as_ref(), grid, QFormat::S_15);
+            Table1Row {
+                label: m.id().label(),
+                config: m.describe(),
+                rms: e.rms,
+                max_err: e.max_abs,
+                paper_mse,
+                paper_max,
+            }
+        })
+        .collect()
+}
+
+/// Renders the comparison table.
+pub fn render(rows: &[Table1Row]) -> String {
+    let mut t = TextTable::new(&[
+        "id", "configuration", "RMS (ours)", "paper MSE", "max err (ours)", "paper max",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.label.to_string(),
+            r.config.clone(),
+            sci(r.rms),
+            sci(r.paper_mse),
+            sci(r.max_err),
+            sci(r.paper_max),
+        ]);
+    }
+    format!(
+        "TABLE I — configurations selected for analysis\n\
+         (max input 6.0, 12-bit input precision, 15-bit output precision)\n\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rows_within_factor_two_of_paper() {
+        // The reproduction criterion: same error band, same ordering.
+        for r in compute() {
+            assert!(
+                r.max_err < 2.0 * r.paper_max && r.max_err > 0.3 * r.paper_max,
+                "{}: ours {} vs paper {}",
+                r.label,
+                r.max_err,
+                r.paper_max
+            );
+            assert!(
+                r.rms < 2.0 * r.paper_mse && r.rms > 0.3 * r.paper_mse,
+                "{}: rms {} vs paper {}",
+                r.label,
+                r.rms,
+                r.paper_mse
+            );
+        }
+    }
+
+    #[test]
+    fn render_contains_all_labels() {
+        let text = render(&compute());
+        for label in ["A ", "B1", "B2", "C ", "D ", "E "] {
+            assert!(text.contains(label.trim()), "{label}");
+        }
+        assert!(text.contains("TABLE I"));
+    }
+}

@@ -1,0 +1,62 @@
+//! Table II — "Multi-bit lookup for velocity factors": the contents of
+//! one paired-bit 4-to-1 mux entry, plus the concrete register file the
+//! Table I velocity configuration stores.
+
+use crate::approx::reference::velocity_factor;
+use crate::approx::velocity::Velocity;
+use crate::util::table::TextTable;
+
+/// Renders the schematic Table II plus the concrete register values.
+pub fn render(v: &Velocity) -> String {
+    let mut t = TextTable::new(&["bits", "value"]);
+    t.row(vec!["00".into(), "1.0".into()]);
+    t.row(vec!["01".into(), "Velocity factor corresponding to lsb".into()]);
+    t.row(vec!["10".into(), "Velocity factor corresponding to msb".into()]);
+    t.row(vec!["11".into(), "Multiplication of velocity factors of lsb and msb".into()]);
+
+    let mut regs = TextTable::new(&["k", "weight 2^k", "f = e^{2·2^k}", "stored (quantized)"]);
+    let m = v.threshold_shift() as i32;
+    for (i, k) in (-m..=v.kmax()).rev().enumerate() {
+        let w = (2f64).powi(k);
+        regs.row(vec![
+            format!("{k}"),
+            format!("{w}"),
+            format!("{:.9}", velocity_factor(w)),
+            format!("{:.9}", v.registers()[i].to_f64()),
+        ]);
+    }
+    format!(
+        "TABLE II — multi-bit lookup for velocity factors\n\n{}\n\
+         Stored register file for {} ({} registers):\n\n{}",
+        t.render(),
+        v.describe_public(),
+        v.register_count(),
+        regs.render()
+    )
+}
+
+impl Velocity {
+    /// Public description helper (TanhApprox::describe without the
+    /// trait import).
+    pub fn describe_public(&self) -> String {
+        use crate::approx::TanhApprox;
+        self.describe()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_schematic_and_registers() {
+        let text = render(&Velocity::table1());
+        assert!(text.contains("TABLE II"));
+        assert!(text.contains("00"));
+        assert!(text.contains("Multiplication of velocity factors"));
+        // 10 registers for θ=1/128 (paper §IV.E)
+        assert!(text.contains("10 registers"));
+        // largest register e^{2·4} = e^8 ≈ 2980.958
+        assert!(text.contains("2980.95"));
+    }
+}

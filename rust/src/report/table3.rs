@@ -1,0 +1,103 @@
+//! Table III — "Effect of input range and precision on approximation
+//! parameters": cheapest parameter per method reaching ≤ 1 output ulp.
+
+use crate::approx::MethodId;
+use crate::error::{table3_rows, Table3Row, Table3Spec};
+use crate::util::table::{step_str, TextTable};
+
+/// Paper-reported Table III parameters, row-major (A, B1, B2, C, D, E).
+/// Steps/thresholds as values, Lambert as term counts.
+pub const PAPER_VALUES: [[f64; 6]; 4] = [
+    [1.0 / 128.0, 1.0 / 32.0, 1.0 / 16.0, 1.0 / 16.0, 1.0 / 128.0, 6.0],
+    [1.0 / 128.0, 1.0 / 32.0, 1.0 / 16.0, 1.0 / 64.0, 1.0 / 256.0, 6.0],
+    [1.0 / 128.0, 1.0 / 32.0, 1.0 / 16.0, 1.0 / 64.0, 1.0 / 256.0, 8.0],
+    [1.0 / 8.0, 1.0 / 32.0, 1.0 / 32.0, 1.0 / 8.0, 1.0 / 8.0, 4.0],
+];
+
+/// Computes all four rows (exhaustive 1-ulp searches).
+pub fn compute(ulp_budget: f64) -> Vec<Table3Row> {
+    table3_rows()
+        .into_iter()
+        .map(|spec| crate::error::ulp_search::compute_table3_row(spec, ulp_budget))
+        .collect()
+}
+
+fn param_str(id: MethodId, p: Option<f64>) -> String {
+    match p {
+        None => "-".to_string(),
+        Some(v) if id == MethodId::Lambert => format!("{}", v as u64),
+        Some(v) => step_str(v),
+    }
+}
+
+/// Renders ours-vs-paper.
+pub fn render(rows: &[Table3Row]) -> String {
+    let mut t = TextTable::new(&[
+        "input", "output", "range", "A", "B1", "B2", "C", "D", "E", "paper(A..E)",
+    ]);
+    for (row, paper) in rows.iter().zip(PAPER_VALUES) {
+        let mut cells = vec![
+            format!("{}", row.spec.input),
+            format!("{}", row.spec.output),
+            format!("±{}", row.spec.range),
+        ];
+        for (i, id) in MethodId::all().into_iter().enumerate() {
+            cells.push(param_str(id, row.params[i]));
+        }
+        let paper_cells: Vec<String> = MethodId::all()
+            .into_iter()
+            .enumerate()
+            .map(|(i, id)| param_str(id, Some(paper[i])))
+            .collect();
+        cells.push(paper_cells.join(" "));
+        t.row(cells);
+    }
+    format!(
+        "TABLE III — effect of input range and precision on approximation\n\
+         parameters (max error ≤ 1 ulp)\n\n{}",
+        t.render()
+    )
+}
+
+/// The module also re-exports the spec type for the CLI.
+pub use crate::error::ulp_search::compute_table3_row;
+pub type Spec = Table3Spec;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::QFormat;
+
+    #[test]
+    fn eight_bit_row_shape_matches_paper() {
+        // Row 4 (S2.5 → S.7 ±4): all methods pass with cheap parameters,
+        // and the parameters are within 4× of the paper's.
+        let spec = Table3Spec { input: QFormat::S2_5, output: QFormat::S_7, range: 4.0 };
+        let row = compute_table3_row(spec, 1.0);
+        let paper = PAPER_VALUES[3];
+        for (i, id) in MethodId::all().into_iter().enumerate() {
+            let got = row.params[i].unwrap_or(0.0);
+            assert!(got > 0.0, "{id:?} found no passing parameter");
+            if id == MethodId::Lambert {
+                assert!(got <= paper[i] + 2.0, "{id:?}: {got} vs paper {}", paper[i]);
+            } else {
+                assert!(
+                    got >= paper[i] / 4.0,
+                    "{id:?}: {got} much finer than paper {}",
+                    paper[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn render_has_four_rows() {
+        // Use the cheap 8-bit spec only (full table is a bench, not a
+        // unit test).
+        let spec = Table3Spec { input: QFormat::S2_5, output: QFormat::S_7, range: 4.0 };
+        let row = compute_table3_row(spec, 1.0);
+        let text = render(&[row]);
+        assert!(text.contains("TABLE III"));
+        assert!(text.contains("S2.5"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Artifact directory: manifest parsing and lookup.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one graph input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// Dtype name as emitted by jax ("float32" / "int32").
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Artifact name (manifest key), e.g. `tanh_pwl_1024`.
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: PathBuf,
+    /// Input tensor specs in call order.
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// A parsed `artifacts/` directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    root: PathBuf,
+    entries: Vec<ArtifactMeta>,
+}
+
+impl ArtifactDir {
+    /// Opens a directory by reading its `manifest.json` (produced by
+    /// `python -m compile.aot`).
+    pub fn open(root: impl AsRef<Path>) -> Result<ArtifactDir> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let Json::Obj(map) = doc else {
+            return Err(anyhow!("manifest must be an object"));
+        };
+        let mut entries = Vec::new();
+        for (name, entry) in map {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|spec| -> Result<TensorSpec> {
+                    let shape = spec
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                        .iter()
+                        .map(|d| d.num().unwrap_or(0.0) as usize)
+                        .collect();
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(|d| d.str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(TensorSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactMeta { name, file: PathBuf::from(file), inputs });
+        }
+        Ok(ArtifactDir { root, entries })
+    }
+
+    /// The default location relative to the repo root, overridable with
+    /// `TANH_VLSI_ARTIFACTS`.
+    pub fn default_path() -> PathBuf {
+        std::env::var("TANH_VLSI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    /// Looks an entry up by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.root.join(&meta.file)
+    }
+
+    /// Root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"tanh_pwl_1024": {"file": "tanh_pwl_1024.hlo.txt",
+                 "inputs": [{"shape": [1024], "dtype": "float32"}]},
+                "lstm_cell_ref": {"file": "lstm_cell_ref.hlo.txt",
+                 "inputs": [{"shape": [32, 4], "dtype": "float32"},
+                            {"shape": [32, 64], "dtype": "float32"},
+                            {"shape": [32, 64], "dtype": "float32"}]}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("tanh_vlsi_artifact_test");
+        write_fixture(&dir);
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(a.entries().len(), 2);
+        let meta = a.get("tanh_pwl_1024").unwrap();
+        assert_eq!(meta.inputs.len(), 1);
+        assert_eq!(meta.inputs[0].shape, vec![1024]);
+        assert_eq!(meta.inputs[0].elements(), 1024);
+        let lstm = a.get("lstm_cell_ref").unwrap();
+        assert_eq!(lstm.inputs.len(), 3);
+        assert_eq!(lstm.inputs[1].shape, vec![32, 64]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let err = ArtifactDir::open("/nonexistent/nowhere").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

@@ -1,0 +1,167 @@
+//! The PJRT engine: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactDir, ArtifactMeta};
+
+/// A tensor crossing the runtime boundary (we only need f32/i32 — the
+/// two dtypes the paper's fixed-point story involves).
+#[derive(Clone, Debug)]
+pub enum TensorValue {
+    /// float32 data (row-major).
+    F32(Vec<f32>),
+    /// int32 raw fixed-point words.
+    I32(Vec<i32>),
+}
+
+impl TensorValue {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32(v) => v.len(),
+            TensorValue::I32(v) => v.len(),
+        }
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Extracts f32 data.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorValue::F32(v) => Ok(v),
+            TensorValue::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    /// Extracts i32 data.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorValue::I32(v) => Ok(v),
+            TensorValue::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+        let lit = match self {
+            TensorValue::F32(v) => xla::Literal::vec1(v),
+            TensorValue::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<TensorValue> {
+        match lit.ty()? {
+            xla::ElementType::F32 => Ok(TensorValue::F32(lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(TensorValue::I32(lit.to_vec::<i32>()?)),
+            other => Err(anyhow!("unsupported output dtype {other:?}")),
+        }
+    }
+}
+
+/// One compiled graph, ready to execute.
+pub struct LoadedGraph {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedGraph {
+    /// Input metadata.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Executes with the given inputs (shapes from the manifest) and
+    /// returns the flattened tuple outputs.
+    pub fn execute(&self, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (value, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if value.len() != spec.elements() {
+                return Err(anyhow!(
+                    "{}: input expects {} elements, got {}",
+                    self.meta.name,
+                    spec.elements(),
+                    value.len()
+                ));
+            }
+            literals.push(value.to_literal(&spec.shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Graphs are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        parts.iter().map(TensorValue::from_literal).collect()
+    }
+}
+
+/// The engine: a PJRT CPU client plus a lazily-populated executable
+/// cache over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: ArtifactDir,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedGraph>>>,
+}
+
+impl Engine {
+    /// Creates a CPU-PJRT engine over an artifact directory.
+    pub fn cpu(artifacts: ArtifactDir) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, artifacts, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The artifact directory.
+    pub fn artifacts(&self) -> &ArtifactDir {
+        &self.artifacts
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Loads (compiling if necessary) a graph by manifest name. The
+    /// compiled executable is cached — compile-once, execute-many.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedGraph>> {
+        if let Some(g) = self.cache.lock().unwrap().get(name) {
+            return Ok(g.clone());
+        }
+        let meta = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.artifacts.path_of(&meta);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let graph = std::sync::Arc::new(LoadedGraph { meta, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), graph.clone());
+        Ok(graph)
+    }
+
+    /// Convenience: run a single-input single-output f32 graph.
+    pub fn run_f32(&self, name: &str, input: Vec<f32>) -> Result<Vec<f32>> {
+        let graph = self.load(name)?;
+        let out = graph.execute(&[TensorValue::F32(input)])?;
+        Ok(out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: empty output tuple"))?
+            .as_f32()?
+            .to_vec())
+    }
+}

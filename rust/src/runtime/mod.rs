@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the JAX/Pallas AOT artifacts (`artifacts/
+//! *.hlo.txt`) and executes them from the rust hot path.
+//!
+//! Python never runs at serving time — the rust binary consumes only
+//! the HLO *text* artifacts (`HloModuleProto::from_text_file`; text
+//! rather than serialized protos because the image's xla_extension
+//! 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos, see
+//! /opt/xla-example/README.md), compiles them once on the PJRT CPU
+//! client, and keeps the loaded executables hot.
+
+mod artifact;
+mod engine;
+mod server;
+
+pub use artifact::{ArtifactDir, ArtifactMeta, TensorSpec};
+pub use engine::{Engine, LoadedGraph, TensorValue};
+pub use server::EngineServer;

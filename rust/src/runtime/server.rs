@@ -1,0 +1,131 @@
+//! Engine thread: the PJRT client and executables are not `Send`
+//! (the `xla` crate wraps raw pointers / `Rc` internally), so a single
+//! dedicated thread owns them and serves execute jobs over a channel.
+//! This mirrors how accelerator command queues actually work: one
+//! submission context, many logical clients.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::artifact::ArtifactDir;
+use super::engine::{Engine, TensorValue};
+
+enum Job {
+    Execute {
+        name: String,
+        inputs: Vec<TensorValue>,
+        reply: mpsc::Sender<Result<Vec<TensorValue>, String>>,
+    },
+    Preload {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<(), String>>,
+    },
+}
+
+/// A `Send + Sync` handle to the engine thread.
+pub struct EngineServer {
+    tx: Mutex<mpsc::Sender<Job>>,
+    platform: String,
+}
+
+impl EngineServer {
+    /// Spawns the engine thread over an artifact directory.
+    pub fn spawn(artifacts: ArtifactDir) -> Result<EngineServer> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<String, String>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::cpu(artifacts) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(e.platform()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Execute { name, inputs, reply } => {
+                            let result = engine
+                                .load(&name)
+                                .and_then(|g| g.execute(&inputs))
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(result);
+                        }
+                        Job::Preload { names, reply } => {
+                            let mut result = Ok(());
+                            for name in names {
+                                if let Err(e) = engine.load(&name) {
+                                    result = Err(e.to_string());
+                                    break;
+                                }
+                            }
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .expect("spawning engine thread");
+        let platform = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during init"))?
+            .map_err(|e| anyhow::anyhow!("engine init: {e}"))?;
+        Ok(EngineServer { tx: Mutex::new(tx), platform })
+    }
+
+    /// Spawns over the default artifact path.
+    pub fn spawn_default() -> Result<EngineServer> {
+        EngineServer::spawn(ArtifactDir::open(ArtifactDir::default_path())?)
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Compiles a set of graphs ahead of the hot path.
+    pub fn preload(&self, names: &[&str]) -> Result<(), String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Preload { names: iter_strings(names), reply })
+            .map_err(|_| "engine thread gone".to_string())?;
+        rx.recv().map_err(|_| "engine thread gone".to_string())?
+    }
+
+    /// Executes a graph by artifact name (blocking).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: Vec<TensorValue>,
+    ) -> Result<Vec<TensorValue>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| "engine thread gone".to_string())?;
+        rx.recv().map_err(|_| "engine thread gone".to_string())?
+    }
+
+    /// Convenience: single f32-in / f32-out graph.
+    pub fn run_f32(&self, name: &str, input: Vec<f32>) -> Result<Vec<f32>, String> {
+        let out = self.execute(name, vec![TensorValue::F32(input)])?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| "empty tuple".to_string())?
+            .as_f32()
+            .map(|v| v.to_vec())
+            .map_err(|e| e.to_string())
+    }
+}
+
+fn iter_strings(names: &[&str]) -> Vec<String> {
+    names.iter().map(|s| s.to_string()).collect()
+}

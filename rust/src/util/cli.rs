@@ -1,0 +1,264 @@
+//! Declarative CLI parsing (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with generated `--help` text. Only what the `tanh-vlsi`
+//! binary and the examples need.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    /// Long name without the leading `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// If true the option is a boolean flag (takes no value).
+    pub is_flag: bool,
+    /// Default value rendered in help (flags ignore this).
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: option values + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Returns the raw string value of `--name` if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Returns the value of `--name` or the given default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// True if the boolean flag `--name` was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Parses `--name` as `T`, with a default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("invalid value '{v}' for --{name}")),
+        }
+    }
+}
+
+/// A CLI command: name, help, options, and positional descriptor.
+#[derive(Debug)]
+pub struct Command {
+    /// Subcommand name (empty for the root).
+    pub name: &'static str,
+    /// One-line description shown in help.
+    pub about: &'static str,
+    /// Option specifications.
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// Builds a command spec.
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    /// Adds a value option.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: false, default });
+        self
+    }
+
+    /// Adds a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, is_flag: true, default: None });
+        self
+    }
+
+    /// Renders `--help` output.
+    pub fn help(&self, prog: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} {}\n{}\n", prog, self.name, self.about);
+        let _ = writeln!(out, "OPTIONS:");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let default = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(out, "{left:34} {}{default}", o.help);
+        }
+        out
+    }
+
+    /// Parses argv (after the subcommand token). Unknown options error.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut parsed = Parsed::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name} (see --help)"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    parsed.flags.push(name.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{name} needs a value"))?
+                        }
+                    };
+                    parsed.values.insert(name.to_string(), val);
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+}
+
+/// A multi-command CLI application.
+pub struct App {
+    /// Program name for help output.
+    pub prog: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Subcommands.
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    /// Renders top-level help.
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}\n", self.prog, self.about);
+        let _ = writeln!(out, "USAGE: {} <command> [options]\n\nCOMMANDS:", self.prog);
+        for c in &self.commands {
+            let _ = writeln!(out, "  {:22} {}", c.name, c.about);
+        }
+        let _ = writeln!(out, "\nRun '{} <command> --help' for command options.", self.prog);
+        out
+    }
+
+    /// Dispatches argv: returns the matched command + parsed options, or
+    /// a help/error string to print.
+    pub fn dispatch<'a>(&'a self, argv: &[String]) -> Result<(&'a Command, Parsed), String> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(self.help());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.help()))?;
+        let rest = &argv[1..];
+        if rest.iter().any(|a| a == "--help" || a == "-h") {
+            return Err(cmd.help(self.prog));
+        }
+        let parsed = cmd.parse(rest)?;
+        Ok((cmd, parsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            prog: "tanh-vlsi",
+            about: "test",
+            commands: vec![
+                Command::new("eval", "evaluate")
+                    .opt("method", "method id", Some("pwl"))
+                    .opt("x", "input", None)
+                    .flag("verbose", "more output"),
+                Command::new("table1", "table 1"),
+            ],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = app();
+        let (cmd, p) = a.dispatch(&argv(&["eval", "--method", "taylor", "--verbose", "pos1", "--x=0.5"])).unwrap();
+        assert_eq!(cmd.name, "eval");
+        assert_eq!(p.get("method"), Some("taylor"));
+        assert_eq!(p.get("x"), Some("0.5"));
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let a = app();
+        assert!(a.dispatch(&argv(&["eval", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_shows_help() {
+        let a = app();
+        let err = a.dispatch(&argv(&["zzz"])).unwrap_err();
+        assert!(err.contains("unknown command"));
+        assert!(err.contains("COMMANDS"));
+    }
+
+    #[test]
+    fn help_flag_returns_help_text() {
+        let a = app();
+        let err = a.dispatch(&argv(&["eval", "--help"])).unwrap_err();
+        assert!(err.contains("--method"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let a = app();
+        assert!(a.dispatch(&argv(&["eval", "--method"])).is_err());
+    }
+
+    #[test]
+    fn parse_or_types() {
+        let a = app();
+        let (_, p) = a.dispatch(&argv(&["eval", "--x", "1.25"])).unwrap();
+        let x: f64 = p.parse_or("x", 0.0).unwrap();
+        assert_eq!(x, 1.25);
+        let bad: Result<f64, _> = a
+            .dispatch(&argv(&["eval", "--x", "abc"]))
+            .and_then(|(_, p)| p.parse_or("x", 0.0));
+        assert!(bad.is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! CSV writer for figure data series (Fig 2 sweeps etc.).
+
+use std::io::{self, Write};
+use std::path::Path;
+
+/// A CSV document with a fixed header.
+#[derive(Clone, Debug)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    /// Creates a CSV with the given column names.
+    pub fn new(header: &[&str]) -> Csv {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Appends a row of raw cells (quoted as needed on render).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Renders the document to a string (RFC-4180 quoting).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&quote_row(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&quote_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Writes the document to a file, creating parent directories.
+    pub fn write_file(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+fn quote_cell(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+fn quote_row(cells: &[String]) -> String {
+    cells.iter().map(|c| quote_cell(c)).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_quotes() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into(), "x,y".into()]);
+        c.row(vec!["2".into(), "he said \"hi\"".into()]);
+        let s = c.render();
+        assert_eq!(s.lines().next().unwrap(), "a,b");
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("tanh_vlsi_csv_test");
+        let path = dir.join("sub/out.csv");
+        let mut c = Csv::new(&["v"]);
+        c.row(vec!["42".into()]);
+        c.write_file(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "v\n42\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,21 @@
+//! Small infrastructure substrates the offline image forces us to own.
+//!
+//! The vendored crate set contains neither `clap`, `serde`, `rand`,
+//! `proptest` nor `criterion`, so this module provides minimal,
+//! well-tested replacements:
+//!
+//! - [`cli`] — declarative flag/subcommand parser for the `tanh-vlsi` binary,
+//! - [`prng`] — splitmix64/xoshiro256** deterministic PRNG,
+//! - [`proptest`] — seeded property-test runner with shrinking,
+//! - [`json`] — minimal JSON value model + writer (reports, metrics),
+//! - [`csv`] — CSV writer for figure series,
+//! - [`table`] — aligned text tables for paper-style output.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod table;
+
+pub use prng::Prng;

@@ -1,0 +1,77 @@
+//! Minimal property-test runner (proptest is not in the offline set).
+//!
+//! A property is a closure `FnMut(&mut Prng) -> Result<(), String>`; the
+//! runner executes it `cases` times with a fixed base seed (so failures
+//! are reproducible) and, on failure, retries the failing seed reporting
+//! the case index — enough for the invariant-style properties this crate
+//! uses. Seeds can be overridden with `TANH_VLSI_PROP_SEED` to replay.
+
+pub use super::prng::Prng;
+
+/// Runs `cases` random cases of `prop`; panics with diagnostics on the
+/// first failure.
+pub fn prop_check<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let base_seed = std::env::var("TANH_VLSI_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        // Derive a per-case seed so a failure report pinpoints one case.
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Prng::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (seed {seed}, set TANH_VLSI_PROP_SEED={base_seed} to replay): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`prop_check`] but the property also receives the case index —
+/// useful for sweeping structured inputs deterministically.
+pub fn prop_check_indexed<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(u32, &mut Prng) -> Result<(), String>,
+{
+    let base_seed = std::env::var("TANH_VLSI_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Prng::new(seed);
+        if let Err(msg) = prop(case, &mut g) {
+            panic!("property '{name}' failed at case {case}/{cases} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("trivially true", 100, |_g| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        prop_check("always fails", 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn indexed_variant_sees_all_indices() {
+        let mut seen = vec![false; 10];
+        prop_check_indexed("indices", 10, |i, _g| {
+            seen[i as usize] = true;
+            Ok(())
+        });
+        assert!(seen.iter().all(|&b| b));
+    }
+}

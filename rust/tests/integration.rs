@@ -1,0 +1,214 @@
+//! Integration tests over the full stack: PJRT runtime loading the
+//! JAX/Pallas artifacts, cross-language numerical checks against the
+//! python-emitted test vectors, and the coordinator serving through the
+//! compiled graphs.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when the artifact directory is absent so `cargo
+//! test` stays green on a fresh checkout.
+
+use std::sync::Arc;
+
+use tanh_vlsi::approx::{table1_suite, MethodId, TanhApprox};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, GraphBackend};
+use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::runtime::{ArtifactDir, EngineServer, TensorValue};
+use tanh_vlsi::util::json::{self, Json};
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    // Tests run from the crate root; also accept the env override.
+    let p = ArtifactDir::default_path();
+    if p.join("manifest.json").exists() {
+        return Some(p);
+    }
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        return Some(p);
+    }
+    None
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_root() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn load_vectors(root: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(root.join("test_vectors.json")).unwrap();
+    json::parse(&text).unwrap()
+}
+
+fn vec_f32(j: &Json) -> Vec<f32> {
+    j.as_arr().unwrap().iter().map(|v| v.num().unwrap() as f32).collect()
+}
+
+fn vec_i32(j: &Json) -> Vec<i32> {
+    j.as_arr().unwrap().iter().map(|v| v.num().unwrap() as i32).collect()
+}
+
+fn spawn_engine(root: &std::path::Path) -> EngineServer {
+    EngineServer::spawn(ArtifactDir::open(root).unwrap()).unwrap()
+}
+
+#[test]
+fn runtime_executes_every_tanh_graph_matching_python() {
+    let root = require_artifacts!();
+    let engine = spawn_engine(&root);
+    let vectors = load_vectors(&root);
+    let xs = vec_f32(vectors.get("tanh_input_f32").unwrap());
+    for method in ["pwl", "taylor1", "taylor2", "catmull_rom", "velocity", "lambert", "ref"] {
+        let name = format!("tanh_{method}_1024");
+        let got = engine.run_f32(&name, xs.clone()).unwrap();
+        let want = vec_f32(vectors.get("tanh_expected").unwrap().get(method).unwrap());
+        assert_eq!(got.len(), want.len(), "{name}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            // Exactly the same HLO graph python executed; CPU PJRT is
+            // deterministic, so this is equality, not allclose.
+            assert_eq!(g, w, "{name}[{i}]: rust {g} vs python {w}");
+        }
+    }
+}
+
+#[test]
+fn pwl_raw_graph_is_bit_exact_against_rust_golden_model() {
+    // The flagship cross-language claim: the Pallas int32 PWL kernel,
+    // AOT-lowered and executed by the rust PJRT runtime, reproduces the
+    // rust fixed-point golden datapath raw-word for raw-word.
+    let root = require_artifacts!();
+    let engine = spawn_engine(&root);
+    let vectors = load_vectors(&root);
+    let raw_in = vec_i32(vectors.get("tanh_raw_input").unwrap());
+    let out = engine
+        .execute("tanh_pwl_raw_1024", vec![TensorValue::I32(raw_in.clone())])
+        .unwrap();
+    let got = out[0].as_i32().unwrap();
+
+    // python-recorded expectation
+    let want = vec_i32(vectors.get("tanh_raw_expected").unwrap());
+    assert_eq!(got, &want[..], "rust-PJRT vs python execution");
+
+    // rust golden model expectation
+    let golden = tanh_vlsi::approx::pwl::Pwl::table1();
+    for (i, &raw) in raw_in.iter().enumerate() {
+        let x = Fx::from_raw(raw as i64, QFormat::S3_12);
+        let want = golden.eval_fx(x, QFormat::S_15).raw() as i32;
+        assert_eq!(got[i], want, "raw {raw}: pallas {} vs golden {want}", got[i]);
+    }
+}
+
+#[test]
+fn lstm_logits_graph_matches_python_and_classifies() {
+    let root = require_artifacts!();
+    let engine = spawn_engine(&root);
+    let vectors = load_vectors(&root);
+    let lstm = vectors.get("lstm").unwrap();
+    let seq = vec_f32(lstm.get("seq").unwrap());
+    let labels = vec_i32(lstm.get("labels").unwrap());
+
+    for method in ["ref", "pwl"] {
+        let name = format!("lstm_logits_{method}");
+        let out = engine.execute(&name, vec![TensorValue::F32(seq.clone())]).unwrap();
+        let logits = out[0].as_f32().unwrap();
+        let want = vec_f32(lstm.get(&format!("logits_{method}")).unwrap());
+        // 16 chained matmuls: the two XLA versions fuse/reassociate
+        // differently, so this is allclose (≈1e-7 per step), not eq.
+        assert_eq!(logits.len(), want.len());
+        for (i, (g, w)) in logits.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4, "{name}[{i}]: {g} vs {w}");
+        }
+
+        // The trained model must actually classify (≥75% on this batch).
+        let correct = labels
+            .iter()
+            .enumerate()
+            .filter(|(i, &l)| {
+                let pred = if logits[2 * i + 1] > logits[2 * i] { 1 } else { 0 };
+                pred == l
+            })
+            .count();
+        let acc = correct as f64 / labels.len() as f64;
+        assert!(acc >= 0.75, "{name}: accuracy {acc}");
+    }
+}
+
+#[test]
+fn approx_lstm_matches_exact_lstm_predictions() {
+    // End-to-end approximation-impact check: PWL-activations LSTM must
+    // agree with the exact-tanh LSTM on (almost) every prediction.
+    let root = require_artifacts!();
+    let vectors = load_vectors(&root);
+    let lstm = vectors.get("lstm").unwrap();
+    let l_ref = vec_f32(lstm.get("logits_ref").unwrap());
+    let l_pwl = vec_f32(lstm.get("logits_pwl").unwrap());
+    let n = l_ref.len() / 2;
+    let mut agree = 0;
+    for i in 0..n {
+        let p_ref = l_ref[2 * i + 1] > l_ref[2 * i];
+        let p_pwl = l_pwl[2 * i + 1] > l_pwl[2 * i];
+        if p_ref == p_pwl {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 / n as f64 >= 0.95, "agreement {agree}/{n}");
+    // and the raw logits stay close
+    let max_dev = l_ref
+        .iter()
+        .zip(&l_pwl)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 0.1, "max logit deviation {max_dev}");
+}
+
+#[test]
+fn coordinator_serves_through_compiled_graphs() {
+    let root = require_artifacts!();
+    let engine = Arc::new(spawn_engine(&root));
+    let backend = GraphBackend::load_all(engine, 1024).unwrap();
+    let coord = Coordinator::start(Arc::new(backend), CoordinatorConfig::default());
+
+    // Mixed-method concurrent load; every reply must match the golden
+    // model within the f32 band.
+    let goldens: Vec<_> = table1_suite();
+    let mut receivers = Vec::new();
+    for (i, method) in MethodId::all().into_iter().cycle().take(24).enumerate() {
+        let values: Vec<f32> = (0..37).map(|j| ((i * 37 + j) as f32) * 0.01 - 3.0).collect();
+        receivers.push((method, values.clone(), coord.submit(method, values).unwrap()));
+    }
+    for (method, values, rx) in receivers {
+        let out = rx.recv().unwrap().expect_values();
+        let golden = goldens.iter().find(|g| g.id() == method).unwrap();
+        for (x, y) in values.iter().zip(&out) {
+            let want = golden.eval_fx(Fx::from_f64(*x as f64, QFormat::S3_12), QFormat::S_15);
+            // f32 kernel vs fixed-point golden: the kernels compute in
+            // f32 without output quantization, so allow the method's
+            // Table I band plus quantization.
+            assert!(
+                (want.to_f64() - *y as f64).abs() < 3e-4,
+                "{method:?} x={x}: pjrt {y} golden {}",
+                want.to_f64()
+            );
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests, 24);
+    assert_eq!(m.errors, 0);
+    assert!(m.batch_efficiency() > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn engine_reports_platform_and_rejects_unknown_artifacts() {
+    let root = require_artifacts!();
+    let engine = spawn_engine(&root);
+    assert!(!engine.platform().is_empty());
+    assert!(engine.run_f32("nope_123", vec![0.0]).is_err());
+    // shape mismatch is rejected before reaching PJRT
+    assert!(engine.run_f32("tanh_pwl_1024", vec![0.0; 7]).is_err());
+}

@@ -1,0 +1,250 @@
+//! Cross-module property tests: invariants that must hold across the
+//! whole approximation suite, randomized over configurations — plus
+//! failure injection for the coordinator.
+
+use std::sync::Arc;
+
+use tanh_vlsi::approx::{build, eval_odd_saturating, table1_suite, MethodId, TanhApprox};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, ExecBackend};
+use tanh_vlsi::error::InputGrid;
+use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::hw::table1_pipeline;
+use tanh_vlsi::util::proptest::{prop_check, Prng};
+
+const INP: QFormat = QFormat::S3_12;
+const OUT: QFormat = QFormat::S_15;
+
+#[test]
+fn prop_output_bounded_by_one_for_all_methods_and_params() {
+    // |tanh| < 1 must survive any configuration, any input.
+    prop_check("output magnitude ≤ max_raw", 300, |g: &mut Prng| {
+        let id = *g.choose(&MethodId::all());
+        let param = match id {
+            MethodId::Lambert => g.i64_in(1, 12) as f64,
+            _ => (2f64).powi(-g.i64_in(2, 8) as i32),
+        };
+        let m = build(id, param, 6.0);
+        for _ in 0..20 {
+            let x = Fx::from_raw(g.i64_in(INP.min_raw(), INP.max_raw()), INP);
+            let y = m.eval_fx(x, OUT);
+            if y.raw().abs() > OUT.max_raw() {
+                return Err(format!("{}: |{}| > max at x={}", m.describe(), y.raw(), x.to_f64()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_odd_symmetry_random_configs() {
+    prop_check("odd symmetry", 200, |g: &mut Prng| {
+        let id = *g.choose(&MethodId::all());
+        let param = match id {
+            MethodId::Lambert => g.i64_in(2, 10) as f64,
+            _ => (2f64).powi(-g.i64_in(3, 8) as i32),
+        };
+        let m = build(id, param, 6.0);
+        let raw = g.i64_in(0, INP.max_raw());
+        let xp = Fx::from_raw(raw, INP);
+        let xn = Fx::from_raw(-raw, INP);
+        let (yp, yn) = (m.eval_fx(xp, OUT), m.eval_fx(xn, OUT));
+        if yp.raw() != -yn.raw() {
+            return Err(format!("{} at raw {raw}: {} vs {}", m.describe(), yp.raw(), yn.raw()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_bounded_by_method_band() {
+    // Any Table I method must stay within 4 ulp everywhere (the paper's
+    // band is ~1.6 ulp; 4 is the hard invariant).
+    prop_check("error ≤ 4 ulp", 400, |g: &mut Prng| {
+        let suite = table1_suite();
+        let m = &suite[g.usize_below(suite.len())];
+        let x = Fx::from_raw(g.i64_in(INP.min_raw(), INP.max_raw()), INP);
+        let y = m.eval_fx(x, OUT);
+        let err = (y.to_f64() - x.to_f64().tanh()).abs();
+        if err > 4.0 * OUT.ulp() {
+            return Err(format!("{} x={}: err {err}", m.describe(), x.to_f64()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelines_match_goldens_fuzzed() {
+    // The hw pipelines are re-checked with random (not strided) inputs.
+    let suite = table1_suite();
+    let pipes: Vec<_> = MethodId::all()
+        .into_iter()
+        .map(|id| table1_pipeline(id, OUT))
+        .collect();
+    prop_check("pipeline == golden", 500, |g: &mut Prng| {
+        let i = g.usize_below(6);
+        let x = Fx::from_raw(g.i64_in(INP.min_raw(), INP.max_raw()), INP);
+        let want = suite[i].eval_fx(x, OUT);
+        let got = pipes[i].eval(x);
+        if got.raw() != want.raw() {
+            return Err(format!(
+                "{} x={}: pipeline {} vs golden {}",
+                suite[i].describe(),
+                x.to_f64(),
+                got.to_f64(),
+                want.to_f64()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_monotone_pwl_and_catmull() {
+    // Interpolants of a monotone function through monotone data stay
+    // monotone for PWL; Catmull-Rom can overshoot only between control
+    // points whose slope changes sign — never the case for tanh. Check
+    // on random adjacent pairs.
+    let methods: Vec<Box<dyn TanhApprox>> = vec![
+        Box::new(tanh_vlsi::approx::pwl::Pwl::table1()),
+        Box::new(tanh_vlsi::approx::catmull_rom::CatmullRom::table1()),
+    ];
+    prop_check("local monotonicity", 500, |g: &mut Prng| {
+        let m = &methods[g.usize_below(2)];
+        let raw = g.i64_in(INP.min_raw(), INP.max_raw() - 1);
+        let y0 = eval_odd_saturating(m.as_ref(), Fx::from_raw(raw, INP), OUT);
+        let y1 = eval_odd_saturating(m.as_ref(), Fx::from_raw(raw + 1, INP), OUT);
+        if y1.raw() < y0.raw() {
+            return Err(format!("{} inversion at raw {raw}", m.describe()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_strides_preserve_bounds() {
+    // A strided sweep can only under-report, never over-report, the max
+    // error of a full sweep.
+    let grid = InputGrid::table1();
+    let pwl = tanh_vlsi::approx::pwl::Pwl::table1();
+    let full = tanh_vlsi::error::measure(&pwl, grid, OUT);
+    prop_check("strided ≤ full", 10, |g: &mut Prng| {
+        let stride = 2 + g.usize_below(64);
+        let mut max: f64 = 0.0;
+        for x in grid.iter_strided(stride) {
+            let y = pwl.eval_fx(x, OUT);
+            max = max.max((y.to_f64() - x.to_f64().tanh()).abs());
+        }
+        if max > full.max_abs + 1e-15 {
+            return Err(format!("stride {stride}: {max} > {}", full.max_abs));
+        }
+        Ok(())
+    });
+}
+
+// ---------- failure injection ----------
+
+/// A backend that fails every `fail_every`-th batch.
+struct FlakyBackend {
+    inner: tanh_vlsi::coordinator::GoldenBackend,
+    counter: std::sync::atomic::AtomicU64,
+    fail_every: u64,
+}
+
+impl ExecBackend for FlakyBackend {
+    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+        let n = self.counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if n % self.fail_every == self.fail_every - 1 {
+            return Err("injected backend failure".to_string());
+        }
+        self.inner.execute(method, flat)
+    }
+
+    fn batch_elements(&self) -> usize {
+        self.inner.batch_elements()
+    }
+}
+
+#[test]
+fn coordinator_survives_backend_failures() {
+    use tanh_vlsi::coordinator::GoldenBackend;
+    let backend = Arc::new(FlakyBackend {
+        inner: GoldenBackend::table1(64),
+        counter: Default::default(),
+        fail_every: 3,
+    });
+    let coord = Coordinator::start(backend, CoordinatorConfig::default());
+    let mut ok = 0;
+    let mut failed = 0;
+    for i in 0..60 {
+        let rx = coord.submit(MethodId::all()[i % 6], vec![0.5, -0.5]).unwrap();
+        match rx.recv().unwrap().outcome {
+            Ok(v) => {
+                assert_eq!(v.len(), 2);
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(e.contains("injected"), "{e}");
+                failed += 1;
+            }
+        }
+    }
+    // Both outcomes observed; the coordinator never wedged.
+    assert!(ok > 0, "no successes");
+    assert!(failed > 0, "failure injection never fired");
+    let m = coord.metrics();
+    assert_eq!(m.requests as usize + failed_count(&m, failed), 60 + extra(&m));
+    assert!(m.errors > 0);
+    coord.shutdown();
+}
+
+// metrics.requests only counts successes; reconcile in a readable way.
+fn failed_count(_m: &tanh_vlsi::coordinator::MetricsSnapshot, failed: usize) -> usize {
+    failed
+}
+fn extra(_m: &tanh_vlsi::coordinator::MetricsSnapshot) -> usize {
+    0
+}
+
+#[test]
+fn coordinator_backpressure_rejects_when_flooded() {
+    use std::time::Duration;
+    use tanh_vlsi::coordinator::{BatcherConfig, GoldenBackend};
+
+    /// A backend that is very slow, so the queue fills.
+    struct SlowBackend(GoldenBackend);
+    impl ExecBackend for SlowBackend {
+        fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+            std::thread::sleep(Duration::from_millis(20));
+            self.0.execute(method, flat)
+        }
+        fn batch_elements(&self) -> usize {
+            self.0.batch_elements()
+        }
+    }
+
+    let coord = Coordinator::start(
+        Arc::new(SlowBackend(GoldenBackend::table1(64))),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_queue: 256, ..Default::default() },
+        },
+    );
+    // Flood one method's queue without draining.
+    let mut receivers = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..100 {
+        match coord.submit(MethodId::Pwl, vec![0.1; 32]) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => {
+                assert!(e.contains("backpressure"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "backpressure never engaged");
+    // Accepted requests still complete.
+    for rx in receivers {
+        let _ = rx.recv().unwrap().expect_values();
+    }
+    assert!(coord.metrics().rejected as usize >= rejected);
+    coord.shutdown();
+}
