@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification (referenced from ROADMAP.md): release build, full
+# test suite, then a throughput smoke bench so hot-path regressions and
+# bench-target bitrot are caught even though `cargo test` never builds
+# the bench binaries.
+#
+# Usage: rust/scripts/tier1.sh   (from anywhere; cd's to the crate root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== tier-1: throughput smoke bench (TANH_SMOKE=1) =="
+TANH_SMOKE=1 cargo bench --bench throughput
+
+echo "== tier-1: OK =="

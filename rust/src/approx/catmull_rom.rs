@@ -17,6 +17,7 @@
 //! The first segment needs `P_{−1} = tanh(−s) = −P_1` (odd symmetry);
 //! the top segments need two guard points beyond the domain.
 
+use super::compiled::{CompiledKernel, KernelBody};
 use super::lut::UniformLut;
 use super::reference::tanh_ref;
 use super::{IoSpec, MethodId, TanhApprox};
@@ -179,6 +180,34 @@ impl TanhApprox for CatmullRom {
         self.domain_max
     }
 
+    /// Compiled form: the paper's §IV.D stored-t-vector variant — the
+    /// four basis polynomials take only `2^t_bits` distinct values, so
+    /// they are tabulated at compile time and each input is a 4-wide
+    /// integer MAC against pre-converted control points.
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        let step_shift = (1.0 / self.step).log2() as u32;
+        if io.input.frac_bits < step_shift {
+            return CompiledKernel::tabulate(self, io);
+        }
+        let t_bits = io.input.frac_bits - step_shift;
+        if t_bits > 16 {
+            // A 4 × 2^t_bits basis LUT stops being a win; tabulate.
+            return CompiledKernel::tabulate(self, io);
+        }
+        let basis: Vec<[i64; 4]> = (0..1usize << t_bits)
+            .map(|t_raw| {
+                let t = Fx::from_raw_unchecked(t_raw as i64, QFormat::new(0, t_bits));
+                let b = Self::basis_fx(t);
+                [b[0].raw(), b[1].raw(), b[2].raw(), b[3].raw()]
+            })
+            .collect();
+        let points: Vec<i64> = (0..self.lut.len())
+            .map(|i| self.lut.at(i).convert(INT_FMT, Round::NearestEven).raw())
+            .collect();
+        let body = KernelBody::SplineMac { basis, points, t_bits, int_frac: INT_FMT.frac_bits };
+        CompiledKernel::with_body(io, self.domain_max, body).debug_check(self)
+    }
+
     fn inventory(&self, io: IoSpec) -> Inventory {
         // Dot product: 4 multipliers + 3 adders (paper: "a simple MAC and
         // vector computation units").
@@ -300,6 +329,22 @@ mod tests {
         let x = Fx::from_f64(0.02, INP);
         let y = cr.eval_fx(x, OUT);
         assert!((y.to_f64() - tanh_ref(x.to_f64())).abs() < 1e-4);
+    }
+
+    #[test]
+    fn compiled_kernel_bit_matches_scalar() {
+        // Stored-basis MAC kernel vs the golden datapath, including the
+        // first segment (odd reflection) and the guard-entry top end.
+        let cr = CatmullRom::table1();
+        let k = cr.compile(IoSpec::table1());
+        for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(13) {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(k.eval_raw(raw), cr.eval_fx(x, OUT).raw(), "raw {raw}");
+        }
+        for raw in [0, 1, 15, 16, 17, 24575, 24576, 24577] {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(k.eval_raw(raw), cr.eval_fx(x, OUT).raw(), "edge raw {raw}");
+        }
     }
 
     #[test]

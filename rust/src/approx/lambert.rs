@@ -21,6 +21,7 @@
 //! that design — see DESIGN.md §3). The final division reuses the shared
 //! Newton-Raphson divider.
 
+use super::compiled::CompiledKernel;
 use super::newton::{div_f64, fx_div, NR_ITERS};
 use super::{IoSpec, MethodId, TanhApprox};
 use crate::cost::Inventory;
@@ -136,6 +137,16 @@ impl TanhApprox for Lambert {
 
     fn domain_max(&self) -> f64 {
         self.domain_max
+    }
+
+    /// Compiled form: the continued fraction is K serial MAC stages
+    /// feeding an NR divider — there is no per-input sub-structure to
+    /// hoist, so the compiled kernel is the §IV.H "the circuit runs
+    /// faster if LUTs are used" trade: a dense magnitude table (≤ 2^15
+    /// entries for the paper's 16-bit inputs), built in parallel from
+    /// the golden datapath and bit-exact by construction.
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        CompiledKernel::tabulate(self, io)
     }
 
     fn inventory(&self, _io: IoSpec) -> Inventory {

@@ -16,8 +16,17 @@
 //! algorithm can be implemented for positive values only") via
 //! [`eval_odd_saturating`], and saturate to the output format's max
 //! beyond the configured domain (paper §III.A).
+//!
+//! Every method additionally **compiles** ([`TanhApprox::compile`]) into
+//! an integer-only batch kernel ([`compiled::CompiledKernel`]) that is
+//! bit-exact against `eval_fx` but one to two orders of magnitude
+//! faster: the serving backend and the exhaustive error sweeps run on
+//! compiled kernels, the scalar datapath models stay the auditable
+//! golden reference. See [`compiled`] for the per-method kernel shapes
+//! and when to use which path.
 
 pub mod catmull_rom;
+pub mod compiled;
 pub mod lambert;
 pub mod lut;
 pub mod newton;
@@ -28,6 +37,8 @@ pub mod regions;
 pub mod sigmoid;
 pub mod taylor;
 pub mod velocity;
+
+pub use compiled::CompiledKernel;
 
 use crate::cost::Inventory;
 use crate::fixed::{Fx, QFormat};
@@ -128,6 +139,19 @@ pub trait TanhApprox: Send + Sync {
     /// Full datapath evaluation: sign split + saturation + positive core.
     fn eval_fx(&self, x: Fx, out: QFormat) -> Fx {
         eval_odd_saturating(self, x, out)
+    }
+
+    /// Compiles this configuration into an integer-only batch kernel
+    /// for the given I/O formats — the production hot path.
+    ///
+    /// The kernel is bit-exact against [`TanhApprox::eval_fx`] on every
+    /// representable input raw (asserted by a strided cross-check in
+    /// debug builds and exhaustively by the property tests). The
+    /// default tabulates the golden datapath densely (exact by
+    /// construction); the six paper methods override it with structured
+    /// kernels — see [`compiled`] for the shapes and trade-offs.
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        CompiledKernel::tabulate(self, io)
     }
 }
 

@@ -7,6 +7,7 @@
 //! fetch both endpoints in one cycle — §IV.B), one subtractor, one
 //! multiplier, one adder.
 
+use super::compiled::{CompiledKernel, KernelBody};
 use super::lut::UniformLut;
 use super::reference::tanh_ref;
 use super::{IoSpec, MethodId, TanhApprox};
@@ -41,45 +42,6 @@ impl Pwl {
     /// The endpoint LUT (exposed for the hw datapath simulator).
     pub fn lut(&self) -> &UniformLut {
         &self.lut
-    }
-
-    /// Compiles the production scalar hot path: a closure over a dense
-    /// raw-word table doing integer-only arithmetic (no `Fx` wrappers,
-    /// no float conversions). Bit-identical to `eval_fx(S3.12 → S.15)`
-    /// — asserted by the tests — and ~4× faster (EXPERIMENTS.md §Perf
-    /// iter 5); this is what the serving backend uses per activation.
-    pub fn compile_raw(&self) -> impl Fn(i64) -> i64 + Send + Sync + 'static {
-        let in_fmt = QFormat::S3_12;
-        let out_max = QFormat::S_15.max_raw();
-        let step_shift = (1.0 / self.step).log2() as u32;
-        let t_bits = in_fmt.frac_bits - step_shift;
-        let domain_raw = (self.domain_max * (1i64 << in_fmt.frac_bits) as f64) as i64;
-        let lut: Vec<i64> = (0..self.lut.len()).map(|i| self.lut.at(i).raw()).collect();
-        let in_max = in_fmt.max_raw();
-        let t_mask = (1i64 << t_bits) - 1;
-        let half = 1i64 << (t_bits - 1);
-        move |raw: i64| {
-            let neg = raw < 0;
-            let mag = raw.abs().min(in_max);
-            if mag >= domain_raw {
-                return if neg { -out_max } else { out_max };
-            }
-            let idx = (mag >> t_bits) as usize;
-            let t = mag & t_mask;
-            let y0 = lut[idx];
-            let y1 = lut[idx + 1];
-            // wide accumulate + round-half-even narrow (same as FxWide)
-            let acc = (y0 << t_bits) + (y1 - y0) * t;
-            let floor = acc >> t_bits;
-            let rem = acc - (floor << t_bits);
-            let up = (rem > half) as i64 | ((rem == half) as i64 & (floor & 1));
-            let y = (floor + up).clamp(0, out_max);
-            if neg {
-                -y
-            } else {
-                y
-            }
-        }
     }
 
     /// Step size.
@@ -131,6 +93,24 @@ impl TanhApprox for Pwl {
 
     fn domain_max(&self) -> f64 {
         self.domain_max
+    }
+
+    /// Compiled form (superseding the old `compile_raw` closure, which
+    /// was hardwired to S3.12 → S.15): the endpoint LUT as raw words
+    /// plus an integer lerp on the low t bits, for any I/O formats the
+    /// step can address. ~5× the generic `eval_fx` rate — EXPERIMENTS.md
+    /// §Perf.
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        let step_shift = (1.0 / self.step).log2() as u32;
+        if io.input.frac_bits < step_shift {
+            // Step finer than the input ulp: the bit-slice decode does
+            // not exist (the scalar path rejects this too).
+            return CompiledKernel::tabulate(self, io);
+        }
+        let t_bits = io.input.frac_bits - step_shift;
+        let lut: Vec<i64> = (0..self.lut.len()).map(|i| self.lut.at(i).raw()).collect();
+        let body = KernelBody::Pwl { lut, lut_frac: self.lut.format().frac_bits, t_bits };
+        CompiledKernel::with_body(io, self.domain_max, body).debug_check(self)
     }
 
     fn inventory(&self, io: IoSpec) -> Inventory {
@@ -232,18 +212,39 @@ mod tests {
     }
 
     #[test]
-    fn compiled_raw_path_bit_matches_eval_fx() {
+    fn compiled_kernel_bit_matches_eval_fx() {
         // The production fast path must agree with the golden model on
         // every S3.12 word (full exhaustive check).
         let pwl = Pwl::table1();
-        let fast = pwl.compile_raw();
+        let kernel = pwl.compile(IoSpec::table1());
         for raw in -(INP.max_raw() + 1)..=INP.max_raw() {
             let x = Fx::from_raw(raw, INP);
             assert_eq!(
-                fast(raw),
+                kernel.eval_raw(raw),
                 pwl.eval_fx(x, OUT).raw(),
                 "raw {raw}"
             );
+        }
+    }
+
+    #[test]
+    fn compiled_kernel_generalizes_to_other_formats() {
+        // The old compile_raw was hardwired to S3.12 → S.15; the kernel
+        // must stay bit-exact on the Table III formats too.
+        for (input, output, domain) in [
+            (QFormat::S2_13, QFormat::S_15, 4.0),
+            (QFormat::S2_5, QFormat::S_7, 4.0),
+        ] {
+            let pwl = Pwl::new(1.0 / 16.0, domain);
+            let kernel = pwl.compile(IoSpec { input, output });
+            for raw in input.min_raw()..=input.max_raw() {
+                let x = Fx::from_raw(raw, input);
+                assert_eq!(
+                    kernel.eval_raw(raw),
+                    pwl.eval_fx(x, output).raw(),
+                    "{input} -> {output} raw {raw}"
+                );
+            }
         }
     }
 

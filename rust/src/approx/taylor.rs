@@ -17,6 +17,7 @@
 //! PWL at step 1/64 — paper Table I). Evaluation uses Horner form
 //! (paper eq. 16), one adder + one multiplier per degree.
 
+use super::compiled::{CompiledKernel, KernelBody};
 use super::lut::UniformLut;
 use super::reference::{tanh_derivatives, tanh_ref};
 use super::{IoSpec, MethodId, TanhApprox};
@@ -254,6 +255,36 @@ impl TanhApprox for Taylor {
         self.domain_max
     }
 
+    /// Compiled form: the runtime coefficient derivation (eqs. 5-7)
+    /// depends only on the anchor, so it is hoisted to compile time —
+    /// one `[T, f', f''/2!, f'''/3!]` raw set per anchor — leaving an
+    /// integer Horner chain per input.
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        let step_shift = (1.0 / self.step).log2() as u32;
+        if io.input.frac_bits < step_shift {
+            return CompiledKernel::tabulate(self, io);
+        }
+        let t_bits = io.input.frac_bits - step_shift;
+        if t_bits == 0 && self.anchor_mode == AnchorMode::Centered {
+            // Centred anchors need at least one t bit to express the
+            // half-step offset; fall back to exact tabulation.
+            return CompiledKernel::tabulate(self, io);
+        }
+        let coeffs: Vec<[i64; 4]> = (0..self.lut.len())
+            .map(|i| {
+                let (t, d1, c2, c3) = self.coeffs_fx(self.lut.at(i));
+                [t.raw(), d1.raw(), c2.raw(), c3.raw()]
+            })
+            .collect();
+        let dx_bias = match self.anchor_mode {
+            AnchorMode::Centered => 1i64 << (t_bits - 1),
+            AnchorMode::Left => 0,
+        };
+        let body =
+            KernelBody::Horner { coeffs, terms: self.terms, t_bits, dx_bias, acc_fmt: INT_FMT };
+        CompiledKernel::with_body(io, self.domain_max, body).debug_check(self)
+    }
+
     fn inventory(&self, io: IoSpec) -> Inventory {
         let degree = (self.terms - 1) as u32;
         // Horner: one adder + one multiplier per degree (paper eq. 16).
@@ -382,6 +413,30 @@ mod tests {
         let st = b1;
         assert!(rt.lut_bits < st.lut_bits);
         assert!(rt.multipliers + rt.squarers > st.multipliers);
+    }
+
+    #[test]
+    fn compiled_kernel_bit_matches_both_anchor_modes() {
+        // Centred (the default) and Left (the paper-literal ablation)
+        // both compile; the precomputed-coefficient Horner chain must
+        // reproduce the scalar datapath raw-for-raw.
+        let io = IoSpec::table1();
+        for m in [
+            Taylor::table1_quadratic(),
+            Taylor::table1_cubic(),
+            Taylor::with_anchor(1.0 / 16.0, 3, 6.0, AnchorMode::Left),
+        ] {
+            let k = m.compile(io);
+            for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(11) {
+                let x = Fx::from_raw(raw, INP);
+                assert_eq!(
+                    k.eval_raw(raw),
+                    m.eval_fx(x, OUT).raw(),
+                    "{} raw {raw}",
+                    m.describe()
+                );
+            }
+        }
     }
 
     #[test]

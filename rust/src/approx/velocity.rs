@@ -18,11 +18,12 @@
 //! is exposed through [`VfLookupMode`] for the cost model and the hw
 //! simulator.
 
+use super::compiled::{self, CompiledKernel, KernelBody};
 use super::newton::{div_f64, fx_div, NR_ITERS};
 use super::reference::velocity_factor;
 use super::{IoSpec, MethodId, TanhApprox};
 use crate::cost::Inventory;
-use crate::fixed::{fx_mul, fx_mul_wide, fx_sub, Fx, FxWide, QFormat, Round};
+use crate::fixed::{fx_add, fx_mul, fx_mul_wide, fx_sub, Fx, FxWide, QFormat, Round};
 
 /// Single-bit vs Table II paired-bit register file organization.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,6 +34,10 @@ pub enum VfLookupMode {
     /// multiplier chain (20 entries / 4 multipliers at θ = 1/256).
     PairedBits,
 }
+
+/// Internal format of the divider output T and the refinement operand
+/// 1−T² (stages 2-3).
+const T_FMT: QFormat = QFormat::new(1, 24);
 
 /// Velocity-factor tanh approximator.
 #[derive(Clone, Debug)]
@@ -130,6 +135,40 @@ impl Velocity {
         let mask = (1i64 << res_bits) - 1;
         (x.raw() & !mask, x.raw() & mask)
     }
+
+    /// Stages 1-2 plus the T-dependent part of stage 3: the multiplexed
+    /// register product (Fig 4), the NR divider (eq. 12) and the 1−T²
+    /// derivation — all a function of the *coarse* bits only. Shared by
+    /// the scalar datapath and [`Velocity::compile`]'s table builder so
+    /// the two cannot diverge.
+    fn coarse_t_d1(&self, coarse: i64, frac: u32) -> (Fx, Fx) {
+        let wf = self.wide_fmt;
+        // --- Stage 1: multiplexed product of velocity-factor registers.
+        // Walk bit weights 2^kmax … 2^-m; multiply in the register when
+        // the input bit is set (Fig 4's mux + multiplier chain).
+        let mut f = Fx::one(wf);
+        for (i, k) in (-(self.m as i32)..=self.kmax).rev().enumerate() {
+            let bitpos = k + frac as i32; // position in the raw word
+            if bitpos < 0 {
+                continue;
+            }
+            if (coarse >> bitpos) & 1 == 1 {
+                f = fx_mul(f, self.vf[i], wf, Round::NearestAway);
+            }
+        }
+        // --- Stage 2: tanh a = (F − 1)/(F + 1) (eq. 12), NR divider.
+        let one = Fx::one(wf);
+        let num = fx_sub(f, one, wf, Round::NearestAway);
+        let den = fx_add(f, one, wf, Round::NearestAway);
+        let t = if num.raw() == 0 {
+            Fx::zero(T_FMT)
+        } else {
+            fx_div(num, den, T_FMT, NR_ITERS)
+        };
+        let t2 = fx_mul(t, t, T_FMT, Round::NearestAway); // square unit
+        let d1 = fx_sub(Fx::one(T_FMT), t2, T_FMT, Round::NearestAway);
+        (t, d1)
+    }
 }
 
 impl TanhApprox for Velocity {
@@ -170,38 +209,10 @@ impl TanhApprox for Velocity {
     fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
         let (coarse, residue) = self.split(x);
         let frac = x.format().frac_bits;
-        let wf = self.wide_fmt;
-
-        // --- Stage 1: multiplexed product of velocity-factor registers.
-        // Walk bit weights 2^kmax … 2^-m; multiply in the register when
-        // the input bit is set (Fig 4's mux + multiplier chain).
-        let mut f = Fx::one(wf);
-        for (i, k) in (-(self.m as i32)..=self.kmax).rev().enumerate() {
-            let bitpos = k + frac as i32; // position in the raw word
-            if bitpos < 0 {
-                continue;
-            }
-            if (coarse >> bitpos) & 1 == 1 {
-                f = fx_mul(f, self.vf[i], wf, Round::NearestAway);
-            }
-        }
-
-        // --- Stage 2: tanh a = (F − 1)/(F + 1) (eq. 12), NR divider.
-        let one = Fx::one(wf);
-        let num = fx_sub(f, one, wf, Round::NearestAway);
-        let den = crate::fixed::fx_add(f, one, wf, Round::NearestAway);
-        // T in an internal S1.30-style format for the refinement stage.
-        let t_fmt = QFormat::new(1, 24);
-        let t = if num.raw() == 0 {
-            Fx::zero(t_fmt)
-        } else {
-            fx_div(num, den, t_fmt, NR_ITERS)
-        };
+        let (t, d1) = self.coarse_t_d1(coarse, frac);
 
         // --- Stage 3: linear compensation (eq. 10): y = T + b·(1 − T²).
         let b = Fx::from_raw(residue, QFormat::new(0, frac)); // b < θ, ≥ 0
-        let t2 = fx_mul(t, t, t_fmt, Round::NearestAway); // square unit
-        let d1 = fx_sub(Fx::one(t_fmt), t2, t_fmt, Round::NearestAway);
         fx_mul_wide(b, d1)
             .add(FxWide::from_fx(t))
             .narrow(out, Round::NearestEven)
@@ -209,6 +220,25 @@ impl TanhApprox for Velocity {
 
     fn domain_max(&self) -> f64 {
         self.domain_max
+    }
+
+    /// Compiled form: the register-product chain *and* the NR divider
+    /// take at most one value per coarse-bit pattern, so both collapse
+    /// into a `(T, 1−T²)` table at compile time; only the linear
+    /// residue compensation (eq. 10) runs per input.
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        let frac = io.input.frac_bits;
+        let res_bits = frac.saturating_sub(self.m);
+        let domain_raw = compiled::saturation_raw(io.input, self.domain_max);
+        let max_ci: i64 = if domain_raw > 0 { (domain_raw - 1) >> res_bits } else { 0 };
+        let pairs: Vec<(i64, i64)> = (0..=max_ci)
+            .map(|ci| {
+                let (t, d1) = self.coarse_t_d1(ci << res_bits, frac);
+                (t.raw(), d1.raw())
+            })
+            .collect();
+        let body = KernelBody::VelocityLut { pairs, res_bits, t_frac: T_FMT.frac_bits };
+        CompiledKernel::with_body(io, self.domain_max, body).debug_check(self)
     }
 
     fn inventory(&self, _io: IoSpec) -> Inventory {
@@ -321,6 +351,23 @@ mod tests {
         assert!((b as f64) * INP.ulp() < v.threshold());
         // coarse part has no sub-threshold bits
         assert_eq!(a & ((1 << (INP.frac_bits - v.m)) - 1), 0);
+    }
+
+    #[test]
+    fn compiled_kernel_bit_matches_scalar() {
+        // The coarse-table kernel replaces the whole multiplier chain +
+        // NR divider per eval; it must stay raw-exact, including on
+        // pure-coarse inputs (residue 0) and threshold boundaries.
+        let v = Velocity::table1();
+        let k = v.compile(IoSpec::table1());
+        for raw in (-(INP.max_raw())..=INP.max_raw()).step_by(17) {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(k.eval_raw(raw), v.eval_fx(x, OUT).raw(), "raw {raw}");
+        }
+        for raw in [0, 1, 31, 32, 33, 4096, 24575, 24576] {
+            let x = Fx::from_raw(raw, INP);
+            assert_eq!(k.eval_raw(raw), v.eval_fx(x, OUT).raw(), "edge raw {raw}");
+        }
     }
 
     #[test]

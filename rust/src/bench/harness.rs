@@ -1,8 +1,13 @@
 //! Minimal benchmarking core: adaptive iteration count, median +
-//! median-absolute-deviation statistics, black-box value sinking.
+//! median-absolute-deviation statistics, black-box value sinking, and a
+//! machine-readable result log ([`BenchLog`]) so the perf trajectory is
+//! trackable across PRs instead of living in scrollback.
 
 use std::hint::black_box;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -120,6 +125,57 @@ impl Bencher {
     }
 }
 
+/// Collects bench results into a JSON file written next to the stdout
+/// table (e.g. `BENCH_throughput.json`): one row per benchmark with the
+/// name, items ("elements") per iteration, derived rate, and raw wall
+/// time — everything a later PR needs to diff performance.
+#[derive(Default)]
+pub struct BenchLog {
+    rows: Vec<Json>,
+}
+
+impl BenchLog {
+    /// Empty log.
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    /// Records one result; `elements` is the number of items each
+    /// iteration processed (1 for plain benches), so `evals_per_s` is
+    /// directly comparable across batch sizes.
+    pub fn record(&mut self, elements: usize, r: &BenchResult) {
+        self.rows.push(Json::obj(vec![
+            ("name", Json::s(r.name.clone())),
+            ("elements", Json::i(elements as i64)),
+            ("wall_ns", Json::n(r.ns_per_iter())),
+            ("evals_per_s", Json::n(elements as f64 * r.per_second())),
+            ("mad_ns", Json::n(r.mad.as_nanos() as f64)),
+            ("samples", Json::i(r.samples as i64)),
+            ("iters_per_sample", Json::i(r.iters_per_sample as i64)),
+        ]));
+    }
+
+    /// Number of recorded rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Renders the log as a pretty-printed JSON array.
+    pub fn to_json(&self) -> String {
+        Json::arr(self.rows.clone()).to_string_pretty()
+    }
+
+    /// Writes the log to `path` (overwriting).
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json() + "\n")
+    }
+}
+
 /// One-shot bench with default settings; prints the report line.
 pub fn bench<T>(name: &str, f: impl FnMut() -> T) -> BenchResult {
     let r = Bencher::default().run(name, f);
@@ -165,6 +221,26 @@ mod tests {
         let fast = b.run("fast", || 1u64 + 1);
         let slow = b.run("slow", || (0..1000u64).sum::<u64>());
         assert!(slow.ns_per_iter() > fast.ns_per_iter());
+    }
+
+    #[test]
+    fn bench_log_round_trips() {
+        let r = BenchResult {
+            name: "kernel/PWL".into(),
+            median: Duration::from_nanos(4000),
+            mad: Duration::from_nanos(20),
+            iters_per_sample: 1000,
+            samples: 11,
+        };
+        let mut log = BenchLog::new();
+        log.record(4096, &r);
+        assert_eq!(log.len(), 1);
+        let parsed = crate::util::json::parse(&log.to_json()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("name").unwrap().str().unwrap(), "kernel/PWL");
+        assert_eq!(row.get("elements").unwrap().num().unwrap(), 4096.0);
+        let rate = row.get("evals_per_s").unwrap().num().unwrap();
+        assert!((rate - 4096.0 * 1e9 / 4000.0).abs() < rate * 1e-6);
     }
 
     #[test]

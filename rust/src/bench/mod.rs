@@ -4,4 +4,4 @@
 
 mod harness;
 
-pub use harness::{bench, bench_n, BenchResult, Bencher};
+pub use harness::{bench, bench_n, BenchLog, BenchResult, Bencher};

@@ -72,6 +72,21 @@ impl PendingBatch {
         }
     }
 
+    /// Fraction of `capacity` this batch fills with useful elements;
+    /// the remainder becomes zero padding when packed. The worker's
+    /// flush feeds the same counts into
+    /// [`super::ServerMetrics::record_batch`], whose snapshot
+    /// aggregates this ratio across batches
+    /// (`MetricsSnapshot::fill_rate`); this per-batch form exists for
+    /// introspection and tests.
+    pub fn fill_rate(&self, capacity: usize) -> f64 {
+        if capacity == 0 {
+            1.0
+        } else {
+            self.elements as f64 / capacity as f64
+        }
+    }
+
     /// Packs into the executable's flat input, zero-padded to
     /// `capacity`; returns (flat_input, per-request (offset, len)).
     pub fn pack(&self, capacity: usize) -> (Vec<f32>, Vec<(usize, usize)>) {
@@ -144,5 +159,16 @@ mod tests {
         b.push(req(1000));
         assert!(b.fits(&req(24), 1024));
         assert!(!b.fits(&req(25), 1024));
+    }
+
+    #[test]
+    fn fill_rate_tracks_packed_fraction() {
+        let mut b = PendingBatch::default();
+        assert_eq!(b.fill_rate(1024), 0.0);
+        b.push(req(256));
+        assert!((b.fill_rate(1024) - 0.25).abs() < 1e-12);
+        b.push(req(768));
+        assert_eq!(b.fill_rate(1024), 1.0);
+        assert_eq!(b.fill_rate(0), 1.0); // degenerate capacity is benign
     }
 }

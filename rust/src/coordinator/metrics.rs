@@ -13,6 +13,8 @@ pub struct ServerMetrics {
     latency_us_sum: AtomicU64,
     latency_us_max: AtomicU64,
     padded_elements: AtomicU64,
+    packed_elements: AtomicU64,
+    capacity_elements: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -34,6 +36,12 @@ pub struct MetricsSnapshot {
     pub latency_us_max: u64,
     /// Zero-pad elements wasted by fixed-shape batching.
     pub padded_elements: u64,
+    /// Useful elements packed into executed batches (counted at flush,
+    /// so it includes batches whose execution later failed — unlike
+    /// `elements`, which only counts completed requests).
+    pub packed_elements: u64,
+    /// Total element capacity of executed batches (batches × capacity).
+    pub capacity_elements: u64,
 }
 
 impl MetricsSnapshot {
@@ -55,6 +63,19 @@ impl MetricsSnapshot {
             self.elements as f64 / total as f64
         }
     }
+
+    /// Batch fill rate: packed elements / batch capacity, measured at
+    /// flush time. This is the padding-waste observable — a fill rate
+    /// of 0.06 means 94% of every executed batch was zero padding
+    /// (exactly the pathology the greedy drain fixed, EXPERIMENTS.md
+    /// §Perf iteration 1).
+    pub fn fill_rate(&self) -> f64 {
+        if self.capacity_elements == 0 {
+            1.0
+        } else {
+            self.packed_elements as f64 / self.capacity_elements as f64
+        }
+    }
 }
 
 impl ServerMetrics {
@@ -66,10 +87,13 @@ impl ServerMetrics {
         self.latency_us_max.fetch_max(latency_us, Ordering::Relaxed);
     }
 
-    /// Records an executed batch and its padding waste.
-    pub fn record_batch(&self, padded: usize) {
+    /// Records an executed batch: how many useful elements were packed
+    /// and the batch's element capacity (the difference is padding).
+    pub fn record_batch(&self, packed: usize, capacity: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.padded_elements.fetch_add(padded as u64, Ordering::Relaxed);
+        self.packed_elements.fetch_add(packed as u64, Ordering::Relaxed);
+        self.capacity_elements.fetch_add(capacity as u64, Ordering::Relaxed);
+        self.padded_elements.fetch_add(capacity.saturating_sub(packed) as u64, Ordering::Relaxed);
     }
 
     /// Records a backpressure rejection.
@@ -93,6 +117,8 @@ impl ServerMetrics {
             latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
             latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
             padded_elements: self.padded_elements.load(Ordering::Relaxed),
+            packed_elements: self.packed_elements.load(Ordering::Relaxed),
+            capacity_elements: self.capacity_elements.load(Ordering::Relaxed),
         }
     }
 }
@@ -106,7 +132,7 @@ mod tests {
         let m = ServerMetrics::default();
         m.record_request(100, 50);
         m.record_request(50, 150);
-        m.record_batch(874);
+        m.record_batch(150, 1024);
         m.record_rejected();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
@@ -115,7 +141,24 @@ mod tests {
         assert_eq!(s.rejected, 1);
         assert_eq!(s.mean_latency_us(), 100.0);
         assert_eq!(s.latency_us_max, 150);
+        assert_eq!(s.padded_elements, 874);
         assert!((s.batch_efficiency() - 150.0 / 1024.0).abs() < 1e-9);
+        assert!((s.fill_rate() - 150.0 / 1024.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_rate_counts_failed_batches_too() {
+        // A batch that packs elements but whose execution errors still
+        // consumed capacity: fill_rate sees it, batch_efficiency (built
+        // on completed requests) does not.
+        let m = ServerMetrics::default();
+        m.record_batch(512, 1024);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.packed_elements, 512);
+        assert_eq!(s.capacity_elements, 1024);
+        assert!((s.fill_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(s.elements, 0);
     }
 
     #[test]
@@ -123,5 +166,6 @@ mod tests {
         let s = ServerMetrics::default().snapshot();
         assert_eq!(s.mean_latency_us(), 0.0);
         assert_eq!(s.batch_efficiency(), 1.0);
+        assert_eq!(s.fill_rate(), 1.0);
     }
 }

@@ -117,6 +117,8 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("errors", Json::i(m.errors as i64)),
                     ("mean_latency_us", Json::n(m.mean_latency_us())),
                     ("batch_efficiency", Json::n(m.batch_efficiency())),
+                    ("batch_fill_rate", Json::n(m.fill_rate())),
+                    ("padded_elements", Json::i(m.padded_elements as i64)),
                 ])
             }
             "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),

@@ -195,8 +195,7 @@ fn flush(
     }
     let batch = pending.take();
     let (flat, spans) = batch.pack(cfg.batch_elements);
-    let padded = cfg.batch_elements - batch.elements;
-    metrics.record_batch(padded);
+    metrics.record_batch(batch.elements, cfg.batch_elements);
     depth.fetch_sub(batch.elements, Ordering::Relaxed);
     let result = backend.execute(method, &flat);
     let now = Instant::now();

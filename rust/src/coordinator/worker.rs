@@ -3,9 +3,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::approx::{table1_suite, MethodId, TanhApprox};
-use crate::fixed::{Fx, QFormat};
+use crate::approx::{table1_suite, CompiledKernel, IoSpec, MethodId};
+use crate::fixed::Fx;
+use crate::rt_err;
 use crate::runtime::EngineServer;
+use crate::util::error::RtResult;
 
 use super::server::ExecBackend;
 
@@ -33,11 +35,11 @@ impl GraphBackend {
     }
 
     /// Preloads all six method graphs at the given batch size.
-    pub fn load_all(engine: Arc<EngineServer>, batch: usize) -> anyhow::Result<GraphBackend> {
+    pub fn load_all(engine: Arc<EngineServer>, batch: usize) -> RtResult<GraphBackend> {
         let names: Vec<String> =
             MethodId::all().iter().map(|m| Self::artifact_name(*m, batch)).collect();
         let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-        engine.preload(&refs).map_err(|e| anyhow::anyhow!("preload: {e}"))?;
+        engine.preload(&refs).map_err(|e| rt_err!("preload: {e}"))?;
         Ok(GraphBackend { engine, batch })
     }
 
@@ -62,48 +64,46 @@ impl ExecBackend for GraphBackend {
 }
 
 /// Golden-model execution: the rust fixed-point datapaths (S3.12 →
-/// S.15). Used by tests and as a no-artifacts fallback; also the
-/// numerically authoritative path the PJRT outputs are compared to.
+/// S.15), served through the compiled integer kernels. Used by tests
+/// and as a no-artifacts fallback; also the numerically authoritative
+/// path the PJRT outputs are compared to.
+///
+/// All six methods are compiled once at startup
+/// ([`crate::approx::TanhApprox::compile`]) and batches are processed
+/// slice-wise — this replaced the old per-element `dyn eval_fx` loop
+/// with a PWL-only fast path (EXPERIMENTS.md §Perf: 182 M evals/s
+/// compiled vs 34 M generic; the compiled kernels bring every method to
+/// the compiled tier, bit-exact vs the scalar golden models).
 pub struct GoldenBackend {
-    methods: HashMap<MethodId, Box<dyn TanhApprox>>,
-    /// Compiled integer fast path for PWL (EXPERIMENTS.md §Perf iter 5:
-    /// 182 M evals/s vs 34 M through the generic Fx path).
-    pwl_fast: Box<dyn Fn(i64) -> i64 + Send + Sync>,
+    kernels: HashMap<MethodId, CompiledKernel>,
     batch: usize,
 }
 
 impl GoldenBackend {
-    /// Builds the Table I suite as the backend.
+    /// Builds the Table I suite as the backend, compiling every method.
     pub fn table1(batch: usize) -> GoldenBackend {
-        let methods: HashMap<_, _> = table1_suite().into_iter().map(|m| (m.id(), m)).collect();
-        let pwl_fast = Box::new(crate::approx::pwl::Pwl::table1().compile_raw());
-        GoldenBackend { methods, pwl_fast, batch }
+        let io = IoSpec::table1();
+        let kernels: HashMap<_, _> =
+            table1_suite().into_iter().map(|m| (m.id(), m.compile(io))).collect();
+        GoldenBackend { kernels, batch }
     }
 }
 
 impl ExecBackend for GoldenBackend {
     fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
-        if method == MethodId::Pwl {
-            // f32 → S3.12 raw → compiled path → S.15 raw → f32.
-            let scale = (1i64 << 12) as f32;
-            let inv = 1.0 / (1i64 << 15) as f32;
-            return Ok(flat
-                .iter()
-                .map(|&v| {
-                    let raw = (v * scale).round() as i64; // half-away, like Fx::from_f64
-                    let raw = raw.clamp(QFormat::S3_12.min_raw(), QFormat::S3_12.max_raw());
-                    (self.pwl_fast)(raw) as f32 * inv
-                })
-                .collect());
-        }
-        let m = self.methods.get(&method).ok_or_else(|| format!("no model for {method:?}"))?;
-        Ok(flat
-            .iter()
-            .map(|&v| {
-                let x = Fx::from_f64(v as f64, QFormat::S3_12);
-                m.eval_fx(x, QFormat::S_15).to_f64() as f32
-            })
-            .collect())
+        let kernel =
+            self.kernels.get(&method).ok_or_else(|| format!("no kernel for {method:?}"))?;
+        let in_fmt = kernel.input();
+        // Quantize through Fx::from_f64 (round half away from zero,
+        // saturating) so the input conversion matches the golden scalar
+        // path bit-for-bit.
+        let raws: Vec<i64> =
+            flat.iter().map(|&v| Fx::from_f64(v as f64, in_fmt).raw()).collect();
+        let mut out_raws = vec![0i64; raws.len()];
+        kernel.eval_slice_raw(&raws, &mut out_raws);
+        // Output raws are ≤ 16 bits: exact in f32.
+        let inv = kernel.output().ulp() as f32;
+        Ok(out_raws.iter().map(|&r| r as f32 * inv).collect())
     }
 
     fn batch_elements(&self) -> usize {
@@ -114,6 +114,8 @@ impl ExecBackend for GoldenBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::approx::TanhApprox;
+    use crate::fixed::QFormat;
 
     #[test]
     fn golden_backend_evaluates_all_methods() {
@@ -125,6 +127,23 @@ mod tests {
             assert!((out[1] - 0.46).abs() < 0.01, "{method:?}: {}", out[1]);
             assert_eq!(out[1], -out[2]);
             assert!(out[5] > 0.9999);
+        }
+    }
+
+    #[test]
+    fn golden_backend_matches_scalar_datapath() {
+        // Slice-wise kernel execution must agree with per-element
+        // eval_fx (including the f32 → S3.12 quantization step).
+        let b = GoldenBackend::table1(16);
+        let inputs: Vec<f32> =
+            (0..16).map(|i| (i as f32) * 0.41 - 3.3).collect();
+        for m in crate::approx::table1_suite() {
+            let out = b.execute(m.id(), &inputs).unwrap();
+            for (&v, &y) in inputs.iter().zip(&out) {
+                let x = Fx::from_f64(v as f64, QFormat::S3_12);
+                let want = m.eval_fx(x, QFormat::S_15).to_f64() as f32;
+                assert_eq!(y, want, "{:?} x={v}", m.id());
+            }
         }
     }
 

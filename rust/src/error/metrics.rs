@@ -1,9 +1,26 @@
 //! Error metrics vs the tanh reference (paper §III.C).
+//!
+//! Exhaustive sweeps are the workhorse of the whole comparison (Fig 2,
+//! Tables I & III are all built from them), so [`measure`] runs on the
+//! compiled integer kernels ([`crate::approx::CompiledKernel`]) and
+//! chunks the grid across threads. Chunking is *fixed-size* and the
+//! per-chunk accumulators are merged in chunk order, so the result is
+//! bit-identical regardless of thread count (asserted by the property
+//! tests) — parallelism changes wall-clock only, never the numbers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::InputGrid;
+use crate::approx::compiled::worker_threads;
 use crate::approx::reference::tanh_ref;
-use crate::approx::TanhApprox;
+use crate::approx::{IoSpec, TanhApprox};
 use crate::fixed::QFormat;
+
+/// Fixed accumulation chunk (grid points). Chunk boundaries — not the
+/// thread count — determine the floating-point summation order, which
+/// is what makes parallel and sequential sweeps return identical
+/// metrics.
+const CHUNK: usize = 4096;
 
 /// Error statistics of one approximation configuration over a grid.
 #[derive(Clone, Copy, Debug, Default)]
@@ -25,31 +42,140 @@ pub struct ErrorMetrics {
     pub points: usize,
 }
 
-/// Measures the *datapath* model (`eval_fx`) of `m` over `grid`,
-/// quantizing outputs to `out`.
+/// Measures the *datapath* model of `m` over `grid`, quantizing outputs
+/// to `out` — via the compiled kernel (bit-exact vs `eval_fx`), chunked
+/// across all available threads.
 pub fn measure(m: &dyn TanhApprox, grid: InputGrid, out: QFormat) -> ErrorMetrics {
-    let mut acc = Accum::default();
-    for x in grid.iter() {
-        let y = m.eval_fx(x, out);
-        let want = tanh_ref(x.to_f64());
-        acc.push(x.to_f64(), y.to_f64() - want);
-    }
-    acc.finish(out)
+    measure_with_threads(m, grid, out, worker_threads())
+}
+
+/// [`measure`] with an explicit worker count for the grid sweep
+/// (1 = sequential sweep). Any `threads` value returns identical
+/// metrics — exposed so tests can assert that. Note the bound covers
+/// the *sweep* only: kernel compilation happens through the
+/// thread-count-free `TanhApprox::compile`, so methods that tabulate
+/// densely (Lambert, fallback impls) still parallelize the table build
+/// internally.
+pub fn measure_with_threads(
+    m: &dyn TanhApprox,
+    grid: InputGrid,
+    out: QFormat,
+    threads: usize,
+) -> ErrorMetrics {
+    let kernel = m.compile(IoSpec { input: grid.fmt, output: out });
+    let in_ulp = grid.fmt.ulp();
+    let out_ulp = out.ulp();
+    sweep_chunks(grid, out, threads, |clo, chi, acc| {
+        let xs: Vec<i64> = (clo..=chi).collect();
+        let mut ys = vec![0i64; xs.len()];
+        kernel.eval_slice_raw(&xs, &mut ys);
+        for (&raw, &y) in xs.iter().zip(&ys) {
+            let x = raw as f64 * in_ulp;
+            acc.push(x, y as f64 * out_ulp - tanh_ref(x));
+        }
+    })
 }
 
 /// Measures the f64 *math* model (`eval_f64`) over the same grid —
 /// isolates algorithmic error from quantization (used by the Fig 2
-/// discussion and the ablation benches).
+/// discussion and the ablation benches). Same fixed chunking.
 pub fn measure_f64_model(m: &dyn TanhApprox, grid: InputGrid, out: QFormat) -> ErrorMetrics {
+    measure_f64_model_with_threads(m, grid, out, worker_threads())
+}
+
+/// [`measure_f64_model`] with an explicit worker count.
+pub fn measure_f64_model_with_threads(
+    m: &dyn TanhApprox,
+    grid: InputGrid,
+    out: QFormat,
+    threads: usize,
+) -> ErrorMetrics {
+    let in_ulp = grid.fmt.ulp();
+    sweep_chunks(grid, out, threads, |clo, chi, acc| {
+        for raw in clo..=chi {
+            let x = raw as f64 * in_ulp;
+            acc.push(x, m.eval_f64(x) - tanh_ref(x));
+        }
+    })
+}
+
+/// Strided (sub-sampled) datapath sweep through the scalar golden
+/// model. For sparse strides the compile cost would exceed the sweep,
+/// so this intentionally stays scalar and sequential; used by
+/// [`crate::explore`]'s quick mode.
+pub fn measure_strided(
+    m: &dyn TanhApprox,
+    grid: InputGrid,
+    out: QFormat,
+    stride: usize,
+) -> ErrorMetrics {
     let mut acc = Accum::default();
-    for x in grid.iter() {
-        let y = m.eval_f64(x.to_f64());
-        let want = tanh_ref(x.to_f64());
-        acc.push(x.to_f64(), y - want);
+    for x in grid.iter_strided(stride) {
+        let y = m.eval_fx(x, out);
+        acc.push(x.to_f64(), y.to_f64() - tanh_ref(x.to_f64()));
     }
     acc.finish(out)
 }
 
+/// Runs `per_chunk` over fixed-size chunks of the grid on `threads`
+/// workers (dynamic chunk stealing), then merges the per-chunk
+/// accumulators **in chunk order**.
+fn sweep_chunks(
+    grid: InputGrid,
+    out: QFormat,
+    threads: usize,
+    per_chunk: impl Fn(i64, i64, &mut Accum) + Sync,
+) -> ErrorMetrics {
+    let (lo, hi) = grid.raw_bounds();
+    let n_chunks = grid.len().div_ceil(CHUNK).max(1);
+    let chunk_bounds = |ci: usize| {
+        let clo = lo + (ci * CHUNK) as i64;
+        (clo, (clo + CHUNK as i64 - 1).min(hi))
+    };
+    let workers = threads.clamp(1, n_chunks);
+    let mut accs: Vec<(usize, Accum)> = if workers == 1 {
+        (0..n_chunks)
+            .map(|ci| {
+                let (clo, chi) = chunk_bounds(ci);
+                let mut a = Accum::default();
+                per_chunk(clo, chi, &mut a);
+                (ci, a)
+            })
+            .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut local = Vec::new();
+                        loop {
+                            let ci = next.fetch_add(1, Ordering::Relaxed);
+                            if ci >= n_chunks {
+                                break;
+                            }
+                            let (clo, chi) = chunk_bounds(ci);
+                            let mut a = Accum::default();
+                            per_chunk(clo, chi, &mut a);
+                            local.push((ci, a));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        })
+    };
+    accs.sort_by_key(|&(ci, _)| ci);
+    let mut total = Accum::default();
+    for (_, a) in &accs {
+        total.merge(a);
+    }
+    total.finish(out)
+}
+
+/// Mergeable error accumulator: one per chunk, combined in chunk order
+/// so parallel sweeps are deterministic.
 #[derive(Default)]
 struct Accum {
     max_abs: f64,
@@ -72,6 +198,18 @@ impl Accum {
         self.n += 1;
     }
 
+    /// Folds a later chunk in. The strict `>` keeps the *first* argmax
+    /// on ties, matching a sequential left-to-right sweep.
+    fn merge(&mut self, o: &Accum) {
+        if o.max_abs > self.max_abs {
+            self.max_abs = o.max_abs;
+            self.argmax = o.argmax;
+        }
+        self.sum_sq += o.sum_sq;
+        self.sum_abs += o.sum_abs;
+        self.n += o.n;
+    }
+
     fn finish(self, out: QFormat) -> ErrorMetrics {
         let n = self.n.max(1) as f64;
         let mse = self.sum_sq / n;
@@ -92,6 +230,7 @@ mod tests {
     use super::*;
     use crate::approx::pwl::Pwl;
     use crate::approx::table1_suite;
+    use crate::fixed::Fx;
 
     #[test]
     fn rms_le_max_and_mse_is_rms_squared() {
@@ -125,5 +264,58 @@ mod tests {
         let fx = measure(&m, grid, QFormat::S_15);
         let f64m = measure_f64_model(&m, grid, QFormat::S_15);
         assert!(f64m.max_abs <= fx.max_abs + QFormat::S_15.ulp());
+    }
+
+    #[test]
+    fn kernel_sweep_matches_scalar_sweep() {
+        // The compiled-kernel sweep must reproduce a plain scalar
+        // eval_fx loop with the same chunked accumulation: spot-check
+        // the order-independent fields (max/argmax/points) exactly.
+        let m = Pwl::table1();
+        let grid = InputGrid::table1();
+        let out = QFormat::S_15;
+        let e = measure(&m, grid, out);
+        let mut max_abs: f64 = 0.0;
+        let mut argmax = 0.0;
+        for x in grid.iter() {
+            let err = (m.eval_fx(x, out).to_f64() - tanh_ref(x.to_f64())).abs();
+            if err > max_abs {
+                max_abs = err;
+                argmax = x.to_f64();
+            }
+        }
+        assert_eq!(e.max_abs, max_abs);
+        assert_eq!(e.argmax, argmax);
+        assert_eq!(e.points, grid.len());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_metrics() {
+        // Fixed chunking ⇒ identical merged Accum for any worker count.
+        let m = Pwl::table1();
+        let grid = InputGrid::table1();
+        let out = QFormat::S_15;
+        let seq = measure_with_threads(&m, grid, out, 1);
+        for threads in [2, 3, 8] {
+            let par = measure_with_threads(&m, grid, out, threads);
+            assert_eq!(seq.max_abs, par.max_abs, "{threads} threads");
+            assert_eq!(seq.argmax, par.argmax, "{threads} threads");
+            assert_eq!(seq.mse, par.mse, "{threads} threads");
+            assert_eq!(seq.mean_abs, par.mean_abs, "{threads} threads");
+            assert_eq!(seq.points, par.points, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn strided_measure_underreports_full() {
+        let m = Pwl::table1();
+        let grid = InputGrid::table1();
+        let full = measure(&m, grid, QFormat::S_15);
+        let strided = measure_strided(&m, grid, QFormat::S_15, 7);
+        assert!(strided.max_abs <= full.max_abs + 1e-15);
+        assert!(strided.points < full.points);
+        // Sanity: a raw the strided sweep visits scores the same error.
+        let x = Fx::from_raw(grid.raw_bounds().0, grid.fmt);
+        let _ = m.eval_fx(x, QFormat::S_15);
     }
 }

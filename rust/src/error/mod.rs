@@ -12,6 +12,13 @@
 //! with the *root*-mean-square error instead; we therefore report both
 //! `mse` and `rms` and compare the paper's column against `rms`
 //! (EXPERIMENTS.md discusses the discrepancy).
+//!
+//! Exhaustive sweeps ([`measure`]) run on the compiled integer kernels
+//! and are chunked across threads with deterministic merging — see
+//! [`metrics`](self) and EXPERIMENTS.md §Perf. The Fig 2 sweeps
+//! ([`sweep_fig2`]) and the Table III 1-ulp search
+//! ([`search_1ulp_param`]) inherit both for free since they are built
+//! on `measure`.
 
 mod grid;
 pub mod histogram;
@@ -21,6 +28,9 @@ pub mod ulp_search;
 
 pub use grid::InputGrid;
 pub use histogram::{histogram, region_breakdown, ErrorHistogram, RegionBreakdown};
-pub use metrics::{measure, measure_f64_model, ErrorMetrics};
+pub use metrics::{
+    measure, measure_f64_model, measure_f64_model_with_threads, measure_strided,
+    measure_with_threads, ErrorMetrics,
+};
 pub use sweep::{fig2_params, sweep_fig2, Fig2Point, Fig2Series};
 pub use ulp_search::{search_1ulp_param, table3_rows, Table3Row, Table3Spec};

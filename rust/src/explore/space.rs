@@ -4,7 +4,7 @@
 use super::pareto::DesignPoint;
 use crate::approx::{build, IoSpec, MethodId};
 use crate::cost::CostModel;
-use crate::error::{fig2_params, measure, InputGrid};
+use crate::error::{fig2_params, measure, measure_strided, InputGrid};
 use crate::fixed::QFormat;
 
 /// Exploration configuration.
@@ -35,10 +35,13 @@ pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
         let (_, params) = fig2_params(id);
         for param in params {
             let m = build(id, param, domain);
+            // Exhaustive mode rides the compiled-kernel parallel sweep;
+            // sparse strides stay on the scalar path (compiling would
+            // cost more than the subsampled sweep saves).
             let e = if cfg.stride <= 1 {
                 measure(m.as_ref(), cfg.grid, cfg.out)
             } else {
-                measure_strided(m.as_ref(), cfg, cfg.stride)
+                measure_strided(m.as_ref(), cfg.grid, cfg.out, cfg.stride)
             };
             let inv = m.inventory(io);
             let cost = model.price(&inv);
@@ -54,41 +57,6 @@ pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
         }
     }
     points
-}
-
-fn measure_strided(
-    m: &dyn crate::approx::TanhApprox,
-    cfg: ExploreConfig,
-    stride: usize,
-) -> crate::error::ErrorMetrics {
-    use crate::approx::reference::tanh_ref;
-    let mut max_abs: f64 = 0.0;
-    let mut argmax = 0.0;
-    let mut sum_sq = 0.0;
-    let mut sum_abs = 0.0;
-    let mut n = 0usize;
-    for x in cfg.grid.iter_strided(stride) {
-        let y = m.eval_fx(x, cfg.out);
-        let err = y.to_f64() - tanh_ref(x.to_f64());
-        let a = err.abs();
-        if a > max_abs {
-            max_abs = a;
-            argmax = x.to_f64();
-        }
-        sum_sq += err * err;
-        sum_abs += a;
-        n += 1;
-    }
-    let nf = n.max(1) as f64;
-    crate::error::ErrorMetrics {
-        max_abs,
-        argmax,
-        mse: sum_sq / nf,
-        rms: (sum_sq / nf).sqrt(),
-        mean_abs: sum_abs / nf,
-        max_ulp: max_abs / cfg.out.ulp(),
-        points: n,
-    }
 }
 
 #[cfg(test)]
@@ -139,7 +107,7 @@ mod tests {
         let cfg = quick_cfg();
         let m = crate::approx::pwl::Pwl::table1();
         let full = measure(&m, cfg.grid, cfg.out);
-        let strided = measure_strided(&m, cfg, 7);
+        let strided = measure_strided(&m, cfg.grid, cfg.out, 7);
         assert!((full.max_abs - strided.max_abs).abs() < full.max_abs * 0.5);
     }
 }

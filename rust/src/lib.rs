@@ -16,27 +16,42 @@
 //! | D  | velocity-factor trigonometric expansion  | [`approx::velocity`]   |
 //! | E  | Lambert continued fraction               | [`approx::lambert`]    |
 //!
+//! Each method ships two evaluation paths: the scalar golden datapath
+//! (`eval_fx`, format-tagged [`fixed::Fx`] ops — the auditable model you
+//! read next to the paper) and a **compiled kernel**
+//! ([`approx::TanhApprox::compile`] → [`approx::CompiledKernel`]): an
+//! integer-only `raw → raw` batch evaluator, bit-exact against the
+//! golden model and one to two orders of magnitude faster. Hot loops —
+//! the serving backend and the exhaustive error sweeps — run on
+//! compiled kernels; everything else uses the golden models.
+//!
 //! On top of the approximation library the crate provides:
 //!
 //! - [`fixed`] — the Q-format fixed-point substrate all datapath models
 //!   are built on (S3.12, S2.13, S.15, S2.5, S.7 …).
 //! - [`error`] — error-analysis engine (max abs error, MSE/RMS, ulp
 //!   metrics, exhaustive grid sweeps, 1-ulp parameter search) that
-//!   regenerates the paper's Fig 2 and Tables I & III.
+//!   regenerates the paper's Fig 2 and Tables I & III; exhaustive
+//!   sweeps run on compiled kernels, chunked across threads with
+//!   deterministic (thread-count-independent) results.
 //! - [`cost`] — hardware cost model: component inventories per method
 //!   (paper §IV) priced by a unit gate library into area / delay.
 //! - [`hw`] — cycle-level pipelined datapath simulator for the block
 //!   diagrams of Fig 3 (polynomial), Fig 4 (velocity factor) and Fig 5
 //!   (continued fraction), including Table II's multi-bit VF lookup.
 //! - [`runtime`] — PJRT wrapper that loads the JAX/Pallas-AOT'd HLO
-//!   artifacts and executes them from rust.
+//!   artifacts and executes them from rust (stubbed by
+//!   [`runtime::xla_shim`] when the bindings are not linked).
 //! - [`coordinator`] — activation-accelerator service: request router,
-//!   dynamic batcher, worker pool, metrics, backpressure.
+//!   dynamic batcher, worker pool, metrics (incl. batch fill rate),
+//!   backpressure; the golden backend serves all six methods through
+//!   their compiled kernels.
 //! - [`explore`] — design-space exploration / Pareto frontier over
 //!   (method × parameter × fixed-point format).
 //! - [`report`] — text/CSV renderers for every table and figure.
 //! - [`bench`] — self-contained benchmark harness (criterion is not
-//!   available in the offline crate set).
+//!   available in the offline crate set) plus the machine-readable
+//!   `BENCH_throughput.json` log (see EXPERIMENTS.md §Perf).
 //! - [`util`] — CLI parsing, JSON/CSV writers, PRNG, property-test
 //!   runner: small substrates the offline image forces us to own.
 //!

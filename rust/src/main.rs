@@ -57,7 +57,9 @@ fn app() -> App {
             Command::new("serve", "run the activation coordinator under synthetic load")
                 .opt("requests", "number of requests", Some("1000"))
                 .opt("request-size", "activations per request", Some("64"))
-                .opt("backend", "pjrt|golden", Some("pjrt"))
+                // golden = compiled integer kernels, works in every build;
+                // pjrt needs artifacts + linked xla bindings.
+                .opt("backend", "golden|pjrt", Some("golden"))
                 .opt("batch", "compiled batch size", Some("1024")),
         ],
     }
@@ -242,7 +244,7 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let n: usize = p.parse_or("requests", 1000usize)?;
     let req_size: usize = p.parse_or("request-size", 64usize)?;
     let batch: usize = p.parse_or("batch", 1024usize)?;
-    let backend_name = p.get_or("backend", "pjrt");
+    let backend_name = p.get_or("backend", "golden");
 
     let backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend> = match backend_name {
         "golden" => Arc::new(GoldenBackend::table1(batch)),
@@ -290,8 +292,9 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
         m.elements as f64 / elapsed.as_secs_f64() / 1e6
     );
     println!(
-        "batches: {} (efficiency {:.1}%), mean latency {:.0} µs, max {} µs",
+        "batches: {} (fill {:.1}%, efficiency {:.1}%), mean latency {:.0} µs, max {} µs",
         m.batches,
+        100.0 * m.fill_rate(),
         100.0 * m.batch_efficiency(),
         m.mean_latency_us(),
         m.latency_us_max

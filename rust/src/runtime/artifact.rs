@@ -2,7 +2,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::rt_err;
+use crate::util::error::{Context, RtResult as Result};
 
 use crate::util::json::{self, Json};
 
@@ -48,26 +49,26 @@ impl ArtifactDir {
         let manifest_path = root.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let doc = json::parse(&text).map_err(|e| rt_err!("manifest parse: {e}"))?;
         let Json::Obj(map) = doc else {
-            return Err(anyhow!("manifest must be an object"));
+            return Err(rt_err!("manifest must be an object"));
         };
         let mut entries = Vec::new();
         for (name, entry) in map {
             let file = entry
                 .get("file")
                 .and_then(|f| f.str())
-                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+                .ok_or_else(|| rt_err!("{name}: missing file"))?;
             let inputs = entry
                 .get("inputs")
                 .and_then(|i| i.as_arr())
-                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .ok_or_else(|| rt_err!("{name}: missing inputs"))?
                 .iter()
                 .map(|spec| -> Result<TensorSpec> {
                     let shape = spec
                         .get("shape")
                         .and_then(|s| s.as_arr())
-                        .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                        .ok_or_else(|| rt_err!("{name}: missing shape"))?
                         .iter()
                         .map(|d| d.num().unwrap_or(0.0) as usize)
                         .collect();

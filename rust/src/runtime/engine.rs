@@ -3,7 +3,10 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+// Swap this alias for `use xla;` when the real PJRT bindings are linked.
+use super::xla_shim as xla;
+use crate::rt_err;
+use crate::util::error::{Context, RtResult as Result};
 
 use super::artifact::{ArtifactDir, ArtifactMeta};
 
@@ -35,7 +38,7 @@ impl TensorValue {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             TensorValue::F32(v) => Ok(v),
-            TensorValue::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+            TensorValue::I32(_) => Err(rt_err!("tensor is i32, expected f32")),
         }
     }
 
@@ -43,7 +46,7 @@ impl TensorValue {
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             TensorValue::I32(v) => Ok(v),
-            TensorValue::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+            TensorValue::F32(_) => Err(rt_err!("tensor is f32, expected i32")),
         }
     }
 
@@ -60,7 +63,7 @@ impl TensorValue {
         match lit.ty()? {
             xla::ElementType::F32 => Ok(TensorValue::F32(lit.to_vec::<f32>()?)),
             xla::ElementType::S32 => Ok(TensorValue::I32(lit.to_vec::<i32>()?)),
-            other => Err(anyhow!("unsupported output dtype {other:?}")),
+            other => Err(rt_err!("unsupported output dtype {other:?}")),
         }
     }
 }
@@ -81,7 +84,7 @@ impl LoadedGraph {
     /// returns the flattened tuple outputs.
     pub fn execute(&self, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
         if inputs.len() != self.meta.inputs.len() {
-            return Err(anyhow!(
+            return Err(rt_err!(
                 "{}: expected {} inputs, got {}",
                 self.meta.name,
                 self.meta.inputs.len(),
@@ -91,7 +94,7 @@ impl LoadedGraph {
         let mut literals = Vec::with_capacity(inputs.len());
         for (value, spec) in inputs.iter().zip(&self.meta.inputs) {
             if value.len() != spec.elements() {
-                return Err(anyhow!(
+                return Err(rt_err!(
                     "{}: input expects {} elements, got {}",
                     self.meta.name,
                     spec.elements(),
@@ -141,7 +144,7 @@ impl Engine {
         let meta = self
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .ok_or_else(|| rt_err!("artifact '{name}' not in manifest"))?
             .clone();
         let path = self.artifacts.path_of(&meta);
         let proto = xla::HloModuleProto::from_text_file(&path)
@@ -160,7 +163,7 @@ impl Engine {
         Ok(out
             .into_iter()
             .next()
-            .ok_or_else(|| anyhow!("{name}: empty output tuple"))?
+            .ok_or_else(|| rt_err!("{name}: empty output tuple"))?
             .as_f32()?
             .to_vec())
     }

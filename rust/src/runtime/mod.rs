@@ -7,10 +7,16 @@
 //! 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos, see
 //! /opt/xla-example/README.md), compiles them once on the PJRT CPU
 //! client, and keeps the loaded executables hot.
+//!
+//! In builds without the `xla` bindings (the offline crate set ships
+//! none), [`xla_shim`] stands in: same API surface, every PJRT entry
+//! point reports "unavailable", and the golden-model backend carries
+//! serving through the compiled integer kernels instead.
 
 mod artifact;
 mod engine;
 mod server;
+pub mod xla_shim;
 
 pub use artifact::{ArtifactDir, ArtifactMeta, TensorSpec};
 pub use engine::{Engine, LoadedGraph, TensorValue};

@@ -7,7 +7,8 @@
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-use anyhow::Result;
+use crate::rt_err;
+use crate::util::error::RtResult as Result;
 
 use super::artifact::ArtifactDir;
 use super::engine::{Engine, TensorValue};
@@ -73,8 +74,8 @@ impl EngineServer {
             .expect("spawning engine thread");
         let platform = init_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during init"))?
-            .map_err(|e| anyhow::anyhow!("engine init: {e}"))?;
+            .map_err(|_| rt_err!("engine thread died during init"))?
+            .map_err(|e| rt_err!("engine init: {e}"))?;
         Ok(EngineServer { tx: Mutex::new(tx), platform })
     }
 

@@ -1,0 +1,157 @@
+//! Loadable-runtime shim for the `xla` PJRT bindings.
+//!
+//! The offline image this crate builds in does not ship the `xla`
+//! crate (nor a crates.io registry to fetch it from), so the engine is
+//! written against this shim instead: the exact API slice
+//! [`super::engine`] consumes, with every entry point that would touch
+//! PJRT returning a descriptive error. When the real bindings are
+//! available, swap `use super::xla_shim as xla;` in `engine.rs` for
+//! `use xla;` — no other code changes are needed, which is the point of
+//! keeping the shim's signatures bit-compatible.
+//!
+//! Serving does not regress from this: the golden-model backend
+//! ([`crate::coordinator::GoldenBackend`]) now runs every method through
+//! the compiled integer kernels, so the coordinator keeps its full
+//! throughput story without PJRT.
+
+use std::path::Path;
+
+use crate::util::error::RtError;
+
+/// Error/Result aliases matching the `?`-conversion the engine relies on.
+pub type Error = RtError;
+/// Shim-local result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    RtError::msg(format!(
+        "{what}: PJRT runtime unavailable in this build (xla bindings not linked; \
+         see runtime::xla_shim)"
+    ))
+}
+
+/// Element dtypes the engine distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    /// float32.
+    F32,
+    /// signed int32 (raw fixed-point words).
+    S32,
+    /// Other dtypes the manifest could declare; never constructed here.
+    Other,
+}
+
+/// A host-side tensor literal (stub: carries no data).
+#[derive(Clone, Debug)]
+pub struct Literal;
+
+impl Literal {
+    /// Builds a rank-1 literal from a slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshapes to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    /// The element dtype.
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(unavailable("Literal::ty"))
+    }
+
+    /// Copies the data out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Destructures a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// A device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copies the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Executes with the given argument literals; returns per-device,
+    /// per-output buffers (`[replica][output]`).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Creates a CPU-backed client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Compiles an XLA computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parses an HLO text file (the AOT artifact format).
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wraps a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+
+    #[test]
+    fn literal_ops_fail_gracefully() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

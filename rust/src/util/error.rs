@@ -1,0 +1,104 @@
+//! Minimal error type for the runtime layers (anyhow is not in the
+//! offline crate set): a message-carrying error, a `Result` alias and a
+//! `Context` extension trait mirroring the `anyhow::Context` surface the
+//! runtime modules use.
+
+use std::fmt;
+
+/// A string-backed error with optional context frames.
+#[derive(Clone, Debug)]
+pub struct RtError(String);
+
+impl RtError {
+    /// Builds an error from a message.
+    pub fn msg(m: impl Into<String>) -> RtError {
+        RtError(m.into())
+    }
+}
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+impl From<String> for RtError {
+    fn from(s: String) -> RtError {
+        RtError(s)
+    }
+}
+
+impl From<&str> for RtError {
+    fn from(s: &str) -> RtError {
+        RtError(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for RtError {
+    fn from(e: std::io::Error) -> RtError {
+        RtError(e.to_string())
+    }
+}
+
+/// Result alias used by the runtime / coordinator load paths. The
+/// defaulted error parameter mirrors `anyhow::Result` so call sites can
+/// still write `Result<T, String>` where they need a plain error type.
+pub type RtResult<T, E = RtError> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style extension: wrap any displayable error with a
+/// human-readable frame (`"reading manifest.json: <cause>"`).
+pub trait Context<T> {
+    /// Adds a static context message.
+    fn context(self, msg: &str) -> RtResult<T>;
+    /// Adds a lazily-built context message.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> RtResult<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> RtResult<T> {
+        self.map_err(|e| RtError(format!("{msg}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> RtResult<T> {
+        self.map_err(|e| RtError(format!("{}: {e}", f())))
+    }
+}
+
+/// `anyhow!`-style formatting constructor for [`RtError`].
+#[macro_export]
+macro_rules! rt_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::RtError::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_wraps_cause() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "no such file",
+        ));
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().contains("reading manifest"));
+        assert!(e.to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = rt_err!("artifact '{}' missing", "tanh_pwl_1024");
+        assert_eq!(e.to_string(), "artifact 'tanh_pwl_1024' missing");
+    }
+
+    #[test]
+    fn with_context_is_lazy_formatted() {
+        let r: RtResult<()> = Err(RtError::msg("cause"));
+        let e = r.with_context(|| format!("frame {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "frame 7: cause");
+    }
+}

@@ -9,10 +9,12 @@
 //! - [`proptest`] — seeded property-test runner with shrinking,
 //! - [`json`] — minimal JSON value model + writer (reports, metrics),
 //! - [`csv`] — CSV writer for figure series,
-//! - [`table`] — aligned text tables for paper-style output.
+//! - [`table`] — aligned text tables for paper-style output,
+//! - [`error`] — anyhow-style message error for the runtime load paths.
 
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod proptest;

@@ -4,15 +4,94 @@
 
 use std::sync::Arc;
 
-use tanh_vlsi::approx::{build, eval_odd_saturating, table1_suite, MethodId, TanhApprox};
+use tanh_vlsi::approx::{build, eval_odd_saturating, table1_suite, IoSpec, MethodId, TanhApprox};
 use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, ExecBackend};
-use tanh_vlsi::error::InputGrid;
+use tanh_vlsi::error::{measure_with_threads, InputGrid};
 use tanh_vlsi::fixed::{Fx, QFormat};
 use tanh_vlsi::hw::table1_pipeline;
 use tanh_vlsi::util::proptest::{prop_check, Prng};
 
 const INP: QFormat = QFormat::S3_12;
 const OUT: QFormat = QFormat::S_15;
+
+#[test]
+fn compiled_kernels_bit_exact_on_full_table1_grid() {
+    // The tentpole invariant: for every method, the compiled batch
+    // kernel reproduces the scalar golden datapath raw-for-raw over the
+    // entire exhaustive Table I grid (every S3.12 word in ±6).
+    let io = IoSpec::table1();
+    let grid = InputGrid::table1();
+    let (lo, hi) = grid.raw_bounds();
+    let xs: Vec<i64> = (lo..=hi).collect();
+    for m in table1_suite() {
+        let kernel = m.compile(io);
+        let mut ys = vec![0i64; xs.len()];
+        kernel.eval_slice_raw(&xs, &mut ys);
+        for (&raw, &y) in xs.iter().zip(&ys) {
+            let want = m.eval_fx(Fx::from_raw(raw, io.input), io.output).raw();
+            assert_eq!(y, want, "{} at raw {raw}", m.describe());
+        }
+    }
+}
+
+#[test]
+fn parallel_measure_identical_to_sequential_for_all_methods() {
+    // Fixed-size chunking + in-order Accum merging make the parallel
+    // sweep deterministic: every field must match the single-threaded
+    // result bit-for-bit, for every method (different kernel shapes).
+    let grid = InputGrid::table1();
+    for m in table1_suite() {
+        let seq = measure_with_threads(m.as_ref(), grid, OUT, 1);
+        let par = measure_with_threads(m.as_ref(), grid, OUT, 4);
+        assert_eq!(seq.max_abs, par.max_abs, "{}", m.describe());
+        assert_eq!(seq.argmax, par.argmax, "{}", m.describe());
+        assert_eq!(seq.mse, par.mse, "{}", m.describe());
+        assert_eq!(seq.rms, par.rms, "{}", m.describe());
+        assert_eq!(seq.mean_abs, par.mean_abs, "{}", m.describe());
+        assert_eq!(seq.max_ulp, par.max_ulp, "{}", m.describe());
+        assert_eq!(seq.points, par.points, "{}", m.describe());
+    }
+}
+
+#[test]
+fn prop_compiled_kernels_bit_exact_random_configs() {
+    // Beyond the Table I configurations: random parameters and the
+    // Table III format pairs must also compile bit-exactly (structured
+    // kernels where the decode exists, tabulation fallback otherwise).
+    prop_check("compiled == scalar on random configs", 40, |g: &mut Prng| {
+        let id = *g.choose(&MethodId::all());
+        let io = *g.choose(&[
+            IoSpec::table1(),
+            IoSpec { input: QFormat::S2_13, output: QFormat::S_15 },
+            IoSpec { input: QFormat::S2_5, output: QFormat::S_7 },
+        ]);
+        // A step of 2^-k needs k addressable input fraction bits, and
+        // centred Taylor anchors need one t bit on top (the scalar
+        // datapath cannot decode finer steps either).
+        let k_max = 7.min(io.input.frac_bits as i64 - 1);
+        let param = match id {
+            MethodId::Lambert => g.i64_in(2, 10) as f64,
+            _ => (2f64).powi(-g.i64_in(2, k_max) as i32),
+        };
+        let domain = if io.input == QFormat::S3_12 { 6.0 } else { 4.0 };
+        let m = build(id, param, domain);
+        let kernel = m.compile(io);
+        for _ in 0..64 {
+            let raw = g.i64_in(io.input.min_raw(), io.input.max_raw());
+            let want = m.eval_fx(Fx::from_raw(raw, io.input), io.output).raw();
+            let got = kernel.eval_raw(raw);
+            if got != want {
+                return Err(format!(
+                    "{} {}->{} raw {raw}: kernel {got} vs scalar {want}",
+                    m.describe(),
+                    io.input,
+                    io.output
+                ));
+            }
+        }
+        Ok(())
+    });
+}
 
 #[test]
 fn prop_output_bounded_by_one_for_all_methods_and_params() {
