@@ -72,6 +72,8 @@ fn main() -> anyhow::Result<()> {
                 max_wait: std::time::Duration::from_micros(300),
                 ..Default::default()
             },
+            // Two worker shards per method, fed round-robin.
+            ..Default::default()
         },
     ));
 
@@ -90,7 +92,8 @@ fn main() -> anyhow::Result<()> {
     println!("batches executed   : {} ({:.1} req/batch)", m.batches, m.requests as f64 / m.batches.max(1) as f64);
     println!("batch efficiency   : {:.1} %", 100.0 * m.batch_efficiency());
     println!("mean latency       : {:.0} µs", m.mean_latency_us());
-    println!("max latency        : {} µs", m.latency_us_max);
+    println!("latency p50/p95/p99: {:.0} / {:.0} / {:.0} µs", m.p50_us(), m.p95_us(), m.p99_us());
+    println!("max latency        : {} µs", m.latency_us_max());
     println!("rejected (backpressure): {}", m.rejected);
     println!("errors             : {}", m.errors);
     assert_eq!(m.errors, 0);

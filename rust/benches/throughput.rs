@@ -188,13 +188,15 @@ fn run_coordinator(label: &str, backend: Arc<dyn ExecBackend>, smoke: bool, log:
     let secs = elapsed.as_secs_f64();
     let m = coord.metrics();
     println!(
-        "coordinator/{label:6}  {:.0} req/s  {:.2} Mact/s  {} batches (fill {:.1}%, eff {:.1}%)  mean lat {:.0} µs",
+        "coordinator/{label:6}  {:.0} req/s  {:.2} Mact/s  {} batches (fill {:.1}%, eff {:.1}%)  lat µs p50 {:.0} / p99 {:.0} / max {}",
         m.requests as f64 / secs,
         m.elements as f64 / secs / 1e6,
         m.batches,
         100.0 * m.fill_rate(),
         100.0 * m.batch_efficiency(),
-        m.mean_latency_us()
+        m.p50_us(),
+        m.p99_us(),
+        m.latency_us_max()
     );
     log.record(
         m.elements as usize,

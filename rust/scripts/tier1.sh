@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verification (referenced from ROADMAP.md): release build, full
-# test suite, then a throughput smoke bench so hot-path regressions and
-# bench-target bitrot are caught even though `cargo test` never builds
-# the bench binaries.
+# test suite, a throughput smoke bench, and a serve-scenario smoke so
+# hot-path, bench-target and serving-harness regressions are caught even
+# though `cargo test` never builds the bench binaries or drives the CLI.
 #
 # Usage: rust/scripts/tier1.sh   (from anywhere; cd's to the crate root)
 set -euo pipefail
@@ -16,5 +16,25 @@ cargo test -q
 
 echo "== tier-1: throughput smoke bench (TANH_SMOKE=1) =="
 TANH_SMOKE=1 cargo bench --bench throughput
+
+echo "== tier-1: serve-scenario smoke (TANH_SMOKE=1) =="
+# All five deterministic scenarios in one run, shortened by TANH_SMOKE
+# (scale 0.1), on >= 2 shards per method; the binary verifies every
+# reply bit-exact against the compiled golden kernels and validates the
+# report schema, exiting nonzero on any failure. Writes the canonical
+# BENCH_serve.json tracked across PRs.
+BIN=target/release/tanh-vlsi
+TANH_SMOKE=1 "$BIN" serve --scenario all --seed 42 --shards 2 --out BENCH_serve.json
+
+# Belt-and-braces schema check independent of the binary's validator:
+# nonzero throughput and every required key present in the report.
+for key in scenario seed shards requests elements verified fill_rate \
+           p50_us p95_us p99_us max_us evals_per_s; do
+  grep -q "\"$key\"" BENCH_serve.json \
+    || { echo "tier-1 FAIL: BENCH_serve.json missing key '$key'"; exit 1; }
+done
+if grep -Eq '"requests": 0(,|$)' BENCH_serve.json; then
+  echo "tier-1 FAIL: BENCH_serve.json has a zero-request scenario"; exit 1
+fi
 
 echo "== tier-1: OK =="

@@ -155,6 +155,12 @@ impl BenchLog {
         ]));
     }
 
+    /// Records a pre-built row (the scenario runner's serve reports
+    /// carry a wider schema than `record`'s fixed one).
+    pub fn push_row(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
     /// Number of recorded rows.
     pub fn len(&self) -> usize {
         self.rows.len()

@@ -1,7 +1,10 @@
 //! Self-contained benchmark harness (criterion is not in the offline
 //! crate set): warmup + timed iterations + robust statistics, with the
-//! paper-table renderers layered on top in `rust/benches/*.rs`.
+//! paper-table renderers layered on top in `rust/benches/*.rs`, plus
+//! the deterministic serving-load scenarios ([`scenario`]) behind
+//! `tanh-vlsi serve --scenario` and the tier-1 smoke.
 
 mod harness;
+pub mod scenario;
 
 pub use harness::{bench, bench_n, BenchLog, BenchResult, Bencher};

@@ -1,0 +1,649 @@
+//! Deterministic scenario-driven load generation for the coordinator.
+//!
+//! `serve --requests N` replays one synthetic pattern; real activation
+//! traffic is shaped — bursts, skewed method popularity, floods of
+//! scalar requests, full-batch tensor slabs. This module encodes those
+//! shapes as **scenarios**: PRNG-seeded workload generators that expand
+//! to a replayable [`Trace`] (an explicit request list with open-loop
+//! send offsets), so the same `(scenario, seed)` pair produces the
+//! byte-identical workload on every machine and every PR. That is what
+//! makes `BENCH_serve.json` rows comparable across commits: timing
+//! fields move, the workload never does.
+//!
+//! The five scenarios (see [`SCENARIO_NAMES`]):
+//!
+//! | name       | shape                                                    |
+//! |------------|----------------------------------------------------------|
+//! | `steady`   | constant-rate open loop, fixed 64-element requests       |
+//! | `bursty`   | on/off: 16-request bursts, 1 ms silences                 |
+//! | `zipf`     | Zipf-skewed method mix, sizes 1–256, heavy-tailed gaps   |
+//! | `flood`    | tiny (1–4 element) requests as fast as possible          |
+//! | `maxbatch` | every request exactly one full compiled batch            |
+//!
+//! [`run_trace`] drives a [`Coordinator`] with a trace — paced
+//! (open-loop, honoring `at_us`) or closed-loop — while a collector
+//! thread drains and **verifies every reply against the compiled
+//! golden kernels** ([`GoldenVerifier`]), bit-exact for the golden
+//! backend. Backpressure rejections are retried (bounded), so the
+//! completion counts in [`ScenarioOutcome`] are deterministic even
+//! when the flood scenarios saturate the queues.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::approx::MethodId;
+use crate::coordinator::{
+    Coordinator, ExecBackend, GoldenBackend, MetricsSnapshot, RequestResult,
+};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+/// The scenario registry, in canonical order.
+pub const SCENARIO_NAMES: [&str; 5] = ["steady", "bursty", "zipf", "flood", "maxbatch"];
+
+/// One scheduled request of a workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    /// Which approximation to exercise.
+    pub method: MethodId,
+    /// Input activations.
+    pub values: Vec<f32>,
+    /// Open-loop send offset from trace start, in microseconds
+    /// (ignored in closed-loop replay).
+    pub at_us: u64,
+}
+
+/// A fully expanded, replayable workload: the output of
+/// [`build_trace`], deterministic in `(name, seed, batch_elements,
+/// scale)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Scenario name.
+    pub name: String,
+    /// PRNG seed the trace was expanded from.
+    pub seed: u64,
+    /// Requests in schedule order.
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    /// Total activation elements across the trace.
+    pub fn total_elements(&self) -> u64 {
+        self.requests.iter().map(|r| r.values.len() as u64).sum()
+    }
+}
+
+fn gen_values(g: &mut Prng, len: usize) -> Vec<f32> {
+    (0..len.max(1)).map(|_| g.f64_in(-6.0, 6.0) as f32).collect()
+}
+
+/// Zipf-style popularity weights for the six methods (≈ 1/k^1.1),
+/// fixed as literals: `powf` is libm-dependent and not bit-identical
+/// across platforms, which would break the byte-identical-workload
+/// contract traces promise.
+const ZIPF_WEIGHTS: [f64; 6] = [1.0, 0.4665, 0.2987, 0.2176, 0.1722, 0.1431];
+
+/// Zipf-skewed index in `[0, 6)` by CDF inversion over
+/// [`ZIPF_WEIGHTS`]. Pure IEEE add/mul/compare on literal constants —
+/// deterministic on every platform.
+fn zipf_index(g: &mut Prng) -> usize {
+    let total: f64 = ZIPF_WEIGHTS.iter().sum();
+    let mut u = g.f64() * total;
+    for (i, w) in ZIPF_WEIGHTS.iter().enumerate() {
+        if u < *w {
+            return i;
+        }
+        u -= w;
+    }
+    ZIPF_WEIGHTS.len() - 1
+}
+
+/// Expands a scenario into a replayable trace.
+///
+/// `scale` multiplies the scenario's base request count (1.0 = full
+/// profile, tier-1 smoke uses 0.1); every count is clamped to ≥ 1.
+/// Request sizes are capped at `batch_elements` so the trace is valid
+/// for the compiled batch it will be served on.
+pub fn build_trace(
+    name: &str,
+    seed: u64,
+    batch_elements: usize,
+    scale: f64,
+) -> Result<Trace, String> {
+    if batch_elements == 0 {
+        return Err("batch_elements must be > 0".into());
+    }
+    let mut g = Prng::new(seed);
+    let n = |base: usize| ((base as f64 * scale) as usize).max(1);
+    let methods = MethodId::all();
+    let mut reqs = Vec::new();
+    match name {
+        "steady" => {
+            // Constant-rate open loop: one fixed-size request every
+            // 30 µs, methods round-robin.
+            let count = n(600);
+            for i in 0..count {
+                let len = 64.min(batch_elements);
+                reqs.push(TraceRequest {
+                    method: methods[i % methods.len()],
+                    values: gen_values(&mut g, len),
+                    at_us: i as u64 * 30,
+                });
+            }
+        }
+        "bursty" => {
+            // On/off: bursts of 16 mixed-size requests land together,
+            // separated by 1 ms of silence.
+            let bursts = n(40);
+            let mut at = 0u64;
+            for _ in 0..bursts {
+                for _ in 0..16 {
+                    let len = (16 + g.usize_below(113)).min(batch_elements);
+                    reqs.push(TraceRequest {
+                        method: *g.choose(&methods),
+                        values: gen_values(&mut g, len),
+                        at_us: at,
+                    });
+                }
+                at += 1000;
+            }
+        }
+        "zipf" => {
+            // Skewed method popularity (≈ Zipf s=1.1 over the Table I
+            // order), log-uniform sizes, heavy-tailed inter-arrivals
+            // (mostly short gaps, occasional long ones; mean ≈ 29 µs —
+            // integer-deterministic, no libm `ln`).
+            let count = n(800);
+            let mut at = 0u64;
+            for _ in 0..count {
+                let method = methods[zipf_index(&mut g)];
+                let len = (1usize << g.usize_below(9)).min(batch_elements);
+                at += if g.bool(0.9) { g.u64_below(20) } else { 100 + g.u64_below(200) };
+                reqs.push(TraceRequest { method, values: gen_values(&mut g, len), at_us: at });
+            }
+        }
+        "flood" => {
+            // Tiny-request flood: 1–4 element requests, no pacing —
+            // the padding-waste and backpressure stressor.
+            let count = n(2000);
+            for i in 0..count {
+                let len = (1 + g.usize_below(4)).min(batch_elements);
+                reqs.push(TraceRequest {
+                    method: methods[i % methods.len()],
+                    values: gen_values(&mut g, len),
+                    at_us: 0,
+                });
+            }
+        }
+        "maxbatch" => {
+            // Every request is one full compiled batch: zero padding,
+            // zero packing headroom.
+            let count = n(48);
+            for i in 0..count {
+                reqs.push(TraceRequest {
+                    method: methods[i % methods.len()],
+                    values: gen_values(&mut g, batch_elements),
+                    at_us: 0,
+                });
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown scenario '{other}' (have: {})",
+                SCENARIO_NAMES.join(", ")
+            ))
+        }
+    }
+    Ok(Trace { name: name.to_string(), seed, requests: reqs })
+}
+
+/// Recomputes expected outputs through the compiled golden kernels,
+/// independent of the serving path (same compile, separate instance —
+/// a bug in the coordinator's slicing or routing cannot cancel out).
+pub struct GoldenVerifier {
+    backend: GoldenBackend,
+}
+
+impl GoldenVerifier {
+    /// Compiles all six golden kernels.
+    pub fn new() -> GoldenVerifier {
+        GoldenVerifier { backend: GoldenBackend::table1(1) }
+    }
+
+    /// Expected outputs for a request.
+    pub fn expected(&self, method: MethodId, values: &[f32]) -> Result<Vec<f32>, String> {
+        self.backend.execute(method, values)
+    }
+}
+
+impl Default for GoldenVerifier {
+    fn default() -> Self {
+        GoldenVerifier::new()
+    }
+}
+
+/// Reply-correctness policy for [`run_trace`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verify {
+    /// Bit-exact equality with the compiled golden kernels (the golden
+    /// backend serves through the same kernels, so any mismatch is a
+    /// batching/routing/slicing bug).
+    Exact,
+    /// Absolute tolerance (for the f32 PJRT graphs, which skip output
+    /// quantization).
+    Tolerance(f64),
+    /// No verification.
+    Off,
+}
+
+/// Replay options for [`run_trace`].
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// Honor the trace's open-loop `at_us` schedule (sleep between
+    /// sends) instead of submitting as fast as possible.
+    pub pace: bool,
+    /// Correctness check applied to every successful reply.
+    pub verify: Verify,
+    /// Bound on requests in flight (collector channel capacity).
+    pub max_inflight: usize,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { pace: false, verify: Verify::Exact, max_inflight: 512 }
+    }
+}
+
+/// What a scenario run produced. The load-dependent fields
+/// (`submitted`, `completed`, `failed`, `elements`, `verified`) are
+/// deterministic for a given trace; `wall`, `retries` and the latency
+/// content of `metrics` are timing observables.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    /// Scenario name.
+    pub name: String,
+    /// Trace seed.
+    pub seed: u64,
+    /// Requests accepted by the coordinator.
+    pub submitted: u64,
+    /// Successful replies.
+    pub completed: u64,
+    /// Error replies.
+    pub failed: u64,
+    /// Backpressure retries spent (timing-dependent).
+    pub retries: u64,
+    /// Elements in successful replies.
+    pub elements: u64,
+    /// Replies checked against the golden kernels.
+    pub verified: u64,
+    /// Wall time from first submit to last reply.
+    pub wall: Duration,
+    /// Coordinator metrics merged across shards at run end.
+    pub metrics: MetricsSnapshot,
+}
+
+impl ScenarioOutcome {
+    /// One machine-readable `BENCH_serve.json` row. The key set is
+    /// [`SERVE_ROW_KEYS`]; tier-1's smoke validates it via
+    /// [`validate_serve_log`].
+    pub fn to_json(&self, backend: &str, shards: usize, batch_elements: usize) -> Json {
+        let m = &self.metrics;
+        let secs = self.wall.as_secs_f64().max(1e-9);
+        Json::obj(vec![
+            ("name", Json::s(format!("serve/{}", self.name))),
+            ("scenario", Json::s(self.name.clone())),
+            ("seed", Json::i(self.seed as i64)),
+            ("backend", Json::s(backend)),
+            ("shards", Json::i(shards as i64)),
+            ("batch_elements", Json::i(batch_elements as i64)),
+            ("requests", Json::i(self.completed as i64)),
+            ("failed", Json::i(self.failed as i64)),
+            ("elements", Json::i(self.elements as i64)),
+            ("verified", Json::i(self.verified as i64)),
+            ("wall_ns", Json::n(self.wall.as_nanos() as f64)),
+            ("req_per_s", Json::n(self.completed as f64 / secs)),
+            ("evals_per_s", Json::n(self.elements as f64 / secs)),
+            ("batches", Json::i(m.batches as i64)),
+            ("fill_rate", Json::n(m.fill_rate())),
+            ("rejected_retries", Json::i(self.retries as i64)),
+            ("p50_us", Json::n(m.p50_us())),
+            ("p95_us", Json::n(m.p95_us())),
+            ("p99_us", Json::n(m.p99_us())),
+            ("max_us", Json::i(m.latency_us_max() as i64)),
+        ])
+    }
+
+    /// The seed-deterministic subset of the row: byte-identical across
+    /// runs with the same `(scenario, seed, batch, scale)` — the
+    /// "modulo timing fields" contract `tests/serving.rs` asserts.
+    pub fn deterministic_fields(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::s(self.name.clone())),
+            ("seed", Json::i(self.seed as i64)),
+            ("submitted", Json::i(self.submitted as i64)),
+            ("requests", Json::i(self.completed as i64)),
+            ("failed", Json::i(self.failed as i64)),
+            ("elements", Json::i(self.elements as i64)),
+            ("verified", Json::i(self.verified as i64)),
+        ])
+    }
+}
+
+/// Keys every `BENCH_serve.json` row must carry.
+pub const SERVE_ROW_KEYS: [&str; 20] = [
+    "name",
+    "scenario",
+    "seed",
+    "backend",
+    "shards",
+    "batch_elements",
+    "requests",
+    "failed",
+    "elements",
+    "verified",
+    "wall_ns",
+    "req_per_s",
+    "evals_per_s",
+    "batches",
+    "fill_rate",
+    "rejected_retries",
+    "p50_us",
+    "p95_us",
+    "p99_us",
+    "max_us",
+];
+
+/// Validates a `BENCH_serve.json` document: a non-empty array whose
+/// rows carry every [`SERVE_ROW_KEYS`] key, completed at least one
+/// request, and report nonzero throughput. Returns the row count.
+pub fn validate_serve_log(text: &str) -> Result<usize, String> {
+    let doc = crate::util::json::parse(text).map_err(|e| format!("BENCH_serve.json: {e}"))?;
+    let rows = doc.as_arr().ok_or("BENCH_serve.json: top level is not an array")?;
+    if rows.is_empty() {
+        return Err("BENCH_serve.json: no rows".into());
+    }
+    for (i, row) in rows.iter().enumerate() {
+        for key in SERVE_ROW_KEYS {
+            if row.get(key).is_none() {
+                return Err(format!("BENCH_serve.json row {i}: missing key '{key}'"));
+            }
+        }
+        let requests = row.get("requests").and_then(Json::num).unwrap_or(0.0);
+        if requests <= 0.0 {
+            return Err(format!("BENCH_serve.json row {i}: zero requests"));
+        }
+        let rate = row.get("evals_per_s").and_then(Json::num).unwrap_or(0.0);
+        if !(rate > 0.0) {
+            return Err(format!("BENCH_serve.json row {i}: zero throughput"));
+        }
+    }
+    Ok(rows.len())
+}
+
+/// Replays a trace against a running coordinator.
+///
+/// The submit loop (optionally paced to the trace schedule) feeds a
+/// bounded channel drained by a collector thread, which waits on every
+/// reply and verifies it per `opts.verify`. Backpressure rejections
+/// are retried with a short sleep so every trace request eventually
+/// completes — that keeps [`ScenarioOutcome`]'s completion counts
+/// deterministic while still exercising the shed/fail-fast path (the
+/// retry count is reported). Any verification mismatch aborts the run
+/// with an error.
+pub fn run_trace(
+    coord: &Coordinator,
+    trace: &Trace,
+    opts: &RunOptions,
+) -> Result<ScenarioOutcome, String> {
+    let verifier = match opts.verify {
+        Verify::Off => None,
+        _ => Some(GoldenVerifier::new()),
+    };
+    let need_values = verifier.is_some();
+    let verify = opts.verify;
+    type InFlight = (MethodId, Vec<f32>, mpsc::Receiver<RequestResult>);
+    let (tx, rx) = mpsc::sync_channel::<InFlight>(opts.max_inflight.max(1));
+
+    let collector = std::thread::Builder::new()
+        .name("tanh-scenario-collect".into())
+        .spawn(move || -> Result<(u64, u64, u64, u64), String> {
+            let (mut completed, mut failed, mut elements, mut verified) = (0u64, 0u64, 0u64, 0u64);
+            while let Ok((method, values, reply)) = rx.recv() {
+                let result = reply.recv().map_err(|_| "reply channel dropped".to_string())?;
+                match result.outcome {
+                    Ok(out) => {
+                        completed += 1;
+                        elements += out.len() as u64;
+                        if let Some(v) = &verifier {
+                            let want = v.expected(method, &values)?;
+                            if out.len() != want.len() {
+                                return Err(format!(
+                                    "{method:?}: served {} outputs for {} inputs",
+                                    out.len(),
+                                    want.len()
+                                ));
+                            }
+                            for (i, (got, exp)) in out.iter().zip(&want).enumerate() {
+                                let ok = match verify {
+                                    Verify::Exact => got.to_bits() == exp.to_bits(),
+                                    Verify::Tolerance(tol) => {
+                                        ((got - exp).abs() as f64) <= tol
+                                    }
+                                    Verify::Off => true,
+                                };
+                                if !ok {
+                                    return Err(format!(
+                                        "verification failed: {method:?} output[{i}] \
+                                         served {got} vs golden kernel {exp}"
+                                    ));
+                                }
+                            }
+                            verified += 1;
+                        }
+                    }
+                    Err(_) => failed += 1,
+                }
+            }
+            Ok((completed, failed, elements, verified))
+        })
+        .map_err(|e| format!("spawning collector: {e}"))?;
+
+    let start = Instant::now();
+    let mut submitted = 0u64;
+    let mut retries = 0u64;
+    for tr in &trace.requests {
+        if opts.pace && tr.at_us > 0 {
+            let target = start + Duration::from_micros(tr.at_us);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+        // Bounded backpressure retry: the collector is continuously
+        // draining, so the routed queue frees up; the cap only guards
+        // against a wedged coordinator.
+        let mut receiver = None;
+        for _attempt in 0..500_000u32 {
+            match coord.submit(tr.method, tr.values.clone()) {
+                Ok(r) => {
+                    receiver = Some(r);
+                    break;
+                }
+                Err(e) if e.contains("backpressure") => {
+                    retries += 1;
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                Err(e) => {
+                    drop(tx);
+                    let _ = collector.join();
+                    return Err(format!("submit failed: {e}"));
+                }
+            }
+        }
+        let reply = match receiver {
+            Some(r) => r,
+            None => {
+                drop(tx);
+                let _ = collector.join();
+                return Err("backpressure retry budget exhausted".into());
+            }
+        };
+        submitted += 1;
+        // Skip the input copy when nothing will verify it.
+        let values = if need_values { tr.values.clone() } else { Vec::new() };
+        if tx.send((tr.method, values, reply)).is_err() {
+            // The collector exited early — almost always a verification
+            // failure; surface its error instead of a generic one.
+            drop(tx);
+            let joined =
+                collector.join().map_err(|_| "collector thread panicked".to_string())?;
+            return match joined {
+                Err(e) => Err(e),
+                Ok(_) => Err("collector thread exited early".into()),
+            };
+        }
+    }
+    drop(tx);
+    let joined = collector.join().map_err(|_| "collector thread panicked".to_string())?;
+    let (completed, failed, elements, verified) = joined?;
+    Ok(ScenarioOutcome {
+        name: trace.name.clone(),
+        seed: trace.seed,
+        submitted,
+        completed,
+        failed,
+        retries,
+        elements,
+        verified,
+        wall: start.elapsed(),
+        metrics: coord.metrics(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_seed_deterministic() {
+        for name in SCENARIO_NAMES {
+            let a = build_trace(name, 7, 256, 0.05).unwrap();
+            let b = build_trace(name, 7, 256, 0.05).unwrap();
+            assert_eq!(a, b, "{name}");
+            assert!(!a.requests.is_empty(), "{name}");
+            let c = build_trace(name, 8, 256, 0.05).unwrap();
+            assert_ne!(a.requests, c.requests, "{name}: seed must matter");
+        }
+    }
+
+    #[test]
+    fn traces_respect_batch_capacity() {
+        for name in SCENARIO_NAMES {
+            let t = build_trace(name, 3, 128, 0.1).unwrap();
+            for r in &t.requests {
+                assert!(!r.values.is_empty(), "{name}");
+                assert!(r.values.len() <= 128, "{name}: {}", r.values.len());
+                for v in &r.values {
+                    assert!(v.is_finite() && (-6.0..=6.0).contains(v), "{name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxbatch_requests_fill_the_batch_exactly() {
+        let t = build_trace("maxbatch", 1, 64, 0.1).unwrap();
+        for r in &t.requests {
+            assert_eq!(r.values.len(), 64);
+        }
+    }
+
+    #[test]
+    fn zipf_skews_toward_first_methods() {
+        let t = build_trace("zipf", 42, 1024, 1.0).unwrap();
+        let count = |m: MethodId| t.requests.iter().filter(|r| r.method == m).count();
+        let first = count(MethodId::Pwl);
+        let last = count(MethodId::Lambert);
+        assert!(
+            first > last,
+            "Zipf mix should favor rank 1 over rank 6: {first} vs {last}"
+        );
+        // …but every method still appears (coverage for the smoke).
+        for m in MethodId::all() {
+            assert!(count(m) > 0, "{m:?} absent from zipf mix");
+        }
+    }
+
+    #[test]
+    fn steady_schedule_is_monotone_open_loop() {
+        let t = build_trace("steady", 5, 1024, 0.1).unwrap();
+        let mut prev = 0;
+        for (i, r) in t.requests.iter().enumerate() {
+            assert!(r.at_us >= prev, "at_us must be non-decreasing at {i}");
+            prev = r.at_us;
+        }
+        assert!(t.requests.last().unwrap().at_us > 0);
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let err = build_trace("nope", 0, 64, 1.0).unwrap_err();
+        assert!(err.contains("unknown scenario"));
+        assert!(err.contains("steady"), "error should list valid names: {err}");
+    }
+
+    #[test]
+    fn serve_log_validation_accepts_real_rows_and_rejects_broken_ones() {
+        let outcome = ScenarioOutcome {
+            name: "steady".into(),
+            seed: 42,
+            submitted: 10,
+            completed: 10,
+            failed: 0,
+            retries: 0,
+            elements: 640,
+            verified: 10,
+            wall: Duration::from_millis(5),
+            metrics: MetricsSnapshot::default(),
+        };
+        let row = outcome.to_json("golden", 2, 1024);
+        let text = Json::arr(vec![row.clone()]).to_string_pretty();
+        assert_eq!(validate_serve_log(&text).unwrap(), 1);
+
+        // Missing key.
+        let Json::Obj(mut map) = row.clone() else { panic!("row is an object") };
+        map.remove("p99_us");
+        let broken = Json::arr(vec![Json::Obj(map)]).to_string_pretty();
+        assert!(validate_serve_log(&broken).unwrap_err().contains("p99_us"));
+
+        // Zero throughput.
+        let mut zero = outcome;
+        zero.elements = 0;
+        let text = Json::arr(vec![zero.to_json("golden", 2, 1024)]).to_string_compact();
+        assert!(validate_serve_log(&text).unwrap_err().contains("throughput"));
+
+        // Empty array / non-array.
+        assert!(validate_serve_log("[]").is_err());
+        assert!(validate_serve_log("{}").is_err());
+    }
+
+    #[test]
+    fn deterministic_fields_exclude_timing() {
+        let outcome = ScenarioOutcome {
+            name: "flood".into(),
+            seed: 1,
+            submitted: 3,
+            completed: 3,
+            failed: 0,
+            retries: 99,
+            elements: 9,
+            verified: 3,
+            wall: Duration::from_secs(1),
+            metrics: MetricsSnapshot::default(),
+        };
+        let text = outcome.deterministic_fields().to_string_compact();
+        assert!(!text.contains("wall"), "{text}");
+        assert!(!text.contains("retries"), "{text}");
+        assert!(text.contains("\"verified\":3"), "{text}");
+    }
+}

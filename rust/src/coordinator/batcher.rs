@@ -12,7 +12,8 @@ pub struct BatcherConfig {
     pub batch_elements: usize,
     /// Flush a partial batch after this long even if not full.
     pub max_wait: Duration,
-    /// Backpressure bound: max queued elements per method.
+    /// Backpressure bound: max queued elements per worker shard (a
+    /// method's total queue capacity is `shards × max_queue`).
     pub max_queue: usize,
 }
 
@@ -89,14 +90,28 @@ impl PendingBatch {
 
     /// Packs into the executable's flat input, zero-padded to
     /// `capacity`; returns (flat_input, per-request (offset, len)).
+    ///
+    /// Requests are packed whole and head-to-tail: a request is never
+    /// split across batches, and its span is always a contiguous slice
+    /// of the flat vector (the worker slices replies back out with
+    /// these spans, discarding the zero padding).
     pub fn pack(&self, capacity: usize) -> (Vec<f32>, Vec<(usize, usize)>) {
-        let mut flat = Vec::with_capacity(capacity);
+        debug_assert!(
+            self.elements <= capacity,
+            "batch overflow: {} packed elements > capacity {capacity}",
+            self.elements
+        );
+        let mut flat = Vec::with_capacity(capacity.max(self.elements));
         let mut spans = Vec::with_capacity(self.requests.len());
         for req in &self.requests {
             spans.push((flat.len(), req.values.len()));
             flat.extend_from_slice(&req.values);
         }
-        flat.resize(capacity, 0.0);
+        // Never shrink: an overfull batch (admission bug) must keep its
+        // spans valid rather than silently truncating the tail request.
+        if flat.len() < capacity {
+            flat.resize(capacity, 0.0);
+        }
         (flat, spans)
     }
 

@@ -1,0 +1,367 @@
+//! Log-bucketed latency histogram: the percentile substrate behind
+//! [`super::ServerMetrics`].
+//!
+//! A sum/max pair (the pre-shard metrics) cannot answer the questions a
+//! serving layer is tuned by — "what does the p99 do when the batcher
+//! config changes?" — so latencies are recorded into fixed log₂ buckets
+//! instead: values below 16 µs get exact single-value buckets, larger
+//! values share one bucket per power of two up to `u64::MAX`. Bucket
+//! counts are exact integers, which gives the two properties the
+//! sharded coordinator needs:
+//!
+//! - **recording is lock-free** (one atomic increment per sample, no
+//!   sorted reservoir), so per-shard recording never serializes the
+//!   reply path;
+//! - **merging shards is exact**: adding two histograms' bucket counts
+//!   yields bit-identically the histogram of the combined sample
+//!   stream, so the coordinator's merged snapshot is not an
+//!   approximation of per-shard state (property-tested below).
+//!
+//! Percentiles interpolate linearly inside a bucket, clamped to the
+//! observed `[min, max]`, so single-sample and all-equal-sample
+//! distributions report exact values rather than bucket midpoints.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: 16 exact buckets for values 0‥15, then one
+/// bucket per power of two (2⁴‥2⁶⁴), covering all of `u64`.
+pub const LATENCY_BUCKETS: usize = 76;
+
+/// Bucket index for a value (total order, contiguous coverage).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        v as usize
+    } else {
+        11 + (64 - v.leading_zeros() as usize)
+    }
+}
+
+/// Inclusive `(lo, hi)` value bounds of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < LATENCY_BUCKETS, "bucket {i} out of range");
+    if i < 16 {
+        (i as u64, i as u64)
+    } else {
+        let bits = (i - 11) as u32;
+        let lo = 1u64 << (bits - 1);
+        let hi = lo.checked_mul(2).map_or(u64::MAX, |x| x - 1);
+        (lo, hi)
+    }
+}
+
+/// Atomic histogram for concurrent recording (one per shard).
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    counts: [AtomicU64; LATENCY_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    /// Records one sample.
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        LatencyHistogram {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable histogram snapshot: bucket counts plus exact
+/// count/sum/min/max (an empty histogram has `min == u64::MAX`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    /// Per-bucket sample counts (see [`bucket_bounds`]).
+    pub counts: [u64; LATENCY_BUCKETS],
+    /// Total samples.
+    pub count: u64,
+    /// Exact sum of all samples.
+    pub sum: u64,
+    /// Smallest recorded sample (`u64::MAX` when empty).
+    pub min: u64,
+    /// Largest recorded sample.
+    pub max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: [0; LATENCY_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Records one sample (non-atomic builder, used by tests and
+    /// reference computations).
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Builds a histogram from a sample slice.
+    pub fn from_samples(samples: &[u64]) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        for &v in samples {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Adds another histogram's samples into this one. Exact: the
+    /// result equals [`Self::from_samples`] over the concatenation.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` with linear interpolation inside the
+    /// containing bucket, clamped to the observed `[min, max]`.
+    /// Returns 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = if q.is_nan() { 1.0 } else { q.clamp(0.0, 1.0) };
+        let target = q * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= target {
+                let (blo, bhi) = bucket_bounds(i);
+                // Clamp to observed extrema so degenerate distributions
+                // (one sample, all-equal samples) are exact.
+                let lo = blo.max(self.min);
+                let hi = bhi.min(self.max);
+                if hi <= lo {
+                    return lo as f64;
+                }
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lo as f64 + (hi - lo) as f64 * frac;
+            }
+            cum = next;
+        }
+        self.max as f64
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn buckets_are_contiguous_and_cover_u64() {
+        // bucket 0 starts at 0, the last ends at u64::MAX, and every
+        // boundary is adjacent to the next bucket's start.
+        assert_eq!(bucket_bounds(0), (0, 0));
+        assert_eq!(bucket_bounds(LATENCY_BUCKETS - 1).1, u64::MAX);
+        for i in 0..LATENCY_BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= hi, "bucket {i}");
+            assert_eq!(hi + 1, bucket_bounds(i + 1).0, "gap after bucket {i}");
+        }
+    }
+
+    #[test]
+    fn bucket_index_matches_bounds() {
+        let mut g = Prng::new(3);
+        for _ in 0..10_000 {
+            // Exercise all magnitudes, not just uniform-u64 ones.
+            let v = g.next_u64() >> g.usize_below(64);
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} bucket {i} [{lo}, {hi}]");
+        }
+        // Exact small buckets and the first log bucket.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_bounds(16), (16, 31));
+        assert_eq!(bucket_index(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_of_empty_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count, 0);
+    }
+
+    #[test]
+    fn percentile_of_single_sample_is_exact() {
+        for v in [0u64, 7, 100, 5_000_000] {
+            let h = LatencyHistogram::from_samples(&[v]);
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                assert_eq!(h.percentile(q), v as f64, "v={v} q={q}");
+            }
+            assert_eq!(h.mean(), v as f64);
+            assert_eq!(h.min, v);
+            assert_eq!(h.max, v);
+        }
+    }
+
+    #[test]
+    fn percentile_of_all_equal_samples_is_exact() {
+        // min/max clamping collapses the containing bucket to the one
+        // observed value, whatever the bucket's nominal width.
+        let h = LatencyHistogram::from_samples(&[421; 1000]);
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 421.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bounded() {
+        let mut g = Prng::new(17);
+        let samples: Vec<u64> = (0..5000).map(|_| g.u64_below(1 << 20)).collect();
+        let h = LatencyHistogram::from_samples(&samples);
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let p = h.percentile(i as f64 / 100.0);
+            assert!(p >= prev, "non-monotone at q={i}");
+            assert!(p >= h.min as f64 && p <= h.max as f64);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn percentile_interpolation_tracks_exact_quantiles() {
+        // Log buckets bound the relative error: the reported quantile
+        // must land within the true quantile's bucket neighborhood
+        // (factor-2 band above 16, exact below).
+        let mut g = Prng::new(23);
+        let mut samples: Vec<u64> = (0..4096).map(|_| g.u64_below(100_000)).collect();
+        let h = LatencyHistogram::from_samples(&samples);
+        samples.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let exact = samples[((q * samples.len() as f64) as usize).min(samples.len() - 1)];
+            let got = h.percentile(q);
+            assert!(
+                got >= exact as f64 / 2.0 && got <= exact as f64 * 2.0 + 16.0,
+                "q={q}: interpolated {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_exact_buckets_give_exact_percentiles() {
+        // All samples < 16 land in single-value buckets: every quantile
+        // is a real sample value.
+        let h = LatencyHistogram::from_samples(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(h.p50(), 5.0);
+        assert_eq!(h.percentile(1.0), 10.0);
+        assert_eq!(h.percentile(0.1), 1.0);
+    }
+
+    #[test]
+    fn merge_equals_histogram_of_merged_samples() {
+        // The shard-merge property: merging per-shard histograms is
+        // bit-identical to histogramming the union of samples.
+        let mut g = Prng::new(41);
+        for _round in 0..20 {
+            let shards = 2 + g.usize_below(5);
+            let mut all: Vec<u64> = Vec::new();
+            let mut merged = LatencyHistogram::default();
+            for _ in 0..shards {
+                let n = g.usize_below(400);
+                let samples: Vec<u64> =
+                    (0..n).map(|_| g.next_u64() >> g.usize_below(56)).collect();
+                merged.merge(&LatencyHistogram::from_samples(&samples));
+                all.extend_from_slice(&samples);
+            }
+            assert_eq!(merged, LatencyHistogram::from_samples(&all));
+        }
+    }
+
+    #[test]
+    fn atomic_histogram_matches_reference() {
+        let a = AtomicHistogram::default();
+        let mut reference = LatencyHistogram::default();
+        let mut g = Prng::new(55);
+        for _ in 0..2000 {
+            let v = g.u64_below(1 << 30);
+            a.record(v);
+            reference.record(v);
+        }
+        assert_eq!(a.snapshot(), reference);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let h = LatencyHistogram::from_samples(&[3, 99, 1024]);
+        let mut merged = h;
+        merged.merge(&LatencyHistogram::default());
+        assert_eq!(merged, h);
+        let mut from_empty = LatencyHistogram::default();
+        from_empty.merge(&h);
+        assert_eq!(from_empty, h);
+    }
+}

@@ -1,17 +1,35 @@
 //! Lock-free-ish serving metrics (atomics; snapshot on demand).
+//!
+//! Each worker shard owns one [`ServerMetrics`]; the coordinator's
+//! merged view is a fold of per-shard [`MetricsSnapshot`]s
+//! ([`MetricsSnapshot::merge`]), which is exact — counters add and the
+//! latency histogram merge is bit-identical to histogramming the
+//! combined sample stream (see [`super::histogram`]).
+//!
+//! The counters are chosen so a conservation law holds once traffic has
+//! drained: `submitted == requests + failed_requests`, and every submit
+//! attempt that passes input validation is either `submitted` or
+//! `rejected` (validation failures — empty or oversized requests,
+//! unknown methods — are client errors returned before routing and are
+//! deliberately not counted as load shedding). The stress tests
+//! (`tests/serving.rs`) assert this per shard and merged.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Cumulative counters for one coordinator.
+use super::histogram::{AtomicHistogram, LatencyHistogram};
+
+/// Cumulative counters for one worker shard (or one whole coordinator,
+/// after merging).
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
+    submitted: AtomicU64,
     requests: AtomicU64,
+    failed_requests: AtomicU64,
     elements: AtomicU64,
     batches: AtomicU64,
     rejected: AtomicU64,
     errors: AtomicU64,
-    latency_us_sum: AtomicU64,
-    latency_us_max: AtomicU64,
+    latency: AtomicHistogram,
     padded_elements: AtomicU64,
     packed_elements: AtomicU64,
     capacity_elements: AtomicU64,
@@ -20,20 +38,25 @@ pub struct ServerMetrics {
 /// A point-in-time copy of the counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
-    /// Completed requests.
+    /// Requests accepted into a shard queue.
+    pub submitted: u64,
+    /// Requests completed successfully.
     pub requests: u64,
+    /// Requests that received an error reply (execution failure or the
+    /// worker's oversized-request guard). `submitted == requests +
+    /// failed_requests` once in-flight traffic has drained.
+    pub failed_requests: u64,
     /// Total activation elements processed.
     pub elements: u64,
     /// Executed batches.
     pub batches: u64,
-    /// Requests rejected by backpressure.
+    /// Requests rejected by backpressure (never entered a queue).
     pub rejected: u64,
-    /// Failed executions.
+    /// Failed batch executions.
     pub errors: u64,
-    /// Sum of per-request latency (µs).
-    pub latency_us_sum: u64,
-    /// Max per-request latency (µs).
-    pub latency_us_max: u64,
+    /// Log-bucketed per-request latency histogram (µs): p50/p95/p99,
+    /// exact mean/min/max. Replaces the old sum/max pair.
+    pub latency: LatencyHistogram,
     /// Zero-pad elements wasted by fixed-shape batching.
     pub padded_elements: u64,
     /// Useful elements packed into executed batches (counted at flush,
@@ -45,13 +68,29 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// Mean request latency in microseconds.
+    /// Mean request latency in microseconds (completed + failed).
     pub fn mean_latency_us(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.latency_us_sum as f64 / self.requests as f64
-        }
+        self.latency.mean()
+    }
+
+    /// Max request latency in microseconds.
+    pub fn latency_us_max(&self) -> u64 {
+        self.latency.max
+    }
+
+    /// Median request latency in microseconds.
+    pub fn p50_us(&self) -> f64 {
+        self.latency.p50()
+    }
+
+    /// 95th-percentile request latency in microseconds.
+    pub fn p95_us(&self) -> f64 {
+        self.latency.p95()
+    }
+
+    /// 99th-percentile request latency in microseconds.
+    pub fn p99_us(&self) -> f64 {
+        self.latency.p99()
     }
 
     /// Mean batch occupancy (useful elements / capacity-elements).
@@ -76,15 +115,42 @@ impl MetricsSnapshot {
             self.packed_elements as f64 / self.capacity_elements as f64
         }
     }
+
+    /// Adds another snapshot's counters into this one (shard merge).
+    /// Exact for every field, including the latency histogram.
+    pub fn merge(mut self, other: &MetricsSnapshot) -> MetricsSnapshot {
+        self.submitted += other.submitted;
+        self.requests += other.requests;
+        self.failed_requests += other.failed_requests;
+        self.elements += other.elements;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.latency.merge(&other.latency);
+        self.padded_elements += other.padded_elements;
+        self.packed_elements += other.packed_elements;
+        self.capacity_elements += other.capacity_elements;
+        self
+    }
 }
 
 impl ServerMetrics {
-    /// Records a completed request.
+    /// Records a request accepted into the shard queue.
+    pub fn record_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records a successfully completed request.
     pub fn record_request(&self, elements: usize, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(elements as u64, Ordering::Relaxed);
-        self.latency_us_sum.fetch_add(latency_us, Ordering::Relaxed);
-        self.latency_us_max.fetch_max(latency_us, Ordering::Relaxed);
+        self.latency.record(latency_us);
+    }
+
+    /// Records a request that received an error reply.
+    pub fn record_failed_request(&self, latency_us: u64) {
+        self.failed_requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency_us);
     }
 
     /// Records an executed batch: how many useful elements were packed
@@ -109,13 +175,14 @@ impl ServerMetrics {
     /// Snapshots all counters.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
+            failed_requests: self.failed_requests.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
-            latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
-            latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
             padded_elements: self.padded_elements.load(Ordering::Relaxed),
             packed_elements: self.packed_elements.load(Ordering::Relaxed),
             capacity_elements: self.capacity_elements.load(Ordering::Relaxed),
@@ -130,20 +197,44 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = ServerMetrics::default();
+        m.record_submitted();
+        m.record_submitted();
         m.record_request(100, 50);
         m.record_request(50, 150);
         m.record_batch(150, 1024);
         m.record_rejected();
         let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
         assert_eq!(s.requests, 2);
         assert_eq!(s.elements, 150);
         assert_eq!(s.batches, 1);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.mean_latency_us(), 100.0);
-        assert_eq!(s.latency_us_max, 150);
+        assert_eq!(s.latency_us_max(), 150);
+        assert_eq!(s.latency.min, 50);
         assert_eq!(s.padded_elements, 874);
         assert!((s.batch_efficiency() - 150.0 / 1024.0).abs() < 1e-9);
         assert!((s.fill_rate() - 150.0 / 1024.0).abs() < 1e-9);
+        // Both samples bound the percentiles.
+        assert!(s.p50_us() >= 50.0 && s.p50_us() <= 150.0);
+        assert!(s.p99_us() >= s.p50_us() && s.p99_us() <= 150.0);
+    }
+
+    #[test]
+    fn conservation_counters_reconcile() {
+        let m = ServerMetrics::default();
+        for _ in 0..5 {
+            m.record_submitted();
+        }
+        m.record_request(10, 20);
+        m.record_request(10, 30);
+        m.record_request(10, 40);
+        m.record_failed_request(25);
+        m.record_failed_request(35);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, s.requests + s.failed_requests);
+        // Failed requests still contribute latency samples.
+        assert_eq!(s.latency.count, 5);
     }
 
     #[test]
@@ -162,10 +253,45 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_exact_across_shards() {
+        let a = ServerMetrics::default();
+        let b = ServerMetrics::default();
+        a.record_submitted();
+        a.record_request(64, 10);
+        a.record_batch(64, 128);
+        b.record_submitted();
+        b.record_submitted();
+        b.record_request(32, 200);
+        b.record_failed_request(300);
+        b.record_batch(32, 128);
+        b.record_rejected();
+        b.record_error();
+
+        let merged = a.snapshot().merge(&b.snapshot());
+        assert_eq!(merged.submitted, 3);
+        assert_eq!(merged.requests, 2);
+        assert_eq!(merged.failed_requests, 1);
+        assert_eq!(merged.elements, 96);
+        assert_eq!(merged.batches, 2);
+        assert_eq!(merged.rejected, 1);
+        assert_eq!(merged.errors, 1);
+        assert_eq!(merged.capacity_elements, 256);
+        // Histogram merged exactly: same as recording all three samples
+        // into one histogram.
+        use super::super::histogram::LatencyHistogram;
+        assert_eq!(merged.latency, LatencyHistogram::from_samples(&[10, 200, 300]));
+        // Merge with an empty snapshot is the identity.
+        assert_eq!(merged.merge(&MetricsSnapshot::default()), merged);
+    }
+
+    #[test]
     fn empty_snapshot_is_benign() {
         let s = ServerMetrics::default().snapshot();
         assert_eq!(s.mean_latency_us(), 0.0);
         assert_eq!(s.batch_efficiency(), 1.0);
         assert_eq!(s.fill_rate(), 1.0);
+        assert_eq!(s.p50_us(), 0.0);
+        assert_eq!(s.p99_us(), 0.0);
+        assert_eq!(s.latency_us_max(), 0);
     }
 }

@@ -3,24 +3,40 @@
 //! The paper positions its tanh units inside neural-network
 //! accelerators (§I); this module is the driver such an accelerator
 //! ships with: a request **router** that steers work to per-method
-//! executors, a **dynamic batcher** that packs scalar/short-vector
-//! activation requests into the fixed-batch compiled executables
-//! (PJRT graphs are compiled per shape), a **worker pool** holding the
-//! hot executables, **metrics**, and **backpressure** via a bounded
-//! queue.
+//! **worker-shard pools**, a **dynamic batcher** per shard that packs
+//! scalar/short-vector activation requests into the fixed-batch
+//! compiled executables (PJRT graphs are compiled per shape), a
+//! **latency-histogram metrics** pipeline, and **backpressure** via
+//! bounded per-shard queues.
 //!
 //! Design notes:
 //! - std-thread + mpsc architecture (tokio is not in the offline crate
-//!   set); one batcher/worker pair per method keeps the lock surface
-//!   per-queue, not global.
+//!   set); each method runs `CoordinatorConfig::shards` batcher/worker
+//!   pairs, fed round-robin or least-loaded ([`RoutePolicy`]), so the
+//!   lock surface is per-shard-queue, not global, and a slow batch on
+//!   one shard no longer stalls its whole method.
 //! - The batch size is the compiled executable's shape (default 1024);
 //!   partial batches are padded with zeros and sliced on the way out —
 //!   the same trick serving systems use for fixed-shape accelerators.
-//! - Backpressure: `submit` fails fast once a method's queue holds
+//! - Backpressure: `submit` fails fast once the routed shard holds
 //!   `max_queue` pending elements (the caller sheds load instead of the
 //!   coordinator dying of memory).
+//! - Metrics are per-shard ([`ServerMetrics`]) and merge exactly:
+//!   latency lives in a log-bucketed histogram
+//!   ([`histogram::LatencyHistogram`]) whose shard merge is
+//!   bit-identical to histogramming the combined samples, so
+//!   `Coordinator::metrics()` reports true p50/p95/p99 across the
+//!   fleet. Conservation holds once traffic drains:
+//!   `submitted == requests + failed_requests`.
+//!
+//! Load generation for this layer lives in [`crate::bench::scenario`]:
+//! deterministic PRNG-seeded workload scenarios (steady, bursty, Zipf
+//! method mix, tiny-request flood, max-size batches) replayed through
+//! `tanh-vlsi serve --scenario`, with every reply verified against the
+//! compiled golden kernels.
 
 mod batcher;
+pub mod histogram;
 mod metrics;
 mod net;
 mod request;
@@ -28,8 +44,9 @@ mod server;
 mod worker;
 
 pub use batcher::{BatcherConfig, PendingBatch};
+pub use histogram::LatencyHistogram;
 pub use metrics::{MetricsSnapshot, ServerMetrics};
 pub use request::{Request, RequestResult};
-pub use server::{Coordinator, CoordinatorConfig, ExecBackend};
+pub use server::{Coordinator, CoordinatorConfig, ExecBackend, RoutePolicy};
 pub use net::{NetClient, NetServer};
 pub use worker::{GoldenBackend, GraphBackend};

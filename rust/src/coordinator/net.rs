@@ -110,12 +110,19 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 let m = coord.metrics();
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
+                    ("submitted", Json::i(m.submitted as i64)),
                     ("requests", Json::i(m.requests as i64)),
+                    ("failed_requests", Json::i(m.failed_requests as i64)),
                     ("elements", Json::i(m.elements as i64)),
                     ("batches", Json::i(m.batches as i64)),
                     ("rejected", Json::i(m.rejected as i64)),
                     ("errors", Json::i(m.errors as i64)),
                     ("mean_latency_us", Json::n(m.mean_latency_us())),
+                    ("p50_us", Json::n(m.p50_us())),
+                    ("p95_us", Json::n(m.p95_us())),
+                    ("p99_us", Json::n(m.p99_us())),
+                    ("max_latency_us", Json::i(m.latency_us_max() as i64)),
+                    ("shards_per_method", Json::i(coord.shards_per_method() as i64)),
                     ("batch_efficiency", Json::n(m.batch_efficiency())),
                     ("batch_fill_rate", Json::n(m.fill_rate())),
                     ("padded_elements", Json::i(m.padded_elements as i64)),
@@ -231,6 +238,9 @@ mod tests {
         client.evaluate("lambert", &[1.0]).unwrap();
         let m = client.call(&Json::obj(vec![("cmd", Json::s("metrics"))])).unwrap();
         assert!(m.get("requests").unwrap().num().unwrap() >= 1.0);
+        assert!(m.get("submitted").unwrap().num().unwrap() >= 1.0);
+        assert!(m.get("p50_us").is_some() && m.get("p99_us").is_some());
+        assert!(m.get("shards_per_method").unwrap().num().unwrap() >= 2.0);
         server.stop();
     }
 

@@ -1,4 +1,13 @@
-//! The coordinator: router + per-method batcher/worker threads.
+//! The coordinator: router + per-method worker-shard pools.
+//!
+//! Each method runs a configurable pool of batcher/worker shards
+//! (`CoordinatorConfig::shards`). The router steers a request to one
+//! shard of its method — round-robin or least-loaded
+//! ([`RoutePolicy`]) — and every shard owns its queue, its
+//! [`PendingBatch`], and its own [`ServerMetrics`], so the submit hot
+//! path touches no cross-shard state. `metrics()` folds the per-shard
+//! snapshots into one exact merged view; `shard_metrics()` exposes the
+//! unmerged per-shard counters for imbalance diagnostics.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -22,54 +31,105 @@ pub trait ExecBackend: Send + Sync + 'static {
     fn batch_elements(&self) -> usize;
 }
 
+/// How the router picks a shard within a method's pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through the shards in order (uniform spread).
+    #[default]
+    RoundRobin,
+    /// Pick the shard with the fewest queued elements.
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    /// Parses a CLI spelling.
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" => Some(RoutePolicy::RoundRobin),
+            "ll" | "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+}
+
 /// Coordinator tuning knobs.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Batching policy (batch size is overridden by the backend's).
     pub batcher: BatcherConfig,
+    /// Worker shards per method (clamped to ≥ 1).
+    pub shards: usize,
+    /// Shard selection policy.
+    pub route: RoutePolicy,
 }
 
-struct MethodQueue {
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            shards: 2,
+            route: RoutePolicy::RoundRobin,
+        }
+    }
+}
+
+/// One batcher/worker pair: its queue sender, queued-element gauge and
+/// private metrics.
+struct Shard {
     tx: mpsc::Sender<Request>,
     depth: Arc<AtomicUsize>,
+    metrics: Arc<ServerMetrics>,
+}
+
+/// A method's shard pool plus its round-robin cursor.
+struct MethodShards {
+    shards: Vec<Shard>,
+    rr: AtomicUsize,
 }
 
 /// The activation-accelerator service.
 pub struct Coordinator {
-    queues: HashMap<MethodId, MethodQueue>,
-    metrics: Arc<ServerMetrics>,
+    methods: HashMap<MethodId, MethodShards>,
     next_id: AtomicU64,
     cfg: BatcherConfig,
+    route: RoutePolicy,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Coordinator {
-    /// Starts one batcher/worker thread per method over the backend.
+    /// Starts `cfg.shards` batcher/worker threads per method over the
+    /// backend.
     pub fn start(backend: Arc<dyn ExecBackend>, cfg: CoordinatorConfig) -> Coordinator {
         let mut batcher_cfg = cfg.batcher;
         batcher_cfg.batch_elements = backend.batch_elements();
-        let metrics = Arc::new(ServerMetrics::default());
-        let mut queues = HashMap::new();
+        let shards = cfg.shards.max(1);
+        let mut methods = HashMap::new();
         let mut workers = Vec::new();
         for method in MethodId::all() {
-            let (tx, rx) = mpsc::channel::<Request>();
-            let depth = Arc::new(AtomicUsize::new(0));
-            let handle = spawn_worker(
-                method,
-                rx,
-                depth.clone(),
-                backend.clone(),
-                batcher_cfg,
-                metrics.clone(),
-            );
-            queues.insert(method, MethodQueue { tx, depth });
-            workers.push(handle);
+            let mut pool = Vec::with_capacity(shards);
+            for shard_idx in 0..shards {
+                let (tx, rx) = mpsc::channel::<Request>();
+                let depth = Arc::new(AtomicUsize::new(0));
+                let metrics = Arc::new(ServerMetrics::default());
+                let handle = spawn_worker(
+                    method,
+                    shard_idx,
+                    rx,
+                    depth.clone(),
+                    backend.clone(),
+                    batcher_cfg,
+                    metrics.clone(),
+                );
+                pool.push(Shard { tx, depth, metrics });
+                workers.push(handle);
+            }
+            methods.insert(method, MethodShards { shards: pool, rr: AtomicUsize::new(0) });
         }
         Coordinator {
-            queues,
-            metrics,
+            methods,
             next_id: AtomicU64::new(0),
             cfg: batcher_cfg,
+            route: cfg.route,
             workers: Mutex::new(workers),
         }
     }
@@ -91,13 +151,25 @@ impl Coordinator {
                 self.cfg.batch_elements
             ));
         }
-        let q = self.queues.get(&method).ok_or("unknown method")?;
-        let depth = q.depth.load(Ordering::Relaxed);
+        let pool = self.methods.get(&method).ok_or("unknown method")?;
+        let shard = match self.route {
+            RoutePolicy::RoundRobin => {
+                let i = pool.rr.fetch_add(1, Ordering::Relaxed) % pool.shards.len();
+                &pool.shards[i]
+            }
+            RoutePolicy::LeastLoaded => pool
+                .shards
+                .iter()
+                .min_by_key(|s| s.depth.load(Ordering::Relaxed))
+                .expect("method pool is never empty"),
+        };
+        let depth = shard.depth.load(Ordering::Relaxed);
         if depth + values.len() > self.cfg.max_queue {
-            self.metrics.record_rejected();
-            return Err(format!("backpressure: queue at {depth} elements"));
+            shard.metrics.record_rejected();
+            return Err(format!("backpressure: shard queue at {depth} elements"));
         }
         let (reply_tx, reply_rx) = mpsc::channel();
+        let len = values.len();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             method,
@@ -105,9 +177,17 @@ impl Coordinator {
             enqueued_at: Instant::now(),
             reply: reply_tx,
         };
-        q.depth.fetch_add(req.values.len(), Ordering::Relaxed);
-        q.tx.send(req).map_err(|_| "worker shut down".to_string())?;
-        Ok(reply_rx)
+        shard.depth.fetch_add(len, Ordering::Relaxed);
+        match shard.tx.send(req) {
+            Ok(()) => {
+                shard.metrics.record_submitted();
+                Ok(reply_rx)
+            }
+            Err(_) => {
+                shard.depth.fetch_sub(len, Ordering::Relaxed);
+                Err("worker shut down".to_string())
+            }
+        }
     }
 
     /// Blocking convenience: submit and wait.
@@ -117,14 +197,42 @@ impl Coordinator {
         result.outcome
     }
 
-    /// Current metrics.
+    /// Merged metrics across every shard of every method (exact fold of
+    /// the per-shard snapshots, histogram included).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut merged = MetricsSnapshot::default();
+        for pool in self.methods.values() {
+            for shard in &pool.shards {
+                merged = merged.merge(&shard.metrics.snapshot());
+            }
+        }
+        merged
     }
 
-    /// Shuts down the workers (drops the senders, joins the threads).
+    /// Per-shard snapshots as `(method, shard index, snapshot)`, in
+    /// `MethodId::all()` order.
+    pub fn shard_metrics(&self) -> Vec<(MethodId, usize, MetricsSnapshot)> {
+        let mut out = Vec::new();
+        for method in MethodId::all() {
+            if let Some(pool) = self.methods.get(&method) {
+                for (i, shard) in pool.shards.iter().enumerate() {
+                    out.push((method, i, shard.metrics.snapshot()));
+                }
+            }
+        }
+        out
+    }
+
+    /// The number of worker shards each method runs.
+    pub fn shards_per_method(&self) -> usize {
+        self.methods.values().next().map_or(0, |pool| pool.shards.len())
+    }
+
+    /// Shuts down the workers. Dropping the senders lets every shard
+    /// drain its queued requests and flush its partial batch before the
+    /// thread exits, so all in-flight replies are still delivered.
     pub fn shutdown(self) {
-        drop(self.queues);
+        drop(self.methods);
         let mut workers = self.workers.lock().unwrap();
         for h in workers.drain(..) {
             let _ = h.join();
@@ -134,6 +242,7 @@ impl Coordinator {
 
 fn spawn_worker(
     method: MethodId,
+    shard_idx: usize,
     rx: mpsc::Receiver<Request>,
     depth: Arc<AtomicUsize>,
     backend: Arc<dyn ExecBackend>,
@@ -141,7 +250,7 @@ fn spawn_worker(
     metrics: Arc<ServerMetrics>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
-        .name(format!("tanh-worker-{}", method.label()))
+        .name(format!("tanh-worker-{}-{shard_idx}", method.label()))
         .spawn(move || {
             let mut pending = PendingBatch::default();
             loop {
@@ -150,10 +259,7 @@ fn spawn_worker(
                 let timeout = if pending.is_empty() { cfg.max_wait * 50 } else { cfg.max_wait };
                 match rx.recv_timeout(timeout) {
                     Ok(req) => {
-                        if !pending.fits(&req, cfg.batch_elements) {
-                            flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
-                        }
-                        pending.push(req);
+                        admit(req, &mut pending, method, &backend, &cfg, &metrics, &depth);
                         // Greedy drain: requests that queued up while
                         // the previous batch executed are packed NOW
                         // rather than one-per-loop — without this,
@@ -162,10 +268,7 @@ fn spawn_worker(
                         // iteration 1: batch efficiency 6% → see
                         // EXPERIMENTS.md §Perf).
                         while let Ok(req) = rx.try_recv() {
-                            if !pending.fits(&req, cfg.batch_elements) {
-                                flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
-                            }
-                            pending.push(req);
+                            admit(req, &mut pending, method, &backend, &cfg, &metrics, &depth);
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -180,6 +283,42 @@ fn spawn_worker(
             }
         })
         .expect("spawning worker thread")
+}
+
+/// Adds a request to the shard's pending batch, flushing first when it
+/// would not fit.
+fn admit(
+    req: Request,
+    pending: &mut PendingBatch,
+    method: MethodId,
+    backend: &Arc<dyn ExecBackend>,
+    cfg: &BatcherConfig,
+    metrics: &Arc<ServerMetrics>,
+    depth: &Arc<AtomicUsize>,
+) {
+    // Defense in depth: `submit` already rejects oversized requests, but
+    // a request larger than the batch can never satisfy `fits`, so if
+    // one ever reached the queue it would starve forever behind an
+    // always-flushing loop. Fail it deterministically instead.
+    if req.values.len() > cfg.batch_elements {
+        depth.fetch_sub(req.values.len(), Ordering::Relaxed);
+        let latency_us = req.enqueued_at.elapsed().as_micros() as u64;
+        metrics.record_failed_request(latency_us);
+        let _ = req.reply.send(RequestResult {
+            id: req.id,
+            outcome: Err(format!(
+                "request of {} elements exceeds the compiled batch {}",
+                req.values.len(),
+                cfg.batch_elements
+            )),
+            latency_us,
+        });
+        return;
+    }
+    if !pending.fits(&req, cfg.batch_elements) {
+        flush(pending, method, backend, cfg, metrics, depth);
+    }
+    pending.push(req);
 }
 
 fn flush(
@@ -215,6 +354,7 @@ fn flush(
             metrics.record_error();
             for req in batch.requests {
                 let latency_us = now.duration_since(req.enqueued_at).as_micros() as u64;
+                metrics.record_failed_request(latency_us);
                 let _ = req.reply.send(RequestResult {
                     id: req.id,
                     outcome: Err(e.clone()),
@@ -237,6 +377,7 @@ mod tests {
     #[test]
     fn evaluate_roundtrip_all_methods() {
         let c = start_golden(64);
+        assert_eq!(c.shards_per_method(), 2);
         for method in MethodId::all() {
             let out = c.evaluate(method, vec![0.5, -0.5, 3.0]).unwrap();
             assert_eq!(out.len(), 3);
@@ -245,6 +386,8 @@ mod tests {
         }
         let m = c.metrics();
         assert_eq!(m.requests, 6);
+        assert_eq!(m.submitted, 6);
+        assert_eq!(m.failed_requests, 0);
         assert!(m.batches >= 1);
         c.shutdown();
     }
@@ -277,6 +420,9 @@ mod tests {
         let c = start_golden(16);
         let err = c.submit(MethodId::Pwl, vec![0.0; 17]).unwrap_err();
         assert!(err.contains("exceeds"));
+        // Deterministic: the same oversized submit yields the same error.
+        let err2 = c.submit(MethodId::Pwl, vec![0.0; 17]).unwrap_err();
+        assert_eq!(err, err2);
         c.shutdown();
     }
 
@@ -300,5 +446,71 @@ mod tests {
         assert_eq!(m.requests, 64);
         assert!(m.batches < 64, "batching collapsed {} batches", m.batches);
         c.shutdown();
+    }
+
+    #[test]
+    fn round_robin_spreads_across_shards() {
+        let c = Coordinator::start(
+            Arc::new(GoldenBackend::table1(128)),
+            CoordinatorConfig { shards: 3, ..Default::default() },
+        );
+        let rxs: Vec<_> =
+            (0..9).map(|_| c.submit(MethodId::Lambert, vec![0.5; 4]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().expect_values();
+        }
+        let lambert_shards: Vec<_> = c
+            .shard_metrics()
+            .into_iter()
+            .filter(|(m, _, _)| *m == MethodId::Lambert)
+            .collect();
+        assert_eq!(lambert_shards.len(), 3);
+        for (_, idx, s) in &lambert_shards {
+            assert_eq!(s.submitted, 3, "shard {idx} got {} of 9 round-robin submits", s.submitted);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn merged_metrics_equal_fold_of_shard_metrics() {
+        let c = start_golden(64);
+        for i in 0..30 {
+            let _ = c.evaluate(MethodId::all()[i % 6], vec![0.25; 3]).unwrap();
+        }
+        let merged = c.metrics();
+        let fold = c
+            .shard_metrics()
+            .into_iter()
+            .fold(MetricsSnapshot::default(), |acc, (_, _, s)| acc.merge(&s));
+        assert_eq!(merged, fold);
+        assert_eq!(merged.submitted, 30);
+        assert_eq!(merged.requests + merged.failed_requests, merged.submitted);
+        c.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_routes_to_empty_shard() {
+        // With least-loaded routing and sequential evaluate calls the
+        // queue is empty at each submit, so every shard stays usable and
+        // all requests complete.
+        let c = Coordinator::start(
+            Arc::new(GoldenBackend::table1(64)),
+            CoordinatorConfig { route: RoutePolicy::LeastLoaded, shards: 2, ..Default::default() },
+        );
+        for _ in 0..10 {
+            let out = c.evaluate(MethodId::Pwl, vec![1.0, -1.0]).unwrap();
+            assert_eq!(out.len(), 2);
+        }
+        assert_eq!(c.metrics().requests, 10);
+        c.shutdown();
+    }
+
+    #[test]
+    fn route_policy_parses() {
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("round-robin"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("ll"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("least-loaded"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("nope"), None);
     }
 }

@@ -42,16 +42,22 @@
 //! - [`runtime`] — PJRT wrapper that loads the JAX/Pallas-AOT'd HLO
 //!   artifacts and executes them from rust (stubbed by
 //!   [`runtime::xla_shim`] when the bindings are not linked).
-//! - [`coordinator`] — activation-accelerator service: request router,
-//!   dynamic batcher, worker pool, metrics (incl. batch fill rate),
-//!   backpressure; the golden backend serves all six methods through
-//!   their compiled kernels.
+//! - [`coordinator`] — activation-accelerator service: request router
+//!   over per-method **worker-shard pools** (round-robin or
+//!   least-loaded), dynamic batcher per shard, per-shard metrics with a
+//!   log-bucketed latency histogram (p50/p95/p99, exact shard merge),
+//!   batch fill rate, and backpressure; the golden backend serves all
+//!   six methods through their compiled kernels.
 //! - [`explore`] — design-space exploration / Pareto frontier over
 //!   (method × parameter × fixed-point format).
-//! - [`report`] — text/CSV renderers for every table and figure.
+//! - [`report`] — text/CSV renderers for every table and figure,
+//!   pinned by golden fixtures under `rust/tests/fixtures/`.
 //! - [`bench`] — self-contained benchmark harness (criterion is not
-//!   available in the offline crate set) plus the machine-readable
-//!   `BENCH_throughput.json` log (see EXPERIMENTS.md §Perf).
+//!   available in the offline crate set), the machine-readable
+//!   `BENCH_throughput.json` log (see EXPERIMENTS.md §Perf), and
+//!   [`bench::scenario`]: deterministic seeded load scenarios replayed
+//!   by `tanh-vlsi serve --scenario` into `BENCH_serve.json` (see
+//!   EXPERIMENTS.md §Serve-load protocol).
 //! - [`util`] — CLI parsing, JSON/CSV writers, PRNG, property-test
 //!   runner: small substrates the offline image forces us to own.
 //!

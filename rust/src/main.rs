@@ -9,13 +9,18 @@
 //! tanh-vlsi cost                                   §IV complexity report
 //! tanh-vlsi explore --stride 8                     Pareto frontier
 //! tanh-vlsi serve   --requests 1000                run the coordinator
+//! tanh-vlsi serve   --scenario all --shards 2      scenario load harness
 //! tanh-vlsi pipeline --method lambert --x 1.0      cycle-level datapath
 //! ```
 
 use std::sync::Arc;
 
 use tanh_vlsi::approx::{table1_suite, MethodId, TanhApprox};
-use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend};
+use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
+use tanh_vlsi::bench::BenchLog;
+use tanh_vlsi::coordinator::{
+    Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend, RoutePolicy,
+};
 use tanh_vlsi::cost::UnitLibrary;
 use tanh_vlsi::explore::{explore, pareto_frontier, ExploreConfig};
 use tanh_vlsi::fixed::{Fx, QFormat};
@@ -54,13 +59,20 @@ fn app() -> App {
             Command::new("verilog", "emit synthesizable Verilog for the PWL datapath")
                 .opt("out", "output file (default: stdout)", None)
                 .opt("step", "PWL step size (reciprocal power of two)", Some("0.015625")),
-            Command::new("serve", "run the activation coordinator under synthetic load")
-                .opt("requests", "number of requests", Some("1000"))
-                .opt("request-size", "activations per request", Some("64"))
+            Command::new("serve", "run the sharded coordinator under synthetic or scenario load")
+                .opt("requests", "number of requests (legacy path, no --scenario)", Some("1000"))
+                .opt("request-size", "activations per request (legacy path)", Some("64"))
                 // golden = compiled integer kernels, works in every build;
                 // pjrt needs artifacts + linked xla bindings.
                 .opt("backend", "golden|pjrt", Some("golden"))
-                .opt("batch", "compiled batch size", Some("1024")),
+                .opt("batch", "compiled batch size", Some("1024"))
+                .opt("scenario", "steady|bursty|zipf|flood|maxbatch|all (deterministic load)", None)
+                .opt("seed", "scenario PRNG seed", Some("42"))
+                .opt("scale", "scenario request-count multiplier (TANH_SMOKE=1 default: 0.1)", Some("1.0"))
+                .opt("shards", "worker shards per method", Some("2"))
+                .opt("route", "shard routing: rr|least-loaded", Some("rr"))
+                .opt("out", "scenario report file", Some("BENCH_serve.json"))
+                .flag("pace", "replay the scenario's open-loop schedule in real time"),
         ],
     }
 }
@@ -240,14 +252,12 @@ fn cmd_verilog(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
-    let n: usize = p.parse_or("requests", 1000usize)?;
-    let req_size: usize = p.parse_or("request-size", 64usize)?;
-    let batch: usize = p.parse_or("batch", 1024usize)?;
-    let backend_name = p.get_or("backend", "golden");
-
-    let backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend> = match backend_name {
-        "golden" => Arc::new(GoldenBackend::table1(batch)),
+fn serve_backend(
+    backend_name: &str,
+    batch: usize,
+) -> Result<Arc<dyn tanh_vlsi::coordinator::ExecBackend>, String> {
+    match backend_name {
+        "golden" => Ok(Arc::new(GoldenBackend::table1(batch))),
         "pjrt" => {
             let engine = Arc::new(
                 EngineServer::spawn(
@@ -256,11 +266,118 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
                 .map_err(|e| e.to_string())?,
             );
             println!("PJRT platform: {}", engine.platform());
-            Arc::new(GraphBackend::load_all(engine, batch).map_err(|e| e.to_string())?)
+            Ok(Arc::new(GraphBackend::load_all(engine, batch).map_err(|e| e.to_string())?))
         }
-        other => return Err(format!("unknown backend '{other}'")),
+        other => Err(format!("unknown backend '{other}'")),
+    }
+}
+
+fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let batch: usize = p.parse_or("batch", 1024usize)?;
+    let backend_name = p.get_or("backend", "golden");
+    let shards: usize = p.parse_or("shards", 2usize)?;
+    let route = RoutePolicy::parse(p.get_or("route", "rr"))
+        .ok_or_else(|| format!("unknown route policy '{}' (rr|least-loaded)", p.get_or("route", "rr")))?;
+    let cfg = CoordinatorConfig { shards, route, ..Default::default() };
+    let backend = serve_backend(backend_name, batch)?;
+    match p.get("scenario") {
+        Some(spec) => cmd_serve_scenarios(p, spec, backend, backend_name, batch, cfg),
+        None => cmd_serve_legacy(p, backend, backend_name, cfg),
+    }
+}
+
+/// Scenario mode: deterministic seeded load, replies verified against
+/// the compiled golden kernels, report rows into `BENCH_serve.json`.
+fn cmd_serve_scenarios(
+    p: &tanh_vlsi::util::cli::Parsed,
+    spec: &str,
+    backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend>,
+    backend_name: &str,
+    batch: usize,
+    cfg: CoordinatorConfig,
+) -> Result<(), String> {
+    let seed: u64 = p.parse_or("seed", 42u64)?;
+    // The tier-1 smoke shortens every scenario unless --scale is given.
+    let scale: f64 = match p.get("scale") {
+        Some(v) => v.parse().map_err(|_| format!("invalid value '{v}' for --scale"))?,
+        None if std::env::var("TANH_SMOKE").is_ok() => 0.1,
+        None => 1.0,
     };
-    let coord = Coordinator::start(backend, CoordinatorConfig::default());
+    let names: Vec<&str> = if spec == "all" { SCENARIO_NAMES.to_vec() } else { vec![spec] };
+    let verify = match backend_name {
+        // Golden serving runs the same compiled kernels the verifier
+        // does: any mismatch is a batching/routing bug, so demand
+        // bit-exact agreement. The f32 PJRT graphs skip output
+        // quantization; allow the Table I band.
+        "golden" => Verify::Exact,
+        _ => Verify::Tolerance(3e-4),
+    };
+    let opts = RunOptions { pace: p.flag("pace"), verify, ..Default::default() };
+    let mut log = BenchLog::new();
+    for name in names {
+        let trace = scenario::build_trace(name, seed, batch, scale)?;
+        let coord = Coordinator::start(backend.clone(), cfg.clone());
+        let out = scenario::run_trace(&coord, &trace, &opts)?;
+        let m = &out.metrics;
+        let secs = out.wall.as_secs_f64().max(1e-9);
+        println!(
+            "scenario {name:8} seed {seed}: {} reqs ({} elements) in {:.3}s on \
+             '{backend_name}' × {} shards/method [{:?}]",
+            out.completed,
+            out.elements,
+            secs,
+            coord.shards_per_method(),
+            cfg.route,
+        );
+        println!(
+            "  throughput {:.0} req/s, {:.2} Mact/s;  {} batches, fill {:.1}%, \
+             {} backpressure retries",
+            out.completed as f64 / secs,
+            out.elements as f64 / secs / 1e6,
+            m.batches,
+            100.0 * m.fill_rate(),
+            out.retries,
+        );
+        println!(
+            "  latency µs: p50 {:.0}  p95 {:.0}  p99 {:.0}  max {}  (mean {:.0})",
+            m.p50_us(),
+            m.p95_us(),
+            m.p99_us(),
+            m.latency_us_max(),
+            m.mean_latency_us(),
+        );
+        match verify {
+            Verify::Exact => println!(
+                "  verified {}/{} replies bit-exact against the compiled golden kernels",
+                out.verified, out.completed
+            ),
+            Verify::Tolerance(tol) => println!(
+                "  verified {}/{} replies within {tol:.1e} of the golden kernels",
+                out.verified, out.completed
+            ),
+            Verify::Off => {}
+        }
+        log.push_row(out.to_json(backend_name, coord.shards_per_method(), batch));
+        coord.shutdown();
+    }
+    let out_path = p.get_or("out", "BENCH_serve.json");
+    log.write(out_path).map_err(|e| e.to_string())?;
+    let text = std::fs::read_to_string(out_path).map_err(|e| e.to_string())?;
+    let rows = scenario::validate_serve_log(&text)?;
+    println!("\nwrote {rows} scenario row(s) to {out_path} (schema OK)");
+    Ok(())
+}
+
+/// Legacy mode: `--requests N` windowed synthetic load.
+fn cmd_serve_legacy(
+    p: &tanh_vlsi::util::cli::Parsed,
+    backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend>,
+    backend_name: &str,
+    cfg: CoordinatorConfig,
+) -> Result<(), String> {
+    let n: usize = p.parse_or("requests", 1000usize)?;
+    let req_size: usize = p.parse_or("request-size", 64usize)?;
+    let coord = Coordinator::start(backend, cfg);
     let mut g = Prng::new(42);
     let start = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -281,10 +398,11 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let elapsed = start.elapsed();
     let m = coord.metrics();
     println!(
-        "\nserved {} requests ({} activations) in {:.3}s on '{backend_name}'",
+        "\nserved {} requests ({} activations) in {:.3}s on '{backend_name}' × {} shards/method",
         m.requests,
         m.elements,
-        elapsed.as_secs_f64()
+        elapsed.as_secs_f64(),
+        coord.shards_per_method(),
     );
     println!(
         "throughput: {:.0} req/s, {:.2} Mact/s",
@@ -292,12 +410,18 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
         m.elements as f64 / elapsed.as_secs_f64() / 1e6
     );
     println!(
-        "batches: {} (fill {:.1}%, efficiency {:.1}%), mean latency {:.0} µs, max {} µs",
+        "batches: {} (fill {:.1}%, efficiency {:.1}%)",
         m.batches,
         100.0 * m.fill_rate(),
         100.0 * m.batch_efficiency(),
+    );
+    println!(
+        "latency µs: p50 {:.0}  p95 {:.0}  p99 {:.0}  max {}  (mean {:.0})",
+        m.p50_us(),
+        m.p95_us(),
+        m.p99_us(),
+        m.latency_us_max(),
         m.mean_latency_us(),
-        m.latency_us_max
     );
     coord.shutdown();
     Ok(())

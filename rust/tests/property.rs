@@ -1,11 +1,15 @@
 //! Cross-module property tests: invariants that must hold across the
 //! whole approximation suite, randomized over configurations — plus
-//! failure injection for the coordinator.
+//! batcher-invariant properties and failure injection for the
+//! coordinator.
 
 use std::sync::Arc;
 
 use tanh_vlsi::approx::{build, eval_odd_saturating, table1_suite, IoSpec, MethodId, TanhApprox};
-use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, ExecBackend};
+use tanh_vlsi::bench::scenario::GoldenVerifier;
+use tanh_vlsi::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ExecBackend, PendingBatch, Request,
+};
 use tanh_vlsi::error::{measure_with_threads, InputGrid};
 use tanh_vlsi::fixed::{Fx, QFormat};
 use tanh_vlsi::hw::table1_pipeline;
@@ -220,6 +224,171 @@ fn prop_grid_strides_preserve_bounds() {
     });
 }
 
+// ---------- batcher invariants ----------
+
+/// Builds a standalone request (the reply receiver is dropped; these
+/// tests never flush through a worker).
+fn bare_request(id: u64, n: usize) -> Request {
+    let (tx, _rx) = std::sync::mpsc::channel();
+    Request {
+        id,
+        method: MethodId::Pwl,
+        values: (0..n).map(|i| (id as f32) + (i as f32) * 1e-3).collect(),
+        enqueued_at: std::time::Instant::now(),
+        reply: tx,
+    }
+}
+
+#[test]
+fn prop_pack_never_splits_requests_and_preserves_order() {
+    // Random request mixes packed under the fits() discipline: every
+    // request occupies one contiguous span, spans appear in push order
+    // head-to-tail, and the remainder of the flat batch is zero pad.
+    prop_check("pack is whole, ordered, padded", 100, |g: &mut Prng| {
+        let capacity = 1 << (4 + g.usize_below(7)); // 16..=1024
+        let mut batch = PendingBatch::default();
+        let mut pushed: Vec<(u64, usize)> = Vec::new();
+        for id in 0..64 {
+            let n = 1 + g.usize_below(capacity);
+            let req = bare_request(id, n);
+            if !batch.fits(&req, capacity) {
+                break;
+            }
+            pushed.push((id, n));
+            batch.push(req);
+        }
+        let (flat, spans) = batch.pack(capacity);
+        if flat.len() != capacity {
+            return Err(format!("flat {} != capacity {capacity}", flat.len()));
+        }
+        if spans.len() != pushed.len() {
+            return Err(format!("{} spans for {} requests", spans.len(), pushed.len()));
+        }
+        let mut cursor = 0usize;
+        for (k, ((id, n), &(off, len))) in pushed.iter().zip(&spans).enumerate() {
+            if off != cursor || len != *n {
+                return Err(format!(
+                    "request {k} (id {id}) span ({off}, {len}) vs expected ({cursor}, {n})"
+                ));
+            }
+            // The packed values are the request's own, in order.
+            for i in 0..len {
+                let want = (*id as f32) + (i as f32) * 1e-3;
+                if flat[off + i] != want {
+                    return Err(format!("flat[{}] = {} != {want}", off + i, flat[off + i]));
+                }
+            }
+            cursor += len;
+        }
+        if flat[cursor..].iter().any(|&v| v != 0.0) {
+            return Err("padding tail is not all zeros".into());
+        }
+        if batch.elements != cursor {
+            return Err(format!("elements {} != packed {cursor}", batch.elements));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fits_is_exact_at_capacity() {
+    prop_check("fits == (elements + len <= capacity)", 200, |g: &mut Prng| {
+        let capacity = 8 + g.usize_below(2048);
+        let mut batch = PendingBatch::default();
+        let pre = g.usize_below(capacity);
+        if pre > 0 {
+            batch.push(bare_request(0, pre));
+        }
+        let n = 1 + g.usize_below(2 * capacity);
+        let fits = batch.fits(&bare_request(1, n), capacity);
+        let want = pre + n <= capacity;
+        if fits != want {
+            return Err(format!("capacity {capacity}, pre {pre}, n {n}: fits={fits}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn max_wait_flush_fires_on_partial_batches() {
+    use std::time::{Duration, Instant};
+    let cfg = BatcherConfig {
+        batch_elements: 1024,
+        max_wait: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let mut batch = PendingBatch::default();
+    // Empty batches never flush, no matter how old the clock.
+    assert!(!batch.should_flush(&cfg, Instant::now() + Duration::from_secs(5)));
+    batch.push(bare_request(0, 10));
+    let born = batch.oldest.expect("oldest set on first push");
+    // A partial batch holds until max_wait, then flushes.
+    assert!(!batch.should_flush(&cfg, born));
+    assert!(!batch.should_flush(&cfg, born + Duration::from_micros(199)));
+    assert!(batch.should_flush(&cfg, born + Duration::from_micros(200)));
+    // A full batch flushes regardless of age.
+    batch.push(bare_request(1, 1014));
+    assert!(batch.should_flush(&cfg, born));
+}
+
+#[test]
+fn coordinator_slices_padding_off_round_trip() {
+    use tanh_vlsi::coordinator::GoldenBackend;
+    // End-to-end pack/unpack audit: random-size requests served through
+    // the batcher come back with exactly their own outputs (no padding
+    // leakage, no neighbor crosstalk), bit-exact vs an independent
+    // golden-kernel evaluation.
+    let batch = 64;
+    let coord = Coordinator::start(
+        Arc::new(GoldenBackend::table1(batch)),
+        CoordinatorConfig::default(),
+    );
+    let verifier = GoldenVerifier::new();
+    prop_check("padding sliced off on the way out", 60, |g: &mut Prng| {
+        let method = *g.choose(&MethodId::all());
+        let n = 1 + g.usize_below(batch);
+        let values: Vec<f32> = (0..n).map(|_| g.f64_in(-6.5, 6.5) as f32).collect();
+        let out = coord.evaluate(method, values.clone())?;
+        if out.len() != n {
+            return Err(format!("{method:?}: {} outputs for {n} inputs", out.len()));
+        }
+        let want = verifier.expected(method, &values)?;
+        for (i, (got, exp)) in out.iter().zip(&want).enumerate() {
+            if got.to_bits() != exp.to_bits() {
+                return Err(format!("{method:?}[{i}]: {got} != golden {exp}"));
+            }
+        }
+        Ok(())
+    });
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_request_fails_deterministically_not_starves() {
+    use tanh_vlsi::coordinator::GoldenBackend;
+    let batch = 32;
+    let coord = Coordinator::start(
+        Arc::new(GoldenBackend::table1(batch)),
+        CoordinatorConfig::default(),
+    );
+    // The router rejects oversized requests with the same error every
+    // time (no silent queueing, no starvation).
+    let e1 = coord.submit(MethodId::Pwl, vec![0.0; batch + 1]).unwrap_err();
+    let e2 = coord.submit(MethodId::Pwl, vec![0.0; batch + 1]).unwrap_err();
+    assert_eq!(e1, e2);
+    assert!(e1.contains("exceeds the compiled batch"), "{e1}");
+    // An exactly-batch-size request is NOT oversized.
+    let out = coord.evaluate(MethodId::Pwl, vec![0.5; batch]).unwrap();
+    assert_eq!(out.len(), batch);
+    // And normal traffic still flows afterwards — nothing wedged.
+    let out = coord.evaluate(MethodId::Lambert, vec![1.0, -1.0]).unwrap();
+    assert_eq!(out.len(), 2);
+    let m = coord.metrics();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.rejected, 0, "oversized is a hard error, not backpressure");
+    coord.shutdown();
+}
+
 // ---------- failure injection ----------
 
 /// A backend that fails every `fail_every`-th batch.
@@ -267,21 +436,17 @@ fn coordinator_survives_backend_failures() {
             }
         }
     }
-    // Both outcomes observed; the coordinator never wedged.
+    // Both outcomes observed; the coordinator never wedged, and the
+    // conservation law reconciles every submit.
     assert!(ok > 0, "no successes");
     assert!(failed > 0, "failure injection never fired");
     let m = coord.metrics();
-    assert_eq!(m.requests as usize + failed_count(&m, failed), 60 + extra(&m));
+    assert_eq!(m.submitted, 60);
+    assert_eq!(m.requests as usize, ok);
+    assert_eq!(m.failed_requests as usize, failed);
+    assert_eq!(m.submitted, m.requests + m.failed_requests);
     assert!(m.errors > 0);
     coord.shutdown();
-}
-
-// metrics.requests only counts successes; reconcile in a readable way.
-fn failed_count(_m: &tanh_vlsi::coordinator::MetricsSnapshot, failed: usize) -> usize {
-    failed
-}
-fn extra(_m: &tanh_vlsi::coordinator::MetricsSnapshot) -> usize {
-    0
 }
 
 #[test]
@@ -305,6 +470,7 @@ fn coordinator_backpressure_rejects_when_flooded() {
         Arc::new(SlowBackend(GoldenBackend::table1(64))),
         CoordinatorConfig {
             batcher: BatcherConfig { max_queue: 256, ..Default::default() },
+            ..Default::default()
         },
     );
     // Flood one method's queue without draining.

@@ -1,0 +1,79 @@
+//! Golden regression fixtures for the paper-table renderers.
+//!
+//! The Table I/II/III reports are deterministic (exhaustive sweeps over
+//! fixed grids, fixed formatting), so their rendered text is pinned
+//! under `tests/fixtures/` and diffed exactly — report drift (a
+//! formatting tweak, a numerics change, an accidental reordering) fails
+//! here instead of needing eyeballs.
+//!
+//! Workflow:
+//! - normal run: compare byte-for-byte against the checked-in fixture;
+//! - fixture missing (fresh platform): write it and pass with a notice
+//!   (commit the generated file);
+//! - intentional change: rerun with `TANH_UPDATE_FIXTURES=1` to accept,
+//!   then review the fixture diff in the PR.
+
+use std::path::PathBuf;
+
+use tanh_vlsi::approx::velocity::Velocity;
+use tanh_vlsi::error::Table3Spec;
+use tanh_vlsi::fixed::QFormat;
+use tanh_vlsi::report;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name)
+}
+
+fn check_fixture(name: &str, actual: &str) {
+    let path = fixture_path(name);
+    let update = std::env::var("TANH_UPDATE_FIXTURES").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        eprintln!(
+            "report_fixtures: wrote {} ({} bytes){}",
+            path.display(),
+            actual.len(),
+            if update { "" } else { " — seeded missing fixture; commit it" }
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    if expected == actual {
+        return;
+    }
+    for (i, (e, a)) in expected.lines().zip(actual.lines()).enumerate() {
+        assert_eq!(
+            a,
+            e,
+            "{name} drifted at line {} (TANH_UPDATE_FIXTURES=1 to accept an intended change)",
+            i + 1
+        );
+    }
+    panic!(
+        "{name} drifted: {} vs {} lines (TANH_UPDATE_FIXTURES=1 to accept an intended change)",
+        actual.lines().count(),
+        expected.lines().count()
+    );
+}
+
+#[test]
+fn table1_report_matches_fixture() {
+    // Full exhaustive Table I sweep — deterministic in grid, kernels and
+    // formatting.
+    check_fixture("table1.txt", &report::table1::render(&report::table1::compute()));
+}
+
+#[test]
+fn table2_report_matches_fixture() {
+    check_fixture("table2.txt", &report::table2::render(&Velocity::table1()));
+}
+
+#[test]
+fn table3_row4_report_matches_fixture() {
+    // The cheap 8-bit row (S2.5 → S.7 ±4) — the full table is a bench,
+    // not a unit test; one row pins the search plus the renderer.
+    let spec = Table3Spec { input: QFormat::S2_5, output: QFormat::S_7, range: 4.0 };
+    let row = report::table3::compute_table3_row(spec, 1.0);
+    check_fixture("table3_row4.txt", &report::table3::render(&[row]));
+}

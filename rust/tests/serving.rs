@@ -1,0 +1,224 @@
+//! Serving-stack integration tests: stress/soak over the sharded
+//! coordinator (backpressure, drain-on-shutdown, metrics conservation)
+//! and the deterministic scenario harness (same seed ⇒ same workload ⇒
+//! same completion counts, every reply bit-exact vs the compiled
+//! golden kernels).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tanh_vlsi::approx::MethodId;
+use tanh_vlsi::bench::scenario::{
+    build_trace, run_trace, validate_serve_log, RunOptions, Verify, SCENARIO_NAMES,
+};
+use tanh_vlsi::bench::BenchLog;
+use tanh_vlsi::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, ExecBackend, GoldenBackend, MetricsSnapshot,
+    RoutePolicy,
+};
+
+/// A deliberately slow backend so queues actually fill.
+struct SlowBackend {
+    inner: GoldenBackend,
+    delay: Duration,
+}
+
+impl ExecBackend for SlowBackend {
+    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+        std::thread::sleep(self.delay);
+        self.inner.execute(method, flat)
+    }
+    fn batch_elements(&self) -> usize {
+        self.inner.batch_elements()
+    }
+}
+
+#[test]
+fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
+    let coord = Arc::new(Coordinator::start(
+        Arc::new(SlowBackend { inner: GoldenBackend::table1(64), delay: Duration::from_millis(2) }),
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_queue: 128, ..Default::default() },
+            shards: 2,
+            route: RoutePolicy::LeastLoaded,
+        },
+    ));
+
+    // Concurrent submitters flooding a slow backend: every submit either
+    // returns a receiver (accepted) or fails fast with a backpressure
+    // error — never blocks.
+    let mut handles = Vec::new();
+    for c in 0..6usize {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let method = MethodId::all()[c];
+            let mut accepted = Vec::new();
+            let mut rejected = 0u64;
+            for i in 0..120 {
+                let values = vec![(i as f32) * 0.05 - 3.0; 16];
+                match coord.submit(method, values) {
+                    Ok(rx) => accepted.push(rx),
+                    Err(e) => {
+                        assert!(e.contains("backpressure"), "unexpected error: {e}");
+                        rejected += 1;
+                    }
+                }
+            }
+            // Every accepted request still completes (drain).
+            let mut completed = 0u64;
+            let mut failed = 0u64;
+            for rx in accepted {
+                match rx.recv().expect("reply delivered").outcome {
+                    Ok(out) => {
+                        assert_eq!(out.len(), 16);
+                        completed += 1;
+                    }
+                    Err(_) => failed += 1,
+                }
+            }
+            (completed, failed, rejected)
+        }));
+    }
+    let mut total_completed = 0u64;
+    let mut total_failed = 0u64;
+    let mut total_rejected = 0u64;
+    for h in handles {
+        let (c, f, r) = h.join().unwrap();
+        total_completed += c;
+        total_failed += f;
+        total_rejected += r;
+    }
+    assert!(total_rejected > 0, "backpressure never engaged under a 2ms/batch backend");
+    assert!(total_completed > 0, "nothing completed");
+
+    // Conservation, per shard and merged: every accepted request is
+    // accounted as completed or failed; every attempt as accepted or
+    // rejected.
+    let merged = coord.metrics();
+    assert_eq!(merged.submitted, total_completed + total_failed);
+    assert_eq!(merged.requests, total_completed);
+    assert_eq!(merged.failed_requests, total_failed);
+    assert_eq!(merged.rejected, total_rejected);
+    assert_eq!(merged.submitted + merged.rejected, 6 * 120);
+    let mut fold = MetricsSnapshot::default();
+    for (_, _, shard) in coord.shard_metrics() {
+        assert_eq!(
+            shard.submitted,
+            shard.requests + shard.failed_requests,
+            "per-shard conservation violated"
+        );
+        fold = fold.merge(&shard);
+    }
+    assert_eq!(fold, merged, "merged metrics must equal the fold of shard metrics");
+
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn shutdown_drains_in_flight_batches() {
+    let coord = Coordinator::start(
+        Arc::new(SlowBackend { inner: GoldenBackend::table1(64), delay: Duration::from_millis(1) }),
+        CoordinatorConfig::default(),
+    );
+    // Queue work across all methods, then shut down immediately: the
+    // disconnect path must flush queued + partial batches, so every
+    // reply still arrives.
+    let mut receivers = Vec::new();
+    for i in 0..36 {
+        let method = MethodId::all()[i % 6];
+        receivers.push((i, coord.submit(method, vec![0.25; 8]).unwrap()));
+    }
+    coord.shutdown();
+    for (i, rx) in receivers {
+        let result = rx.recv().unwrap_or_else(|_| panic!("reply {i} dropped on shutdown"));
+        let out = result.outcome.unwrap_or_else(|e| panic!("request {i} failed: {e}"));
+        assert_eq!(out.len(), 8);
+    }
+}
+
+#[test]
+fn scenarios_complete_deterministically_and_verify_bit_exact() {
+    // The acceptance property: same (scenario, seed, batch, scale) ⇒
+    // identical deterministic fields across independent runs, with
+    // every reply verified bit-exact against the compiled golden
+    // kernels, on ≥ 2 shards per method.
+    let batch = 128;
+    let backend = Arc::new(GoldenBackend::table1(batch));
+    let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
+    let mut log = BenchLog::new();
+    for name in SCENARIO_NAMES {
+        let trace = build_trace(name, 42, batch, 0.05).unwrap();
+        let mut fields = Vec::new();
+        for _run in 0..2 {
+            let coord = Coordinator::start(
+                backend.clone(),
+                CoordinatorConfig { shards: 2, ..Default::default() },
+            );
+            assert!(coord.shards_per_method() >= 2);
+            let out = run_trace(&coord, &trace, &opts)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(out.submitted as usize, trace.requests.len(), "{name}");
+            assert_eq!(out.completed, out.submitted, "{name}: requests went missing");
+            assert_eq!(out.failed, 0, "{name}");
+            assert_eq!(out.verified, out.completed, "{name}: unverified replies");
+            assert_eq!(out.elements, trace.total_elements(), "{name}");
+            fields.push(out.deterministic_fields().to_string_pretty());
+            if fields.len() == 2 {
+                log.push_row(out.to_json("golden", coord.shards_per_method(), batch));
+            }
+            coord.shutdown();
+        }
+        assert_eq!(fields[0], fields[1], "{name}: deterministic fields drifted between runs");
+    }
+    // The collected rows form a schema-valid BENCH_serve.json.
+    assert_eq!(validate_serve_log(&log.to_json()).unwrap(), SCENARIO_NAMES.len());
+}
+
+#[test]
+fn paced_replay_honors_the_open_loop_schedule() {
+    // The steady trace spans (count-1) * 30 µs of schedule; a paced run
+    // cannot finish faster than the schedule's span.
+    let batch = 128;
+    let trace = build_trace("steady", 7, batch, 0.05).unwrap();
+    let span_us = trace.requests.last().unwrap().at_us;
+    assert!(span_us > 0);
+    let coord = Coordinator::start(
+        Arc::new(GoldenBackend::table1(batch)),
+        CoordinatorConfig::default(),
+    );
+    let opts = RunOptions { pace: true, verify: Verify::Exact, ..Default::default() };
+    let out = run_trace(&coord, &trace, &opts).unwrap();
+    assert!(
+        out.wall >= Duration::from_micros(span_us),
+        "paced run finished in {:?}, before the {span_us} µs schedule end",
+        out.wall
+    );
+    assert_eq!(out.failed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn flood_scenario_spreads_load_across_shards() {
+    // Round-robin routing must actually use the pool: after a flood,
+    // more than one shard of a flooded method has accepted traffic.
+    let batch = 128;
+    let coord = Coordinator::start(
+        Arc::new(GoldenBackend::table1(batch)),
+        CoordinatorConfig { shards: 3, ..Default::default() },
+    );
+    let trace = build_trace("flood", 11, batch, 0.1).unwrap();
+    let out = run_trace(&coord, &trace, &RunOptions::default()).unwrap();
+    assert_eq!(out.failed, 0);
+    let pwl_busy = coord
+        .shard_metrics()
+        .into_iter()
+        .filter(|(m, _, s)| *m == MethodId::Pwl && s.submitted > 0)
+        .count();
+    assert!(pwl_busy >= 2, "flood used only {pwl_busy} of 3 PWL shards");
+    // Merged latency histogram saw every reply.
+    let merged = coord.metrics();
+    assert_eq!(merged.latency.count, merged.requests + merged.failed_requests);
+    coord.shutdown();
+}
