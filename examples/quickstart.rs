@@ -1,56 +1,66 @@
-//! Quickstart: evaluate all six approximations, inspect their errors,
-//! hardware inventories and pipelined datapaths — the library's public
-//! API in one page.
+//! Quickstart: name design points as specs, evaluate all six
+//! approximations, inspect their errors, hardware inventories and
+//! pipelined datapaths — the library's public API in one page.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use tanh_vlsi::approx::{table1_suite, IoSpec, TanhApprox};
+use tanh_vlsi::approx::{MethodSpec, Registry};
 use tanh_vlsi::cost::{CostModel, UnitLibrary};
-use tanh_vlsi::error::{measure, InputGrid};
-use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::error::measure_spec;
+use tanh_vlsi::fixed::Fx;
 use tanh_vlsi::hw::table1_pipeline;
 
 fn main() {
-    let io = IoSpec::table1(); // S3.12 in → S.15 out, the paper's setup
-    let x = Fx::from_f64(1.25, io.input);
-    println!("tanh({}) = {:.9}\n", x.to_f64(), x.to_f64().tanh());
+    // Design points are named by spec strings: method + parameter +
+    // I/O formats (+ domain). `table1:A` … `table1:E` are the paper's
+    // six rows; any other (method × parameter × format) point is one
+    // parse away.
+    let specs = MethodSpec::table1_all();
+    let custom = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+    let x_f64 = 1.25;
+    println!("tanh({x_f64}) = {:.9}\n", x_f64.tanh());
 
     // 1. Evaluate each Table I configuration through its bit-exact
-    //    fixed-point datapath model.
+    //    fixed-point datapath model (spec.build() → TanhApprox).
     println!("== datapath evaluation ==");
-    for m in table1_suite() {
-        let y = m.eval_fx(x, io.output);
+    for spec in &specs {
+        let m = spec.build();
+        let x = Fx::from_f64(x_f64, spec.io.input);
+        let y = m.eval_fx(x, spec.io.output);
         println!(
-            "{:28} -> {:.9}  (error {:+.2e})",
-            m.describe(),
+            "{:44} -> {:.9}  (error {:+.2e})",
+            spec.to_string(),
             y.to_f64(),
-            y.to_f64() - x.to_f64().tanh()
+            y.to_f64() - x_f64.tanh()
         );
     }
 
-    // 2. Exhaustive error metrics over the analysis grid (Table I).
-    println!("\n== exhaustive error (|x| < 6, every S3.12 point) ==");
-    let grid = InputGrid::table1();
-    for m in table1_suite() {
-        let e = measure(m.as_ref(), grid, io.output);
+    // 2. Exhaustive error metrics per spec — kernels come from the
+    //    shared Registry cache, so re-measuring is compile-free.
+    println!("\n== exhaustive error (every input word in the spec's domain) ==");
+    for spec in specs.iter().chain(std::iter::once(&custom)) {
+        let e = measure_spec(spec);
         println!(
-            "{:28} max {:.2e} @ x={:+.3}   rms {:.2e}   ({} points)",
-            m.describe(),
+            "{:44} max {:.2e} @ x={:+.3}   rms {:.2e}   ({} points)",
+            spec.to_string(),
             e.max_abs,
             e.argmax,
             e.rms,
             e.points
         );
     }
+    let stats = Registry::global().stats();
+    println!("   (kernel cache: {} compiles, {} hits)", stats.compiles, stats.hits);
 
     // 3. Hardware cost (paper §IV): component inventory priced by the
     //    unit gate library.
     println!("\n== hardware cost (unit gate library) ==");
     let model = CostModel::new();
-    for m in table1_suite() {
-        let inv = m.inventory(io);
+    for spec in &specs {
+        let m = spec.build();
+        let inv = m.inventory(spec.io);
         let cost = model.price(&inv);
         println!(
             "{:28} {} add, {} mul, {} div, {} LUT entries -> {:.0} GE",
@@ -66,10 +76,12 @@ fn main() {
     // 4. The cycle-level pipelined datapath (Figs 3/4/5).
     println!("\n== pipelined datapaths ==");
     let lib = UnitLibrary::default();
-    for m in table1_suite() {
-        let pipe = table1_pipeline(m.id(), io.output);
+    for spec in &specs {
+        let m = spec.build();
+        let x = Fx::from_f64(x_f64, spec.io.input);
+        let pipe = table1_pipeline(spec.method_id(), spec.io.output);
         let y = pipe.eval(x);
-        assert_eq!(y.raw(), m.eval_fx(x, io.output).raw(), "pipeline != golden");
+        assert_eq!(y.raw(), m.eval_fx(x, spec.io.output).raw(), "pipeline != golden");
         println!(
             "{:20} latency {:2} cycles, critical stage {:.1} FO4, bit-exact ✓",
             pipe.name,

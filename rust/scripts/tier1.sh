@@ -37,4 +37,29 @@ if grep -Eq '"requests": 0(,|$)' BENCH_serve.json; then
   echo "tier-1 FAIL: BENCH_serve.json has a zero-request scenario"; exit 1
 fi
 
+echo "== tier-1: non-Table-I spec smoke =="
+# Serve a design point the pre-spec API could not even name (PWL at
+# step 1/32 with an S2.13 input) through a 2-shard coordinator
+# scenario. The binary verifies every reply BIT-EXACT against a
+# freshly compiled golden kernel (the scenario verifier deliberately
+# bypasses the shared Registry cache the serving backend uses), and
+# the report row must carry the spec string.
+SPEC='pwl:step=1/32:in=s2.13:out=s.15'
+TANH_SMOKE=1 "$BIN" serve --scenario steady --seed 7 --shards 2 \
+  --spec "$SPEC" --out BENCH_serve_spec.json
+grep -q 'pwl:step=1/32:in=S2.13:out=S.15' BENCH_serve_spec.json \
+  || { echo "tier-1 FAIL: BENCH_serve_spec.json does not carry the spec string"; exit 1; }
+grep -q '"verified"' BENCH_serve_spec.json \
+  || { echo "tier-1 FAIL: spec smoke row has no verified count"; exit 1; }
+if grep -Eq '"verified": 0(,|$)' BENCH_serve_spec.json; then
+  echo "tier-1 FAIL: spec smoke verified zero replies"; exit 1
+fi
+# And the spec grammar must reject garbage with a helpful message.
+if "$BIN" sweep --spec 'pwl:step=1/3' 2>err.txt; then
+  echo "tier-1 FAIL: invalid spec was accepted"; exit 1
+fi
+grep -qi 'spec grammar' err.txt \
+  || { echo "tier-1 FAIL: spec error does not show the grammar"; exit 1; }
+rm -f err.txt BENCH_serve_spec.json
+
 echo "== tier-1: OK =="

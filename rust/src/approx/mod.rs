@@ -24,6 +24,12 @@
 //! compiled kernels, the scalar datapath models stay the auditable
 //! golden reference. See [`compiled`] for the per-method kernel shapes
 //! and when to use which path.
+//!
+//! Configurations are *named* by [`spec::MethodSpec`]: a typed,
+//! parse/Display round-trippable design point (method × parameter ×
+//! I/O formats × domain) that keys the process-wide compiled-kernel
+//! cache ([`spec::Registry`]). [`table1_suite`] and [`build`] are thin
+//! wrappers over specs.
 
 pub mod catmull_rom;
 pub mod compiled;
@@ -35,10 +41,12 @@ pub mod pwl_nonuniform;
 pub mod reference;
 pub mod regions;
 pub mod sigmoid;
+pub mod spec;
 pub mod taylor;
 pub mod velocity;
 
 pub use compiled::CompiledKernel;
+pub use spec::{CacheStats, MethodParams, MethodSpec, Registry};
 
 use crate::cost::Inventory;
 use crate::fixed::{Fx, QFormat};
@@ -110,6 +118,20 @@ impl MethodId {
             _ => None,
         }
     }
+
+    /// [`MethodId::parse`] with the canonical error message: one
+    /// helper used by every CLI subcommand and the net front-end, so
+    /// unknown-method errors always list the accepted names, the paper
+    /// letters, and the full-spec alternative.
+    pub fn parse_or_err(s: &str) -> Result<MethodId, String> {
+        MethodId::parse(s).ok_or_else(|| {
+            format!(
+                "unknown method '{s}' — accepted: pwl|taylor1|taylor2|catmull|velocity|lambert \
+                 (or letters A|B1|B2|C|D|E); full design points use the spec grammar, \
+                 e.g. pwl:step=1/64:in=S3.12:out=S.15"
+            )
+        })
+    }
 }
 
 /// Common interface over the six approximations.
@@ -156,7 +178,7 @@ pub trait TanhApprox: Send + Sync {
 }
 
 /// Input/output format pair used for inventory sizing.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct IoSpec {
     /// Input fixed-point format (e.g. S3.12).
     pub input: QFormat,
@@ -191,35 +213,23 @@ pub fn eval_odd_saturating<M: TanhApprox + ?Sized>(m: &M, x: Fx, out: QFormat) -
     }
 }
 
-/// Builds the Table I configuration of every method, in paper order.
-/// These are the six rows of Table I (max input 6.0, 12-bit input
-/// precision, 15-bit output precision).
+/// Builds the Table I configuration of every method, in paper order —
+/// a thin wrapper over [`MethodSpec::table1_all`]. These are the six
+/// rows of Table I (max input 6.0, 12-bit input precision, 15-bit
+/// output precision).
 pub fn table1_suite() -> Vec<Box<dyn TanhApprox>> {
-    vec![
-        Box::new(pwl::Pwl::table1()),
-        Box::new(taylor::Taylor::table1_quadratic()),
-        Box::new(taylor::Taylor::table1_cubic()),
-        Box::new(catmull_rom::CatmullRom::table1()),
-        Box::new(velocity::Velocity::table1()),
-        Box::new(lambert::Lambert::table1()),
-    ]
+    MethodSpec::table1_all().iter().map(|s| s.build()).collect()
 }
 
 /// Builds a method with an explicit tunable parameter:
 /// step size for A/B1/B2/C, threshold for D, term count for E.
 ///
-/// `param` is the step/threshold as a value (e.g. `1.0/64.0`) for
-/// A..D and the number of fraction terms (as f64) for E. `domain_max`
-/// bounds the approximation domain.
-pub fn build(id: MethodId, param: f64, domain_max: f64) -> Box<dyn TanhApprox> {
-    match id {
-        MethodId::Pwl => Box::new(pwl::Pwl::new(param, domain_max)),
-        MethodId::TaylorQuadratic => Box::new(taylor::Taylor::new(param, 3, domain_max)),
-        MethodId::TaylorCubic => Box::new(taylor::Taylor::new(param, 4, domain_max)),
-        MethodId::CatmullRom => Box::new(catmull_rom::CatmullRom::new(param, domain_max)),
-        MethodId::Velocity => Box::new(velocity::Velocity::new(param, domain_max)),
-        MethodId::Lambert => Box::new(lambert::Lambert::new(param as usize, domain_max)),
-    }
+/// A thin wrapper over [`MethodSpec::with_param`] (validated against
+/// the Table I I/O formats): out-of-range steps and non-integer or
+/// non-positive Lambert term counts are errors now, where the old
+/// signature silently truncated `param as usize`.
+pub fn build(id: MethodId, param: f64, domain_max: f64) -> Result<Box<dyn TanhApprox>, String> {
+    Ok(MethodSpec::with_param(id, param, IoSpec::table1(), domain_max)?.build())
 }
 
 #[cfg(test)]
@@ -238,6 +248,22 @@ mod tests {
         assert_eq!(MethodId::parse("b2"), Some(MethodId::TaylorCubic));
         assert_eq!(MethodId::parse("velocity"), Some(MethodId::Velocity));
         assert_eq!(MethodId::parse("nope"), None);
+        // The canonical error lists every accepted spelling.
+        let err = MethodId::parse_or_err("nope").unwrap_err();
+        for needle in ["pwl", "taylor1", "lambert", "B1", "spec grammar"] {
+            assert!(err.contains(needle), "'{needle}' missing from: {err}");
+        }
+    }
+
+    #[test]
+    fn build_validates_lambert_terms_instead_of_truncating() {
+        // Regression for the lossy `param as usize` path: 2.7 used to
+        // build K=2 silently; now it is a validation error.
+        let err = build(MethodId::Lambert, 2.7, 6.0).unwrap_err();
+        assert!(err.contains("integer"), "{err}");
+        assert!(build(MethodId::Lambert, 0.0, 6.0).is_err());
+        let m = build(MethodId::Lambert, 3.0, 6.0).unwrap();
+        assert_eq!(m.describe(), "Lambert(K=3)");
     }
 
     #[test]

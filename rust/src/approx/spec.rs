@@ -1,0 +1,680 @@
+//! Typed, serializable method configurations — the crate's design-point
+//! naming layer — plus the shared compiled-kernel cache.
+//!
+//! The paper compares six configurations at one operating point
+//! (Table I); everything the ROADMAP points at — design-space sweeps,
+//! serving arbitrary precision/parameter mixes — needs *any*
+//! (method × parameter × I/O-format × domain) point to be a
+//! first-class, addressable value. [`MethodSpec`] is that value:
+//!
+//! - **typed**: per-method parameters live in [`MethodParams`]
+//!   (step / threshold / term count), validated at construction — no
+//!   more `param: f64` being silently truncated into Lambert's term
+//!   count;
+//! - **serializable**: `Display` and [`MethodSpec::parse`] round-trip
+//!   through a compact grammar (see [`GRAMMAR`]), so specs travel
+//!   through CLIs, `BENCH_*.json` rows and network requests as plain
+//!   strings;
+//! - **hashable**: specs key the shared kernel cache ([`Registry`]) and
+//!   the coordinator's shard pools.
+//!
+//! ## Grammar
+//!
+//! ```text
+//! <spec>   := <method> (':' <key>=<value>)*        e.g. pwl:step=1/64:in=s3.12:out=s.15
+//!           | table1:<A|B1|B2|C|D|E>               the six Table I rows
+//! <method> := pwl|taylor1|taylor2|catmull|velocity|lambert  (or a|b1|b2|c|d|e)
+//! keys     := step=<v>       A/B1/B2/C: step size, a reciprocal power of two (1/64 or 0.015625)
+//!             threshold=<v>  D: linear-compensation threshold, reciprocal power of two
+//!             terms=<n>      E: continued-fraction terms, integer 1..=16
+//!             in=<fmt>       input Q-format (default S3.12)
+//!             out=<fmt>      output Q-format (default S.15)
+//!             dom=<x>        approximation domain bound (default 6)
+//! ```
+//!
+//! Omitted keys default to the method's Table I configuration, so
+//! `pwl` alone is Table I row A and `pwl:step=1/32:in=s2.13` names a
+//! near neighbour no previous API could express.
+//!
+//! ## The kernel cache
+//!
+//! [`Registry`] maps a spec to its compiled kernel
+//! ([`crate::approx::CompiledKernel`]) exactly once per process:
+//! the serving backend, the exhaustive error sweeps and the explorer
+//! all resolve kernels through [`Registry::global`], so a configuration
+//! is compiled once no matter how many shards, scenarios or report
+//! sections evaluate it. Cache traffic is observable
+//! ([`Registry::stats`], surfaced through the serve metrics endpoint).
+//! The scenario verifier deliberately does **not** use the cache — see
+//! [`crate::bench::scenario::GoldenVerifier`].
+
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::compiled::CompiledKernel;
+use super::{catmull_rom, lambert, pwl, taylor, velocity};
+use super::{IoSpec, MethodId, TanhApprox};
+use crate::fixed::QFormat;
+use crate::util::table::step_str;
+
+/// One-line grammar reminder for CLI error messages (the full grammar
+/// is in the module docs).
+pub const GRAMMAR: &str = "spec grammar: <method>[:step=1/64|:threshold=1/128|:terms=7][:in=S3.12][:out=S.15][:dom=6]\n\
+     methods: pwl|taylor1|taylor2|catmull|velocity|lambert (letters A|B1|B2|C|D|E); shorthand table1:<A|B1|B2|C|D|E>\n\
+     examples: pwl:step=1/64:in=s3.12:out=s.15   lambert:terms=9   table1:B2";
+
+/// Typed per-method tunable parameters (the paper's Fig 2 axes).
+#[derive(Clone, Copy, Debug)]
+pub enum MethodParams {
+    /// A — piecewise linear: sample step (reciprocal power of two).
+    Pwl {
+        /// Sample spacing.
+        step: f64,
+    },
+    /// B1/B2 — Taylor expansion: anchor step + series terms (3 = B1
+    /// quadratic, 4 = B2 cubic).
+    Taylor {
+        /// Anchor spacing.
+        step: f64,
+        /// Series terms (3 or 4).
+        terms: usize,
+    },
+    /// C — Catmull-Rom spline: control-point step.
+    CatmullRom {
+        /// Control-point spacing.
+        step: f64,
+    },
+    /// D — velocity factors: linear-compensation threshold θ.
+    Velocity {
+        /// Compensation threshold (reciprocal power of two).
+        threshold: f64,
+    },
+    /// E — Lambert continued fraction: number of fraction terms K.
+    /// Typed as `usize` — the old `build(id, param: f64, ..)` silently
+    /// truncated non-integer counts (`2.7` → 2).
+    Lambert {
+        /// Continued-fraction terms, 1..=16.
+        terms: usize,
+    },
+}
+
+/// A fully specified design point: method parameters, I/O formats and
+/// the approximation domain. Construct via [`MethodSpec::new`] (which
+/// validates), [`MethodSpec::table1`], or [`MethodSpec::parse`].
+#[derive(Clone, Copy, Debug)]
+pub struct MethodSpec {
+    /// Method + tunable parameter.
+    pub params: MethodParams,
+    /// Input/output fixed-point formats.
+    pub io: IoSpec,
+    /// Domain bound: inputs at or beyond ±domain saturate (§III.A).
+    pub domain: f64,
+}
+
+/// Checks that `v` is a reciprocal power of two in `[2^-24, 1]`.
+fn check_recip_pow2(name: &str, v: f64) -> Result<u32, String> {
+    if !v.is_finite() || v <= 0.0 || v > 1.0 {
+        return Err(format!("{name} {v} out of range (need a reciprocal power of two in (0, 1])"));
+    }
+    let inv = 1.0 / v;
+    if inv.fract() != 0.0 || !(inv as u64).is_power_of_two() || inv > (1u64 << 24) as f64 {
+        return Err(format!("{name} {v} is not a reciprocal power of two (1/2 … 1/2^24)"));
+    }
+    Ok((inv as u64).trailing_zeros())
+}
+
+impl MethodSpec {
+    /// Builds a validated spec. Errors (with a message naming the bad
+    /// field) on: a step/threshold that is not a reciprocal power of
+    /// two, a step too fine for the input format to address, a Taylor
+    /// term count outside 3..=4, a Lambert term count outside 1..=16,
+    /// or a non-positive/absurd domain.
+    pub fn new(params: MethodParams, io: IoSpec, domain: f64) -> Result<MethodSpec, String> {
+        if !domain.is_finite() || domain <= 0.0 || domain > 64.0 {
+            return Err(format!("domain {domain} out of range (need 0 < dom <= 64)"));
+        }
+        match params {
+            MethodParams::Pwl { step } | MethodParams::CatmullRom { step } => {
+                let shift = check_recip_pow2("step", step)?;
+                if shift > io.input.frac_bits {
+                    return Err(format!(
+                        "step {} is finer than the {} input resolution",
+                        step_str(step),
+                        io.input
+                    ));
+                }
+            }
+            MethodParams::Taylor { step, terms } => {
+                let shift = check_recip_pow2("step", step)?;
+                // Centred anchors need at least one t bit below the step.
+                if shift >= io.input.frac_bits {
+                    return Err(format!(
+                        "step {} leaves no expansion bits in {} (need step > input ulp)",
+                        step_str(step),
+                        io.input
+                    ));
+                }
+                if !(3..=4).contains(&terms) {
+                    return Err(format!("Taylor terms must be 3 (B1) or 4 (B2), got {terms}"));
+                }
+            }
+            MethodParams::Velocity { threshold } => {
+                check_recip_pow2("threshold", threshold)?;
+            }
+            MethodParams::Lambert { terms } => {
+                if !(1..=16).contains(&terms) {
+                    return Err(format!("Lambert terms must be 1..=16, got {terms}"));
+                }
+            }
+        }
+        Ok(MethodSpec { params, io, domain })
+    }
+
+    /// The Table I configuration of a method (paper defaults: S3.12 in,
+    /// S.15 out, domain 6, the six hand-picked parameters).
+    pub fn table1(id: MethodId) -> MethodSpec {
+        let params = match id {
+            MethodId::Pwl => MethodParams::Pwl { step: 1.0 / 64.0 },
+            MethodId::TaylorQuadratic => MethodParams::Taylor { step: 1.0 / 16.0, terms: 3 },
+            MethodId::TaylorCubic => MethodParams::Taylor { step: 1.0 / 8.0, terms: 4 },
+            MethodId::CatmullRom => MethodParams::CatmullRom { step: 1.0 / 16.0 },
+            MethodId::Velocity => MethodParams::Velocity { threshold: 1.0 / 128.0 },
+            MethodId::Lambert => MethodParams::Lambert { terms: 7 },
+        };
+        MethodSpec { params, io: IoSpec::table1(), domain: 6.0 }
+    }
+
+    /// All six Table I specs, in paper order.
+    pub fn table1_all() -> Vec<MethodSpec> {
+        MethodId::all().into_iter().map(MethodSpec::table1).collect()
+    }
+
+    /// Typed bridge from the legacy `(id, param: f64)` convention:
+    /// `param` is the step (A/B1/B2/C), threshold (D) or term count (E).
+    /// Unlike the old `param as usize` truncation, a non-integer or
+    /// non-positive Lambert count is a validation error.
+    pub fn with_param(
+        id: MethodId,
+        param: f64,
+        io: IoSpec,
+        domain: f64,
+    ) -> Result<MethodSpec, String> {
+        let params = match id {
+            MethodId::Pwl => MethodParams::Pwl { step: param },
+            MethodId::TaylorQuadratic => MethodParams::Taylor { step: param, terms: 3 },
+            MethodId::TaylorCubic => MethodParams::Taylor { step: param, terms: 4 },
+            MethodId::CatmullRom => MethodParams::CatmullRom { step: param },
+            MethodId::Velocity => MethodParams::Velocity { threshold: param },
+            MethodId::Lambert => {
+                if !param.is_finite() || param.fract() != 0.0 || param < 1.0 {
+                    return Err(format!(
+                        "Lambert terms must be a positive integer, got {param}"
+                    ));
+                }
+                MethodParams::Lambert { terms: param as usize }
+            }
+        };
+        MethodSpec::new(params, io, domain)
+    }
+
+    /// Which paper method this spec configures.
+    pub fn method_id(&self) -> MethodId {
+        match self.params {
+            MethodParams::Pwl { .. } => MethodId::Pwl,
+            MethodParams::Taylor { terms: 3, .. } => MethodId::TaylorQuadratic,
+            MethodParams::Taylor { .. } => MethodId::TaylorCubic,
+            MethodParams::CatmullRom { .. } => MethodId::CatmullRom,
+            MethodParams::Velocity { .. } => MethodId::Velocity,
+            MethodParams::Lambert { .. } => MethodId::Lambert,
+        }
+    }
+
+    /// The tunable parameter as f64 (step / threshold / term count) —
+    /// the Fig 2 axis value, kept for table renderers and
+    /// [`crate::explore::DesignPoint`] compatibility.
+    pub fn param(&self) -> f64 {
+        match self.params {
+            MethodParams::Pwl { step }
+            | MethodParams::Taylor { step, .. }
+            | MethodParams::CatmullRom { step } => step,
+            MethodParams::Velocity { threshold } => threshold,
+            MethodParams::Lambert { terms } => terms as f64,
+        }
+    }
+
+    /// Instantiates the golden datapath model. Infallible: every
+    /// constructor precondition was checked by [`MethodSpec::new`].
+    pub fn build(&self) -> Box<dyn TanhApprox> {
+        match self.params {
+            MethodParams::Pwl { step } => Box::new(pwl::Pwl::new(step, self.domain)),
+            MethodParams::Taylor { step, terms } => {
+                Box::new(taylor::Taylor::new(step, terms, self.domain))
+            }
+            MethodParams::CatmullRom { step } => {
+                Box::new(catmull_rom::CatmullRom::new(step, self.domain))
+            }
+            MethodParams::Velocity { threshold } => {
+                Box::new(velocity::Velocity::new(threshold, self.domain))
+            }
+            MethodParams::Lambert { terms } => Box::new(lambert::Lambert::new(terms, self.domain)),
+        }
+    }
+
+    /// Parses the spec grammar (see module docs / [`GRAMMAR`]).
+    pub fn parse(s: &str) -> Result<MethodSpec, String> {
+        let mut parts = s.trim().split(':');
+        let head = parts.next().unwrap_or("").trim();
+        if head.is_empty() {
+            return Err("empty spec".to_string());
+        }
+        if head.eq_ignore_ascii_case("table1") {
+            let label = parts.next().ok_or("table1 shorthand needs a row label, e.g. table1:B2")?;
+            let id = MethodId::parse(label)
+                .ok_or_else(|| format!("unknown Table I row '{label}' (A|B1|B2|C|D|E)"))?;
+            if let Some(extra) = parts.next() {
+                return Err(format!("table1:<row> takes no further fields, got ':{extra}'"));
+            }
+            return Ok(MethodSpec::table1(id));
+        }
+        let id = MethodId::parse_or_err(head)?;
+        let mut spec = MethodSpec::table1(id);
+        for field in parts {
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| format!("field '{field}' is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "step" => {
+                    let v = parse_fraction(value)?;
+                    spec.params = match spec.params {
+                        MethodParams::Pwl { .. } => MethodParams::Pwl { step: v },
+                        MethodParams::Taylor { terms, .. } => MethodParams::Taylor { step: v, terms },
+                        MethodParams::CatmullRom { .. } => MethodParams::CatmullRom { step: v },
+                        _ => {
+                            return Err(format!(
+                                "'step' does not apply to {head} (use threshold= for velocity, terms= for lambert)"
+                            ))
+                        }
+                    };
+                }
+                "threshold" => {
+                    let v = parse_fraction(value)?;
+                    spec.params = match spec.params {
+                        MethodParams::Velocity { .. } => MethodParams::Velocity { threshold: v },
+                        _ => return Err(format!("'threshold' only applies to velocity, not {head}")),
+                    };
+                }
+                "terms" => {
+                    let n: usize = value
+                        .parse()
+                        .map_err(|_| format!("terms must be a positive integer, got '{value}'"))?;
+                    spec.params = match spec.params {
+                        MethodParams::Lambert { .. } => MethodParams::Lambert { terms: n },
+                        _ => return Err(format!("'terms' only applies to lambert, not {head}")),
+                    };
+                }
+                "in" => {
+                    spec.io.input = QFormat::parse(value)
+                        .ok_or_else(|| format!("bad input format '{value}' (e.g. S3.12)"))?;
+                }
+                "out" => {
+                    spec.io.output = QFormat::parse(value)
+                        .ok_or_else(|| format!("bad output format '{value}' (e.g. S.15)"))?;
+                }
+                "dom" => {
+                    spec.domain = value
+                        .parse()
+                        .map_err(|_| format!("bad domain '{value}'"))?;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown spec field '{other}' (step|threshold|terms|in|out|dom)"
+                    ))
+                }
+            }
+        }
+        // Re-validate: field overrides may have broken an invariant.
+        MethodSpec::new(spec.params, spec.io, spec.domain)
+    }
+
+    /// Canonical-form equality/hash key: method discriminant +
+    /// parameter bits (Taylor carries its exact term count, so a spec
+    /// built by bypassing [`MethodSpec::new`]'s validation can never
+    /// alias a *different* configuration in the kernel cache) +
+    /// formats + domain bits. Bit equality equals semantic equality
+    /// here because validation pins every float to an exact binary
+    /// value (reciprocal powers of two) or a finite parsed literal.
+    fn key(&self) -> (u8, u64, u64, u32, u32, u32, u32, u64) {
+        let (d, p, q) = match self.params {
+            MethodParams::Pwl { step } => (0u8, step.to_bits(), 0u64),
+            MethodParams::Taylor { step, terms } => (1, step.to_bits(), terms as u64),
+            MethodParams::CatmullRom { step } => (2, step.to_bits(), 0),
+            MethodParams::Velocity { threshold } => (3, threshold.to_bits(), 0),
+            MethodParams::Lambert { terms } => (4, terms as u64, 0),
+        };
+        (
+            d,
+            p,
+            q,
+            self.io.input.int_bits,
+            self.io.input.frac_bits,
+            self.io.output.int_bits,
+            self.io.output.frac_bits,
+            self.domain.to_bits(),
+        )
+    }
+}
+
+impl PartialEq for MethodSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for MethodSpec {}
+
+impl Hash for MethodSpec {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.key().hash(state);
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (name, param) = match self.params {
+            MethodParams::Pwl { step } => ("pwl", format!("step={}", step_str(step))),
+            MethodParams::Taylor { step, terms } => (
+                if terms == 3 { "taylor1" } else { "taylor2" },
+                format!("step={}", step_str(step)),
+            ),
+            MethodParams::CatmullRom { step } => ("catmull", format!("step={}", step_str(step))),
+            MethodParams::Velocity { threshold } => {
+                ("velocity", format!("threshold={}", step_str(threshold)))
+            }
+            MethodParams::Lambert { terms } => ("lambert", format!("terms={terms}")),
+        };
+        write!(f, "{name}:{param}:in={}:out={}", self.io.input, self.io.output)?;
+        if self.domain != 6.0 {
+            write!(f, ":dom={}", self.domain)?;
+        }
+        Ok(())
+    }
+}
+
+/// Parses `1/64`-style fractions or plain decimals.
+fn parse_fraction(s: &str) -> Result<f64, String> {
+    if let Some((num, den)) = s.split_once('/') {
+        let num: f64 = num.trim().parse().map_err(|_| format!("bad fraction '{s}'"))?;
+        let den: f64 = den.trim().parse().map_err(|_| format!("bad fraction '{s}'"))?;
+        if den == 0.0 {
+            return Err(format!("zero denominator in '{s}'"));
+        }
+        Ok(num / den)
+    } else {
+        s.parse().map_err(|_| format!("bad number '{s}'"))
+    }
+}
+
+/// Cache-traffic counters of a [`Registry`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Kernel lookups answered from the cache.
+    pub hits: u64,
+    /// Kernel compilations performed (== distinct specs resolved).
+    pub compiles: u64,
+}
+
+/// Spec-keyed compiled-kernel cache.
+///
+/// Every layer that needs a configuration's integer kernel — the
+/// serving backend, `error::measure_spec`, the explorer — resolves it
+/// here, so a spec is compiled once per process regardless of shard
+/// count, sweep repetition or report section. Use [`Registry::global`]
+/// for the process-wide instance; tests construct private registries to
+/// get deterministic counters.
+///
+/// The cache lock is held across a compile: a second thread asking for
+/// the same spec blocks until the first compile finishes rather than
+/// duplicating the work (compiles fan out internally via scoped
+/// threads, which never touch the registry, so this cannot deadlock).
+#[derive(Default)]
+pub struct Registry {
+    kernels: Mutex<HashMap<MethodSpec, Arc<CompiledKernel>>>,
+    hits: AtomicU64,
+    compiles: AtomicU64,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide shared registry.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Resolves the compiled kernel for a spec, compiling at most once
+    /// per spec per registry.
+    pub fn kernel(&self, spec: &MethodSpec) -> Arc<CompiledKernel> {
+        let mut map = self.kernels.lock().unwrap();
+        if let Some(k) = map.get(spec) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return k.clone();
+        }
+        let k = Arc::new(spec.build().compile(spec.io));
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        map.insert(*spec, k.clone());
+        k
+    }
+
+    /// Cumulative cache counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            compiles: self.compiles.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of cached kernels.
+    pub fn len(&self) -> usize {
+        self.kernels.lock().unwrap().len()
+    }
+
+    /// True when nothing has been compiled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drops every cached kernel (counters are kept — they are
+    /// lifetime totals). For long-running processes that sweep huge
+    /// spec spaces.
+    pub fn clear(&self) {
+        self.kernels.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Fx;
+
+    #[test]
+    fn table1_specs_display_canonically_and_round_trip() {
+        let want = [
+            "pwl:step=1/64:in=S3.12:out=S.15",
+            "taylor1:step=1/16:in=S3.12:out=S.15",
+            "taylor2:step=1/8:in=S3.12:out=S.15",
+            "catmull:step=1/16:in=S3.12:out=S.15",
+            "velocity:threshold=1/128:in=S3.12:out=S.15",
+            "lambert:terms=7:in=S3.12:out=S.15",
+        ];
+        for (spec, want) in MethodSpec::table1_all().into_iter().zip(want) {
+            assert_eq!(spec.to_string(), want);
+            assert_eq!(MethodSpec::parse(want).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn shorthands_and_defaults_parse() {
+        for id in MethodId::all() {
+            let full = MethodSpec::table1(id);
+            assert_eq!(MethodSpec::parse(&format!("table1:{}", id.label())).unwrap(), full);
+            // Bare method name defaults every field to Table I.
+            let name = full.to_string();
+            let bare = name.split(':').next().unwrap();
+            assert_eq!(MethodSpec::parse(bare).unwrap(), full);
+        }
+        // Letters work as method heads too, case-insensitively.
+        assert_eq!(MethodSpec::parse("b2").unwrap(), MethodSpec::table1(MethodId::TaylorCubic));
+        assert_eq!(MethodSpec::parse("table1:d").unwrap(), MethodSpec::table1(MethodId::Velocity));
+    }
+
+    #[test]
+    fn non_table1_points_parse_with_overrides() {
+        let s = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+        assert_eq!(s.method_id(), MethodId::Pwl);
+        assert_eq!(s.param(), 1.0 / 32.0);
+        assert_eq!(s.io.input, QFormat::S2_13);
+        assert_eq!(s.io.output, QFormat::S_15);
+        assert_eq!(s.domain, 6.0);
+        // Decimal spelling of the same step parses to the same spec.
+        assert_eq!(MethodSpec::parse("pwl:step=0.03125:in=s2.13").unwrap(), s);
+        // Domain override round-trips.
+        let d = MethodSpec::parse("lambert:terms=9:dom=4").unwrap();
+        assert_eq!(d.domain, 4.0);
+        assert_eq!(MethodSpec::parse(&d.to_string()).unwrap(), d);
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_with_field_names() {
+        for (bad, needle) in [
+            ("", "empty"),
+            ("sinh", "unknown method"),
+            ("table1:Z", "unknown Table I row"),
+            ("table1:A:step=1/4", "no further fields"),
+            ("pwl:step=3", "step"),
+            ("pwl:step=1/3", "step"),
+            ("pwl:step=0", "step"),
+            ("pwl:step=-0.25", "step"),
+            ("pwl:step=1/8192", "finer"),          // finer than S3.12
+            ("taylor1:step=1/4096", "expansion"),  // no t bits left
+            ("taylor1:terms=5", "terms"),
+            ("velocity:step=1/64", "threshold"),
+            ("lambert:terms=0", "terms"),
+            ("lambert:terms=2.5", "terms"),
+            ("lambert:terms=17", "1..=16"),
+            ("pwl:in=x3.2", "input format"),
+            ("pwl:out=S.0", "output format"),
+            ("pwl:dom=-1", "domain"),
+            ("pwl:dom=nope", "domain"),
+            ("pwl:step", "key=value"),
+            ("pwl:color=red", "unknown spec field"),
+        ] {
+            let err = MethodSpec::parse(bad).unwrap_err();
+            assert!(err.contains(needle), "'{bad}' -> '{err}' (wanted '{needle}')");
+        }
+    }
+
+    #[test]
+    fn with_param_rejects_fractional_lambert_terms() {
+        // Regression: the old build() truncated 2.7 -> 2 silently.
+        let err =
+            MethodSpec::with_param(MethodId::Lambert, 2.7, IoSpec::table1(), 6.0).unwrap_err();
+        assert!(err.contains("integer"), "{err}");
+        assert!(MethodSpec::with_param(MethodId::Lambert, 0.0, IoSpec::table1(), 6.0).is_err());
+        let ok = MethodSpec::with_param(MethodId::Lambert, 7.0, IoSpec::table1(), 6.0).unwrap();
+        assert!(matches!(ok.params, MethodParams::Lambert { terms: 7 }));
+    }
+
+    #[test]
+    fn specs_hash_and_compare_by_value() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        for s in MethodSpec::table1_all() {
+            assert!(set.insert(s));
+            assert!(!set.insert(s), "{s} double-inserted");
+        }
+        assert_eq!(set.len(), 6);
+        // Different io, same params: distinct key.
+        let a = MethodSpec::parse("pwl").unwrap();
+        let b = MethodSpec::parse("pwl:out=s.7").unwrap();
+        assert_ne!(a, b);
+        assert!(set.contains(&a) && !set.contains(&b));
+        // A validation-bypassing struct literal (pub fields) with a
+        // bogus Taylor term count must NOT alias a valid spec's cache
+        // key — the key carries the exact term count.
+        let bogus = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        assert_ne!(bogus, MethodSpec::table1(MethodId::TaylorCubic));
+        assert!(!set.contains(&bogus));
+    }
+
+    #[test]
+    fn registry_compiles_once_and_counts_traffic() {
+        let reg = Registry::new();
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let k1 = reg.kernel(&spec);
+        let k2 = reg.kernel(&spec);
+        assert!(Arc::ptr_eq(&k1, &k2), "second lookup must be the cached kernel");
+        assert_eq!(reg.stats(), CacheStats { hits: 1, compiles: 1 });
+        let other = MethodSpec::parse("pwl:step=1/32").unwrap();
+        let _ = reg.kernel(&other);
+        assert_eq!(reg.stats(), CacheStats { hits: 1, compiles: 2 });
+        assert_eq!(reg.len(), 2);
+        reg.clear();
+        assert!(reg.is_empty());
+        // Counters survive clear (lifetime totals), kernels recompile.
+        let _ = reg.kernel(&spec);
+        assert_eq!(reg.stats(), CacheStats { hits: 1, compiles: 3 });
+    }
+
+    #[test]
+    fn cached_kernel_is_bit_exact_against_fresh_build() {
+        let reg = Registry::new();
+        let spec = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+        let cached = reg.kernel(&spec);
+        let fresh = spec.build();
+        for raw in (spec.io.input.min_raw()..=spec.io.input.max_raw()).step_by(97) {
+            assert_eq!(
+                cached.eval_raw(raw),
+                fresh.eval_fx(Fx::from_raw(raw, spec.io.input), spec.io.output).raw(),
+                "raw {raw}"
+            );
+        }
+    }
+
+    #[test]
+    fn built_methods_match_legacy_constructors() {
+        // The spec layer is a naming change, not a numerics change: the
+        // Table I specs build the exact objects table1() constructors do.
+        let io = IoSpec::table1();
+        let pairs: Vec<(Box<dyn TanhApprox>, Box<dyn TanhApprox>)> = vec![
+            (MethodSpec::table1(MethodId::Pwl).build(), Box::new(pwl::Pwl::table1())),
+            (
+                MethodSpec::table1(MethodId::TaylorQuadratic).build(),
+                Box::new(taylor::Taylor::table1_quadratic()),
+            ),
+            (
+                MethodSpec::table1(MethodId::Velocity).build(),
+                Box::new(velocity::Velocity::table1()),
+            ),
+            (MethodSpec::table1(MethodId::Lambert).build(), Box::new(lambert::Lambert::table1())),
+        ];
+        for (a, b) in pairs {
+            assert_eq!(a.describe(), b.describe());
+            for raw in [0, 1, 777, 4096, 20000] {
+                let x = Fx::from_raw(raw, io.input);
+                assert_eq!(a.eval_fx(x, io.output).raw(), b.eval_fx(x, io.output).raw());
+            }
+        }
+    }
+}

@@ -28,13 +28,12 @@
 //! completion counts in [`ScenarioOutcome`] are deterministic even
 //! when the flood scenarios saturate the queues.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::approx::MethodId;
-use crate::coordinator::{
-    Coordinator, ExecBackend, GoldenBackend, MetricsSnapshot, RequestResult,
-};
+use crate::approx::{CompiledKernel, MethodSpec};
+use crate::coordinator::{kernel_eval_f32, Coordinator, MetricsSnapshot, RequestResult};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 
@@ -44,8 +43,8 @@ pub const SCENARIO_NAMES: [&str; 5] = ["steady", "bursty", "zipf", "flood", "max
 /// One scheduled request of a workload trace.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceRequest {
-    /// Which approximation to exercise.
-    pub method: MethodId,
+    /// Which design point to exercise.
+    pub spec: MethodSpec,
     /// Input activations.
     pub values: Vec<f32>,
     /// Open-loop send offset from trace start, in microseconds
@@ -55,13 +54,15 @@ pub struct TraceRequest {
 
 /// A fully expanded, replayable workload: the output of
 /// [`build_trace`], deterministic in `(name, seed, batch_elements,
-/// scale)`.
+/// scale, specs)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Trace {
     /// Scenario name.
     pub name: String,
     /// PRNG seed the trace was expanded from.
     pub seed: u64,
+    /// The design points this trace spreads load over, in mix order.
+    pub specs: Vec<MethodSpec>,
     /// Requests in schedule order.
     pub requests: Vec<TraceRequest>,
 }
@@ -71,34 +72,44 @@ impl Trace {
     pub fn total_elements(&self) -> u64 {
         self.requests.iter().map(|r| r.values.len() as u64).sum()
     }
+
+    /// Spec strings for the report row, in mix order.
+    pub fn spec_strings(&self) -> Vec<String> {
+        self.specs.iter().map(|s| s.to_string()).collect()
+    }
 }
 
 fn gen_values(g: &mut Prng, len: usize) -> Vec<f32> {
     (0..len.max(1)).map(|_| g.f64_in(-6.0, 6.0) as f32).collect()
 }
 
-/// Zipf-style popularity weights for the six methods (≈ 1/k^1.1),
-/// fixed as literals: `powf` is libm-dependent and not bit-identical
-/// across platforms, which would break the byte-identical-workload
-/// contract traces promise.
+/// Zipf-style popularity weights (≈ 1/k^1.1) for the spec mix, fixed
+/// as literals: `powf` is libm-dependent and not bit-identical across
+/// platforms, which would break the byte-identical-workload contract
+/// traces promise. Spec sets longer than the table reuse the tail
+/// weight.
 const ZIPF_WEIGHTS: [f64; 6] = [1.0, 0.4665, 0.2987, 0.2176, 0.1722, 0.1431];
 
-/// Zipf-skewed index in `[0, 6)` by CDF inversion over
+/// Zipf-skewed index in `[0, n)` by CDF inversion over
 /// [`ZIPF_WEIGHTS`]. Pure IEEE add/mul/compare on literal constants —
-/// deterministic on every platform.
-fn zipf_index(g: &mut Prng) -> usize {
-    let total: f64 = ZIPF_WEIGHTS.iter().sum();
+/// deterministic on every platform. For the six-spec Table I mix this
+/// reproduces the pre-spec traces draw-for-draw.
+fn zipf_index(g: &mut Prng, n: usize) -> usize {
+    let w = |i: usize| ZIPF_WEIGHTS[i.min(ZIPF_WEIGHTS.len() - 1)];
+    let total: f64 = (0..n).map(w).sum();
     let mut u = g.f64() * total;
-    for (i, w) in ZIPF_WEIGHTS.iter().enumerate() {
-        if u < *w {
+    for i in 0..n {
+        if u < w(i) {
             return i;
         }
-        u -= w;
+        u -= w(i);
     }
-    ZIPF_WEIGHTS.len() - 1
+    n - 1
 }
 
-/// Expands a scenario into a replayable trace.
+/// Expands a scenario into a replayable trace over `specs` (the design
+/// points the target coordinator serves — the Table I suite for the
+/// classic harness, or any `--spec` list).
 ///
 /// `scale` multiplies the scenario's base request count (1.0 = full
 /// profile, tier-1 smoke uses 0.1); every count is clamped to ≥ 1.
@@ -109,23 +120,26 @@ pub fn build_trace(
     seed: u64,
     batch_elements: usize,
     scale: f64,
+    specs: &[MethodSpec],
 ) -> Result<Trace, String> {
     if batch_elements == 0 {
         return Err("batch_elements must be > 0".into());
     }
+    if specs.is_empty() {
+        return Err("trace needs at least one spec".into());
+    }
     let mut g = Prng::new(seed);
     let n = |base: usize| ((base as f64 * scale) as usize).max(1);
-    let methods = MethodId::all();
     let mut reqs = Vec::new();
     match name {
         "steady" => {
             // Constant-rate open loop: one fixed-size request every
-            // 30 µs, methods round-robin.
+            // 30 µs, specs round-robin.
             let count = n(600);
             for i in 0..count {
                 let len = 64.min(batch_elements);
                 reqs.push(TraceRequest {
-                    method: methods[i % methods.len()],
+                    spec: specs[i % specs.len()],
                     values: gen_values(&mut g, len),
                     at_us: i as u64 * 30,
                 });
@@ -140,7 +154,7 @@ pub fn build_trace(
                 for _ in 0..16 {
                     let len = (16 + g.usize_below(113)).min(batch_elements);
                     reqs.push(TraceRequest {
-                        method: *g.choose(&methods),
+                        spec: *g.choose(specs),
                         values: gen_values(&mut g, len),
                         at_us: at,
                     });
@@ -149,17 +163,17 @@ pub fn build_trace(
             }
         }
         "zipf" => {
-            // Skewed method popularity (≈ Zipf s=1.1 over the Table I
+            // Skewed spec popularity (≈ Zipf s=1.1 over the mix
             // order), log-uniform sizes, heavy-tailed inter-arrivals
             // (mostly short gaps, occasional long ones; mean ≈ 29 µs —
             // integer-deterministic, no libm `ln`).
             let count = n(800);
             let mut at = 0u64;
             for _ in 0..count {
-                let method = methods[zipf_index(&mut g)];
+                let spec = specs[zipf_index(&mut g, specs.len())];
                 let len = (1usize << g.usize_below(9)).min(batch_elements);
                 at += if g.bool(0.9) { g.u64_below(20) } else { 100 + g.u64_below(200) };
-                reqs.push(TraceRequest { method, values: gen_values(&mut g, len), at_us: at });
+                reqs.push(TraceRequest { spec, values: gen_values(&mut g, len), at_us: at });
             }
         }
         "flood" => {
@@ -169,7 +183,7 @@ pub fn build_trace(
             for i in 0..count {
                 let len = (1 + g.usize_below(4)).min(batch_elements);
                 reqs.push(TraceRequest {
-                    method: methods[i % methods.len()],
+                    spec: specs[i % specs.len()],
                     values: gen_values(&mut g, len),
                     at_us: 0,
                 });
@@ -181,7 +195,7 @@ pub fn build_trace(
             let count = n(48);
             for i in 0..count {
                 reqs.push(TraceRequest {
-                    method: methods[i % methods.len()],
+                    spec: specs[i % specs.len()],
                     values: gen_values(&mut g, batch_elements),
                     at_us: 0,
                 });
@@ -194,25 +208,40 @@ pub fn build_trace(
             ))
         }
     }
-    Ok(Trace { name: name.to_string(), seed, requests: reqs })
+    Ok(Trace { name: name.to_string(), seed, specs: specs.to_vec(), requests: reqs })
 }
 
-/// Recomputes expected outputs through the compiled golden kernels,
-/// independent of the serving path (same compile, separate instance —
-/// a bug in the coordinator's slicing or routing cannot cancel out).
+/// Recomputes expected outputs through **freshly compiled** golden
+/// kernels, independent of the serving path: the verifier deliberately
+/// bypasses the shared [`crate::approx::Registry`] cache (which the
+/// serving backend uses), so a corrupted cache entry — or a bug in the
+/// coordinator's slicing or routing — cannot cancel out. Conversion
+/// semantics are shared with the backend via
+/// [`crate::coordinator::kernel_eval_f32`].
 pub struct GoldenVerifier {
-    backend: GoldenBackend,
+    kernels: HashMap<MethodSpec, CompiledKernel>,
 }
 
 impl GoldenVerifier {
-    /// Compiles all six golden kernels.
+    /// Fresh-compiles the six Table I kernels.
     pub fn new() -> GoldenVerifier {
-        GoldenVerifier { backend: GoldenBackend::table1(1) }
+        GoldenVerifier::for_specs(&MethodSpec::table1_all())
+    }
+
+    /// Fresh-compiles a kernel per spec (cache-bypassing by design).
+    pub fn for_specs(specs: &[MethodSpec]) -> GoldenVerifier {
+        GoldenVerifier {
+            kernels: specs.iter().map(|s| (*s, s.build().compile(s.io))).collect(),
+        }
     }
 
     /// Expected outputs for a request.
-    pub fn expected(&self, method: MethodId, values: &[f32]) -> Result<Vec<f32>, String> {
-        self.backend.execute(method, values)
+    pub fn expected(&self, spec: &MethodSpec, values: &[f32]) -> Result<Vec<f32>, String> {
+        let kernel = self
+            .kernels
+            .get(spec)
+            .ok_or_else(|| format!("verifier has no kernel for spec '{spec}'"))?;
+        Ok(kernel_eval_f32(kernel, values))
     }
 }
 
@@ -264,6 +293,10 @@ pub struct ScenarioOutcome {
     pub name: String,
     /// Trace seed.
     pub seed: u64,
+    /// Spec strings of the trace's design-point mix (report rows carry
+    /// them so runs are comparable — and reproducible via `--spec` —
+    /// across PRs).
+    pub specs: Vec<String>,
     /// Requests accepted by the coordinator.
     pub submitted: u64,
     /// Successful replies.
@@ -293,6 +326,7 @@ impl ScenarioOutcome {
             ("name", Json::s(format!("serve/{}", self.name))),
             ("scenario", Json::s(self.name.clone())),
             ("seed", Json::i(self.seed as i64)),
+            ("specs", Json::arr(self.specs.iter().map(|s| Json::s(s.as_str())).collect())),
             ("backend", Json::s(backend)),
             ("shards", Json::i(shards as i64)),
             ("batch_elements", Json::i(batch_elements as i64)),
@@ -320,6 +354,7 @@ impl ScenarioOutcome {
         Json::obj(vec![
             ("scenario", Json::s(self.name.clone())),
             ("seed", Json::i(self.seed as i64)),
+            ("specs", Json::arr(self.specs.iter().map(|s| Json::s(s.as_str())).collect())),
             ("submitted", Json::i(self.submitted as i64)),
             ("requests", Json::i(self.completed as i64)),
             ("failed", Json::i(self.failed as i64)),
@@ -330,10 +365,11 @@ impl ScenarioOutcome {
 }
 
 /// Keys every `BENCH_serve.json` row must carry.
-pub const SERVE_ROW_KEYS: [&str; 20] = [
+pub const SERVE_ROW_KEYS: [&str; 21] = [
     "name",
     "scenario",
     "seed",
+    "specs",
     "backend",
     "shards",
     "batch_elements",
@@ -397,28 +433,28 @@ pub fn run_trace(
 ) -> Result<ScenarioOutcome, String> {
     let verifier = match opts.verify {
         Verify::Off => None,
-        _ => Some(GoldenVerifier::new()),
+        _ => Some(GoldenVerifier::for_specs(&trace.specs)),
     };
     let need_values = verifier.is_some();
     let verify = opts.verify;
-    type InFlight = (MethodId, Vec<f32>, mpsc::Receiver<RequestResult>);
+    type InFlight = (MethodSpec, Vec<f32>, mpsc::Receiver<RequestResult>);
     let (tx, rx) = mpsc::sync_channel::<InFlight>(opts.max_inflight.max(1));
 
     let collector = std::thread::Builder::new()
         .name("tanh-scenario-collect".into())
         .spawn(move || -> Result<(u64, u64, u64, u64), String> {
             let (mut completed, mut failed, mut elements, mut verified) = (0u64, 0u64, 0u64, 0u64);
-            while let Ok((method, values, reply)) = rx.recv() {
+            while let Ok((spec, values, reply)) = rx.recv() {
                 let result = reply.recv().map_err(|_| "reply channel dropped".to_string())?;
                 match result.outcome {
                     Ok(out) => {
                         completed += 1;
                         elements += out.len() as u64;
                         if let Some(v) = &verifier {
-                            let want = v.expected(method, &values)?;
+                            let want = v.expected(&spec, &values)?;
                             if out.len() != want.len() {
                                 return Err(format!(
-                                    "{method:?}: served {} outputs for {} inputs",
+                                    "{spec}: served {} outputs for {} inputs",
                                     out.len(),
                                     want.len()
                                 ));
@@ -433,7 +469,7 @@ pub fn run_trace(
                                 };
                                 if !ok {
                                     return Err(format!(
-                                        "verification failed: {method:?} output[{i}] \
+                                        "verification failed: {spec} output[{i}] \
                                          served {got} vs golden kernel {exp}"
                                     ));
                                 }
@@ -464,7 +500,7 @@ pub fn run_trace(
         // against a wedged coordinator.
         let mut receiver = None;
         for _attempt in 0..500_000u32 {
-            match coord.submit(tr.method, tr.values.clone()) {
+            match coord.submit_spec(&tr.spec, tr.values.clone()) {
                 Ok(r) => {
                     receiver = Some(r);
                     break;
@@ -491,7 +527,7 @@ pub fn run_trace(
         submitted += 1;
         // Skip the input copy when nothing will verify it.
         let values = if need_values { tr.values.clone() } else { Vec::new() };
-        if tx.send((tr.method, values, reply)).is_err() {
+        if tx.send((tr.spec, values, reply)).is_err() {
             // The collector exited early — almost always a verification
             // failure; surface its error instead of a generic one.
             drop(tx);
@@ -509,6 +545,7 @@ pub fn run_trace(
     Ok(ScenarioOutcome {
         name: trace.name.clone(),
         seed: trace.seed,
+        specs: trace.spec_strings(),
         submitted,
         completed,
         failed,
@@ -523,15 +560,20 @@ pub fn run_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::approx::MethodId;
+
+    fn table1() -> Vec<MethodSpec> {
+        MethodSpec::table1_all()
+    }
 
     #[test]
     fn traces_are_seed_deterministic() {
         for name in SCENARIO_NAMES {
-            let a = build_trace(name, 7, 256, 0.05).unwrap();
-            let b = build_trace(name, 7, 256, 0.05).unwrap();
+            let a = build_trace(name, 7, 256, 0.05, &table1()).unwrap();
+            let b = build_trace(name, 7, 256, 0.05, &table1()).unwrap();
             assert_eq!(a, b, "{name}");
             assert!(!a.requests.is_empty(), "{name}");
-            let c = build_trace(name, 8, 256, 0.05).unwrap();
+            let c = build_trace(name, 8, 256, 0.05, &table1()).unwrap();
             assert_ne!(a.requests, c.requests, "{name}: seed must matter");
         }
     }
@@ -539,7 +581,7 @@ mod tests {
     #[test]
     fn traces_respect_batch_capacity() {
         for name in SCENARIO_NAMES {
-            let t = build_trace(name, 3, 128, 0.1).unwrap();
+            let t = build_trace(name, 3, 128, 0.1, &table1()).unwrap();
             for r in &t.requests {
                 assert!(!r.values.is_empty(), "{name}");
                 assert!(r.values.len() <= 128, "{name}: {}", r.values.len());
@@ -552,23 +594,25 @@ mod tests {
 
     #[test]
     fn maxbatch_requests_fill_the_batch_exactly() {
-        let t = build_trace("maxbatch", 1, 64, 0.1).unwrap();
+        let t = build_trace("maxbatch", 1, 64, 0.1, &table1()).unwrap();
         for r in &t.requests {
             assert_eq!(r.values.len(), 64);
         }
     }
 
     #[test]
-    fn zipf_skews_toward_first_methods() {
-        let t = build_trace("zipf", 42, 1024, 1.0).unwrap();
-        let count = |m: MethodId| t.requests.iter().filter(|r| r.method == m).count();
+    fn zipf_skews_toward_first_specs() {
+        let t = build_trace("zipf", 42, 1024, 1.0, &table1()).unwrap();
+        let count = |m: MethodId| {
+            t.requests.iter().filter(|r| r.spec.method_id() == m).count()
+        };
         let first = count(MethodId::Pwl);
         let last = count(MethodId::Lambert);
         assert!(
             first > last,
             "Zipf mix should favor rank 1 over rank 6: {first} vs {last}"
         );
-        // …but every method still appears (coverage for the smoke).
+        // …but every spec still appears (coverage for the smoke).
         for m in MethodId::all() {
             assert!(count(m) > 0, "{m:?} absent from zipf mix");
         }
@@ -576,7 +620,7 @@ mod tests {
 
     #[test]
     fn steady_schedule_is_monotone_open_loop() {
-        let t = build_trace("steady", 5, 1024, 0.1).unwrap();
+        let t = build_trace("steady", 5, 1024, 0.1, &table1()).unwrap();
         let mut prev = 0;
         for (i, r) in t.requests.iter().enumerate() {
             assert!(r.at_us >= prev, "at_us must be non-decreasing at {i}");
@@ -587,9 +631,31 @@ mod tests {
 
     #[test]
     fn unknown_scenario_is_an_error() {
-        let err = build_trace("nope", 0, 64, 1.0).unwrap_err();
+        let err = build_trace("nope", 0, 64, 1.0, &table1()).unwrap_err();
         assert!(err.contains("unknown scenario"));
         assert!(err.contains("steady"), "error should list valid names: {err}");
+        // Empty spec sets are rejected too.
+        assert!(build_trace("steady", 0, 64, 1.0, &[]).is_err());
+    }
+
+    #[test]
+    fn single_spec_traces_route_all_load_to_that_spec() {
+        let spec = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+        for name in SCENARIO_NAMES {
+            let t = build_trace(name, 9, 64, 0.05, &[spec]).unwrap();
+            assert!(t.requests.iter().all(|r| r.spec == spec), "{name}");
+            assert_eq!(t.spec_strings(), vec![spec.to_string()], "{name}");
+        }
+    }
+
+    #[test]
+    fn verifier_covers_exactly_its_specs() {
+        let spec = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+        let v = GoldenVerifier::for_specs(&[spec]);
+        let got = v.expected(&spec, &[0.5, -0.5]).unwrap();
+        assert_eq!(got[0], -got[1]);
+        let err = v.expected(&MethodSpec::table1(MethodId::Pwl), &[0.5]).unwrap_err();
+        assert!(err.contains("no kernel"), "{err}");
     }
 
     #[test]
@@ -597,6 +663,7 @@ mod tests {
         let outcome = ScenarioOutcome {
             name: "steady".into(),
             seed: 42,
+            specs: vec!["pwl:step=1/64:in=S3.12:out=S.15".into()],
             submitted: 10,
             completed: 10,
             failed: 0,
@@ -632,6 +699,7 @@ mod tests {
         let outcome = ScenarioOutcome {
             name: "flood".into(),
             seed: 1,
+            specs: vec!["table1-mix".into()],
             submitted: 3,
             completed: 3,
             failed: 0,

@@ -124,14 +124,14 @@ impl PendingBatch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::approx::MethodId;
+    use crate::approx::{MethodId, MethodSpec};
     use std::sync::mpsc;
 
     fn req(n: usize) -> Request {
         let (tx, _rx) = mpsc::channel();
         Request {
             id: 0,
-            method: MethodId::Pwl,
+            spec: MethodSpec::table1(MethodId::Pwl),
             values: vec![0.5; n],
             enqueued_at: Instant::now(),
             reply: tx,

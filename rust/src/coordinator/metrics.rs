@@ -65,6 +65,17 @@ pub struct MetricsSnapshot {
     pub packed_elements: u64,
     /// Total element capacity of executed batches (batches × capacity).
     pub capacity_elements: u64,
+    /// Compiled-kernel cache hits — a process-global **gauge** (from
+    /// [`crate::approx::Registry::global`]), not a per-shard counter:
+    /// filled by `Coordinator::metrics`, zero in per-shard snapshots,
+    /// and merged by max (never summed) so folding snapshots that both
+    /// carry the global value cannot double-count it.
+    pub kernel_cache_hits: u64,
+    /// Kernel compilations performed (process-global gauge, max-merged
+    /// like `kernel_cache_hits`; the shared-cache win is
+    /// `kernel_compiles == distinct specs`, independent of shard
+    /// count).
+    pub kernel_compiles: u64,
 }
 
 impl MetricsSnapshot {
@@ -130,6 +141,11 @@ impl MetricsSnapshot {
         self.padded_elements += other.padded_elements;
         self.packed_elements += other.packed_elements;
         self.capacity_elements += other.capacity_elements;
+        // Process-global gauges, not additive counters: two snapshots
+        // carrying the same global cache state must merge to that
+        // state, not double it.
+        self.kernel_cache_hits = self.kernel_cache_hits.max(other.kernel_cache_hits);
+        self.kernel_compiles = self.kernel_compiles.max(other.kernel_compiles);
         self
     }
 }
@@ -186,6 +202,10 @@ impl ServerMetrics {
             padded_elements: self.padded_elements.load(Ordering::Relaxed),
             packed_elements: self.packed_elements.load(Ordering::Relaxed),
             capacity_elements: self.capacity_elements.load(Ordering::Relaxed),
+            // Kernel-cache counters are process-global, not per-shard:
+            // `Coordinator::metrics` fills them from Registry::global.
+            kernel_cache_hits: 0,
+            kernel_compiles: 0,
         }
     }
 }
@@ -282,6 +302,17 @@ mod tests {
         assert_eq!(merged.latency, LatencyHistogram::from_samples(&[10, 200, 300]));
         // Merge with an empty snapshot is the identity.
         assert_eq!(merged.merge(&MetricsSnapshot::default()), merged);
+    }
+
+    #[test]
+    fn kernel_cache_gauges_merge_by_max_not_sum() {
+        // Two coordinator-level snapshots carry the same process-global
+        // cache state; merging them must not double-count it.
+        let mut a = MetricsSnapshot { kernel_cache_hits: 10, kernel_compiles: 6, ..Default::default() };
+        let b = MetricsSnapshot { kernel_cache_hits: 12, kernel_compiles: 6, ..Default::default() };
+        a = a.merge(&b);
+        assert_eq!(a.kernel_cache_hits, 12);
+        assert_eq!(a.kernel_compiles, 6);
     }
 
     #[test]

@@ -10,8 +10,16 @@
 //! bounded per-shard queues.
 //!
 //! Design notes:
+//! - Serving is keyed by [`crate::approx::MethodSpec`]: the coordinator
+//!   runs shard pools for every spec in `CoordinatorConfig::specs`
+//!   (default: the six Table I rows), so arbitrary (method × parameter
+//!   × I/O-format) design points are servable, addressed by spec string
+//!   over the net front-end. Backends resolve compiled kernels through
+//!   the shared [`crate::approx::Registry`] cache — compiles scale with
+//!   distinct specs, never with shard count (observable via
+//!   `MetricsSnapshot::{kernel_cache_hits, kernel_compiles}`).
 //! - std-thread + mpsc architecture (tokio is not in the offline crate
-//!   set); each method runs `CoordinatorConfig::shards` batcher/worker
+//!   set); each spec runs `CoordinatorConfig::shards` batcher/worker
 //!   pairs, fed round-robin or least-loaded ([`RoutePolicy`]), so the
 //!   lock surface is per-shard-queue, not global, and a slow batch on
 //!   one shard no longer stalls its whole method.
@@ -49,4 +57,4 @@ pub use metrics::{MetricsSnapshot, ServerMetrics};
 pub use request::{Request, RequestResult};
 pub use server::{Coordinator, CoordinatorConfig, ExecBackend, RoutePolicy};
 pub use net::{NetClient, NetServer};
-pub use worker::{GoldenBackend, GraphBackend};
+pub use worker::{kernel_eval_f32, GoldenBackend, GraphBackend};

@@ -7,16 +7,22 @@
 //! ```text
 //! → {"method": "pwl", "values": [0.5, -1.25]}
 //! ← {"ok": true, "values": [0.4621, -0.8482], "latency_us": 412}
+//! → {"spec": "pwl:step=1/32:in=s2.13:out=s.15", "values": [0.5]}
+//! ← {"ok": true, "values": [0.4621], "latency_us": 80}
 //! → {"cmd": "metrics"}
 //! ← {"ok": true, "requests": 2, "batches": 1, ...}
 //! ```
+//!
+//! A `"spec"` key addresses any served design point by its spec string
+//! (must be in the coordinator's served set); `"method"` remains the
+//! short form for the method's first served spec.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::approx::MethodId;
+use crate::approx::{MethodId, MethodSpec};
 use crate::util::json::{self, Json};
 
 use super::server::Coordinator;
@@ -126,21 +132,40 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("batch_efficiency", Json::n(m.batch_efficiency())),
                     ("batch_fill_rate", Json::n(m.fill_rate())),
                     ("padded_elements", Json::i(m.padded_elements as i64)),
+                    ("kernel_cache_hits", Json::i(m.kernel_cache_hits as i64)),
+                    ("kernel_compiles", Json::i(m.kernel_compiles as i64)),
+                    (
+                        "specs",
+                        Json::arr(coord.specs().iter().map(|s| Json::s(s.to_string())).collect()),
+                    ),
                 ])
             }
             "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
             other => err(format!("unknown cmd '{other}'")),
         };
     }
-    let Some(method) = doc.get("method").and_then(|m| m.str()).and_then(MethodId::parse) else {
-        return err("missing or unknown 'method'".into());
-    };
     let Some(values) = doc.get("values").and_then(|v| v.as_arr()) else {
         return err("missing 'values' array".into());
     };
     let values: Vec<f32> = values.iter().filter_map(|v| v.num()).map(|v| v as f32).collect();
     let t0 = std::time::Instant::now();
-    match coord.evaluate(method, values) {
+    // "spec" addresses an exact design point; "method" is the short
+    // form for that method's first served spec. Both use the unified
+    // parse errors (accepted names / grammar listed on failure).
+    let result = if let Some(spec_str) = doc.get("spec").and_then(|s| s.str()) {
+        match MethodSpec::parse(spec_str) {
+            Ok(spec) => coord.evaluate_spec(&spec, values),
+            Err(e) => Err(e),
+        }
+    } else if let Some(name) = doc.get("method").and_then(|m| m.str()) {
+        match MethodId::parse_or_err(name) {
+            Ok(method) => coord.evaluate(method, values),
+            Err(e) => Err(e),
+        }
+    } else {
+        Err("missing 'method' or 'spec'".to_string())
+    };
+    match result {
         Ok(out) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("values", Json::arr(out.into_iter().map(|v| Json::n(v as f64)).collect())),
@@ -241,6 +266,39 @@ mod tests {
         assert!(m.get("submitted").unwrap().num().unwrap() >= 1.0);
         assert!(m.get("p50_us").is_some() && m.get("p99_us").is_some());
         assert!(m.get("shards_per_method").unwrap().num().unwrap() >= 2.0);
+        // The shared-cache observables and the served spec list are on
+        // the metrics endpoint.
+        assert!(m.get("kernel_compiles").unwrap().num().unwrap() >= 6.0);
+        assert!(m.get("kernel_cache_hits").is_some());
+        assert_eq!(m.get("specs").unwrap().as_arr().unwrap().len(), 6);
+        server.stop();
+    }
+
+    #[test]
+    fn spec_addressed_requests_roundtrip() {
+        let (server, _coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let req = Json::obj(vec![
+            ("spec", Json::s("pwl:step=1/64:in=S3.12:out=S.15")),
+            ("values", Json::arr(vec![Json::n(0.5)])),
+        ]);
+        let resp = client.call(&req).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        // A valid but unserved spec fails with the served list.
+        let req = Json::obj(vec![
+            ("spec", Json::s("pwl:step=1/32")),
+            ("values", Json::arr(vec![Json::n(0.5)])),
+        ]);
+        let resp = client.call(&req).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").unwrap().str().unwrap().contains("not served"));
+        // A malformed spec fails with a grammar-ish error.
+        let req = Json::obj(vec![
+            ("spec", Json::s("pwl:step=1/3")),
+            ("values", Json::arr(vec![Json::n(0.5)])),
+        ]);
+        let resp = client.call(&req).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
         server.stop();
     }
 

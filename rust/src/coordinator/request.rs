@@ -3,16 +3,16 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::approx::MethodId;
+use crate::approx::MethodSpec;
 
 /// A tanh-activation request: a vector of f32 inputs to be evaluated
-/// with a given approximation method.
+/// with a given approximation configuration.
 #[derive(Debug)]
 pub struct Request {
     /// Monotonic id assigned by the coordinator.
     pub id: u64,
-    /// Which approximation to use.
-    pub method: MethodId,
+    /// Which design point to evaluate with.
+    pub spec: MethodSpec,
     /// Input activations.
     pub values: Vec<f32>,
     /// Enqueue timestamp (for latency metrics).

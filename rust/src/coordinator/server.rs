@@ -1,13 +1,21 @@
-//! The coordinator: router + per-method worker-shard pools.
+//! The coordinator: router + per-spec worker-shard pools.
 //!
-//! Each method runs a configurable pool of batcher/worker shards
-//! (`CoordinatorConfig::shards`). The router steers a request to one
-//! shard of its method — round-robin or least-loaded
-//! ([`RoutePolicy`]) — and every shard owns its queue, its
-//! [`PendingBatch`], and its own [`ServerMetrics`], so the submit hot
-//! path touches no cross-shard state. `metrics()` folds the per-shard
-//! snapshots into one exact merged view; `shard_metrics()` exposes the
-//! unmerged per-shard counters for imbalance diagnostics.
+//! Serving is keyed by [`MethodSpec`], not by method: the coordinator
+//! runs `CoordinatorConfig::shards` batcher/worker pairs for **every
+//! spec in `CoordinatorConfig::specs`** (default: the six Table I
+//! rows), so one deployment can serve any mix of (method × parameter ×
+//! I/O-format) design points. The router steers a request to one shard
+//! of its spec — round-robin or least-loaded ([`RoutePolicy`]) — and
+//! every shard owns its queue, its [`PendingBatch`], and its own
+//! [`ServerMetrics`], so the submit hot path touches no cross-shard
+//! state. `metrics()` folds the per-shard snapshots into one exact
+//! merged view (plus the global kernel-cache counters);
+//! `shard_metrics()` exposes the unmerged per-shard counters for
+//! imbalance diagnostics.
+//!
+//! Shards never compile: backends resolve kernels through the shared
+//! [`Registry`](crate::approx::Registry), so a spec is compiled once
+//! per process no matter how many shards serve it.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -15,18 +23,18 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::approx::MethodId;
+use crate::approx::{MethodId, MethodSpec, Registry};
 
 use super::batcher::{BatcherConfig, PendingBatch};
 use super::metrics::{MetricsSnapshot, ServerMetrics};
 use super::request::{Request, RequestResult};
 
-/// Something that can evaluate a fixed-size flat batch for a method.
+/// Something that can evaluate a fixed-size flat batch for a spec.
 /// Implemented by the PJRT [`super::GraphBackend`] and the golden-model
 /// fallback ([`super::worker::GoldenBackend`]).
 pub trait ExecBackend: Send + Sync + 'static {
     /// Evaluates a full batch (length == `batch_elements`).
-    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String>;
+    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String>;
     /// The fixed batch size the backend was compiled for.
     fn batch_elements(&self) -> usize;
 }
@@ -57,10 +65,14 @@ impl RoutePolicy {
 pub struct CoordinatorConfig {
     /// Batching policy (batch size is overridden by the backend's).
     pub batcher: BatcherConfig,
-    /// Worker shards per method (clamped to ≥ 1).
+    /// Worker shards per spec (clamped to ≥ 1).
     pub shards: usize,
     /// Shard selection policy.
     pub route: RoutePolicy,
+    /// The design points this coordinator serves, in routing order.
+    /// Duplicates are dropped; an empty list falls back to the six
+    /// Table I specs.
+    pub specs: Vec<MethodSpec>,
 }
 
 impl Default for CoordinatorConfig {
@@ -69,6 +81,7 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             shards: 2,
             route: RoutePolicy::RoundRobin,
+            specs: MethodSpec::table1_all(),
         }
     }
 }
@@ -81,15 +94,17 @@ struct Shard {
     metrics: Arc<ServerMetrics>,
 }
 
-/// A method's shard pool plus its round-robin cursor.
-struct MethodShards {
+/// A spec's shard pool plus its round-robin cursor.
+struct SpecShards {
     shards: Vec<Shard>,
     rr: AtomicUsize,
 }
 
 /// The activation-accelerator service.
 pub struct Coordinator {
-    methods: HashMap<MethodId, MethodShards>,
+    /// Served specs, in config order (deduplicated).
+    specs: Vec<MethodSpec>,
+    pools: HashMap<MethodSpec, SpecShards>,
     next_id: AtomicU64,
     cfg: BatcherConfig,
     route: RoutePolicy,
@@ -97,22 +112,31 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Starts `cfg.shards` batcher/worker threads per method over the
-    /// backend.
+    /// Starts `cfg.shards` batcher/worker threads per served spec over
+    /// the backend.
     pub fn start(backend: Arc<dyn ExecBackend>, cfg: CoordinatorConfig) -> Coordinator {
         let mut batcher_cfg = cfg.batcher;
         batcher_cfg.batch_elements = backend.batch_elements();
         let shards = cfg.shards.max(1);
-        let mut methods = HashMap::new();
+        let mut specs: Vec<MethodSpec> = Vec::with_capacity(cfg.specs.len());
+        for s in &cfg.specs {
+            if !specs.contains(s) {
+                specs.push(*s);
+            }
+        }
+        if specs.is_empty() {
+            specs = MethodSpec::table1_all();
+        }
+        let mut pools = HashMap::new();
         let mut workers = Vec::new();
-        for method in MethodId::all() {
+        for &spec in &specs {
             let mut pool = Vec::with_capacity(shards);
             for shard_idx in 0..shards {
                 let (tx, rx) = mpsc::channel::<Request>();
                 let depth = Arc::new(AtomicUsize::new(0));
                 let metrics = Arc::new(ServerMetrics::default());
                 let handle = spawn_worker(
-                    method,
+                    spec,
                     shard_idx,
                     rx,
                     depth.clone(),
@@ -123,10 +147,11 @@ impl Coordinator {
                 pool.push(Shard { tx, depth, metrics });
                 workers.push(handle);
             }
-            methods.insert(method, MethodShards { shards: pool, rr: AtomicUsize::new(0) });
+            pools.insert(spec, SpecShards { shards: pool, rr: AtomicUsize::new(0) });
         }
         Coordinator {
-            methods,
+            specs,
+            pools,
             next_id: AtomicU64::new(0),
             cfg: batcher_cfg,
             route: cfg.route,
@@ -134,11 +159,12 @@ impl Coordinator {
         }
     }
 
-    /// Submits a request; the reply arrives on the returned channel.
-    /// Fails fast under backpressure or oversized input.
-    pub fn submit(
+    /// Submits a request for an explicit design point; the reply
+    /// arrives on the returned channel. Fails fast under backpressure,
+    /// oversized input, or a spec this coordinator does not serve.
+    pub fn submit_spec(
         &self,
-        method: MethodId,
+        spec: &MethodSpec,
         values: Vec<f32>,
     ) -> Result<mpsc::Receiver<RequestResult>, String> {
         if values.is_empty() {
@@ -151,7 +177,10 @@ impl Coordinator {
                 self.cfg.batch_elements
             ));
         }
-        let pool = self.methods.get(&method).ok_or("unknown method")?;
+        let pool = self.pools.get(spec).ok_or_else(|| {
+            let served: Vec<String> = self.specs.iter().map(|s| s.to_string()).collect();
+            format!("spec '{spec}' is not served (serving: {})", served.join(", "))
+        })?;
         let shard = match self.route {
             RoutePolicy::RoundRobin => {
                 let i = pool.rr.fetch_add(1, Ordering::Relaxed) % pool.shards.len();
@@ -161,7 +190,7 @@ impl Coordinator {
                 .shards
                 .iter()
                 .min_by_key(|s| s.depth.load(Ordering::Relaxed))
-                .expect("method pool is never empty"),
+                .expect("spec pool is never empty"),
         };
         let depth = shard.depth.load(Ordering::Relaxed);
         if depth + values.len() > self.cfg.max_queue {
@@ -172,7 +201,7 @@ impl Coordinator {
         let len = values.len();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            method,
+            spec: *spec,
             values,
             enqueued_at: Instant::now(),
             reply: reply_tx,
@@ -190,49 +219,83 @@ impl Coordinator {
         }
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Method-addressed submit: routes to the first served spec of
+    /// `method` (for a default coordinator, its Table I row). The
+    /// spec-addressed [`Coordinator::submit_spec`] is the general form.
+    pub fn submit(
+        &self,
+        method: MethodId,
+        values: Vec<f32>,
+    ) -> Result<mpsc::Receiver<RequestResult>, String> {
+        let spec = *self
+            .specs
+            .iter()
+            .find(|s| s.method_id() == method)
+            .ok_or_else(|| format!("no served spec for method {}", method.name()))?;
+        self.submit_spec(&spec, values)
+    }
+
+    /// Blocking convenience: submit by method and wait.
     pub fn evaluate(&self, method: MethodId, values: Vec<f32>) -> Result<Vec<f32>, String> {
         let rx = self.submit(method, values)?;
         let result = rx.recv().map_err(|_| "worker dropped reply".to_string())?;
         result.outcome
     }
 
-    /// Merged metrics across every shard of every method (exact fold of
-    /// the per-shard snapshots, histogram included).
+    /// Blocking convenience: submit by spec and wait.
+    pub fn evaluate_spec(&self, spec: &MethodSpec, values: Vec<f32>) -> Result<Vec<f32>, String> {
+        let rx = self.submit_spec(spec, values)?;
+        let result = rx.recv().map_err(|_| "worker dropped reply".to_string())?;
+        result.outcome
+    }
+
+    /// Merged metrics across every shard of every spec (exact fold of
+    /// the per-shard snapshots, histogram included), plus the global
+    /// kernel-cache counters ([`Registry::global`]) — the observable
+    /// for the shared-cache win (compiles == distinct specs, not
+    /// shards × specs).
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut merged = MetricsSnapshot::default();
-        for pool in self.methods.values() {
+        for pool in self.pools.values() {
             for shard in &pool.shards {
                 merged = merged.merge(&shard.metrics.snapshot());
             }
         }
+        let cache = Registry::global().stats();
+        merged.kernel_cache_hits = cache.hits;
+        merged.kernel_compiles = cache.compiles;
         merged
     }
 
-    /// Per-shard snapshots as `(method, shard index, snapshot)`, in
-    /// `MethodId::all()` order.
-    pub fn shard_metrics(&self) -> Vec<(MethodId, usize, MetricsSnapshot)> {
+    /// Per-shard snapshots as `(spec, shard index, snapshot)`, in
+    /// served-spec order.
+    pub fn shard_metrics(&self) -> Vec<(MethodSpec, usize, MetricsSnapshot)> {
         let mut out = Vec::new();
-        for method in MethodId::all() {
-            if let Some(pool) = self.methods.get(&method) {
+        for spec in &self.specs {
+            if let Some(pool) = self.pools.get(spec) {
                 for (i, shard) in pool.shards.iter().enumerate() {
-                    out.push((method, i, shard.metrics.snapshot()));
+                    out.push((*spec, i, shard.metrics.snapshot()));
                 }
             }
         }
         out
     }
 
-    /// The number of worker shards each method runs.
+    /// The design points this coordinator serves, in routing order.
+    pub fn specs(&self) -> &[MethodSpec] {
+        &self.specs
+    }
+
+    /// The number of worker shards each spec runs.
     pub fn shards_per_method(&self) -> usize {
-        self.methods.values().next().map_or(0, |pool| pool.shards.len())
+        self.pools.values().next().map_or(0, |pool| pool.shards.len())
     }
 
     /// Shuts down the workers. Dropping the senders lets every shard
     /// drain its queued requests and flush its partial batch before the
     /// thread exits, so all in-flight replies are still delivered.
     pub fn shutdown(self) {
-        drop(self.methods);
+        drop(self.pools);
         let mut workers = self.workers.lock().unwrap();
         for h in workers.drain(..) {
             let _ = h.join();
@@ -241,7 +304,7 @@ impl Coordinator {
 }
 
 fn spawn_worker(
-    method: MethodId,
+    spec: MethodSpec,
     shard_idx: usize,
     rx: mpsc::Receiver<Request>,
     depth: Arc<AtomicUsize>,
@@ -250,7 +313,7 @@ fn spawn_worker(
     metrics: Arc<ServerMetrics>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
-        .name(format!("tanh-worker-{}-{shard_idx}", method.label()))
+        .name(format!("tanh-worker-{}-{shard_idx}", spec.method_id().label()))
         .spawn(move || {
             let mut pending = PendingBatch::default();
             loop {
@@ -259,7 +322,7 @@ fn spawn_worker(
                 let timeout = if pending.is_empty() { cfg.max_wait * 50 } else { cfg.max_wait };
                 match rx.recv_timeout(timeout) {
                     Ok(req) => {
-                        admit(req, &mut pending, method, &backend, &cfg, &metrics, &depth);
+                        admit(req, &mut pending, &spec, &backend, &cfg, &metrics, &depth);
                         // Greedy drain: requests that queued up while
                         // the previous batch executed are packed NOW
                         // rather than one-per-loop — without this,
@@ -268,17 +331,17 @@ fn spawn_worker(
                         // iteration 1: batch efficiency 6% → see
                         // EXPERIMENTS.md §Perf).
                         while let Ok(req) = rx.try_recv() {
-                            admit(req, &mut pending, method, &backend, &cfg, &metrics, &depth);
+                            admit(req, &mut pending, &spec, &backend, &cfg, &metrics, &depth);
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
+                        flush(&mut pending, &spec, &backend, &cfg, &metrics, &depth);
                         return;
                     }
                 }
                 if pending.should_flush(&cfg, Instant::now()) {
-                    flush(&mut pending, method, &backend, &cfg, &metrics, &depth);
+                    flush(&mut pending, &spec, &backend, &cfg, &metrics, &depth);
                 }
             }
         })
@@ -290,7 +353,7 @@ fn spawn_worker(
 fn admit(
     req: Request,
     pending: &mut PendingBatch,
-    method: MethodId,
+    spec: &MethodSpec,
     backend: &Arc<dyn ExecBackend>,
     cfg: &BatcherConfig,
     metrics: &Arc<ServerMetrics>,
@@ -316,14 +379,14 @@ fn admit(
         return;
     }
     if !pending.fits(&req, cfg.batch_elements) {
-        flush(pending, method, backend, cfg, metrics, depth);
+        flush(pending, spec, backend, cfg, metrics, depth);
     }
     pending.push(req);
 }
 
 fn flush(
     pending: &mut PendingBatch,
-    method: MethodId,
+    spec: &MethodSpec,
     backend: &Arc<dyn ExecBackend>,
     cfg: &BatcherConfig,
     metrics: &Arc<ServerMetrics>,
@@ -336,7 +399,7 @@ fn flush(
     let (flat, spans) = batch.pack(cfg.batch_elements);
     metrics.record_batch(batch.elements, cfg.batch_elements);
     depth.fetch_sub(batch.elements, Ordering::Relaxed);
-    let result = backend.execute(method, &flat);
+    let result = backend.execute(spec, &flat);
     let now = Instant::now();
     match result {
         Ok(outputs) => {
@@ -462,7 +525,7 @@ mod tests {
         let lambert_shards: Vec<_> = c
             .shard_metrics()
             .into_iter()
-            .filter(|(m, _, _)| *m == MethodId::Lambert)
+            .filter(|(s, _, _)| s.method_id() == MethodId::Lambert)
             .collect();
         assert_eq!(lambert_shards.len(), 3);
         for (_, idx, s) in &lambert_shards {
@@ -478,10 +541,15 @@ mod tests {
             let _ = c.evaluate(MethodId::all()[i % 6], vec![0.25; 3]).unwrap();
         }
         let merged = c.metrics();
-        let fold = c
+        let mut fold = c
             .shard_metrics()
             .into_iter()
             .fold(MetricsSnapshot::default(), |acc, (_, _, s)| acc.merge(&s));
+        // The kernel-cache counters are process-global (set by
+        // `metrics()`, not folded from shards); align them before the
+        // exactness check on everything else.
+        fold.kernel_cache_hits = merged.kernel_cache_hits;
+        fold.kernel_compiles = merged.kernel_compiles;
         assert_eq!(merged, fold);
         assert_eq!(merged.submitted, 30);
         assert_eq!(merged.requests + merged.failed_requests, merged.submitted);
@@ -502,6 +570,55 @@ mod tests {
             assert_eq!(out.len(), 2);
         }
         assert_eq!(c.metrics().requests, 10);
+        c.shutdown();
+    }
+
+    #[test]
+    fn spec_routing_serves_non_table1_points_and_rejects_unserved() {
+        use crate::coordinator::worker::GoldenBackend;
+        let table1_pwl = MethodSpec::table1(MethodId::Pwl);
+        let custom = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+        let specs = vec![table1_pwl, custom];
+        let c = Coordinator::start(
+            Arc::new(GoldenBackend::for_specs(&specs, 32)),
+            CoordinatorConfig { specs: specs.clone(), ..Default::default() },
+        );
+        assert_eq!(c.specs(), &specs[..]);
+        // Both design points answer, through their own kernels.
+        let a = c.evaluate_spec(&table1_pwl, vec![0.5]).unwrap();
+        let b = c.evaluate_spec(&custom, vec![0.5]).unwrap();
+        assert!((a[0] - 0.462f32).abs() < 1e-3);
+        assert!((b[0] - 0.462f32).abs() < 2e-3);
+        // Method-addressed submit resolves to the FIRST served pwl spec.
+        let via_method = c.evaluate(MethodId::Pwl, vec![0.5]).unwrap();
+        assert_eq!(via_method[0].to_bits(), a[0].to_bits());
+        // A spec outside the served set fails fast with a useful error.
+        let unserved = MethodSpec::table1(MethodId::Lambert);
+        let err = c.submit_spec(&unserved, vec![0.5]).unwrap_err();
+        assert!(err.contains("not served"), "{err}");
+        let err = c.submit(MethodId::Lambert, vec![0.5]).unwrap_err();
+        assert!(err.contains("no served spec"), "{err}");
+        // Duplicate specs in the config collapse into one pool.
+        assert_eq!(c.shard_metrics().len(), 2 * c.shards_per_method());
+        c.shutdown();
+    }
+
+    #[test]
+    fn duplicate_and_empty_spec_lists_are_handled() {
+        use crate::coordinator::worker::GoldenBackend;
+        let s = MethodSpec::table1(MethodId::Pwl);
+        let c = Coordinator::start(
+            Arc::new(GoldenBackend::for_specs(&[s], 16)),
+            CoordinatorConfig { specs: vec![s, s, s], shards: 1, ..Default::default() },
+        );
+        assert_eq!(c.specs().len(), 1);
+        c.shutdown();
+        // Empty spec list falls back to the Table I suite.
+        let c = Coordinator::start(
+            Arc::new(GoldenBackend::table1(16)),
+            CoordinatorConfig { specs: vec![], shards: 1, ..Default::default() },
+        );
+        assert_eq!(c.specs().len(), 6);
         c.shutdown();
     }
 

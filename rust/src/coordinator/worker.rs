@@ -3,7 +3,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::approx::{table1_suite, CompiledKernel, IoSpec, MethodId};
+use crate::approx::{CompiledKernel, MethodId, MethodSpec, Registry};
 use crate::fixed::Fx;
 use crate::rt_err;
 use crate::runtime::EngineServer;
@@ -11,10 +11,28 @@ use crate::util::error::RtResult;
 
 use super::server::ExecBackend;
 
-/// PJRT-backed execution: each method maps to one compiled activation
-/// graph (`tanh_<method>_<batch>`), preloaded at startup so the hot
-/// path never compiles. Execution goes through the engine thread
-/// ([`EngineServer`]) because PJRT handles are not `Send`.
+/// Evaluates a flat f32 slice through a compiled kernel with the
+/// golden quantization conventions: inputs quantize via `Fx::from_f64`
+/// (round half away from zero, saturating) so the conversion matches
+/// the scalar datapath bit-for-bit; output raws are ≤ 16 bits and
+/// therefore exact in f32. Shared by [`GoldenBackend`] and the
+/// scenario verifier ([`crate::bench::scenario::GoldenVerifier`]) so
+/// the serving path and its checker cannot diverge in conversion.
+pub fn kernel_eval_f32(kernel: &CompiledKernel, flat: &[f32]) -> Vec<f32> {
+    let in_fmt = kernel.input();
+    let raws: Vec<i64> = flat.iter().map(|&v| Fx::from_f64(v as f64, in_fmt).raw()).collect();
+    let mut out_raws = vec![0i64; raws.len()];
+    kernel.eval_slice_raw(&raws, &mut out_raws);
+    let inv = kernel.output().ulp() as f32;
+    out_raws.iter().map(|&r| r as f32 * inv).collect()
+}
+
+/// PJRT-backed execution: each Table I method maps to one compiled
+/// activation graph (`tanh_<method>_<batch>`), preloaded at startup so
+/// the hot path never compiles. Execution goes through the engine
+/// thread ([`EngineServer`]) because PJRT handles are not `Send`.
+/// Only the six Table I specs have AOT'd graphs; any other spec is an
+/// execution error (use the golden backend for arbitrary specs).
 pub struct GraphBackend {
     engine: Arc<EngineServer>,
     batch: usize,
@@ -50,9 +68,15 @@ impl GraphBackend {
 }
 
 impl ExecBackend for GraphBackend {
-    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
         if flat.len() != self.batch {
             return Err(format!("batch mismatch: {} vs {}", flat.len(), self.batch));
+        }
+        let method = spec.method_id();
+        if *spec != MethodSpec::table1(method) {
+            return Err(format!(
+                "pjrt backend only ships AOT graphs for the Table I specs, not '{spec}'"
+            ));
         }
         let name = Self::artifact_name(method, self.batch);
         self.engine.run_f32(&name, flat.to_vec())
@@ -63,47 +87,40 @@ impl ExecBackend for GraphBackend {
     }
 }
 
-/// Golden-model execution: the rust fixed-point datapaths (S3.12 →
-/// S.15), served through the compiled integer kernels. Used by tests
-/// and as a no-artifacts fallback; also the numerically authoritative
-/// path the PJRT outputs are compared to.
-///
-/// All six methods are compiled once at startup
-/// ([`crate::approx::TanhApprox::compile`]) and batches are processed
-/// slice-wise — this replaced the old per-element `dyn eval_fx` loop
-/// with a PWL-only fast path (EXPERIMENTS.md §Perf: 182 M evals/s
-/// compiled vs 34 M generic; the compiled kernels bring every method to
-/// the compiled tier, bit-exact vs the scalar golden models).
+/// Golden-model execution: the rust fixed-point datapaths, served
+/// through the compiled integer kernels for **any** set of specs.
+/// Kernels are resolved through the shared [`Registry`] cache, so a
+/// spec is compiled once per process regardless of how many backends,
+/// coordinators or shards serve it (the old per-backend compile made
+/// that shards × methods compiles). Used by tests and as the
+/// no-artifacts fallback; also the numerically authoritative path the
+/// PJRT outputs are compared to.
 pub struct GoldenBackend {
-    kernels: HashMap<MethodId, CompiledKernel>,
+    kernels: HashMap<MethodSpec, Arc<CompiledKernel>>,
     batch: usize,
 }
 
 impl GoldenBackend {
-    /// Builds the Table I suite as the backend, compiling every method.
+    /// Builds the Table I suite as the backend.
     pub fn table1(batch: usize) -> GoldenBackend {
-        let io = IoSpec::table1();
-        let kernels: HashMap<_, _> =
-            table1_suite().into_iter().map(|m| (m.id(), m.compile(io))).collect();
+        GoldenBackend::for_specs(&MethodSpec::table1_all(), batch)
+    }
+
+    /// Builds a backend serving an arbitrary spec set, resolving every
+    /// kernel through [`Registry::global`] (cache hit when any earlier
+    /// backend, sweep or coordinator already compiled the spec).
+    pub fn for_specs(specs: &[MethodSpec], batch: usize) -> GoldenBackend {
+        let kernels =
+            specs.iter().map(|s| (*s, Registry::global().kernel(s))).collect();
         GoldenBackend { kernels, batch }
     }
 }
 
 impl ExecBackend for GoldenBackend {
-    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
         let kernel =
-            self.kernels.get(&method).ok_or_else(|| format!("no kernel for {method:?}"))?;
-        let in_fmt = kernel.input();
-        // Quantize through Fx::from_f64 (round half away from zero,
-        // saturating) so the input conversion matches the golden scalar
-        // path bit-for-bit.
-        let raws: Vec<i64> =
-            flat.iter().map(|&v| Fx::from_f64(v as f64, in_fmt).raw()).collect();
-        let mut out_raws = vec![0i64; raws.len()];
-        kernel.eval_slice_raw(&raws, &mut out_raws);
-        // Output raws are ≤ 16 bits: exact in f32.
-        let inv = kernel.output().ulp() as f32;
-        Ok(out_raws.iter().map(|&r| r as f32 * inv).collect())
+            self.kernels.get(spec).ok_or_else(|| format!("no kernel for spec '{spec}'"))?;
+        Ok(kernel_eval_f32(kernel, flat))
     }
 
     fn batch_elements(&self) -> usize {
@@ -121,7 +138,9 @@ mod tests {
     fn golden_backend_evaluates_all_methods() {
         let b = GoldenBackend::table1(8);
         for method in MethodId::all() {
-            let out = b.execute(method, &[0.0, 0.5, -0.5, 2.0, -2.0, 6.5, -6.5, 0.1]).unwrap();
+            let spec = MethodSpec::table1(method);
+            let out =
+                b.execute(&spec, &[0.0, 0.5, -0.5, 2.0, -2.0, 6.5, -6.5, 0.1]).unwrap();
             assert_eq!(out.len(), 8);
             assert_eq!(out[0], 0.0);
             assert!((out[1] - 0.46).abs() < 0.01, "{method:?}: {}", out[1]);
@@ -138,13 +157,30 @@ mod tests {
         let inputs: Vec<f32> =
             (0..16).map(|i| (i as f32) * 0.41 - 3.3).collect();
         for m in crate::approx::table1_suite() {
-            let out = b.execute(m.id(), &inputs).unwrap();
+            let out = b.execute(&MethodSpec::table1(m.id()), &inputs).unwrap();
             for (&v, &y) in inputs.iter().zip(&out) {
                 let x = Fx::from_f64(v as f64, QFormat::S3_12);
                 let want = m.eval_fx(x, QFormat::S_15).to_f64() as f32;
                 assert_eq!(y, want, "{:?} x={v}", m.id());
             }
         }
+    }
+
+    #[test]
+    fn golden_backend_serves_non_table1_specs() {
+        let spec = MethodSpec::parse("catmull:step=1/8:in=s2.13:out=s.15:dom=4").unwrap();
+        let b = GoldenBackend::for_specs(&[spec], 4);
+        let golden = spec.build();
+        let inputs = [0.25f32, -1.5, 3.9, 0.0];
+        let out = b.execute(&spec, &inputs).unwrap();
+        for (&v, &y) in inputs.iter().zip(&out) {
+            let x = Fx::from_f64(v as f64, spec.io.input);
+            let want = golden.eval_fx(x, spec.io.output).to_f64() as f32;
+            assert_eq!(y, want, "x={v}");
+        }
+        // Specs outside the backend's set are execution errors.
+        let other = MethodSpec::table1(MethodId::Pwl);
+        assert!(b.execute(&other, &inputs).unwrap_err().contains("no kernel"));
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use super::InputGrid;
 use crate::approx::compiled::worker_threads;
 use crate::approx::reference::tanh_ref;
-use crate::approx::{IoSpec, TanhApprox};
+use crate::approx::{CompiledKernel, IoSpec, MethodSpec, Registry, TanhApprox};
 use crate::fixed::QFormat;
 
 /// Fixed accumulation chunk (grid points). Chunk boundaries — not the
@@ -63,6 +63,36 @@ pub fn measure_with_threads(
     threads: usize,
 ) -> ErrorMetrics {
     let kernel = m.compile(IoSpec { input: grid.fmt, output: out });
+    measure_kernel_with_threads(&kernel, grid, threads)
+}
+
+/// Measures a named design point through the **shared kernel cache**
+/// ([`Registry::global`]): the spec's grid is derived from its own
+/// input format and domain, and its kernel is compiled at most once
+/// per process no matter how many sweeps, reports or explorers ask.
+/// This is what lets `explore`, Fig 2 and Table III stop paying one
+/// compile per sweep point when they revisit a configuration.
+pub fn measure_spec(spec: &MethodSpec) -> ErrorMetrics {
+    measure_spec_with_threads(spec, worker_threads())
+}
+
+/// [`measure_spec`] with an explicit worker count for the grid sweep.
+pub fn measure_spec_with_threads(spec: &MethodSpec, threads: usize) -> ErrorMetrics {
+    let kernel = Registry::global().kernel(spec);
+    let grid = InputGrid::ranged(spec.io.input, spec.domain);
+    measure_kernel_with_threads(&kernel, grid, threads)
+}
+
+/// Sweeps an already-compiled kernel over a grid (the kernel's input
+/// format must be the grid's format). The shared core under
+/// [`measure`] (fresh compile) and [`measure_spec`] (cached kernel).
+pub fn measure_kernel_with_threads(
+    kernel: &CompiledKernel,
+    grid: InputGrid,
+    threads: usize,
+) -> ErrorMetrics {
+    debug_assert_eq!(kernel.input(), grid.fmt, "kernel/grid format mismatch");
+    let out = kernel.output();
     let in_ulp = grid.fmt.ulp();
     let out_ulp = out.ulp();
     sweep_chunks(grid, out, threads, |clo, chi, acc| {
@@ -304,6 +334,24 @@ mod tests {
             assert_eq!(seq.mean_abs, par.mean_abs, "{threads} threads");
             assert_eq!(seq.points, par.points, "{threads} threads");
         }
+    }
+
+    #[test]
+    fn measure_spec_is_bit_identical_to_measure() {
+        // The cached-kernel path must not change a single bit of the
+        // metrics vs a fresh per-call compile (the fixture guarantee).
+        let spec = MethodSpec::table1(crate::approx::MethodId::Pwl);
+        let via_spec = measure_spec(&spec);
+        let via_fresh = measure(&*spec.build(), InputGrid::table1(), QFormat::S_15);
+        assert_eq!(via_spec.max_abs, via_fresh.max_abs);
+        assert_eq!(via_spec.argmax, via_fresh.argmax);
+        assert_eq!(via_spec.mse, via_fresh.mse);
+        assert_eq!(via_spec.mean_abs, via_fresh.mean_abs);
+        assert_eq!(via_spec.points, via_fresh.points);
+        // Second call hits the cache and still agrees.
+        let again = measure_spec(&spec);
+        assert_eq!(again.max_abs, via_spec.max_abs);
+        assert_eq!(again.mse, via_spec.mse);
     }
 
     #[test]

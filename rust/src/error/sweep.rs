@@ -1,8 +1,9 @@
 //! Fig 2 parameter sweeps: max-abs error and MSE as a function of each
 //! method's tunable parameter (paper §III.D).
 
-use super::{measure, ErrorMetrics, InputGrid};
-use crate::approx::{build, MethodId};
+use super::{measure_kernel_with_threads, ErrorMetrics, InputGrid};
+use crate::approx::compiled::worker_threads;
+use crate::approx::{IoSpec, MethodId, MethodSpec, Registry};
 use crate::fixed::QFormat;
 
 /// One point of a Fig 2 panel.
@@ -47,14 +48,25 @@ pub fn fig2_params(id: MethodId) -> (&'static str, Vec<f64>) {
 }
 
 /// Sweeps one method's Fig 2 panel over the given grid/output format.
+/// Each sweep point is a [`MethodSpec`] resolved through the shared
+/// kernel cache, so regenerating Fig 2 after an `explore` (or twice in
+/// one process) compiles nothing the second time. Parameters the input
+/// format cannot address (a step finer than the grid's ulp) are
+/// skipped, like [`super::search_1ulp_param`] does — a coarse grid
+/// yields a shorter panel, not a panic.
 pub fn sweep_fig2(id: MethodId, grid: InputGrid, out: QFormat) -> Fig2Series {
     let (param_name, params) = fig2_params(id);
     let domain = grid.range.unwrap_or(grid.fmt.max_value());
+    let io = IoSpec { input: grid.fmt, output: out };
     let points = params
         .into_iter()
-        .map(|param| {
-            let m = build(id, param, domain);
-            Fig2Point { param, metrics: measure(m.as_ref(), grid, out) }
+        .filter_map(|param| {
+            let spec = MethodSpec::with_param(id, param, io, domain).ok()?;
+            let kernel = Registry::global().kernel(&spec);
+            Some(Fig2Point {
+                param,
+                metrics: measure_kernel_with_threads(&kernel, grid, worker_threads()),
+            })
         })
         .collect();
     Fig2Series { id, param_name, points }

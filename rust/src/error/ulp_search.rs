@@ -2,8 +2,9 @@
 //! the maximum error within 1 output ulp, across I/O formats and ranges
 //! (paper §IV.G "Tolerance to precision and input range").
 
-use super::{measure, InputGrid};
-use crate::approx::{build, MethodId};
+use super::{measure_kernel_with_threads, InputGrid};
+use crate::approx::compiled::worker_threads;
+use crate::approx::{IoSpec, MethodId, MethodSpec, Registry};
 use crate::fixed::QFormat;
 
 /// One Table III row specification: I/O formats and the input range.
@@ -50,12 +51,19 @@ fn candidates(id: MethodId, input: QFormat) -> Vec<f64> {
 }
 
 /// Finds the cheapest parameter of `id` whose exhaustive max error is
-/// ≤ `ulp_budget` output ulps for the given spec.
+/// ≤ `ulp_budget` output ulps for the given spec. Candidates resolve
+/// through the shared kernel cache; a candidate the typed validation
+/// rejects (e.g. a Taylor step equal to the input ulp, which leaves no
+/// expansion bits — previously a latent panic) is skipped.
 pub fn search_1ulp_param(id: MethodId, spec: Table3Spec, ulp_budget: f64) -> Option<f64> {
     let grid = InputGrid::ranged(spec.input, spec.range);
+    let io = IoSpec { input: spec.input, output: spec.output };
     for param in candidates(id, spec.input) {
-        let m = build(id, param, spec.range);
-        let e = measure(m.as_ref(), grid, spec.output);
+        let Ok(mspec) = MethodSpec::with_param(id, param, io, spec.range) else {
+            continue;
+        };
+        let kernel = Registry::global().kernel(&mspec);
+        let e = measure_kernel_with_threads(&kernel, grid, worker_threads());
         if e.max_ulp <= ulp_budget {
             return Some(param);
         }

@@ -7,4 +7,4 @@ mod pareto;
 mod space;
 
 pub use pareto::{pareto_frontier, DesignPoint};
-pub use space::{explore, ExploreConfig};
+pub use space::{explore, explore_specs, ExploreConfig};

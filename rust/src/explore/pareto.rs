@@ -1,11 +1,15 @@
 //! Pareto frontier over (error, area, latency).
 
-use crate::approx::MethodId;
+use crate::approx::{MethodId, MethodSpec};
 
-/// One evaluated design: a (method, parameter) configuration with its
-/// measured error and priced hardware cost.
+/// One evaluated design: a named design point ([`MethodSpec`]) with
+/// its measured error and priced hardware cost. `id`/`param` are
+/// derived from the spec and kept as columns for the table renderers.
 #[derive(Clone, Debug)]
 pub struct DesignPoint {
+    /// The full design-point name (method × parameter × I/O × domain) —
+    /// paste it into `tanh-vlsi sweep/serve --spec` to reproduce.
+    pub spec: MethodSpec,
     /// Method.
     pub id: MethodId,
     /// Tunable parameter (step/threshold/K).
@@ -52,6 +56,7 @@ mod tests {
 
     fn pt(err: f64, area: f64, lat: u32) -> DesignPoint {
         DesignPoint {
+            spec: MethodSpec::table1(MethodId::Pwl),
             id: MethodId::Pwl,
             param: 0.0,
             max_err: err,

@@ -1,62 +1,93 @@
-//! The sweep itself: evaluate (method × parameter) against error and
+//! The sweep itself: evaluate design-point specs against error and
 //! hardware cost.
+//!
+//! The sweep space is spec-shaped: (method × Fig 2 parameter × output
+//! format) — output-format variation is new with the spec API; the old
+//! `(id, f64)` sweep could not express it. Exhaustive error
+//! measurement resolves kernels through the shared
+//! [`Registry`](crate::approx::Registry) cache, so a configuration
+//! that Fig 2 (or an earlier explore) already measured is not
+//! recompiled.
 
 use super::pareto::DesignPoint;
-use crate::approx::{build, IoSpec, MethodId};
+use crate::approx::compiled::worker_threads;
+use crate::approx::{IoSpec, MethodId, MethodSpec, Registry};
 use crate::cost::CostModel;
-use crate::error::{fig2_params, measure, measure_strided, InputGrid};
+use crate::error::{fig2_params, measure_kernel_with_threads, measure_strided, InputGrid};
 use crate::fixed::QFormat;
 
 /// Exploration configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ExploreConfig {
     /// Input grid (domain + precision).
     pub grid: InputGrid,
-    /// Output format.
-    pub out: QFormat,
+    /// Output formats to sweep (each parameter point is measured once
+    /// per output format). Default: `[S.15]`, the paper's column.
+    pub outputs: Vec<QFormat>,
     /// Grid stride (>1 subsamples for speed; 1 = exhaustive).
     pub stride: usize,
 }
 
 impl Default for ExploreConfig {
     fn default() -> Self {
-        ExploreConfig { grid: InputGrid::table1(), out: QFormat::S_15, stride: 1 }
+        ExploreConfig { grid: InputGrid::table1(), outputs: vec![QFormat::S_15], stride: 1 }
     }
 }
 
-/// Sweeps every method over its Fig 2 parameter range, measuring error
-/// and pricing the inventory.
+/// Sweeps every method over its Fig 2 parameter range (× every
+/// configured output format), measuring error and pricing the
+/// inventory.
 pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
-    let io = IoSpec { input: cfg.grid.fmt, output: cfg.out };
-    let model = CostModel::new();
     let domain = cfg.grid.range.unwrap_or(cfg.grid.fmt.max_value());
-    let mut points = Vec::new();
+    let mut specs = Vec::new();
     for id in MethodId::all() {
         let (_, params) = fig2_params(id);
         for param in params {
-            let m = build(id, param, domain);
-            // Exhaustive mode rides the compiled-kernel parallel sweep;
-            // sparse strides stay on the scalar path (compiling would
-            // cost more than the subsampled sweep saves).
-            let e = if cfg.stride <= 1 {
-                measure(m.as_ref(), cfg.grid, cfg.out)
+            for &out in &cfg.outputs {
+                let io = IoSpec { input: cfg.grid.fmt, output: out };
+                // Parameters the grid cannot address (step finer than
+                // its ulp) are skipped, not panicked on — a coarse
+                // exploration grid just has fewer points per method.
+                if let Ok(spec) = MethodSpec::with_param(id, param, io, domain) {
+                    specs.push(spec);
+                }
+            }
+        }
+    }
+    explore_specs(&specs, cfg.stride)
+}
+
+/// Evaluates an explicit list of design points (the `--spec` path of
+/// `tanh-vlsi explore`): exhaustive sweeps ride the shared kernel
+/// cache; sparse strides stay on the scalar path (compiling would cost
+/// more than the subsampled sweep saves).
+pub fn explore_specs(specs: &[MethodSpec], stride: usize) -> Vec<DesignPoint> {
+    let model = CostModel::new();
+    specs
+        .iter()
+        .map(|&spec| {
+            let grid = InputGrid::ranged(spec.io.input, spec.domain);
+            let m = spec.build();
+            let e = if stride <= 1 {
+                let kernel = Registry::global().kernel(&spec);
+                measure_kernel_with_threads(&kernel, grid, worker_threads())
             } else {
-                measure_strided(m.as_ref(), cfg.grid, cfg.out, cfg.stride)
+                measure_strided(m.as_ref(), grid, spec.io.output, stride)
             };
-            let inv = m.inventory(io);
+            let inv = m.inventory(spec.io);
             let cost = model.price(&inv);
-            points.push(DesignPoint {
-                id,
-                param,
+            DesignPoint {
+                spec,
+                id: spec.method_id(),
+                param: spec.param(),
                 max_err: e.max_abs,
                 rms: e.rms,
                 area_ge: cost.area_ge,
                 latency_cycles: inv.pipeline_stages.max(1),
                 stage_delay_fo4: cost.stage_delay_fo4,
-            });
-        }
-    }
-    points
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -67,7 +98,7 @@ mod tests {
     fn quick_cfg() -> ExploreConfig {
         ExploreConfig {
             grid: InputGrid::ranged(QFormat::new(3, 8), 6.0),
-            out: QFormat::S_15,
+            outputs: vec![QFormat::S_15],
             stride: 1,
         }
     }
@@ -79,6 +110,58 @@ mod tests {
         for id in MethodId::all() {
             assert!(points.iter().any(|p| p.id == id), "{id:?} missing");
         }
+        // Every point is addressable: its spec round-trips and agrees
+        // with the derived columns.
+        for p in &points {
+            assert_eq!(MethodSpec::parse(&p.spec.to_string()).unwrap(), p.spec);
+            assert_eq!(p.id, p.spec.method_id());
+            assert_eq!(p.param, p.spec.param());
+        }
+    }
+
+    #[test]
+    fn output_format_variation_expands_the_space() {
+        // The spec API's new axis: the same parameter grid measured at
+        // two output precisions doubles the point count, and a
+        // fine-step configuration is dominated by the output
+        // quantization floor — visible only because output format is
+        // now part of the swept space.
+        let mut cfg = quick_cfg();
+        let single = explore(cfg.clone());
+        cfg.outputs = vec![QFormat::S_15, QFormat::S_7];
+        let double = explore(cfg);
+        assert_eq!(double.len(), 2 * single.len());
+        let pwl_fine = |out: QFormat| {
+            double
+                .iter()
+                .find(|p| {
+                    p.id == MethodId::Pwl
+                        && p.param == 1.0 / 256.0
+                        && p.spec.io.output == out
+                })
+                .expect("PWL 1/256 point")
+                .max_err
+        };
+        // ½ S.7 ulp ≈ 3.9e-3 vs ½ S.15 ulp ≈ 1.5e-5: the 7-bit output
+        // floor towers over the fine PWL's algorithmic error.
+        assert!(
+            pwl_fine(QFormat::S_7) > 10.0 * pwl_fine(QFormat::S_15),
+            "S.7 {} vs S.15 {}",
+            pwl_fine(QFormat::S_7),
+            pwl_fine(QFormat::S_15)
+        );
+    }
+
+    #[test]
+    fn explore_specs_evaluates_an_explicit_list() {
+        let specs = vec![
+            MethodSpec::parse("pwl:step=1/16:in=s3.8:out=s.15").unwrap(),
+            MethodSpec::parse("lambert:terms=4:in=s3.8:out=s.15").unwrap(),
+        ];
+        let points = explore_specs(&specs, 1);
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].spec, specs[0]);
+        assert!(points[0].max_err > 0.0 && points[0].area_ge > 0.0);
     }
 
     #[test]
@@ -104,10 +187,11 @@ mod tests {
 
     #[test]
     fn strided_measure_close_to_full() {
+        use crate::error::measure;
         let cfg = quick_cfg();
         let m = crate::approx::pwl::Pwl::table1();
-        let full = measure(&m, cfg.grid, cfg.out);
-        let strided = measure_strided(&m, cfg.grid, cfg.out, 7);
+        let full = measure(&m, cfg.grid, cfg.outputs[0]);
+        let strided = measure_strided(&m, cfg.grid, cfg.outputs[0], 7);
         assert!((full.max_abs - strided.max_abs).abs() < full.max_abs * 0.5);
     }
 }

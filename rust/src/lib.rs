@@ -25,6 +25,15 @@
 //! the serving backend and the exhaustive error sweeps — run on
 //! compiled kernels; everything else uses the golden models.
 //!
+//! Configurations are first-class values: [`approx::MethodSpec`]
+//! (module [`approx::spec`]) names any (method × parameter × I/O-format
+//! × domain) design point, round-trips through a compact string grammar
+//! (`pwl:step=1/64:in=s3.12:out=s.15`, `table1:<A|B1|B2|C|D|E>`), and
+//! keys the process-wide compiled-kernel cache ([`approx::Registry`])
+//! that the serving backend, the error sweeps and the explorer share —
+//! one compile per design point per process, observable through the
+//! serve metrics (`kernel_compiles` / `kernel_cache_hits`).
+//!
 //! On top of the approximation library the crate provides:
 //!
 //! - [`fixed`] — the Q-format fixed-point substrate all datapath models
@@ -43,13 +52,14 @@
 //!   artifacts and executes them from rust (stubbed by
 //!   [`runtime::xla_shim`] when the bindings are not linked).
 //! - [`coordinator`] — activation-accelerator service: request router
-//!   over per-method **worker-shard pools** (round-robin or
+//!   over per-**spec** worker-shard pools (round-robin or
 //!   least-loaded), dynamic batcher per shard, per-shard metrics with a
 //!   log-bucketed latency histogram (p50/p95/p99, exact shard merge),
-//!   batch fill rate, and backpressure; the golden backend serves all
-//!   six methods through their compiled kernels.
+//!   batch fill rate, and backpressure; the golden backend serves any
+//!   spec set through the shared kernel cache.
 //! - [`explore`] — design-space exploration / Pareto frontier over
-//!   (method × parameter × fixed-point format).
+//!   specs (method × parameter × output format), every frontier row
+//!   addressable by its spec string.
 //! - [`report`] — text/CSV renderers for every table and figure,
 //!   pinned by golden fixtures under `rust/tests/fixtures/`.
 //! - [`bench`] — self-contained benchmark harness (criterion is not
@@ -66,13 +76,15 @@
 //! ```no_run
 //! // (no_run: doctest binaries don't inherit the xla rpath; the same
 //! // code executes in examples/quickstart.rs and the unit tests.)
-//! use tanh_vlsi::approx::{pwl::Pwl, TanhApprox};
-//! use tanh_vlsi::fixed::{Fx, QFormat};
+//! use tanh_vlsi::approx::{MethodSpec, TanhApprox};
+//! use tanh_vlsi::fixed::Fx;
 //!
-//! // Table I configuration "A": PWL with step 1/64.
-//! let pwl = Pwl::table1();
-//! let x = Fx::from_f64(0.5, QFormat::S3_12);
-//! let y = pwl.eval_fx(x, QFormat::S_15);
+//! // Table I configuration "A" by name — any other design point is
+//! // one spec string away (e.g. "pwl:step=1/32:in=s2.13:out=s.15").
+//! let spec = MethodSpec::parse("table1:A").unwrap();
+//! let pwl = spec.build();
+//! let x = Fx::from_f64(0.5, spec.io.input);
+//! let y = pwl.eval_fx(x, spec.io.output);
 //! assert!((y.to_f64() - 0.5f64.tanh()).abs() < 1e-4);
 //! ```
 

@@ -2,27 +2,37 @@
 //!
 //! ```text
 //! tanh-vlsi eval    --method pwl --x 0.5          evaluate one input
+//! tanh-vlsi eval    --spec pwl:step=1/32 --x 0.5   …or any design point
 //! tanh-vlsi table1                                 regenerate Table I
 //! tanh-vlsi table2                                 regenerate Table II
 //! tanh-vlsi table3  --rows 4                       regenerate Table III
 //! tanh-vlsi fig2    --csv-dir out/                 regenerate Fig 2
 //! tanh-vlsi cost                                   §IV complexity report
+//! tanh-vlsi sweep   --spec lambert:terms=9         exhaustive error for named specs
 //! tanh-vlsi explore --stride 8                     Pareto frontier
 //! tanh-vlsi serve   --requests 1000                run the coordinator
 //! tanh-vlsi serve   --scenario all --shards 2      scenario load harness
+//! tanh-vlsi serve   --spec pwl:step=1/32:in=s2.13 --scenario steady
 //! tanh-vlsi pipeline --method lambert --x 1.0      cycle-level datapath
 //! ```
+//!
+//! Design points are addressed by **spec strings** (`approx::spec`):
+//! `<method>[:step=…|:threshold=…|:terms=…][:in=…][:out=…][:dom=…]`,
+//! with `table1:<A|B1|B2|C|D|E>` shorthands. Every subcommand that
+//! takes `--spec` accepts a comma-separated list and reports parse
+//! failures with the grammar.
 
 use std::sync::Arc;
 
-use tanh_vlsi::approx::{table1_suite, MethodId, TanhApprox};
+use tanh_vlsi::approx::{spec, table1_suite, MethodId, MethodSpec, Registry, TanhApprox};
 use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
 use tanh_vlsi::bench::BenchLog;
 use tanh_vlsi::coordinator::{
     Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend, RoutePolicy,
 };
 use tanh_vlsi::cost::UnitLibrary;
-use tanh_vlsi::explore::{explore, pareto_frontier, ExploreConfig};
+use tanh_vlsi::error::measure_spec;
+use tanh_vlsi::explore::{explore, explore_specs, pareto_frontier, ExploreConfig};
 use tanh_vlsi::fixed::{Fx, QFormat};
 use tanh_vlsi::hw::table1_pipeline;
 use tanh_vlsi::report;
@@ -37,6 +47,7 @@ fn app() -> App {
         commands: vec![
             Command::new("eval", "evaluate tanh approximations at one input")
                 .opt("method", "pwl|taylor1|taylor2|catmull|velocity|lambert|all", Some("all"))
+                .opt("spec", "comma-separated design-point specs (overrides --method)", None)
                 .opt("x", "input value", Some("0.5"))
                 .opt("input", "input Q-format", Some("S3.12"))
                 .opt("output", "output Q-format", Some("S.15")),
@@ -48,13 +59,18 @@ fn app() -> App {
             Command::new("fig2", "regenerate Fig 2 (error vs parameter, 6 panels)")
                 .opt("csv-dir", "write per-panel CSVs to this directory", None),
             Command::new("cost", "regenerate §IV complexity analysis"),
+            Command::new("sweep", "exhaustive error metrics for named design-point specs")
+                .opt("spec", "comma-separated specs (default: the six Table I rows)", None),
             Command::new("explore", "design-space exploration / Pareto frontier")
-                .opt("stride", "input-grid stride (1 = exhaustive)", Some("8")),
+                .opt("stride", "input-grid stride (1 = exhaustive)", Some("8"))
+                .opt("outputs", "comma-separated output Q-formats to sweep", Some("S.15"))
+                .opt("spec", "explore exactly these comma-separated specs instead", None),
             Command::new("pipeline", "run the cycle-level datapath for one input")
                 .opt("method", "method name", Some("pwl"))
                 .opt("x", "input value", Some("0.5")),
             Command::new("report", "generate the consolidated markdown report")
                 .opt("out", "output file", Some("target/paper/REPORT.md"))
+                .opt("spec", "comma-separated specs for a named-design-points section", None)
                 .flag("quick", "skip the slow Fig 2 / exploration sections"),
             Command::new("verilog", "emit synthesizable Verilog for the PWL datapath")
                 .opt("out", "output file (default: stdout)", None)
@@ -71,6 +87,7 @@ fn app() -> App {
                 .opt("scale", "scenario request-count multiplier (TANH_SMOKE=1 default: 0.1)", Some("1.0"))
                 .opt("shards", "worker shards per method", Some("2"))
                 .opt("route", "shard routing: rr|least-loaded", Some("rr"))
+                .opt("spec", "comma-separated specs to serve (default: Table I suite)", None)
                 .opt("out", "scenario report file", Some("BENCH_serve.json"))
                 .flag("pace", "replay the scenario's open-loop schedule in real time"),
         ],
@@ -108,6 +125,7 @@ fn main() {
             println!("{}", report::complexity::render());
             Ok(())
         }
+        "sweep" => cmd_sweep(&parsed),
         "explore" => cmd_explore(&parsed),
         "pipeline" => cmd_pipeline(&parsed),
         "serve" => cmd_serve(&parsed),
@@ -121,16 +139,50 @@ fn main() {
     }
 }
 
+/// The one method-name parser every subcommand uses: unknown names get
+/// the canonical error listing all accepted spellings and the grammar.
 fn parse_method(s: &str) -> Result<MethodId, String> {
-    MethodId::parse(s).ok_or_else(|| format!("unknown method '{s}'"))
+    MethodId::parse_or_err(s)
+}
+
+/// Parses a comma-separated `--spec` list; failures carry the grammar.
+fn parse_specs(arg: &str) -> Result<Vec<MethodSpec>, String> {
+    let specs: Result<Vec<MethodSpec>, String> = arg
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| MethodSpec::parse(s).map_err(|e| format!("bad spec '{s}': {e}\n\n{}", spec::GRAMMAR)))
+        .collect();
+    let specs = specs?;
+    if specs.is_empty() {
+        return Err(format!("--spec needs at least one spec\n\n{}", spec::GRAMMAR));
+    }
+    Ok(specs)
 }
 
 fn cmd_eval(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let x: f64 = p.parse_or("x", 0.5)?;
+    let want = x.tanh();
+    // --spec evaluates arbitrary design points, each through its own
+    // I/O formats; the --method path keeps the Table I formats.
+    if let Some(arg) = p.get("spec") {
+        println!("x = {x}   tanh(x) = {want:.9}\n");
+        for s in parse_specs(arg)? {
+            let m = s.build();
+            let y = m.eval_fx(Fx::from_f64(x, s.io.input), s.io.output);
+            println!(
+                "{:44} {:>12.9}  err {:+.3e}  (raw {})",
+                s.to_string(),
+                y.to_f64(),
+                y.to_f64() - want,
+                y.raw()
+            );
+        }
+        return Ok(());
+    }
     let inp = QFormat::parse(p.get_or("input", "S3.12")).ok_or("bad input format")?;
     let out = QFormat::parse(p.get_or("output", "S.15")).ok_or("bad output format")?;
     let fx = Fx::from_f64(x, inp);
-    let want = x.tanh();
     println!("x = {x} ({} raw {})   tanh(x) = {want:.9}\n", inp, fx.raw());
     let methods: Vec<Box<dyn TanhApprox>> = match p.get_or("method", "all") {
         "all" => table1_suite(),
@@ -149,6 +201,38 @@ fn cmd_eval(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
             y.raw()
         );
     }
+    Ok(())
+}
+
+/// `sweep`: exhaustive error metrics for named design points, through
+/// the shared kernel cache.
+fn cmd_sweep(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let specs = match p.get("spec") {
+        Some(arg) => parse_specs(arg)?,
+        None => MethodSpec::table1_all(),
+    };
+    let mut t = tanh_vlsi::util::table::TextTable::new(&[
+        "spec", "max err", "RMS", "max ulp", "argmax", "points",
+    ]);
+    for s in &specs {
+        let e = measure_spec(s);
+        t.row(vec![
+            s.to_string(),
+            format!("{:.3e}", e.max_abs),
+            format!("{:.3e}", e.rms),
+            format!("{:.2}", e.max_ulp),
+            format!("{:+.4}", e.argmax),
+            e.points.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let stats = Registry::global().stats();
+    println!(
+        "kernel cache: {} compiles, {} hits ({} kernels resident)",
+        stats.compiles,
+        stats.hits,
+        Registry::global().len()
+    );
     Ok(())
 }
 
@@ -180,16 +264,28 @@ fn cmd_fig2(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 
 fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let stride: usize = p.parse_or("stride", 8usize)?;
-    let points = explore(ExploreConfig { stride, ..Default::default() });
+    let points = match p.get("spec") {
+        // Explicit design points: evaluate exactly these.
+        Some(arg) => explore_specs(&parse_specs(arg)?, stride),
+        None => {
+            let outputs: Result<Vec<QFormat>, String> = p
+                .get_or("outputs", "S.15")
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| QFormat::parse(s).ok_or_else(|| format!("bad output format '{s}'")))
+                .collect();
+            explore(ExploreConfig { stride, outputs: outputs?, ..Default::default() })
+        }
+    };
     let frontier = pareto_frontier(&points);
     println!("explored {} design points; Pareto frontier ({}):\n", points.len(), frontier.len());
     let mut t = tanh_vlsi::util::table::TextTable::new(&[
-        "method", "param", "max err", "area (GE)", "latency", "stage FO4",
+        "spec", "max err", "area (GE)", "latency", "stage FO4",
     ]);
     for pt in &frontier {
         t.row(vec![
-            pt.id.name().to_string(),
-            format!("{}", pt.param),
+            pt.spec.to_string(),
             format!("{:.2e}", pt.max_err),
             format!("{:.0}", pt.area_ge),
             pt.latency_cycles.to_string(),
@@ -223,9 +319,14 @@ fn cmd_pipeline(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 
 fn cmd_report(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let quick = p.flag("quick");
+    let specs = match p.get("spec") {
+        Some(arg) => parse_specs(arg)?,
+        None => Vec::new(),
+    };
     let opts = tanh_vlsi::report::full::ReportOptions {
         fig2: !quick,
         explore: !quick,
+        specs,
         ..Default::default()
     };
     let text = tanh_vlsi::report::full::generate(opts);
@@ -255,10 +356,18 @@ fn cmd_verilog(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 fn serve_backend(
     backend_name: &str,
     batch: usize,
+    specs: &[MethodSpec],
 ) -> Result<Arc<dyn tanh_vlsi::coordinator::ExecBackend>, String> {
     match backend_name {
-        "golden" => Ok(Arc::new(GoldenBackend::table1(batch))),
+        "golden" => Ok(Arc::new(GoldenBackend::for_specs(specs, batch))),
         "pjrt" => {
+            if specs.iter().any(|s| *s != MethodSpec::table1(s.method_id())) {
+                return Err(
+                    "the pjrt backend only ships AOT graphs for the Table I specs; \
+                     serve non-Table-I specs on --backend golden"
+                        .to_string(),
+                );
+            }
             let engine = Arc::new(
                 EngineServer::spawn(
                     ArtifactDir::open(ArtifactDir::default_path()).map_err(|e| e.to_string())?,
@@ -278,10 +387,14 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let shards: usize = p.parse_or("shards", 2usize)?;
     let route = RoutePolicy::parse(p.get_or("route", "rr"))
         .ok_or_else(|| format!("unknown route policy '{}' (rr|least-loaded)", p.get_or("route", "rr")))?;
-    let cfg = CoordinatorConfig { shards, route, ..Default::default() };
-    let backend = serve_backend(backend_name, batch)?;
+    let specs = match p.get("spec") {
+        Some(arg) => parse_specs(arg)?,
+        None => MethodSpec::table1_all(),
+    };
+    let cfg = CoordinatorConfig { shards, route, specs: specs.clone(), ..Default::default() };
+    let backend = serve_backend(backend_name, batch, &specs)?;
     match p.get("scenario") {
-        Some(spec) => cmd_serve_scenarios(p, spec, backend, backend_name, batch, cfg),
+        Some(names) => cmd_serve_scenarios(p, names, backend, backend_name, batch, cfg),
         None => cmd_serve_legacy(p, backend, backend_name, cfg),
     }
 }
@@ -290,7 +403,7 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 /// the compiled golden kernels, report rows into `BENCH_serve.json`.
 fn cmd_serve_scenarios(
     p: &tanh_vlsi::util::cli::Parsed,
-    spec: &str,
+    names_arg: &str,
     backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend>,
     backend_name: &str,
     batch: usize,
@@ -303,7 +416,8 @@ fn cmd_serve_scenarios(
         None if std::env::var("TANH_SMOKE").is_ok() => 0.1,
         None => 1.0,
     };
-    let names: Vec<&str> = if spec == "all" { SCENARIO_NAMES.to_vec() } else { vec![spec] };
+    let names: Vec<&str> =
+        if names_arg == "all" { SCENARIO_NAMES.to_vec() } else { vec![names_arg] };
     let verify = match backend_name {
         // Golden serving runs the same compiled kernels the verifier
         // does: any mismatch is a batching/routing bug, so demand
@@ -313,9 +427,11 @@ fn cmd_serve_scenarios(
         _ => Verify::Tolerance(3e-4),
     };
     let opts = RunOptions { pace: p.flag("pace"), verify, ..Default::default() };
+    let served: Vec<String> = cfg.specs.iter().map(|s| s.to_string()).collect();
+    println!("serving {} spec(s): {}", served.len(), served.join(", "));
     let mut log = BenchLog::new();
     for name in names {
-        let trace = scenario::build_trace(name, seed, batch, scale)?;
+        let trace = scenario::build_trace(name, seed, batch, scale, &cfg.specs)?;
         let coord = Coordinator::start(backend.clone(), cfg.clone());
         let out = scenario::run_trace(&coord, &trace, &opts)?;
         let m = &out.metrics;
@@ -360,6 +476,12 @@ fn cmd_serve_scenarios(
         log.push_row(out.to_json(backend_name, coord.shards_per_method(), batch));
         coord.shutdown();
     }
+    let stats = tanh_vlsi::approx::Registry::global().stats();
+    println!(
+        "\nkernel cache: {} compiles, {} hits across the run \
+         (shards × scenarios share one kernel per spec)",
+        stats.compiles, stats.hits
+    );
     let out_path = p.get_or("out", "BENCH_serve.json");
     log.write(out_path).map_err(|e| e.to_string())?;
     let text = std::fs::read_to_string(out_path).map_err(|e| e.to_string())?;
@@ -377,14 +499,15 @@ fn cmd_serve_legacy(
 ) -> Result<(), String> {
     let n: usize = p.parse_or("requests", 1000usize)?;
     let req_size: usize = p.parse_or("request-size", 64usize)?;
+    let specs = cfg.specs.clone();
     let coord = Coordinator::start(backend, cfg);
     let mut g = Prng::new(42);
     let start = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..n {
-        let method = MethodId::all()[i % 6];
+        let spec = &specs[i % specs.len()];
         let values: Vec<f32> = (0..req_size).map(|_| g.f64_in(-6.0, 6.0) as f32).collect();
-        pending.push(coord.submit(method, values).map_err(|e| e.to_string())?);
+        pending.push(coord.submit_spec(spec, values).map_err(|e| e.to_string())?);
         // Drain in windows to bound memory.
         if pending.len() >= 256 {
             for rx in pending.drain(..) {

@@ -4,16 +4,16 @@
 use std::fmt::Write as _;
 
 use crate::approx::velocity::Velocity;
-use crate::approx::{table1_suite, IoSpec};
+use crate::approx::{table1_suite, IoSpec, MethodSpec};
 use crate::cost::CostModel;
-use crate::error::{histogram, InputGrid};
+use crate::error::{histogram, measure_spec, InputGrid};
 use crate::explore::{explore, pareto_frontier, ExploreConfig};
 use crate::fixed::QFormat;
 
 use super::{complexity, fig2, table1, table2};
 
 /// Options for the consolidated report.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ReportOptions {
     /// Include the Fig 2 sweeps (the slowest section).
     pub fig2: bool,
@@ -21,11 +21,14 @@ pub struct ReportOptions {
     pub explore: bool,
     /// Grid stride for the exploration (1 = exhaustive).
     pub explore_stride: usize,
+    /// Extra named design points (`--spec`): each gets an exhaustive
+    /// error row in its own section.
+    pub specs: Vec<MethodSpec>,
 }
 
 impl Default for ReportOptions {
     fn default() -> Self {
-        ReportOptions { fig2: true, explore: true, explore_stride: 8 }
+        ReportOptions { fig2: true, explore: true, explore_stride: 8, specs: Vec::new() }
     }
 }
 
@@ -74,17 +77,32 @@ pub fn generate(opts: ReportOptions) -> String {
             frontier.len(),
             points.len()
         );
-        let _ = writeln!(out, "| method | param | max err | area GE | latency |");
-        let _ = writeln!(out, "|---|---|---|---|---|");
+        let _ = writeln!(out, "| method | param | spec | max err | area GE | latency |");
+        let _ = writeln!(out, "|---|---|---|---|---|---|");
         for p in &frontier {
             let _ = writeln!(
                 out,
-                "| {} | {} | {:.2e} | {:.0} | {} |",
+                "| {} | {} | `{}` | {:.2e} | {:.0} | {} |",
                 p.id.name(),
                 p.param,
+                p.spec,
                 p.max_err,
                 p.area_ge,
                 p.latency_cycles
+            );
+        }
+    }
+
+    if !opts.specs.is_empty() {
+        let _ = writeln!(out, "\n## Named design points (--spec)\n");
+        let _ = writeln!(out, "| spec | max err | RMS | max ulp | points |");
+        let _ = writeln!(out, "|---|---|---|---|---|");
+        for spec in &opts.specs {
+            let e = measure_spec(spec);
+            let _ = writeln!(
+                out,
+                "| `{spec}` | {:.2e} | {:.2e} | {:.2} | {} |",
+                e.max_abs, e.rms, e.max_ulp, e.points
             );
         }
     }
@@ -116,12 +134,27 @@ mod tests {
     #[test]
     fn quick_report_contains_all_sections() {
         // Skip the slow sections; structure check only.
-        let r = generate(ReportOptions { fig2: false, explore: false, explore_stride: 64 });
+        let r = generate(ReportOptions { fig2: false, explore: false, ..Default::default() });
         assert!(r.contains("# tanh-vlsi"));
         assert!(r.contains("## Table I"));
         assert!(r.contains("## Table II"));
         assert!(r.contains("## §IV complexity"));
         assert!(r.contains("## Error distribution"));
         assert!(r.contains("Lambert(K=7)"));
+        // No named-design-point section unless specs were requested.
+        assert!(!r.contains("Named design points"));
+    }
+
+    #[test]
+    fn spec_section_lists_requested_points() {
+        let spec = MethodSpec::parse("pwl:step=1/16:in=s2.5:out=s.7:dom=4").unwrap();
+        let r = generate(ReportOptions {
+            fig2: false,
+            explore: false,
+            specs: vec![spec],
+            ..Default::default()
+        });
+        assert!(r.contains("Named design points"));
+        assert!(r.contains("pwl:step=1/16:in=S2.5:out=S.7:dom=4"));
     }
 }

@@ -1,9 +1,8 @@
 //! Table I — "Configurations selected for analysis (max input 6.0,
 //! 12-bit input precision, 15-bit output precision)".
 
-use crate::approx::table1_suite;
-use crate::error::{measure, InputGrid};
-use crate::fixed::QFormat;
+use crate::approx::MethodSpec;
+use crate::error::measure_spec;
 use crate::util::table::{sci, TextTable};
 
 /// One computed Table I row alongside the paper's reported values.
@@ -35,16 +34,19 @@ pub const PAPER_VALUES: [(f64, f64); 6] = [
 ];
 
 /// Computes all six rows by exhaustive sweep of the Table I grid.
+/// Rows are the six Table I specs measured through the shared kernel
+/// cache ([`measure_spec`]) — numerically identical to the old
+/// per-call compile, but a `report` run that also regenerates Fig 2 or
+/// the exploration no longer compiles these kernels twice.
 pub fn compute() -> Vec<Table1Row> {
-    let grid = InputGrid::table1();
-    table1_suite()
+    MethodSpec::table1_all()
         .into_iter()
         .zip(PAPER_VALUES)
-        .map(|(m, (paper_mse, paper_max))| {
-            let e = measure(m.as_ref(), grid, QFormat::S_15);
+        .map(|(spec, (paper_mse, paper_max))| {
+            let e = measure_spec(&spec);
             Table1Row {
-                label: m.id().label(),
-                config: m.describe(),
+                label: spec.method_id().label(),
+                config: spec.build().describe(),
                 rms: e.rms,
                 max_err: e.max_abs,
                 paper_mse,

@@ -5,7 +5,9 @@
 
 use std::sync::Arc;
 
-use tanh_vlsi::approx::{build, eval_odd_saturating, table1_suite, IoSpec, MethodId, TanhApprox};
+use tanh_vlsi::approx::{
+    build, eval_odd_saturating, table1_suite, IoSpec, MethodId, MethodSpec, TanhApprox,
+};
 use tanh_vlsi::bench::scenario::GoldenVerifier;
 use tanh_vlsi::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, ExecBackend, PendingBatch, Request,
@@ -78,7 +80,7 @@ fn prop_compiled_kernels_bit_exact_random_configs() {
             _ => (2f64).powi(-g.i64_in(2, k_max) as i32),
         };
         let domain = if io.input == QFormat::S3_12 { 6.0 } else { 4.0 };
-        let m = build(id, param, domain);
+        let m = build(id, param, domain).map_err(|e| format!("build {id:?} {param}: {e}"))?;
         let kernel = m.compile(io);
         for _ in 0..64 {
             let raw = g.i64_in(io.input.min_raw(), io.input.max_raw());
@@ -106,7 +108,7 @@ fn prop_output_bounded_by_one_for_all_methods_and_params() {
             MethodId::Lambert => g.i64_in(1, 12) as f64,
             _ => (2f64).powi(-g.i64_in(2, 8) as i32),
         };
-        let m = build(id, param, 6.0);
+        let m = build(id, param, 6.0).map_err(|e| format!("build {id:?} {param}: {e}"))?;
         for _ in 0..20 {
             let x = Fx::from_raw(g.i64_in(INP.min_raw(), INP.max_raw()), INP);
             let y = m.eval_fx(x, OUT);
@@ -126,7 +128,7 @@ fn prop_odd_symmetry_random_configs() {
             MethodId::Lambert => g.i64_in(2, 10) as f64,
             _ => (2f64).powi(-g.i64_in(3, 8) as i32),
         };
-        let m = build(id, param, 6.0);
+        let m = build(id, param, 6.0).map_err(|e| format!("build {id:?} {param}: {e}"))?;
         let raw = g.i64_in(0, INP.max_raw());
         let xp = Fx::from_raw(raw, INP);
         let xn = Fx::from_raw(-raw, INP);
@@ -224,6 +226,68 @@ fn prop_grid_strides_preserve_bounds() {
     });
 }
 
+#[test]
+fn prop_method_spec_display_parse_round_trip() {
+    // The serialization contract: for any valid design point of any of
+    // the six methods, `parse(to_string()) == spec` (equality = the
+    // canonical key, so io formats and domain survive too).
+    let formats = [
+        IoSpec::table1(),
+        IoSpec { input: QFormat::S2_13, output: QFormat::S_15 },
+        IoSpec { input: QFormat::S2_5, output: QFormat::S_7 },
+        IoSpec { input: QFormat::S3_12, output: QFormat::S_7 },
+    ];
+    let domains = [1.0, 4.0, 5.5, 6.0, 8.0];
+    prop_check("MethodSpec::parse(spec.to_string()) == spec", 300, |g: &mut Prng| {
+        let id = *g.choose(&MethodId::all());
+        let io = *g.choose(&formats);
+        let domain = *g.choose(&domains);
+        let frac = io.input.frac_bits as i64;
+        let param = match id {
+            MethodId::Lambert => g.i64_in(1, 16) as f64,
+            MethodId::TaylorQuadratic | MethodId::TaylorCubic => {
+                (2f64).powi(-g.i64_in(1, frac - 1) as i32)
+            }
+            _ => (2f64).powi(-g.i64_in(0, frac) as i32),
+        };
+        let spec = MethodSpec::with_param(id, param, io, domain)
+            .map_err(|e| format!("{id:?} param {param} {io:?} dom {domain}: {e}"))?;
+        let text = spec.to_string();
+        let back = MethodSpec::parse(&text)
+            .map_err(|e| format!("'{text}' failed to re-parse: {e}"))?;
+        if back != spec {
+            return Err(format!("'{text}' round-tripped to '{back}'"));
+        }
+        if back.method_id() != id || back.param() != param {
+            return Err(format!("'{text}' lost its parameter"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spec_rejections() {
+    // Malformed design points must be errors, not silent corrections.
+    for bad in [
+        "pwl:step=3",
+        "pwl:step=1/3",
+        "pwl:step=0",
+        "catmull:step=-0.5",
+        "velocity:threshold=0.3",
+        "lambert:terms=0",
+        "lambert:terms=2.5",
+        "lambert:terms=-4",
+        "pwl:in=x3.2",
+        "pwl:out=Q15",
+        "pwl:dom=-6",
+        "pwl:dom=0",
+        "taylor1:step=1/4096", // no expansion bits left in S3.12
+        "nope:step=1/2",
+    ] {
+        assert!(MethodSpec::parse(bad).is_err(), "'{bad}' should be rejected");
+    }
+}
+
 // ---------- batcher invariants ----------
 
 /// Builds a standalone request (the reply receiver is dropped; these
@@ -232,7 +296,7 @@ fn bare_request(id: u64, n: usize) -> Request {
     let (tx, _rx) = std::sync::mpsc::channel();
     Request {
         id,
-        method: MethodId::Pwl,
+        spec: MethodSpec::table1(MethodId::Pwl),
         values: (0..n).map(|i| (id as f32) + (i as f32) * 1e-3).collect(),
         enqueued_at: std::time::Instant::now(),
         reply: tx,
@@ -352,7 +416,7 @@ fn coordinator_slices_padding_off_round_trip() {
         if out.len() != n {
             return Err(format!("{method:?}: {} outputs for {n} inputs", out.len()));
         }
-        let want = verifier.expected(method, &values)?;
+        let want = verifier.expected(&MethodSpec::table1(method), &values)?;
         for (i, (got, exp)) in out.iter().zip(&want).enumerate() {
             if got.to_bits() != exp.to_bits() {
                 return Err(format!("{method:?}[{i}]: {got} != golden {exp}"));
@@ -399,12 +463,12 @@ struct FlakyBackend {
 }
 
 impl ExecBackend for FlakyBackend {
-    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
         let n = self.counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if n % self.fail_every == self.fail_every - 1 {
             return Err("injected backend failure".to_string());
         }
-        self.inner.execute(method, flat)
+        self.inner.execute(spec, flat)
     }
 
     fn batch_elements(&self) -> usize {
@@ -457,9 +521,9 @@ fn coordinator_backpressure_rejects_when_flooded() {
     /// A backend that is very slow, so the queue fills.
     struct SlowBackend(GoldenBackend);
     impl ExecBackend for SlowBackend {
-        fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+        fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
             std::thread::sleep(Duration::from_millis(20));
-            self.0.execute(method, flat)
+            self.0.execute(spec, flat)
         }
         fn batch_elements(&self) -> usize {
             self.0.batch_elements()

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use tanh_vlsi::approx::MethodId;
+use tanh_vlsi::approx::{MethodId, MethodSpec};
 use tanh_vlsi::bench::scenario::{
     build_trace, run_trace, validate_serve_log, RunOptions, Verify, SCENARIO_NAMES,
 };
@@ -17,6 +17,10 @@ use tanh_vlsi::coordinator::{
     RoutePolicy,
 };
 
+fn table1() -> Vec<MethodSpec> {
+    MethodSpec::table1_all()
+}
+
 /// A deliberately slow backend so queues actually fill.
 struct SlowBackend {
     inner: GoldenBackend,
@@ -24,9 +28,9 @@ struct SlowBackend {
 }
 
 impl ExecBackend for SlowBackend {
-    fn execute(&self, method: MethodId, flat: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
         std::thread::sleep(self.delay);
-        self.inner.execute(method, flat)
+        self.inner.execute(spec, flat)
     }
     fn batch_elements(&self) -> usize {
         self.inner.batch_elements()
@@ -41,6 +45,7 @@ fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
             batcher: BatcherConfig { max_queue: 128, ..Default::default() },
             shards: 2,
             route: RoutePolicy::LeastLoaded,
+            ..Default::default()
         },
     ));
 
@@ -109,6 +114,10 @@ fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
         );
         fold = fold.merge(&shard);
     }
+    // Kernel-cache counters are process-global (injected by metrics(),
+    // not folded from shards); align them before the exact comparison.
+    fold.kernel_cache_hits = merged.kernel_cache_hits;
+    fold.kernel_compiles = merged.kernel_compiles;
     assert_eq!(fold, merged, "merged metrics must equal the fold of shard metrics");
 
     if let Ok(c) = Arc::try_unwrap(coord) {
@@ -149,7 +158,7 @@ fn scenarios_complete_deterministically_and_verify_bit_exact() {
     let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
     let mut log = BenchLog::new();
     for name in SCENARIO_NAMES {
-        let trace = build_trace(name, 42, batch, 0.05).unwrap();
+        let trace = build_trace(name, 42, batch, 0.05, &table1()).unwrap();
         let mut fields = Vec::new();
         for _run in 0..2 {
             let coord = Coordinator::start(
@@ -177,11 +186,64 @@ fn scenarios_complete_deterministically_and_verify_bit_exact() {
 }
 
 #[test]
+fn non_table1_spec_serves_bit_exact_against_fresh_golden_kernel() {
+    // The acceptance criterion for the spec redesign: a design point
+    // the old API could not even name (PWL at step 1/32 with an S2.13
+    // input) runs through a 2-shard coordinator scenario with every
+    // reply verified bit-exact — the verifier fresh-compiles its
+    // kernel, independent of the serving backend's cached one.
+    let batch = 128;
+    let spec = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+    assert_ne!(spec, MethodSpec::table1(MethodId::Pwl));
+    let specs = vec![spec];
+    let backend = Arc::new(GoldenBackend::for_specs(&specs, batch));
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig { shards: 2, specs: specs.clone(), ..Default::default() },
+    );
+    assert!(coord.shards_per_method() >= 2);
+    let trace = build_trace("steady", 7, batch, 0.05, &specs).unwrap();
+    let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
+    let out = run_trace(&coord, &trace, &opts).unwrap();
+    assert_eq!(out.completed as usize, trace.requests.len());
+    assert_eq!(out.verified, out.completed, "unverified replies");
+    assert_eq!(out.failed, 0);
+    assert_eq!(out.specs, vec![spec.to_string()]);
+    // The report row carries the spec string, so BENCH_serve.json
+    // readers can reproduce the run with --spec.
+    let row = out.to_json("golden", coord.shards_per_method(), batch);
+    let text = row.to_string_compact();
+    assert!(text.contains("pwl:step=1/32:in=S2.13:out=S.15"), "{text}");
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_table1_and_custom_specs_serve_together() {
+    // One coordinator, seven design points: the six Table I rows plus
+    // a custom one — the zipf mix spreads over all seven and every
+    // reply still verifies bit-exact.
+    let batch = 128;
+    let mut specs = table1();
+    specs.push(MethodSpec::parse("lambert:terms=9").unwrap());
+    let backend = Arc::new(GoldenBackend::for_specs(&specs, batch));
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig { shards: 2, specs: specs.clone(), ..Default::default() },
+    );
+    let trace = build_trace("zipf", 13, batch, 0.1, &specs).unwrap();
+    let out = run_trace(&coord, &trace, &RunOptions::default()).unwrap();
+    assert_eq!(out.failed, 0);
+    assert_eq!(out.verified, out.completed);
+    assert_eq!(out.specs.len(), 7);
+    coord.shutdown();
+}
+
+#[test]
 fn paced_replay_honors_the_open_loop_schedule() {
     // The steady trace spans (count-1) * 30 µs of schedule; a paced run
     // cannot finish faster than the schedule's span.
     let batch = 128;
-    let trace = build_trace("steady", 7, batch, 0.05).unwrap();
+    let trace = build_trace("steady", 7, batch, 0.05, &table1()).unwrap();
     let span_us = trace.requests.last().unwrap().at_us;
     assert!(span_us > 0);
     let coord = Coordinator::start(
@@ -208,13 +270,13 @@ fn flood_scenario_spreads_load_across_shards() {
         Arc::new(GoldenBackend::table1(batch)),
         CoordinatorConfig { shards: 3, ..Default::default() },
     );
-    let trace = build_trace("flood", 11, batch, 0.1).unwrap();
+    let trace = build_trace("flood", 11, batch, 0.1, &table1()).unwrap();
     let out = run_trace(&coord, &trace, &RunOptions::default()).unwrap();
     assert_eq!(out.failed, 0);
     let pwl_busy = coord
         .shard_metrics()
         .into_iter()
-        .filter(|(m, _, s)| *m == MethodId::Pwl && s.submitted > 0)
+        .filter(|(s, _, m)| s.method_id() == MethodId::Pwl && m.submitted > 0)
         .count();
     assert!(pwl_busy >= 2, "flood used only {pwl_busy} of 3 PWL shards");
     // Merged latency histogram saw every reply.
