@@ -11,10 +11,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use tanh_vlsi::approx::MethodId;
-use tanh_vlsi::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend,
-};
-use tanh_vlsi::runtime::{ArtifactDir, EngineServer};
+use tanh_vlsi::backend::{EvalBackend, GoldenBackend, PjrtBackend};
+use tanh_vlsi::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
 use tanh_vlsi::util::prng::Prng;
 
 fn run_load(coord: Arc<Coordinator>, clients: usize, reqs_per_client: usize) -> f64 {
@@ -51,31 +49,33 @@ fn run_load(coord: Arc<Coordinator>, clients: usize, reqs_per_client: usize) -> 
 
 fn main() -> anyhow::Result<()> {
     // Prefer the compiled-PJRT backend; fall back to the golden models
-    // when artifacts are absent so the example always runs.
-    let (backend, backend_name): (Arc<dyn tanh_vlsi::coordinator::ExecBackend>, &str) =
-        match ArtifactDir::open(ArtifactDir::default_path()) {
-            Ok(dir) => {
-                let engine = Arc::new(EngineServer::spawn(dir)?);
-                println!("PJRT platform: {}", engine.platform());
-                (Arc::new(GraphBackend::load_all(engine, 1024)?), "pjrt")
-            }
-            Err(_) => {
-                println!("artifacts not found — using golden-model backend");
-                (Arc::new(GoldenBackend::table1(1024)), "golden")
-            }
-        };
+    // when it is unavailable (missing artifacts or stubbed xla
+    // bindings — PjrtBackend reports, it never panics), so the example
+    // always runs.
+    let pjrt = PjrtBackend::with_default_artifacts(1024);
+    let backend: Arc<dyn EvalBackend> = if pjrt.availability().is_available() {
+        println!("PJRT platform: {}", pjrt.platform().unwrap_or("?"));
+        Arc::new(pjrt)
+    } else {
+        println!("pjrt unavailable — using golden-model backend");
+        Arc::new(GoldenBackend::new())
+    };
+    let backend_name = backend.name();
 
-    let coord = Arc::new(Coordinator::start(
-        backend,
-        CoordinatorConfig {
-            batcher: BatcherConfig {
-                max_wait: std::time::Duration::from_micros(300),
+    let coord = Arc::new(
+        Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_wait: std::time::Duration::from_micros(300),
+                    ..Default::default()
+                },
+                // Two worker shards per method, fed round-robin.
                 ..Default::default()
             },
-            // Two worker shards per method, fed round-robin.
-            ..Default::default()
-        },
-    ));
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?,
+    );
 
     let clients = 8;
     let reqs = 400;

@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use tanh_vlsi::runtime::{ArtifactDir, EngineServer, TensorValue};
+use tanh_vlsi::runtime::{ArtifactDir, Engine, TensorValue};
 use tanh_vlsi::util::prng::Prng;
 
 const BATCH: usize = 32;
@@ -52,11 +52,14 @@ fn accuracy(logits: &[f32], labels: &[i32]) -> f64 {
 }
 
 fn main() -> anyhow::Result<()> {
-    let engine = EngineServer::spawn(ArtifactDir::open(ArtifactDir::default_path())?)?;
+    // Single-threaded driver: use runtime::Engine directly (the
+    // engine-thread indirection lives in backend::PjrtBackend, which
+    // the serving stack uses).
+    let engine = Engine::cpu(ArtifactDir::open(ArtifactDir::default_path())?)?;
     println!("PJRT platform: {}", engine.platform());
-    engine
-        .preload(&["lstm_logits_ref", "lstm_logits_pwl", "lstm_logits_taylor1"])
-        .map_err(anyhow::Error::msg)?;
+    for name in ["lstm_logits_ref", "lstm_logits_pwl", "lstm_logits_taylor1"] {
+        engine.load(name)?;
+    }
 
     let mut g = Prng::new(0xFEED);
     let batches = 32;
@@ -71,16 +74,13 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..batches {
             let (seq, labels) = make_batch(&mut g2);
             let t0 = Instant::now();
-            let out = engine
-                .execute(&name, vec![TensorValue::F32(seq.clone())])
-                .map_err(anyhow::Error::msg)?;
+            let out = engine.load(&name)?.execute(&[TensorValue::F32(seq.clone())])?;
             elapsed += t0.elapsed().as_secs_f64();
             let logits = out[0].as_f32()?;
             acc_sum += accuracy(logits, &labels);
             // agreement vs exact-tanh model on the same batch
-            let ref_out = engine
-                .execute("lstm_logits_ref", vec![TensorValue::F32(seq)])
-                .map_err(anyhow::Error::msg)?;
+            let ref_out =
+                engine.load("lstm_logits_ref")?.execute(&[TensorValue::F32(seq)])?;
             let ref_logits = ref_out[0].as_f32()?;
             let agree = labels
                 .iter()

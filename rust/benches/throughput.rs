@@ -15,11 +15,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tanh_vlsi::approx::{table1_suite, IoSpec, MethodId, TanhApprox};
+use tanh_vlsi::backend::{EvalBackend, GoldenBackend, HwBackend, PjrtBackend};
 use tanh_vlsi::bench::{BenchLog, BenchResult, Bencher};
-use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, ExecBackend, GoldenBackend, GraphBackend};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig};
 use tanh_vlsi::error::{measure_with_threads, InputGrid};
 use tanh_vlsi::fixed::{Fx, QFormat};
-use tanh_vlsi::runtime::{ArtifactDir, EngineServer};
 use tanh_vlsi::util::prng::Prng;
 
 const LOG_PATH: &str = "BENCH_throughput.json";
@@ -103,21 +103,22 @@ fn main() {
 
     // --- full coordinator under load ------------------------------------
     println!("\n=== coordinator end-to-end (8 clients, mixed methods) ===");
-    run_coordinator(
-        "golden",
-        Arc::new(GoldenBackend::table1(1024)),
-        smoke,
-        &mut log,
-    );
+    run_coordinator("golden", Arc::new(GoldenBackend::new()), smoke, &mut log);
+    // Same load on the cycle-accurate hw datapaths: wall-clock is the
+    // simulator's cost, but the run also logs the simulated-cycle
+    // column the serve rows carry.
+    run_coordinator("hw", Arc::new(HwBackend::new()), smoke, &mut log);
 
     // --- PJRT sections (need compiled artifacts + linked PJRT) ----------
-    // Both failure modes fall through to the log write below: a missing
-    // artifacts/ dir, and artifacts present but PJRT stubbed out
-    // (runtime::xla_shim — EngineServer::spawn fails cleanly).
-    match ArtifactDir::open(ArtifactDir::default_path()).and_then(EngineServer::spawn) {
-        Ok(engine) => {
+    // One backend (one engine thread, one graph cache) serves both the
+    // per-graph micro-benches and the coordinator run; both failure
+    // modes — missing artifacts/ dir, and artifacts present but PJRT
+    // stubbed out (runtime::xla_shim) — surface as Unavailable and
+    // fall through to the log write below.
+    let pjrt = PjrtBackend::with_default_artifacts(1024);
+    match pjrt.availability() {
+        tanh_vlsi::backend::Availability::Available => {
             println!("\n=== PJRT compiled activation graphs (batch 1024) ===");
-            let engine = Arc::new(engine);
             let flat: Vec<f32> = {
                 let mut g = Prng::new(2);
                 (0..1024).map(|_| g.f64_in(-6.0, 6.0) as f32).collect()
@@ -126,21 +127,16 @@ fn main() {
                 ["pwl", "taylor1", "taylor2", "catmull_rom", "velocity", "lambert", "ref"]
             {
                 let name = format!("tanh_{method}_1024");
-                engine.preload(&[&name]).expect("preload");
-                let e = engine.clone();
-                let r = Bencher::quick()
-                    .run(&format!("pjrt/{name}"), || e.run_f32(&name, flat.clone()).unwrap().len());
+                pjrt.run_graph_f32(&name, flat.clone()).expect("preload");
+                let r = Bencher::quick().run(&format!("pjrt/{name}"), || {
+                    pjrt.run_graph_f32(&name, flat.clone()).unwrap().len()
+                });
                 println!("{}  [{:.2} Mact/s]", r.report(), 1024.0 * r.per_second() / 1e6);
                 log.record(1024, &r);
             }
-            run_coordinator(
-                "pjrt",
-                Arc::new(GraphBackend::load_all(engine, 1024).expect("backend")),
-                smoke,
-                &mut log,
-            );
+            run_coordinator("pjrt", Arc::new(pjrt), smoke, &mut log);
         }
-        Err(e) => {
+        tanh_vlsi::backend::Availability::Unavailable(e) => {
             println!("\n(skipping PJRT benches: {e} — run `make artifacts` with xla linked)");
         }
     }
@@ -151,8 +147,11 @@ fn main() {
 
 /// Drives the coordinator with 8 pipelined clients and prints/logs the
 /// served throughput, batch fill rate and latency.
-fn run_coordinator(label: &str, backend: Arc<dyn ExecBackend>, smoke: bool, log: &mut BenchLog) {
-    let coord = Arc::new(Coordinator::start(backend, CoordinatorConfig::default()));
+fn run_coordinator(label: &str, backend: Arc<dyn EvalBackend>, smoke: bool, log: &mut BenchLog) {
+    let coord = Arc::new(
+        Coordinator::start(backend, CoordinatorConfig::with_batch(1024))
+            .expect("coordinator starts on an available backend"),
+    );
     let start = std::time::Instant::now();
     let clients = 8;
     let per_client = if smoke { 50 } else { 200 };
@@ -198,6 +197,13 @@ fn run_coordinator(label: &str, backend: Arc<dyn ExecBackend>, smoke: bool, log:
         m.p99_us(),
         m.latency_us_max()
     );
+    if m.sim_cycles > 0 {
+        println!(
+            "coordinator/{label:6}  simulated hw cycles: {} total ({:.1}/batch)",
+            m.sim_cycles,
+            m.sim_cycles as f64 / m.batches.max(1) as f64
+        );
+    }
     log.record(
         m.elements as usize,
         &BenchResult {

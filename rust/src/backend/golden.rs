@@ -1,0 +1,165 @@
+//! Golden-model execution: the compiled integer kernels, resolved
+//! through the shared [`Registry`](crate::approx::Registry) cache.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::approx::{CompiledKernel, MethodSpec};
+
+use super::{golden_kernel, Availability, BackendError, EvalBackend, EvalStats};
+
+/// The reference backend: serves any spec through its compiled integer
+/// kernel (bit-exact against the scalar `eval_fx` datapath models, one
+/// to two orders of magnitude faster). Kernels come from the shared
+/// [`Registry`](crate::approx::Registry), so a spec is compiled once
+/// per process no matter how many backends, coordinators or shards
+/// serve it.
+///
+/// Strictness: [`EvalBackend::eval_raw`] only accepts specs that were
+/// [`EvalBackend::ensure`]d on *this* backend — a routing bug must
+/// surface as `unknown_spec`, not silently trigger a compile on the
+/// hot path.
+#[derive(Default)]
+pub struct GoldenBackend {
+    kernels: RwLock<HashMap<MethodSpec, Arc<CompiledKernel>>>,
+}
+
+impl GoldenBackend {
+    /// An empty backend; specs are admitted via `ensure`.
+    pub fn new() -> GoldenBackend {
+        GoldenBackend::default()
+    }
+
+    /// Convenience: a backend with the six Table I specs pre-ensured.
+    pub fn table1() -> GoldenBackend {
+        GoldenBackend::for_specs(&MethodSpec::table1_all())
+    }
+
+    /// Convenience: a backend with `specs` pre-ensured.
+    pub fn for_specs(specs: &[MethodSpec]) -> GoldenBackend {
+        let b = GoldenBackend::new();
+        for s in specs {
+            b.ensure(s).expect("golden backend serves every valid spec");
+        }
+        b
+    }
+
+    fn kernel(&self, spec: &MethodSpec) -> Result<Arc<CompiledKernel>, BackendError> {
+        self.kernels.read().unwrap().get(spec).cloned().ok_or_else(|| {
+            BackendError::unknown_spec(format!("spec '{spec}' not ensured on the golden backend"))
+        })
+    }
+}
+
+impl EvalBackend for GoldenBackend {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn availability(&self) -> Availability {
+        Availability::Available
+    }
+
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), BackendError> {
+        let kernel = golden_kernel(spec)?;
+        self.kernels.write().unwrap().insert(*spec, kernel);
+        Ok(())
+    }
+
+    fn eval_raw(
+        &self,
+        spec: &MethodSpec,
+        input: &[i64],
+        out: &mut [i64],
+    ) -> Result<EvalStats, BackendError> {
+        super::check_slice_lens(input, out)?;
+        let kernel = self.kernel(spec)?;
+        kernel.eval_slice_raw(input, out);
+        Ok(EvalStats::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{MethodId, TanhApprox};
+    use crate::backend::{eval_f32, ErrorCode};
+    use crate::fixed::{Fx, QFormat};
+
+    #[test]
+    fn golden_backend_evaluates_all_methods() {
+        let b = GoldenBackend::table1();
+        for method in MethodId::all() {
+            let spec = MethodSpec::table1(method);
+            let (out, _) =
+                eval_f32(&b, &spec, &[0.0, 0.5, -0.5, 2.0, -2.0, 6.5, -6.5, 0.1]).unwrap();
+            assert_eq!(out.len(), 8);
+            assert_eq!(out[0], 0.0);
+            assert!((out[1] - 0.46).abs() < 0.01, "{method:?}: {}", out[1]);
+            assert_eq!(out[1], -out[2]);
+            assert!(out[5] > 0.9999);
+        }
+    }
+
+    #[test]
+    fn golden_backend_matches_scalar_datapath() {
+        // Slice-wise raw execution must agree with per-element eval_fx
+        // (including the f32 → S3.12 quantization step).
+        let b = GoldenBackend::table1();
+        let inputs: Vec<f32> = (0..16).map(|i| (i as f32) * 0.41 - 3.3).collect();
+        for m in crate::approx::table1_suite() {
+            let spec = MethodSpec::table1(m.id());
+            let (out, _) = eval_f32(&b, &spec, &inputs).unwrap();
+            for (&v, &y) in inputs.iter().zip(&out) {
+                let x = Fx::from_f64(v as f64, QFormat::S3_12);
+                let want = m.eval_fx(x, QFormat::S_15).to_f64() as f32;
+                assert_eq!(y, want, "{:?} x={v}", m.id());
+            }
+        }
+    }
+
+    #[test]
+    fn golden_backend_serves_non_table1_specs() {
+        let spec = MethodSpec::parse("catmull:step=1/8:in=s2.13:out=s.15:dom=4").unwrap();
+        let b = GoldenBackend::for_specs(&[spec]);
+        let golden = spec.build();
+        let inputs = [0.25f32, -1.5, 3.9, 0.0];
+        let (out, _) = eval_f32(&b, &spec, &inputs).unwrap();
+        for (&v, &y) in inputs.iter().zip(&out) {
+            let x = Fx::from_f64(v as f64, spec.io.input);
+            let want = golden.eval_fx(x, spec.io.output).to_f64() as f32;
+            assert_eq!(y, want, "x={v}");
+        }
+        // Specs never ensured on this backend are typed errors.
+        let other = MethodSpec::table1(MethodId::Pwl);
+        let err = eval_f32(&b, &other, &inputs).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("not ensured"), "{err}");
+    }
+
+    #[test]
+    fn structurally_invalid_specs_error_instead_of_panicking() {
+        use crate::approx::{IoSpec, MethodParams};
+        // MethodSpec fields are public, so a bogus configuration can
+        // reach ensure; it must come back as a typed unknown_spec, not
+        // hit the Taylor constructor's assert mid-serving.
+        let bogus = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let b = GoldenBackend::new();
+        let err = b.ensure(&bogus).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("invalid spec"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_output_slice_is_a_bad_request() {
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let b = GoldenBackend::for_specs(&[spec]);
+        let mut out = vec![0i64; 3];
+        let err = b.eval_raw(&spec, &[0, 1], &mut out).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+}

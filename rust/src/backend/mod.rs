@@ -1,0 +1,347 @@
+//! The unified execution layer: every way this crate can *run* a tanh
+//! design point, behind one API.
+//!
+//! The paper's point is comparative — the same configuration realized
+//! by different implementations (the arithmetic models of §III vs the
+//! §IV block diagrams vs an accelerator runtime). This module makes
+//! that comparison operational: [`EvalBackend`] is the single trait the
+//! coordinator's workers, the CLI (`--backend golden|hw|pjrt`), the
+//! error sweeps and the scenario harness all execute through, and
+//! three implementations port the crate's formerly siloed execution
+//! paths onto it:
+//!
+//! | backend                  | substrate                                    | fidelity                      | latency model |
+//! |--------------------------|----------------------------------------------|-------------------------------|---------------|
+//! | [`GoldenBackend`]        | compiled integer kernels (shared [`Registry`])| bit-exact (the reference)     | none          |
+//! | [`HwBackend`]            | cycle-level Fig 3/4/5 datapaths ([`crate::hw`])| bit-exact *by construction*  | simulated cycles per batch |
+//! | [`PjrtBackend`]          | PJRT-executed AOT graphs ([`crate::runtime`]) | f32 graphs, ±tolerance        | none          |
+//!
+//! ## The contract
+//!
+//! - [`EvalBackend::availability`] answers "could this backend serve at
+//!   all, in this build, on this machine" — [`PjrtBackend`] reports
+//!   [`Availability::Unavailable`] under the [`crate::runtime::xla_shim`]
+//!   stub instead of being unreachable code. The coordinator fails fast
+//!   at startup on an unavailable backend (`backend_unavailable`), it
+//!   never discovers it request-by-request.
+//! - [`EvalBackend::ensure`] prepares one spec (compile the kernel,
+//!   lower the datapath, preload the graph) and is where per-spec
+//!   support surfaces: a spec the Fig 3/4/5 block diagrams cannot
+//!   express errors here with an "unsupported by hw backend" message.
+//!   [`Coordinator::start`](crate::coordinator::Coordinator::start)
+//!   ensures every served spec before accepting traffic.
+//! - [`EvalBackend::eval_raw`] is the hot path: raw fixed-point words
+//!   in (`spec.io.input`), raw words out (`spec.io.output`), plus
+//!   [`EvalStats`] — the hw backend reports the simulated cycle count
+//!   a batch occupied the pipeline, which the serve metrics aggregate
+//!   into the `sim_cycles` column of `BENCH_serve.json`.
+//! - Errors are typed ([`BackendError`]) with the stable wire codes the
+//!   net protocol exposes (see [`crate::coordinator`]'s net docs):
+//!   `unknown_spec`, `backend_unavailable`, `bad_request`,
+//!   `overloaded`, `internal`.
+//!
+//! f32 traffic (the net protocol, the scenario traces) crosses the raw
+//! boundary through one pair of conversions ([`quantize_input`] /
+//! [`dequantize_output`]), shared with the scenario verifier's
+//! [`kernel_eval_f32`] so the serving path and its checker cannot
+//! diverge in conversion semantics.
+
+mod golden;
+mod hw_backend;
+mod pjrt;
+
+pub use golden::GoldenBackend;
+pub use hw_backend::HwBackend;
+pub use pjrt::PjrtBackend;
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::approx::{CompiledKernel, MethodSpec, Registry};
+use crate::fixed::{Fx, QFormat};
+
+/// The backend registry, in CLI order (`--backend` spellings).
+pub const BACKEND_NAMES: [&str; 3] = ["golden", "hw", "pjrt"];
+
+/// Stable error codes crossing the execution/serving boundary. These
+/// are the wire codes of the net protocol's `{"ok": false, "code": …}`
+/// responses — renaming one is a protocol break.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// The spec is well-formed but this coordinator/backend does not
+    /// serve or support it.
+    UnknownSpec,
+    /// The backend cannot run at all in this build/environment (e.g.
+    /// PJRT under the xla shim, missing AOT artifacts).
+    BackendUnavailable,
+    /// The request itself is malformed: bad grammar/JSON, empty
+    /// values, oversized for the compiled batch.
+    BadRequest,
+    /// Load shedding: the routed shard queue is full — retry later.
+    Overloaded,
+    /// Anything unexpected (execution faults, wedged workers).
+    Internal,
+}
+
+impl ErrorCode {
+    /// The stable wire spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::UnknownSpec => "unknown_spec",
+            ErrorCode::BackendUnavailable => "backend_unavailable",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed backend failure: stable code + human message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackendError {
+    /// Stable wire code.
+    pub code: ErrorCode,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl BackendError {
+    /// Builds an error with an explicit code.
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> BackendError {
+        BackendError { code, message: message.into() }
+    }
+
+    /// `unknown_spec` convenience.
+    pub fn unknown_spec(message: impl Into<String>) -> BackendError {
+        BackendError::new(ErrorCode::UnknownSpec, message)
+    }
+
+    /// `backend_unavailable` convenience.
+    pub fn unavailable(message: impl Into<String>) -> BackendError {
+        BackendError::new(ErrorCode::BackendUnavailable, message)
+    }
+
+    /// `bad_request` convenience.
+    pub fn bad_request(message: impl Into<String>) -> BackendError {
+        BackendError::new(ErrorCode::BadRequest, message)
+    }
+
+    /// `internal` convenience.
+    pub fn internal(message: impl Into<String>) -> BackendError {
+        BackendError::new(ErrorCode::Internal, message)
+    }
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// Whether a backend can serve at all in this build/environment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Availability {
+    /// The backend is operational.
+    Available,
+    /// The backend cannot run; the reason is user-facing (what is
+    /// missing and how to get it).
+    Unavailable(String),
+}
+
+impl Availability {
+    /// True when operational.
+    pub fn is_available(&self) -> bool {
+        matches!(self, Availability::Available)
+    }
+}
+
+/// Per-call execution observables a backend can report beyond the
+/// outputs themselves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EvalStats {
+    /// Simulated hardware cycles the call occupied the datapath
+    /// (first issue to last retire). Zero for backends without a cycle
+    /// model (golden kernels, PJRT).
+    pub sim_cycles: u64,
+}
+
+/// One execution path for tanh design points — the API every consumer
+/// (coordinator workers, CLI, sweeps, scenario harness) drives.
+///
+/// Implementations are shard-shareable (`Send + Sync`): per-spec state
+/// is built by [`EvalBackend::ensure`] and read concurrently by
+/// [`EvalBackend::eval_raw`].
+pub trait EvalBackend: Send + Sync + 'static {
+    /// The backend's CLI/report name (`golden`, `hw`, `pjrt`).
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend can serve at all in this build (checked
+    /// once at coordinator startup, before any `ensure`).
+    fn availability(&self) -> Availability;
+
+    /// Prepares a spec for execution: compile its kernel, lower its
+    /// datapath, or preload its AOT graph. Must be called (and
+    /// succeed) before `eval_raw` sees the spec. Errors:
+    /// `unknown_spec` for specs this backend cannot express,
+    /// `backend_unavailable` when the substrate is missing.
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), BackendError>;
+
+    /// Evaluates a slice of raw input words (`spec.io.input` encoding)
+    /// into `out` (`spec.io.output` encoding); `out.len()` must equal
+    /// `input.len()`. Only specs previously `ensure`d are valid.
+    fn eval_raw(
+        &self,
+        spec: &MethodSpec,
+        input: &[i64],
+        out: &mut [i64],
+    ) -> Result<EvalStats, BackendError>;
+
+    /// The exact slice length `eval_raw` requires, when the substrate
+    /// is fixed-shape (PJRT graphs are compiled per batch shape).
+    /// `None` (the default) means any length is accepted. The
+    /// coordinator aligns its batcher to this at startup, so a shape
+    /// mismatch is impossible rather than a per-request failure.
+    fn fixed_batch(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Shared `eval_raw` precondition: `out` must be exactly as long as
+/// `input`. One helper so the trait-level contract (and its error
+/// message) lives in one place across every backend.
+pub(crate) fn check_slice_lens(input: &[i64], out: &[i64]) -> Result<(), BackendError> {
+    if input.len() != out.len() {
+        return Err(BackendError::bad_request(format!(
+            "output slice of {} for {} inputs",
+            out.len(),
+            input.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Quantizes f32 activations to raw input words with the golden
+/// convention: `Fx::from_f64` (round half away from zero, saturating),
+/// matching the scalar datapath bit-for-bit.
+pub fn quantize_input(flat: &[f32], fmt: QFormat) -> Vec<i64> {
+    flat.iter().map(|&v| Fx::from_f64(v as f64, fmt).raw()).collect()
+}
+
+/// Converts raw output words back to f32. Output raws are ≤ 16 bits,
+/// so `raw × ulp` is exact in f32.
+pub fn dequantize_output(raws: &[i64], fmt: QFormat) -> Vec<f32> {
+    let inv = fmt.ulp() as f32;
+    raws.iter().map(|&r| r as f32 * inv).collect()
+}
+
+/// Evaluates f32 activations through a backend with the shared
+/// quantization conventions — the coordinator worker's execute path.
+pub fn eval_f32(
+    backend: &dyn EvalBackend,
+    spec: &MethodSpec,
+    flat: &[f32],
+) -> Result<(Vec<f32>, EvalStats), BackendError> {
+    let raws = quantize_input(flat, spec.io.input);
+    let mut out_raws = vec![0i64; raws.len()];
+    let stats = backend.eval_raw(spec, &raws, &mut out_raws)?;
+    Ok((dequantize_output(&out_raws, spec.io.output), stats))
+}
+
+/// Evaluates a flat f32 slice through a compiled kernel with the same
+/// conversions as [`eval_f32`]. Used by the scenario verifier
+/// ([`crate::bench::scenario::GoldenVerifier`]), whose kernels
+/// deliberately bypass the shared cache — sharing the conversion
+/// helpers here is what keeps the serving path and its checker from
+/// diverging in quantization semantics.
+pub fn kernel_eval_f32(kernel: &CompiledKernel, flat: &[f32]) -> Vec<f32> {
+    let raws = quantize_input(flat, kernel.input());
+    let mut out_raws = vec![0i64; raws.len()];
+    kernel.eval_slice_raw(&raws, &mut out_raws);
+    dequantize_output(&out_raws, kernel.output())
+}
+
+/// Resolves a CLI backend name to an instance. `batch` is the
+/// fixed shape PJRT graphs were AOT'd for (ignored by the slice-based
+/// golden/hw backends). Construction never fails on a missing
+/// substrate — an unusable backend is returned with `Unavailable`
+/// availability and rejected by the coordinator at startup, so
+/// `--backend pjrt` under the shim fails fast with
+/// `backend_unavailable`, not a panic.
+pub fn by_name(name: &str, batch: usize) -> Result<Arc<dyn EvalBackend>, String> {
+    match name {
+        "golden" => Ok(Arc::new(GoldenBackend::new())),
+        "hw" => Ok(Arc::new(HwBackend::new())),
+        "pjrt" => Ok(Arc::new(PjrtBackend::with_default_artifacts(batch))),
+        other => Err(format!("unknown backend '{other}' (have: {})", BACKEND_NAMES.join("|"))),
+    }
+}
+
+/// Shared `ensure` helper: resolves the golden kernel for a spec
+/// through the process-wide [`Registry`] (the bit-exact reference the
+/// hw backend cross-checks against). `MethodSpec` fields are public,
+/// so the spec is re-validated first — a structurally invalid spec
+/// (e.g. a Taylor term count the constructors `assert!` on) surfaces
+/// as a typed `unknown_spec` error at ensure time, never as a
+/// constructor panic mid-serving.
+pub(crate) fn golden_kernel(spec: &MethodSpec) -> Result<Arc<CompiledKernel>, BackendError> {
+    MethodSpec::new(spec.params, spec.io, spec.domain)
+        .map_err(|e| BackendError::unknown_spec(format!("invalid spec '{spec}': {e}")))?;
+    Ok(Registry::global().kernel(spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::MethodId;
+
+    #[test]
+    fn error_codes_have_stable_wire_spellings() {
+        let want = [
+            (ErrorCode::UnknownSpec, "unknown_spec"),
+            (ErrorCode::BackendUnavailable, "backend_unavailable"),
+            (ErrorCode::BadRequest, "bad_request"),
+            (ErrorCode::Overloaded, "overloaded"),
+            (ErrorCode::Internal, "internal"),
+        ];
+        for (code, s) in want {
+            assert_eq!(code.as_str(), s);
+        }
+        let e = BackendError::unavailable("no PJRT");
+        assert_eq!(e.to_string(), "backend_unavailable: no PJRT");
+    }
+
+    #[test]
+    fn by_name_builds_all_registered_backends() {
+        for name in BACKEND_NAMES {
+            let b = by_name(name, 64).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(b.name(), name);
+        }
+        assert!(by_name("tpu", 64).unwrap_err().contains("golden|hw|pjrt"));
+    }
+
+    #[test]
+    fn f32_conversions_round_trip_through_the_golden_kernel() {
+        // eval_f32 over a backend must agree bit-for-bit with
+        // kernel_eval_f32 over the same spec's kernel: one conversion
+        // convention, two entry points.
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let backend = GoldenBackend::new();
+        backend.ensure(&spec).unwrap();
+        let kernel = golden_kernel(&spec).unwrap();
+        let flat = [0.5f32, -0.5, 0.0, 3.25, -6.5, 0.001];
+        let (via_backend, stats) = eval_f32(&backend, &spec, &flat).unwrap();
+        let via_kernel = kernel_eval_f32(&kernel, &flat);
+        assert_eq!(stats.sim_cycles, 0, "golden kernels have no cycle model");
+        for (a, b) in via_backend.iter().zip(&via_kernel) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! PJRT-backed execution: the AOT'd activation graphs run by the
+//! [`crate::runtime`] engine — cleanly `Unavailable` when the `xla`
+//! bindings are stubbed by [`crate::runtime::xla_shim`].
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::{mpsc, Mutex, RwLock};
+
+use crate::approx::{MethodId, MethodSpec};
+use crate::fixed::Fx;
+use crate::runtime::{ArtifactDir, Engine, TensorValue};
+
+use super::{Availability, BackendError, EvalBackend, EvalStats};
+
+/// Jobs crossing into the engine thread. The PJRT client and
+/// executables are not `Send` (the `xla` crate wraps raw pointers
+/// internally), so a single dedicated thread owns them and serves jobs
+/// over a channel — one submission context, many logical clients,
+/// mirroring how accelerator command queues actually work. (This
+/// engine-thread pattern used to live in `runtime::EngineServer`; the
+/// backend owns it now that PJRT execution has exactly one consumer.)
+enum Job {
+    Execute {
+        name: String,
+        inputs: Vec<TensorValue>,
+        reply: mpsc::Sender<Result<Vec<TensorValue>, String>>,
+    },
+    Preload {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<(), String>>,
+    },
+}
+
+/// The live half of a [`PjrtBackend`]: channel to the engine thread.
+struct EngineHandle {
+    tx: Mutex<mpsc::Sender<Job>>,
+    platform: String,
+}
+
+impl EngineHandle {
+    fn spawn(artifacts: ArtifactDir) -> Result<EngineHandle, String> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<String, String>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::cpu(artifacts) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(e.platform()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Execute { name, inputs, reply } => {
+                            let result = engine
+                                .load(&name)
+                                .and_then(|g| g.execute(&inputs))
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(result);
+                        }
+                        Job::Preload { names, reply } => {
+                            let mut result = Ok(());
+                            for name in names {
+                                if let Err(e) = engine.load(&name) {
+                                    result = Err(e.to_string());
+                                    break;
+                                }
+                            }
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| format!("spawning engine thread: {e}"))?;
+        let platform = init_rx
+            .recv()
+            .map_err(|_| "engine thread died during init".to_string())??;
+        Ok(EngineHandle { tx: Mutex::new(tx), platform })
+    }
+
+    fn preload(&self, names: Vec<String>) -> Result<(), String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Preload { names, reply })
+            .map_err(|_| "engine thread gone".to_string())?;
+        rx.recv().map_err(|_| "engine thread gone".to_string())?
+    }
+
+    fn run_f32(&self, name: &str, input: Vec<f32>) -> Result<Vec<f32>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Execute { name: name.to_string(), inputs: vec![TensorValue::F32(input)], reply })
+            .map_err(|_| "engine thread gone".to_string())?;
+        let out = rx.recv().map_err(|_| "engine thread gone".to_string())??;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| "empty tuple".to_string())?
+            .as_f32()
+            .map(|v| v.to_vec())
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// The PJRT backend: each Table I method maps to one AOT'd activation
+/// graph (`tanh_<method>_<batch>`, compiled for a fixed batch shape),
+/// executed on the engine thread.
+///
+/// Construction never fails and never panics: when the `xla` bindings
+/// are stubbed ([`crate::runtime::xla_shim`]) or the artifact
+/// directory is missing, the backend carries
+/// [`Availability::Unavailable`] with the reason, every
+/// `ensure`/`eval_raw` returns a `backend_unavailable` error, and the
+/// coordinator refuses to start on it — `--backend pjrt` fails fast
+/// with a clean message instead of dying mid-request.
+///
+/// Fidelity: the graphs compute in f32 without output quantization, so
+/// this backend is **not** bit-exact against the golden kernels —
+/// outputs are quantized to `spec.io.output` on the way back and the
+/// scenario harness verifies them within a tolerance band, never
+/// `Verify::Exact`. Only the six Table I specs have AOT'd graphs; any
+/// other spec is `unknown_spec`.
+pub struct PjrtBackend {
+    engine: Result<EngineHandle, String>,
+    batch: usize,
+    /// Specs admitted by `ensure` (graph preloaded). `eval_raw` is as
+    /// strict as the other backends: an unensured spec is a typed
+    /// `unknown_spec` error, never a silent fall-through to the
+    /// method's Table I graph.
+    ensured: RwLock<HashSet<MethodSpec>>,
+}
+
+impl PjrtBackend {
+    /// Opens `artifacts` and spawns the engine thread; failures are
+    /// recorded as unavailability, not returned.
+    pub fn new(artifacts: &Path, batch: usize) -> PjrtBackend {
+        let engine = ArtifactDir::open(artifacts)
+            .map_err(|e| e.to_string())
+            .and_then(EngineHandle::spawn);
+        PjrtBackend { engine, batch, ensured: RwLock::new(HashSet::new()) }
+    }
+
+    /// [`PjrtBackend::new`] over the default artifact path.
+    pub fn with_default_artifacts(batch: usize) -> PjrtBackend {
+        PjrtBackend::new(&ArtifactDir::default_path(), batch)
+    }
+
+    /// Artifact name for a method's activation graph.
+    pub fn artifact_name(method: MethodId, batch: usize) -> String {
+        let key = match method {
+            MethodId::Pwl => "pwl",
+            MethodId::TaylorQuadratic => "taylor1",
+            MethodId::TaylorCubic => "taylor2",
+            MethodId::CatmullRom => "catmull_rom",
+            MethodId::Velocity => "velocity",
+            MethodId::Lambert => "lambert",
+        };
+        format!("tanh_{key}_{batch}")
+    }
+
+    /// PJRT platform name, when the engine is up (diagnostics).
+    pub fn platform(&self) -> Option<&str> {
+        self.engine.as_ref().ok().map(|e| e.platform.as_str())
+    }
+
+    /// The fixed batch shape the graphs were AOT'd for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Executes an arbitrary AOT graph by artifact name — the
+    /// bench/diagnostics escape hatch (e.g. the `ref` graph or the
+    /// LSTM models, which have no spec). Serving goes through
+    /// [`EvalBackend::eval_raw`].
+    pub fn run_graph_f32(&self, name: &str, input: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.engine.as_ref().map_err(|e| e.clone())?.run_f32(name, input)
+    }
+
+    fn engine(&self) -> Result<&EngineHandle, BackendError> {
+        self.engine.as_ref().map_err(|reason| {
+            BackendError::unavailable(format!("pjrt backend unavailable: {reason}"))
+        })
+    }
+}
+
+impl EvalBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn availability(&self) -> Availability {
+        match &self.engine {
+            Ok(_) => Availability::Available,
+            Err(reason) => Availability::Unavailable(format!(
+                "{reason} (build with the xla bindings linked and run `make artifacts`)"
+            )),
+        }
+    }
+
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), BackendError> {
+        let engine = self.engine()?;
+        let method = spec.method_id();
+        if *spec != MethodSpec::table1(method) {
+            return Err(BackendError::unknown_spec(format!(
+                "pjrt backend only ships AOT graphs for the Table I specs, not '{spec}' \
+                 (serve arbitrary specs on --backend golden or hw)"
+            )));
+        }
+        engine
+            .preload(vec![Self::artifact_name(method, self.batch)])
+            .map_err(|e| BackendError::unavailable(format!("preloading '{spec}': {e}")))?;
+        self.ensured.write().unwrap().insert(*spec);
+        Ok(())
+    }
+
+    fn eval_raw(
+        &self,
+        spec: &MethodSpec,
+        input: &[i64],
+        out: &mut [i64],
+    ) -> Result<EvalStats, BackendError> {
+        let engine = self.engine()?;
+        if !self.ensured.read().unwrap().contains(spec) {
+            return Err(BackendError::unknown_spec(format!(
+                "spec '{spec}' not ensured on the pjrt backend"
+            )));
+        }
+        super::check_slice_lens(input, out)?;
+        if input.len() != self.batch {
+            return Err(BackendError::bad_request(format!(
+                "pjrt graphs are compiled for batch {}, got {} elements",
+                self.batch,
+                input.len()
+            )));
+        }
+        // The f32 graphs take real-valued activations: widen the raw
+        // words, execute, and re-quantize the f32 results to the output
+        // format (the one lossy backend — see the struct docs).
+        let in_ulp = spec.io.input.ulp();
+        let flat: Vec<f32> = input.iter().map(|&r| (r as f64 * in_ulp) as f32).collect();
+        let name = Self::artifact_name(spec.method_id(), self.batch);
+        let ys = engine
+            .run_f32(&name, flat)
+            .map_err(|e| BackendError::internal(format!("executing '{name}': {e}")))?;
+        if ys.len() != out.len() {
+            return Err(BackendError::internal(format!(
+                "'{name}' returned {} outputs for {} inputs",
+                ys.len(),
+                out.len()
+            )));
+        }
+        for (slot, y) in out.iter_mut().zip(&ys) {
+            *slot = Fx::from_f64(*y as f64, spec.io.output).raw();
+        }
+        Ok(EvalStats::default())
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ErrorCode;
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        assert_eq!(PjrtBackend::artifact_name(MethodId::Pwl, 1024), "tanh_pwl_1024");
+        assert_eq!(
+            PjrtBackend::artifact_name(MethodId::CatmullRom, 1024),
+            "tanh_catmull_rom_1024"
+        );
+    }
+
+    #[test]
+    fn shim_build_reports_unavailable_not_unreachable() {
+        // Under runtime::xla_shim (or without artifacts) the backend
+        // constructs fine, reports Unavailable with a reason, and every
+        // entry point returns the backend_unavailable code — the clean
+        // fail-fast path `serve --backend pjrt` relies on.
+        let b = PjrtBackend::with_default_artifacts(64);
+        // Fixed-shape substrate: the coordinator aligns its batcher to
+        // this at startup.
+        assert_eq!(b.fixed_batch(), Some(64));
+        match b.availability() {
+            Availability::Available => {
+                // Real bindings + artifacts present: ensure must accept
+                // a Table I spec and reject everything else as
+                // unknown_spec.
+                let custom = MethodSpec::parse("pwl:step=1/32").unwrap();
+                assert_eq!(b.ensure(&custom).unwrap_err().code, ErrorCode::UnknownSpec);
+            }
+            Availability::Unavailable(reason) => {
+                assert!(!reason.is_empty());
+                let spec = MethodSpec::table1(MethodId::Pwl);
+                let err = b.ensure(&spec).unwrap_err();
+                assert_eq!(err.code, ErrorCode::BackendUnavailable);
+                let mut out = [0i64; 1];
+                let err = b.eval_raw(&spec, &[0], &mut out).unwrap_err();
+                assert_eq!(err.code, ErrorCode::BackendUnavailable);
+            }
+        }
+    }
+}

@@ -33,7 +33,8 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::approx::{CompiledKernel, MethodSpec};
-use crate::coordinator::{kernel_eval_f32, Coordinator, MetricsSnapshot, RequestResult};
+use crate::backend::{kernel_eval_f32, ErrorCode};
+use crate::coordinator::{Coordinator, MetricsSnapshot, RequestResult};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 
@@ -216,8 +217,8 @@ pub fn build_trace(
 /// bypasses the shared [`crate::approx::Registry`] cache (which the
 /// serving backend uses), so a corrupted cache entry — or a bug in the
 /// coordinator's slicing or routing — cannot cancel out. Conversion
-/// semantics are shared with the backend via
-/// [`crate::coordinator::kernel_eval_f32`].
+/// semantics are shared with the serving backends via
+/// [`crate::backend::kernel_eval_f32`].
 pub struct GoldenVerifier {
     kernels: HashMap<MethodSpec, CompiledKernel>,
 }
@@ -258,8 +259,9 @@ pub enum Verify {
     /// backend serves through the same kernels, so any mismatch is a
     /// batching/routing/slicing bug).
     Exact,
-    /// Absolute tolerance (for the f32 PJRT graphs, which skip output
-    /// quantization).
+    /// Absolute tolerance (for the PJRT graphs, which compute in f32;
+    /// the band absorbs the f32-vs-fixed-point compute difference —
+    /// conversions at the raw boundary are the shared golden ones).
     Tolerance(f64),
     /// No verification.
     Off,
@@ -339,6 +341,7 @@ impl ScenarioOutcome {
             ("evals_per_s", Json::n(self.elements as f64 / secs)),
             ("batches", Json::i(m.batches as i64)),
             ("fill_rate", Json::n(m.fill_rate())),
+            ("sim_cycles", Json::i(m.sim_cycles as i64)),
             ("rejected_retries", Json::i(self.retries as i64)),
             ("p50_us", Json::n(m.p50_us())),
             ("p95_us", Json::n(m.p95_us())),
@@ -364,8 +367,11 @@ impl ScenarioOutcome {
     }
 }
 
-/// Keys every `BENCH_serve.json` row must carry.
-pub const SERVE_ROW_KEYS: [&str; 21] = [
+/// Keys every `BENCH_serve.json` row must carry. `backend` names the
+/// executing [`crate::backend::EvalBackend`]; `sim_cycles` is that
+/// backend's simulated-hardware-latency column (total simulated cycles
+/// across the run's batches — nonzero only on the hw backend).
+pub const SERVE_ROW_KEYS: [&str; 22] = [
     "name",
     "scenario",
     "seed",
@@ -382,6 +388,7 @@ pub const SERVE_ROW_KEYS: [&str; 21] = [
     "evals_per_s",
     "batches",
     "fill_rate",
+    "sim_cycles",
     "rejected_retries",
     "p50_us",
     "p95_us",
@@ -505,7 +512,9 @@ pub fn run_trace(
                     receiver = Some(r);
                     break;
                 }
-                Err(e) if e.contains("backpressure") => {
+                // Typed backpressure: only `overloaded` is retryable;
+                // every other code is a trace/config bug and aborts.
+                Err(e) if e.code == ErrorCode::Overloaded => {
                     retries += 1;
                     std::thread::sleep(Duration::from_micros(20));
                 }

@@ -6,9 +6,10 @@
 //! latency histogram merge is bit-identical to histogramming the
 //! combined sample stream (see [`super::histogram`]).
 //!
-//! The counters are chosen so a conservation law holds once traffic has
-//! drained: `submitted == requests + failed_requests`, and every submit
-//! attempt that passes input validation is either `submitted` or
+//! The counters are chosen so conservation laws hold once traffic has
+//! drained: `submitted == requests + failed_requests`, `failed_requests
+//! == backend_failed_requests + admission_failed_requests`, and every
+//! submit attempt that passes input validation is either `submitted` or
 //! `rejected` (validation failures — empty or oversized requests,
 //! unknown methods — are client errors returned before routing and are
 //! deliberately not counted as load shedding). The stress tests
@@ -24,7 +25,8 @@ use super::histogram::{AtomicHistogram, LatencyHistogram};
 pub struct ServerMetrics {
     submitted: AtomicU64,
     requests: AtomicU64,
-    failed_requests: AtomicU64,
+    backend_failed_requests: AtomicU64,
+    admission_failed_requests: AtomicU64,
     elements: AtomicU64,
     batches: AtomicU64,
     rejected: AtomicU64,
@@ -33,6 +35,7 @@ pub struct ServerMetrics {
     padded_elements: AtomicU64,
     packed_elements: AtomicU64,
     capacity_elements: AtomicU64,
+    sim_cycles: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -42,10 +45,23 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     /// Requests completed successfully.
     pub requests: u64,
-    /// Requests that received an error reply (execution failure or the
-    /// worker's oversized-request guard). `submitted == requests +
-    /// failed_requests` once in-flight traffic has drained.
+    /// Requests that received an error reply. `submitted == requests +
+    /// failed_requests` once in-flight traffic has drained, and
+    /// `failed_requests == backend_failed_requests +
+    /// admission_failed_requests` always.
     pub failed_requests: u64,
+    /// Requests failed by the worker's backend (execution fault,
+    /// unavailable substrate) — `RequestErrorKind::Backend`.
+    pub backend_failed_requests: u64,
+    /// Requests failed by batcher/router admission after queueing (the
+    /// worker's oversized-request guard) —
+    /// `RequestErrorKind::Admission`.
+    pub admission_failed_requests: u64,
+    /// Total simulated hardware cycles reported by the backend
+    /// ([`crate::backend::EvalStats::sim_cycles`]) — the hw backend's
+    /// simulated-latency column; zero on backends without a cycle
+    /// model.
+    pub sim_cycles: u64,
     /// Total activation elements processed.
     pub elements: u64,
     /// Executed batches.
@@ -133,6 +149,9 @@ impl MetricsSnapshot {
         self.submitted += other.submitted;
         self.requests += other.requests;
         self.failed_requests += other.failed_requests;
+        self.backend_failed_requests += other.backend_failed_requests;
+        self.admission_failed_requests += other.admission_failed_requests;
+        self.sim_cycles += other.sim_cycles;
         self.elements += other.elements;
         self.batches += other.batches;
         self.rejected += other.rejected;
@@ -163,10 +182,21 @@ impl ServerMetrics {
         self.latency.record(latency_us);
     }
 
-    /// Records a request that received an error reply.
-    pub fn record_failed_request(&self, latency_us: u64) {
-        self.failed_requests.fetch_add(1, Ordering::Relaxed);
+    /// Records a request failed by the worker's backend.
+    pub fn record_backend_failed_request(&self, latency_us: u64) {
+        self.backend_failed_requests.fetch_add(1, Ordering::Relaxed);
         self.latency.record(latency_us);
+    }
+
+    /// Records a request failed by batcher admission (post-queue).
+    pub fn record_admission_failed_request(&self, latency_us: u64) {
+        self.admission_failed_requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(latency_us);
+    }
+
+    /// Records simulated hardware cycles a batch occupied the backend.
+    pub fn record_sim_cycles(&self, cycles: u64) {
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
     }
 
     /// Records an executed batch: how many useful elements were packed
@@ -188,12 +218,19 @@ impl ServerMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Snapshots all counters.
+    /// Snapshots all counters. `failed_requests` is the sum of the two
+    /// failure-kind counters, so the split conservation law holds by
+    /// construction.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let backend_failed = self.backend_failed_requests.load(Ordering::Relaxed);
+        let admission_failed = self.admission_failed_requests.load(Ordering::Relaxed);
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
-            failed_requests: self.failed_requests.load(Ordering::Relaxed),
+            failed_requests: backend_failed + admission_failed,
+            backend_failed_requests: backend_failed,
+            admission_failed_requests: admission_failed,
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
@@ -249,10 +286,15 @@ mod tests {
         m.record_request(10, 20);
         m.record_request(10, 30);
         m.record_request(10, 40);
-        m.record_failed_request(25);
-        m.record_failed_request(35);
+        m.record_backend_failed_request(25);
+        m.record_admission_failed_request(35);
         let s = m.snapshot();
         assert_eq!(s.submitted, s.requests + s.failed_requests);
+        // The failure-kind split reconciles with the total by
+        // construction.
+        assert_eq!(s.backend_failed_requests, 1);
+        assert_eq!(s.admission_failed_requests, 1);
+        assert_eq!(s.failed_requests, s.backend_failed_requests + s.admission_failed_requests);
         // Failed requests still contribute latency samples.
         assert_eq!(s.latency.count, 5);
     }
@@ -282,15 +324,19 @@ mod tests {
         b.record_submitted();
         b.record_submitted();
         b.record_request(32, 200);
-        b.record_failed_request(300);
+        b.record_backend_failed_request(300);
         b.record_batch(32, 128);
         b.record_rejected();
         b.record_error();
+        b.record_sim_cycles(40);
 
         let merged = a.snapshot().merge(&b.snapshot());
         assert_eq!(merged.submitted, 3);
         assert_eq!(merged.requests, 2);
         assert_eq!(merged.failed_requests, 1);
+        assert_eq!(merged.backend_failed_requests, 1);
+        assert_eq!(merged.admission_failed_requests, 0);
+        assert_eq!(merged.sim_cycles, 40);
         assert_eq!(merged.elements, 96);
         assert_eq!(merged.batches, 2);
         assert_eq!(merged.rejected, 1);

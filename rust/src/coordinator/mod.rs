@@ -14,10 +14,24 @@
 //!   runs shard pools for every spec in `CoordinatorConfig::specs`
 //!   (default: the six Table I rows), so arbitrary (method × parameter
 //!   × I/O-format) design points are servable, addressed by spec string
-//!   over the net front-end. Backends resolve compiled kernels through
-//!   the shared [`crate::approx::Registry`] cache — compiles scale with
-//!   distinct specs, never with shard count (observable via
-//!   `MetricsSnapshot::{kernel_cache_hits, kernel_compiles}`).
+//!   over the net front-end. The golden backend resolves compiled
+//!   kernels through the shared [`crate::approx::Registry`] cache —
+//!   compiles scale with distinct specs, never with shard count
+//!   (observable via `MetricsSnapshot::{kernel_cache_hits,
+//!   kernel_compiles}`).
+//! - Execution is **backend-addressed**: workers drive any
+//!   [`crate::backend::EvalBackend`] — `golden` (compiled kernels),
+//!   `hw` (cycle-accurate Fig 3/4/5 datapaths, whose simulated cycle
+//!   counts surface as the `sim_cycles` metric), or `pjrt` (AOT
+//!   graphs) — and `Coordinator::start` fails fast with a typed
+//!   `backend_unavailable`/`unknown_spec` error when the backend
+//!   cannot serve, instead of dying request-by-request. The same
+//!   scenario trace can therefore be replayed against any backend and
+//!   cross-checked (`tests/serving.rs` does, bit-exact golden vs hw).
+//! - Failures are typed end to end: [`RequestError`] carries the
+//!   stable net-protocol code ([`crate::backend::ErrorCode`]) plus
+//!   *where* the request died ([`RequestErrorKind`]: batcher admission
+//!   vs worker-side backend), counted separately in [`ServerMetrics`].
 //! - std-thread + mpsc architecture (tokio is not in the offline crate
 //!   set); each spec runs `CoordinatorConfig::shards` batcher/worker
 //!   pairs, fed round-robin or least-loaded ([`RoutePolicy`]), so the
@@ -49,12 +63,10 @@ mod metrics;
 mod net;
 mod request;
 mod server;
-mod worker;
 
 pub use batcher::{BatcherConfig, PendingBatch};
 pub use histogram::LatencyHistogram;
 pub use metrics::{MetricsSnapshot, ServerMetrics};
-pub use request::{Request, RequestResult};
-pub use server::{Coordinator, CoordinatorConfig, ExecBackend, RoutePolicy};
 pub use net::{NetClient, NetServer};
-pub use worker::{kernel_eval_f32, GoldenBackend, GraphBackend};
+pub use request::{Request, RequestError, RequestErrorKind, RequestResult};
+pub use server::{Coordinator, CoordinatorConfig, RoutePolicy};

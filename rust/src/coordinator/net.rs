@@ -9,13 +9,40 @@
 //! ← {"ok": true, "values": [0.4621, -0.8482], "latency_us": 412}
 //! → {"spec": "pwl:step=1/32:in=s2.13:out=s.15", "values": [0.5]}
 //! ← {"ok": true, "values": [0.4621], "latency_us": 80}
+//! → {"backend": "hw", "spec": "pwl:step=1/64:in=S3.12:out=S.15", "values": [0.5]}
+//! ← {"ok": true, "values": [0.4621], "latency_us": 95}
 //! → {"cmd": "metrics"}
-//! ← {"ok": true, "requests": 2, "batches": 1, ...}
+//! ← {"ok": true, "backend": "golden", "requests": 2, ...}
 //! ```
 //!
 //! A `"spec"` key addresses any served design point by its spec string
 //! (must be in the coordinator's served set); `"method"` remains the
-//! short form for the method's first served spec.
+//! short form for the method's first served spec. An optional
+//! `"backend"` key pins any request — evaluations and commands alike —
+//! to an execution backend: a coordinator runs exactly one backend per
+//! deployment, so a request naming a *different* backend is refused
+//! with `backend_unavailable`
+//! (clients use it to assert which implementation is answering — e.g.
+//! a verifier that only accepts cycle-accurate `hw` replies).
+//!
+//! ## Error responses
+//!
+//! Failures are structured — `{"ok": false, "code": "<code>",
+//! "error": "<detail>"}` — with **stable codes** (the `error` text is
+//! human-facing and may change; the `code` is the protocol):
+//!
+//! | code                  | meaning                                                        | retry?            |
+//! |-----------------------|----------------------------------------------------------------|-------------------|
+//! | `bad_request`         | malformed input: bad JSON, unknown key/cmd, spec-grammar error, unknown method name, empty or oversized `values` | no — fix the request |
+//! | `unknown_spec`        | well-formed spec/method that this coordinator does not serve   | no — pick a served spec (`cmd: metrics` lists them) |
+//! | `backend_unavailable` | the execution backend cannot run in this build/environment, or the request's `"backend"` pin names one this deployment does not run | no — redeploy with the substrate present, or drop/fix the pin |
+//! | `overloaded`          | backpressure: the routed shard queue is full                   | yes — after a backoff |
+//! | `internal`            | unexpected failure (execution fault, worker race)              | maybe — and report it |
+//!
+//! The codes are [`crate::backend::ErrorCode`]; request-path failures
+//! additionally distinguish *where* they happened
+//! ([`crate::coordinator::RequestErrorKind`]) in the server metrics
+//! (`backend_failed_requests` vs `admission_failed_requests`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -23,8 +50,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::approx::{MethodId, MethodSpec};
+use crate::backend::ErrorCode;
 use crate::util::json::{self, Json};
 
+use super::request::RequestError;
 use super::server::Coordinator;
 
 /// A running TCP server wrapping a coordinator.
@@ -108,17 +137,46 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
 fn handle_line(line: &str, coord: &Coordinator) -> Json {
     let doc = match json::parse(line) {
         Ok(d) => d,
-        Err(e) => return err(format!("bad json: {e}")),
+        Err(e) => return err(ErrorCode::BadRequest, format!("bad json: {e}")),
     };
+    // Optional backend pin, honored on EVERY request kind (commands
+    // included): one backend per deployment, so a request naming a
+    // different one is a deployment mismatch, not a routable request.
+    // A malformed pin is rejected, never silently treated as absent —
+    // the pin exists precisely so clients can assert which
+    // implementation answers.
+    if let Some(pin) = doc.get("backend") {
+        match pin.str() {
+            Some(want) if want == coord.backend_name() => {}
+            Some(want) => {
+                return err(
+                    ErrorCode::BackendUnavailable,
+                    format!(
+                        "this deployment serves backend '{}', not '{want}'",
+                        coord.backend_name()
+                    ),
+                )
+            }
+            None => {
+                return err(
+                    ErrorCode::BadRequest,
+                    "'backend' must be a backend-name string".into(),
+                )
+            }
+        }
+    }
     if let Some(cmd) = doc.get("cmd").and_then(|c| c.str()) {
         return match cmd {
             "metrics" => {
                 let m = coord.metrics();
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
+                    ("backend", Json::s(coord.backend_name())),
                     ("submitted", Json::i(m.submitted as i64)),
                     ("requests", Json::i(m.requests as i64)),
                     ("failed_requests", Json::i(m.failed_requests as i64)),
+                    ("backend_failed_requests", Json::i(m.backend_failed_requests as i64)),
+                    ("admission_failed_requests", Json::i(m.admission_failed_requests as i64)),
                     ("elements", Json::i(m.elements as i64)),
                     ("batches", Json::i(m.batches as i64)),
                     ("rejected", Json::i(m.rejected as i64)),
@@ -128,6 +186,7 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("p95_us", Json::n(m.p95_us())),
                     ("p99_us", Json::n(m.p99_us())),
                     ("max_latency_us", Json::i(m.latency_us_max() as i64)),
+                    ("sim_cycles", Json::i(m.sim_cycles as i64)),
                     ("shards_per_method", Json::i(coord.shards_per_method() as i64)),
                     ("batch_efficiency", Json::n(m.batch_efficiency())),
                     ("batch_fill_rate", Json::n(m.fill_rate())),
@@ -141,42 +200,49 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                 ])
             }
             "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-            other => err(format!("unknown cmd '{other}'")),
+            other => err(ErrorCode::BadRequest, format!("unknown cmd '{other}'")),
         };
     }
     let Some(values) = doc.get("values").and_then(|v| v.as_arr()) else {
-        return err("missing 'values' array".into());
+        return err(ErrorCode::BadRequest, "missing 'values' array".into());
     };
     let values: Vec<f32> = values.iter().filter_map(|v| v.num()).map(|v| v as f32).collect();
     let t0 = std::time::Instant::now();
     // "spec" addresses an exact design point; "method" is the short
     // form for that method's first served spec. Both use the unified
-    // parse errors (accepted names / grammar listed on failure).
-    let result = if let Some(spec_str) = doc.get("spec").and_then(|s| s.str()) {
-        match MethodSpec::parse(spec_str) {
-            Ok(spec) => coord.evaluate_spec(&spec, values),
-            Err(e) => Err(e),
-        }
-    } else if let Some(name) = doc.get("method").and_then(|m| m.str()) {
-        match MethodId::parse_or_err(name) {
-            Ok(method) => coord.evaluate(method, values),
-            Err(e) => Err(e),
-        }
-    } else {
-        Err("missing 'method' or 'spec'".to_string())
-    };
+    // parse errors (accepted names / grammar listed on failure);
+    // grammar failures are bad_request, a parsed-but-unserved spec is
+    // unknown_spec (from the coordinator).
+    let result: Result<Vec<f32>, RequestError> =
+        if let Some(spec_str) = doc.get("spec").and_then(|s| s.str()) {
+            match MethodSpec::parse(spec_str) {
+                Ok(spec) => coord.evaluate_spec(&spec, values),
+                Err(e) => Err(RequestError::admission(ErrorCode::BadRequest, e)),
+            }
+        } else if let Some(name) = doc.get("method").and_then(|m| m.str()) {
+            match MethodId::parse_or_err(name) {
+                Ok(method) => coord.evaluate(method, values),
+                Err(e) => Err(RequestError::admission(ErrorCode::BadRequest, e)),
+            }
+        } else {
+            Err(RequestError::admission(ErrorCode::BadRequest, "missing 'method' or 'spec'"))
+        };
     match result {
         Ok(out) => Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("values", Json::arr(out.into_iter().map(|v| Json::n(v as f64)).collect())),
             ("latency_us", Json::i(t0.elapsed().as_micros() as i64)),
         ]),
-        Err(e) => err(e),
+        Err(e) => err(e.code, e.message),
     }
 }
 
-fn err(msg: String) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::s(msg))])
+fn err(code: ErrorCode, msg: String) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::s(code.as_str())),
+        ("error", Json::s(msg)),
+    ])
 }
 
 /// Minimal blocking client for the line protocol (used by the example
@@ -204,7 +270,8 @@ impl NetClient {
         json::parse(&line)
     }
 
-    /// Evaluates a batch of activations.
+    /// Evaluates a batch of activations. Failures format as
+    /// `"<code>: <detail>"` using the stable protocol codes.
     pub fn evaluate(&mut self, method: &str, values: &[f32]) -> Result<Vec<f32>, String> {
         let req = Json::obj(vec![
             ("method", Json::s(method)),
@@ -212,11 +279,9 @@ impl NetClient {
         ]);
         let resp = self.call(&req)?;
         if resp.get("ok").map(|o| *o == Json::Bool(true)) != Some(true) {
-            return Err(resp
-                .get("error")
-                .and_then(|e| e.str())
-                .unwrap_or("unknown error")
-                .to_string());
+            let code = resp.get("code").and_then(|c| c.str()).unwrap_or("internal");
+            let detail = resp.get("error").and_then(|e| e.str()).unwrap_or("unknown error");
+            return Err(format!("{code}: {detail}"));
         }
         Ok(resp
             .get("values")
@@ -232,15 +297,28 @@ impl NetClient {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{CoordinatorConfig, GoldenBackend};
+    use crate::backend::GoldenBackend;
+    use crate::coordinator::CoordinatorConfig;
 
     fn start_server() -> (NetServer, Arc<Coordinator>) {
-        let coord = Arc::new(Coordinator::start(
-            Arc::new(GoldenBackend::table1(256)),
-            CoordinatorConfig::default(),
-        ));
+        let coord = Arc::new(
+            Coordinator::start(
+                Arc::new(GoldenBackend::new()),
+                CoordinatorConfig::with_batch(256),
+            )
+            .unwrap(),
+        );
         let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
         (server, coord)
+    }
+
+    fn assert_code(resp: &Json, code: &str) {
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        assert_eq!(resp.get("code").and_then(|c| c.str()), Some(code), "{resp:?}");
+        assert!(
+            resp.get("error").and_then(|e| e.str()).is_some_and(|e| !e.is_empty()),
+            "{resp:?}"
+        );
     }
 
     #[test]
@@ -266,6 +344,12 @@ mod tests {
         assert!(m.get("submitted").unwrap().num().unwrap() >= 1.0);
         assert!(m.get("p50_us").is_some() && m.get("p99_us").is_some());
         assert!(m.get("shards_per_method").unwrap().num().unwrap() >= 2.0);
+        // Backend-era observables: which backend served, the failure
+        // split, and the simulated-cycle column (zero on golden).
+        assert_eq!(m.get("backend").and_then(|b| b.str()), Some("golden"));
+        assert_eq!(m.get("backend_failed_requests").unwrap().num(), Some(0.0));
+        assert_eq!(m.get("admission_failed_requests").unwrap().num(), Some(0.0));
+        assert_eq!(m.get("sim_cycles").unwrap().num(), Some(0.0));
         // The shared-cache observables and the served spec list are on
         // the metrics endpoint.
         assert!(m.get("kernel_compiles").unwrap().num().unwrap() >= 6.0);
@@ -284,37 +368,50 @@ mod tests {
         ]);
         let resp = client.call(&req).unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
-        // A valid but unserved spec fails with the served list.
+        // A valid but unserved spec fails with unknown_spec + the
+        // served list.
         let req = Json::obj(vec![
             ("spec", Json::s("pwl:step=1/32")),
             ("values", Json::arr(vec![Json::n(0.5)])),
         ]);
         let resp = client.call(&req).unwrap();
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_code(&resp, "unknown_spec");
         assert!(resp.get("error").unwrap().str().unwrap().contains("not served"));
-        // A malformed spec fails with a grammar-ish error.
+        // A malformed spec fails with bad_request + a grammar-ish error.
         let req = Json::obj(vec![
             ("spec", Json::s("pwl:step=1/3")),
             ("values", Json::arr(vec![Json::n(0.5)])),
         ]);
         let resp = client.call(&req).unwrap();
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_code(&resp, "bad_request");
         server.stop();
     }
 
     #[test]
-    fn error_paths() {
+    fn error_paths_carry_stable_codes() {
         let (server, _coord) = start_server();
         let mut client = NetClient::connect(server.addr()).unwrap();
         // bad json
         let resp = client.call(&Json::s("not an object")).unwrap();
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
-        // unknown method
+        assert_code(&resp, "bad_request");
+        // unknown cmd
+        let resp = client.call(&Json::obj(vec![("cmd", Json::s("reboot"))])).unwrap();
+        assert_code(&resp, "bad_request");
+        // missing values
+        let resp = client.call(&Json::obj(vec![("method", Json::s("pwl"))])).unwrap();
+        assert_code(&resp, "bad_request");
+        // unknown method (the client folds code + detail into the Err)
         let err = client.evaluate("sinh", &[1.0]).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
         assert!(err.contains("method"), "{err}");
         // empty values
         let err = client.evaluate("pwl", &[]).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
         assert!(err.contains("empty"), "{err}");
+        // oversized values → bad_request from admission
+        let err = client.evaluate("pwl", &vec![0.0; 257]).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
+        assert!(err.contains("exceeds"), "{err}");
         server.stop();
     }
 
@@ -338,5 +435,57 @@ mod tests {
             h.join().unwrap();
         }
         server.stop();
+    }
+
+    #[test]
+    fn hw_backend_serves_over_the_wire_with_cycle_metrics() {
+        use crate::backend::HwBackend;
+        // The multi-backend acceptance at the net layer: an hw-backed
+        // coordinator answers the same protocol, bit-identical to a
+        // golden-backed one, and its metrics carry nonzero sim_cycles.
+        let specs = vec![MethodSpec::table1(MethodId::Pwl)];
+        let cfg = CoordinatorConfig {
+            specs: specs.clone(),
+            ..CoordinatorConfig::with_batch(64)
+        };
+        let hw = Arc::new(
+            Coordinator::start(Arc::new(HwBackend::new()), cfg.clone()).unwrap(),
+        );
+        let golden = Arc::new(
+            Coordinator::start(Arc::new(GoldenBackend::new()), cfg).unwrap(),
+        );
+        let hw_srv = NetServer::start(hw.clone(), "127.0.0.1:0").unwrap();
+        let golden_srv = NetServer::start(golden.clone(), "127.0.0.1:0").unwrap();
+        let mut hw_client = NetClient::connect(hw_srv.addr()).unwrap();
+        let mut golden_client = NetClient::connect(golden_srv.addr()).unwrap();
+        let xs = [0.5f32, -0.5, 0.125, 3.75, -6.5];
+        let a = hw_client.evaluate("pwl", &xs).unwrap();
+        let b = golden_client.evaluate("pwl", &xs).unwrap();
+        for (x, (ya, yb)) in xs.iter().zip(a.iter().zip(&b)) {
+            assert_eq!(ya.to_bits(), yb.to_bits(), "x={x}: hw {ya} vs golden {yb}");
+        }
+        // Backend-pinned requests: accepted when the pin matches the
+        // deployment, refused with backend_unavailable otherwise.
+        let pinned = Json::obj(vec![
+            ("backend", Json::s("hw")),
+            ("method", Json::s("pwl")),
+            ("values", Json::arr(vec![Json::n(0.5)])),
+        ]);
+        let resp = hw_client.call(&pinned).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let resp = golden_client.call(&pinned).unwrap();
+        assert_code(&resp, "backend_unavailable");
+        // The pin is honored on command requests too.
+        let pinned_cmd =
+            Json::obj(vec![("cmd", Json::s("metrics")), ("backend", Json::s("golden"))]);
+        let resp = hw_client.call(&pinned_cmd).unwrap();
+        assert_code(&resp, "backend_unavailable");
+        let resp = golden_client.call(&pinned_cmd).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let m = hw_client.call(&Json::obj(vec![("cmd", Json::s("metrics"))])).unwrap();
+        assert_eq!(m.get("backend").and_then(|b| b.str()), Some("hw"));
+        assert!(m.get("sim_cycles").unwrap().num().unwrap() > 0.0, "{m:?}");
+        hw_srv.stop();
+        golden_srv.stop();
     }
 }

@@ -1,9 +1,11 @@
 //! Request/response types crossing the coordinator boundary.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::approx::MethodSpec;
+use crate::backend::ErrorCode;
 
 /// A tanh-activation request: a vector of f32 inputs to be evaluated
 /// with a given approximation configuration.
@@ -21,23 +23,106 @@ pub struct Request {
     pub reply: mpsc::Sender<RequestResult>,
 }
 
+/// Where in the serving stack a request failed — the axis
+/// [`crate::coordinator::ServerMetrics`] counts failures on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestErrorKind {
+    /// Rejected before execution: router/batcher admission (unknown
+    /// spec, empty/oversized input, backpressure, shutdown race).
+    Admission,
+    /// The worker's backend failed the batch this request rode in
+    /// (execution fault, unavailable substrate).
+    Backend,
+}
+
+/// A typed request failure: where it happened
+/// ([`RequestErrorKind`]) + the stable wire code
+/// ([`ErrorCode`], what the net protocol reports) + detail. Replaces
+/// the old bare `String`, which made worker-side backend faults
+/// indistinguishable from admission rejections in tests and metrics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestError {
+    /// Which layer failed the request.
+    pub kind: RequestErrorKind,
+    /// Stable wire code (`unknown_spec`, `backend_unavailable`,
+    /// `bad_request`, `overloaded`, `internal`).
+    pub code: ErrorCode,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl RequestError {
+    /// An admission-side failure (router or batcher, pre-execution).
+    pub fn admission(code: ErrorCode, message: impl Into<String>) -> RequestError {
+        RequestError { kind: RequestErrorKind::Admission, code, message: message.into() }
+    }
+
+    /// A worker-side backend failure.
+    pub fn backend(code: ErrorCode, message: impl Into<String>) -> RequestError {
+        RequestError { kind: RequestErrorKind::Backend, code, message: message.into() }
+    }
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for RequestError {}
+
 /// The outcome delivered on the reply channel.
 #[derive(Clone, Debug)]
 pub struct RequestResult {
     /// Request id (matches [`Request::id`]).
     pub id: u64,
-    /// Outputs, in input order, or the error message.
-    pub outcome: Result<Vec<f32>, String>,
+    /// Outputs, in input order, or the typed failure.
+    pub outcome: Result<Vec<f32>, RequestError>,
     /// Queue + execute latency in microseconds.
     pub latency_us: u64,
 }
 
 impl RequestResult {
-    /// Unwraps the outputs, panicking on a failed request (tests).
+    /// Unwraps the outputs, panicking on a failed request (tests). The
+    /// panic names the failing layer and code, so a backend fault mid-
+    /// test reads as such instead of an anonymous error string.
     pub fn expect_values(self) -> Vec<f32> {
         match self.outcome {
             Ok(v) => v,
-            Err(e) => panic!("request {} failed: {e}", self.id),
+            Err(e) => panic!(
+                "request {} failed at {:?} [{}]: {}",
+                self.id,
+                e.kind,
+                e.code.as_str(),
+                e.message
+            ),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_errors_carry_kind_and_stable_code() {
+        let a = RequestError::admission(ErrorCode::Overloaded, "backpressure: queue full");
+        assert_eq!(a.kind, RequestErrorKind::Admission);
+        assert_eq!(a.code.as_str(), "overloaded");
+        assert_eq!(a.to_string(), "overloaded: backpressure: queue full");
+        let b = RequestError::backend(ErrorCode::Internal, "injected");
+        assert_eq!(b.kind, RequestErrorKind::Backend);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "Backend [internal]")]
+    fn expect_values_names_the_failing_layer() {
+        let r = RequestResult {
+            id: 7,
+            outcome: Err(RequestError::backend(ErrorCode::Internal, "boom")),
+            latency_us: 1,
+        };
+        let _ = r.expect_values();
     }
 }

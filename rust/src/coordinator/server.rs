@@ -13,9 +13,15 @@
 //! `shard_metrics()` exposes the unmerged per-shard counters for
 //! imbalance diagnostics.
 //!
-//! Shards never compile: backends resolve kernels through the shared
-//! [`Registry`](crate::approx::Registry), so a spec is compiled once
-//! per process no matter how many shards serve it.
+//! Execution is backend-addressed: workers drive any
+//! [`EvalBackend`] — golden kernels, the cycle-accurate hw datapaths,
+//! or PJRT graphs — through the one trait, and
+//! [`Coordinator::start`] fails fast (typed
+//! [`BackendError`]) when the backend is unavailable in this build or
+//! cannot express a served spec, instead of discovering it
+//! request-by-request. Workers never compile: backends resolve their
+//! per-spec state in `ensure`, once per served spec, before traffic is
+//! accepted.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -24,20 +30,11 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::approx::{MethodId, MethodSpec, Registry};
+use crate::backend::{eval_f32, Availability, BackendError, ErrorCode, EvalBackend};
 
 use super::batcher::{BatcherConfig, PendingBatch};
 use super::metrics::{MetricsSnapshot, ServerMetrics};
-use super::request::{Request, RequestResult};
-
-/// Something that can evaluate a fixed-size flat batch for a spec.
-/// Implemented by the PJRT [`super::GraphBackend`] and the golden-model
-/// fallback ([`super::worker::GoldenBackend`]).
-pub trait ExecBackend: Send + Sync + 'static {
-    /// Evaluates a full batch (length == `batch_elements`).
-    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String>;
-    /// The fixed batch size the backend was compiled for.
-    fn batch_elements(&self) -> usize;
-}
+use super::request::{Request, RequestError, RequestResult};
 
 /// How the router picks a shard within a method's pool.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -63,7 +60,9 @@ impl RoutePolicy {
 /// Coordinator tuning knobs.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Batching policy (batch size is overridden by the backend's).
+    /// Batching policy; `batcher.batch_elements` is the fixed batch
+    /// shape workers pack into (and, for PJRT, must match the shape
+    /// the graphs were AOT'd for).
     pub batcher: BatcherConfig,
     /// Worker shards per spec (clamped to ≥ 1).
     pub shards: usize,
@@ -83,6 +82,16 @@ impl Default for CoordinatorConfig {
             route: RoutePolicy::RoundRobin,
             specs: MethodSpec::table1_all(),
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// The default config with an explicit batch shape — the common
+    /// test/bench spelling.
+    pub fn with_batch(batch_elements: usize) -> CoordinatorConfig {
+        let mut cfg = CoordinatorConfig::default();
+        cfg.batcher.batch_elements = batch_elements;
+        cfg
     }
 }
 
@@ -108,15 +117,37 @@ pub struct Coordinator {
     next_id: AtomicU64,
     cfg: BatcherConfig,
     route: RoutePolicy,
+    backend_name: &'static str,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Coordinator {
     /// Starts `cfg.shards` batcher/worker threads per served spec over
     /// the backend.
-    pub fn start(backend: Arc<dyn ExecBackend>, cfg: CoordinatorConfig) -> Coordinator {
+    ///
+    /// Fails fast — before any thread spawns or request is accepted —
+    /// when the backend is [`Availability::Unavailable`] in this build
+    /// (`backend_unavailable`: e.g. PJRT under the xla shim) or when
+    /// [`EvalBackend::ensure`] rejects a served spec (`unknown_spec`:
+    /// e.g. a config the hw block diagrams cannot express, or a
+    /// non-Table-I spec on PJRT).
+    pub fn start(
+        backend: Arc<dyn EvalBackend>,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator, BackendError> {
+        if let Availability::Unavailable(reason) = backend.availability() {
+            return Err(BackendError::unavailable(format!(
+                "backend '{}' cannot serve: {reason}",
+                backend.name()
+            )));
+        }
         let mut batcher_cfg = cfg.batcher;
-        batcher_cfg.batch_elements = backend.batch_elements();
+        // Fixed-shape substrates (PJRT) dictate the batch: align the
+        // batcher at startup so a shape mismatch is impossible instead
+        // of failing every request at flush time.
+        if let Some(batch) = backend.fixed_batch() {
+            batcher_cfg.batch_elements = batch;
+        }
         let shards = cfg.shards.max(1);
         let mut specs: Vec<MethodSpec> = Vec::with_capacity(cfg.specs.len());
         for s in &cfg.specs {
@@ -127,6 +158,15 @@ impl Coordinator {
         if specs.is_empty() {
             specs = MethodSpec::table1_all();
         }
+        for spec in &specs {
+            backend.ensure(spec).map_err(|e| {
+                BackendError::new(
+                    e.code,
+                    format!("backend '{}' cannot serve '{spec}': {}", backend.name(), e.message),
+                )
+            })?;
+        }
+        let backend_name = backend.name();
         let mut pools = HashMap::new();
         let mut workers = Vec::new();
         for &spec in &specs {
@@ -149,37 +189,46 @@ impl Coordinator {
             }
             pools.insert(spec, SpecShards { shards: pool, rr: AtomicUsize::new(0) });
         }
-        Coordinator {
+        Ok(Coordinator {
             specs,
             pools,
             next_id: AtomicU64::new(0),
             cfg: batcher_cfg,
             route: cfg.route,
+            backend_name,
             workers: Mutex::new(workers),
-        }
+        })
     }
 
     /// Submits a request for an explicit design point; the reply
-    /// arrives on the returned channel. Fails fast under backpressure,
-    /// oversized input, or a spec this coordinator does not serve.
+    /// arrives on the returned channel. Fails fast with a typed
+    /// [`RequestError`] under backpressure (`overloaded`), malformed
+    /// input (`bad_request`), or a spec this coordinator does not
+    /// serve (`unknown_spec`).
     pub fn submit_spec(
         &self,
         spec: &MethodSpec,
         values: Vec<f32>,
-    ) -> Result<mpsc::Receiver<RequestResult>, String> {
+    ) -> Result<mpsc::Receiver<RequestResult>, RequestError> {
         if values.is_empty() {
-            return Err("empty request".into());
+            return Err(RequestError::admission(ErrorCode::BadRequest, "empty request"));
         }
         if values.len() > self.cfg.batch_elements {
-            return Err(format!(
-                "request of {} elements exceeds the compiled batch {}",
-                values.len(),
-                self.cfg.batch_elements
+            return Err(RequestError::admission(
+                ErrorCode::BadRequest,
+                format!(
+                    "request of {} elements exceeds the compiled batch {}",
+                    values.len(),
+                    self.cfg.batch_elements
+                ),
             ));
         }
         let pool = self.pools.get(spec).ok_or_else(|| {
             let served: Vec<String> = self.specs.iter().map(|s| s.to_string()).collect();
-            format!("spec '{spec}' is not served (serving: {})", served.join(", "))
+            RequestError::admission(
+                ErrorCode::UnknownSpec,
+                format!("spec '{spec}' is not served (serving: {})", served.join(", ")),
+            )
         })?;
         let shard = match self.route {
             RoutePolicy::RoundRobin => {
@@ -195,7 +244,10 @@ impl Coordinator {
         let depth = shard.depth.load(Ordering::Relaxed);
         if depth + values.len() > self.cfg.max_queue {
             shard.metrics.record_rejected();
-            return Err(format!("backpressure: shard queue at {depth} elements"));
+            return Err(RequestError::admission(
+                ErrorCode::Overloaded,
+                format!("backpressure: shard queue at {depth} elements"),
+            ));
         }
         let (reply_tx, reply_rx) = mpsc::channel();
         let len = values.len();
@@ -214,7 +266,7 @@ impl Coordinator {
             }
             Err(_) => {
                 shard.depth.fetch_sub(len, Ordering::Relaxed);
-                Err("worker shut down".to_string())
+                Err(RequestError::admission(ErrorCode::Internal, "worker shut down"))
             }
         }
     }
@@ -226,26 +278,41 @@ impl Coordinator {
         &self,
         method: MethodId,
         values: Vec<f32>,
-    ) -> Result<mpsc::Receiver<RequestResult>, String> {
+    ) -> Result<mpsc::Receiver<RequestResult>, RequestError> {
         let spec = *self
             .specs
             .iter()
             .find(|s| s.method_id() == method)
-            .ok_or_else(|| format!("no served spec for method {}", method.name()))?;
+            .ok_or_else(|| {
+                RequestError::admission(
+                    ErrorCode::UnknownSpec,
+                    format!("no served spec for method {}", method.name()),
+                )
+            })?;
         self.submit_spec(&spec, values)
     }
 
     /// Blocking convenience: submit by method and wait.
-    pub fn evaluate(&self, method: MethodId, values: Vec<f32>) -> Result<Vec<f32>, String> {
+    pub fn evaluate(&self, method: MethodId, values: Vec<f32>) -> Result<Vec<f32>, RequestError> {
         let rx = self.submit(method, values)?;
-        let result = rx.recv().map_err(|_| "worker dropped reply".to_string())?;
+        // A dropped reply means the worker died AFTER accepting the
+        // request — a worker-side failure, not an admission rejection.
+        let result = rx.recv().map_err(|_| {
+            RequestError::backend(ErrorCode::Internal, "worker dropped reply")
+        })?;
         result.outcome
     }
 
     /// Blocking convenience: submit by spec and wait.
-    pub fn evaluate_spec(&self, spec: &MethodSpec, values: Vec<f32>) -> Result<Vec<f32>, String> {
+    pub fn evaluate_spec(
+        &self,
+        spec: &MethodSpec,
+        values: Vec<f32>,
+    ) -> Result<Vec<f32>, RequestError> {
         let rx = self.submit_spec(spec, values)?;
-        let result = rx.recv().map_err(|_| "worker dropped reply".to_string())?;
+        let result = rx.recv().map_err(|_| {
+            RequestError::backend(ErrorCode::Internal, "worker dropped reply")
+        })?;
         result.outcome
     }
 
@@ -286,6 +353,12 @@ impl Coordinator {
         &self.specs
     }
 
+    /// Name of the backend the workers execute on (`golden`, `hw`,
+    /// `pjrt`) — reported by the metrics endpoint and the serve rows.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
     /// The number of worker shards each spec runs.
     pub fn shards_per_method(&self) -> usize {
         self.pools.values().next().map_or(0, |pool| pool.shards.len())
@@ -308,7 +381,7 @@ fn spawn_worker(
     shard_idx: usize,
     rx: mpsc::Receiver<Request>,
     depth: Arc<AtomicUsize>,
-    backend: Arc<dyn ExecBackend>,
+    backend: Arc<dyn EvalBackend>,
     cfg: BatcherConfig,
     metrics: Arc<ServerMetrics>,
 ) -> JoinHandle<()> {
@@ -354,7 +427,7 @@ fn admit(
     req: Request,
     pending: &mut PendingBatch,
     spec: &MethodSpec,
-    backend: &Arc<dyn ExecBackend>,
+    backend: &Arc<dyn EvalBackend>,
     cfg: &BatcherConfig,
     metrics: &Arc<ServerMetrics>,
     depth: &Arc<AtomicUsize>,
@@ -362,17 +435,21 @@ fn admit(
     // Defense in depth: `submit` already rejects oversized requests, but
     // a request larger than the batch can never satisfy `fits`, so if
     // one ever reached the queue it would starve forever behind an
-    // always-flushing loop. Fail it deterministically instead.
+    // always-flushing loop. Fail it deterministically instead — as an
+    // admission error, distinct from backend faults.
     if req.values.len() > cfg.batch_elements {
         depth.fetch_sub(req.values.len(), Ordering::Relaxed);
         let latency_us = req.enqueued_at.elapsed().as_micros() as u64;
-        metrics.record_failed_request(latency_us);
+        metrics.record_admission_failed_request(latency_us);
         let _ = req.reply.send(RequestResult {
             id: req.id,
-            outcome: Err(format!(
-                "request of {} elements exceeds the compiled batch {}",
-                req.values.len(),
-                cfg.batch_elements
+            outcome: Err(RequestError::admission(
+                ErrorCode::BadRequest,
+                format!(
+                    "request of {} elements exceeds the compiled batch {}",
+                    req.values.len(),
+                    cfg.batch_elements
+                ),
             )),
             latency_us,
         });
@@ -387,7 +464,7 @@ fn admit(
 fn flush(
     pending: &mut PendingBatch,
     spec: &MethodSpec,
-    backend: &Arc<dyn ExecBackend>,
+    backend: &Arc<dyn EvalBackend>,
     cfg: &BatcherConfig,
     metrics: &Arc<ServerMetrics>,
     depth: &Arc<AtomicUsize>,
@@ -399,10 +476,11 @@ fn flush(
     let (flat, spans) = batch.pack(cfg.batch_elements);
     metrics.record_batch(batch.elements, cfg.batch_elements);
     depth.fetch_sub(batch.elements, Ordering::Relaxed);
-    let result = backend.execute(spec, &flat);
+    let result = eval_f32(backend.as_ref(), spec, &flat);
     let now = Instant::now();
     match result {
-        Ok(outputs) => {
+        Ok((outputs, stats)) => {
+            metrics.record_sim_cycles(stats.sim_cycles);
             for (req, (off, len)) in batch.requests.into_iter().zip(spans) {
                 let latency_us = now.duration_since(req.enqueued_at).as_micros() as u64;
                 metrics.record_request(len, latency_us);
@@ -417,10 +495,10 @@ fn flush(
             metrics.record_error();
             for req in batch.requests {
                 let latency_us = now.duration_since(req.enqueued_at).as_micros() as u64;
-                metrics.record_failed_request(latency_us);
+                metrics.record_backend_failed_request(latency_us);
                 let _ = req.reply.send(RequestResult {
                     id: req.id,
-                    outcome: Err(e.clone()),
+                    outcome: Err(RequestError::backend(e.code, e.message.clone())),
                     latency_us,
                 });
             }
@@ -431,16 +509,21 @@ fn flush(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::worker::GoldenBackend;
+    use crate::backend::GoldenBackend;
 
     fn start_golden(batch: usize) -> Coordinator {
-        Coordinator::start(Arc::new(GoldenBackend::table1(batch)), CoordinatorConfig::default())
+        Coordinator::start(
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig::with_batch(batch),
+        )
+        .unwrap()
     }
 
     #[test]
     fn evaluate_roundtrip_all_methods() {
         let c = start_golden(64);
         assert_eq!(c.shards_per_method(), 2);
+        assert_eq!(c.backend_name(), "golden");
         for method in MethodId::all() {
             let out = c.evaluate(method, vec![0.5, -0.5, 3.0]).unwrap();
             assert_eq!(out.len(), 3);
@@ -482,7 +565,8 @@ mod tests {
     fn oversized_request_rejected() {
         let c = start_golden(16);
         let err = c.submit(MethodId::Pwl, vec![0.0; 17]).unwrap_err();
-        assert!(err.contains("exceeds"));
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("exceeds"), "{err}");
         // Deterministic: the same oversized submit yields the same error.
         let err2 = c.submit(MethodId::Pwl, vec![0.0; 17]).unwrap_err();
         assert_eq!(err, err2);
@@ -492,7 +576,8 @@ mod tests {
     #[test]
     fn empty_request_rejected() {
         let c = start_golden(16);
-        assert!(c.submit(MethodId::Pwl, vec![]).is_err());
+        let err = c.submit(MethodId::Pwl, vec![]).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
         c.shutdown();
     }
 
@@ -514,9 +599,10 @@ mod tests {
     #[test]
     fn round_robin_spreads_across_shards() {
         let c = Coordinator::start(
-            Arc::new(GoldenBackend::table1(128)),
-            CoordinatorConfig { shards: 3, ..Default::default() },
-        );
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig { shards: 3, ..CoordinatorConfig::with_batch(128) },
+        )
+        .unwrap();
         let rxs: Vec<_> =
             (0..9).map(|_| c.submit(MethodId::Lambert, vec![0.5; 4]).unwrap()).collect();
         for rx in rxs {
@@ -562,9 +648,14 @@ mod tests {
         // queue is empty at each submit, so every shard stays usable and
         // all requests complete.
         let c = Coordinator::start(
-            Arc::new(GoldenBackend::table1(64)),
-            CoordinatorConfig { route: RoutePolicy::LeastLoaded, shards: 2, ..Default::default() },
-        );
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig {
+                route: RoutePolicy::LeastLoaded,
+                shards: 2,
+                ..CoordinatorConfig::with_batch(64)
+            },
+        )
+        .unwrap();
         for _ in 0..10 {
             let out = c.evaluate(MethodId::Pwl, vec![1.0, -1.0]).unwrap();
             assert_eq!(out.len(), 2);
@@ -575,14 +666,14 @@ mod tests {
 
     #[test]
     fn spec_routing_serves_non_table1_points_and_rejects_unserved() {
-        use crate::coordinator::worker::GoldenBackend;
         let table1_pwl = MethodSpec::table1(MethodId::Pwl);
         let custom = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
         let specs = vec![table1_pwl, custom];
         let c = Coordinator::start(
-            Arc::new(GoldenBackend::for_specs(&specs, 32)),
-            CoordinatorConfig { specs: specs.clone(), ..Default::default() },
-        );
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig { specs: specs.clone(), ..CoordinatorConfig::with_batch(32) },
+        )
+        .unwrap();
         assert_eq!(c.specs(), &specs[..]);
         // Both design points answer, through their own kernels.
         let a = c.evaluate_spec(&table1_pwl, vec![0.5]).unwrap();
@@ -592,12 +683,14 @@ mod tests {
         // Method-addressed submit resolves to the FIRST served pwl spec.
         let via_method = c.evaluate(MethodId::Pwl, vec![0.5]).unwrap();
         assert_eq!(via_method[0].to_bits(), a[0].to_bits());
-        // A spec outside the served set fails fast with a useful error.
+        // A spec outside the served set fails fast with a typed error.
         let unserved = MethodSpec::table1(MethodId::Lambert);
         let err = c.submit_spec(&unserved, vec![0.5]).unwrap_err();
-        assert!(err.contains("not served"), "{err}");
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("not served"), "{err}");
         let err = c.submit(MethodId::Lambert, vec![0.5]).unwrap_err();
-        assert!(err.contains("no served spec"), "{err}");
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("no served spec"), "{err}");
         // Duplicate specs in the config collapse into one pool.
         assert_eq!(c.shard_metrics().len(), 2 * c.shards_per_method());
         c.shutdown();
@@ -605,21 +698,65 @@ mod tests {
 
     #[test]
     fn duplicate_and_empty_spec_lists_are_handled() {
-        use crate::coordinator::worker::GoldenBackend;
         let s = MethodSpec::table1(MethodId::Pwl);
         let c = Coordinator::start(
-            Arc::new(GoldenBackend::for_specs(&[s], 16)),
-            CoordinatorConfig { specs: vec![s, s, s], shards: 1, ..Default::default() },
-        );
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig {
+                specs: vec![s, s, s],
+                shards: 1,
+                ..CoordinatorConfig::with_batch(16)
+            },
+        )
+        .unwrap();
         assert_eq!(c.specs().len(), 1);
         c.shutdown();
         // Empty spec list falls back to the Table I suite.
         let c = Coordinator::start(
-            Arc::new(GoldenBackend::table1(16)),
-            CoordinatorConfig { specs: vec![], shards: 1, ..Default::default() },
-        );
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig { specs: vec![], shards: 1, ..CoordinatorConfig::with_batch(16) },
+        )
+        .unwrap();
         assert_eq!(c.specs().len(), 6);
         c.shutdown();
+    }
+
+    #[test]
+    fn start_fails_fast_on_unavailable_backend_and_unsupported_spec() {
+        use crate::backend::PjrtBackend;
+        // PJRT under the xla shim: start returns backend_unavailable
+        // without spawning a single worker (no panic, no half-started
+        // coordinator). With real bindings + artifacts present, start
+        // succeeds instead — either way, nothing panics.
+        let pjrt = Arc::new(PjrtBackend::with_default_artifacts(64));
+        let available = pjrt.availability().is_available();
+        match Coordinator::start(pjrt, CoordinatorConfig::with_batch(64)) {
+            Ok(c) => {
+                assert!(available, "start must fail when the backend is unavailable");
+                c.shutdown();
+            }
+            Err(e) => assert_eq!(e.code, ErrorCode::BackendUnavailable, "{e}"),
+        }
+
+        // A structurally bogus spec fails ensure at startup with a
+        // typed unknown_spec naming the spec — never a constructor
+        // panic mid-start.
+        use crate::approx::{IoSpec, MethodParams};
+        let bogus = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = Coordinator::start(
+            Arc::new(crate::backend::HwBackend::new()),
+            CoordinatorConfig {
+                specs: vec![bogus],
+                ..CoordinatorConfig::with_batch(64)
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("cannot serve"), "{err}");
+        assert!(err.message.contains("invalid spec"), "{err}");
     }
 
     #[test]

@@ -106,6 +106,60 @@ pub fn measure_kernel_with_threads(
     })
 }
 
+/// Measures a design point through an arbitrary execution backend
+/// ([`crate::backend::EvalBackend`]) — the `sweep --backend hw` path:
+/// the full grid streams through the backend's `eval_raw` in the same
+/// fixed chunks as [`measure_kernel_with_threads`], so for a bit-exact
+/// backend (golden, hw) the metrics are bit-identical to
+/// [`measure_spec`], and for a lossy one (PJRT) they quantify the
+/// implementation's own error. Errors if the backend is unavailable or
+/// cannot express the spec (`ensure` fails).
+pub fn measure_backend(
+    spec: &MethodSpec,
+    backend: &dyn crate::backend::EvalBackend,
+    threads: usize,
+) -> Result<ErrorMetrics, String> {
+    backend.ensure(spec).map_err(|e| e.to_string())?;
+    let grid = InputGrid::ranged(spec.io.input, spec.domain);
+    let in_ulp = grid.fmt.ulp();
+    let out_ulp = spec.io.output.ulp();
+    // eval_raw may legitimately fail mid-grid (the trait allows it);
+    // chunk closures cannot return Err, so the first failure is
+    // captured and surfaced after the sweep instead of panicking the
+    // worker thread.
+    let failure: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let metrics = sweep_chunks(grid, spec.io.output, threads, |clo, chi, acc| {
+        // Once any chunk failed the sweep's result is discarded anyway
+        // — skip the remaining (potentially expensive, e.g.
+        // cycle-simulated) chunks instead of burning through them.
+        if failed.load(Ordering::Relaxed) {
+            return;
+        }
+        let xs: Vec<i64> = (clo..=chi).collect();
+        let mut ys = vec![0i64; xs.len()];
+        match backend.eval_raw(spec, &xs, &mut ys) {
+            Ok(_) => {
+                for (&raw, &y) in xs.iter().zip(&ys) {
+                    let x = raw as f64 * in_ulp;
+                    acc.push(x, y as f64 * out_ulp - tanh_ref(x));
+                }
+            }
+            Err(e) => {
+                failed.store(true, Ordering::Relaxed);
+                let mut slot = failure.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e.to_string());
+                }
+            }
+        }
+    });
+    match failure.into_inner().unwrap() {
+        Some(e) => Err(format!("sweeping '{spec}' on backend '{}': {e}", backend.name())),
+        None => Ok(metrics),
+    }
+}
+
 /// Measures the f64 *math* model (`eval_f64`) over the same grid —
 /// isolates algorithmic error from quantization (used by the Fig 2
 /// discussion and the ablation benches). Same fixed chunking.

@@ -29,8 +29,9 @@ pub mod ulp_search;
 pub use grid::InputGrid;
 pub use histogram::{histogram, region_breakdown, ErrorHistogram, RegionBreakdown};
 pub use metrics::{
-    measure, measure_f64_model, measure_f64_model_with_threads, measure_kernel_with_threads,
-    measure_spec, measure_spec_with_threads, measure_strided, measure_with_threads, ErrorMetrics,
+    measure, measure_backend, measure_f64_model, measure_f64_model_with_threads,
+    measure_kernel_with_threads, measure_spec, measure_spec_with_threads, measure_strided,
+    measure_with_threads, ErrorMetrics,
 };
 pub use sweep::{fig2_params, sweep_fig2, Fig2Point, Fig2Series};
 pub use ulp_search::{search_1ulp_param, table3_rows, Table3Row, Table3Spec};

@@ -30,25 +30,94 @@ pub use poly_dp::{catmull_rom_pipeline, pwl_pipeline, taylor_pipeline};
 pub use signal::{SignalMap, Value};
 pub use vf_dp::velocity_pipeline;
 
-use crate::approx::MethodId;
+use crate::approx::{MethodId, MethodParams, MethodSpec};
 use crate::fixed::QFormat;
 
-/// Builds the pipelined datapath for any Table I configuration.
-pub fn table1_pipeline(id: MethodId, out: QFormat) -> Pipeline {
-    match id {
-        MethodId::Pwl => pwl_pipeline(crate::approx::pwl::Pwl::table1(), out),
-        MethodId::TaylorQuadratic => {
-            taylor_pipeline(crate::approx::taylor::Taylor::table1_quadratic(), out)
-        }
-        MethodId::TaylorCubic => {
-            taylor_pipeline(crate::approx::taylor::Taylor::table1_cubic(), out)
-        }
-        MethodId::CatmullRom => {
-            catmull_rom_pipeline(crate::approx::catmull_rom::CatmullRom::table1(), out)
-        }
-        MethodId::Velocity => velocity_pipeline(crate::approx::velocity::Velocity::table1(), out),
-        MethodId::Lambert => lambert_pipeline(crate::approx::lambert::Lambert::table1(), out),
+/// True when `v` is a reciprocal power of two — the structural
+/// precondition of every Fig 3/4 LUT/register index extraction (the
+/// index is a bit-field of the input, not a divider output).
+fn recip_pow2(v: f64) -> bool {
+    if !v.is_finite() || v <= 0.0 || v > 1.0 {
+        return false;
     }
+    let inv = 1.0 / v;
+    inv.fract() == 0.0 && (inv as u64).is_power_of_two()
+}
+
+/// Lowers any design point to its pipelined Fig 3/4/5 datapath —
+/// the general form of [`table1_pipeline`]: non-Table-I PWL/Taylor
+/// step and Lambert/Taylor term variants lower to datapaths with the
+/// matching LUT sizes, chain lengths and Horner depths.
+///
+/// Errors (with an "unsupported by hw backend" message naming the
+/// structural reason) for specs the block diagrams cannot express —
+/// e.g. a Taylor term count the fixed Horner chain is not wired for,
+/// or a step that is not a reciprocal power of two (the LUT index is a
+/// bit-field of the input, not a divider output). Validated specs
+/// ([`MethodSpec::new`]/[`MethodSpec::parse`]) always lower; the
+/// guards exist because `MethodSpec`'s fields are public and the hw
+/// lowering trusts structure only validation establishes. Surfaced to
+/// servers through
+/// [`EvalBackend::ensure`](crate::backend::EvalBackend::ensure) on the
+/// hw backend.
+pub fn pipeline_for(spec: &MethodSpec) -> Result<Pipeline, String> {
+    let out = spec.io.output;
+    let unsupported =
+        |what: String| format!("spec '{spec}' unsupported by hw backend: {what}");
+    let check_pow2 = |name: &str, v: f64| {
+        if recip_pow2(v) {
+            Ok(())
+        } else {
+            Err(unsupported(format!(
+                "{name} {v} is not a reciprocal power of two, so the Fig 3/4 \
+                 index extraction (a bit-field select) cannot address it"
+            )))
+        }
+    };
+    Ok(match spec.params {
+        MethodParams::Pwl { step } => {
+            check_pow2("step", step)?;
+            pwl_pipeline(crate::approx::pwl::Pwl::new(step, spec.domain), out)
+        }
+        MethodParams::Taylor { step, terms } => {
+            if !(3..=4).contains(&terms) {
+                return Err(unsupported(format!(
+                    "the Fig 3 Horner chain is wired for 3-term (B1) or 4-term (B2) \
+                     expansions, not {terms}"
+                )));
+            }
+            check_pow2("step", step)?;
+            taylor_pipeline(crate::approx::taylor::Taylor::new(step, terms, spec.domain), out)
+        }
+        MethodParams::CatmullRom { step } => {
+            check_pow2("step", step)?;
+            catmull_rom_pipeline(
+                crate::approx::catmull_rom::CatmullRom::new(step, spec.domain),
+                out,
+            )
+        }
+        MethodParams::Velocity { threshold } => {
+            check_pow2("threshold", threshold)?;
+            velocity_pipeline(crate::approx::velocity::Velocity::new(threshold, spec.domain), out)
+        }
+        MethodParams::Lambert { terms } => {
+            if !(1..=16).contains(&terms) {
+                return Err(unsupported(format!(
+                    "Fig 5 unrolls one recurrence stage per fraction term (1..=16), \
+                     not {terms}"
+                )));
+            }
+            lambert_pipeline(crate::approx::lambert::Lambert::new(terms, spec.domain), out)
+        }
+    })
+}
+
+/// Builds the pipelined datapath for any Table I configuration — a
+/// thin wrapper over [`pipeline_for`].
+pub fn table1_pipeline(id: MethodId, out: QFormat) -> Pipeline {
+    let mut spec = MethodSpec::table1(id);
+    spec.io.output = out;
+    pipeline_for(&spec).expect("Table I specs always lower to datapaths")
 }
 
 #[cfg(test)]
@@ -94,6 +163,67 @@ mod tests {
         let lam = table1_pipeline(MethodId::Lambert, out).latency();
         assert!(vf > poly && vf > taylor, "vf {vf} poly {poly} taylor {taylor}");
         assert!(lam > poly && lam > taylor, "lambert {lam}");
+    }
+
+    #[test]
+    fn pipeline_for_lowers_non_table1_variants_bit_exact() {
+        // The generalization satellite: PWL/Taylor step and Lambert
+        // term variants the old table1-only entry point could not
+        // express lower to datapaths that still bit-match their golden
+        // models.
+        for text in [
+            "pwl:step=1/32:in=s2.13:out=s.15",
+            "taylor1:step=1/32",
+            "taylor2:step=1/16:out=s.7",
+            "catmull:step=1/8:dom=4",
+            "velocity:threshold=1/64",
+            "lambert:terms=9",
+        ] {
+            let spec = crate::approx::MethodSpec::parse(text).unwrap();
+            let pipe = pipeline_for(&spec).unwrap_or_else(|e| panic!("{text}: {e}"));
+            let golden = spec.build();
+            let inp = spec.io.input;
+            for raw in (-(inp.max_raw())..=inp.max_raw()).step_by(509) {
+                let x = Fx::from_raw(raw, inp);
+                assert_eq!(
+                    pipe.eval(x).raw(),
+                    golden.eval_fx(x, spec.io.output).raw(),
+                    "{text} at raw {raw}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_for_rejects_inexpressible_specs_with_reason() {
+        use crate::approx::{IoSpec, MethodParams, MethodSpec};
+        // MethodSpec fields are public, so structurally impossible
+        // configurations can exist; the lowering must name what the
+        // block diagrams cannot express, not panic mid-construction.
+        let bogus_terms = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = pipeline_for(&bogus_terms).unwrap_err();
+        assert!(err.contains("unsupported by hw backend"), "{err}");
+        assert!(err.contains("Horner"), "{err}");
+
+        let bogus_step = MethodSpec {
+            params: MethodParams::Pwl { step: 0.3 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = pipeline_for(&bogus_step).unwrap_err();
+        assert!(err.contains("reciprocal power of two"), "{err}");
+
+        let bogus_k = MethodSpec {
+            params: MethodParams::Lambert { terms: 40 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = pipeline_for(&bogus_k).unwrap_err();
+        assert!(err.contains("1..=16"), "{err}");
     }
 
     #[test]

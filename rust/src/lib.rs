@@ -51,12 +51,22 @@
 //! - [`runtime`] — PJRT wrapper that loads the JAX/Pallas-AOT'd HLO
 //!   artifacts and executes them from rust (stubbed by
 //!   [`runtime::xla_shim`] when the bindings are not linked).
+//! - [`backend`] — the unified execution layer: one trait
+//!   ([`backend::EvalBackend`], with typed availability and stable
+//!   error codes) behind which all three execution paths live —
+//!   `golden` (compiled kernels via the shared cache), `hw` (specs
+//!   lowered to the cycle-accurate Fig 3/4/5 datapaths, bit-exact and
+//!   reporting simulated cycle counts), and `pjrt` (AOT graphs,
+//!   cleanly `Unavailable` under the shim). Everything that executes —
+//!   the coordinator's workers, the CLI's `--backend` flag, sweeps,
+//!   scenario replays — goes through it.
 //! - [`coordinator`] — activation-accelerator service: request router
 //!   over per-**spec** worker-shard pools (round-robin or
 //!   least-loaded), dynamic batcher per shard, per-shard metrics with a
 //!   log-bucketed latency histogram (p50/p95/p99, exact shard merge),
-//!   batch fill rate, and backpressure; the golden backend serves any
-//!   spec set through the shared kernel cache.
+//!   batch fill rate, failure-kind counters and simulated-cycle
+//!   aggregation, and backpressure; workers execute on any
+//!   [`backend::EvalBackend`], ensured per served spec at startup.
 //! - [`explore`] — design-space exploration / Pareto frontier over
 //!   specs (method × parameter × output format), every frontier row
 //!   addressable by its spec string.
@@ -89,6 +99,7 @@
 //! ```
 
 pub mod approx;
+pub mod backend;
 pub mod bench;
 pub mod coordinator;
 pub mod cost;

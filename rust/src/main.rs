@@ -3,6 +3,7 @@
 //! ```text
 //! tanh-vlsi eval    --method pwl --x 0.5          evaluate one input
 //! tanh-vlsi eval    --spec pwl:step=1/32 --x 0.5   …or any design point
+//! tanh-vlsi eval    --backend hw --x 0.5           …through any backend
 //! tanh-vlsi table1                                 regenerate Table I
 //! tanh-vlsi table2                                 regenerate Table II
 //! tanh-vlsi table3  --rows 4                       regenerate Table III
@@ -13,8 +14,16 @@
 //! tanh-vlsi serve   --requests 1000                run the coordinator
 //! tanh-vlsi serve   --scenario all --shards 2      scenario load harness
 //! tanh-vlsi serve   --spec pwl:step=1/32:in=s2.13 --scenario steady
+//! tanh-vlsi serve   --backend hw --scenario steady  cycle-accurate serving
 //! tanh-vlsi pipeline --method lambert --x 1.0      cycle-level datapath
 //! ```
+//!
+//! Execution is **backend-addressed** (`--backend golden|hw|pjrt` on
+//! eval/serve/sweep, module [`tanh_vlsi::backend`]): the same design
+//! points run on the compiled golden kernels, the cycle-accurate §IV
+//! datapaths (bit-exact, with simulated cycle counts in the serve
+//! metrics), or the PJRT graphs — which fail fast with a clean
+//! `backend_unavailable` error when the xla bindings are not linked.
 //!
 //! Design points are addressed by **spec strings** (`approx::spec`):
 //! `<method>[:step=…|:threshold=…|:terms=…][:in=…][:out=…][:dom=…]`,
@@ -24,19 +33,17 @@
 
 use std::sync::Arc;
 
-use tanh_vlsi::approx::{spec, table1_suite, MethodId, MethodSpec, Registry, TanhApprox};
+use tanh_vlsi::approx::{spec, MethodId, MethodSpec, Registry};
+use tanh_vlsi::backend::{self, EvalBackend};
 use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
 use tanh_vlsi::bench::BenchLog;
-use tanh_vlsi::coordinator::{
-    Coordinator, CoordinatorConfig, GoldenBackend, GraphBackend, RoutePolicy,
-};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
 use tanh_vlsi::cost::UnitLibrary;
-use tanh_vlsi::error::measure_spec;
+use tanh_vlsi::error::{measure_backend, measure_spec};
 use tanh_vlsi::explore::{explore, explore_specs, pareto_frontier, ExploreConfig};
 use tanh_vlsi::fixed::{Fx, QFormat};
-use tanh_vlsi::hw::table1_pipeline;
+use tanh_vlsi::hw::{pipeline_for, table1_pipeline};
 use tanh_vlsi::report;
-use tanh_vlsi::runtime::{ArtifactDir, EngineServer};
 use tanh_vlsi::util::cli::{App, Command};
 use tanh_vlsi::util::prng::Prng;
 
@@ -49,6 +56,7 @@ fn app() -> App {
                 .opt("method", "pwl|taylor1|taylor2|catmull|velocity|lambert|all", Some("all"))
                 .opt("spec", "comma-separated design-point specs (overrides --method)", None)
                 .opt("x", "input value", Some("0.5"))
+                .opt("backend", "execution path: golden|hw|pjrt", Some("golden"))
                 .opt("input", "input Q-format", Some("S3.12"))
                 .opt("output", "output Q-format", Some("S.15")),
             Command::new("table1", "regenerate Table I (errors of selected configurations)"),
@@ -60,13 +68,15 @@ fn app() -> App {
                 .opt("csv-dir", "write per-panel CSVs to this directory", None),
             Command::new("cost", "regenerate §IV complexity analysis"),
             Command::new("sweep", "exhaustive error metrics for named design-point specs")
-                .opt("spec", "comma-separated specs (default: the six Table I rows)", None),
+                .opt("spec", "comma-separated specs (default: the six Table I rows)", None)
+                .opt("backend", "execution path to sweep through: golden|hw|pjrt", Some("golden")),
             Command::new("explore", "design-space exploration / Pareto frontier")
                 .opt("stride", "input-grid stride (1 = exhaustive)", Some("8"))
                 .opt("outputs", "comma-separated output Q-formats to sweep", Some("S.15"))
                 .opt("spec", "explore exactly these comma-separated specs instead", None),
             Command::new("pipeline", "run the cycle-level datapath for one input")
                 .opt("method", "method name", Some("pwl"))
+                .opt("spec", "design-point spec to lower (overrides --method)", None)
                 .opt("x", "input value", Some("0.5")),
             Command::new("report", "generate the consolidated markdown report")
                 .opt("out", "output file", Some("target/paper/REPORT.md"))
@@ -78,9 +88,12 @@ fn app() -> App {
             Command::new("serve", "run the sharded coordinator under synthetic or scenario load")
                 .opt("requests", "number of requests (legacy path, no --scenario)", Some("1000"))
                 .opt("request-size", "activations per request (legacy path)", Some("64"))
-                // golden = compiled integer kernels, works in every build;
-                // pjrt needs artifacts + linked xla bindings.
-                .opt("backend", "golden|pjrt", Some("golden"))
+                // golden = compiled integer kernels, works in every
+                // build; hw = cycle-accurate Fig 3/4/5 datapaths
+                // (bit-exact, reports simulated cycles); pjrt needs
+                // artifacts + linked xla bindings (fails fast with
+                // backend_unavailable otherwise).
+                .opt("backend", "golden|hw|pjrt", Some("golden"))
                 .opt("batch", "compiled batch size", Some("1024"))
                 .opt("scenario", "steady|bursty|zipf|flood|maxbatch|all (deterministic load)", None)
                 .opt("seed", "scenario PRNG seed", Some("42"))
@@ -160,62 +173,98 @@ fn parse_specs(arg: &str) -> Result<Vec<MethodSpec>, String> {
     Ok(specs)
 }
 
-fn cmd_eval(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
-    let x: f64 = p.parse_or("x", 0.5)?;
-    let want = x.tanh();
-    // --spec evaluates arbitrary design points, each through its own
-    // I/O formats; the --method path keeps the Table I formats.
+/// Resolves `eval`'s design points: `--spec` names them exactly;
+/// otherwise `--method` picks Table I parameters, re-validated against
+/// the requested `--input`/`--output` formats. One resolution path for
+/// every backend.
+fn eval_specs(p: &tanh_vlsi::util::cli::Parsed) -> Result<Vec<MethodSpec>, String> {
     if let Some(arg) = p.get("spec") {
-        println!("x = {x}   tanh(x) = {want:.9}\n");
-        for s in parse_specs(arg)? {
-            let m = s.build();
-            let y = m.eval_fx(Fx::from_f64(x, s.io.input), s.io.output);
-            println!(
-                "{:44} {:>12.9}  err {:+.3e}  (raw {})",
-                s.to_string(),
-                y.to_f64(),
-                y.to_f64() - want,
-                y.raw()
-            );
-        }
-        return Ok(());
+        return parse_specs(arg);
     }
     let inp = QFormat::parse(p.get_or("input", "S3.12")).ok_or("bad input format")?;
     let out = QFormat::parse(p.get_or("output", "S.15")).ok_or("bad output format")?;
-    let fx = Fx::from_f64(x, inp);
-    println!("x = {x} ({} raw {})   tanh(x) = {want:.9}\n", inp, fx.raw());
-    let methods: Vec<Box<dyn TanhApprox>> = match p.get_or("method", "all") {
-        "all" => table1_suite(),
-        name => {
-            let id = parse_method(name)?;
-            table1_suite().into_iter().filter(|m| m.id() == id).collect()
-        }
+    let ids = match p.get_or("method", "all") {
+        "all" => MethodId::all().to_vec(),
+        name => vec![parse_method(name)?],
     };
-    for m in methods {
-        let y = m.eval_fx(fx, out);
+    ids.into_iter()
+        .map(|id| {
+            let t = MethodSpec::table1(id);
+            MethodSpec::new(t.params, tanh_vlsi::approx::IoSpec { input: inp, output: out }, t.domain)
+        })
+        .collect()
+}
+
+fn cmd_eval(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    let x: f64 = p.parse_or("x", 0.5)?;
+    let want = x.tanh();
+    let specs = eval_specs(p)?;
+    // One execution path for every backend (EvalBackend): golden runs
+    // the compiled kernels (bit-exact vs the scalar models), hw the
+    // cycle-accurate datapath (reporting its pipeline depth in
+    // simulated cycles), pjrt fails fast with backend_unavailable
+    // under the shim. PJRT graphs are AOT'd at a fixed shape
+    // (tanh_<m>_1024); slice-based backends take a one-element slice.
+    let backend_name = p.get_or("backend", "golden");
+    let b = backend::by_name(backend_name, 1024)?;
+    let n = b.fixed_batch().unwrap_or(1);
+    println!("x = {x}   tanh(x) = {want:.9}   (backend: {backend_name})\n");
+    for s in specs {
+        b.ensure(&s).map_err(|e| e.to_string())?;
+        let raw = Fx::from_f64(x, s.io.input).raw();
+        let input = vec![raw; n];
+        let mut out = vec![0i64; n];
+        let stats = b.eval_raw(&s, &input, &mut out).map_err(|e| e.to_string())?;
+        let y = out[0] as f64 * s.io.output.ulp();
+        let cycles = if stats.sim_cycles > 0 {
+            format!(", {} sim cycles", stats.sim_cycles)
+        } else {
+            String::new()
+        };
         println!(
-            "{:28} {:>12.9}  err {:+.3e}  (raw {})",
-            m.describe(),
-            y.to_f64(),
-            y.to_f64() - want,
-            y.raw()
+            "{:44} {:>12.9}  err {:+.3e}  (raw {}{cycles})",
+            s.to_string(),
+            y,
+            y - want,
+            out[0],
         );
     }
     Ok(())
 }
 
-/// `sweep`: exhaustive error metrics for named design points, through
-/// the shared kernel cache.
+/// `sweep`: exhaustive error metrics for named design points — through
+/// the shared kernel cache by default, or through any execution
+/// backend (`--backend hw` sweeps the cycle-accurate datapaths; since
+/// they are bit-exact the numbers must match the golden sweep, which
+/// makes this the exhaustive lowering audit).
 fn cmd_sweep(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let specs = match p.get("spec") {
         Some(arg) => parse_specs(arg)?,
         None => MethodSpec::table1_all(),
     };
+    let backend_name = p.get_or("backend", "golden");
+    let alt_backend: Option<Arc<dyn EvalBackend>> = match backend_name {
+        "golden" => None,
+        // The pjrt graphs are fixed-shape (batch-sized inputs only);
+        // an exhaustive grid sweep cannot stream through them.
+        "pjrt" => {
+            return Err(
+                "sweeps are not supported on the fixed-shape pjrt backend \
+                 (use --backend golden or hw)"
+                    .to_string(),
+            )
+        }
+        name => Some(backend::by_name(name, 1024)?),
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut t = tanh_vlsi::util::table::TextTable::new(&[
         "spec", "max err", "RMS", "max ulp", "argmax", "points",
     ]);
     for s in &specs {
-        let e = measure_spec(s);
+        let e = match &alt_backend {
+            None => measure_spec(s),
+            Some(b) => measure_backend(s, b.as_ref(), threads)?,
+        };
         t.row(vec![
             s.to_string(),
             format!("{:.3e}", e.max_abs),
@@ -297,11 +346,22 @@ fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 }
 
 fn cmd_pipeline(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
-    let id = parse_method(p.get_or("method", "pwl"))?;
     let x: f64 = p.parse_or("x", 0.5)?;
-    let pipe = table1_pipeline(id, QFormat::S_15);
+    // --spec lowers any design point the hw backend can express
+    // (pipeline_for); --method keeps the Table I configuration.
+    let (pipe, input_fmt) = match p.get("spec") {
+        Some(arg) => {
+            let s = MethodSpec::parse(arg)
+                .map_err(|e| format!("bad spec '{arg}': {e}\n\n{}", spec::GRAMMAR))?;
+            (pipeline_for(&s)?, s.io.input)
+        }
+        None => {
+            let id = parse_method(p.get_or("method", "pwl"))?;
+            (table1_pipeline(id, QFormat::S_15), QFormat::S3_12)
+        }
+    };
     let lib = UnitLibrary::default();
-    let fx = Fx::from_f64(x, QFormat::S3_12);
+    let fx = Fx::from_f64(x, input_fmt);
     let y = pipe.eval(fx);
     println!("pipeline {}  latency {} cycles", pipe.name, pipe.latency());
     println!("stages:");
@@ -353,34 +413,6 @@ fn cmd_verilog(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     Ok(())
 }
 
-fn serve_backend(
-    backend_name: &str,
-    batch: usize,
-    specs: &[MethodSpec],
-) -> Result<Arc<dyn tanh_vlsi::coordinator::ExecBackend>, String> {
-    match backend_name {
-        "golden" => Ok(Arc::new(GoldenBackend::for_specs(specs, batch))),
-        "pjrt" => {
-            if specs.iter().any(|s| *s != MethodSpec::table1(s.method_id())) {
-                return Err(
-                    "the pjrt backend only ships AOT graphs for the Table I specs; \
-                     serve non-Table-I specs on --backend golden"
-                        .to_string(),
-                );
-            }
-            let engine = Arc::new(
-                EngineServer::spawn(
-                    ArtifactDir::open(ArtifactDir::default_path()).map_err(|e| e.to_string())?,
-                )
-                .map_err(|e| e.to_string())?,
-            );
-            println!("PJRT platform: {}", engine.platform());
-            Ok(Arc::new(GraphBackend::load_all(engine, batch).map_err(|e| e.to_string())?))
-        }
-        other => Err(format!("unknown backend '{other}'")),
-    }
-}
-
 fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let batch: usize = p.parse_or("batch", 1024usize)?;
     let backend_name = p.get_or("backend", "golden");
@@ -391,8 +423,13 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
         Some(arg) => parse_specs(arg)?,
         None => MethodSpec::table1_all(),
     };
-    let cfg = CoordinatorConfig { shards, route, specs: specs.clone(), ..Default::default() };
-    let backend = serve_backend(backend_name, batch, &specs)?;
+    let mut cfg = CoordinatorConfig { shards, route, specs: specs.clone(), ..Default::default() };
+    cfg.batcher.batch_elements = batch;
+    // One resolution path for every backend; availability and per-spec
+    // support are checked by Coordinator::start (typed
+    // backend_unavailable / unknown_spec errors — `--backend pjrt`
+    // under the xla shim fails fast here, before any load is sent).
+    let backend = backend::by_name(backend_name, batch)?;
     match p.get("scenario") {
         Some(names) => cmd_serve_scenarios(p, names, backend, backend_name, batch, cfg),
         None => cmd_serve_legacy(p, backend, backend_name, cfg),
@@ -404,7 +441,7 @@ fn cmd_serve(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 fn cmd_serve_scenarios(
     p: &tanh_vlsi::util::cli::Parsed,
     names_arg: &str,
-    backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend>,
+    backend: Arc<dyn EvalBackend>,
     backend_name: &str,
     batch: usize,
     cfg: CoordinatorConfig,
@@ -420,10 +457,13 @@ fn cmd_serve_scenarios(
         if names_arg == "all" { SCENARIO_NAMES.to_vec() } else { vec![names_arg] };
     let verify = match backend_name {
         // Golden serving runs the same compiled kernels the verifier
-        // does: any mismatch is a batching/routing bug, so demand
-        // bit-exact agreement. The f32 PJRT graphs skip output
-        // quantization; allow the Table I band.
-        "golden" => Verify::Exact,
+        // does, and the hw datapaths are bit-exact by construction
+        // (ensure audits the lowering): any mismatch is a
+        // batching/routing/lowering bug, so demand bit-exact
+        // agreement. The PJRT graphs compute in f32 (conversions are
+        // the shared golden ones); allow the Table I band for the
+        // compute-path difference.
+        "golden" | "hw" => Verify::Exact,
         _ => Verify::Tolerance(3e-4),
     };
     let opts = RunOptions { pace: p.flag("pace"), verify, ..Default::default() };
@@ -432,7 +472,8 @@ fn cmd_serve_scenarios(
     let mut log = BenchLog::new();
     for name in names {
         let trace = scenario::build_trace(name, seed, batch, scale, &cfg.specs)?;
-        let coord = Coordinator::start(backend.clone(), cfg.clone());
+        let coord =
+            Coordinator::start(backend.clone(), cfg.clone()).map_err(|e| e.to_string())?;
         let out = scenario::run_trace(&coord, &trace, &opts)?;
         let m = &out.metrics;
         let secs = out.wall.as_secs_f64().max(1e-9);
@@ -462,6 +503,15 @@ fn cmd_serve_scenarios(
             m.latency_us_max(),
             m.mean_latency_us(),
         );
+        if m.sim_cycles > 0 {
+            println!(
+                "  simulated hw latency: {} cycles total ({:.1} cycles/batch, \
+                 {:.2} cycles/element)",
+                m.sim_cycles,
+                m.sim_cycles as f64 / m.batches.max(1) as f64,
+                m.sim_cycles as f64 / m.elements.max(1) as f64,
+            );
+        }
         match verify {
             Verify::Exact => println!(
                 "  verified {}/{} replies bit-exact against the compiled golden kernels",
@@ -493,14 +543,14 @@ fn cmd_serve_scenarios(
 /// Legacy mode: `--requests N` windowed synthetic load.
 fn cmd_serve_legacy(
     p: &tanh_vlsi::util::cli::Parsed,
-    backend: Arc<dyn tanh_vlsi::coordinator::ExecBackend>,
+    backend: Arc<dyn EvalBackend>,
     backend_name: &str,
     cfg: CoordinatorConfig,
 ) -> Result<(), String> {
     let n: usize = p.parse_or("requests", 1000usize)?;
     let req_size: usize = p.parse_or("request-size", 64usize)?;
     let specs = cfg.specs.clone();
-    let coord = Coordinator::start(backend, cfg);
+    let coord = Coordinator::start(backend, cfg).map_err(|e| e.to_string())?;
     let mut g = Prng::new(42);
     let start = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -511,12 +561,12 @@ fn cmd_serve_legacy(
         // Drain in windows to bound memory.
         if pending.len() >= 256 {
             for rx in pending.drain(..) {
-                rx.recv().map_err(|_| "reply dropped")?.outcome?;
+                rx.recv().map_err(|_| "reply dropped")?.outcome.map_err(|e| e.to_string())?;
             }
         }
     }
     for rx in pending {
-        rx.recv().map_err(|_| "reply dropped")?.outcome?;
+        rx.recv().map_err(|_| "reply dropped")?.outcome.map_err(|e| e.to_string())?;
     }
     let elapsed = start.elapsed();
     let m = coord.metrics();

@@ -10,14 +10,19 @@
 //!
 //! In builds without the `xla` bindings (the offline crate set ships
 //! none), [`xla_shim`] stands in: same API surface, every PJRT entry
-//! point reports "unavailable", and the golden-model backend carries
-//! serving through the compiled integer kernels instead.
+//! point reports "unavailable". Serving surfaces this cleanly through
+//! [`crate::backend::PjrtBackend`], which wraps the engine in its own
+//! submission thread and reports
+//! [`Availability::Unavailable`](crate::backend::Availability) instead
+//! of panicking; the golden/hw backends carry serving through the
+//! compiled integer kernels and the cycle-accurate datapaths instead.
+//! (The old `EngineServer` wrapper was folded into `PjrtBackend` when
+//! the execution layer unified on
+//! [`crate::backend::EvalBackend`].)
 
 mod artifact;
 mod engine;
-mod server;
 pub mod xla_shim;
 
 pub use artifact::{ArtifactDir, ArtifactMeta, TensorSpec};
 pub use engine::{Engine, LoadedGraph, TensorValue};
-pub use server::EngineServer;

@@ -9,10 +9,12 @@
 //! `use xla;` — no other code changes are needed, which is the point of
 //! keeping the shim's signatures bit-compatible.
 //!
-//! Serving does not regress from this: the golden-model backend
-//! ([`crate::coordinator::GoldenBackend`]) now runs every method through
-//! the compiled integer kernels, so the coordinator keeps its full
-//! throughput story without PJRT.
+//! Serving does not regress from this: [`crate::backend::PjrtBackend`]
+//! reports `Unavailable` (so `--backend pjrt` fails fast with a
+//! `backend_unavailable` error instead of panicking), while the golden
+//! and hw backends ([`crate::backend::GoldenBackend`],
+//! [`crate::backend::HwBackend`]) carry serving through the compiled
+//! integer kernels and the cycle-accurate datapaths.
 
 use std::path::Path;
 

@@ -10,9 +10,10 @@
 use std::sync::Arc;
 
 use tanh_vlsi::approx::{table1_suite, MethodId, TanhApprox};
-use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, GraphBackend};
+use tanh_vlsi::backend::{EvalBackend, PjrtBackend};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig};
 use tanh_vlsi::fixed::{Fx, QFormat};
-use tanh_vlsi::runtime::{ArtifactDir, EngineServer, TensorValue};
+use tanh_vlsi::runtime::{ArtifactDir, Engine, TensorValue};
 use tanh_vlsi::util::json::{self, Json};
 
 fn artifacts_root() -> Option<std::path::PathBuf> {
@@ -53,8 +54,11 @@ fn vec_i32(j: &Json) -> Vec<i32> {
     j.as_arr().unwrap().iter().map(|v| v.num().unwrap() as i32).collect()
 }
 
-fn spawn_engine(root: &std::path::Path) -> EngineServer {
-    EngineServer::spawn(ArtifactDir::open(root).unwrap()).unwrap()
+// Tests are single-threaded per engine, so they drive `runtime::Engine`
+// directly; the engine-thread indirection (PJRT handles are not `Send`)
+// lives in `backend::PjrtBackend`, which the coordinator test uses.
+fn spawn_engine(root: &std::path::Path) -> Engine {
+    Engine::cpu(ArtifactDir::open(root).unwrap()).unwrap()
 }
 
 #[test]
@@ -86,7 +90,9 @@ fn pwl_raw_graph_is_bit_exact_against_rust_golden_model() {
     let vectors = load_vectors(&root);
     let raw_in = vec_i32(vectors.get("tanh_raw_input").unwrap());
     let out = engine
-        .execute("tanh_pwl_raw_1024", vec![TensorValue::I32(raw_in.clone())])
+        .load("tanh_pwl_raw_1024")
+        .unwrap()
+        .execute(&[TensorValue::I32(raw_in.clone())])
         .unwrap();
     let got = out[0].as_i32().unwrap();
 
@@ -114,7 +120,8 @@ fn lstm_logits_graph_matches_python_and_classifies() {
 
     for method in ["ref", "pwl"] {
         let name = format!("lstm_logits_{method}");
-        let out = engine.execute(&name, vec![TensorValue::F32(seq.clone())]).unwrap();
+        let out =
+            engine.load(&name).unwrap().execute(&[TensorValue::F32(seq.clone())]).unwrap();
         let logits = out[0].as_f32().unwrap();
         let want = vec_f32(lstm.get(&format!("logits_{method}")).unwrap());
         // 16 chained matmuls: the two XLA versions fuse/reassociate
@@ -169,9 +176,16 @@ fn approx_lstm_matches_exact_lstm_predictions() {
 #[test]
 fn coordinator_serves_through_compiled_graphs() {
     let root = require_artifacts!();
-    let engine = Arc::new(spawn_engine(&root));
-    let backend = GraphBackend::load_all(engine, 1024).unwrap();
-    let coord = Coordinator::start(Arc::new(backend), CoordinatorConfig::default());
+    let backend = PjrtBackend::new(&root, 1024);
+    if !backend.availability().is_available() {
+        // Artifacts exist but the xla bindings are stubbed: the typed
+        // fail-fast path is covered by the unit tests; nothing to
+        // serve here.
+        eprintln!("skipping: pjrt backend unavailable in this build");
+        return;
+    }
+    let coord =
+        Coordinator::start(Arc::new(backend), CoordinatorConfig::with_batch(1024)).unwrap();
 
     // Mixed-method concurrent load; every reply must match the golden
     // model within the f32 band.

@@ -8,9 +8,12 @@ use std::sync::Arc;
 use tanh_vlsi::approx::{
     build, eval_odd_saturating, table1_suite, IoSpec, MethodId, MethodSpec, TanhApprox,
 };
+use tanh_vlsi::backend::{
+    Availability, BackendError, ErrorCode, EvalBackend, EvalStats, GoldenBackend, HwBackend,
+};
 use tanh_vlsi::bench::scenario::GoldenVerifier;
 use tanh_vlsi::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, ExecBackend, PendingBatch, Request,
+    BatcherConfig, Coordinator, CoordinatorConfig, PendingBatch, Request, RequestErrorKind,
 };
 use tanh_vlsi::error::{measure_with_threads, InputGrid};
 use tanh_vlsi::fixed::{Fx, QFormat};
@@ -36,6 +39,32 @@ fn compiled_kernels_bit_exact_on_full_table1_grid() {
         for (&raw, &y) in xs.iter().zip(&ys) {
             let want = m.eval_fx(Fx::from_raw(raw, io.input), io.output).raw();
             assert_eq!(y, want, "{} at raw {raw}", m.describe());
+        }
+    }
+}
+
+#[test]
+fn hw_backend_bit_exact_vs_golden_kernel_on_full_table1_grid() {
+    // The cross-backend property of the unified execution layer: for
+    // all six Table I specs, the cycle-accurate hw backend produces
+    // the same raw words as the golden compiled kernel on EVERY input
+    // the grid can express — the two backends are interchangeable
+    // realizations of the same design point, bit for bit.
+    let hw = HwBackend::new();
+    let golden = GoldenBackend::new();
+    let grid = InputGrid::table1();
+    let (lo, hi) = grid.raw_bounds();
+    let xs: Vec<i64> = (lo..=hi).collect();
+    for spec in MethodSpec::table1_all() {
+        hw.ensure(&spec).unwrap();
+        golden.ensure(&spec).unwrap();
+        let mut hw_out = vec![0i64; xs.len()];
+        let mut golden_out = vec![0i64; xs.len()];
+        let stats = hw.eval_raw(&spec, &xs, &mut hw_out).unwrap();
+        golden.eval_raw(&spec, &xs, &mut golden_out).unwrap();
+        assert!(stats.sim_cycles >= xs.len() as u64, "{spec}: pipelined ⇒ ≥ 1 cycle/input");
+        for (i, (&a, &b)) in hw_out.iter().zip(&golden_out).enumerate() {
+            assert_eq!(a, b, "{spec} at raw {} (index {i})", xs[i]);
         }
     }
 }
@@ -397,22 +426,22 @@ fn max_wait_flush_fires_on_partial_batches() {
 
 #[test]
 fn coordinator_slices_padding_off_round_trip() {
-    use tanh_vlsi::coordinator::GoldenBackend;
     // End-to-end pack/unpack audit: random-size requests served through
     // the batcher come back with exactly their own outputs (no padding
     // leakage, no neighbor crosstalk), bit-exact vs an independent
     // golden-kernel evaluation.
     let batch = 64;
     let coord = Coordinator::start(
-        Arc::new(GoldenBackend::table1(batch)),
-        CoordinatorConfig::default(),
-    );
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig::with_batch(batch),
+    )
+    .unwrap();
     let verifier = GoldenVerifier::new();
     prop_check("padding sliced off on the way out", 60, |g: &mut Prng| {
         let method = *g.choose(&MethodId::all());
         let n = 1 + g.usize_below(batch);
         let values: Vec<f32> = (0..n).map(|_| g.f64_in(-6.5, 6.5) as f32).collect();
-        let out = coord.evaluate(method, values.clone())?;
+        let out = coord.evaluate(method, values.clone()).map_err(|e| e.to_string())?;
         if out.len() != n {
             return Err(format!("{method:?}: {} outputs for {n} inputs", out.len()));
         }
@@ -429,18 +458,20 @@ fn coordinator_slices_padding_off_round_trip() {
 
 #[test]
 fn oversized_request_fails_deterministically_not_starves() {
-    use tanh_vlsi::coordinator::GoldenBackend;
     let batch = 32;
     let coord = Coordinator::start(
-        Arc::new(GoldenBackend::table1(batch)),
-        CoordinatorConfig::default(),
-    );
-    // The router rejects oversized requests with the same error every
-    // time (no silent queueing, no starvation).
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig::with_batch(batch),
+    )
+    .unwrap();
+    // The router rejects oversized requests with the same typed error
+    // every time (no silent queueing, no starvation).
     let e1 = coord.submit(MethodId::Pwl, vec![0.0; batch + 1]).unwrap_err();
     let e2 = coord.submit(MethodId::Pwl, vec![0.0; batch + 1]).unwrap_err();
     assert_eq!(e1, e2);
-    assert!(e1.contains("exceeds the compiled batch"), "{e1}");
+    assert_eq!(e1.kind, RequestErrorKind::Admission);
+    assert_eq!(e1.code, ErrorCode::BadRequest);
+    assert!(e1.message.contains("exceeds the compiled batch"), "{e1}");
     // An exactly-batch-size request is NOT oversized.
     let out = coord.evaluate(MethodId::Pwl, vec![0.5; batch]).unwrap();
     assert_eq!(out.len(), batch);
@@ -455,36 +486,46 @@ fn oversized_request_fails_deterministically_not_starves() {
 
 // ---------- failure injection ----------
 
-/// A backend that fails every `fail_every`-th batch.
+/// A backend that fails every `fail_every`-th batch with an internal
+/// backend error.
 struct FlakyBackend {
-    inner: tanh_vlsi::coordinator::GoldenBackend,
+    inner: GoldenBackend,
     counter: std::sync::atomic::AtomicU64,
     fail_every: u64,
 }
 
-impl ExecBackend for FlakyBackend {
-    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
+impl EvalBackend for FlakyBackend {
+    fn name(&self) -> &'static str {
+        "flaky-golden"
+    }
+    fn availability(&self) -> Availability {
+        Availability::Available
+    }
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), BackendError> {
+        self.inner.ensure(spec)
+    }
+    fn eval_raw(
+        &self,
+        spec: &MethodSpec,
+        input: &[i64],
+        out: &mut [i64],
+    ) -> Result<EvalStats, BackendError> {
         let n = self.counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if n % self.fail_every == self.fail_every - 1 {
-            return Err("injected backend failure".to_string());
+            return Err(BackendError::internal("injected backend failure"));
         }
-        self.inner.execute(spec, flat)
-    }
-
-    fn batch_elements(&self) -> usize {
-        self.inner.batch_elements()
+        self.inner.eval_raw(spec, input, out)
     }
 }
 
 #[test]
 fn coordinator_survives_backend_failures() {
-    use tanh_vlsi::coordinator::GoldenBackend;
     let backend = Arc::new(FlakyBackend {
-        inner: GoldenBackend::table1(64),
+        inner: GoldenBackend::new(),
         counter: Default::default(),
         fail_every: 3,
     });
-    let coord = Coordinator::start(backend, CoordinatorConfig::default());
+    let coord = Coordinator::start(backend, CoordinatorConfig::with_batch(64)).unwrap();
     let mut ok = 0;
     let mut failed = 0;
     for i in 0..60 {
@@ -495,13 +536,19 @@ fn coordinator_survives_backend_failures() {
                 ok += 1;
             }
             Err(e) => {
-                assert!(e.contains("injected"), "{e}");
+                // The satellite bugfix: a worker-side backend fault is
+                // typed as such — distinguishable from admission
+                // errors, with the stable `internal` code.
+                assert_eq!(e.kind, RequestErrorKind::Backend, "{e}");
+                assert_eq!(e.code, ErrorCode::Internal, "{e}");
+                assert!(e.message.contains("injected"), "{e}");
                 failed += 1;
             }
         }
     }
     // Both outcomes observed; the coordinator never wedged, and the
-    // conservation law reconciles every submit.
+    // conservation laws reconcile every submit — with the failures
+    // counted on the backend side of the split.
     assert!(ok > 0, "no successes");
     assert!(failed > 0, "failure injection never fired");
     let m = coord.metrics();
@@ -509,6 +556,8 @@ fn coordinator_survives_backend_failures() {
     assert_eq!(m.requests as usize, ok);
     assert_eq!(m.failed_requests as usize, failed);
     assert_eq!(m.submitted, m.requests + m.failed_requests);
+    assert_eq!(m.backend_failed_requests as usize, failed);
+    assert_eq!(m.admission_failed_requests, 0);
     assert!(m.errors > 0);
     coord.shutdown();
 }
@@ -516,27 +565,38 @@ fn coordinator_survives_backend_failures() {
 #[test]
 fn coordinator_backpressure_rejects_when_flooded() {
     use std::time::Duration;
-    use tanh_vlsi::coordinator::{BatcherConfig, GoldenBackend};
 
     /// A backend that is very slow, so the queue fills.
     struct SlowBackend(GoldenBackend);
-    impl ExecBackend for SlowBackend {
-        fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
-            std::thread::sleep(Duration::from_millis(20));
-            self.0.execute(spec, flat)
+    impl EvalBackend for SlowBackend {
+        fn name(&self) -> &'static str {
+            "slow-golden"
         }
-        fn batch_elements(&self) -> usize {
-            self.0.batch_elements()
+        fn availability(&self) -> Availability {
+            Availability::Available
+        }
+        fn ensure(&self, spec: &MethodSpec) -> Result<(), BackendError> {
+            self.0.ensure(spec)
+        }
+        fn eval_raw(
+            &self,
+            spec: &MethodSpec,
+            input: &[i64],
+            out: &mut [i64],
+        ) -> Result<EvalStats, BackendError> {
+            std::thread::sleep(Duration::from_millis(20));
+            self.0.eval_raw(spec, input, out)
         }
     }
 
     let coord = Coordinator::start(
-        Arc::new(SlowBackend(GoldenBackend::table1(64))),
+        Arc::new(SlowBackend(GoldenBackend::new())),
         CoordinatorConfig {
-            batcher: BatcherConfig { max_queue: 256, ..Default::default() },
+            batcher: BatcherConfig { batch_elements: 64, max_queue: 256, ..Default::default() },
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     // Flood one method's queue without draining.
     let mut receivers = Vec::new();
     let mut rejected = 0;
@@ -544,7 +604,8 @@ fn coordinator_backpressure_rejects_when_flooded() {
         match coord.submit(MethodId::Pwl, vec![0.1; 32]) {
             Ok(rx) => receivers.push(rx),
             Err(e) => {
-                assert!(e.contains("backpressure"), "{e}");
+                assert_eq!(e.code, ErrorCode::Overloaded, "{e}");
+                assert!(e.message.contains("backpressure"), "{e}");
                 rejected += 1;
             }
         }

@@ -2,20 +2,23 @@
 //! coordinator (backpressure, drain-on-shutdown, metrics conservation)
 //! and the deterministic scenario harness (same seed ⇒ same workload ⇒
 //! same completion counts, every reply bit-exact vs the compiled
-//! golden kernels).
+//! golden kernels) — plus the cross-backend properties of the unified
+//! execution layer: the same scenario trace served on `golden` and
+//! `hw` produces bit-identical replies, and `hw` runs report simulated
+//! cycle counts.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use tanh_vlsi::approx::{MethodId, MethodSpec};
+use tanh_vlsi::backend::{
+    Availability, BackendError, ErrorCode, EvalBackend, EvalStats, GoldenBackend, HwBackend,
+};
 use tanh_vlsi::bench::scenario::{
     build_trace, run_trace, validate_serve_log, RunOptions, Verify, SCENARIO_NAMES,
 };
 use tanh_vlsi::bench::BenchLog;
-use tanh_vlsi::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, ExecBackend, GoldenBackend, MetricsSnapshot,
-    RoutePolicy,
-};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, RoutePolicy};
 
 fn table1() -> Vec<MethodSpec> {
     MethodSpec::table1_all()
@@ -27,31 +30,46 @@ struct SlowBackend {
     delay: Duration,
 }
 
-impl ExecBackend for SlowBackend {
-    fn execute(&self, spec: &MethodSpec, flat: &[f32]) -> Result<Vec<f32>, String> {
-        std::thread::sleep(self.delay);
-        self.inner.execute(spec, flat)
+impl SlowBackend {
+    fn new(delay: Duration) -> SlowBackend {
+        SlowBackend { inner: GoldenBackend::new(), delay }
     }
-    fn batch_elements(&self) -> usize {
-        self.inner.batch_elements()
+}
+
+impl EvalBackend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow-golden"
+    }
+    fn availability(&self) -> Availability {
+        self.inner.availability()
+    }
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), BackendError> {
+        self.inner.ensure(spec)
+    }
+    fn eval_raw(
+        &self,
+        spec: &MethodSpec,
+        input: &[i64],
+        out: &mut [i64],
+    ) -> Result<EvalStats, BackendError> {
+        std::thread::sleep(self.delay);
+        self.inner.eval_raw(spec, input, out)
     }
 }
 
 #[test]
 fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
-    let coord = Arc::new(Coordinator::start(
-        Arc::new(SlowBackend { inner: GoldenBackend::table1(64), delay: Duration::from_millis(2) }),
-        CoordinatorConfig {
-            batcher: BatcherConfig { max_queue: 128, ..Default::default() },
-            shards: 2,
-            route: RoutePolicy::LeastLoaded,
-            ..Default::default()
-        },
-    ));
+    let mut cfg = CoordinatorConfig::with_batch(64);
+    cfg.batcher.max_queue = 128;
+    cfg.shards = 2;
+    cfg.route = RoutePolicy::LeastLoaded;
+    let coord = Arc::new(
+        Coordinator::start(Arc::new(SlowBackend::new(Duration::from_millis(2))), cfg).unwrap(),
+    );
 
     // Concurrent submitters flooding a slow backend: every submit either
-    // returns a receiver (accepted) or fails fast with a backpressure
-    // error — never blocks.
+    // returns a receiver (accepted) or fails fast with a typed
+    // overloaded error — never blocks.
     let mut handles = Vec::new();
     for c in 0..6usize {
         let coord = coord.clone();
@@ -64,7 +82,8 @@ fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
                 match coord.submit(method, values) {
                     Ok(rx) => accepted.push(rx),
                     Err(e) => {
-                        assert!(e.contains("backpressure"), "unexpected error: {e}");
+                        assert_eq!(e.code, ErrorCode::Overloaded, "unexpected error: {e}");
+                        assert!(e.message.contains("backpressure"), "{e}");
                         rejected += 1;
                     }
                 }
@@ -98,11 +117,15 @@ fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
 
     // Conservation, per shard and merged: every accepted request is
     // accounted as completed or failed; every attempt as accepted or
-    // rejected.
+    // rejected; every failure as backend- or admission-kinded.
     let merged = coord.metrics();
     assert_eq!(merged.submitted, total_completed + total_failed);
     assert_eq!(merged.requests, total_completed);
     assert_eq!(merged.failed_requests, total_failed);
+    assert_eq!(
+        merged.failed_requests,
+        merged.backend_failed_requests + merged.admission_failed_requests
+    );
     assert_eq!(merged.rejected, total_rejected);
     assert_eq!(merged.submitted + merged.rejected, 6 * 120);
     let mut fold = MetricsSnapshot::default();
@@ -128,9 +151,10 @@ fn stress_backpressure_fails_fast_and_metrics_conserve_across_shards() {
 #[test]
 fn shutdown_drains_in_flight_batches() {
     let coord = Coordinator::start(
-        Arc::new(SlowBackend { inner: GoldenBackend::table1(64), delay: Duration::from_millis(1) }),
-        CoordinatorConfig::default(),
-    );
+        Arc::new(SlowBackend::new(Duration::from_millis(1))),
+        CoordinatorConfig::with_batch(64),
+    )
+    .unwrap();
     // Queue work across all methods, then shut down immediately: the
     // disconnect path must flush queued + partial batches, so every
     // reply still arrives.
@@ -154,7 +178,7 @@ fn scenarios_complete_deterministically_and_verify_bit_exact() {
     // every reply verified bit-exact against the compiled golden
     // kernels, on ≥ 2 shards per method.
     let batch = 128;
-    let backend = Arc::new(GoldenBackend::table1(batch));
+    let backend = Arc::new(GoldenBackend::new());
     let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
     let mut log = BenchLog::new();
     for name in SCENARIO_NAMES {
@@ -163,8 +187,9 @@ fn scenarios_complete_deterministically_and_verify_bit_exact() {
         for _run in 0..2 {
             let coord = Coordinator::start(
                 backend.clone(),
-                CoordinatorConfig { shards: 2, ..Default::default() },
-            );
+                CoordinatorConfig { shards: 2, ..CoordinatorConfig::with_batch(batch) },
+            )
+            .unwrap();
             assert!(coord.shards_per_method() >= 2);
             let out = run_trace(&coord, &trace, &opts)
                 .unwrap_or_else(|e| panic!("{name}: {e}"));
@@ -186,6 +211,71 @@ fn scenarios_complete_deterministically_and_verify_bit_exact() {
 }
 
 #[test]
+fn hw_backend_serves_scenarios_bit_exact_with_cycle_counts() {
+    // The multi-backend acceptance criterion, end to end: a steady
+    // scenario served on the cycle-accurate hw backend completes with
+    // every reply verified BIT-EXACT against independently compiled
+    // golden kernels (Verify::Exact — the verifier knows nothing about
+    // the backend), and the metrics carry the simulated-hardware
+    // latency column.
+    let batch = 128;
+    let specs = table1();
+    let trace = build_trace("steady", 42, batch, 0.05, &specs).unwrap();
+    let coord = Coordinator::start(
+        Arc::new(HwBackend::new()),
+        CoordinatorConfig { shards: 2, ..CoordinatorConfig::with_batch(batch) },
+    )
+    .unwrap();
+    assert_eq!(coord.backend_name(), "hw");
+    let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
+    let out = run_trace(&coord, &trace, &opts).unwrap();
+    assert_eq!(out.completed as usize, trace.requests.len());
+    assert_eq!(out.verified, out.completed, "unverified replies");
+    assert_eq!(out.failed, 0);
+    assert!(out.metrics.sim_cycles > 0, "hw serving must report simulated cycles");
+    // The BENCH_serve.json row carries both the backend name and the
+    // cycle column.
+    let row = out.to_json("hw", coord.shards_per_method(), batch);
+    let text = row.to_string_compact();
+    assert!(text.contains("\"backend\":\"hw\""), "{text}");
+    assert!(text.contains("\"sim_cycles\":"), "{text}");
+    coord.shutdown();
+}
+
+#[test]
+fn same_trace_on_golden_and_hw_yields_identical_reply_bytes() {
+    // Cross-backend determinism: replaying the same trace request-by-
+    // request against a golden-backed and an hw-backed coordinator
+    // must produce byte-identical outputs for every reply (both paths
+    // are bit-exact realizations of the same specs), and both runs'
+    // deterministic outcome fields must match.
+    let batch = 64;
+    let specs = table1();
+    let trace = build_trace("zipf", 9, batch, 0.03, &specs).unwrap();
+    let cfg = CoordinatorConfig { shards: 2, ..CoordinatorConfig::with_batch(batch) };
+    let golden = Coordinator::start(Arc::new(GoldenBackend::new()), cfg.clone()).unwrap();
+    let hw = Coordinator::start(Arc::new(HwBackend::new()), cfg).unwrap();
+    for (i, req) in trace.requests.iter().enumerate() {
+        let a = golden.evaluate_spec(&req.spec, req.values.clone()).unwrap();
+        let b = hw.evaluate_spec(&req.spec, req.values.clone()).unwrap();
+        let a_bytes: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+        let b_bytes: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a_bytes, b_bytes, "request {i} ({}) diverged between backends", req.spec);
+    }
+    // And the full harness agrees: run_trace outcomes match on the
+    // deterministic fields.
+    let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
+    let out_g = run_trace(&golden, &trace, &opts).unwrap();
+    let out_h = run_trace(&hw, &trace, &opts).unwrap();
+    assert_eq!(
+        out_g.deterministic_fields().to_string_pretty(),
+        out_h.deterministic_fields().to_string_pretty()
+    );
+    golden.shutdown();
+    hw.shutdown();
+}
+
+#[test]
 fn non_table1_spec_serves_bit_exact_against_fresh_golden_kernel() {
     // The acceptance criterion for the spec redesign: a design point
     // the old API could not even name (PWL at step 1/32 with an S2.13
@@ -196,11 +286,15 @@ fn non_table1_spec_serves_bit_exact_against_fresh_golden_kernel() {
     let spec = MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
     assert_ne!(spec, MethodSpec::table1(MethodId::Pwl));
     let specs = vec![spec];
-    let backend = Arc::new(GoldenBackend::for_specs(&specs, batch));
     let coord = Coordinator::start(
-        backend,
-        CoordinatorConfig { shards: 2, specs: specs.clone(), ..Default::default() },
-    );
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig {
+            shards: 2,
+            specs: specs.clone(),
+            ..CoordinatorConfig::with_batch(batch)
+        },
+    )
+    .unwrap();
     assert!(coord.shards_per_method() >= 2);
     let trace = build_trace("steady", 7, batch, 0.05, &specs).unwrap();
     let opts = RunOptions { verify: Verify::Exact, ..Default::default() };
@@ -225,11 +319,15 @@ fn mixed_table1_and_custom_specs_serve_together() {
     let batch = 128;
     let mut specs = table1();
     specs.push(MethodSpec::parse("lambert:terms=9").unwrap());
-    let backend = Arc::new(GoldenBackend::for_specs(&specs, batch));
     let coord = Coordinator::start(
-        backend,
-        CoordinatorConfig { shards: 2, specs: specs.clone(), ..Default::default() },
-    );
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig {
+            shards: 2,
+            specs: specs.clone(),
+            ..CoordinatorConfig::with_batch(batch)
+        },
+    )
+    .unwrap();
     let trace = build_trace("zipf", 13, batch, 0.1, &specs).unwrap();
     let out = run_trace(&coord, &trace, &RunOptions::default()).unwrap();
     assert_eq!(out.failed, 0);
@@ -247,9 +345,10 @@ fn paced_replay_honors_the_open_loop_schedule() {
     let span_us = trace.requests.last().unwrap().at_us;
     assert!(span_us > 0);
     let coord = Coordinator::start(
-        Arc::new(GoldenBackend::table1(batch)),
-        CoordinatorConfig::default(),
-    );
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig::with_batch(batch),
+    )
+    .unwrap();
     let opts = RunOptions { pace: true, verify: Verify::Exact, ..Default::default() };
     let out = run_trace(&coord, &trace, &opts).unwrap();
     assert!(
@@ -267,9 +366,10 @@ fn flood_scenario_spreads_load_across_shards() {
     // more than one shard of a flooded method has accepted traffic.
     let batch = 128;
     let coord = Coordinator::start(
-        Arc::new(GoldenBackend::table1(batch)),
-        CoordinatorConfig { shards: 3, ..Default::default() },
-    );
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig { shards: 3, ..CoordinatorConfig::with_batch(batch) },
+    )
+    .unwrap();
     let trace = build_trace("flood", 11, batch, 0.1, &table1()).unwrap();
     let out = run_trace(&coord, &trace, &RunOptions::default()).unwrap();
     assert_eq!(out.failed, 0);
