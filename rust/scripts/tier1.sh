@@ -31,7 +31,7 @@ TANH_SMOKE=1 "$BIN" serve --scenario all --seed 42 --shards 2 --out BENCH_serve.
 # (including the backend-era keys: which backend served, and its
 # simulated-hardware-latency column).
 for key in scenario seed backend shards requests elements verified fill_rate \
-           sim_cycles p50_us p95_us p99_us max_us evals_per_s; do
+           sim_cycles sim_cycles_per_element p50_us p95_us p99_us max_us evals_per_s; do
   grep -q "\"$key\"" BENCH_serve.json \
     || { echo "tier-1 FAIL: BENCH_serve.json missing key '$key'"; exit 1; }
 done
@@ -82,7 +82,46 @@ fi
 if grep -Eq '"verified": 0(,|$)' BENCH_serve_hw.json; then
   echo "tier-1 FAIL: hw smoke verified zero replies"; exit 1
 fi
+# Steady-state streaming check: the warm hw worker retires ~1 result
+# per cycle per fed element (pipeline fills amortized across the run),
+# so cycles/fed-element must sit just above 1.0 — a per-batch re-fill
+# regression inflates it by (latency-1)/batch on every batch.
+grep -q '"sim_cycles_per_element"' BENCH_serve_hw.json \
+  || { echo "tier-1 FAIL: hw serve row has no sim_cycles_per_element column"; exit 1; }
+CPE=$(grep -o '"sim_cycles_per_element": [0-9.eE+-]*' BENCH_serve_hw.json | head -1 \
+      | awk '{print $2}')
+awk -v cpe="$CPE" 'BEGIN { exit !(cpe > 0.0 && cpe < 8.0) }' \
+  || { echo "tier-1 FAIL: steady-state sim cycles/element '$CPE' out of band"; exit 1; }
 rm -f BENCH_serve_hw.json
+
+echo "== tier-1: hw-backend explore smoke =="
+# Measured-cost exploration: the full (method × parameter) sweep at a
+# coarse stride, costed off the lowered hw pipelines with a custom
+# objective set. Schema: the frontier table must carry the measured
+# columns (cyc/elt, cost source) and at least one row must actually be
+# measured (not an analytic fallback).
+"$BIN" explore --backend hw --stride 64 --objectives err,cycles,area > explore_hw.txt
+grep -q "on 'hw' costs" explore_hw.txt \
+  || { echo "tier-1 FAIL: explore did not run on the hw cost probe"; exit 1; }
+grep -q 'cyc/elt' explore_hw.txt \
+  || { echo "tier-1 FAIL: explore table lacks the cycles/element column"; exit 1; }
+# A frontier row ending in the cost-source label (not just the summary
+# line, which always contains the word "costs").
+grep -Eq 'measured *$|analytic *$' explore_hw.txt \
+  || { echo "tier-1 FAIL: explore rows lack the cost-source column"; exit 1; }
+# ">= 1 genuinely measured frontier point" — the summary line counts
+# them, so a zero count is the failure signal (the bare word
+# "measured" appears even in an all-analytic run).
+if grep -q '(0 measured' explore_hw.txt; then
+  echo "tier-1 FAIL: frontier has zero measured points"; exit 1
+fi
+# The objective grammar rejects unknown axes with the axis list.
+if "$BIN" explore --stride 64 --objectives err,wattage 2>err.txt; then
+  echo "tier-1 FAIL: invalid objective was accepted"; exit 1
+fi
+grep -q 'cyc/elt' err.txt \
+  || { echo "tier-1 FAIL: objective error does not list the axes"; exit 1; }
+rm -f err.txt explore_hw.txt
 
 echo "== tier-1: pjrt fail-fast smoke =="
 # Without linked xla bindings the pjrt backend must fail fast with the

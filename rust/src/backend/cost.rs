@@ -1,0 +1,138 @@
+//! Cost probing: where a design point's hardware numbers come from.
+//!
+//! The paper's §IV comparison ranks methods with an *analytic*
+//! complexity model — component inventories priced by the unit library
+//! ([`crate::cost::CostModel`]). Since the hw backend lowers every spec
+//! to its cycle-accurate Fig 3/4/5 datapath, the latency, critical path
+//! and instantiated units can instead be *measured* off the lowered
+//! [`crate::hw::Pipeline`]. [`CostProbe`] abstracts over the two
+//! answers: the golden backend replies with the analytic §IV model
+//! (unchanged from the original reproduction), the hw backend with
+//! lowered measurements, and every [`DesignCost`] carries a typed
+//! [`CostSource`] so consumers — the explorer's frontier rows, the
+//! report's measured-vs-analytic table — can never mislabel a
+//! fallback as a measurement.
+
+use std::fmt;
+
+use crate::approx::MethodSpec;
+use crate::cost::CostModel;
+
+use super::BackendError;
+
+/// Provenance of a [`DesignCost`]'s numbers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CostSource {
+    /// The analytic §IV model: component inventory priced by the unit
+    /// library ([`crate::cost::CostModel::price`]).
+    Analytic,
+    /// Measured off a lowered [`crate::hw::Pipeline`]: depth and
+    /// critical path read from the stages, area summed over the
+    /// instantiated units, cycles/element from a streaming probe.
+    Measured,
+}
+
+impl CostSource {
+    /// Stable report/CLI spelling (`analytic` / `measured`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CostSource::Analytic => "analytic",
+            CostSource::Measured => "measured",
+        }
+    }
+}
+
+impl fmt::Display for CostSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The hardware-cost coordinates of one design point, plus their
+/// provenance. The field set mirrors the analytic
+/// [`crate::cost::CostEstimate`] so the two sources are directly
+/// comparable axis by axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DesignCost {
+    /// Where these numbers came from.
+    pub source: CostSource,
+    /// Pipeline depth: latency in cycles at full throughput.
+    pub latency_cycles: u32,
+    /// Critical stage delay (FO4) — reciprocal of achievable frequency.
+    pub stage_delay_fo4: f64,
+    /// Area in gate equivalents.
+    pub area_ge: f64,
+    /// Steady-state cycles per element. The analytic model *assumes*
+    /// 1.0 (one result per cycle, §IV.H); the hw probe *measures* it by
+    /// streaming a warm batch through the lowered pipeline.
+    pub cycles_per_element: f64,
+}
+
+/// How an execution backend prices a design point. Implemented by
+/// [`super::GoldenBackend`] (analytic §IV model) and
+/// [`super::HwBackend`] (measured off the lowered pipeline); the
+/// explorer resolves every [`crate::explore::DesignPoint`]'s cost
+/// columns through this trait.
+pub trait CostProbe {
+    /// Resolves the cost of one design point. Errors `unknown_spec`
+    /// when this probe cannot express the spec (e.g. a configuration
+    /// the hw block diagrams cannot lower) — callers that fall back to
+    /// [`analytic_cost`] must keep the returned [`CostSource`] honest.
+    fn probe_cost(&self, spec: &MethodSpec) -> Result<DesignCost, BackendError>;
+}
+
+/// The analytic §IV cost of a spec: the inventory of the golden
+/// datapath model priced by the default unit library. This is what
+/// [`super::GoldenBackend`]'s probe answers, and the *labeled* fallback
+/// for specs a measuring probe cannot express.
+pub fn analytic_cost(spec: &MethodSpec) -> Result<DesignCost, BackendError> {
+    // Re-validate first (MethodSpec fields are public): a structurally
+    // invalid spec errors typed instead of panicking in build().
+    MethodSpec::new(spec.params, spec.io, spec.domain)
+        .map_err(|e| BackendError::unknown_spec(format!("invalid spec '{spec}': {e}")))?;
+    let c = CostModel::new().price(&spec.build().inventory(spec.io));
+    Ok(DesignCost {
+        source: CostSource::Analytic,
+        latency_cycles: c.latency_cycles,
+        stage_delay_fo4: c.stage_delay_fo4,
+        area_ge: c.area_ge,
+        cycles_per_element: 1.0 / c.throughput_per_cycle,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{IoSpec, MethodId, MethodParams};
+    use crate::backend::ErrorCode;
+
+    #[test]
+    fn analytic_cost_matches_the_priced_inventory() {
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let cost = analytic_cost(&spec).unwrap();
+        let want = CostModel::new().price(&spec.build().inventory(spec.io));
+        assert_eq!(cost.source, CostSource::Analytic);
+        assert_eq!(cost.latency_cycles, want.latency_cycles);
+        assert_eq!(cost.stage_delay_fo4, want.stage_delay_fo4);
+        assert_eq!(cost.area_ge, want.area_ge);
+        assert_eq!(cost.cycles_per_element, 1.0);
+    }
+
+    #[test]
+    fn analytic_cost_rejects_bogus_specs_typed() {
+        let bogus = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = analytic_cost(&bogus).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("invalid spec"), "{err}");
+    }
+
+    #[test]
+    fn cost_source_spellings_are_stable() {
+        assert_eq!(CostSource::Analytic.to_string(), "analytic");
+        assert_eq!(CostSource::Measured.to_string(), "measured");
+    }
+}

@@ -6,7 +6,10 @@ use std::sync::{Arc, RwLock};
 
 use crate::approx::{CompiledKernel, MethodSpec};
 
-use super::{golden_kernel, Availability, BackendError, EvalBackend, EvalStats};
+use super::{
+    analytic_cost, golden_kernel, Availability, BackendError, CostProbe, DesignCost, EvalBackend,
+    EvalStats,
+};
 
 /// The reference backend: serves any spec through its compiled integer
 /// kernel (bit-exact against the scalar `eval_fx` datapath models, one
@@ -76,6 +79,14 @@ impl EvalBackend for GoldenBackend {
         let kernel = self.kernel(spec)?;
         kernel.eval_slice_raw(input, out);
         Ok(EvalStats::default())
+    }
+}
+
+impl CostProbe for GoldenBackend {
+    /// The golden backend has no datapath to measure: it answers with
+    /// the analytic §IV model, exactly as the pre-probe explorer did.
+    fn probe_cost(&self, spec: &MethodSpec) -> Result<DesignCost, BackendError> {
+        analytic_cost(spec)
     }
 }
 

@@ -45,11 +45,20 @@
 //! [`dequantize_output`]), shared with the scenario verifier's
 //! [`kernel_eval_f32`] so the serving path and its checker cannot
 //! diverge in conversion semantics.
+//!
+//! Beyond execution, backends answer *cost* questions through
+//! [`CostProbe`] (module [`cost`]): golden replies with the analytic
+//! §IV complexity model, hw with latency/critical-path/area measured
+//! off the lowered pipeline — each answer labeled with a typed
+//! [`CostSource`] so the explorer's frontier rows can never pass an
+//! analytic fallback off as a measurement.
 
+mod cost;
 mod golden;
 mod hw_backend;
 mod pjrt;
 
+pub use cost::{analytic_cost, CostProbe, CostSource, DesignCost};
 pub use golden::GoldenBackend;
 pub use hw_backend::HwBackend;
 pub use pjrt::PjrtBackend;

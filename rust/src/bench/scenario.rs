@@ -342,6 +342,7 @@ impl ScenarioOutcome {
             ("batches", Json::i(m.batches as i64)),
             ("fill_rate", Json::n(m.fill_rate())),
             ("sim_cycles", Json::i(m.sim_cycles as i64)),
+            ("sim_cycles_per_element", Json::n(m.sim_cycles_per_element())),
             ("rejected_retries", Json::i(self.retries as i64)),
             ("p50_us", Json::n(m.p50_us())),
             ("p95_us", Json::n(m.p95_us())),
@@ -370,8 +371,12 @@ impl ScenarioOutcome {
 /// Keys every `BENCH_serve.json` row must carry. `backend` names the
 /// executing [`crate::backend::EvalBackend`]; `sim_cycles` is that
 /// backend's simulated-hardware-latency column (total simulated cycles
-/// across the run's batches — nonzero only on the hw backend).
-pub const SERVE_ROW_KEYS: [&str; 22] = [
+/// across the run's batches — nonzero only on the hw backend), and
+/// `sim_cycles_per_element` the steady-state cycles per fed element
+/// ([`MetricsSnapshot::sim_cycles_per_element`]): ≈ 1.0 for the warm
+/// streaming hw worker, inflated by the per-batch re-fill latency if
+/// streaming ever regresses.
+pub const SERVE_ROW_KEYS: [&str; 23] = [
     "name",
     "scenario",
     "seed",
@@ -389,6 +394,7 @@ pub const SERVE_ROW_KEYS: [&str; 22] = [
     "batches",
     "fill_rate",
     "sim_cycles",
+    "sim_cycles_per_element",
     "rejected_retries",
     "p50_us",
     "p95_us",

@@ -120,6 +120,21 @@ impl MetricsSnapshot {
         self.latency.p99()
     }
 
+    /// Steady-state simulated cycles per element actually fed to the
+    /// backend (batch capacity, padding included): the hw backend's
+    /// streaming observable. A warm streaming worker approaches 1.0
+    /// (one retire per cycle, §IV.H) with the pipeline fill amortized
+    /// across the run; a per-batch re-filling worker pays
+    /// `(latency − 1) / batch` extra on every batch. Zero on backends
+    /// without a cycle model.
+    pub fn sim_cycles_per_element(&self) -> f64 {
+        if self.capacity_elements == 0 {
+            0.0
+        } else {
+            self.sim_cycles as f64 / self.capacity_elements as f64
+        }
+    }
+
     /// Mean batch occupancy (useful elements / capacity-elements).
     pub fn batch_efficiency(&self) -> f64 {
         let total = self.elements + self.padded_elements;
@@ -329,6 +344,7 @@ mod tests {
         b.record_rejected();
         b.record_error();
         b.record_sim_cycles(40);
+        assert!((b.snapshot().sim_cycles_per_element() - 40.0 / 128.0).abs() < 1e-12);
 
         let merged = a.snapshot().merge(&b.snapshot());
         assert_eq!(merged.submitted, 3);
@@ -365,6 +381,7 @@ mod tests {
     fn empty_snapshot_is_benign() {
         let s = ServerMetrics::default().snapshot();
         assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.sim_cycles_per_element(), 0.0);
         assert_eq!(s.batch_efficiency(), 1.0);
         assert_eq!(s.fill_rate(), 1.0);
         assert_eq!(s.p50_us(), 0.0);

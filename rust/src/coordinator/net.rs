@@ -187,6 +187,7 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("p99_us", Json::n(m.p99_us())),
                     ("max_latency_us", Json::i(m.latency_us_max() as i64)),
                     ("sim_cycles", Json::i(m.sim_cycles as i64)),
+                    ("sim_cycles_per_element", Json::n(m.sim_cycles_per_element())),
                     ("shards_per_method", Json::i(coord.shards_per_method() as i64)),
                     ("batch_efficiency", Json::n(m.batch_efficiency())),
                     ("batch_fill_rate", Json::n(m.fill_rate())),

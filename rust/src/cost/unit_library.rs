@@ -82,6 +82,16 @@ impl UnitLibrary {
         2.0 * self.mult_area(bits) + self.adder_area(bits)
     }
 
+    /// GE area of a LUT storing `entries` words of `word_bits` bits.
+    pub fn lut_area(&self, entries: u32, word_bits: u32) -> f64 {
+        self.lut_ge_per_bit * entries as f64 * word_bits as f64
+    }
+
+    /// GE area of an n-bit barrel shifter (≈ log2(n) 2:1-mux levels).
+    pub fn shifter_area(&self, bits: u32) -> f64 {
+        self.mux2_ge_per_bit * bits as f64 * (bits.max(2) as f64).log2()
+    }
+
     /// FO4 delay of an n-bit adder.
     pub fn adder_delay(&self, bits: u32) -> f64 {
         self.adder_delay_base + self.adder_delay_log * (bits.max(2) as f64).log2()

@@ -1,10 +1,12 @@
 //! Design-space exploration: the quantitative version of the paper's
 //! §IV.H assessment. Sweeps (method × parameter), measures error,
-//! prices hardware, and extracts the Pareto frontier over
-//! (max error, area, latency).
+//! resolves hardware cost through a [`crate::backend::CostProbe`]
+//! (analytic §IV model on golden, lowered-pipeline measurements on
+//! hw), and extracts the Pareto frontier over a configurable objective
+//! set (default: max error × area × latency; see [`Objective`]).
 
 mod pareto;
 mod space;
 
-pub use pareto::{pareto_frontier, DesignPoint};
-pub use space::{explore, explore_specs, ExploreConfig};
+pub use pareto::{dominates_by, pareto_frontier, pareto_frontier_by, DesignPoint, Objective};
+pub use space::{explore, explore_specs, explore_specs_probed, sweep_specs, ExploreConfig};

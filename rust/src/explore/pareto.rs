@@ -1,10 +1,17 @@
-//! Pareto frontier over (error, area, latency).
+//! Pareto frontier over a configurable objective set (default:
+//! max error × area × latency).
+
+use std::cmp::Ordering;
 
 use crate::approx::{MethodId, MethodSpec};
+use crate::backend::CostSource;
 
 /// One evaluated design: a named design point ([`MethodSpec`]) with
-/// its measured error and priced hardware cost. `id`/`param` are
-/// derived from the spec and kept as columns for the table renderers.
+/// its measured error and hardware cost. `id`/`param` are derived from
+/// the spec and kept as columns for the table renderers. The cost
+/// columns come from a [`crate::backend::CostProbe`] — `cost_source`
+/// says whether they are the analytic §IV model or measurements off
+/// the lowered pipeline.
 #[derive(Clone, Debug)]
 pub struct DesignPoint {
     /// The full design-point name (method × parameter × I/O × domain) —
@@ -18,36 +25,153 @@ pub struct DesignPoint {
     pub max_err: f64,
     /// RMS error.
     pub rms: f64,
-    /// Priced area in gate equivalents.
+    /// Area in gate equivalents (priced inventory, or the unit library
+    /// summed over the lowered pipeline's instantiated units).
     pub area_ge: f64,
-    /// Pipeline latency in cycles.
+    /// Pipeline latency in cycles (inventory stages, or the lowered
+    /// pipeline's actual depth).
     pub latency_cycles: u32,
     /// Critical stage delay (FO4) — reciprocal of frequency.
     pub stage_delay_fo4: f64,
+    /// Steady-state cycles per element: 1.0 assumed by the analytic
+    /// model, measured by streaming a warm batch on the hw backend.
+    pub cycles_per_element: f64,
+    /// Where the cost columns came from (`analytic` | `measured`).
+    pub cost_source: CostSource,
 }
 
 impl DesignPoint {
-    /// True if `self` dominates `other` (≤ in every objective, < in one).
+    /// True if `self` dominates `other` on the default objective set
+    /// (≤ in every objective, < in one).
     pub fn dominates(&self, other: &DesignPoint) -> bool {
-        let le = self.max_err <= other.max_err
-            && self.area_ge <= other.area_ge
-            && self.latency_cycles <= other.latency_cycles;
-        let lt = self.max_err < other.max_err
-            || self.area_ge < other.area_ge
-            || self.latency_cycles < other.latency_cycles;
-        le && lt
+        dominates_by(self, other, &Objective::DEFAULT)
     }
 }
 
-/// Extracts the non-dominated subset, sorted by error.
-pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+/// One minimized axis of the exploration (`--objectives` grammar:
+/// a comma-separated subset of the [`Objective::NAMES`] spellings,
+/// e.g. `err,cycles,area`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// Max abs error (`err`).
+    MaxErr,
+    /// RMS error (`rms`).
+    Rms,
+    /// Area in GE (`area`).
+    Area,
+    /// Pipeline latency in cycles (`cycles`).
+    Cycles,
+    /// Steady-state cycles per element (`cyc/elt`).
+    CyclesPerElement,
+    /// Critical stage delay in FO4 (`delay`).
+    Delay,
+}
+
+impl Objective {
+    /// The classic frontier axes (error × area × latency).
+    pub const DEFAULT: [Objective; 3] = [Objective::MaxErr, Objective::Area, Objective::Cycles];
+
+    /// Canonical CLI spellings, in enum order.
+    pub const NAMES: [&'static str; 6] = ["err", "rms", "area", "cycles", "cyc/elt", "delay"];
+
+    /// The axis value of a design point (all objectives minimize).
+    pub fn value(self, p: &DesignPoint) -> f64 {
+        match self {
+            Objective::MaxErr => p.max_err,
+            Objective::Rms => p.rms,
+            Objective::Area => p.area_ge,
+            Objective::Cycles => p.latency_cycles as f64,
+            Objective::CyclesPerElement => p.cycles_per_element,
+            Objective::Delay => p.stage_delay_fo4,
+        }
+    }
+
+    /// Canonical spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::MaxErr => "err",
+            Objective::Rms => "rms",
+            Objective::Area => "area",
+            Objective::Cycles => "cycles",
+            Objective::CyclesPerElement => "cyc/elt",
+            Objective::Delay => "delay",
+        }
+    }
+
+    /// Parses one axis name (accepts a few aliases).
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "err" | "maxerr" | "max-err" => Some(Objective::MaxErr),
+            "rms" => Some(Objective::Rms),
+            "area" => Some(Objective::Area),
+            "cycles" | "lat" | "latency" => Some(Objective::Cycles),
+            "cyc/elt" | "cpe" | "cycles-per-element" => Some(Objective::CyclesPerElement),
+            "delay" | "fo4" => Some(Objective::Delay),
+            _ => None,
+        }
+    }
+
+    /// Parses a comma-separated objective list (the `--objectives`
+    /// argument); duplicates are dropped, an empty list is an error.
+    pub fn parse_list(s: &str) -> Result<Vec<Objective>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let o = Objective::parse(part).ok_or_else(|| {
+                format!("unknown objective '{part}' (have: {})", Objective::NAMES.join("|"))
+            })?;
+            if !out.contains(&o) {
+                out.push(o);
+            }
+        }
+        if out.is_empty() {
+            return Err(format!("--objectives needs at least one of {}", Objective::NAMES.join("|")));
+        }
+        Ok(out)
+    }
+}
+
+/// True if `a` dominates `b` over the given axes: ≤ everywhere, < on
+/// at least one. A constant axis contributes nothing (never blocks,
+/// never strictly wins), so dominance degrades gracefully to the
+/// remaining axes.
+pub fn dominates_by(a: &DesignPoint, b: &DesignPoint, objectives: &[Objective]) -> bool {
+    let mut strictly = false;
+    for o in objectives {
+        let (va, vb) = (o.value(a), o.value(b));
+        if va > vb {
+            return false;
+        }
+        if va < vb {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Extracts the non-dominated subset over an explicit objective set,
+/// sorted by the first objective (remaining axes break ties).
+pub fn pareto_frontier_by(points: &[DesignPoint], objectives: &[Objective]) -> Vec<DesignPoint> {
     let mut frontier: Vec<DesignPoint> = points
         .iter()
-        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .filter(|p| !points.iter().any(|q| dominates_by(q, p, objectives)))
         .cloned()
         .collect();
-    frontier.sort_by(|a, b| a.max_err.partial_cmp(&b.max_err).unwrap());
+    frontier.sort_by(|a, b| {
+        for o in objectives {
+            match o.value(a).partial_cmp(&o.value(b)).unwrap_or(Ordering::Equal) {
+                Ordering::Equal => continue,
+                other => return other,
+            }
+        }
+        Ordering::Equal
+    });
     frontier
+}
+
+/// Extracts the non-dominated subset over the default axes
+/// (error × area × latency), sorted by error.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    pareto_frontier_by(points, &Objective::DEFAULT)
 }
 
 #[cfg(test)]
@@ -64,6 +188,8 @@ mod tests {
             area_ge: area,
             latency_cycles: lat,
             stage_delay_fo4: 10.0,
+            cycles_per_element: 1.0,
+            cost_source: CostSource::Analytic,
         }
     }
 
@@ -87,5 +213,64 @@ mod tests {
         // Neither strictly dominates the other.
         let points = vec![pt(1e-5, 100.0, 5), pt(1e-5, 100.0, 5)];
         assert_eq!(pareto_frontier(&points).len(), 2);
+    }
+
+    #[test]
+    fn objective_subset_changes_the_frontier() {
+        // On (err, area) the slow-but-small point joins the frontier;
+        // on (err, cycles) it is dominated.
+        let points = vec![
+            pt(1e-5, 100.0, 5),
+            pt(1e-5, 50.0, 20), // smaller but slower
+        ];
+        let ea = pareto_frontier_by(&points, &[Objective::MaxErr, Objective::Area]);
+        assert_eq!(ea.len(), 1);
+        assert_eq!(ea[0].area_ge, 50.0);
+        let ec = pareto_frontier_by(&points, &[Objective::MaxErr, Objective::Cycles]);
+        assert_eq!(ec.len(), 1);
+        assert_eq!(ec[0].latency_cycles, 5);
+        let both = pareto_frontier_by(
+            &points,
+            &[Objective::MaxErr, Objective::Area, Objective::Cycles],
+        );
+        assert_eq!(both.len(), 2);
+    }
+
+    #[test]
+    fn constant_axis_degrades_gracefully() {
+        // err is constant across the set: the frontier is decided by
+        // the remaining axes alone.
+        let points = vec![pt(1e-5, 100.0, 5), pt(1e-5, 50.0, 5), pt(1e-5, 60.0, 4)];
+        let f = pareto_frontier_by(&points, &[Objective::MaxErr, Objective::Area, Objective::Cycles]);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|p| p.area_ge != 100.0));
+    }
+
+    #[test]
+    fn objective_grammar_parses_and_rejects() {
+        assert_eq!(
+            Objective::parse_list("err,cycles,area").unwrap(),
+            vec![Objective::MaxErr, Objective::Cycles, Objective::Area]
+        );
+        // Aliases, case, duplicates, stray commas.
+        assert_eq!(
+            Objective::parse_list("ERR, latency,, err,cpe").unwrap(),
+            vec![Objective::MaxErr, Objective::Cycles, Objective::CyclesPerElement]
+        );
+        let err = Objective::parse_list("err,wattage").unwrap_err();
+        assert!(err.contains("wattage") && err.contains("cyc/elt"), "{err}");
+        assert!(Objective::parse_list(" , ").is_err());
+        // Round trip: every canonical name parses back to itself.
+        for (name, o) in Objective::NAMES.iter().zip([
+            Objective::MaxErr,
+            Objective::Rms,
+            Objective::Area,
+            Objective::Cycles,
+            Objective::CyclesPerElement,
+            Objective::Delay,
+        ]) {
+            assert_eq!(Objective::parse(name), Some(o));
+            assert_eq!(o.name(), *name);
+        }
     }
 }

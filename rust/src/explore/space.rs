@@ -12,7 +12,7 @@
 use super::pareto::DesignPoint;
 use crate::approx::compiled::worker_threads;
 use crate::approx::{IoSpec, MethodId, MethodSpec, Registry};
-use crate::cost::CostModel;
+use crate::backend::{analytic_cost, CostProbe, GoldenBackend};
 use crate::error::{fig2_params, measure_kernel_with_threads, measure_strided, InputGrid};
 use crate::fixed::QFormat;
 
@@ -34,10 +34,9 @@ impl Default for ExploreConfig {
     }
 }
 
-/// Sweeps every method over its Fig 2 parameter range (× every
-/// configured output format), measuring error and pricing the
-/// inventory.
-pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
+/// The design points an [`ExploreConfig`] sweeps: every method over
+/// its Fig 2 parameter range × every configured output format.
+pub fn sweep_specs(cfg: &ExploreConfig) -> Vec<MethodSpec> {
     let domain = cfg.grid.range.unwrap_or(cfg.grid.fmt.max_value());
     let mut specs = Vec::new();
     for id in MethodId::all() {
@@ -54,15 +53,55 @@ pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
             }
         }
     }
+    specs
+}
+
+/// Sweeps every method over its Fig 2 parameter range (× every
+/// configured output format), measuring error and pricing the
+/// inventory with the analytic §IV model.
+pub fn explore(cfg: ExploreConfig) -> Vec<DesignPoint> {
+    let specs = sweep_specs(&cfg);
     explore_specs(&specs, cfg.stride)
 }
 
 /// Evaluates an explicit list of design points (the `--spec` path of
-/// `tanh-vlsi explore`): exhaustive sweeps ride the shared kernel
-/// cache; sparse strides stay on the scalar path (compiling would cost
-/// more than the subsampled sweep saves).
+/// `tanh-vlsi explore`) with the analytic §IV cost model — a thin
+/// wrapper over [`explore_specs_probed`] with the golden backend's
+/// probe, byte-identical to the pre-probe explorer's numbers.
 pub fn explore_specs(specs: &[MethodSpec], stride: usize) -> Vec<DesignPoint> {
-    let model = CostModel::new();
+    explore_specs_probed(specs, stride, &GoldenBackend::new())
+        .expect("the analytic probe prices every valid spec")
+}
+
+/// Evaluates an explicit list of design points, resolving the cost
+/// columns through a [`CostProbe`]: the golden backend answers with
+/// the analytic §IV model, the hw backend with measurements off the
+/// lowered pipeline (`explore --backend hw`). Error metrics always
+/// come from exhaustive/strided sweeps of the golden kernels —
+/// backends are bit-exact, so there is nothing backend-specific to
+/// measure on the error axis; exhaustive sweeps ride the shared kernel
+/// cache, sparse strides stay on the scalar path (compiling would cost
+/// more than the subsampled sweep saves).
+///
+/// A spec the probe cannot express (`unknown_spec`) falls back to the
+/// analytic model **labeled as such**: the point's
+/// [`DesignPoint::cost_source`] reports
+/// [`crate::backend::CostSource::Analytic`], so a frontier mixing
+/// measured and fallback rows can never pass the fallback off as a
+/// measurement. Any *other* probe failure — above all the hw backend's
+/// lowering-audit divergence (`internal`) — is a real defect, not a
+/// coverage gap, and aborts the exploration instead of being masked as
+/// an analytic row.
+///
+/// Note the hw probe's cost: its `ensure` compiles each spec's golden
+/// kernel for the lowering audit, so a sparse-stride hw exploration
+/// pays one compile per spec that the pure analytic path avoids —
+/// that is the price of never measuring an unaudited datapath.
+pub fn explore_specs_probed(
+    specs: &[MethodSpec],
+    stride: usize,
+    probe: &dyn CostProbe,
+) -> Result<Vec<DesignPoint>, String> {
     specs
         .iter()
         .map(|&spec| {
@@ -74,18 +113,30 @@ pub fn explore_specs(specs: &[MethodSpec], stride: usize) -> Vec<DesignPoint> {
             } else {
                 measure_strided(m.as_ref(), grid, spec.io.output, stride)
             };
-            let inv = m.inventory(spec.io);
-            let cost = model.price(&inv);
-            DesignPoint {
+            let cost = match probe.probe_cost(&spec) {
+                Ok(cost) => cost,
+                // Typed fallback (satellite fix): unsupported specs are
+                // costed analytically and *labeled* analytic — never
+                // silently mixed in as measured. The spec built above,
+                // so it is structurally valid and the analytic model
+                // always prices it.
+                Err(e) if e.code == crate::backend::ErrorCode::UnknownSpec => {
+                    analytic_cost(&spec).expect("explore specs are validated")
+                }
+                Err(e) => return Err(format!("probing cost of '{spec}': {e}")),
+            };
+            Ok(DesignPoint {
                 spec,
                 id: spec.method_id(),
                 param: spec.param(),
                 max_err: e.max_abs,
                 rms: e.rms,
                 area_ge: cost.area_ge,
-                latency_cycles: inv.pipeline_stages.max(1),
+                latency_cycles: cost.latency_cycles,
                 stage_delay_fo4: cost.stage_delay_fo4,
-            }
+                cycles_per_element: cost.cycles_per_element,
+                cost_source: cost.source,
+            })
         })
         .collect()
 }
@@ -93,6 +144,7 @@ pub fn explore_specs(specs: &[MethodSpec], stride: usize) -> Vec<DesignPoint> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::CostSource;
     use crate::explore::pareto_frontier;
 
     fn quick_cfg() -> ExploreConfig {
@@ -162,6 +214,78 @@ mod tests {
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].spec, specs[0]);
         assert!(points[0].max_err > 0.0 && points[0].area_ge > 0.0);
+        // The default (golden) probe is the analytic §IV model.
+        assert!(points.iter().all(|p| p.cost_source == CostSource::Analytic));
+        assert!(points.iter().all(|p| p.cycles_per_element == 1.0));
+    }
+
+    #[test]
+    fn hw_probe_yields_measured_points_with_lowered_depths() {
+        use crate::backend::HwBackend;
+        use crate::hw::pipeline_for;
+        let specs = vec![
+            MethodSpec::parse("pwl:step=1/16").unwrap(),
+            MethodSpec::parse("velocity:threshold=1/32").unwrap(),
+        ];
+        let hw = HwBackend::new();
+        let points = explore_specs_probed(&specs, 16, &hw).unwrap();
+        let analytic = explore_specs(&specs, 16);
+        for (p, a) in points.iter().zip(&analytic) {
+            assert_eq!(p.cost_source, CostSource::Measured, "{}", p.spec);
+            // Latency/critical path come from the lowered pipeline,
+            // not the inventory model.
+            let pipe = pipeline_for(&p.spec).unwrap();
+            assert_eq!(p.latency_cycles as usize, pipe.latency(), "{}", p.spec);
+            // Error metrics are probe-independent (same golden sweep).
+            assert_eq!(p.max_err, a.max_err, "{}", p.spec);
+            assert_eq!(p.rms, a.rms, "{}", p.spec);
+            // Measured steady-state throughput: one result per cycle.
+            assert_eq!(p.cycles_per_element, 1.0, "{}", p.spec);
+        }
+    }
+
+    #[test]
+    fn unsupported_specs_fall_back_labeled_analytic_not_mislabeled() {
+        use crate::backend::{BackendError, DesignCost};
+        // A probe that measures PWL but rejects everything else — the
+        // shape of a backend that cannot express part of the space.
+        struct PwlOnlyProbe;
+        impl CostProbe for PwlOnlyProbe {
+            fn probe_cost(&self, spec: &MethodSpec) -> Result<DesignCost, BackendError> {
+                if spec.method_id() != MethodId::Pwl {
+                    return Err(BackendError::unknown_spec(format!(
+                        "spec '{spec}' unsupported by this probe"
+                    )));
+                }
+                Ok(DesignCost { source: CostSource::Measured, ..analytic_cost(spec)? })
+            }
+        }
+        let specs = vec![
+            MethodSpec::parse("pwl:step=1/16:in=s3.8:out=s.15").unwrap(),
+            MethodSpec::parse("lambert:terms=4:in=s3.8:out=s.15").unwrap(),
+        ];
+        let points = explore_specs_probed(&specs, 4, &PwlOnlyProbe).unwrap();
+        assert_eq!(points[0].cost_source, CostSource::Measured);
+        // The unsupported spec is still explored, costed analytically,
+        // and says so — the silent-fallback bug this guards against
+        // would label it Measured.
+        assert_eq!(points[1].cost_source, CostSource::Analytic);
+        let analytic = explore_specs(&specs[1..], 4);
+        assert_eq!(points[1].area_ge, analytic[0].area_ge);
+        assert_eq!(points[1].latency_cycles, analytic[0].latency_cycles);
+
+        // Only unknown_spec may fall back: a probe failing with any
+        // other code (the shape of an hw lowering-audit divergence)
+        // aborts the exploration instead of masquerading as analytic.
+        struct BrokenProbe;
+        impl CostProbe for BrokenProbe {
+            fn probe_cost(&self, spec: &MethodSpec) -> Result<DesignCost, BackendError> {
+                Err(BackendError::internal(format!("lowering of '{spec}' diverges")))
+            }
+        }
+        let err = explore_specs_probed(&specs, 4, &BrokenProbe).unwrap_err();
+        assert!(err.contains("probing cost"), "{err}");
+        assert!(err.contains("diverges"), "{err}");
     }
 
     #[test]

@@ -15,7 +15,15 @@
 //!   required");
 //! - reports per-stage **critical-path delay** via the cost library so
 //!   the achievable frequency claim of §IV.H ("the circuit runs faster
-//!   if LUTs are used") is checkable.
+//!   if LUTs are used") is checkable;
+//! - supports **warm streaming** across batches ([`Pipeline::feed`] +
+//!   [`StreamState`]): the next batch's issue cycles absorb the
+//!   previous batch's drain, so a served stream pays the fill latency
+//!   once instead of per batch — the hw backend's steady-state
+//!   cycles/element observable;
+//! - prices the **instantiated units** ([`Pipeline::area_ge`]) so the
+//!   measured-cost explorer can put lowered area next to the analytic
+//!   §IV inventory model.
 
 mod lambert_dp;
 mod pipeline;
@@ -25,7 +33,7 @@ mod vf_dp;
 pub mod verilog;
 
 pub use lambert_dp::lambert_pipeline;
-pub use pipeline::{Pipeline, SimResult, Stage};
+pub use pipeline::{BlockKind, FeedResult, Pipeline, SimResult, Stage, StreamState};
 pub use poly_dp::{catmull_rom_pipeline, pwl_pipeline, taylor_pipeline};
 pub use signal::{SignalMap, Value};
 pub use vf_dp::velocity_pipeline;

@@ -7,8 +7,8 @@ use crate::fixed::Fx;
 /// Combinational blocks a stage may contain, for delay/area accounting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BlockKind {
-    /// LUT fetch with the given entry count.
-    Lut(u32),
+    /// LUT fetch: entry count × stored word width in bits.
+    Lut(u32, u32),
     /// Adder of the given width.
     Add(u32),
     /// Multiplier of the given operand width.
@@ -43,12 +43,20 @@ impl Stage {
         Stage { name: name.into(), blocks, f: Box::new(f) }
     }
 
+    /// GE area of this stage: its combinational blocks plus the
+    /// register bank it latches into (sized by the widest block).
+    pub fn area(&self, lib: &UnitLibrary) -> f64 {
+        let blocks: f64 = self.blocks.iter().map(|b| b.area(lib)).sum();
+        let reg_w = self.blocks.iter().map(|b| b.width()).max().unwrap_or(16);
+        blocks + lib.reg_ge_per_bit * reg_w.max(1) as f64
+    }
+
     /// Critical delay of this stage under a unit library (FO4).
     pub fn delay(&self, lib: &UnitLibrary) -> f64 {
         self.blocks
             .iter()
             .map(|b| match *b {
-                BlockKind::Lut(entries) => lib.lut_delay(entries),
+                BlockKind::Lut(entries, _) => lib.lut_delay(entries),
                 BlockKind::Add(w) => lib.adder_delay(w),
                 BlockKind::Mul(w) => lib.mult_delay(w),
                 BlockKind::Square(w) => lib.mult_delay(w) * 0.8,
@@ -56,6 +64,33 @@ impl Stage {
                 BlockKind::Shift(w) => 1.0 + (w.max(2) as f64).log2(),
             })
             .fold(0.0, f64::max)
+    }
+}
+
+impl BlockKind {
+    /// Operand/word width in bits, for register sizing (LUTs report
+    /// their stored word width).
+    pub fn width(self) -> u32 {
+        match self {
+            BlockKind::Lut(_, bits) => bits,
+            BlockKind::Add(w)
+            | BlockKind::Mul(w)
+            | BlockKind::Square(w)
+            | BlockKind::Mux(w)
+            | BlockKind::Shift(w) => w,
+        }
+    }
+
+    /// GE area of this block under a unit library.
+    pub fn area(self, lib: &UnitLibrary) -> f64 {
+        match self {
+            BlockKind::Lut(entries, bits) => lib.lut_area(entries, bits),
+            BlockKind::Add(w) => lib.adder_area(w),
+            BlockKind::Mul(w) => lib.mult_area(w),
+            BlockKind::Square(w) => lib.squarer_area(w),
+            BlockKind::Mux(w) => lib.mux2_ge_per_bit * w as f64,
+            BlockKind::Shift(w) => lib.shifter_area(w),
+        }
     }
 }
 
@@ -124,40 +159,169 @@ impl Pipeline {
     }
 
     /// Cycle-accurate streaming simulation: one new input issued per
-    /// cycle, every in-flight item advances one stage per cycle.
+    /// cycle, every in-flight item advances one stage per cycle (item
+    /// issued in cycle c retires at the end of cycle c + depth − 1).
+    /// A per-call convenience over [`Pipeline::clock`]'s single-cycle
+    /// semantics — the pipeline fills and drains within this call; use
+    /// [`Pipeline::feed`] to keep it warm across batches.
     pub fn simulate(&self, inputs: &[Fx]) -> SimResult {
-        let depth = self.stages.len();
-        // slots[i] = register bank feeding stage i; during a cycle every
-        // stage computes from its input register and latches into the
-        // next register at the cycle edge (item issued in cycle c retires
-        // at the end of cycle c + depth − 1).
-        let mut slots: Vec<Option<SignalMap>> = vec![None; depth];
+        let mut slots: Vec<Option<SignalMap>> = vec![None; self.stages.len()];
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut next_in = 0usize;
         let mut cycles = 0usize;
         let mut peak = 0usize;
         while outputs.len() < inputs.len() {
-            // Issue this cycle's input into stage 0's register.
-            if next_in < inputs.len() {
-                slots[0] = Some((self.input)(inputs[next_in]));
+            let issuing = next_in < inputs.len();
+            // Peak is sampled post-issue, pre-retire; slot 0 is always
+            // empty at a cycle boundary (clock drains it every cycle),
+            // so that is the current occupancy plus this cycle's issue.
+            let occupied = slots.iter().filter(|s| s.is_some()).count();
+            peak = peak.max(occupied + issuing as usize);
+            let issue = if issuing {
                 next_in += 1;
-            }
-            peak = peak.max(slots.iter().filter(|s| s.is_some()).count());
-            // All stages compute in parallel; latch from the back so each
-            // item moves exactly one stage per cycle.
-            if let Some(regs) = slots[depth - 1].take() {
-                let out = (self.stages[depth - 1].f)(&regs);
-                outputs.push(sig(&out, self.output).fx());
-            }
-            for i in (0..depth.saturating_sub(1)).rev() {
-                if let Some(regs) = slots[i].take() {
-                    slots[i + 1] = Some((self.stages[i].f)(&regs));
-                }
+                Some((self.input)(inputs[next_in - 1]))
+            } else {
+                None
+            };
+            if let Some(y) = self.clock(&mut slots, issue) {
+                outputs.push(y);
             }
             cycles += 1;
         }
         SimResult { outputs, cycles, peak_in_flight: peak }
     }
+
+    /// Measured GE area: the unit library summed over every block the
+    /// lowering actually instantiated, plus one register bank per
+    /// stage — the hw-probe counterpart of the analytic
+    /// [`crate::cost::CostModel::price`] inventory pricing.
+    pub fn area_ge(&self, lib: &UnitLibrary) -> f64 {
+        self.stages.iter().map(|s| s.area(lib)).sum()
+    }
+
+    /// Fresh streaming state for this pipeline (all registers empty).
+    pub fn stream_state(&self) -> StreamState {
+        StreamState { slots: vec![None; self.stages.len()], delivered: 0, issued: 0 }
+    }
+
+    /// One clock edge — the single definition of the latch semantics
+    /// both [`Pipeline::simulate`] and [`Pipeline::feed`] run on:
+    /// optionally issue into stage 0's register, retire from the last
+    /// stage, advance every in-flight item one stage (latch from the
+    /// back so each item moves exactly once per cycle; `slots[i]` is
+    /// the register bank feeding stage i).
+    fn clock(&self, slots: &mut [Option<SignalMap>], issue: Option<SignalMap>) -> Option<Fx> {
+        let depth = self.stages.len();
+        if let Some(regs) = issue {
+            slots[0] = Some(regs);
+        }
+        let out = slots[depth - 1].take().map(|regs| {
+            let m = (self.stages[depth - 1].f)(&regs);
+            sig(&m, self.output).fx()
+        });
+        for i in (0..depth.saturating_sub(1)).rev() {
+            if let Some(regs) = slots[i].take() {
+                slots[i + 1] = Some((self.stages[i].f)(&regs));
+            }
+        }
+        out
+    }
+
+    /// Streams one batch through persistent state, keeping the pipeline
+    /// warm across calls: consecutive feeds overlap, so the next
+    /// batch's issue cycles absorb this batch's drain instead of paying
+    /// the fill/drain latency per batch (`simulate`'s per-call cost).
+    ///
+    /// Outputs are bit-exact with [`Pipeline::eval`] — stage functions
+    /// are per-item, so overlap cannot change values. `cycles` is the
+    /// *incremental* cycle cost of this feed: `len + latency − 1` on a
+    /// cold stream, exactly `len` once warm.
+    ///
+    /// Mechanically, the issue phase advances the real register state
+    /// one cycle per input (retires belonging to items an earlier feed
+    /// already delivered are swallowed); the batch's still-in-flight
+    /// tail is then drained on a *copy* of the registers to complete
+    /// this call's output slice, while the live registers keep those
+    /// items in flight for the next feed.
+    pub fn feed(&self, st: &mut StreamState, inputs: &[Fx]) -> FeedResult {
+        assert_eq!(st.slots.len(), self.stages.len(), "stream state from a different pipeline");
+        if inputs.is_empty() {
+            return FeedResult { outputs: Vec::new(), cycles: 0 };
+        }
+        let depth = self.stages.len();
+        let before = st.retired_by(depth);
+        let mut outputs = Vec::with_capacity(inputs.len());
+        for &x in inputs {
+            if let Some(y) = self.clock(&mut st.slots, Some((self.input)(x))) {
+                if st.delivered > 0 {
+                    st.delivered -= 1;
+                } else {
+                    outputs.push(y);
+                }
+            }
+        }
+        st.issued += inputs.len() as u64;
+        // Speculative drain on a register copy: these cycles overlap
+        // the next feed's issue phase, so they are not charged here.
+        let mut ghost = st.slots.clone();
+        let mut swallow = st.delivered;
+        while outputs.len() < inputs.len() {
+            if let Some(y) = self.clock(&mut ghost, None) {
+                if swallow > 0 {
+                    swallow -= 1;
+                } else {
+                    outputs.push(y);
+                }
+            }
+        }
+        st.delivered = st.in_flight();
+        FeedResult { outputs, cycles: st.retired_by(depth) - before }
+    }
+}
+
+/// Persistent streaming state for one pipeline: the register banks and
+/// issue bookkeeping [`Pipeline::feed`] keeps warm across batches.
+pub struct StreamState {
+    /// Register banks (slot i feeds stage i), as in [`Pipeline::simulate`].
+    slots: Vec<Option<SignalMap>>,
+    /// In-flight items whose outputs an earlier feed already delivered
+    /// via its speculative drain; their real retires are swallowed.
+    delivered: usize,
+    /// Total inputs issued since the stream started.
+    issued: u64,
+}
+
+impl StreamState {
+    /// Virtual cycle by which everything issued so far has retired:
+    /// with one issue per cycle and no stalls that is
+    /// `issued + depth − 1` ([`Pipeline::simulate`]'s cycle-count
+    /// convention), or 0 before anything was issued.
+    fn retired_by(&self, depth: usize) -> u64 {
+        if self.issued == 0 {
+            0
+        } else {
+            self.issued + depth as u64 - 1
+        }
+    }
+
+    /// Number of items currently occupying pipeline registers.
+    pub fn in_flight(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total inputs issued since the stream started.
+    pub fn issued(&self) -> u64 {
+        self.issued
+    }
+}
+
+/// What one [`Pipeline::feed`] produced.
+pub struct FeedResult {
+    /// One output per input, in order (bit-exact vs [`Pipeline::eval`]).
+    pub outputs: Vec<Fx>,
+    /// Incremental cycles this feed consumed: `len + latency − 1` on a
+    /// cold stream, `len` once warm.
+    pub cycles: u64,
 }
 
 /// Shared front-end stage: sign peel-off + domain saturation check
@@ -247,6 +411,67 @@ mod tests {
         for (x, y) in inputs.iter().zip(&res.outputs) {
             assert_eq!(y.raw(), p.eval(*x).raw());
         }
+    }
+
+    #[test]
+    fn feed_is_bit_exact_and_amortizes_fill_latency() {
+        let p = double_then_inc_pipeline();
+        let inputs: Vec<Fx> = (0..10).map(|i| Fx::from_raw(i, QFormat::S3_12)).collect();
+        let mut st = p.stream_state();
+        // Cold feed: pays the fill latency, exactly like simulate.
+        let first = p.feed(&mut st, &inputs);
+        assert_eq!(first.cycles as usize, p.latency() + inputs.len() - 1);
+        // Warm feeds: one cycle per element, the fill is amortized.
+        let second = p.feed(&mut st, &inputs);
+        assert_eq!(second.cycles as usize, inputs.len());
+        let third = p.feed(&mut st, &inputs);
+        assert_eq!(third.cycles as usize, inputs.len());
+        // Every feed's outputs are bit-exact vs scalar eval.
+        for res in [&first, &second, &third] {
+            assert_eq!(res.outputs.len(), inputs.len());
+            for (x, y) in inputs.iter().zip(&res.outputs) {
+                assert_eq!(y.raw(), p.eval(*x).raw());
+            }
+        }
+        // Steady-state in-flight equals pipeline depth − 1.
+        assert_eq!(st.in_flight(), p.latency() - 1);
+        assert_eq!(st.issued(), 3 * inputs.len() as u64);
+        // Empty feeds are free.
+        let nil = p.feed(&mut st, &[]);
+        assert_eq!(nil.cycles, 0);
+        assert!(nil.outputs.is_empty());
+    }
+
+    #[test]
+    fn feed_handles_batches_smaller_than_depth() {
+        // Single-element feeds through a 2-deep pipeline: every output
+        // still correct, warm incremental cost is 1 cycle.
+        let p = double_then_inc_pipeline();
+        let mut st = p.stream_state();
+        for i in 0..6i64 {
+            let x = Fx::from_raw(i * 7, QFormat::S3_12);
+            let res = p.feed(&mut st, &[x]);
+            assert_eq!(res.outputs.len(), 1);
+            assert_eq!(res.outputs[0].raw(), p.eval(x).raw(), "feed {i}");
+            let want = if i == 0 { p.latency() as u64 } else { 1 };
+            assert_eq!(res.cycles, want, "feed {i}");
+        }
+    }
+
+    #[test]
+    fn area_sums_blocks_and_registers() {
+        let p = double_then_inc_pipeline();
+        let lib = UnitLibrary::default();
+        let want = 2.0 * (lib.adder_area(16) + lib.reg_ge_per_bit * 16.0);
+        assert!((p.area_ge(&lib) - want).abs() < 1e-9);
+        // Block pricing delegates to the unit library.
+        assert_eq!(BlockKind::Mul(16).area(&lib), lib.mult_area(16));
+        assert_eq!(BlockKind::Lut(64, 16).area(&lib), lib.lut_area(64, 16));
+        // Measured LUT area scales with the stored word width (the
+        // output-precision axis the explorer sweeps).
+        assert!(BlockKind::Lut(64, 8).area(&lib) < BlockKind::Lut(64, 16).area(&lib));
+        assert!(BlockKind::Shift(16).area(&lib) > 0.0);
+        assert_eq!(BlockKind::Lut(64, 16).width(), 16);
     }
 
     #[test]

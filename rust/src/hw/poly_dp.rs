@@ -25,7 +25,7 @@ pub fn pwl_pipeline(pwl: Pwl, out: QFormat) -> Pipeline {
     let w = out.width();
     let p1 = pwl.clone();
 
-    let fetch = Stage::new("fetch", vec![BlockKind::Lut(lut_entries)], move |r| {
+    let fetch = Stage::new("fetch", vec![BlockKind::Lut(lut_entries, w)], move |r| {
         let mag = sig(r, "mag").fx();
         let (idx, t) = p1.lut().split_index(mag);
         let mut m = SignalMap::new();
@@ -84,7 +84,7 @@ pub fn taylor_pipeline(t: Taylor, out: QFormat) -> Pipeline {
     let t2 = t.clone();
 
     let mut stages = Vec::new();
-    stages.push(Stage::new("fetch", vec![BlockKind::Lut(lut_entries)], move |r| {
+    stages.push(Stage::new("fetch", vec![BlockKind::Lut(lut_entries, w)], move |r| {
         let mag = sig(r, "mag").fx();
         let (idx, dx) = t1.split_fx(mag);
         let mut m = SignalMap::new();
@@ -167,7 +167,7 @@ pub fn catmull_rom_pipeline(cr: CatmullRom, out: QFormat) -> Pipeline {
     let w = CR_FMT.width();
     let c1 = cr.clone();
 
-    let fetch = Stage::new("fetch", vec![BlockKind::Lut(lut_entries)], move |r| {
+    let fetch = Stage::new("fetch", vec![BlockKind::Lut(lut_entries, w)], move |r| {
         let mag = sig(r, "mag").fx();
         let (idx, t) = c1.lut().split_index(mag);
         let k = idx as isize;

@@ -55,9 +55,10 @@
 //!   ([`backend::EvalBackend`], with typed availability and stable
 //!   error codes) behind which all three execution paths live —
 //!   `golden` (compiled kernels via the shared cache), `hw` (specs
-//!   lowered to the cycle-accurate Fig 3/4/5 datapaths, bit-exact and
-//!   reporting simulated cycle counts), and `pjrt` (AOT graphs,
-//!   cleanly `Unavailable` under the shim). Everything that executes —
+//!   lowered to the cycle-accurate Fig 3/4/5 datapaths, bit-exact,
+//!   streamed through warm per-spec pipelines with incremental
+//!   simulated-cycle accounting), and `pjrt` (AOT graphs, cleanly
+//!   `Unavailable` under the shim). Everything that executes —
 //!   the coordinator's workers, the CLI's `--backend` flag, sweeps,
 //!   scenario replays — goes through it.
 //! - [`coordinator`] — activation-accelerator service: request router
@@ -69,7 +70,11 @@
 //!   [`backend::EvalBackend`], ensured per served spec at startup.
 //! - [`explore`] — design-space exploration / Pareto frontier over
 //!   specs (method × parameter × output format), every frontier row
-//!   addressable by its spec string.
+//!   addressable by its spec string. Cost columns resolve through
+//!   [`backend::CostProbe`]: analytic §IV model on golden, measured
+//!   off the lowered (audited) pipelines on hw — each row carries a
+//!   typed `cost_source`, and the frontier axes are selectable
+//!   ([`explore::Objective`], `--objectives err,cycles,area`).
 //! - [`report`] — text/CSV renderers for every table and figure,
 //!   pinned by golden fixtures under `rust/tests/fixtures/`.
 //! - [`bench`] — self-contained benchmark harness (criterion is not

@@ -10,7 +10,9 @@
 //! tanh-vlsi fig2    --csv-dir out/                 regenerate Fig 2
 //! tanh-vlsi cost                                   §IV complexity report
 //! tanh-vlsi sweep   --spec lambert:terms=9         exhaustive error for named specs
-//! tanh-vlsi explore --stride 8                     Pareto frontier
+//! tanh-vlsi explore --stride 8                     Pareto frontier (analytic §IV costs)
+//! tanh-vlsi explore --backend hw --objectives err,cycles,area
+//!                                                  …measured off the lowered pipelines
 //! tanh-vlsi serve   --requests 1000                run the coordinator
 //! tanh-vlsi serve   --scenario all --shards 2      scenario load harness
 //! tanh-vlsi serve   --spec pwl:step=1/32:in=s2.13 --scenario steady
@@ -34,13 +36,15 @@
 use std::sync::Arc;
 
 use tanh_vlsi::approx::{spec, MethodId, MethodSpec, Registry};
-use tanh_vlsi::backend::{self, EvalBackend};
+use tanh_vlsi::backend::{self, CostProbe, CostSource, EvalBackend};
 use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
 use tanh_vlsi::bench::BenchLog;
 use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
 use tanh_vlsi::cost::UnitLibrary;
 use tanh_vlsi::error::{measure_backend, measure_spec};
-use tanh_vlsi::explore::{explore, explore_specs, pareto_frontier, ExploreConfig};
+use tanh_vlsi::explore::{
+    explore_specs_probed, pareto_frontier_by, sweep_specs, ExploreConfig, Objective,
+};
 use tanh_vlsi::fixed::{Fx, QFormat};
 use tanh_vlsi::hw::{pipeline_for, table1_pipeline};
 use tanh_vlsi::report;
@@ -73,7 +77,12 @@ fn app() -> App {
             Command::new("explore", "design-space exploration / Pareto frontier")
                 .opt("stride", "input-grid stride (1 = exhaustive)", Some("8"))
                 .opt("outputs", "comma-separated output Q-formats to sweep", Some("S.15"))
-                .opt("spec", "explore exactly these comma-separated specs instead", None),
+                .opt("spec", "explore exactly these comma-separated specs instead", None)
+                // golden costs with the analytic §IV model; hw lowers
+                // every point and measures depth/critical path/area off
+                // the audited pipeline (rows labeled by cost source).
+                .opt("backend", "cost probe: golden (analytic) | hw (measured)", Some("golden"))
+                .opt("objectives", "comma-separated Pareto axes: err|rms|area|cycles|cyc/elt|delay", Some("err,area,cycles")),
             Command::new("pipeline", "run the cycle-level datapath for one input")
                 .opt("method", "method name", Some("pwl"))
                 .opt("spec", "design-point spec to lower (overrides --method)", None)
@@ -123,6 +132,11 @@ fn main() {
         "eval" => cmd_eval(&parsed),
         "table1" => {
             println!("{}", report::table1::render(&report::table1::compute()));
+            // The measured-cost companion: §IV analytic model next to
+            // the lowered-pipeline measurements (depth, critical path,
+            // area, steady-state sim cycles/element).
+            println!();
+            println!("{}", report::table1::render_measured(&report::table1::compute_measured()));
             Ok(())
         }
         "table2" => {
@@ -313,9 +327,25 @@ fn cmd_fig2(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 
 fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let stride: usize = p.parse_or("stride", 8usize)?;
-    let points = match p.get("spec") {
+    let objectives = Objective::parse_list(p.get_or("objectives", "err,area,cycles"))?;
+    // The cost probe: golden answers with the analytic §IV model (the
+    // classic explorer), hw lowers every design point to its audited
+    // Fig 3/4/5 pipeline and measures depth/critical path/area plus
+    // steady-state cycles/element off the real datapath. PJRT has no
+    // cost model to probe.
+    let backend_name = p.get_or("backend", "golden");
+    let probe: Box<dyn CostProbe> = match backend_name {
+        "golden" => Box::new(backend::GoldenBackend::new()),
+        "hw" => Box::new(backend::HwBackend::new()),
+        other => {
+            return Err(format!(
+                "explore supports --backend golden|hw, not '{other}' (pjrt has no cost probe)"
+            ))
+        }
+    };
+    let specs = match p.get("spec") {
         // Explicit design points: evaluate exactly these.
-        Some(arg) => explore_specs(&parse_specs(arg)?, stride),
+        Some(arg) => parse_specs(arg)?,
         None => {
             let outputs: Result<Vec<QFormat>, String> = p
                 .get_or("outputs", "S.15")
@@ -324,13 +354,24 @@ fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
                 .filter(|s| !s.is_empty())
                 .map(|s| QFormat::parse(s).ok_or_else(|| format!("bad output format '{s}'")))
                 .collect();
-            explore(ExploreConfig { stride, outputs: outputs?, ..Default::default() })
+            sweep_specs(&ExploreConfig { stride, outputs: outputs?, ..Default::default() })
         }
     };
-    let frontier = pareto_frontier(&points);
-    println!("explored {} design points; Pareto frontier ({}):\n", points.len(), frontier.len());
+    let points = explore_specs_probed(&specs, stride, probe.as_ref())?;
+    let frontier = pareto_frontier_by(&points, &objectives);
+    let measured = frontier.iter().filter(|p| p.cost_source == CostSource::Measured).count();
+    let names: Vec<&str> = objectives.iter().map(|o| o.name()).collect();
+    println!(
+        "explored {} design points on '{backend_name}' costs; Pareto frontier over ({}) \
+         has {} points ({} measured, {} analytic):\n",
+        points.len(),
+        names.join(", "),
+        frontier.len(),
+        measured,
+        frontier.len() - measured,
+    );
     let mut t = tanh_vlsi::util::table::TextTable::new(&[
-        "spec", "max err", "area (GE)", "latency", "stage FO4",
+        "spec", "max err", "area (GE)", "latency", "cyc/elt", "stage FO4", "cost",
     ]);
     for pt in &frontier {
         t.row(vec![
@@ -338,7 +379,9 @@ fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
             format!("{:.2e}", pt.max_err),
             format!("{:.0}", pt.area_ge),
             pt.latency_cycles.to_string(),
+            format!("{:.2}", pt.cycles_per_element),
             format!("{:.1}", pt.stage_delay_fo4),
+            pt.cost_source.to_string(),
         ]);
     }
     println!("{}", t.render());
@@ -506,10 +549,11 @@ fn cmd_serve_scenarios(
         if m.sim_cycles > 0 {
             println!(
                 "  simulated hw latency: {} cycles total ({:.1} cycles/batch, \
-                 {:.2} cycles/element)",
+                 {:.2} cycles/element, steady-state {:.3} cycles/fed element)",
                 m.sim_cycles,
                 m.sim_cycles as f64 / m.batches.max(1) as f64,
                 m.sim_cycles as f64 / m.elements.max(1) as f64,
+                m.sim_cycles_per_element(),
             );
         }
         match verify {

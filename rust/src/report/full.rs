@@ -45,6 +45,18 @@ pub fn generate(opts: ReportOptions) -> String {
 
     let _ = writeln!(out, "## Table I\n\n```\n{}```\n", table1::render(&table1::compute()));
 
+    // The measured-cost companion: the same six configurations with
+    // the analytic §IV cost model next to measurements off the lowered
+    // hw pipelines. "cycles (hw)"/"FO4 (hw)"/"area GE (hw)" are read
+    // from the audited Fig 3/4/5 datapaths; "sim cyc/elt" is the
+    // steady-state cycles/element of a warm streaming batch — the
+    // §IV.H one-result-per-cycle claim, measured rather than assumed.
+    let _ = writeln!(
+        out,
+        "## Table I companion — measured vs analytic hw cost\n\n```\n{}```\n",
+        table1::render_measured(&table1::compute_measured())
+    );
+
     if opts.fig2 {
         let series = fig2::compute();
         let _ = writeln!(out, "## Fig 2\n\n```\n{}```\n", fig2::render(&series));
@@ -77,18 +89,24 @@ pub fn generate(opts: ReportOptions) -> String {
             frontier.len(),
             points.len()
         );
-        let _ = writeln!(out, "| method | param | spec | max err | area GE | latency |");
-        let _ = writeln!(out, "|---|---|---|---|---|---|");
+        // `cost` labels each row's provenance: `analytic` rows price
+        // the §IV inventory, `measured` rows (an `--backend hw`
+        // exploration) read the lowered pipeline.
+        let _ =
+            writeln!(out, "| method | param | spec | max err | area GE | latency | cyc/elt | cost |");
+        let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
         for p in &frontier {
             let _ = writeln!(
                 out,
-                "| {} | {} | `{}` | {:.2e} | {:.0} | {} |",
+                "| {} | {} | `{}` | {:.2e} | {:.0} | {} | {:.2} | {} |",
                 p.id.name(),
                 p.param,
                 p.spec,
                 p.max_err,
                 p.area_ge,
-                p.latency_cycles
+                p.latency_cycles,
+                p.cycles_per_element,
+                p.cost_source,
             );
         }
     }
@@ -137,6 +155,8 @@ mod tests {
         let r = generate(ReportOptions { fig2: false, explore: false, ..Default::default() });
         assert!(r.contains("# tanh-vlsi"));
         assert!(r.contains("## Table I"));
+        assert!(r.contains("measured vs analytic hw cost"));
+        assert!(r.contains("sim cyc/elt"));
         assert!(r.contains("## Table II"));
         assert!(r.contains("## §IV complexity"));
         assert!(r.contains("## Error distribution"));

@@ -317,6 +317,138 @@ fn prop_spec_rejections() {
     }
 }
 
+// ---------- Pareto frontier invariants ----------
+
+mod pareto_props {
+    use super::*;
+    use tanh_vlsi::backend::CostSource;
+    use tanh_vlsi::explore::{dominates_by, pareto_frontier_by, DesignPoint, Objective};
+
+    fn random_point(g: &mut Prng, constant_area: bool) -> DesignPoint {
+        DesignPoint {
+            spec: MethodSpec::table1(MethodId::Pwl),
+            id: MethodId::Pwl,
+            param: 0.0,
+            max_err: g.f64_in(1e-6, 1e-3),
+            rms: g.f64_in(1e-7, 1e-4),
+            area_ge: if constant_area { 500.0 } else { g.f64_in(100.0, 5000.0) },
+            latency_cycles: g.i64_in(1, 20) as u32,
+            stage_delay_fo4: g.f64_in(5.0, 30.0),
+            cycles_per_element: g.f64_in(1.0, 4.0),
+            cost_source: CostSource::Analytic,
+        }
+    }
+
+    /// Total comparison key: every objective axis value, so two
+    /// frontiers can be compared as multisets regardless of tie order.
+    fn key(p: &DesignPoint) -> [f64; 6] {
+        [
+            p.max_err,
+            p.rms,
+            p.area_ge,
+            p.latency_cycles as f64,
+            p.cycles_per_element,
+            p.stage_delay_fo4,
+        ]
+    }
+
+    fn sorted_keys(points: &[DesignPoint]) -> Vec<[f64; 6]> {
+        let mut keys: Vec<[f64; 6]> = points.iter().map(key).collect();
+        keys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        keys
+    }
+
+    #[test]
+    fn prop_pareto_frontier_sound_under_any_objective_set() {
+        let axes_pool: [&[Objective]; 4] = [
+            &[Objective::MaxErr, Objective::Area, Objective::Cycles],
+            &[Objective::MaxErr, Objective::Cycles],
+            &[Objective::Rms, Objective::Area, Objective::Delay, Objective::CyclesPerElement],
+            &[Objective::MaxErr],
+        ];
+        prop_check("pareto frontier sound", 120, |g: &mut Prng| {
+            let axes = axes_pool[g.usize_below(axes_pool.len())];
+            // A quarter of the cases pin one axis constant across the
+            // whole set: the frontier must degrade gracefully to the
+            // remaining axes instead of collapsing or blowing up.
+            let constant_area = g.bool(0.25);
+            let n = 1 + g.usize_below(40);
+            let points: Vec<DesignPoint> =
+                (0..n).map(|_| random_point(g, constant_area)).collect();
+            let frontier = pareto_frontier_by(&points, axes);
+            if frontier.is_empty() {
+                return Err("frontier of a non-empty set is empty".into());
+            }
+            // Mutually non-dominated.
+            for (i, a) in frontier.iter().enumerate() {
+                for b in &frontier {
+                    if dominates_by(a, b, axes) && dominates_by(b, a, axes) {
+                        return Err("mutual domination is contradictory".into());
+                    }
+                    if dominates_by(b, a, axes) {
+                        return Err(format!("frontier point {i} is dominated"));
+                    }
+                }
+            }
+            // Every dropped point is dominated by some frontier point
+            // (dominance is a strict partial order, so a maximal
+            // dominator exists and survives into the frontier).
+            for p in &points {
+                let dropped = points.iter().any(|q| dominates_by(q, p, axes));
+                if dropped && !frontier.iter().any(|f| dominates_by(f, p, axes)) {
+                    return Err("dropped point not dominated by the frontier".into());
+                }
+                if !dropped {
+                    // Non-dominated points must appear in the frontier.
+                    let k = key(p);
+                    if !frontier.iter().any(|f| key(f) == k) {
+                        return Err("non-dominated point missing from frontier".into());
+                    }
+                }
+            }
+            // Invariant under input permutation (Fisher-Yates on a copy).
+            let mut shuffled = points.clone();
+            for i in (1..shuffled.len()).rev() {
+                shuffled.swap(i, g.usize_below(i + 1));
+            }
+            let refrontier = pareto_frontier_by(&shuffled, axes);
+            if sorted_keys(&frontier) != sorted_keys(&refrontier) {
+                return Err("frontier changed under input permutation".into());
+            }
+            // Sorted by the first objective.
+            let first = axes[0];
+            if !frontier.windows(2).all(|w| first.value(&w[0]) <= first.value(&w[1])) {
+                return Err("frontier not sorted by the first objective".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_axis_matches_frontier_without_that_axis() {
+        // With an axis constant across the set, the frontier must be
+        // exactly what the remaining axes alone produce.
+        prop_check("constant axis is a no-op", 40, |g: &mut Prng| {
+            let n = 2 + g.usize_below(30);
+            let points: Vec<DesignPoint> = (0..n).map(|_| random_point(g, true)).collect();
+            let with = pareto_frontier_by(
+                &points,
+                &[Objective::MaxErr, Objective::Area, Objective::Cycles],
+            );
+            let without =
+                pareto_frontier_by(&points, &[Objective::MaxErr, Objective::Cycles]);
+            if sorted_keys(&with) != sorted_keys(&without) {
+                return Err(format!(
+                    "constant area axis changed the frontier: {} vs {} points",
+                    with.len(),
+                    without.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
 // ---------- batcher invariants ----------
 
 /// Builds a standalone request (the reply receiver is dropped; these
