@@ -20,7 +20,9 @@ fn main() {
     );
     println!("{}", fig2::render(&series));
 
-    let out = std::path::Path::new("target/paper/fig2");
+    // Anchored to the crate root so the CSVs land under rust/target/
+    // regardless of the directory `cargo bench` was launched from.
+    let out = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/target/paper/fig2"));
     fig2::write_csv(&series, out).expect("writing CSVs");
     println!("CSV series written to {}", out.display());
 

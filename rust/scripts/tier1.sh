@@ -17,6 +17,21 @@ cargo test -q
 echo "== tier-1: throughput smoke bench (TANH_SMOKE=1) =="
 TANH_SMOKE=1 cargo bench --bench throughput
 
+# Packed-kernel schema check: the bench must log a kernel-packed row
+# and a packed-vs-scalar speedup row per Table I method, and the SWAR
+# path must actually pay off on the PWL kernel (acceptance: >= 2.0x).
+for key in '"kernel-packed/' '"kernel-packed-speedup/' '"speedup"'; do
+  grep -q "$key" BENCH_throughput.json \
+    || { echo "tier-1 FAIL: BENCH_throughput.json missing $key rows"; exit 1; }
+done
+PWL_SPEEDUP=$(grep -o '"name": "kernel-packed-speedup/PWL[^}]*' BENCH_throughput.json \
+              | grep -o '"speedup": [0-9.eE+-]*' | head -1 | awk '{print $2}')
+[ -n "$PWL_SPEEDUP" ] \
+  || { echo "tier-1 FAIL: no packed speedup row for the PWL kernel"; exit 1; }
+awk -v s="$PWL_SPEEDUP" 'BEGIN { exit !(s >= 2.0) }' \
+  || { echo "tier-1 FAIL: PWL packed speedup $PWL_SPEEDUP < 2.0x"; exit 1; }
+echo "(PWL packed speedup: ${PWL_SPEEDUP}x)"
+
 echo "== tier-1: serve-scenario smoke (TANH_SMOKE=1) =="
 # All five deterministic scenarios in one run, shortened by TANH_SMOKE
 # (scale 0.1), on >= 2 shards per method; the binary verifies every
@@ -31,12 +46,19 @@ TANH_SMOKE=1 "$BIN" serve --scenario all --seed 42 --shards 2 --out BENCH_serve.
 # (including the backend-era keys: which backend served, and its
 # simulated-hardware-latency column).
 for key in scenario seed backend shards requests elements verified fill_rate \
-           sim_cycles sim_cycles_per_element p50_us p95_us p99_us max_us evals_per_s; do
+           sim_cycles sim_cycles_per_element p50_us p95_us p99_us max_us evals_per_s \
+           packed_batches; do
   grep -q "\"$key\"" BENCH_serve.json \
     || { echo "tier-1 FAIL: BENCH_serve.json missing key '$key'"; exit 1; }
 done
 if grep -Eq '"requests": 0(,|$)' BENCH_serve.json; then
   echo "tier-1 FAIL: BENCH_serve.json has a zero-request scenario"; exit 1
+fi
+# Golden serving of the Table I suite runs the SWAR packed kernels, so
+# every scenario row must count at least one packed batch. (The hw
+# smoke below legitimately reports 0 — the check is golden-only.)
+if grep -Eq '"packed_batches": 0(,|$)' BENCH_serve.json; then
+  echo "tier-1 FAIL: golden serve ran no packed batches"; exit 1
 fi
 
 echo "== tier-1: non-Table-I spec smoke =="

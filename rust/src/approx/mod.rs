@@ -33,6 +33,7 @@
 
 pub mod catmull_rom;
 pub mod compiled;
+pub(crate) mod swar;
 pub mod lambert;
 pub mod lut;
 pub mod newton;

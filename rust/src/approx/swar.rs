@@ -1,0 +1,241 @@
+//! SWAR (SIMD-within-a-register) lane primitives for the packed kernel
+//! path ([`super::CompiledKernel::eval_slice_packed`]).
+//!
+//! A `u64` word holds `64 / W` independent two's-complement lanes of
+//! `W` bits (W = 16 for the paper's 16-bit formats, W = 8 for the
+//! Table III row-4 formats). The primitives below implement per-lane
+//! arithmetic with plain integer ops — no `std::simd`, no intrinsics —
+//! by masking carries at lane boundaries (the Hacker's Delight
+//! carry-containment identities) and spreading per-lane condition bits
+//! into full-lane select masks with a single multiply.
+//!
+//! Everything here is branch-free; the compiled-kernel front end
+//! (sign peel, magnitude clamp, saturation select) runs entirely on
+//! these, which is what makes the packed path profitable even though
+//! the per-method MAC cores stay per-lane (a true packed multiply is
+//! impossible in SWAR: cross-lane partial products pollute neighbours).
+//!
+//! All functions are generic over `const W: u32` and assume `W`
+//! divides 64. Derivations and the masking scheme are documented in
+//! EXPERIMENTS.md §Packed kernels.
+
+/// All-ones mask of one `W`-bit lane (lane 0).
+pub(crate) const fn lane_mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+/// One bit set at the LSB of every lane (`0x0001_0001_…` for W=16).
+pub(crate) const fn lsb_mask(w: u32) -> u64 {
+    u64::MAX / lane_mask(w)
+}
+
+/// One bit set at the MSB (sign bit) of every lane.
+pub(crate) const fn msb_mask(w: u32) -> u64 {
+    lsb_mask(w) << (w - 1)
+}
+
+/// Broadcasts a `W`-bit value into every lane.
+#[inline(always)]
+pub(crate) fn bc<const W: u32>(v: u64) -> u64 {
+    debug_assert!(v <= lane_mask(W));
+    v.wrapping_mul(lsb_mask(W))
+}
+
+/// Spreads per-lane sign bits of `m` into full-lane masks: a lane with
+/// its MSB set becomes all-ones, others all-zeros. The multiply cannot
+/// carry across lanes because each contribution `lane_mask << (i·W)`
+/// occupies exactly lane `i`'s bits.
+#[inline(always)]
+pub(crate) fn spread<const W: u32>(m: u64) -> u64 {
+    ((m & msb_mask(W)) >> (W - 1)).wrapping_mul(lane_mask(W))
+}
+
+/// Per-lane wrapping addition with carries contained at lane
+/// boundaries: add the low `W−1` bits with the sign bits masked off
+/// (so a carry out of a lane dies in its own cleared MSB slot), then
+/// restore the sign-bit XOR.
+#[inline(always)]
+pub(crate) fn add<const W: u32>(x: u64, y: u64) -> u64 {
+    let h = msb_mask(W);
+    ((x & !h).wrapping_add(y & !h)) ^ ((x ^ y) & h)
+}
+
+/// Per-lane wrapping subtraction with borrows contained at lane
+/// boundaries (dual of [`add`]).
+#[inline(always)]
+pub(crate) fn sub<const W: u32>(x: u64, y: u64) -> u64 {
+    let h = msb_mask(W);
+    ((x | h).wrapping_sub(y & !h)) ^ ((x ^ !y) & h)
+}
+
+/// Full-lane mask of per-lane **unsigned** `x < y` over all `W` bits
+/// (no spare bit needed — magnitudes can legitimately reach `2^(W−1)`,
+/// e.g. `abs(min_raw)` and the saturation sentinel `max_raw + 1`).
+///
+/// The lane-local difference `d = x − y` from [`sub`] exposes the
+/// borrow *into* each MSB as `x ^ y ^ d`; one more full-subtractor step
+/// reconstructs the borrow *out* of the lane, which is exactly the
+/// unsigned less-than predicate.
+#[inline(always)]
+pub(crate) fn lt_u<const W: u32>(x: u64, y: u64) -> u64 {
+    let h = msb_mask(W);
+    let d = sub::<W>(x, y);
+    let borrow = ((!x & y) | ((!x | y) & (x ^ y ^ d))) & h;
+    spread::<W>(borrow)
+}
+
+/// Per-lane select: lane from `a` where `mask` is all-ones, from `b`
+/// where all-zeros. `mask` must be a full-lane mask.
+#[inline(always)]
+pub(crate) fn select(mask: u64, a: u64, b: u64) -> u64 {
+    (a & mask) | (b & !mask)
+}
+
+/// Per-lane unsigned minimum.
+#[inline(always)]
+pub(crate) fn min_u<const W: u32>(x: u64, y: u64) -> u64 {
+    select(lt_u::<W>(x, y), x, y)
+}
+
+/// Per-lane absolute value of two's-complement lanes, returned with
+/// the full-lane negative mask (the sign peel the odd-symmetry front
+/// end needs). `abs(lane_min) = 2^(W−1)` stays representable as an
+/// unsigned lane magnitude, mirroring the scalar path's saturating
+/// `x.abs().min(in_max)`.
+#[inline(always)]
+pub(crate) fn abs<const W: u32>(w: u64) -> (u64, u64) {
+    let neg = spread::<W>(w);
+    (add::<W>(w ^ neg, neg & lsb_mask(W)), neg)
+}
+
+/// Two's-complement negation of the lanes selected by the full-lane
+/// mask `neg` (the sign re-apply on the way out). Lane values must be
+/// `< 2^(W−1)` so the negation cannot overflow the lane.
+#[inline(always)]
+pub(crate) fn negate_masked<const W: u32>(w: u64, neg: u64) -> u64 {
+    add::<W>(w ^ neg, neg & lsb_mask(W))
+}
+
+/// Packs up to `64 / W` signed lane values (each in the lane's
+/// two's-complement range) into one word, lane 0 in the low bits.
+#[inline(always)]
+pub(crate) fn pack<const W: u32>(xs: &[i64]) -> u64 {
+    let mut w = 0u64;
+    for (i, &x) in xs.iter().enumerate() {
+        w |= ((x as u64) & lane_mask(W)) << (i as u32 * W);
+    }
+    w
+}
+
+/// Extracts lane `i` as an unsigned value.
+#[inline(always)]
+pub(crate) fn lane_u<const W: u32>(w: u64, i: u32) -> u64 {
+    (w >> (i * W)) & lane_mask(W)
+}
+
+/// Unpacks lanes as sign-extended `i64`s, lane 0 first.
+#[inline(always)]
+pub(crate) fn unpack<const W: u32>(w: u64, out: &mut [i64]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let v = lane_u::<W>(w, i as u32);
+        *o = ((v << (64 - W)) as i64) >> (64 - W);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn lanes<const W: u32>(w: u64) -> Vec<i64> {
+        let n = (64 / W) as usize;
+        let mut out = vec![0i64; n];
+        unpack::<W>(w, &mut out);
+        out
+    }
+
+    fn ulanes<const W: u32>(w: u64) -> Vec<u64> {
+        (0..64 / W).map(|i| lane_u::<W>(w, i)).collect()
+    }
+
+    fn check_lane_algebra<const W: u32>(g: &mut Prng) {
+        let lm = lane_mask(W) as i64;
+        let half = 1i64 << (W - 1);
+        let n = (64 / W) as usize;
+        for _ in 0..2000 {
+            let xs: Vec<i64> = (0..n).map(|_| g.i64_in(-half, half - 1)).collect();
+            let ys: Vec<i64> = (0..n).map(|_| g.i64_in(-half, half - 1)).collect();
+            let (wx, wy) = (pack::<W>(&xs), pack::<W>(&ys));
+            // pack/unpack round-trips two's-complement lanes.
+            assert_eq!(lanes::<W>(wx), xs);
+            // add/sub wrap per lane, never crossing boundaries.
+            let sum = lanes::<W>(add::<W>(wx, wy));
+            let dif = lanes::<W>(sub::<W>(wx, wy));
+            for i in 0..n {
+                let wrap = |v: i64| ((v & lm) << (64 - W)) >> (64 - W);
+                assert_eq!(sum[i], wrap(xs[i].wrapping_add(ys[i])), "add lane {i}");
+                assert_eq!(dif[i], wrap(xs[i].wrapping_sub(ys[i])), "sub lane {i}");
+            }
+            // Unsigned compare / min over the full W-bit lane range.
+            let (ux, uy) = (ulanes::<W>(wx), ulanes::<W>(wy));
+            let lt = ulanes::<W>(lt_u::<W>(wx, wy));
+            let mn = ulanes::<W>(min_u::<W>(wx, wy));
+            for i in 0..n {
+                let want = if ux[i] < uy[i] { lane_mask(W) } else { 0 };
+                assert_eq!(lt[i], want, "lt_u lane {i}: {} vs {}", ux[i], uy[i]);
+                assert_eq!(mn[i], ux[i].min(uy[i]), "min_u lane {i}");
+            }
+            // abs + sign mask: the saturating magnitude of every lane,
+            // including lane_min whose magnitude is 2^(W-1).
+            let (a, neg) = abs::<W>(wx);
+            let (ua, un) = (ulanes::<W>(a), ulanes::<W>(neg));
+            for i in 0..n {
+                assert_eq!(ua[i], xs[i].unsigned_abs(), "abs lane {i} of {}", xs[i]);
+                assert_eq!(un[i], if xs[i] < 0 { lane_mask(W) } else { 0 });
+            }
+            // negate_masked inverts the sign peel exactly — abs then
+            // re-negate reproduces the input, lane_min included.
+            assert_eq!(lanes::<W>(negate_masked::<W>(a, neg)), xs);
+        }
+    }
+
+    #[test]
+    fn lane_algebra_matches_scalar_w16() {
+        check_lane_algebra::<16>(&mut Prng::new(7));
+    }
+
+    #[test]
+    fn lane_algebra_matches_scalar_w8() {
+        check_lane_algebra::<8>(&mut Prng::new(8));
+    }
+
+    #[test]
+    fn masks_and_broadcast() {
+        assert_eq!(lane_mask(16), 0xFFFF);
+        assert_eq!(lsb_mask(16), 0x0001_0001_0001_0001);
+        assert_eq!(msb_mask(16), 0x8000_8000_8000_8000);
+        assert_eq!(lsb_mask(8), 0x0101_0101_0101_0101);
+        assert_eq!(bc::<16>(0x1234), 0x1234_1234_1234_1234);
+        assert_eq!(spread::<16>(0x8000_0000_8000_0000), 0xFFFF_0000_FFFF_0000);
+    }
+
+    #[test]
+    fn edge_magnitudes_compare_correctly() {
+        // The values the kernel front end actually compares: magnitudes
+        // up to 2^(W-1) (abs of lane_min) against in_max = 2^(W-1)-1 and
+        // the saturation sentinel max_raw+1 = 2^(W-1).
+        let edges: [u64; 5] = [0, 1, 0x7FFE, 0x7FFF, 0x8000];
+        for &a in &edges {
+            for &b in &edges {
+                let wa = bc::<16>(a);
+                let wb = bc::<16>(b);
+                let want = if a < b { u64::MAX } else { 0 };
+                assert_eq!(lt_u::<16>(wa, wb), want, "{a:#x} < {b:#x}");
+            }
+        }
+    }
+}

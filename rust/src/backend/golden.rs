@@ -77,8 +77,12 @@ impl EvalBackend for GoldenBackend {
     ) -> Result<EvalStats, BackendError> {
         super::check_slice_lens(input, out)?;
         let kernel = self.kernel(spec)?;
-        kernel.eval_slice_raw(input, out);
-        Ok(EvalStats::default())
+        // The packed entry point auto-selects: SWAR lanes when the
+        // spec's formats qualify (every Table I spec does), the scalar
+        // loop otherwise. Which path ran is reported so the serve
+        // metrics can count packed batches.
+        kernel.eval_slice_packed(input, out);
+        Ok(EvalStats { packed: kernel.lane_width().is_some(), ..EvalStats::default() })
     }
 }
 

@@ -148,7 +148,7 @@ impl EvalBackend for HwBackend {
         for (slot, y) in out.iter_mut().zip(&fed.outputs) {
             *slot = y.raw();
         }
-        Ok(EvalStats { sim_cycles: fed.cycles })
+        Ok(EvalStats { sim_cycles: fed.cycles, ..EvalStats::default() })
     }
 }
 

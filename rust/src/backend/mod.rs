@@ -180,6 +180,12 @@ pub struct EvalStats {
     /// (first issue to last retire). Zero for backends without a cycle
     /// model (golden kernels, PJRT).
     pub sim_cycles: u64,
+    /// True when the call ran on the SWAR packed-lane kernel path
+    /// ([`crate::approx::CompiledKernel::eval_slice_packed`] with a
+    /// qualifying [`crate::approx::CompiledKernel::lane_width`]); the
+    /// coordinator aggregates this into the `packed_batches` serve
+    /// metric.
+    pub packed: bool,
 }
 
 /// One execution path for tanh design points — the API every consumer

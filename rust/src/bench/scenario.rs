@@ -340,6 +340,7 @@ impl ScenarioOutcome {
             ("req_per_s", Json::n(self.completed as f64 / secs)),
             ("evals_per_s", Json::n(self.elements as f64 / secs)),
             ("batches", Json::i(m.batches as i64)),
+            ("packed_batches", Json::i(m.packed_batches as i64)),
             ("fill_rate", Json::n(m.fill_rate())),
             ("sim_cycles", Json::i(m.sim_cycles as i64)),
             ("sim_cycles_per_element", Json::n(m.sim_cycles_per_element())),
@@ -376,7 +377,7 @@ impl ScenarioOutcome {
 /// ([`MetricsSnapshot::sim_cycles_per_element`]): ≈ 1.0 for the warm
 /// streaming hw worker, inflated by the per-batch re-fill latency if
 /// streaming ever regresses.
-pub const SERVE_ROW_KEYS: [&str; 23] = [
+pub const SERVE_ROW_KEYS: [&str; 24] = [
     "name",
     "scenario",
     "seed",
@@ -392,6 +393,7 @@ pub const SERVE_ROW_KEYS: [&str; 23] = [
     "req_per_s",
     "evals_per_s",
     "batches",
+    "packed_batches",
     "fill_rate",
     "sim_cycles",
     "sim_cycles_per_element",

@@ -29,6 +29,7 @@ pub struct ServerMetrics {
     admission_failed_requests: AtomicU64,
     elements: AtomicU64,
     batches: AtomicU64,
+    packed_batches: AtomicU64,
     rejected: AtomicU64,
     errors: AtomicU64,
     latency: AtomicHistogram,
@@ -66,6 +67,12 @@ pub struct MetricsSnapshot {
     pub elements: u64,
     /// Executed batches.
     pub batches: u64,
+    /// Executed batches the backend evaluated on the SWAR packed-lane
+    /// kernel path ([`crate::backend::EvalStats::packed`]) — an
+    /// additive per-shard counter like `batches`, of which it is a
+    /// subset. `batches − packed_batches` ran scalar (non-qualifying
+    /// formats, or a backend without a packed path).
+    pub packed_batches: u64,
     /// Requests rejected by backpressure (never entered a queue).
     pub rejected: u64,
     /// Failed batch executions.
@@ -169,6 +176,7 @@ impl MetricsSnapshot {
         self.sim_cycles += other.sim_cycles;
         self.elements += other.elements;
         self.batches += other.batches;
+        self.packed_batches += other.packed_batches;
         self.rejected += other.rejected;
         self.errors += other.errors;
         self.latency.merge(&other.latency);
@@ -223,6 +231,11 @@ impl ServerMetrics {
         self.padded_elements.fetch_add(capacity.saturating_sub(packed) as u64, Ordering::Relaxed);
     }
 
+    /// Records a batch the backend executed on the packed kernel path.
+    pub fn record_packed_batch(&self) {
+        self.packed_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Records a backpressure rejection.
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
@@ -248,6 +261,7 @@ impl ServerMetrics {
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             elements: self.elements.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            packed_batches: self.packed_batches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             latency: self.latency.snapshot(),
@@ -364,6 +378,22 @@ mod tests {
         assert_eq!(merged.latency, LatencyHistogram::from_samples(&[10, 200, 300]));
         // Merge with an empty snapshot is the identity.
         assert_eq!(merged.merge(&MetricsSnapshot::default()), merged);
+    }
+
+    #[test]
+    fn packed_batches_count_and_merge_additively() {
+        let a = ServerMetrics::default();
+        let b = ServerMetrics::default();
+        a.record_batch(64, 128);
+        a.record_packed_batch();
+        b.record_batch(64, 128);
+        b.record_batch(32, 128);
+        b.record_packed_batch();
+        b.record_packed_batch();
+        let merged = a.snapshot().merge(&b.snapshot());
+        assert_eq!(merged.batches, 3);
+        // Per-shard counter, so shards add — unlike the cache gauges.
+        assert_eq!(merged.packed_batches, 3);
     }
 
     #[test]

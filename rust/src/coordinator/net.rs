@@ -179,6 +179,7 @@ fn handle_line(line: &str, coord: &Coordinator) -> Json {
                     ("admission_failed_requests", Json::i(m.admission_failed_requests as i64)),
                     ("elements", Json::i(m.elements as i64)),
                     ("batches", Json::i(m.batches as i64)),
+                    ("packed_batches", Json::i(m.packed_batches as i64)),
                     ("rejected", Json::i(m.rejected as i64)),
                     ("errors", Json::i(m.errors as i64)),
                     ("mean_latency_us", Json::n(m.mean_latency_us())),

@@ -481,6 +481,9 @@ fn flush(
     match result {
         Ok((outputs, stats)) => {
             metrics.record_sim_cycles(stats.sim_cycles);
+            if stats.packed {
+                metrics.record_packed_batch();
+            }
             for (req, (off, len)) in batch.requests.into_iter().zip(spans) {
                 let latency_us = now.duration_since(req.enqueued_at).as_micros() as u64;
                 metrics.record_request(len, latency_us);

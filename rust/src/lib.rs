@@ -21,9 +21,14 @@
 //! read next to the paper) and a **compiled kernel**
 //! ([`approx::TanhApprox::compile`] → [`approx::CompiledKernel`]): an
 //! integer-only `raw → raw` batch evaluator, bit-exact against the
-//! golden model and one to two orders of magnitude faster. Hot loops —
-//! the serving backend and the exhaustive error sweeps — run on
-//! compiled kernels; everything else uses the golden models.
+//! golden model and one to two orders of magnitude faster. Kernels
+//! whose I/O formats fit a 16-bit (or 8-bit) lane additionally expose a
+//! SWAR **packed** entry point ([`approx::CompiledKernel::eval_slice_packed`]:
+//! 4×16-bit or 8×8-bit lanes per `u64` word, zero-dependency — no
+//! `std::simd`), bit-exact against the scalar slice path and selected
+//! automatically by the serving backend. Hot loops — the serving
+//! backend and the exhaustive error sweeps — run on compiled kernels;
+//! everything else uses the golden models.
 //!
 //! Configurations are first-class values: [`approx::MethodSpec`]
 //! (module [`approx::spec`]) names any (method × parameter × I/O-format

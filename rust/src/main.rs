@@ -35,6 +35,11 @@
 
 use std::sync::Arc;
 
+/// Default serve-scenario report path, anchored to the crate root so the
+/// log lands in the same place no matter which directory the binary is
+/// launched from. An explicit `--out` overrides it untouched.
+const DEFAULT_SERVE_LOG: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json");
+
 use tanh_vlsi::approx::{spec, MethodId, MethodSpec, Registry};
 use tanh_vlsi::backend::{self, CostProbe, CostSource, EvalBackend};
 use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
@@ -110,7 +115,7 @@ fn app() -> App {
                 .opt("shards", "worker shards per method", Some("2"))
                 .opt("route", "shard routing: rr|least-loaded", Some("rr"))
                 .opt("spec", "comma-separated specs to serve (default: Table I suite)", None)
-                .opt("out", "scenario report file", Some("BENCH_serve.json"))
+                .opt("out", "scenario report file", Some(DEFAULT_SERVE_LOG))
                 .flag("pace", "replay the scenario's open-loop schedule in real time"),
         ],
     }
@@ -530,11 +535,12 @@ fn cmd_serve_scenarios(
             cfg.route,
         );
         println!(
-            "  throughput {:.0} req/s, {:.2} Mact/s;  {} batches, fill {:.1}%, \
-             {} backpressure retries",
+            "  throughput {:.0} req/s, {:.2} Mact/s;  {} batches ({} packed), \
+             fill {:.1}%, {} backpressure retries",
             out.completed as f64 / secs,
             out.elements as f64 / secs / 1e6,
             m.batches,
+            m.packed_batches,
             100.0 * m.fill_rate(),
             out.retries,
         );
@@ -576,7 +582,7 @@ fn cmd_serve_scenarios(
          (shards × scenarios share one kernel per spec)",
         stats.compiles, stats.hits
     );
-    let out_path = p.get_or("out", "BENCH_serve.json");
+    let out_path = p.get_or("out", DEFAULT_SERVE_LOG);
     log.write(out_path).map_err(|e| e.to_string())?;
     let text = std::fs::read_to_string(out_path).map_err(|e| e.to_string())?;
     let rows = scenario::validate_serve_log(&text)?;

@@ -216,7 +216,7 @@ impl EvalBackend for RefillHwBackend {
         for (slot, y) in out.iter_mut().zip(&sim.outputs) {
             *slot = y.raw();
         }
-        Ok(EvalStats { sim_cycles: sim.cycles as u64 })
+        Ok(EvalStats { sim_cycles: sim.cycles as u64, ..EvalStats::default() })
     }
 }
 

@@ -44,6 +44,110 @@ fn compiled_kernels_bit_exact_on_full_table1_grid() {
 }
 
 #[test]
+fn packed_kernels_bit_exact_on_full_table1_grid() {
+    // The SWAR invariant: for every Table I method the packed 4×16-bit
+    // entry point reproduces the scalar slice path raw-for-raw over the
+    // entire exhaustive grid (every S3.12 word in ±6), which transitively
+    // pins it to the golden datapath via the test above.
+    let io = IoSpec::table1();
+    let grid = InputGrid::table1();
+    let (lo, hi) = grid.raw_bounds();
+    let xs: Vec<i64> = (lo..=hi).collect();
+    for m in table1_suite() {
+        let kernel = m.compile(io);
+        assert_eq!(
+            kernel.lane_width(),
+            Some(16),
+            "{}: Table I formats must select 16-bit lanes",
+            m.describe()
+        );
+        let mut scalar = vec![0i64; xs.len()];
+        let mut packed = vec![0i64; xs.len()];
+        kernel.eval_slice_raw(&xs, &mut scalar);
+        kernel.eval_slice_packed(&xs, &mut packed);
+        for (i, (&a, &b)) in scalar.iter().zip(&packed).enumerate() {
+            assert_eq!(a, b, "{} at raw {}", m.describe(), xs[i]);
+        }
+    }
+}
+
+#[test]
+fn packed_kernels_bit_exact_on_edges_and_odd_lengths() {
+    // Targeted adversarial inputs for the SWAR front end: the format's
+    // min_raw (whose absolute value needs the lane's full unsigned
+    // range), both saturation boundaries, and slice lengths that leave
+    // 1..3-lane scalar tails — plus the empty slice.
+    for m in table1_suite() {
+        let io = IoSpec::table1();
+        let kernel = m.compile(io);
+        let (in_max, dom) = (io.input.max_raw(), kernel.domain_raw());
+        let mut edges = vec![0i64, 1, -1, in_max, -in_max, io.input.min_raw()];
+        for d in [dom - 1, dom, dom + 1] {
+            if d <= in_max {
+                edges.push(d);
+                edges.push(-d);
+            }
+        }
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 9, edges.len()] {
+            let xs: Vec<i64> = edges.iter().cycle().take(n).copied().collect();
+            let mut scalar = vec![0i64; n];
+            let mut packed = vec![0i64; n];
+            kernel.eval_slice_raw(&xs, &mut scalar);
+            kernel.eval_slice_packed(&xs, &mut packed);
+            assert_eq!(scalar, packed, "{} with {n} edge inputs", m.describe());
+        }
+    }
+}
+
+#[test]
+fn prop_packed_matches_scalar_random_configs() {
+    // Beyond Table I: random design points over the narrow (8-bit
+    // lanes), standard (16-bit lanes) and wide (scalar fallback) format
+    // pairs must agree packed-vs-scalar on random slices of random
+    // lengths. The wide pair proves the fallback is transparent.
+    prop_check("packed == scalar on random configs", 40, |g: &mut Prng| {
+        let id = *g.choose(&MethodId::all());
+        let io = *g.choose(&[
+            IoSpec::table1(),
+            IoSpec { input: QFormat::S2_13, output: QFormat::S_15 },
+            IoSpec { input: QFormat::S2_5, output: QFormat::S_7 },
+            IoSpec { input: QFormat::S3_12, output: QFormat::S7_24 },
+        ]);
+        let k_max = 7.min(io.input.frac_bits as i64 - 1);
+        let param = match id {
+            MethodId::Lambert => g.i64_in(2, 10) as f64,
+            _ => (2f64).powi(-g.i64_in(2, k_max) as i32),
+        };
+        let domain = if io.input.frac_bits >= 12 { 6.0 } else { 4.0 };
+        let m = build(id, param, domain).map_err(|e| format!("build {id:?} {param}: {e}"))?;
+        let kernel = m.compile(io);
+        if io.output == QFormat::S7_24 && kernel.lane_width().is_some() {
+            return Err(format!("{}: 33-bit output cannot fit a 16-bit lane", m.describe()));
+        }
+        let n = g.usize_below(67);
+        let xs: Vec<i64> =
+            (0..n).map(|_| g.i64_in(io.input.min_raw(), io.input.max_raw())).collect();
+        let mut scalar = vec![0i64; n];
+        let mut packed = vec![0i64; n];
+        kernel.eval_slice_raw(&xs, &mut scalar);
+        kernel.eval_slice_packed(&xs, &mut packed);
+        for (i, (&a, &b)) in scalar.iter().zip(&packed).enumerate() {
+            if a != b {
+                return Err(format!(
+                    "{} {}->{} (lanes {:?}) raw {}: scalar {a} vs packed {b}",
+                    m.describe(),
+                    io.input,
+                    io.output,
+                    kernel.lane_width(),
+                    xs[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn hw_backend_bit_exact_vs_golden_kernel_on_full_table1_grid() {
     // The cross-backend property of the unified execution layer: for
     // all six Table I specs, the cycle-accurate hw backend produces

@@ -198,6 +198,13 @@ fn scenarios_complete_deterministically_and_verify_bit_exact() {
             assert_eq!(out.failed, 0, "{name}");
             assert_eq!(out.verified, out.completed, "{name}: unverified replies");
             assert_eq!(out.elements, trace.total_elements(), "{name}");
+            // Table I specs all qualify for the SWAR lanes, so every
+            // executed batch on the golden backend is a packed batch.
+            assert!(out.metrics.batches > 0, "{name}");
+            assert_eq!(
+                out.metrics.packed_batches, out.metrics.batches,
+                "{name}: golden Table I serving must run packed"
+            );
             fields.push(out.deterministic_fields().to_string_pretty());
             if fields.len() == 2 {
                 log.push_row(out.to_json("golden", coord.shards_per_method(), batch));
@@ -233,6 +240,9 @@ fn hw_backend_serves_scenarios_bit_exact_with_cycle_counts() {
     assert_eq!(out.verified, out.completed, "unverified replies");
     assert_eq!(out.failed, 0);
     assert!(out.metrics.sim_cycles > 0, "hw serving must report simulated cycles");
+    // The packed-batch counter is a golden-kernel observable; the hw
+    // datapath never reports it.
+    assert_eq!(out.metrics.packed_batches, 0, "hw serving must not count packed batches");
     // The BENCH_serve.json row carries both the backend name and the
     // cycle column.
     let row = out.to_json("hw", coord.shards_per_method(), batch);
