@@ -61,6 +61,59 @@ if grep -Eq '"packed_batches": 0(,|$)' BENCH_serve.json; then
   echo "tier-1 FAIL: golden serve ran no packed batches"; exit 1
 fi
 
+echo "== tier-1: concurrent-socket serve smoke =="
+# The zipf scenario replayed over 8 REAL TCP connections against the
+# nonblocking front-end — mixed framing (even connections JSON lines,
+# odd binary frames), pipelined, every reply verified bit-exact against
+# freshly compiled golden kernels by the binary itself. The report row
+# must carry the socket columns: the connection fan-out, the server's
+# byte gauges, and per-connection round-trip percentiles.
+TANH_SMOKE=1 "$BIN" serve --scenario zipf --seed 42 --shards 2 \
+  --sockets 8 --framing mixed --out BENCH_serve_sockets.json
+for key in framing connections accepted_conns active_conns bytes_in bytes_out \
+           conn_p50_us conn_p95_us conn_p99_us conn_max_us; do
+  grep -q "\"$key\"" BENCH_serve_sockets.json \
+    || { echo "tier-1 FAIL: BENCH_serve_sockets.json missing key '$key'"; exit 1; }
+done
+grep -q '"framing": "mixed"' BENCH_serve_sockets.json \
+  || { echo "tier-1 FAIL: socket smoke did not run mixed framing"; exit 1; }
+grep -q '"connections": 8' BENCH_serve_sockets.json \
+  || { echo "tier-1 FAIL: socket smoke did not use 8 connections"; exit 1; }
+for key in bytes_in bytes_out conn_p99_us; do
+  if grep -Eq "\"$key\": 0(\.0)?(,|\$)" BENCH_serve_sockets.json; then
+    echo "tier-1 FAIL: socket smoke reports zero $key"; exit 1
+  fi
+done
+if grep -Eq '"verified": 0(,|$)' BENCH_serve_sockets.json; then
+  echo "tier-1 FAIL: socket smoke verified zero replies"; exit 1
+fi
+# The canonical BENCH_serve.json also carries the socket columns (as
+# inproc sentinels) so the row schema is uniform across drivers.
+grep -q '"framing": "inproc"' BENCH_serve.json \
+  || { echo "tier-1 FAIL: BENCH_serve.json rows lack the socket columns"; exit 1; }
+rm -f BENCH_serve_sockets.json
+
+echo "== tier-1: wire-protocol regression probes (netcheck) =="
+# The three protocol bugfixes, exercised against a live loopback
+# server: (1) non-numeric values entries are rejected by index (never
+# silently dropped into a misaligned reply), (2) bare NaN tokens are
+# invalid JSON and refused at the parser, (3) oversized frames — JSON
+# line or binary header — answer bad_request and close instead of
+# buffering without bound.
+"$BIN" netcheck > netcheck.txt
+cat netcheck.txt
+grep -q 'non-numeric-entry.*bad_request' netcheck.txt \
+  || { echo "tier-1 FAIL: non-numeric values entry not rejected as bad_request"; exit 1; }
+grep -q 'non-numeric-entry.*values\[1\]' netcheck.txt \
+  || { echo "tier-1 FAIL: rejection does not name the offending index"; exit 1; }
+grep -q 'nan-entry.*bad_request' netcheck.txt \
+  || { echo "tier-1 FAIL: NaN payload not rejected as bad_request"; exit 1; }
+grep -q 'oversized-line.*bad_request' netcheck.txt \
+  || { echo "tier-1 FAIL: oversized JSON line not rejected as bad_request"; exit 1; }
+grep -q 'oversized-bin-frame.*bad_request' netcheck.txt \
+  || { echo "tier-1 FAIL: oversized binary frame not rejected as bad_request"; exit 1; }
+rm -f netcheck.txt
+
 echo "== tier-1: non-Table-I spec smoke =="
 # Serve a design point the pre-spec API could not even name (PWL at
 # step 1/32 with an S2.13 input) through a 2-shard coordinator

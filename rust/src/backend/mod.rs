@@ -103,6 +103,32 @@ impl ErrorCode {
             ErrorCode::Internal => "internal",
         }
     }
+
+    /// The stable binary-frame status byte (net protocol; 0 is
+    /// reserved for "ok"). Like [`ErrorCode::as_str`], renumbering is
+    /// a protocol break.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::UnknownSpec => 1,
+            ErrorCode::BackendUnavailable => 2,
+            ErrorCode::BadRequest => 3,
+            ErrorCode::Overloaded => 4,
+            ErrorCode::Internal => 5,
+        }
+    }
+
+    /// Decodes a binary status byte (`None` for 0/"ok" and unknown
+    /// values).
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::UnknownSpec),
+            2 => Some(ErrorCode::BackendUnavailable),
+            3 => Some(ErrorCode::BadRequest),
+            4 => Some(ErrorCode::Overloaded),
+            5 => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for ErrorCode {
@@ -340,6 +366,23 @@ mod tests {
             assert_eq!(b.name(), name);
         }
         assert!(by_name("tpu", 64).unwrap_err().contains("golden|hw|pjrt"));
+    }
+
+    #[test]
+    fn error_codes_round_trip_through_the_binary_status_byte() {
+        let all = [
+            ErrorCode::UnknownSpec,
+            ErrorCode::BackendUnavailable,
+            ErrorCode::BadRequest,
+            ErrorCode::Overloaded,
+            ErrorCode::Internal,
+        ];
+        for code in all {
+            assert_ne!(code.as_u8(), 0, "0 is the binary-frame ok status");
+            assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(200), None);
     }
 
     #[test]

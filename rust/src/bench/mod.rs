@@ -2,9 +2,12 @@
 //! crate set): warmup + timed iterations + robust statistics, with the
 //! paper-table renderers layered on top in `rust/benches/*.rs`, plus
 //! the deterministic serving-load scenarios ([`scenario`]) behind
-//! `tanh-vlsi serve --scenario` and the tier-1 smoke.
+//! `tanh-vlsi serve --scenario` and the tier-1 smoke, and their
+//! concurrent-socket replay driver ([`sockets`]) that pushes the same
+//! traces through real TCP connections in both wire framings.
 
 mod harness;
 pub mod scenario;
+pub mod sockets;
 
 pub use harness::{bench, bench_n, BenchLog, BenchResult, Bencher};

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use crate::approx::{CompiledKernel, MethodSpec};
 use crate::backend::{kernel_eval_f32, ErrorCode};
-use crate::coordinator::{Coordinator, MetricsSnapshot, RequestResult};
+use crate::coordinator::{Coordinator, LatencyHistogram, MetricsSnapshot, RequestResult};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 
@@ -315,6 +315,34 @@ pub struct ScenarioOutcome {
     pub wall: Duration,
     /// Coordinator metrics merged across shards at run end.
     pub metrics: MetricsSnapshot,
+    /// Socket-level observables when the trace was replayed over real
+    /// TCP connections ([`crate::bench::sockets`]); `None` for
+    /// in-process replay.
+    pub net: Option<SocketNet>,
+}
+
+/// What a concurrent-socket replay observed at the net layer: the
+/// connection fan-out, the server's accept/byte gauges, and the
+/// client-side end-to-end latency histogram merged across connections
+/// (exact merge, like the shard metrics).
+#[derive(Clone, Debug)]
+pub struct SocketNet {
+    /// Wire framing the connections used: `json`, `binary`, or `mixed`
+    /// (even connection indices JSON, odd binary).
+    pub framing: String,
+    /// Concurrent client connections the trace was split over.
+    pub connections: u64,
+    /// Server gauge: connections accepted over the server's lifetime.
+    pub accepted_conns: u64,
+    /// Server gauge: connections still open at snapshot time.
+    pub active_conns: u64,
+    /// Server gauge: request bytes read.
+    pub bytes_in: u64,
+    /// Server gauge: reply bytes written.
+    pub bytes_out: u64,
+    /// Client-observed per-request round-trip latency (µs), merged
+    /// across every connection's per-connection histogram.
+    pub conn_latency: LatencyHistogram,
 }
 
 impl ScenarioOutcome {
@@ -349,6 +377,24 @@ impl ScenarioOutcome {
             ("p95_us", Json::n(m.p95_us())),
             ("p99_us", Json::n(m.p99_us())),
             ("max_us", Json::i(m.latency_us_max() as i64)),
+            // Socket-replay columns: zeros / "inproc" for in-process
+            // runs so the row schema is uniform across both drivers.
+            (
+                "framing",
+                Json::s(self.net.as_ref().map(|n| n.framing.as_str()).unwrap_or("inproc")),
+            ),
+            ("connections", Json::i(self.net.as_ref().map_or(0, |n| n.connections) as i64)),
+            (
+                "accepted_conns",
+                Json::i(self.net.as_ref().map_or(0, |n| n.accepted_conns) as i64),
+            ),
+            ("active_conns", Json::i(self.net.as_ref().map_or(0, |n| n.active_conns) as i64)),
+            ("bytes_in", Json::i(self.net.as_ref().map_or(0, |n| n.bytes_in) as i64)),
+            ("bytes_out", Json::i(self.net.as_ref().map_or(0, |n| n.bytes_out) as i64)),
+            ("conn_p50_us", Json::n(self.net.as_ref().map_or(0.0, |n| n.conn_latency.p50()))),
+            ("conn_p95_us", Json::n(self.net.as_ref().map_or(0.0, |n| n.conn_latency.p95()))),
+            ("conn_p99_us", Json::n(self.net.as_ref().map_or(0.0, |n| n.conn_latency.p99()))),
+            ("conn_max_us", Json::i(self.net.as_ref().map_or(0, |n| n.conn_latency.max) as i64)),
         ])
     }
 
@@ -377,7 +423,12 @@ impl ScenarioOutcome {
 /// ([`MetricsSnapshot::sim_cycles_per_element`]): ≈ 1.0 for the warm
 /// streaming hw worker, inflated by the per-batch re-fill latency if
 /// streaming ever regresses.
-pub const SERVE_ROW_KEYS: [&str; 24] = [
+///
+/// The socket-replay columns (`framing` through `conn_max_us`) carry
+/// the concurrent-connection fan-out, the server's net gauges, and the
+/// client-observed round-trip percentiles; in-process rows fill them
+/// with `"inproc"` / zeros so every row validates against one schema.
+pub const SERVE_ROW_KEYS: [&str; 34] = [
     "name",
     "scenario",
     "seed",
@@ -402,6 +453,16 @@ pub const SERVE_ROW_KEYS: [&str; 24] = [
     "p95_us",
     "p99_us",
     "max_us",
+    "framing",
+    "connections",
+    "accepted_conns",
+    "active_conns",
+    "bytes_in",
+    "bytes_out",
+    "conn_p50_us",
+    "conn_p95_us",
+    "conn_p99_us",
+    "conn_max_us",
 ];
 
 /// Validates a `BENCH_serve.json` document: a non-empty array whose
@@ -426,6 +487,26 @@ pub fn validate_serve_log(text: &str) -> Result<usize, String> {
         let rate = row.get("evals_per_s").and_then(Json::num).unwrap_or(0.0);
         if !(rate > 0.0) {
             return Err(format!("BENCH_serve.json row {i}: zero throughput"));
+        }
+        // Socket-replay rows must carry real net observables: traffic
+        // flowed in both directions and round-trip latency was
+        // measured.
+        let conns = row.get("connections").and_then(Json::num).unwrap_or(0.0);
+        if conns > 0.0 {
+            let framing = row.get("framing").and_then(Json::str).unwrap_or("");
+            if framing == "inproc" || framing.is_empty() {
+                return Err(format!(
+                    "BENCH_serve.json row {i}: {conns} connections but framing '{framing}'"
+                ));
+            }
+            for key in ["bytes_in", "bytes_out", "conn_p99_us"] {
+                let v = row.get(key).and_then(Json::num).unwrap_or(0.0);
+                if !(v > 0.0) {
+                    return Err(format!(
+                        "BENCH_serve.json row {i}: socket replay with zero {key}"
+                    ));
+                }
+            }
         }
     }
     Ok(rows.len())
@@ -571,6 +652,7 @@ pub fn run_trace(
         verified,
         wall: start.elapsed(),
         metrics: coord.metrics(),
+        net: None,
     })
 }
 
@@ -689,10 +771,38 @@ mod tests {
             verified: 10,
             wall: Duration::from_millis(5),
             metrics: MetricsSnapshot::default(),
+            net: None,
         };
         let row = outcome.to_json("golden", 2, 1024);
         let text = Json::arr(vec![row.clone()]).to_string_pretty();
         assert_eq!(validate_serve_log(&text).unwrap(), 1);
+        // In-process rows fill the socket columns with the sentinels.
+        assert_eq!(row.get("framing").and_then(Json::str), Some("inproc"));
+        assert_eq!(row.get("connections").and_then(Json::num), Some(0.0));
+
+        // A socket-replay row validates when the net observables are
+        // real…
+        let mut socket = outcome.clone();
+        socket.net = Some(SocketNet {
+            framing: "mixed".into(),
+            connections: 8,
+            accepted_conns: 8,
+            active_conns: 8,
+            bytes_in: 4096,
+            bytes_out: 8192,
+            conn_latency: LatencyHistogram::from_samples(&[120, 250, 900]),
+        });
+        let srow = socket.to_json("golden", 2, 1024);
+        assert_eq!(srow.get("framing").and_then(Json::str), Some("mixed"));
+        assert_eq!(srow.get("connections").and_then(Json::num), Some(8.0));
+        assert!(srow.get("conn_p99_us").and_then(Json::num).unwrap() > 0.0);
+        let text = Json::arr(vec![srow]).to_string_pretty();
+        assert_eq!(validate_serve_log(&text).unwrap(), 1);
+        // …and is rejected when it claims connections but no traffic.
+        let mut hollow = socket.clone();
+        hollow.net.as_mut().unwrap().bytes_out = 0;
+        let text = Json::arr(vec![hollow.to_json("golden", 2, 1024)]).to_string_compact();
+        assert!(validate_serve_log(&text).unwrap_err().contains("bytes_out"));
 
         // Missing key.
         let Json::Obj(mut map) = row.clone() else { panic!("row is an object") };
@@ -725,6 +835,7 @@ mod tests {
             verified: 3,
             wall: Duration::from_secs(1),
             metrics: MetricsSnapshot::default(),
+            net: None,
         };
         let text = outcome.deterministic_fields().to_string_compact();
         assert!(!text.contains("wall"), "{text}");

@@ -1,0 +1,512 @@
+//! Concurrent-socket scenario replay: the same deterministic traces
+//! [`super::scenario`] builds, driven over **N real TCP connections**
+//! against a running [`NetServer`] instead of in-process submit calls.
+//!
+//! Each connection gets every Nth trace request (round-robin by trace
+//! index) and runs a writer half + reader half joined by a bounded
+//! channel, so requests are **pipelined** up to a window per
+//! connection while replies are verified strictly in order — the
+//! ordering guarantee of the wire protocol is itself under test.
+//! Framing is per-connection: all-JSON, all-binary, or `mixed` (even
+//! connection indices JSON, odd binary), exercising both protocols
+//! against the same workload. Every reply is checked against freshly
+//! compiled golden kernels exactly like the in-process driver —
+//! bit-exact for `Verify::Exact`, on raw `i64` words for binary
+//! connections — and per-connection round-trip latency lands in
+//! histograms that merge exactly into the
+//! [`SocketNet`] row columns (`conn_p50_us`…`conn_max_us` in
+//! `BENCH_serve.json`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::approx::MethodSpec;
+use crate::backend::quantize_input;
+use crate::coordinator::{
+    bin_request_frame, reply_values, Coordinator, LatencyHistogram, NetServer,
+    BIN_REPLY_MAGIC,
+};
+use crate::util::json::{self, Json};
+
+use super::scenario::{GoldenVerifier, ScenarioOutcome, SocketNet, Trace, Verify};
+
+/// Per-connection wire framing for a socket replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framing {
+    /// Every connection speaks the JSON line protocol.
+    Json,
+    /// Every connection speaks binary frames.
+    Binary,
+    /// Even connection indices JSON, odd binary — both protocols under
+    /// the same workload.
+    Mixed,
+}
+
+impl Framing {
+    /// Parses a `--framing` argument.
+    pub fn parse(s: &str) -> Result<Framing, String> {
+        match s {
+            "json" => Ok(Framing::Json),
+            "binary" => Ok(Framing::Binary),
+            "mixed" => Ok(Framing::Mixed),
+            other => Err(format!("unknown framing '{other}' (have: json, binary, mixed)")),
+        }
+    }
+
+    /// The report-row label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Framing::Json => "json",
+            Framing::Binary => "binary",
+            Framing::Mixed => "mixed",
+        }
+    }
+
+    fn binary_for(self, conn_index: usize) -> bool {
+        match self {
+            Framing::Json => false,
+            Framing::Binary => true,
+            Framing::Mixed => conn_index % 2 == 1,
+        }
+    }
+}
+
+/// Options for [`run_trace_sockets`].
+#[derive(Clone, Copy, Debug)]
+pub struct SocketRunOptions {
+    /// Concurrent client connections the trace is split over.
+    pub connections: usize,
+    /// Wire framing policy.
+    pub framing: Framing,
+    /// Reply-correctness policy (same semantics as the in-process
+    /// driver; `Exact` compares raw words on binary connections).
+    pub verify: Verify,
+    /// Per-connection pipelining window: how many requests may be on
+    /// the wire ahead of the reply cursor.
+    pub window: usize,
+    /// Honor the trace's open-loop `at_us` schedule per connection.
+    pub pace: bool,
+}
+
+impl Default for SocketRunOptions {
+    fn default() -> Self {
+        SocketRunOptions {
+            connections: 8,
+            framing: Framing::Mixed,
+            verify: Verify::Exact,
+            window: 32,
+            pace: false,
+        }
+    }
+}
+
+struct ConnStats {
+    completed: u64,
+    failed: u64,
+    elements: u64,
+    verified: u64,
+    latency: LatencyHistogram,
+    /// Held so the connection stays open (and counted in the server's
+    /// `active_conns` gauge) until the run snapshot is taken.
+    _keep: TcpStream,
+}
+
+/// Replays a trace over `opts.connections` concurrent TCP connections
+/// against `server` (which must front `coord` — its metrics and spec
+/// registry fill the outcome). Replies are verified in order per
+/// connection; any mismatch aborts the run with an error. The returned
+/// outcome carries [`SocketNet`] observables: the server's
+/// accept/byte gauges and the exact cross-connection merge of the
+/// per-connection round-trip histograms.
+pub fn run_trace_sockets(
+    coord: &Coordinator,
+    server: &NetServer,
+    trace: &Trace,
+    opts: &SocketRunOptions,
+) -> Result<ScenarioOutcome, String> {
+    if trace.requests.is_empty() {
+        return Err("trace has no requests".into());
+    }
+    let conns = opts.connections.max(1);
+    let verifier = match opts.verify {
+        Verify::Off => None,
+        _ => Some(GoldenVerifier::for_specs(&trace.specs)),
+    };
+    // Binary frames address specs by registered id (position in the
+    // coordinator's served list); resolve the mapping once, up front,
+    // so an unserved trace spec fails the run before any socket opens.
+    let spec_ids: HashMap<MethodSpec, u16> = coord
+        .specs()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (*s, i as u16))
+        .collect();
+    if opts.framing != Framing::Json {
+        for spec in &trace.specs {
+            if !spec_ids.contains_key(spec) {
+                return Err(format!(
+                    "binary framing needs served specs: trace spec '{spec}' is not \
+                     registered on the coordinator"
+                ));
+            }
+        }
+    }
+    let addr = server.addr();
+    let start = Instant::now();
+    let results: Vec<Result<ConnStats, String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let verifier = verifier.as_ref();
+                let spec_ids = &spec_ids;
+                scope.spawn(move || {
+                    run_conn(
+                        addr,
+                        trace,
+                        c,
+                        conns,
+                        opts.framing.binary_for(c),
+                        spec_ids,
+                        verifier,
+                        opts,
+                        start,
+                    )
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err("connection thread panicked".into()))
+            })
+            .collect()
+    });
+    // Snapshot the gauges while every connection is still open (the
+    // streams live inside the per-connection stats), so `active_conns`
+    // reflects the run's true fan-out.
+    let gauges = server.gauges();
+    let wall = start.elapsed();
+    let (mut completed, mut failed, mut elements, mut verified) = (0u64, 0u64, 0u64, 0u64);
+    let mut latency = LatencyHistogram::default();
+    for r in results {
+        let s = r?;
+        completed += s.completed;
+        failed += s.failed;
+        elements += s.elements;
+        verified += s.verified;
+        latency.merge(&s.latency);
+    }
+    Ok(ScenarioOutcome {
+        name: trace.name.clone(),
+        seed: trace.seed,
+        specs: trace.spec_strings(),
+        submitted: trace.requests.len() as u64,
+        completed,
+        failed,
+        retries: 0,
+        elements,
+        verified,
+        wall,
+        metrics: coord.metrics(),
+        net: Some(SocketNet {
+            framing: opts.framing.as_str().to_string(),
+            connections: conns as u64,
+            accepted_conns: gauges.accepted_conns,
+            active_conns: gauges.active_conns,
+            bytes_in: gauges.bytes_in,
+            bytes_out: gauges.bytes_out,
+            conn_latency: latency,
+        }),
+    })
+}
+
+/// One connection's replay: a writer thread streams this connection's
+/// share of the trace (request indices `conn, conn + stride, …`) while
+/// this thread reads and verifies the replies in order. The bounded
+/// meta channel caps the pipelining window; the server's own
+/// backpressure (read pausing once its per-connection in-flight cap
+/// fills) throttles the writer through TCP beyond that.
+#[allow(clippy::too_many_arguments)]
+fn run_conn(
+    addr: std::net::SocketAddr,
+    trace: &Trace,
+    conn: usize,
+    stride: usize,
+    binary: bool,
+    spec_ids: &HashMap<MethodSpec, u16>,
+    verifier: Option<&GoldenVerifier>,
+    opts: &SocketRunOptions,
+    start: Instant,
+) -> Result<ConnStats, String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| format!("conn {conn}: connect: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let wstream = stream.try_clone().map_err(|e| format!("conn {conn}: clone: {e}"))?;
+    let rstream = stream.try_clone().map_err(|e| format!("conn {conn}: clone: {e}"))?;
+    let (meta_tx, meta_rx) = mpsc::sync_channel::<(usize, Instant)>(opts.window.max(1));
+    let pace = opts.pace;
+    let verify = opts.verify;
+
+    std::thread::scope(|scope| {
+        let writer = scope.spawn(move || -> Result<(), String> {
+            let mut w = wstream;
+            for i in (conn..trace.requests.len()).step_by(stride) {
+                let req = &trace.requests[i];
+                if pace && req.at_us > 0 {
+                    let target = start + Duration::from_micros(req.at_us);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                }
+                let frame = if binary {
+                    let id = *spec_ids
+                        .get(&req.spec)
+                        .ok_or_else(|| format!("spec '{}' has no registered id", req.spec))?;
+                    bin_request_frame(id, &quantize_input(&req.values, req.spec.io.input))
+                } else {
+                    let doc = Json::obj(vec![
+                        ("spec", Json::s(req.spec.to_string())),
+                        (
+                            "values",
+                            Json::arr(
+                                req.values.iter().map(|v| Json::n(*v as f64)).collect(),
+                            ),
+                        ),
+                    ]);
+                    let mut line = doc.to_string_compact();
+                    line.push('\n');
+                    line.into_bytes()
+                };
+                // Meta first (blocks at the window cap), then the
+                // bytes: the reader always knows what reply is next.
+                meta_tx
+                    .send((i, Instant::now()))
+                    .map_err(|_| "reader hung up".to_string())?;
+                w.write_all(&frame).map_err(|e| format!("conn {conn}: write: {e}"))?;
+            }
+            Ok(())
+        });
+
+        let mut reader = BufReader::new(rstream);
+        let mut stats = ConnStats {
+            completed: 0,
+            failed: 0,
+            elements: 0,
+            verified: 0,
+            latency: LatencyHistogram::default(),
+            _keep: stream,
+        };
+        while let Ok((i, sent_at)) = meta_rx.recv() {
+            let req = &trace.requests[i];
+            let outcome = if binary {
+                read_bin_reply(&mut reader).map_err(|e| format!("conn {conn}: {e}"))?
+            } else {
+                read_json_reply(&mut reader).map_err(|e| format!("conn {conn}: {e}"))?
+            };
+            stats.latency.record(sent_at.elapsed().as_micros() as u64);
+            match outcome {
+                Reply::Err(_) => stats.failed += 1,
+                Reply::JsonOk(out) => {
+                    stats.completed += 1;
+                    stats.elements += out.len() as u64;
+                    if let Some(v) = verifier {
+                        let want = v.expected(&req.spec, &req.values)?;
+                        check_f32(&req.spec, &out, &want, verify)
+                            .map_err(|e| format!("conn {conn}: {e}"))?;
+                        stats.verified += 1;
+                    }
+                }
+                Reply::BinOk(raws) => {
+                    stats.completed += 1;
+                    stats.elements += raws.len() as u64;
+                    if let Some(v) = verifier {
+                        let want = v.expected(&req.spec, &req.values)?;
+                        check_raw(&req.spec, &raws, &want, verify)
+                            .map_err(|e| format!("conn {conn}: {e}"))?;
+                        stats.verified += 1;
+                    }
+                }
+            }
+        }
+        writer
+            .join()
+            .map_err(|_| "writer thread panicked".to_string())??;
+        Ok(stats)
+    })
+}
+
+enum Reply {
+    JsonOk(Vec<f32>),
+    BinOk(Vec<i64>),
+    /// Server error reply (`"<code>: <detail>"`), counted as failed.
+    Err(String),
+}
+
+fn read_json_reply(reader: &mut BufReader<TcpStream>) -> Result<Reply, String> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).map_err(|e| format!("read: {e}"))?;
+    if n == 0 {
+        return Err("server closed the connection mid-run".into());
+    }
+    let doc = json::parse(line.trim_end())?;
+    match reply_values(&doc) {
+        Ok(values) => Ok(Reply::JsonOk(values)),
+        Err(e) if e.starts_with("reply values") || e.starts_with("missing") => Err(e),
+        Err(e) => Ok(Reply::Err(e)),
+    }
+}
+
+fn read_bin_reply(reader: &mut BufReader<TcpStream>) -> Result<Reply, String> {
+    let mut header = [0u8; 5];
+    reader.read_exact(&mut header).map_err(|e| format!("read: {e}"))?;
+    if header[0] != BIN_REPLY_MAGIC {
+        return Err(format!("bad reply magic 0x{:02x}", header[0]));
+    }
+    let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
+    if len == 0 {
+        return Err("empty reply frame".into());
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).map_err(|e| format!("read: {e}"))?;
+    let (status, payload) = (body[0], &body[1..]);
+    if status != 0 {
+        return Ok(Reply::Err(format!(
+            "status {status}: {}",
+            String::from_utf8_lossy(payload)
+        )));
+    }
+    if payload.len() % 8 != 0 {
+        return Err(format!("reply payload of {} bytes is not i64-aligned", payload.len()));
+    }
+    Ok(Reply::BinOk(
+        payload
+            .chunks_exact(8)
+            .map(|w| i64::from_le_bytes(w.try_into().unwrap()))
+            .collect(),
+    ))
+}
+
+fn check_f32(spec: &MethodSpec, got: &[f32], want: &[f32], verify: Verify) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{spec}: served {} outputs for {} inputs", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let ok = match verify {
+            Verify::Exact => g.to_bits() == w.to_bits(),
+            Verify::Tolerance(tol) => ((g - w).abs() as f64) <= tol,
+            Verify::Off => true,
+        };
+        if !ok {
+            return Err(format!(
+                "verification failed: {spec} output[{i}] served {g} vs golden kernel {w}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn check_raw(spec: &MethodSpec, got: &[i64], want: &[f32], verify: Verify) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{spec}: served {} outputs for {} inputs", got.len(), want.len()));
+    }
+    // The golden expectation in raw words: the same output-format
+    // quantization the server applies to its f32 results.
+    let want_raw = quantize_input(want, spec.io.output);
+    let ulp = spec.io.output.ulp();
+    for (i, (g, w)) in got.iter().zip(&want_raw).enumerate() {
+        let ok = match verify {
+            Verify::Exact => g == w,
+            Verify::Tolerance(tol) => ((g - w) as f64 * ulp).abs() <= tol,
+            Verify::Off => true,
+        };
+        if !ok {
+            return Err(format!(
+                "verification failed: {spec} output[{i}] served raw {g} vs golden raw {w}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GoldenBackend;
+    use crate::bench::scenario::build_trace;
+    use crate::coordinator::CoordinatorConfig;
+    use std::sync::Arc;
+
+    fn serve() -> (Arc<Coordinator>, NetServer) {
+        let coord = Arc::new(
+            Coordinator::start(
+                Arc::new(GoldenBackend::new()),
+                CoordinatorConfig::with_batch(256),
+            )
+            .unwrap(),
+        );
+        let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+        (coord, server)
+    }
+
+    #[test]
+    fn framing_parses_and_labels() {
+        assert_eq!(Framing::parse("json").unwrap(), Framing::Json);
+        assert_eq!(Framing::parse("binary").unwrap(), Framing::Binary);
+        assert_eq!(Framing::parse("mixed").unwrap(), Framing::Mixed);
+        assert!(Framing::parse("grpc").unwrap_err().contains("json"));
+        assert_eq!(Framing::Mixed.as_str(), "mixed");
+        // Mixed alternates starting with JSON on connection 0.
+        assert!(!Framing::Mixed.binary_for(0));
+        assert!(Framing::Mixed.binary_for(1));
+        assert!(Framing::Binary.binary_for(0));
+        assert!(!Framing::Json.binary_for(7));
+    }
+
+    #[test]
+    fn socket_replay_verifies_over_mixed_framing() {
+        let (coord, server) = serve();
+        let trace =
+            build_trace("zipf", 11, 256, 0.05, &crate::approx::MethodSpec::table1_all())
+                .unwrap();
+        let opts = SocketRunOptions { connections: 4, ..SocketRunOptions::default() };
+        let out = run_trace_sockets(&coord, &server, &trace, &opts).unwrap();
+        assert_eq!(out.submitted, trace.requests.len() as u64);
+        assert_eq!(out.completed, out.submitted);
+        assert_eq!(out.failed, 0);
+        assert_eq!(out.verified, out.completed);
+        let net = out.net.as_ref().unwrap();
+        assert_eq!(net.framing, "mixed");
+        assert_eq!(net.connections, 4);
+        assert!(net.accepted_conns >= 4, "{net:?}");
+        assert_eq!(net.active_conns, 4, "gauge snapshot must see all conns open");
+        assert!(net.bytes_in > 0 && net.bytes_out > 0);
+        assert_eq!(net.conn_latency.count, out.completed);
+        assert!(net.conn_latency.max > 0);
+        // The coordinator saw exactly the socket-submitted load.
+        assert_eq!(out.metrics.submitted, out.submitted);
+        assert_eq!(out.metrics.requests, out.completed);
+        server.stop();
+        Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn binary_framing_refuses_unserved_trace_specs() {
+        let (coord, server) = serve();
+        let foreign =
+            crate::approx::MethodSpec::parse("pwl:step=1/32:in=s2.13:out=s.15").unwrap();
+        let trace = build_trace("steady", 1, 64, 0.02, &[foreign]).unwrap();
+        let opts = SocketRunOptions {
+            connections: 2,
+            framing: Framing::Binary,
+            ..SocketRunOptions::default()
+        };
+        let err = run_trace_sockets(&coord, &server, &trace, &opts).unwrap_err();
+        assert!(err.contains("not registered"), "{err}");
+        server.stop();
+        Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    }
+}

@@ -99,6 +99,20 @@ pub struct MetricsSnapshot {
     /// `kernel_compiles == distinct specs`, independent of shard
     /// count).
     pub kernel_compiles: u64,
+    /// Connections accepted by the net front-end since it started — a
+    /// server-global **gauge** (from the event loop's counters), not a
+    /// per-shard counter: filled by the net layer, zero in per-shard
+    /// snapshots, max-merged like the kernel-cache gauges.
+    pub accepted_conns: u64,
+    /// Connections currently open on the net front-end (server-global
+    /// gauge, max-merged).
+    pub active_conns: u64,
+    /// Request bytes the net front-end has read off sockets
+    /// (server-global gauge, max-merged).
+    pub net_bytes_in: u64,
+    /// Reply bytes the net front-end has written to sockets
+    /// (server-global gauge, max-merged).
+    pub net_bytes_out: u64,
 }
 
 impl MetricsSnapshot {
@@ -188,6 +202,12 @@ impl MetricsSnapshot {
         // state, not double it.
         self.kernel_cache_hits = self.kernel_cache_hits.max(other.kernel_cache_hits);
         self.kernel_compiles = self.kernel_compiles.max(other.kernel_compiles);
+        // Net-layer gauges are server-global too (one event loop per
+        // server process).
+        self.accepted_conns = self.accepted_conns.max(other.accepted_conns);
+        self.active_conns = self.active_conns.max(other.active_conns);
+        self.net_bytes_in = self.net_bytes_in.max(other.net_bytes_in);
+        self.net_bytes_out = self.net_bytes_out.max(other.net_bytes_out);
         self
     }
 }
@@ -272,6 +292,12 @@ impl ServerMetrics {
             // `Coordinator::metrics` fills them from Registry::global.
             kernel_cache_hits: 0,
             kernel_compiles: 0,
+            // Net gauges are server-global: the net front-end fills
+            // them from its event loop's counters.
+            accepted_conns: 0,
+            active_conns: 0,
+            net_bytes_in: 0,
+            net_bytes_out: 0,
         }
     }
 }
@@ -405,6 +431,34 @@ mod tests {
         a = a.merge(&b);
         assert_eq!(a.kernel_cache_hits, 12);
         assert_eq!(a.kernel_compiles, 6);
+    }
+
+    #[test]
+    fn net_gauges_merge_by_max_not_sum() {
+        // Same pattern as the cache gauges: one event loop per server,
+        // so two snapshots carrying its counters must not double them.
+        let a = MetricsSnapshot {
+            accepted_conns: 8,
+            active_conns: 3,
+            net_bytes_in: 1000,
+            net_bytes_out: 2000,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            accepted_conns: 10,
+            active_conns: 2,
+            net_bytes_in: 1500,
+            net_bytes_out: 1500,
+            ..Default::default()
+        };
+        let m = a.merge(&b);
+        assert_eq!(m.accepted_conns, 10);
+        assert_eq!(m.active_conns, 3);
+        assert_eq!(m.net_bytes_in, 1500);
+        assert_eq!(m.net_bytes_out, 2000);
+        // Per-shard snapshots leave them zero.
+        let s = ServerMetrics::default().snapshot();
+        assert_eq!((s.accepted_conns, s.active_conns, s.net_bytes_in, s.net_bytes_out), (0, 0, 0, 0));
     }
 
     #[test]

@@ -43,6 +43,15 @@
 //! - Backpressure: `submit` fails fast once the routed shard holds
 //!   `max_queue` pending elements (the caller sheds load instead of the
 //!   coordinator dying of memory).
+//! - The TCP front-end ([`NetServer`]) is a single nonblocking event
+//!   thread owning per-connection state machines — many concurrent
+//!   clients, pipelined requests with in-order replies, per-connection
+//!   backpressure chained to the shard queues, and two framings
+//!   negotiated by the first byte: JSON lines and length-prefixed
+//!   binary frames of raw `i64` words keyed by registered spec id
+//!   (no per-request serde cost). Connection/byte gauges surface in
+//!   [`MetricsSnapshot`]. See [`net`]'s module doc for the wire
+//!   protocol.
 //! - Metrics are per-shard ([`ServerMetrics`]) and merge exactly:
 //!   latency lives in a log-bucketed histogram
 //!   ([`histogram::LatencyHistogram`]) whose shard merge is
@@ -60,13 +69,16 @@
 mod batcher;
 pub mod histogram;
 mod metrics;
-mod net;
+pub mod net;
 mod request;
 mod server;
 
 pub use batcher::{BatcherConfig, PendingBatch};
 pub use histogram::LatencyHistogram;
 pub use metrics::{MetricsSnapshot, ServerMetrics};
-pub use net::{NetClient, NetServer};
+pub use net::{
+    bin_request_frame, reply_values, BinClient, NetClient, NetConfig, NetGaugesSnapshot,
+    NetServer, BIN_REPLY_MAGIC, BIN_REQUEST_MAGIC,
+};
 pub use request::{Request, RequestError, RequestErrorKind, RequestResult};
 pub use server::{Coordinator, CoordinatorConfig, RoutePolicy};

@@ -1,8 +1,21 @@
 //! TCP front-end: the coordinator as a network service.
 //!
-//! Line-delimited JSON over TCP (std::net; tokio is not in the offline
-//! crate set — one thread per connection, which is fine for an
-//! accelerator-driver control plane):
+//! A single nonblocking **event thread** owns the listener and every
+//! connection (std::net; tokio/epoll are not in the offline crate
+//! set). Each connection is a small state machine — read buffer →
+//! decoded-work queue → in-flight reply queue → write buffer — so one
+//! thread serves many concurrent clients with **pipelined** requests:
+//! a client may write any number of requests before reading; replies
+//! always come back in request order.
+//!
+//! ## Framing
+//!
+//! The **first byte of the connection** negotiates the framing: a
+//! [`BIN_REQUEST_MAGIC`] byte (`0xB7`, never the start of a JSON
+//! document) switches the connection to binary frames; anything else
+//! is the JSON line protocol.
+//!
+//! **JSON lines** — one request document per `\n`-terminated line:
 //!
 //! ```text
 //! → {"method": "pwl", "values": [0.5, -1.25]}
@@ -12,89 +25,210 @@
 //! → {"backend": "hw", "spec": "pwl:step=1/64:in=S3.12:out=S.15", "values": [0.5]}
 //! ← {"ok": true, "values": [0.4621], "latency_us": 95}
 //! → {"cmd": "metrics"}
-//! ← {"ok": true, "backend": "golden", "requests": 2, ...}
+//! ← {"ok": true, "backend": "golden", "requests": 2, "active_conns": 1, ...}
 //! ```
 //!
-//! A `"spec"` key addresses any served design point by its spec string
-//! (must be in the coordinator's served set); `"method"` remains the
-//! short form for the method's first served spec. An optional
-//! `"backend"` key pins any request — evaluations and commands alike —
-//! to an execution backend: a coordinator runs exactly one backend per
-//! deployment, so a request naming a *different* backend is refused
-//! with `backend_unavailable`
-//! (clients use it to assert which implementation is answering — e.g.
-//! a verifier that only accepts cycle-accurate `hw` replies).
+//! A `"spec"` key addresses any served design point by its spec string;
+//! `"method"` remains the short form for the method's first served
+//! spec. An optional `"backend"` key pins any request to an execution
+//! backend (a coordinator runs exactly one backend per deployment, so
+//! a request naming a *different* backend is refused with
+//! `backend_unavailable`). Every `values` entry must be a finite JSON
+//! number; a non-numeric or non-finite entry is rejected with
+//! `bad_request` naming the offending index — never silently dropped
+//! (dropping would misalign the reply with the request).
+//!
+//! **Binary frames** — length-prefixed raw words, no per-request
+//! serde cost. Specs are pre-registered: id `k` is the k-th entry of
+//! the coordinator's served-spec list (the order the `metrics`
+//! command's `specs` array reports). All integers little-endian:
+//!
+//! ```text
+//! request:  0xB7 | body_len: u32 | spec_id: u16 | reserved: u16 | N × input raw: i64
+//! reply ok: 0xB8 | body_len: u32 | status 0x00  | N × output raw: i64
+//! reply err:0xB8 | body_len: u32 | status: u8   | utf-8 error detail
+//! ```
+//!
+//! Input raws are validated against the spec's input-format range
+//! (`bad_request` naming the offending index on overflow); output raws
+//! are the served outputs re-quantized with the shared golden
+//! conventions, bit-exact for the ≤ 24-bit formats the paper's design
+//! points use. The error `status` byte is
+//! [`crate::backend::ErrorCode::as_u8`] (0 is reserved for ok).
+//! Binary connections are eval-only; commands stay on the JSON
+//! protocol.
+//!
+//! ## Backpressure & frame caps
+//!
+//! Per-connection backpressure is tied to the shard queues: when the
+//! coordinator answers `overloaded`, the request stays at the head of
+//! the connection's work queue and is retried next tick (order
+//! preserved), and once `work + inflight` reaches
+//! [`NetConfig::max_inflight_per_conn`] — or the write buffer exceeds
+//! [`NetConfig::max_write_buffer`] — the loop stops *reading* that
+//! connection, so a flooding client is throttled by TCP instead of
+//! buffering without bound. A request stuck in overload longer than
+//! [`NetConfig::overload_give_up`] gets an `overloaded` error reply.
+//! Any single frame (JSON line or binary body) larger than
+//! [`NetConfig::max_frame_bytes`] is answered with `bad_request` and
+//! the connection closes after the reply flushes.
 //!
 //! ## Error responses
 //!
-//! Failures are structured — `{"ok": false, "code": "<code>",
+//! JSON failures are structured — `{"ok": false, "code": "<code>",
 //! "error": "<detail>"}` — with **stable codes** (the `error` text is
-//! human-facing and may change; the `code` is the protocol):
+//! human-facing and may change; the `code` is the protocol). Binary
+//! failures carry the same codes as the status byte:
 //!
-//! | code                  | meaning                                                        | retry?            |
-//! |-----------------------|----------------------------------------------------------------|-------------------|
-//! | `bad_request`         | malformed input: bad JSON, unknown key/cmd, spec-grammar error, unknown method name, empty or oversized `values` | no — fix the request |
-//! | `unknown_spec`        | well-formed spec/method that this coordinator does not serve   | no — pick a served spec (`cmd: metrics` lists them) |
-//! | `backend_unavailable` | the execution backend cannot run in this build/environment, or the request's `"backend"` pin names one this deployment does not run | no — redeploy with the substrate present, or drop/fix the pin |
-//! | `overloaded`          | backpressure: the routed shard queue is full                   | yes — after a backoff |
-//! | `internal`            | unexpected failure (execution fault, worker race)              | maybe — and report it |
+//! | code                  | u8 | meaning                                                        | retry?            |
+//! |-----------------------|----|----------------------------------------------------------------|-------------------|
+//! | `bad_request`         | 3  | malformed input: bad JSON, unknown key/cmd, spec-grammar error, unknown method name, non-numeric/non-finite or out-of-range values, empty or oversized `values`, oversized frame | no — fix the request |
+//! | `unknown_spec`        | 1  | well-formed spec/method/spec-id that this coordinator does not serve | no — pick a served spec (`cmd: metrics` lists them) |
+//! | `backend_unavailable` | 2  | the execution backend cannot run in this build/environment, or the request's `"backend"` pin names one this deployment does not run | no — redeploy with the substrate present, or drop/fix the pin |
+//! | `overloaded`          | 4  | backpressure: the routed shard queue stayed full past the give-up deadline | yes — after a backoff |
+//! | `internal`            | 5  | unexpected failure (execution fault, worker race)              | maybe — and report it |
 //!
 //! The codes are [`crate::backend::ErrorCode`]; request-path failures
 //! additionally distinguish *where* they happened
 //! ([`crate::coordinator::RequestErrorKind`]) in the server metrics
 //! (`backend_failed_requests` vs `admission_failed_requests`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::approx::{MethodId, MethodSpec};
-use crate::backend::ErrorCode;
+use crate::backend::{quantize_input, ErrorCode};
+use crate::fixed::QFormat;
 use crate::util::json::{self, Json};
 
-use super::request::RequestError;
+use super::metrics::MetricsSnapshot;
+use super::request::{RequestError, RequestResult};
 use super::server::Coordinator;
+
+/// First byte of every binary request frame — and, as the first byte
+/// of a connection, the framing negotiation: no JSON document starts
+/// with `0xB7`, so its presence selects binary mode.
+pub const BIN_REQUEST_MAGIC: u8 = 0xB7;
+/// First byte of every binary reply frame.
+pub const BIN_REPLY_MAGIC: u8 = 0xB8;
+
+/// Bytes of frame header (magic + u32 body length).
+const BIN_HEADER: usize = 5;
+
+/// Tuning knobs for the event loop. The defaults suit the scenario
+/// harness and production-ish loads; tests shrink them to exercise the
+/// guard rails.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Hard cap on a single request frame: a JSON line (bytes before
+    /// the newline) or a binary frame body. Overflow answers
+    /// `bad_request` and closes the connection — the guard against one
+    /// client streaming a multi-GB line into server memory.
+    pub max_frame_bytes: usize,
+    /// Per-connection cap on decoded-but-unanswered requests
+    /// (work queue + in-flight). Reads pause at the cap.
+    pub max_inflight_per_conn: usize,
+    /// Per-connection cap on buffered reply bytes. Reads pause while a
+    /// slow reader's write buffer sits above it.
+    pub max_write_buffer: usize,
+    /// How long a request may sit at the head of the work queue
+    /// retrying `overloaded` before the error is returned to the
+    /// client.
+    pub overload_give_up: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_frame_bytes: 1 << 20,
+            max_inflight_per_conn: 128,
+            max_write_buffer: 4 << 20,
+            overload_give_up: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Connection/byte gauges owned by the event loop (atomics; the
+/// `metrics` command and [`NetServer::gauges`] snapshot them).
+#[derive(Debug, Default)]
+struct NetGauges {
+    accepted: AtomicU64,
+    active: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// A point-in-time copy of the net front-end gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetGaugesSnapshot {
+    /// Connections accepted since the server started.
+    pub accepted_conns: u64,
+    /// Connections currently open.
+    pub active_conns: u64,
+    /// Request bytes read off sockets.
+    pub bytes_in: u64,
+    /// Reply bytes written to sockets.
+    pub bytes_out: u64,
+}
+
+impl NetGauges {
+    fn snapshot(&self) -> NetGaugesSnapshot {
+        NetGaugesSnapshot {
+            accepted_conns: self.accepted.load(Ordering::Relaxed),
+            active_conns: self.active.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl NetGaugesSnapshot {
+    /// Copies the gauges into a [`MetricsSnapshot`] (they merge by
+    /// max there, like the kernel-cache gauges).
+    pub fn fill(&self, m: &mut MetricsSnapshot) {
+        m.accepted_conns = self.accepted_conns;
+        m.active_conns = self.active_conns;
+        m.net_bytes_in = self.bytes_in;
+        m.net_bytes_out = self.bytes_out;
+    }
+}
 
 /// A running TCP server wrapping a coordinator.
 pub struct NetServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    gauges: Arc<NetGauges>,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl NetServer {
-    /// Binds `addr` (use port 0 for an ephemeral port) and starts
-    /// accepting connections.
+    /// Binds `addr` (use port 0 for an ephemeral port) and starts the
+    /// event loop with default [`NetConfig`].
     pub fn start(coord: Arc<Coordinator>, addr: &str) -> std::io::Result<NetServer> {
+        NetServer::start_with(coord, addr, NetConfig::default())
+    }
+
+    /// [`NetServer::start`] with explicit tuning.
+    pub fn start_with(
+        coord: Arc<Coordinator>,
+        addr: &str,
+        cfg: NetConfig,
+    ) -> std::io::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
         listener.set_nonblocking(true)?;
-        let accept_thread = std::thread::Builder::new()
-            .name("tanh-net-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            let coord = coord.clone();
-                            // Connection threads are detached: they end
-                            // when the client disconnects. Joining them
-                            // from stop() would deadlock against
-                            // still-connected clients.
-                            let _ = std::thread::Builder::new()
-                                .name("tanh-net-conn".into())
-                                .spawn(move || handle_conn(stream, coord));
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread) })
+        let stop = Arc::new(AtomicBool::new(false));
+        let gauges = Arc::new(NetGauges::default());
+        let stop2 = stop.clone();
+        let gauges2 = gauges.clone();
+        let loop_thread = std::thread::Builder::new()
+            .name("tanh-net-loop".into())
+            .spawn(move || event_loop(listener, coord, cfg, stop2, gauges2))?;
+        Ok(NetServer { addr: local, stop, gauges, loop_thread: Some(loop_thread) })
     }
 
     /// The bound address (for clients when started on port 0).
@@ -102,141 +236,592 @@ impl NetServer {
         self.addr
     }
 
-    /// Stops accepting and joins the accept thread (open connections
-    /// close as clients disconnect).
+    /// Snapshot of the connection/byte gauges.
+    pub fn gauges(&self) -> NetGaugesSnapshot {
+        self.gauges.snapshot()
+    }
+
+    /// Stops the event loop and joins it; open connections close
+    /// (clients see EOF). Safe to call with clients still connected.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
+        if let Some(t) = self.loop_thread.take() {
             let _ = t.join();
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) {
-    let peer = stream.peer_addr().ok();
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
+/// The event loop: accept, then pump every connection's state machine.
+/// Sleeps briefly only when a full pass made no progress, so stop()
+/// joins in ~a millisecond and a busy loop never sleeps at all.
+fn event_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    gauges: Arc<NetGauges>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        let mut progressed = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    gauges.accepted.fetch_add(1, Ordering::Relaxed);
+                    conns.push(Conn::new(stream));
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
         }
-        let response = handle_line(&line, &coord);
-        let mut text = response.to_string_compact();
-        text.push('\n');
-        if writer.write_all(text.as_bytes()).is_err() {
-            break;
+        for conn in conns.iter_mut() {
+            progressed |= conn.pump(&coord, &cfg, &gauges);
+        }
+        conns.retain(|c| !c.done());
+        gauges.active.store(conns.len() as u64, Ordering::Relaxed);
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(500));
         }
     }
-    let _ = peer; // reserved for per-peer metrics
+    // Dropping the listener and connections closes every socket;
+    // in-flight coordinator replies are dropped with them.
 }
 
-fn handle_line(line: &str, coord: &Coordinator) -> Json {
+/// Connection framing, decided by the first byte received.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Undecided,
+    Json,
+    Binary,
+}
+
+/// One decoded request, in arrival order. `Reply` items (command
+/// responses, decode errors) are pre-rendered so a deferred eval ahead
+/// of them still answers first — replies stay in request order.
+enum Work {
+    Reply(Vec<u8>),
+    Eval(EvalReq),
+}
+
+struct EvalReq {
+    spec: MethodSpec,
+    values: Vec<f32>,
+    binary: bool,
+    /// Set on the first `overloaded` rejection; drives the give-up
+    /// deadline.
+    first_try: Option<Instant>,
+}
+
+/// A submitted-or-rendered reply waiting its turn on the wire.
+enum Pending {
+    Ready(Vec<u8>),
+    Wait { rx: mpsc::Receiver<RequestResult>, out_fmt: QFormat, binary: bool },
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    mode: Mode,
+    rbuf: Vec<u8>,
+    work: VecDeque<Work>,
+    inflight: VecDeque<Pending>,
+    wbuf: Vec<u8>,
+    /// Peer closed its write side; drain what we have, then close.
+    eof: bool,
+    /// Fatal protocol error queued; close once everything flushes.
+    closing: bool,
+    /// Transport error; drop immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            mode: Mode::Undecided,
+            rbuf: Vec::new(),
+            work: VecDeque::new(),
+            inflight: VecDeque::new(),
+            wbuf: Vec::new(),
+            eof: false,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn done(&self) -> bool {
+        if self.dead {
+            return true;
+        }
+        (self.eof || self.closing)
+            && self.work.is_empty()
+            && self.inflight.is_empty()
+            && self.wbuf.is_empty()
+    }
+
+    /// One tick of the state machine; true if anything moved.
+    fn pump(&mut self, coord: &Coordinator, cfg: &NetConfig, gauges: &NetGauges) -> bool {
+        let mut progressed = false;
+        progressed |= self.fill_read(cfg, gauges);
+        progressed |= self.decode(coord, cfg, gauges);
+        progressed |= self.submit(coord, cfg);
+        progressed |= self.reap();
+        progressed |= self.flush(gauges);
+        progressed
+    }
+
+    /// Reads pause at the in-flight / write-buffer caps: the client's
+    /// TCP window fills instead of server memory (per-connection
+    /// backpressure).
+    fn paused(&self, cfg: &NetConfig) -> bool {
+        self.work.len() + self.inflight.len() >= cfg.max_inflight_per_conn
+            || self.wbuf.len() >= cfg.max_write_buffer
+    }
+
+    fn fill_read(&mut self, cfg: &NetConfig, gauges: &NetGauges) -> bool {
+        if self.dead || self.closing || self.eof || self.paused(cfg) {
+            return false;
+        }
+        let mut progressed = false;
+        let mut chunk = [0u8; 8192];
+        loop {
+            // Leave an oversized frame to decode's overflow guard
+            // instead of buffering past the cap.
+            if self.rbuf.len() > cfg.max_frame_bytes + BIN_HEADER {
+                break;
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    gauges.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    fn decode(&mut self, coord: &Coordinator, cfg: &NetConfig, gauges: &NetGauges) -> bool {
+        if self.dead || self.closing || self.rbuf.is_empty() {
+            return false;
+        }
+        if self.mode == Mode::Undecided {
+            self.mode =
+                if self.rbuf[0] == BIN_REQUEST_MAGIC { Mode::Binary } else { Mode::Json };
+        }
+        match self.mode {
+            Mode::Json => self.decode_json(coord, cfg, gauges),
+            Mode::Binary => self.decode_binary(coord, cfg),
+            Mode::Undecided => unreachable!(),
+        }
+    }
+
+    fn decode_json(&mut self, coord: &Coordinator, cfg: &NetConfig, gauges: &NetGauges) -> bool {
+        let mut progressed = false;
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let mut line: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            line.pop(); // the newline
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            progressed = true;
+            if line.iter().all(|b| b.is_ascii_whitespace()) {
+                continue;
+            }
+            if line.len() > cfg.max_frame_bytes {
+                self.protocol_error(cfg, false);
+                return true;
+            }
+            let work = match std::str::from_utf8(&line) {
+                Ok(text) => classify_line(text, coord, gauges),
+                Err(_) => Work::Reply(json_reply(&err(
+                    ErrorCode::BadRequest,
+                    "request line is not valid utf-8".into(),
+                ))),
+            };
+            self.work.push_back(work);
+        }
+        // No newline yet: an incomplete line may not grow past the
+        // frame cap (the unbounded-buffering bugfix).
+        if !self.closing && self.rbuf.len() > cfg.max_frame_bytes {
+            self.protocol_error(cfg, false);
+            progressed = true;
+        }
+        progressed
+    }
+
+    fn decode_binary(&mut self, coord: &Coordinator, cfg: &NetConfig) -> bool {
+        let mut progressed = false;
+        while self.rbuf.len() >= BIN_HEADER {
+            if self.rbuf[0] != BIN_REQUEST_MAGIC {
+                self.protocol_error(cfg, true);
+                return true;
+            }
+            let len =
+                u32::from_le_bytes([self.rbuf[1], self.rbuf[2], self.rbuf[3], self.rbuf[4]])
+                    as usize;
+            if len > cfg.max_frame_bytes {
+                self.protocol_error(cfg, true);
+                return true;
+            }
+            if self.rbuf.len() < BIN_HEADER + len {
+                break;
+            }
+            let frame: Vec<u8> = self.rbuf.drain(..BIN_HEADER + len).collect();
+            self.work.push_back(classify_binary(&frame[BIN_HEADER..], coord));
+            progressed = true;
+        }
+        progressed
+    }
+
+    /// Queues the oversized-frame `bad_request` reply and flags the
+    /// connection to close once it flushes.
+    fn protocol_error(&mut self, cfg: &NetConfig, binary: bool) {
+        let msg = format!(
+            "request frame exceeds the {}-byte limit; closing connection",
+            cfg.max_frame_bytes
+        );
+        let bytes = if binary {
+            bin_err_frame(ErrorCode::BadRequest, &msg)
+        } else {
+            json_reply(&err(ErrorCode::BadRequest, msg))
+        };
+        self.work.push_back(Work::Reply(bytes));
+        self.rbuf.clear();
+        self.closing = true;
+    }
+
+    /// Drains the work queue head-first into the in-flight queue.
+    /// `overloaded` keeps the head in place (retried next tick) until
+    /// the give-up deadline — backpressure propagates from the shard
+    /// queue to the client connection without reordering replies.
+    fn submit(&mut self, coord: &Coordinator, cfg: &NetConfig) -> bool {
+        let mut progressed = false;
+        loop {
+            match self.work.front_mut() {
+                None => break,
+                Some(Work::Reply(_)) => {
+                    let Some(Work::Reply(bytes)) = self.work.pop_front() else { unreachable!() };
+                    self.inflight.push_back(Pending::Ready(bytes));
+                    progressed = true;
+                }
+                Some(Work::Eval(req)) => {
+                    if self.inflight.len() >= cfg.max_inflight_per_conn {
+                        break;
+                    }
+                    match coord.submit_spec(&req.spec, req.values.clone()) {
+                        Ok(rx) => {
+                            let Some(Work::Eval(req)) = self.work.pop_front() else {
+                                unreachable!()
+                            };
+                            self.inflight.push_back(Pending::Wait {
+                                rx,
+                                out_fmt: req.spec.io.output,
+                                binary: req.binary,
+                            });
+                            progressed = true;
+                        }
+                        Err(e) if e.code == ErrorCode::Overloaded => {
+                            let give_up = match req.first_try {
+                                None => {
+                                    req.first_try = Some(Instant::now());
+                                    false
+                                }
+                                Some(t) => t.elapsed() >= cfg.overload_give_up,
+                            };
+                            if !give_up {
+                                break;
+                            }
+                            let Some(Work::Eval(req)) = self.work.pop_front() else {
+                                unreachable!()
+                            };
+                            self.inflight.push_back(Pending::Ready(render_error(
+                                req.binary, e.code, &e.message,
+                            )));
+                            progressed = true;
+                        }
+                        Err(e) => {
+                            let Some(Work::Eval(req)) = self.work.pop_front() else {
+                                unreachable!()
+                            };
+                            self.inflight.push_back(Pending::Ready(render_error(
+                                req.binary, e.code, &e.message,
+                            )));
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Moves finished replies (in order) into the write buffer.
+    fn reap(&mut self) -> bool {
+        let mut progressed = false;
+        loop {
+            match self.inflight.front() {
+                None => break,
+                Some(Pending::Ready(_)) => {
+                    let Some(Pending::Ready(bytes)) = self.inflight.pop_front() else {
+                        unreachable!()
+                    };
+                    self.wbuf.extend_from_slice(&bytes);
+                    progressed = true;
+                }
+                Some(Pending::Wait { rx, .. }) => match rx.try_recv() {
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Ok(result) => {
+                        let Some(Pending::Wait { out_fmt, binary, .. }) =
+                            self.inflight.pop_front()
+                        else {
+                            unreachable!()
+                        };
+                        self.wbuf.extend_from_slice(&render_result(out_fmt, binary, result));
+                        progressed = true;
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        let Some(Pending::Wait { binary, .. }) = self.inflight.pop_front()
+                        else {
+                            unreachable!()
+                        };
+                        self.wbuf.extend_from_slice(&render_error(
+                            binary,
+                            ErrorCode::Internal,
+                            "worker dropped reply",
+                        ));
+                        progressed = true;
+                    }
+                },
+            }
+        }
+        progressed
+    }
+
+    fn flush(&mut self, gauges: &NetGauges) -> bool {
+        if self.dead || self.wbuf.is_empty() {
+            return false;
+        }
+        let mut progressed = false;
+        loop {
+            if self.wbuf.is_empty() {
+                break;
+            }
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                    gauges.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+}
+
+/// Classifies one JSON request line into deferred work: commands and
+/// malformed requests render immediately; evals carry their resolved
+/// spec to the submit step.
+fn classify_line(line: &str, coord: &Coordinator, gauges: &NetGauges) -> Work {
+    let reply = |j: Json| Work::Reply(json_reply(&j));
     let doc = match json::parse(line) {
         Ok(d) => d,
-        Err(e) => return err(ErrorCode::BadRequest, format!("bad json: {e}")),
+        Err(e) => return reply(err(ErrorCode::BadRequest, format!("bad json: {e}"))),
     };
     // Optional backend pin, honored on EVERY request kind (commands
     // included): one backend per deployment, so a request naming a
     // different one is a deployment mismatch, not a routable request.
-    // A malformed pin is rejected, never silently treated as absent —
-    // the pin exists precisely so clients can assert which
-    // implementation answers.
+    // A malformed pin is rejected, never silently treated as absent.
     if let Some(pin) = doc.get("backend") {
         match pin.str() {
             Some(want) if want == coord.backend_name() => {}
             Some(want) => {
-                return err(
+                return reply(err(
                     ErrorCode::BackendUnavailable,
                     format!(
                         "this deployment serves backend '{}', not '{want}'",
                         coord.backend_name()
                     ),
-                )
+                ))
             }
             None => {
-                return err(
+                return reply(err(
                     ErrorCode::BadRequest,
                     "'backend' must be a backend-name string".into(),
-                )
+                ))
             }
         }
     }
     if let Some(cmd) = doc.get("cmd").and_then(|c| c.str()) {
         return match cmd {
-            "metrics" => {
-                let m = coord.metrics();
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("backend", Json::s(coord.backend_name())),
-                    ("submitted", Json::i(m.submitted as i64)),
-                    ("requests", Json::i(m.requests as i64)),
-                    ("failed_requests", Json::i(m.failed_requests as i64)),
-                    ("backend_failed_requests", Json::i(m.backend_failed_requests as i64)),
-                    ("admission_failed_requests", Json::i(m.admission_failed_requests as i64)),
-                    ("elements", Json::i(m.elements as i64)),
-                    ("batches", Json::i(m.batches as i64)),
-                    ("packed_batches", Json::i(m.packed_batches as i64)),
-                    ("rejected", Json::i(m.rejected as i64)),
-                    ("errors", Json::i(m.errors as i64)),
-                    ("mean_latency_us", Json::n(m.mean_latency_us())),
-                    ("p50_us", Json::n(m.p50_us())),
-                    ("p95_us", Json::n(m.p95_us())),
-                    ("p99_us", Json::n(m.p99_us())),
-                    ("max_latency_us", Json::i(m.latency_us_max() as i64)),
-                    ("sim_cycles", Json::i(m.sim_cycles as i64)),
-                    ("sim_cycles_per_element", Json::n(m.sim_cycles_per_element())),
-                    ("shards_per_method", Json::i(coord.shards_per_method() as i64)),
-                    ("batch_efficiency", Json::n(m.batch_efficiency())),
-                    ("batch_fill_rate", Json::n(m.fill_rate())),
-                    ("padded_elements", Json::i(m.padded_elements as i64)),
-                    ("kernel_cache_hits", Json::i(m.kernel_cache_hits as i64)),
-                    ("kernel_compiles", Json::i(m.kernel_compiles as i64)),
-                    (
-                        "specs",
-                        Json::arr(coord.specs().iter().map(|s| Json::s(s.to_string())).collect()),
-                    ),
-                ])
-            }
-            "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
-            other => err(ErrorCode::BadRequest, format!("unknown cmd '{other}'")),
+            "metrics" => reply(metrics_doc(coord, gauges)),
+            "ping" => reply(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+            other => reply(err(ErrorCode::BadRequest, format!("unknown cmd '{other}'"))),
         };
     }
-    let Some(values) = doc.get("values").and_then(|v| v.as_arr()) else {
-        return err(ErrorCode::BadRequest, "missing 'values' array".into());
+    let Some(raw_values) = doc.get("values").and_then(|v| v.as_arr()) else {
+        return reply(err(ErrorCode::BadRequest, "missing 'values' array".into()));
     };
-    let values: Vec<f32> = values.iter().filter_map(|v| v.num()).map(|v| v as f32).collect();
-    let t0 = std::time::Instant::now();
-    // "spec" addresses an exact design point; "method" is the short
-    // form for that method's first served spec. Both use the unified
-    // parse errors (accepted names / grammar listed on failure);
-    // grammar failures are bad_request, a parsed-but-unserved spec is
-    // unknown_spec (from the coordinator).
-    let result: Result<Vec<f32>, RequestError> =
-        if let Some(spec_str) = doc.get("spec").and_then(|s| s.str()) {
-            match MethodSpec::parse(spec_str) {
-                Ok(spec) => coord.evaluate_spec(&spec, values),
-                Err(e) => Err(RequestError::admission(ErrorCode::BadRequest, e)),
+    // Every entry must be a finite number. filter_map-style skipping
+    // would silently misalign the reply with the request — the client
+    // would get N−k outputs for N inputs with no error.
+    let mut values = Vec::with_capacity(raw_values.len());
+    for (i, v) in raw_values.iter().enumerate() {
+        match v.num() {
+            Some(x) if x.is_finite() => values.push(x as f32),
+            Some(x) => {
+                return reply(err(
+                    ErrorCode::BadRequest,
+                    format!("values[{i}] is not finite ({x})"),
+                ))
             }
-        } else if let Some(name) = doc.get("method").and_then(|m| m.str()) {
-            match MethodId::parse_or_err(name) {
-                Ok(method) => coord.evaluate(method, values),
-                Err(e) => Err(RequestError::admission(ErrorCode::BadRequest, e)),
+            None => {
+                return reply(err(
+                    ErrorCode::BadRequest,
+                    format!("values[{i}] is not a number"),
+                ))
             }
-        } else {
-            Err(RequestError::admission(ErrorCode::BadRequest, "missing 'method' or 'spec'"))
-        };
-    match result {
-        Ok(out) => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("values", Json::arr(out.into_iter().map(|v| Json::n(v as f64)).collect())),
-            ("latency_us", Json::i(t0.elapsed().as_micros() as i64)),
-        ]),
-        Err(e) => err(e.code, e.message),
+        }
     }
+    // "spec" addresses an exact design point; "method" is the short
+    // form for that method's first served spec. Grammar failures are
+    // bad_request; a parsed-but-unserved spec/method is unknown_spec
+    // (the same split the coordinator applies).
+    let spec = if let Some(spec_str) = doc.get("spec").and_then(|s| s.str()) {
+        match MethodSpec::parse(spec_str) {
+            Ok(spec) => spec,
+            Err(e) => return reply(err(ErrorCode::BadRequest, e)),
+        }
+    } else if let Some(name) = doc.get("method").and_then(|m| m.str()) {
+        let method = match MethodId::parse_or_err(name) {
+            Ok(m) => m,
+            Err(e) => return reply(err(ErrorCode::BadRequest, e)),
+        };
+        match coord.specs().iter().find(|s| s.method_id() == method) {
+            Some(spec) => *spec,
+            None => {
+                return reply(err(
+                    ErrorCode::UnknownSpec,
+                    format!("no served spec for method {}", method.name()),
+                ))
+            }
+        }
+    } else {
+        return reply(err(ErrorCode::BadRequest, "missing 'method' or 'spec'".into()));
+    };
+    Work::Eval(EvalReq { spec, values, binary: false, first_try: None })
+}
+
+/// Classifies one binary frame body: `spec_id u16 | reserved u16 |
+/// N × i64 input raws`, validated against the spec's input format.
+fn classify_binary(body: &[u8], coord: &Coordinator) -> Work {
+    let reply = |code: ErrorCode, msg: String| Work::Reply(bin_err_frame(code, &msg));
+    if body.len() < 4 {
+        return reply(
+            ErrorCode::BadRequest,
+            format!("binary frame body of {} bytes is shorter than the 4-byte header", body.len()),
+        );
+    }
+    let spec_id = u16::from_le_bytes([body[0], body[1]]) as usize;
+    let payload = &body[4..];
+    if payload.len() % 8 != 0 {
+        return reply(
+            ErrorCode::BadRequest,
+            format!("binary payload of {} bytes is not a whole number of i64 words", payload.len()),
+        );
+    }
+    let specs = coord.specs();
+    let Some(spec) = specs.get(spec_id) else {
+        return reply(
+            ErrorCode::UnknownSpec,
+            format!(
+                "spec id {spec_id} is not registered (serving {} specs, ids in the \
+                 metrics 'specs' order)",
+                specs.len()
+            ),
+        );
+    };
+    let in_fmt = spec.io.input;
+    let ulp = in_fmt.ulp();
+    let mut values = Vec::with_capacity(payload.len() / 8);
+    for (i, word) in payload.chunks_exact(8).enumerate() {
+        let raw = i64::from_le_bytes(word.try_into().unwrap());
+        if raw < in_fmt.min_raw() || raw > in_fmt.max_raw() {
+            return reply(
+                ErrorCode::BadRequest,
+                format!("values[{i}] raw {raw} is out of range for input format {in_fmt}"),
+            );
+        }
+        values.push((raw as f64 * ulp) as f32);
+    }
+    Work::Eval(EvalReq { spec: *spec, values, binary: true, first_try: None })
+}
+
+/// The `cmd: metrics` reply document: coordinator snapshot (with the
+/// net gauges folded in) + served spec list.
+fn metrics_doc(coord: &Coordinator, gauges: &NetGauges) -> Json {
+    let mut m = coord.metrics();
+    gauges.snapshot().fill(&mut m);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("backend", Json::s(coord.backend_name())),
+        ("submitted", Json::i(m.submitted as i64)),
+        ("requests", Json::i(m.requests as i64)),
+        ("failed_requests", Json::i(m.failed_requests as i64)),
+        ("backend_failed_requests", Json::i(m.backend_failed_requests as i64)),
+        ("admission_failed_requests", Json::i(m.admission_failed_requests as i64)),
+        ("elements", Json::i(m.elements as i64)),
+        ("batches", Json::i(m.batches as i64)),
+        ("packed_batches", Json::i(m.packed_batches as i64)),
+        ("rejected", Json::i(m.rejected as i64)),
+        ("errors", Json::i(m.errors as i64)),
+        ("mean_latency_us", Json::n(m.mean_latency_us())),
+        ("p50_us", Json::n(m.p50_us())),
+        ("p95_us", Json::n(m.p95_us())),
+        ("p99_us", Json::n(m.p99_us())),
+        ("max_latency_us", Json::i(m.latency_us_max() as i64)),
+        ("sim_cycles", Json::i(m.sim_cycles as i64)),
+        ("sim_cycles_per_element", Json::n(m.sim_cycles_per_element())),
+        ("shards_per_method", Json::i(coord.shards_per_method() as i64)),
+        ("batch_efficiency", Json::n(m.batch_efficiency())),
+        ("batch_fill_rate", Json::n(m.fill_rate())),
+        ("padded_elements", Json::i(m.padded_elements as i64)),
+        ("kernel_cache_hits", Json::i(m.kernel_cache_hits as i64)),
+        ("kernel_compiles", Json::i(m.kernel_compiles as i64)),
+        ("accepted_conns", Json::i(m.accepted_conns as i64)),
+        ("active_conns", Json::i(m.active_conns as i64)),
+        ("bytes_in", Json::i(m.net_bytes_in as i64)),
+        ("bytes_out", Json::i(m.net_bytes_out as i64)),
+        (
+            "specs",
+            Json::arr(coord.specs().iter().map(|s| Json::s(s.to_string())).collect()),
+        ),
+    ])
 }
 
 fn err(code: ErrorCode, msg: String) -> Json {
@@ -247,8 +832,81 @@ fn err(code: ErrorCode, msg: String) -> Json {
     ])
 }
 
-/// Minimal blocking client for the line protocol (used by the example
-/// and the tests).
+/// Serializes one JSON reply line (document + newline).
+fn json_reply(doc: &Json) -> Vec<u8> {
+    let mut text = doc.to_string_compact();
+    text.push('\n');
+    text.into_bytes()
+}
+
+/// Renders a finished eval in the connection's framing. Binary ok
+/// replies carry output raws re-quantized with the shared golden
+/// conventions ([`quantize_input`] on the output format) — exact for
+/// the ≤ 24-bit output formats the served design points use.
+fn render_result(out_fmt: QFormat, binary: bool, result: RequestResult) -> Vec<u8> {
+    match result.outcome {
+        Ok(out) => {
+            if binary {
+                bin_ok_frame(&quantize_input(&out, out_fmt))
+            } else {
+                json_reply(&Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("values", Json::arr(out.into_iter().map(|v| Json::n(v as f64)).collect())),
+                    ("latency_us", Json::i(result.latency_us as i64)),
+                ]))
+            }
+        }
+        Err(e) => render_error(binary, e.code, &e.message),
+    }
+}
+
+fn render_error(binary: bool, code: ErrorCode, msg: &str) -> Vec<u8> {
+    if binary {
+        bin_err_frame(code, msg)
+    } else {
+        json_reply(&err(code, msg.to_string()))
+    }
+}
+
+fn bin_frame(status: u8, payload: &[u8]) -> Vec<u8> {
+    let body_len = 1 + payload.len();
+    let mut out = Vec::with_capacity(BIN_HEADER + body_len);
+    out.push(BIN_REPLY_MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(status);
+    out.extend_from_slice(payload);
+    out
+}
+
+fn bin_ok_frame(raws: &[i64]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(raws.len() * 8);
+    for r in raws {
+        payload.extend_from_slice(&r.to_le_bytes());
+    }
+    bin_frame(0, &payload)
+}
+
+fn bin_err_frame(code: ErrorCode, msg: &str) -> Vec<u8> {
+    bin_frame(code.as_u8(), msg.as_bytes())
+}
+
+/// Encodes one binary request frame (shared by [`BinClient`] and the
+/// socket driver).
+pub fn bin_request_frame(spec_id: u16, raws: &[i64]) -> Vec<u8> {
+    let body_len = 4 + raws.len() * 8;
+    let mut out = Vec::with_capacity(BIN_HEADER + body_len);
+    out.push(BIN_REQUEST_MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&spec_id.to_le_bytes());
+    out.extend_from_slice(&[0u8, 0u8]); // reserved
+    for r in raws {
+        out.extend_from_slice(&r.to_le_bytes());
+    }
+    out
+}
+
+/// Minimal blocking client for the JSON line protocol (used by the
+/// example, the tests and the socket driver).
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -258,18 +916,32 @@ impl NetClient {
     /// Connects to a server.
     pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<NetClient> {
         let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
         let writer = stream.try_clone()?;
         Ok(NetClient { reader: BufReader::new(stream), writer })
     }
 
-    /// Sends one request document, waits for the response line.
-    pub fn call(&mut self, req: &Json) -> Result<Json, String> {
+    /// Sends one request document without waiting (pipelining).
+    pub fn send(&mut self, req: &Json) -> Result<(), String> {
         let mut text = req.to_string_compact();
         text.push('\n');
-        self.writer.write_all(text.as_bytes()).map_err(|e| e.to_string())?;
+        self.writer.write_all(text.as_bytes()).map_err(|e| e.to_string())
+    }
+
+    /// Reads the next response line.
+    pub fn recv(&mut self) -> Result<Json, String> {
         let mut line = String::new();
-        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
-        json::parse(&line)
+        let n = self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("connection closed by server".into());
+        }
+        json::parse(line.trim_end())
+    }
+
+    /// Sends one request document, waits for the response line.
+    pub fn call(&mut self, req: &Json) -> Result<Json, String> {
+        self.send(req)?;
+        self.recv()
     }
 
     /// Evaluates a batch of activations. Failures format as
@@ -280,19 +952,88 @@ impl NetClient {
             ("values", Json::arr(values.iter().map(|v| Json::n(*v as f64)).collect())),
         ]);
         let resp = self.call(&req)?;
-        if resp.get("ok").map(|o| *o == Json::Bool(true)) != Some(true) {
-            let code = resp.get("code").and_then(|c| c.str()).unwrap_or("internal");
-            let detail = resp.get("error").and_then(|e| e.str()).unwrap_or("unknown error");
+        reply_values(&resp)
+    }
+}
+
+/// Extracts the `values` of a successful JSON reply, strictly: every
+/// entry must be a number (the reply-side mirror of the request-side
+/// validation — skipping entries would silently misalign results).
+pub fn reply_values(resp: &Json) -> Result<Vec<f32>, String> {
+    if resp.get("ok").map(|o| *o == Json::Bool(true)) != Some(true) {
+        let code = resp.get("code").and_then(|c| c.str()).unwrap_or("internal");
+        let detail = resp.get("error").and_then(|e| e.str()).unwrap_or("unknown error");
+        return Err(format!("{code}: {detail}"));
+    }
+    let arr = resp.get("values").and_then(|v| v.as_arr()).ok_or("missing values")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        match v.num() {
+            Some(x) => out.push(x as f32),
+            None => return Err(format!("reply values[{i}] is not a number")),
+        }
+    }
+    Ok(out)
+}
+
+/// Minimal blocking client for the binary frame protocol: raw i64
+/// words in the spec's I/O formats, addressed by registered spec id.
+pub struct BinClient {
+    stream: TcpStream,
+}
+
+impl BinClient {
+    /// Connects; the first frame written switches the connection to
+    /// binary mode.
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<BinClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(BinClient { stream })
+    }
+
+    /// Writes one request frame without waiting (pipelining).
+    pub fn send(&mut self, spec_id: u16, raws: &[i64]) -> Result<(), String> {
+        self.stream
+            .write_all(&bin_request_frame(spec_id, raws))
+            .map_err(|e| e.to_string())
+    }
+
+    /// Reads the next reply frame. Server failures format as
+    /// `"<code>: <detail>"` like [`NetClient::evaluate`].
+    pub fn recv(&mut self) -> Result<Vec<i64>, String> {
+        let mut header = [0u8; BIN_HEADER];
+        self.stream.read_exact(&mut header).map_err(|e| e.to_string())?;
+        if header[0] != BIN_REPLY_MAGIC {
+            return Err(format!("bad reply magic 0x{:02x}", header[0]));
+        }
+        let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
+        if len == 0 {
+            return Err("empty reply frame".into());
+        }
+        let mut body = vec![0u8; len];
+        self.stream.read_exact(&mut body).map_err(|e| e.to_string())?;
+        let status = body[0];
+        let payload = &body[1..];
+        if status != 0 {
+            let code = ErrorCode::from_u8(status)
+                .map(|c| c.as_str())
+                .unwrap_or("internal");
+            let detail = String::from_utf8_lossy(payload);
             return Err(format!("{code}: {detail}"));
         }
-        Ok(resp
-            .get("values")
-            .and_then(|v| v.as_arr())
-            .ok_or("missing values")?
-            .iter()
-            .filter_map(|v| v.num())
-            .map(|v| v as f32)
+        if payload.len() % 8 != 0 {
+            return Err(format!("reply payload of {} bytes is not i64-aligned", payload.len()));
+        }
+        Ok(payload
+            .chunks_exact(8)
+            .map(|w| i64::from_le_bytes(w.try_into().unwrap()))
             .collect())
+    }
+
+    /// Evaluates one batch of raw input words, blocking for the reply.
+    pub fn evaluate_raw(&mut self, spec_id: u16, raws: &[i64]) -> Result<Vec<i64>, String> {
+        self.send(spec_id, raws)?;
+        self.recv()
     }
 }
 
@@ -301,6 +1042,7 @@ mod tests {
     use super::*;
     use crate::backend::GoldenBackend;
     use crate::coordinator::CoordinatorConfig;
+    use crate::fixed::Fx;
 
     fn start_server() -> (NetServer, Arc<Coordinator>) {
         let coord = Arc::new(
@@ -321,6 +1063,17 @@ mod tests {
             resp.get("error").and_then(|e| e.str()).is_some_and(|e| !e.is_empty()),
             "{resp:?}"
         );
+    }
+
+    /// Writes raw bytes on a fresh connection and reads reply lines —
+    /// for payloads the Json builder cannot express (invalid JSON,
+    /// oversized lines).
+    fn raw_call(addr: std::net::SocketAddr, bytes: &[u8]) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(bytes).unwrap();
+        (stream, reader)
     }
 
     #[test]
@@ -357,6 +1110,14 @@ mod tests {
         assert!(m.get("kernel_compiles").unwrap().num().unwrap() >= 6.0);
         assert!(m.get("kernel_cache_hits").is_some());
         assert_eq!(m.get("specs").unwrap().as_arr().unwrap().len(), 6);
+        // Net-layer gauges: this connection is accepted and active,
+        // and traffic has flowed both ways.
+        assert!(m.get("accepted_conns").unwrap().num().unwrap() >= 1.0, "{m:?}");
+        assert!(m.get("active_conns").unwrap().num().unwrap() >= 1.0, "{m:?}");
+        assert!(m.get("bytes_in").unwrap().num().unwrap() > 0.0, "{m:?}");
+        assert!(m.get("bytes_out").unwrap().num().unwrap() > 0.0, "{m:?}");
+        let g = server.gauges();
+        assert!(g.accepted_conns >= 1 && g.bytes_in > 0 && g.bytes_out > 0, "{g:?}");
         server.stop();
     }
 
@@ -414,6 +1175,160 @@ mod tests {
         let err = client.evaluate("pwl", &vec![0.0; 257]).unwrap_err();
         assert!(err.starts_with("bad_request:"), "{err}");
         assert!(err.contains("exceeds"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn non_numeric_values_rejected_by_index_not_dropped() {
+        // Regression: filter_map used to silently drop the "x",
+        // returning 2 outputs for 3 inputs — a misaligned reply.
+        let (server, _coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let req = Json::obj(vec![
+            ("method", Json::s("pwl")),
+            ("values", Json::arr(vec![Json::n(1.0), Json::s("x"), Json::n(2.0)])),
+        ]);
+        let resp = client.call(&req).unwrap();
+        assert_code(&resp, "bad_request");
+        assert!(
+            resp.get("error").unwrap().str().unwrap().contains("values[1]"),
+            "error must name the offending index: {resp:?}"
+        );
+        // Mixed null / bool entries are rejected the same way.
+        let req = Json::obj(vec![
+            ("method", Json::s("pwl")),
+            ("values", Json::arr(vec![Json::Null])),
+        ]);
+        let resp = client.call(&req).unwrap();
+        assert_code(&resp, "bad_request");
+        assert!(resp.get("error").unwrap().str().unwrap().contains("values[0]"), "{resp:?}");
+        // The connection stays usable after a rejected request.
+        assert_eq!(client.evaluate("pwl", &[0.0]).unwrap().len(), 1);
+        server.stop();
+    }
+
+    #[test]
+    fn nan_payload_rejected_as_bad_request() {
+        // Regression companion: a raw `[NaN]` payload (which the Json
+        // builder can no longer even express) must answer bad_request,
+        // not evaluate a silently-shortened batch.
+        let (server, _coord) = start_server();
+        let (_s, mut reader) =
+            raw_call(server.addr(), b"{\"method\":\"pwl\",\"values\":[NaN]}\n");
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim_end()).unwrap();
+        assert_code(&resp, "bad_request");
+        server.stop();
+    }
+
+    #[test]
+    fn oversized_line_answers_bad_request_and_closes() {
+        // Regression: lines used to buffer without bound. With a small
+        // frame cap, a long line (no newline yet) must answer
+        // bad_request and close the connection.
+        let coord = Arc::new(
+            Coordinator::start(
+                Arc::new(GoldenBackend::new()),
+                CoordinatorConfig::with_batch(64),
+            )
+            .unwrap(),
+        );
+        let cfg = NetConfig { max_frame_bytes: 1024, ..NetConfig::default() };
+        let server = NetServer::start_with(coord.clone(), "127.0.0.1:0", cfg).unwrap();
+        let big = vec![b'{'; 8 * 1024];
+        let (_s, mut reader) = raw_call(server.addr(), &big);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim_end()).unwrap();
+        assert_code(&resp, "bad_request");
+        assert!(resp.get("error").unwrap().str().unwrap().contains("1024"), "{resp:?}");
+        // …and the server closes the connection: next read hits EOF.
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF, got {rest:?}");
+        // A complete (newline-terminated) line over the cap is refused
+        // the same way.
+        let mut big = vec![b'x'; 4 * 1024];
+        big.push(b'\n');
+        let (_s2, mut reader2) = raw_call(server.addr(), &big);
+        let mut line = String::new();
+        reader2.read_line(&mut line).unwrap();
+        assert_code(&json::parse(line.trim_end()).unwrap(), "bad_request");
+        server.stop();
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_exact_and_oversized_frames_close() {
+        let coord = Arc::new(
+            Coordinator::start(
+                Arc::new(GoldenBackend::new()),
+                CoordinatorConfig::with_batch(64),
+            )
+            .unwrap(),
+        );
+        let cfg = NetConfig { max_frame_bytes: 4096, ..NetConfig::default() };
+        let server = NetServer::start_with(coord.clone(), "127.0.0.1:0", cfg).unwrap();
+        // Spec id 0 is the first served spec (Table I PWL).
+        let spec = coord.specs()[0];
+        let xs = [0.5f64, -0.5, 0.125, 3.75, -6.5, 0.0];
+        let raws: Vec<i64> = xs.iter().map(|&x| Fx::from_f64(x, spec.io.input).raw()).collect();
+        let mut client = BinClient::connect(server.addr()).unwrap();
+        let out = client.evaluate_raw(0, &raws).unwrap();
+        // Bit-exact vs a freshly compiled golden kernel on raw words.
+        let kernel = spec.build().compile(spec.io);
+        let mut want = vec![0i64; raws.len()];
+        kernel.eval_slice_raw(&raws, &mut want);
+        assert_eq!(out, want);
+        // Unregistered spec id → unknown_spec, connection stays open.
+        let err = client.evaluate_raw(999, &raws).unwrap_err();
+        assert!(err.starts_with("unknown_spec:"), "{err}");
+        // Out-of-range input raw → bad_request naming the index.
+        let err = client.evaluate_raw(0, &[0, i64::MAX]).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
+        assert!(err.contains("values[1]"), "{err}");
+        // Still serving after the errors.
+        assert_eq!(client.evaluate_raw(0, &raws).unwrap(), want);
+        // A frame whose header advertises an oversized body answers
+        // bad_request and closes.
+        let mut huge = vec![BIN_REQUEST_MAGIC];
+        huge.extend_from_slice(&(1u32 << 24).to_le_bytes());
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(&huge).unwrap();
+        let mut header = [0u8; BIN_HEADER];
+        raw.read_exact(&mut header).unwrap();
+        assert_eq!(header[0], BIN_REPLY_MAGIC);
+        let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
+        let mut body = vec![0u8; len];
+        raw.read_exact(&mut body).unwrap();
+        assert_eq!(ErrorCode::from_u8(body[0]), Some(ErrorCode::BadRequest));
+        assert_eq!(raw.read(&mut header).unwrap(), 0, "expected EOF after overflow");
+        server.stop();
+    }
+
+    #[test]
+    fn pipelined_requests_reply_in_order() {
+        let (server, _coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        // Write a window of requests before reading anything; each
+        // carries a distinct input so reply order is observable.
+        let xs: Vec<f32> = (0..32).map(|i| i as f32 * 0.17 - 2.5).collect();
+        for &x in &xs {
+            let req = Json::obj(vec![
+                ("method", Json::s("pwl")),
+                ("values", Json::arr(vec![Json::n(x as f64)])),
+            ]);
+            client.send(&req).unwrap();
+        }
+        for &x in &xs {
+            let resp = client.recv().unwrap();
+            let out = reply_values(&resp).unwrap();
+            assert_eq!(out.len(), 1);
+            assert!(
+                (out[0] - x.tanh()).abs() < 1e-3,
+                "reply out of order? x={x} got {}",
+                out[0]
+            );
+        }
         server.stop();
     }
 
@@ -487,6 +1402,17 @@ mod tests {
         let m = hw_client.call(&Json::obj(vec![("cmd", Json::s("metrics"))])).unwrap();
         assert_eq!(m.get("backend").and_then(|b| b.str()), Some("hw"));
         assert!(m.get("sim_cycles").unwrap().num().unwrap() > 0.0, "{m:?}");
+        // Binary framing works against the hw backend too, bit-exact
+        // with the golden coordinator's binary replies.
+        let spec = specs[0];
+        let raws: Vec<i64> =
+            xs.iter().map(|&x| Fx::from_f64(x as f64, spec.io.input).raw()).collect();
+        let mut hw_bin = BinClient::connect(hw_srv.addr()).unwrap();
+        let mut golden_bin = BinClient::connect(golden_srv.addr()).unwrap();
+        assert_eq!(
+            hw_bin.evaluate_raw(0, &raws).unwrap(),
+            golden_bin.evaluate_raw(0, &raws).unwrap()
+        );
         hw_srv.stop();
         golden_srv.stop();
     }

@@ -17,6 +17,9 @@
 //! tanh-vlsi serve   --scenario all --shards 2      scenario load harness
 //! tanh-vlsi serve   --spec pwl:step=1/32:in=s2.13 --scenario steady
 //! tanh-vlsi serve   --backend hw --scenario steady  cycle-accurate serving
+//! tanh-vlsi serve   --scenario flood --sockets 8    …replayed over 8 real TCP
+//!                                                  connections (json|binary|mixed)
+//! tanh-vlsi netcheck                               wire-protocol regression probes
 //! tanh-vlsi pipeline --method lambert --x 1.0      cycle-level datapath
 //! ```
 //!
@@ -43,8 +46,9 @@ const DEFAULT_SERVE_LOG: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serv
 use tanh_vlsi::approx::{spec, MethodId, MethodSpec, Registry};
 use tanh_vlsi::backend::{self, CostProbe, CostSource, EvalBackend};
 use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
+use tanh_vlsi::bench::sockets::{run_trace_sockets, Framing, SocketRunOptions};
 use tanh_vlsi::bench::BenchLog;
-use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, NetServer, RoutePolicy};
 use tanh_vlsi::cost::UnitLibrary;
 use tanh_vlsi::error::{measure_backend, measure_spec};
 use tanh_vlsi::explore::{
@@ -116,7 +120,15 @@ fn app() -> App {
                 .opt("route", "shard routing: rr|least-loaded", Some("rr"))
                 .opt("spec", "comma-separated specs to serve (default: Table I suite)", None)
                 .opt("out", "scenario report file", Some(DEFAULT_SERVE_LOG))
+                // 0 = classic in-process replay; N ≥ 1 starts the TCP
+                // front-end and splits the trace over N real pipelined
+                // connections (per-connection latency lands in the
+                // conn_* report columns).
+                .opt("sockets", "replay over N concurrent TCP connections (0 = in-process)", Some("0"))
+                .opt("framing", "socket wire framing: json|binary|mixed", Some("mixed"))
                 .flag("pace", "replay the scenario's open-loop schedule in real time"),
+            Command::new("netcheck", "wire-protocol regression probes against a live server")
+                .opt("batch", "compiled batch size", Some("256")),
         ],
     }
 }
@@ -161,6 +173,7 @@ fn main() {
         "explore" => cmd_explore(&parsed),
         "pipeline" => cmd_pipeline(&parsed),
         "serve" => cmd_serve(&parsed),
+        "netcheck" => cmd_netcheck(&parsed),
         "verilog" => cmd_verilog(&parsed),
         "report" => cmd_report(&parsed),
         other => Err(format!("unhandled command {other}")),
@@ -515,6 +528,8 @@ fn cmd_serve_scenarios(
         _ => Verify::Tolerance(3e-4),
     };
     let opts = RunOptions { pace: p.flag("pace"), verify, ..Default::default() };
+    let sockets: usize = p.parse_or("sockets", 0usize)?;
+    let framing = Framing::parse(p.get_or("framing", "mixed"))?;
     let served: Vec<String> = cfg.specs.iter().map(|s| s.to_string()).collect();
     println!("serving {} spec(s): {}", served.len(), served.join(", "));
     let mut log = BenchLog::new();
@@ -522,7 +537,29 @@ fn cmd_serve_scenarios(
         let trace = scenario::build_trace(name, seed, batch, scale, &cfg.specs)?;
         let coord =
             Coordinator::start(backend.clone(), cfg.clone()).map_err(|e| e.to_string())?;
-        let out = scenario::run_trace(&coord, &trace, &opts)?;
+        let shards_per_method = coord.shards_per_method();
+        // Socket mode replays the trace through the real TCP
+        // front-end (pipelined over N connections, both framings);
+        // otherwise the classic in-process driver submits directly.
+        let (out, coord) = if sockets > 0 {
+            let coord = Arc::new(coord);
+            let server = NetServer::start(coord.clone(), "127.0.0.1:0")
+                .map_err(|e| format!("starting net front-end: {e}"))?;
+            let sopts = SocketRunOptions {
+                connections: sockets,
+                framing,
+                verify,
+                pace: opts.pace,
+                ..Default::default()
+            };
+            let result = run_trace_sockets(&coord, &server, &trace, &sopts);
+            server.stop();
+            let coord = Arc::try_unwrap(coord)
+                .map_err(|_| "net front-end still holds the coordinator".to_string())?;
+            (result?, coord)
+        } else {
+            (scenario::run_trace(&coord, &trace, &opts)?, coord)
+        };
         let m = &out.metrics;
         let secs = out.wall.as_secs_f64().max(1e-9);
         println!(
@@ -531,9 +568,23 @@ fn cmd_serve_scenarios(
             out.completed,
             out.elements,
             secs,
-            coord.shards_per_method(),
+            shards_per_method,
             cfg.route,
         );
+        if let Some(net) = &out.net {
+            println!(
+                "  sockets: {} connections ({} framing), {} B in / {} B out;  \
+                 round-trip µs: p50 {:.0}  p95 {:.0}  p99 {:.0}  max {}",
+                net.connections,
+                net.framing,
+                net.bytes_in,
+                net.bytes_out,
+                net.conn_latency.p50(),
+                net.conn_latency.p95(),
+                net.conn_latency.p99(),
+                net.conn_latency.max,
+            );
+        }
         println!(
             "  throughput {:.0} req/s, {:.2} Mact/s;  {} batches ({} packed), \
              fill {:.1}%, {} backpressure retries",
@@ -573,7 +624,7 @@ fn cmd_serve_scenarios(
             ),
             Verify::Off => {}
         }
-        log.push_row(out.to_json(backend_name, coord.shards_per_method(), batch));
+        log.push_row(out.to_json(backend_name, shards_per_method, batch));
         coord.shutdown();
     }
     let stats = tanh_vlsi::approx::Registry::global().stats();
@@ -647,5 +698,83 @@ fn cmd_serve_legacy(
         m.mean_latency_us(),
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `netcheck`: fires the wire-protocol regression payloads (the bugs
+/// fixed in the nonblocking front-end rework) at a live loopback
+/// server and prints each reply — tier1.sh greps the output for the
+/// expected `bad_request` rejections. Exits nonzero if the server
+/// misbehaves at the transport level; the reply *content* judgment is
+/// left to the caller's greps so a regression shows the actual reply.
+fn cmd_netcheck(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use tanh_vlsi::backend::ErrorCode;
+    use tanh_vlsi::coordinator::{NetConfig, BIN_REPLY_MAGIC, BIN_REQUEST_MAGIC};
+
+    let batch: usize = p.parse_or("batch", 256usize)?;
+    let backend = backend::by_name("golden", batch)?;
+    let coord = Arc::new(
+        Coordinator::start(backend, CoordinatorConfig::with_batch(batch))
+            .map_err(|e| e.to_string())?,
+    );
+    // A small frame cap so the oversized-line probe stays cheap.
+    let ncfg = NetConfig { max_frame_bytes: 4096, ..NetConfig::default() };
+    let server = NetServer::start_with(coord.clone(), "127.0.0.1:0", ncfg)
+        .map_err(|e| e.to_string())?;
+    let addr = server.addr();
+
+    let line_reply = |bytes: &[u8]| -> Result<String, String> {
+        let mut s = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+        s.write_all(bytes).map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).map_err(|e| e.to_string())?;
+        if line.is_empty() {
+            return Err("server closed the connection without a reply".into());
+        }
+        Ok(line.trim_end().to_string())
+    };
+
+    // Bugfix 1: non-numeric / non-finite `values` entries must be
+    // rejected by index, never silently dropped.
+    println!(
+        "non-numeric-entry    {}",
+        line_reply(b"{\"method\":\"pwl\",\"values\":[1.0,\"x\",2.0]}\n")?
+    );
+    // Bugfix 2 companion: a bare NaN token is invalid JSON and must be
+    // refused at the parser, not smuggled in as a float.
+    println!(
+        "nan-entry            {}",
+        line_reply(b"{\"method\":\"pwl\",\"values\":[NaN]}\n")?
+    );
+    // Bugfix 3: a line over the frame cap answers bad_request instead
+    // of buffering without bound.
+    let mut big = vec![b'x'; 64 * 1024];
+    big.push(b'\n');
+    println!("oversized-line       {}", line_reply(&big)?);
+    // …and the binary path enforces the same cap from the frame header.
+    let mut s = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    let mut huge = vec![BIN_REQUEST_MAGIC];
+    huge.extend_from_slice(&(1u32 << 24).to_le_bytes());
+    s.write_all(&huge).map_err(|e| e.to_string())?;
+    let mut header = [0u8; 5];
+    s.read_exact(&mut header).map_err(|e| e.to_string())?;
+    if header[0] != BIN_REPLY_MAGIC {
+        return Err(format!("bad binary reply magic 0x{:02x}", header[0]));
+    }
+    let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).map_err(|e| e.to_string())?;
+    let code = ErrorCode::from_u8(body[0]).map(|c| c.as_str()).unwrap_or("ok");
+    println!(
+        "oversized-bin-frame  {{\"code\":\"{code}\",\"error\":\"{}\"}}",
+        String::from_utf8_lossy(&body[1..])
+    );
+
+    server.stop();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
     Ok(())
 }

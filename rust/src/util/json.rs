@@ -96,7 +96,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 9.0e15 {
+                // JSON has no NaN/Infinity: `write!("{v}")` on a
+                // non-finite f64 would emit `NaN`/`inf` and break every
+                // conforming parser (including ours). Emit `null`, the
+                // standard lossy encoding.
+                if !v.is_finite() {
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 9.0e15 {
                     let _ = write!(out, "{}", *v as i64);
                 } else {
                     let _ = write!(out, "{v}");
@@ -237,9 +243,15 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
+        // `parse::<f64>` accepts overflowing literals like `1e999` by
+        // rounding them to infinity (and would accept `NaN`/`inf`
+        // spellings if the dispatcher let them through). Non-finite
+        // values are not JSON; reject them instead of letting them
+        // leak into request handling.
         std::str::from_utf8(&self.b[start..self.pos])
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
+            .filter(|v| v.is_finite())
             .map(Json::Num)
             .ok_or_else(|| format!("bad number at byte {start}"))
     }
@@ -393,5 +405,40 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::i(42).to_string_compact(), "42");
         assert_eq!(Json::n(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // Regression: these used to render as `NaN` / `inf` / `-inf`,
+        // which no JSON parser accepts.
+        assert_eq!(Json::n(f64::NAN).to_string_compact(), "null");
+        assert_eq!(Json::n(f64::INFINITY).to_string_compact(), "null");
+        assert_eq!(Json::n(f64::NEG_INFINITY).to_string_compact(), "null");
+        // Round trip: a document carrying a non-finite number comes
+        // back as the same document with Null in its place.
+        let v = Json::obj(vec![("a", Json::n(f64::NAN)), ("b", Json::n(1.5))]);
+        let back = parse(&v.to_string_compact()).unwrap();
+        assert_eq!(back.get("a"), Some(&Json::Null));
+        assert_eq!(back.get("b").unwrap().num(), Some(1.5));
+        // Pretty output is valid too.
+        assert!(parse(&v.to_string_pretty()).is_ok());
+    }
+
+    #[test]
+    fn parser_rejects_non_finite_number_tokens() {
+        // Bare NaN/inf spellings are not JSON values.
+        assert!(parse("NaN").is_err());
+        assert!(parse("inf").is_err());
+        assert!(parse("-inf").is_err());
+        assert!(parse("Infinity").is_err());
+        assert!(parse("[NaN]").is_err());
+        assert!(parse(r#"{"values":[NaN]}"#).is_err());
+        // Overflowing literals round to infinity inside f64::parse;
+        // they must be rejected, not smuggled in as Num(inf).
+        assert!(parse("1e999").is_err());
+        assert!(parse("-1e999").is_err());
+        assert!(parse(r#"[1.0, 1e999]"#).is_err());
+        // Ordinary large-but-finite literals still parse.
+        assert_eq!(parse("1e300").unwrap().num(), Some(1e300));
     }
 }

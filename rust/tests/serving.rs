@@ -17,8 +17,12 @@ use tanh_vlsi::backend::{
 use tanh_vlsi::bench::scenario::{
     build_trace, run_trace, validate_serve_log, RunOptions, Verify, SCENARIO_NAMES,
 };
+use tanh_vlsi::bench::sockets::{run_trace_sockets, Framing, SocketRunOptions};
 use tanh_vlsi::bench::BenchLog;
-use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, RoutePolicy};
+use tanh_vlsi::coordinator::{
+    BinClient, Coordinator, CoordinatorConfig, MetricsSnapshot, NetClient, NetServer,
+    RoutePolicy,
+};
 
 fn table1() -> Vec<MethodSpec> {
     MethodSpec::table1_all()
@@ -393,4 +397,145 @@ fn flood_scenario_spreads_load_across_shards() {
     let merged = coord.metrics();
     assert_eq!(merged.latency.count, merged.requests + merged.failed_requests);
     coord.shutdown();
+}
+
+#[test]
+fn socket_soak_dozens_of_mixed_framing_connections_stay_bit_exact() {
+    // The concurrency soak for the nonblocking front-end: a zipf trace
+    // split over 24 simultaneous TCP connections — half JSON lines,
+    // half binary frames, each pipelining up to a 16-request window —
+    // with every reply verified bit-exact against freshly compiled
+    // golden kernels, and the coordinator's conservation laws exact
+    // after the run.
+    let batch = 128;
+    let specs = table1();
+    let coord = Arc::new(
+        Coordinator::start(
+            Arc::new(GoldenBackend::new()),
+            CoordinatorConfig { shards: 2, ..CoordinatorConfig::with_batch(batch) },
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let trace = build_trace("zipf", 23, batch, 0.2, &specs).unwrap();
+    assert!(trace.requests.len() >= 100, "soak needs real volume");
+    let opts = SocketRunOptions {
+        connections: 24,
+        framing: Framing::Mixed,
+        verify: Verify::Exact,
+        window: 16,
+        pace: false,
+    };
+    let out = run_trace_sockets(&coord, &server, &trace, &opts).unwrap();
+    assert_eq!(out.submitted as usize, trace.requests.len());
+    assert_eq!(out.completed, out.submitted, "requests went missing over the sockets");
+    assert_eq!(out.failed, 0);
+    assert_eq!(out.verified, out.completed, "unverified replies");
+    assert_eq!(out.elements, trace.total_elements());
+    // Net observables are real: all 24 connections open at snapshot
+    // time, traffic both ways, one round-trip sample per request.
+    let net = out.net.as_ref().expect("socket replay must carry net observables");
+    assert_eq!(net.connections, 24);
+    assert!(net.accepted_conns >= 24, "{net:?}");
+    assert_eq!(net.active_conns, 24, "{net:?}");
+    assert!(net.bytes_in > 0 && net.bytes_out > 0, "{net:?}");
+    assert_eq!(net.conn_latency.count, out.completed);
+    // Conservation through the wire: everything the sockets pushed is
+    // accounted in the coordinator's merged metrics.
+    let m = &out.metrics;
+    assert_eq!(m.submitted, out.submitted);
+    assert_eq!(m.requests, out.completed);
+    assert_eq!(m.failed_requests, 0);
+    assert_eq!(m.submitted, m.requests + m.failed_requests);
+    // The report row validates against the serve-log schema, socket
+    // columns included.
+    let mut log = BenchLog::new();
+    log.push_row(out.to_json("golden", 2, batch));
+    assert_eq!(validate_serve_log(&log.to_json()).unwrap(), 1);
+    server.stop();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn all_binary_socket_replay_matches_the_coordinator_counters() {
+    // All-binary framing over 8 connections: raw i64 words in, raw
+    // words out, zero per-request serde — still verified bit-exact
+    // (raw-word equality) against the golden kernels.
+    let batch = 128;
+    let specs = table1();
+    let coord = Arc::new(
+        Coordinator::start(Arc::new(GoldenBackend::new()), CoordinatorConfig::with_batch(batch))
+            .unwrap(),
+    );
+    let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let trace = build_trace("bursty", 5, batch, 0.1, &specs).unwrap();
+    let opts = SocketRunOptions {
+        connections: 8,
+        framing: Framing::Binary,
+        ..SocketRunOptions::default()
+    };
+    let out = run_trace_sockets(&coord, &server, &trace, &opts).unwrap();
+    assert_eq!(out.completed as usize, trace.requests.len());
+    assert_eq!(out.failed, 0);
+    assert_eq!(out.verified, out.completed);
+    assert_eq!(out.net.as_ref().unwrap().framing, "binary");
+    assert_eq!(out.metrics.requests, out.completed);
+    server.stop();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn server_stops_cleanly_with_connections_open_and_coordinator_survives() {
+    // Clean shutdown under load: stop() must join the event loop while
+    // clients (both framings) still hold open connections; the clients
+    // observe EOF, and the coordinator keeps serving afterwards.
+    let coord = Arc::new(
+        Coordinator::start(Arc::new(GoldenBackend::new()), CoordinatorConfig::with_batch(64))
+            .unwrap(),
+    );
+    let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let mut json_clients: Vec<NetClient> = (0..6)
+        .map(|_| {
+            let mut c = NetClient::connect(addr).unwrap();
+            assert_eq!(c.evaluate("pwl", &[0.5]).unwrap().len(), 1);
+            c
+        })
+        .collect();
+    let spec = coord.specs()[0];
+    let raw = tanh_vlsi::fixed::Fx::from_f64(0.5, spec.io.input).raw();
+    let mut bin_clients: Vec<BinClient> = (0..2)
+        .map(|_| {
+            let mut c = BinClient::connect(addr).unwrap();
+            assert_eq!(c.evaluate_raw(0, &[raw]).unwrap().len(), 1);
+            c
+        })
+        .collect();
+    // Stop with all 8 connections open. This must not hang.
+    server.stop();
+    // Every open client sees the connection close, not a stuck read.
+    use tanh_vlsi::util::json::Json;
+    for c in json_clients.iter_mut() {
+        let err = c
+            .call(&Json::obj(vec![("cmd", Json::s("ping"))]))
+            .unwrap_err();
+        assert!(
+            err.contains("closed") || err.to_lowercase().contains("reset")
+                || err.to_lowercase().contains("pipe"),
+            "unexpected post-stop error: {err}"
+        );
+    }
+    for c in bin_clients.iter_mut() {
+        assert!(c.evaluate_raw(0, &[raw]).is_err());
+    }
+    // The coordinator outlives its front-end.
+    let out = coord.evaluate(MethodId::Pwl, vec![0.25]).unwrap();
+    assert_eq!(out.len(), 1);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
 }
