@@ -139,6 +139,35 @@ grep -qi 'spec grammar' err.txt \
   || { echo "tier-1 FAIL: spec error does not show the grammar"; exit 1; }
 rm -f err.txt BENCH_serve_spec.json
 
+echo "== tier-1: cell-graph serve smoke (lstm scenario) =="
+# Whole LSTM cell steps served through a 2-shard coordinator via the
+# graph layer: sigmoid gates fused onto shared tanh Registry kernels by
+# the rewrite passes, every step verified by the binary bit-exact
+# against a direct golden execution AND against the f64 reference
+# within the per-gate error budget. The row schema is the same
+# BENCH_serve.json schema plus the cell columns (cell_steps,
+# gate_max_err) — validated by the binary, belt-and-braces here.
+TANH_SMOKE=1 "$BIN" serve --scenario lstm --seed 42 --shards 2 \
+  --out BENCH_serve_lstm.json
+for key in cell_steps gate_max_err; do
+  grep -q "\"$key\"" BENCH_serve_lstm.json \
+    || { echo "tier-1 FAIL: BENCH_serve_lstm.json missing key '$key'"; exit 1; }
+done
+if grep -Eq '"cell_steps": 0(,|$)' BENCH_serve_lstm.json; then
+  echo "tier-1 FAIL: lstm smoke served zero cell steps"; exit 1
+fi
+if grep -Eq '"gate_max_err": 0(\.0)?(,|$)' BENCH_serve_lstm.json; then
+  echo "tier-1 FAIL: lstm smoke reports a zero gate error observable"; exit 1
+fi
+if grep -Eq '"requests": 0(,|$)' BENCH_serve_lstm.json; then
+  echo "tier-1 FAIL: lstm smoke served zero activation requests"; exit 1
+fi
+# The flat-scenario rows must keep carrying the cell columns as zeros
+# (uniform schema): spot-check the canonical log written above.
+grep -q '"cell_steps": 0' BENCH_serve.json \
+  || { echo "tier-1 FAIL: flat scenario rows lack the cell columns"; exit 1; }
+rm -f BENCH_serve_lstm.json
+
 echo "== tier-1: hw-backend serve smoke =="
 # The same steady scenario on the cycle-accurate hw backend: every
 # reply is verified BIT-EXACT against independently compiled golden

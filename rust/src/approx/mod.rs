@@ -47,7 +47,8 @@ pub mod taylor;
 pub mod velocity;
 
 pub use compiled::CompiledKernel;
-pub use spec::{CacheStats, MethodParams, MethodSpec, Registry};
+pub use sigmoid::{sigmoid_ref, SigmoidFromTanh, SigmoidKernel};
+pub use spec::{ActKind, ActSpec, CacheStats, MethodParams, MethodSpec, Registry};
 
 use crate::cost::Inventory;
 use crate::fixed::{Fx, QFormat};
@@ -175,6 +176,45 @@ pub trait TanhApprox: Send + Sync {
     /// kernels — see [`compiled`] for the shapes and trade-offs.
     fn compile(&self, io: IoSpec) -> CompiledKernel {
         CompiledKernel::tabulate(self, io)
+    }
+}
+
+/// Boxed trait objects are themselves approximators, so code that is
+/// generic over `M: TanhApprox` (notably [`SigmoidFromTanh`]) accepts
+/// the `Box<dyn TanhApprox>` that [`MethodSpec::build`] returns.
+/// `eval_fx` and `compile` delegate explicitly so a concrete method's
+/// overrides are preserved rather than re-deriving the trait defaults.
+impl TanhApprox for Box<dyn TanhApprox> {
+    fn id(&self) -> MethodId {
+        (**self).id()
+    }
+
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+
+    fn eval_f64(&self, x: f64) -> f64 {
+        (**self).eval_f64(x)
+    }
+
+    fn eval_positive_fx(&self, x: Fx, out: QFormat) -> Fx {
+        (**self).eval_positive_fx(x, out)
+    }
+
+    fn domain_max(&self) -> f64 {
+        (**self).domain_max()
+    }
+
+    fn inventory(&self, io: IoSpec) -> Inventory {
+        (**self).inventory(io)
+    }
+
+    fn eval_fx(&self, x: Fx, out: QFormat) -> Fx {
+        (**self).eval_fx(x, out)
+    }
+
+    fn compile(&self, io: IoSpec) -> CompiledKernel {
+        (**self).compile(io)
     }
 }
 

@@ -12,6 +12,10 @@
 //! any [`TanhApprox`] into a sigmoid evaluator and is what the L2 LSTM
 //! model's gate nonlinearities lower to.
 
+use std::sync::Arc;
+
+use super::compiled::CompiledKernel;
+use super::spec::{MethodSpec, Registry};
 use super::{IoSpec, TanhApprox};
 use crate::cost::Inventory;
 use crate::fixed::{Fx, QFormat, Round};
@@ -75,6 +79,97 @@ pub fn sigmoid_ref(x: f64) -> f64 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// Cache-sharing sigmoid evaluator: the raw-word equivalent of
+/// [`SigmoidFromTanh`] whose tanh core is a *compiled kernel resolved
+/// through a [`Registry`]* instead of a fresh per-call model.
+///
+/// [`SigmoidFromTanh::eval_fx`] rebuilds the datapath model on every
+/// wrapper construction and evaluates scalar `Fx`; serving-path sigmoid
+/// (LSTM/GRU gates, the graph executor) wants the same spec-keyed
+/// sharing tanh enjoys. `resolve` maps the *sigmoid's* spec (its
+/// declared I/O formats) to the derived tanh spec the identity actually
+/// evaluates — input reinterpreted one fraction bit finer (the exact
+/// `x/2`), output one integer bit + one fraction bit wider (room for
+/// the `1 + t` increment) — and pulls that kernel from the registry, so
+/// any number of sigmoid nodes across any number of graphs share one
+/// compiled tanh table per derived spec.
+///
+/// Bit-exactness: `eval_raw` is line-for-line the integer steps of
+/// [`SigmoidFromTanh::eval_fx`] with the kernel standing in for
+/// `inner.eval_fx` (which is the compiled-kernel contract), so the two
+/// agree on every representable input — asserted by tests here and by
+/// the fused-vs-unfused graph identity in `tests/property.rs`.
+pub struct SigmoidKernel {
+    inner: Arc<CompiledKernel>,
+    inner_spec: MethodSpec,
+    out: QFormat,
+}
+
+impl SigmoidKernel {
+    /// The tanh spec the sigmoid identity evaluates for a sigmoid with
+    /// `spec`'s parameters and I/O formats. Errors if the derived
+    /// formats fail [`MethodSpec::new`] validation (e.g. a step too
+    /// fine for the halved input format).
+    pub fn derived_tanh_spec(spec: &MethodSpec) -> Result<MethodSpec, String> {
+        let io = IoSpec {
+            input: QFormat::new(
+                spec.io.input.int_bits.saturating_sub(1),
+                spec.io.input.frac_bits + 1,
+            ),
+            output: QFormat::new(1, spec.io.output.frac_bits + 1),
+        };
+        MethodSpec::new(spec.params, io, spec.domain)
+            .map_err(|e| format!("sigmoid over {spec}: derived tanh spec invalid: {e}"))
+    }
+
+    /// Resolves through the process-wide registry.
+    pub fn resolve(spec: &MethodSpec) -> Result<SigmoidKernel, String> {
+        SigmoidKernel::resolve_in(Registry::global(), spec)
+    }
+
+    /// Resolves through a specific registry (tests use private ones for
+    /// deterministic cache counters).
+    pub fn resolve_in(registry: &Registry, spec: &MethodSpec) -> Result<SigmoidKernel, String> {
+        let inner_spec = SigmoidKernel::derived_tanh_spec(spec)?;
+        Ok(SigmoidKernel {
+            inner: registry.kernel(&inner_spec),
+            inner_spec,
+            out: spec.io.output,
+        })
+    }
+
+    /// The derived tanh spec this kernel shares through the cache.
+    pub fn inner_spec(&self) -> MethodSpec {
+        self.inner_spec
+    }
+
+    /// The sigmoid's output format.
+    pub fn output(&self) -> QFormat {
+        self.out
+    }
+
+    /// σ of one raw word (in the sigmoid spec's input format).
+    #[inline]
+    pub fn eval_raw(&self, x: i64) -> i64 {
+        // x's raw word *is* x/2 in the derived input format — no shift.
+        let t_fmt = self.inner_spec.io.output;
+        let t = self.inner.eval_raw(x);
+        let raw = (1i64 << t_fmt.frac_bits) + t;
+        let shifted =
+            Round::NearestEven.shift_right(raw as i128, 1 + t_fmt.frac_bits - self.out.frac_bits)
+                as i64;
+        Fx::from_raw(shifted, self.out).raw()
+    }
+
+    /// σ over a slice of raw words.
+    pub fn eval_slice_raw(&self, input: &[i64], output: &mut [i64]) {
+        assert_eq!(input.len(), output.len());
+        for (o, &x) in output.iter_mut().zip(input) {
+            *o = self.eval_raw(x);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +222,55 @@ mod tests {
         let s = SigmoidFromTanh::new(Pwl::table1());
         let y = s.eval_fx(Fx::zero(INP), OUT);
         assert!((y.to_f64() - 0.5).abs() <= OUT.ulp());
+    }
+
+    #[test]
+    fn sigmoid_kernel_is_bit_identical_to_scalar_wrapper() {
+        // The Registry-shared compiled form must agree with the fresh
+        // per-call wrapper on every representable input — this is the
+        // contract the graph fusion pass relies on.
+        for spec_str in ["pwl:step=1/64", "pwl:step=1/16:in=s2.5:out=s.7", "lambert:terms=7"] {
+            let spec = crate::approx::MethodSpec::parse(spec_str).unwrap();
+            let reg = crate::approx::Registry::new();
+            let k = SigmoidKernel::resolve_in(&reg, &spec).unwrap();
+            let scalar = SigmoidFromTanh::new(spec.build());
+            let fmt = spec.io.input;
+            let stride = ((fmt.max_raw() / 4096) as usize).max(1);
+            for raw in (fmt.min_raw()..=fmt.max_raw()).step_by(stride) {
+                let want = scalar.eval_fx(Fx::from_raw(raw, fmt), spec.io.output).raw();
+                assert_eq!(k.eval_raw(raw), want, "{spec_str} raw {raw}");
+            }
+        }
+    }
+
+    #[test]
+    fn sigmoid_kernels_share_one_registry_kernel() {
+        let spec = crate::approx::MethodSpec::parse("pwl:step=1/64").unwrap();
+        let reg = crate::approx::Registry::new();
+        let a = SigmoidKernel::resolve_in(&reg, &spec).unwrap();
+        let b = SigmoidKernel::resolve_in(&reg, &spec).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a.inner, &b.inner), "tanh core must be cache-shared");
+        assert_eq!(reg.stats().compiles, 1);
+        assert_eq!(reg.stats().hits, 1);
+        // The derived spec halves the input and widens the output.
+        assert_eq!(a.inner_spec().io.input, QFormat::new(2, 13));
+        assert_eq!(a.inner_spec().io.output, QFormat::new(1, 16));
+        // A direct tanh user of the *derived* spec shares it too.
+        let direct = reg.kernel(&a.inner_spec());
+        assert!(std::sync::Arc::ptr_eq(&direct, &a.inner));
+    }
+
+    #[test]
+    fn sigmoid_kernel_slice_matches_scalar_calls() {
+        let spec = crate::approx::MethodSpec::parse("pwl:step=1/64").unwrap();
+        let reg = crate::approx::Registry::new();
+        let k = SigmoidKernel::resolve_in(&reg, &spec).unwrap();
+        let input: Vec<i64> = (-20..20).map(|i| i * 997).collect();
+        let mut out = vec![0i64; input.len()];
+        k.eval_slice_raw(&input, &mut out);
+        for (&x, &y) in input.iter().zip(&out) {
+            assert_eq!(y, k.eval_raw(x));
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@
 //! ```text
 //! <spec>   := <method> (':' <key>=<value>)*        e.g. pwl:step=1/64:in=s3.12:out=s.15
 //!           | table1:<A|B1|B2|C|D|E>               the six Table I rows
+//! <act>    := ['sig:'] <spec>                      sigmoid wrapper ([`ActSpec::parse`])
 //! <method> := pwl|taylor1|taylor2|catmull|velocity|lambert  (or a|b1|b2|c|d|e)
 //! keys     := step=<v>       A/B1/B2/C: step size, a reciprocal power of two (1/64 or 0.015625)
 //!             threshold=<v>  D: linear-compensation threshold, reciprocal power of two
@@ -64,7 +65,8 @@ use crate::util::table::step_str;
 /// is in the module docs).
 pub const GRAMMAR: &str = "spec grammar: <method>[:step=1/64|:threshold=1/128|:terms=7][:in=S3.12][:out=S.15][:dom=6]\n\
      methods: pwl|taylor1|taylor2|catmull|velocity|lambert (letters A|B1|B2|C|D|E); shorthand table1:<A|B1|B2|C|D|E>\n\
-     examples: pwl:step=1/64:in=s3.12:out=s.15   lambert:terms=9   table1:B2";
+     activations: prefix sig: derives sigmoid from the tanh spec via (1+tanh(x/2))/2\n\
+     examples: pwl:step=1/64:in=s3.12:out=s.15   lambert:terms=9   table1:B2   sig:pwl";
 
 /// Typed per-method tunable parameters (the paper's Fig 2 axes).
 #[derive(Clone, Copy, Debug)]
@@ -404,6 +406,77 @@ impl fmt::Display for MethodSpec {
     }
 }
 
+/// Which nonlinearity an activation spec names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Tanh,
+    /// σ(x) = (1 + tanh(x/2)) / 2, derived from the tanh spec — see
+    /// [`crate::approx::sigmoid`].
+    Sigmoid,
+}
+
+impl ActKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ActKind::Tanh => "tanh",
+            ActKind::Sigmoid => "sigmoid",
+        }
+    }
+}
+
+/// An activation design point: a nonlinearity kind over a tanh
+/// [`MethodSpec`]. The grammar extends the spec grammar with a `sig:`
+/// wrapper — `sig:pwl:step=1/64:in=s3.12:out=s.15` is the sigmoid
+/// derived (via the `(1 + tanh(x/2)) / 2` identity) from that tanh
+/// spec; an unwrapped spec is tanh itself. The I/O formats are the
+/// *activation's* formats: for sigmoid the underlying tanh kernel runs
+/// on the derived half-input/wide-output formats
+/// ([`crate::approx::SigmoidKernel::derived_tanh_spec`]), which is how
+/// gate nonlinearities share the spec-keyed [`Registry`] cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ActSpec {
+    pub kind: ActKind,
+    pub spec: MethodSpec,
+}
+
+impl ActSpec {
+    pub fn tanh(spec: MethodSpec) -> ActSpec {
+        ActSpec { kind: ActKind::Tanh, spec }
+    }
+
+    pub fn sigmoid(spec: MethodSpec) -> ActSpec {
+        ActSpec { kind: ActKind::Sigmoid, spec }
+    }
+
+    /// Parses `[sig:]<spec>` (case-insensitive wrapper; the rest is
+    /// [`MethodSpec::parse`]).
+    pub fn parse(s: &str) -> Result<ActSpec, String> {
+        let t = s.trim();
+        if t.len() >= 4 && t[..4].eq_ignore_ascii_case("sig:") {
+            Ok(ActSpec::sigmoid(MethodSpec::parse(&t[4..])?))
+        } else {
+            Ok(ActSpec::tanh(MethodSpec::parse(t)?))
+        }
+    }
+
+    /// The ideal f64 nonlinearity (not the approximation).
+    pub fn reference(&self, x: f64) -> f64 {
+        match self.kind {
+            ActKind::Tanh => x.tanh(),
+            ActKind::Sigmoid => super::sigmoid::sigmoid_ref(x),
+        }
+    }
+}
+
+impl fmt::Display for ActSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            ActKind::Tanh => write!(f, "{}", self.spec),
+            ActKind::Sigmoid => write!(f, "sig:{}", self.spec),
+        }
+    }
+}
+
 /// Parses `1/64`-style fractions or plain decimals.
 fn parse_fraction(s: &str) -> Result<f64, String> {
     if let Some((num, den)) = s.split_once('/') {
@@ -616,6 +689,30 @@ mod tests {
         };
         assert_ne!(bogus, MethodSpec::table1(MethodId::TaylorCubic));
         assert!(!set.contains(&bogus));
+    }
+
+    #[test]
+    fn act_specs_parse_and_round_trip() {
+        let tanh = ActSpec::parse("pwl:step=1/64").unwrap();
+        assert_eq!(tanh.kind, ActKind::Tanh);
+        assert_eq!(tanh.spec, MethodSpec::table1(MethodId::Pwl));
+        assert_eq!(tanh.to_string(), "pwl:step=1/64:in=S3.12:out=S.15");
+
+        let sig = ActSpec::parse("SIG:table1:A").unwrap();
+        assert_eq!(sig.kind, ActKind::Sigmoid);
+        assert_eq!(sig.spec, MethodSpec::table1(MethodId::Pwl));
+        assert_eq!(sig.to_string(), "sig:pwl:step=1/64:in=S3.12:out=S.15");
+        assert_eq!(ActSpec::parse(&sig.to_string()).unwrap(), sig);
+        assert_ne!(sig, tanh, "kind participates in equality");
+
+        // References: tanh is odd, sigmoid is its affine image.
+        assert!((sig.reference(0.0) - 0.5).abs() < 1e-15);
+        assert!((tanh.reference(1.0) - 1.0f64.tanh()).abs() < 1e-15);
+        assert!((sig.reference(2.0) - 0.5 * (1.0 + 1.0f64.tanh())).abs() < 1e-15);
+
+        // Bad inner specs surface the MethodSpec error.
+        assert!(ActSpec::parse("sig:sinh").is_err());
+        assert!(ActSpec::parse("").is_err());
     }
 
     #[test]

@@ -319,6 +319,23 @@ pub struct ScenarioOutcome {
     /// TCP connections ([`crate::bench::sockets`]); `None` for
     /// in-process replay.
     pub net: Option<SocketNet>,
+    /// Cell-graph observables when the run served LSTM cell steps
+    /// through the graph layer ([`crate::graph::run_lstm_cells`]);
+    /// `None` for flat activation traces.
+    pub cells: Option<CellStats>,
+}
+
+/// What an `lstm` scenario run observed at the cell-graph layer.
+#[derive(Clone, Copy, Debug)]
+pub struct CellStats {
+    /// Whole cell steps served end to end (each = 5 activation
+    /// requests through the coordinator plus the elementwise update).
+    pub cell_steps: u64,
+    /// Max |fixed − f64 reference| across every gate output of every
+    /// step, in value units — must sit within the cell's declared
+    /// error budget (enforced by the run itself; reported for trend
+    /// tracking).
+    pub gate_max_err: f64,
 }
 
 /// What a concurrent-socket replay observed at the net layer: the
@@ -395,6 +412,9 @@ impl ScenarioOutcome {
             ("conn_p95_us", Json::n(self.net.as_ref().map_or(0.0, |n| n.conn_latency.p95()))),
             ("conn_p99_us", Json::n(self.net.as_ref().map_or(0.0, |n| n.conn_latency.p99()))),
             ("conn_max_us", Json::i(self.net.as_ref().map_or(0, |n| n.conn_latency.max) as i64)),
+            // Cell-graph columns: zeros for flat activation traces.
+            ("cell_steps", Json::i(self.cells.map_or(0, |c| c.cell_steps) as i64)),
+            ("gate_max_err", Json::n(self.cells.map_or(0.0, |c| c.gate_max_err))),
         ])
     }
 
@@ -428,7 +448,12 @@ impl ScenarioOutcome {
 /// the concurrent-connection fan-out, the server's net gauges, and the
 /// client-observed round-trip percentiles; in-process rows fill them
 /// with `"inproc"` / zeros so every row validates against one schema.
-pub const SERVE_ROW_KEYS: [&str; 34] = [
+///
+/// The cell-graph columns (`cell_steps`, `gate_max_err`) carry the
+/// `lstm` scenario's whole-cell-step count and its worst per-gate
+/// error against the f64 reference; flat activation rows fill them
+/// with zeros.
+pub const SERVE_ROW_KEYS: [&str; 36] = [
     "name",
     "scenario",
     "seed",
@@ -463,6 +488,8 @@ pub const SERVE_ROW_KEYS: [&str; 34] = [
     "conn_p95_us",
     "conn_p99_us",
     "conn_max_us",
+    "cell_steps",
+    "gate_max_err",
 ];
 
 /// Validates a `BENCH_serve.json` document: a non-empty array whose
@@ -506,6 +533,18 @@ pub fn validate_serve_log(text: &str) -> Result<usize, String> {
                         "BENCH_serve.json row {i}: socket replay with zero {key}"
                     ));
                 }
+            }
+        }
+        // Cell-graph rows must carry a real (nonzero) error
+        // observable: a cell run whose gates were all bit-exact against
+        // the f64 reference means the reference was never consulted.
+        let steps = row.get("cell_steps").and_then(Json::num).unwrap_or(0.0);
+        if steps > 0.0 {
+            let err = row.get("gate_max_err").and_then(Json::num).unwrap_or(0.0);
+            if !(err > 0.0) {
+                return Err(format!(
+                    "BENCH_serve.json row {i}: {steps} cell steps but zero gate_max_err"
+                ));
             }
         }
     }
@@ -653,6 +692,7 @@ pub fn run_trace(
         wall: start.elapsed(),
         metrics: coord.metrics(),
         net: None,
+        cells: None,
     })
 }
 
@@ -772,6 +812,7 @@ mod tests {
             wall: Duration::from_millis(5),
             metrics: MetricsSnapshot::default(),
             net: None,
+            cells: None,
         };
         let row = outcome.to_json("golden", 2, 1024);
         let text = Json::arr(vec![row.clone()]).to_string_pretty();
@@ -836,6 +877,7 @@ mod tests {
             wall: Duration::from_secs(1),
             metrics: MetricsSnapshot::default(),
             net: None,
+            cells: None,
         };
         let text = outcome.deterministic_fields().to_string_compact();
         assert!(!text.contains("wall"), "{text}");

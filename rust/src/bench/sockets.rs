@@ -220,6 +220,7 @@ pub fn run_trace_sockets(
             bytes_out: gauges.bytes_out,
             conn_latency: latency,
         }),
+        cells: None,
     })
 }
 

@@ -1,0 +1,197 @@
+//! Canonical LSTM and GRU cell-step graphs.
+//!
+//! Both constructors take pre-activations as inputs — the matrix
+//! products `W·x + U·h + b` per gate are the accelerator's MAC array's
+//! job; what this crate serves is the nonlinear tail the paper studies:
+//! the gate activations plus the fixed-point elementwise state update.
+//!
+//! LSTM step (inputs `i_pre f_pre g_pre o_pre` in the gate spec's input
+//! format, `c_prev` in the state format):
+//!
+//! ```text
+//! i = σ(i_pre)   f = σ(f_pre)   g = tanh(g_pre)   o = σ(o_pre)
+//! c_next = f·c_prev + i·g          (state format, saturating)
+//! h_next = o·tanh(c_next)          (gate output format)
+//! ```
+//!
+//! GRU step (inputs `z_pre r_pre n_pre` plus `h_prev`):
+//!
+//! ```text
+//! z = σ(z_pre)   r = σ(r_pre)
+//! n = tanh(n_pre)                  (candidate pre-activation fed in;
+//!                                   the r·(U·h) product happens in the
+//!                                   MAC array feeding n_pre)
+//! h_next = z·h_prev + (1 − z)·n
+//! ```
+//!
+//! The `r` gate is still computed and exported — it is traffic the
+//! accelerator serves (it feeds the MAC array of the next layer) and it
+//! makes the dedup rewrite earn its keep when `z_pre == r_pre` routing
+//! collapses gates.
+
+use crate::approx::{IoSpec, MethodId, MethodSpec};
+use crate::fixed::{QFormat, Round};
+
+use super::CellGraph;
+
+/// Configuration for a cell-step graph: the gate activation spec, the
+/// cell-state format, the elementwise rounding mode, and the per-gate
+/// error budget the serving path enforces against the f64 reference.
+#[derive(Clone, Copy, Debug)]
+pub struct CellConfig {
+    /// Gate activation design point (tanh spec; sigmoids derive from it).
+    pub spec: MethodSpec,
+    /// Cell-state format (`c` for LSTM, `h` for GRU).
+    pub state_fmt: QFormat,
+    /// Rounding mode for the elementwise mul/add datapath.
+    pub round: Round,
+    /// Per-gate max |fixed − f64 reference| budget, in value units.
+    pub budget: f64,
+}
+
+impl CellConfig {
+    /// The Table I operating point: PWL row A gates (S3.12 → S.15),
+    /// S2.13 cell state, round-to-nearest-away elementwise datapath.
+    /// The 2e-3 budget is ~6× the worst-case accumulated error of this
+    /// configuration (PWL gate error ~4e-5; the dominant term is
+    /// `|σ_err(f)|·|c|max ≈ 1.2e-4` through the state update) — tight
+    /// enough that a misrouted gate or a broken rewrite (errors ≥1e-2)
+    /// trips it instantly.
+    pub fn table1_lstm() -> CellConfig {
+        CellConfig {
+            spec: MethodSpec::table1(MethodId::Pwl),
+            state_fmt: QFormat::S2_13,
+            round: Round::NearestAway,
+            budget: 2e-3,
+        }
+    }
+
+    /// Table I state/rounding around an arbitrary gate spec. The budget
+    /// is loosened to 5e-2: coarse methods (e.g. `taylor1`, Table I max
+    /// error 2.2e-2) are legitimate gate design points, and 5e-2 still
+    /// catches wiring bugs, which cost ≥ 1e-1.
+    pub fn with_spec(spec: MethodSpec) -> CellConfig {
+        CellConfig { spec, budget: 5e-2, ..CellConfig::table1_lstm() }
+    }
+
+    /// The tanh spec applied to the cell state (`tanh(c_next)`): same
+    /// method parameters and domain as the gate spec, but reading the
+    /// state format.
+    pub fn state_tanh_spec(&self) -> Result<MethodSpec, String> {
+        MethodSpec::new(
+            self.spec.params,
+            IoSpec { input: self.state_fmt, output: self.spec.io.output },
+            self.spec.domain,
+        )
+        .map_err(|e| format!("state tanh spec for {}: {e}", self.spec))
+    }
+}
+
+/// Builds the LSTM cell-step graph (unfused: sigmoid gates are
+/// `Op::Activation` sigmoid nodes; run `rewrite::optimize` to lower
+/// them onto shared tanh kernels). Outputs: `i f g o c_next h_next`.
+pub fn lstm_cell(cfg: &CellConfig) -> Result<CellGraph, String> {
+    let spec = cfg.spec;
+    let gate_out = spec.io.output;
+    let r = cfg.round;
+    let mut g = CellGraph::new("lstm");
+
+    let i_pre = g.input("i_pre", spec.io.input);
+    let f_pre = g.input("f_pre", spec.io.input);
+    let g_pre = g.input("g_pre", spec.io.input);
+    let o_pre = g.input("o_pre", spec.io.input);
+    let c_prev = g.input("c_prev", cfg.state_fmt);
+
+    let i = g.sigmoid("i", i_pre, spec);
+    let f = g.sigmoid("f", f_pre, spec);
+    let gg = g.tanh("g", g_pre, spec);
+    let o = g.sigmoid("o", o_pre, spec);
+
+    let fc = g.mul("f*c_prev", f, c_prev, cfg.state_fmt, r);
+    let ig = g.mul("i*g", i, gg, cfg.state_fmt, r);
+    let c_next = g.add("c_next", fc, ig, cfg.state_fmt, r);
+    let c_act = g.tanh("tanh_c", c_next, cfg.state_tanh_spec()?);
+    let h_next = g.mul("h_next", o, c_act, gate_out, r);
+
+    g.mark_output("i", i);
+    g.mark_output("f", f);
+    g.mark_output("g", gg);
+    g.mark_output("o", o);
+    g.mark_output("c_next", c_next);
+    g.mark_output("h_next", h_next);
+    g.validate()?;
+    Ok(g)
+}
+
+/// Builds the GRU cell-step graph. Inputs: `z_pre r_pre n_pre h_prev`;
+/// outputs: `z r n h_next`.
+pub fn gru_cell(cfg: &CellConfig) -> Result<CellGraph, String> {
+    let spec = cfg.spec;
+    let r = cfg.round;
+    let mut g = CellGraph::new("gru");
+
+    let z_pre = g.input("z_pre", spec.io.input);
+    let r_pre = g.input("r_pre", spec.io.input);
+    let n_pre = g.input("n_pre", spec.io.input);
+    let h_prev = g.input("h_prev", cfg.state_fmt);
+
+    let z = g.sigmoid("z", z_pre, spec);
+    let rr = g.sigmoid("r", r_pre, spec);
+    let n = g.tanh("n", n_pre, spec);
+
+    let zh = g.mul("z*h_prev", z, h_prev, cfg.state_fmt, r);
+    let one_minus_z = g.one_minus("1-z", z, spec.io.output, r);
+    let zn = g.mul("(1-z)*n", one_minus_z, n, cfg.state_fmt, r);
+    let h_next = g.add("h_next", zh, zn, cfg.state_fmt, r);
+
+    g.mark_output("z", z);
+    g.mark_output("r", rr);
+    g.mark_output("n", n);
+    g.mark_output("h_next", h_next);
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::ActKind;
+    use crate::graph::Op;
+
+    #[test]
+    fn lstm_graph_validates_and_names_everything() {
+        let g = lstm_cell(&CellConfig::table1_lstm()).unwrap();
+        let input_names: Vec<&str> = g.inputs().iter().map(|&(n, _, _)| n).collect();
+        assert_eq!(input_names, ["i_pre", "f_pre", "g_pre", "o_pre", "c_prev"]);
+        let out_names: Vec<&str> = g.outputs().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(out_names, ["i", "f", "g", "o", "c_next", "h_next"]);
+        // Two distinct tanh specs: the gate spec and the state-format one.
+        assert_eq!(g.activation_specs().len(), 2);
+        // Three unfused sigmoid gates.
+        let sigmoids = g
+            .nodes()
+            .iter()
+            .filter(|n| matches!(&n.op, Op::Activation { act, .. } if act.kind == ActKind::Sigmoid))
+            .count();
+        assert_eq!(sigmoids, 3);
+    }
+
+    #[test]
+    fn gru_graph_validates() {
+        let g = gru_cell(&CellConfig::table1_lstm()).unwrap();
+        let out_names: Vec<&str> = g.outputs().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(out_names, ["z", "r", "n", "h_next"]);
+        assert_eq!(g.activation_specs().len(), 1);
+    }
+
+    #[test]
+    fn state_tanh_spec_reads_the_state_format() {
+        let cfg = CellConfig::table1_lstm();
+        let s = cfg.state_tanh_spec().unwrap();
+        assert_eq!(s.io.input, cfg.state_fmt);
+        assert_eq!(s.io.output, cfg.spec.io.output);
+        assert_eq!(s.method_id(), cfg.spec.method_id());
+        assert_eq!(s.param(), cfg.spec.param());
+        assert_eq!(s.domain, cfg.spec.domain);
+    }
+}

@@ -1,0 +1,385 @@
+//! Graph execution: raw integer lanes through any activation sink,
+//! plus the f64 float reference the per-gate error budgets are measured
+//! against.
+//!
+//! The executor is a single forward scan (nodes are stored in
+//! topological order) over `Vec<i64>` lanes. Elementwise ops run
+//! locally through [`super::ops`]; activation nodes are delegated to an
+//! [`ActivationSink`], which is where the execution substrates differ:
+//!
+//! - [`FreshKernelSink`] — compiles private kernels for the graph's
+//!   specs, bypassing the [`Registry`](crate::approx::Registry): the
+//!   cache-independent golden reference (same role as
+//!   [`crate::bench::scenario::GoldenVerifier`] for flat traffic).
+//! - [`BackendSink`] — any [`EvalBackend`] (golden shares the registry
+//!   cache; hw runs the lowered pipelines).
+//! - [`CoordinatorSink`](super::serve::CoordinatorSink) — round-trips
+//!   every activation batch through the sharded coordinator, making a
+//!   cell step an end-to-end served workload.
+//!
+//! The f64 reference ([`execute_ref`]) computes every node in double
+//! precision with *declared-range saturation*: elementwise results are
+//! clamped to their node format's representable range, exactly as the
+//! saturating fixed-point datapath clamps. This keeps the error budget
+//! measuring what it should — approximation + quantization error — and
+//! not dynamic-range clipping, which is a property of the chosen
+//! `QFormat`s that fixed and reference datapaths share by design.
+
+use std::collections::HashMap;
+
+use crate::approx::{ActKind, CompiledKernel, MethodSpec, SigmoidFromTanh};
+use crate::backend::EvalBackend;
+use crate::fixed::Fx;
+
+use super::{ops, CellGraph, Op};
+
+/// Where activation nodes evaluate. `ensure` is called once per
+/// distinct tanh spec before any `eval`.
+pub trait ActivationSink {
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), String>;
+    fn eval(&self, spec: &MethodSpec, input: &[i64], output: &mut [i64]) -> Result<(), String>;
+}
+
+/// Sink over any [`EvalBackend`].
+pub struct BackendSink<'a> {
+    backend: &'a dyn EvalBackend,
+}
+
+impl<'a> BackendSink<'a> {
+    pub fn new(backend: &'a dyn EvalBackend) -> BackendSink<'a> {
+        BackendSink { backend }
+    }
+}
+
+impl ActivationSink for BackendSink<'_> {
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), String> {
+        self.backend.ensure(spec).map_err(|e| e.to_string())
+    }
+
+    fn eval(&self, spec: &MethodSpec, input: &[i64], output: &mut [i64]) -> Result<(), String> {
+        self.backend.eval_raw(spec, input, output).map(|_| ()).map_err(|e| e.to_string())
+    }
+}
+
+/// Cache-bypassing golden sink: compiles a private kernel per spec at
+/// construction, so a poisoned registry entry cannot vouch for itself.
+pub struct FreshKernelSink {
+    kernels: HashMap<MethodSpec, CompiledKernel>,
+}
+
+impl FreshKernelSink {
+    /// Compiles kernels for every tanh spec the graph references.
+    pub fn for_graph(g: &CellGraph) -> FreshKernelSink {
+        let kernels = g
+            .activation_specs()
+            .into_iter()
+            .map(|s| {
+                let k = s.build().compile(s.io);
+                (s, k)
+            })
+            .collect();
+        FreshKernelSink { kernels }
+    }
+}
+
+impl ActivationSink for FreshKernelSink {
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), String> {
+        if self.kernels.contains_key(spec) {
+            Ok(())
+        } else {
+            Err(format!("spec '{spec}' was not compiled for this graph"))
+        }
+    }
+
+    fn eval(&self, spec: &MethodSpec, input: &[i64], output: &mut [i64]) -> Result<(), String> {
+        let k = self
+            .kernels
+            .get(spec)
+            .ok_or_else(|| format!("spec '{spec}' was not compiled for this graph"))?;
+        k.eval_slice_raw(input, output);
+        Ok(())
+    }
+}
+
+fn batch_len<T>(inputs: &[(&str, Vec<T>)]) -> Result<usize, String> {
+    let batch = inputs.first().map(|(_, v)| v.len()).unwrap_or(0);
+    if batch == 0 {
+        return Err("execute: need at least one non-empty input".to_string());
+    }
+    for (name, v) in inputs {
+        if v.len() != batch {
+            return Err(format!(
+                "input '{name}' carries {} lanes, expected {batch}",
+                v.len()
+            ));
+        }
+    }
+    Ok(batch)
+}
+
+/// Executes `g` over raw lanes. `inputs` must name every `Op::Input`
+/// node (same lane count each); returns the outputs in declaration
+/// order. Unfused sigmoid activations evaluate through a fresh scalar
+/// [`SigmoidFromTanh`] per node — the pre-rewrite reference semantics
+/// that `rewrite::fuse_sigmoid` lowers onto shared tanh kernels.
+pub fn execute_raw(
+    g: &CellGraph,
+    inputs: &[(&str, Vec<i64>)],
+    sink: &dyn ActivationSink,
+) -> Result<Vec<(String, Vec<i64>)>, String> {
+    g.validate()?;
+    for spec in g.activation_specs() {
+        sink.ensure(&spec)?;
+    }
+    let batch = batch_len(inputs)?;
+    let mut lanes: Vec<Vec<i64>> = Vec::with_capacity(g.len());
+    for node in g.nodes() {
+        let vals: Vec<i64> = match &node.op {
+            Op::Input => inputs
+                .iter()
+                .find(|(n, _)| *n == node.label)
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| format!("missing input '{}'", node.label))?,
+            Op::Activation { input, act } => {
+                let x = &lanes[input.index()];
+                let mut out = vec![0i64; batch];
+                match act.kind {
+                    ActKind::Tanh => sink.eval(&act.spec, x, &mut out)?,
+                    ActKind::Sigmoid => {
+                        let sig = SigmoidFromTanh::new(act.spec.build());
+                        for (o, &raw) in out.iter_mut().zip(x) {
+                            *o = sig
+                                .eval_fx(Fx::from_raw(raw, act.spec.io.input), act.spec.io.output)
+                                .raw();
+                        }
+                    }
+                }
+                out
+            }
+            Op::Mul { a, b, round } => {
+                let (af, bf) = (g.fmt_of(*a), g.fmt_of(*b));
+                lanes[a.index()]
+                    .iter()
+                    .zip(&lanes[b.index()])
+                    .map(|(&x, &y)| ops::mul_raw(x, af, y, bf, node.fmt, *round))
+                    .collect()
+            }
+            Op::Add { a, b, round } => {
+                let (af, bf) = (g.fmt_of(*a), g.fmt_of(*b));
+                lanes[a.index()]
+                    .iter()
+                    .zip(&lanes[b.index()])
+                    .map(|(&x, &y)| ops::add_raw(x, af, y, bf, node.fmt, *round))
+                    .collect()
+            }
+            Op::OneMinus { input, round } => {
+                let src = g.fmt_of(*input);
+                lanes[input.index()]
+                    .iter()
+                    .map(|&v| ops::one_minus_raw(v, src, node.fmt, *round))
+                    .collect()
+            }
+            Op::Requant { input, round } => {
+                let src = g.fmt_of(*input);
+                lanes[input.index()]
+                    .iter()
+                    .map(|&v| ops::requant_raw(v, src, node.fmt, *round))
+                    .collect()
+            }
+            // Pure reinterpretation: same raw words, finer format.
+            Op::Halve { input } => lanes[input.index()].clone(),
+            Op::SigmoidPost { input } => {
+                let t_fmt = g.fmt_of(*input);
+                lanes[input.index()]
+                    .iter()
+                    .map(|&t| ops::sigmoid_post_raw(t, t_fmt, node.fmt))
+                    .collect()
+            }
+        };
+        lanes.push(vals);
+    }
+    Ok(g.outputs().iter().map(|(name, id)| (name.clone(), lanes[id.index()].clone())).collect())
+}
+
+/// The f64 reference datapath: exact arithmetic, ideal nonlinearities,
+/// declared-range saturation at every node (see module docs).
+pub fn execute_ref(
+    g: &CellGraph,
+    inputs: &[(&str, Vec<f64>)],
+) -> Result<Vec<(String, Vec<f64>)>, String> {
+    g.validate()?;
+    let _ = batch_len(inputs)?;
+    let mut lanes: Vec<Vec<f64>> = Vec::with_capacity(g.len());
+    for node in g.nodes() {
+        let clamp = |v: f64| v.clamp(node.fmt.min_value(), node.fmt.max_value());
+        let vals: Vec<f64> = match &node.op {
+            Op::Input => inputs
+                .iter()
+                .find(|(n, _)| *n == node.label)
+                .map(|(_, v)| v.clone())
+                .ok_or_else(|| format!("missing input '{}'", node.label))?,
+            Op::Activation { input, act } => {
+                lanes[input.index()].iter().map(|&x| clamp(act.reference(x))).collect()
+            }
+            Op::Mul { a, b, .. } => lanes[a.index()]
+                .iter()
+                .zip(&lanes[b.index()])
+                .map(|(&x, &y)| clamp(x * y))
+                .collect(),
+            Op::Add { a, b, .. } => lanes[a.index()]
+                .iter()
+                .zip(&lanes[b.index()])
+                .map(|(&x, &y)| clamp(x + y))
+                .collect(),
+            Op::OneMinus { input, .. } => {
+                lanes[input.index()].iter().map(|&v| clamp(1.0 - v)).collect()
+            }
+            Op::Requant { input, .. } => lanes[input.index()].iter().map(|&v| clamp(v)).collect(),
+            Op::Halve { input } => lanes[input.index()].iter().map(|&v| 0.5 * v).collect(),
+            Op::SigmoidPost { input } => {
+                lanes[input.index()].iter().map(|&t| clamp(0.5 * (1.0 + t))).collect()
+            }
+        };
+        lanes.push(vals);
+    }
+    Ok(g.outputs().iter().map(|(name, id)| (name.clone(), lanes[id.index()].clone())).collect())
+}
+
+/// Per-output max |fixed − reference| in value units, matched by output
+/// name. `fixed` raws are interpreted in each output's node format.
+pub fn gate_errors(
+    g: &CellGraph,
+    fixed: &[(String, Vec<i64>)],
+    reference: &[(String, Vec<f64>)],
+) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::with_capacity(fixed.len());
+    for (name, raws) in fixed {
+        let id = g
+            .output(name)
+            .ok_or_else(|| format!("'{name}' is not an output of graph '{}'", g.name()))?;
+        let ulp = g.fmt_of(id).ulp();
+        let refs = reference
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+            .ok_or_else(|| format!("reference run lacks output '{name}'"))?;
+        if refs.len() != raws.len() {
+            return Err(format!("output '{name}': lane count mismatch"));
+        }
+        let mut max_err = 0.0f64;
+        for (&r, &x) in raws.iter().zip(refs) {
+            max_err = max_err.max((r as f64 * ulp - x).abs());
+        }
+        out.push((name.clone(), max_err));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GoldenBackend;
+    use crate::graph::cell::{gru_cell, lstm_cell, CellConfig};
+    use crate::graph::rewrite::optimize;
+    use crate::util::prng::Prng;
+
+    fn lstm_inputs(g: &CellGraph, seed: u64, lanes: usize) -> Vec<(&'static str, Vec<i64>)> {
+        let cfg = CellConfig::table1_lstm();
+        let mut prng = Prng::new(seed);
+        let pre = |p: &mut Prng| -> Vec<i64> {
+            (0..lanes).map(|_| Fx::from_f64(p.f64_in(-6.0, 6.0), cfg.spec.io.input).raw()).collect()
+        };
+        let c: Vec<i64> =
+            (0..lanes).map(|_| Fx::from_f64(prng.f64_in(-1.5, 1.5), cfg.state_fmt).raw()).collect();
+        vec![
+            ("i_pre", pre(&mut prng)),
+            ("f_pre", pre(&mut prng)),
+            ("g_pre", pre(&mut prng)),
+            ("o_pre", pre(&mut prng)),
+            ("c_prev", c),
+        ]
+    }
+
+    #[test]
+    fn lstm_outputs_stay_within_budget_of_the_reference() {
+        let cfg = CellConfig::table1_lstm();
+        let g = lstm_cell(&cfg).unwrap();
+        let sink = FreshKernelSink::for_graph(&g);
+        let inputs = lstm_inputs(&g, 0xCE11, 64);
+        let fixed = execute_raw(&g, &inputs, &sink).unwrap();
+        let ref_inputs: Vec<(&str, Vec<f64>)> = inputs
+            .iter()
+            .map(|(n, v)| {
+                let fmt = g.fmt_of(g.inputs().iter().find(|(gn, _, _)| gn == n).unwrap().1);
+                (*n, v.iter().map(|&r| r as f64 * fmt.ulp()).collect())
+            })
+            .collect();
+        let reference = execute_ref(&g, &ref_inputs).unwrap();
+        let errs = gate_errors(&g, &fixed, &reference).unwrap();
+        for (name, err) in &errs {
+            assert!(*err <= cfg.budget, "gate '{name}' err {err:.3e} > budget {:.1e}", cfg.budget);
+        }
+        // Guard against comparing fixed to itself: quantization must
+        // leave a nonzero residue somewhere.
+        assert!(errs.iter().any(|(_, e)| *e > 0.0), "all gates exact: {errs:?}");
+    }
+
+    #[test]
+    fn fused_graph_is_bit_identical_through_a_backend() {
+        let cfg = CellConfig::table1_lstm();
+        let g = lstm_cell(&cfg).unwrap();
+        let (fused, stats) = optimize(&g).unwrap();
+        assert_eq!(stats.fused_sigmoids, 3);
+        let inputs = lstm_inputs(&g, 0xFACE, 48);
+        let unfused_out = execute_raw(&g, &inputs, &FreshKernelSink::for_graph(&g)).unwrap();
+        let backend = GoldenBackend::new();
+        let sink = BackendSink::new(&backend);
+        let fused_out = execute_raw(&fused, &inputs, &sink).unwrap();
+        assert_eq!(unfused_out, fused_out, "fusion must not change a single bit");
+    }
+
+    #[test]
+    fn gru_runs_and_tracks_reference() {
+        let cfg = CellConfig::table1_lstm();
+        let g = gru_cell(&cfg).unwrap();
+        let (fused, _) = optimize(&g).unwrap();
+        let mut prng = Prng::new(7);
+        let lanes = 32;
+        let pre = |p: &mut Prng| -> Vec<i64> {
+            (0..lanes).map(|_| Fx::from_f64(p.f64_in(-6.0, 6.0), cfg.spec.io.input).raw()).collect()
+        };
+        let h: Vec<i64> =
+            (0..lanes).map(|_| Fx::from_f64(prng.f64_in(-0.9, 0.9), cfg.state_fmt).raw()).collect();
+        let inputs = vec![
+            ("z_pre", pre(&mut prng)),
+            ("r_pre", pre(&mut prng)),
+            ("n_pre", pre(&mut prng)),
+            ("h_prev", h),
+        ];
+        let sink = FreshKernelSink::for_graph(&fused);
+        let fixed = execute_raw(&fused, &inputs, &sink).unwrap();
+        let ref_inputs: Vec<(&str, Vec<f64>)> = inputs
+            .iter()
+            .map(|(n, v)| {
+                let fmt = fused.fmt_of(fused.inputs().iter().find(|(gn, _, _)| gn == n).unwrap().1);
+                (*n, v.iter().map(|&r| r as f64 * fmt.ulp()).collect())
+            })
+            .collect();
+        let reference = execute_ref(&fused, &ref_inputs).unwrap();
+        for (name, err) in gate_errors(&fused, &fixed, &reference).unwrap() {
+            assert!(err <= cfg.budget, "gate '{name}' err {err:.3e}");
+        }
+    }
+
+    #[test]
+    fn missing_and_ragged_inputs_are_rejected() {
+        let g = lstm_cell(&CellConfig::table1_lstm()).unwrap();
+        let sink = FreshKernelSink::for_graph(&g);
+        let mut inputs = lstm_inputs(&g, 1, 8);
+        inputs.pop(); // drop c_prev
+        assert!(execute_raw(&g, &inputs, &sink).unwrap_err().contains("missing input"));
+        let mut ragged = lstm_inputs(&g, 1, 8);
+        ragged[2].1.pop();
+        assert!(execute_raw(&g, &ragged, &sink).unwrap_err().contains("lanes"));
+    }
+}

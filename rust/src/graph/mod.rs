@@ -1,0 +1,495 @@
+//! Typed LSTM/GRU cell dataflow graphs over `MethodSpec` kernels.
+//!
+//! The coordinator has so far served flat scalar-tanh batches; real
+//! accelerator traffic — the paper's own §I motivation — is *gate
+//! stacks*: four activations plus a handful of fixed-point elementwise
+//! ops per LSTM cell step. This module makes the cell step a
+//! first-class workload:
+//!
+//! - [`CellGraph`] — a small typed dataflow IR. Nodes are
+//!   [`MethodSpec`]-addressed activation kernels (tanh, and sigmoid via
+//!   the `σ(x) = (1 + tanh(x/2)) / 2` identity from
+//!   `approx/sigmoid.rs`) plus fixed-point elementwise ops
+//!   ([`Op::Mul`], [`Op::Add`], [`Op::Requant`], …). Every edge carries
+//!   an explicit [`QFormat`]; `nodes` is stored in topological order
+//!   (operands always precede their users), so execution is a single
+//!   forward scan and [`CellGraph::validate`] enforces acyclicity by
+//!   index ordering alone.
+//! - [`cell`] — constructors for canonical LSTM and GRU cell steps.
+//! - [`rewrite`] — functional graph-to-graph passes in the spirit of
+//!   tract's `ModelPatch`: fuse sigmoid-into-tanh (so all gates share
+//!   one compiled tanh kernel through the process-wide [`Registry`]),
+//!   merge adjacent requantizations, deduplicate identical nodes, and
+//!   prune dead ones.
+//! - [`exec`] — executes a graph over raw `i64` lanes against any
+//!   activation sink: a fresh-kernel golden sink, an [`EvalBackend`],
+//!   or the sharded coordinator ([`serve`]), with an f64 float
+//!   reference (`execute_ref`) for per-gate error budgets.
+//!
+//! [`MethodSpec`]: crate::approx::MethodSpec
+//! [`Registry`]: crate::approx::Registry
+//! [`EvalBackend`]: crate::backend::EvalBackend
+
+pub mod cell;
+pub mod exec;
+pub mod ops;
+pub mod rewrite;
+pub mod serve;
+
+pub use cell::{gru_cell, lstm_cell, CellConfig};
+pub use exec::{execute_raw, execute_ref, gate_errors, ActivationSink, BackendSink, FreshKernelSink};
+pub use rewrite::{optimize, RewriteStats};
+pub use serve::{run_lstm_cells, CellRunConfig, CellRunStats, CoordinatorSink};
+
+use std::fmt;
+
+use crate::approx::{ActKind, ActSpec, MethodSpec};
+use crate::fixed::{QFormat, Round};
+
+use self::ops::halve_fmt;
+
+/// Index of a node inside one [`CellGraph`]. Ids are dense and equal to
+/// the node's position in [`CellGraph::nodes`]; they are only
+/// meaningful within the graph that issued them.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct NodeId(pub(crate) usize);
+
+impl NodeId {
+    /// Position of this node in [`CellGraph::nodes`].
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// One dataflow operation. Operand `NodeId`s always point at
+/// lower-indexed nodes (checked by [`CellGraph::validate`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// External input; its name is the node label.
+    Input,
+    /// A `MethodSpec`-addressed nonlinearity. `act.kind` selects tanh
+    /// (served straight from the kernel cache / backend) or sigmoid
+    /// (scalar `SigmoidFromTanh` wrapper until `rewrite::fuse_sigmoid`
+    /// lowers it onto a shared tanh kernel).
+    Activation { input: NodeId, act: ActSpec },
+    /// Fixed-point multiply: exact wide product, one rounding into the
+    /// node format ([`ops::mul_raw`]).
+    Mul { a: NodeId, b: NodeId, round: Round },
+    /// Fixed-point add: operands converted to the node format, then a
+    /// saturating add ([`ops::add_raw`]).
+    Add { a: NodeId, b: NodeId, round: Round },
+    /// `1 − x` through an exact widened intermediate
+    /// ([`ops::one_minus_raw`]) — the GRU update-gate complement.
+    OneMinus { input: NodeId, round: Round },
+    /// Format conversion ([`ops::requant_raw`]).
+    Requant { input: NodeId, round: Round },
+    /// Reinterpret the raw word as `halve_fmt(input)` — an exact `x/2`
+    /// with zero hardware; the fused sigmoid's input shift.
+    Halve { input: NodeId },
+    /// The `(1 + t) / 2` sigmoid tail ([`ops::sigmoid_post_raw`]);
+    /// `input` must be a `S1.(out_frac+1)` tanh value.
+    SigmoidPost { input: NodeId },
+}
+
+impl Op {
+    /// The operand ids, in order.
+    pub fn operands(&self) -> Vec<NodeId> {
+        match *self {
+            Op::Input => Vec::new(),
+            Op::Activation { input, .. }
+            | Op::OneMinus { input, .. }
+            | Op::Requant { input, .. }
+            | Op::Halve { input }
+            | Op::SigmoidPost { input } => vec![input],
+            Op::Mul { a, b, .. } | Op::Add { a, b, .. } => vec![a, b],
+        }
+    }
+
+    /// Short op-kind name for diagnostics.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Activation { .. } => "activation",
+            Op::Mul { .. } => "mul",
+            Op::Add { .. } => "add",
+            Op::OneMinus { .. } => "one_minus",
+            Op::Requant { .. } => "requant",
+            Op::Halve { .. } => "halve",
+            Op::SigmoidPost { .. } => "sigmoid_post",
+        }
+    }
+
+    /// Same op with every operand id pushed through `map` (old index →
+    /// new id) — the rewrite passes' node transplant.
+    pub(crate) fn remap(&self, map: &[NodeId]) -> Op {
+        let m = |id: NodeId| map[id.0];
+        match *self {
+            Op::Input => Op::Input,
+            Op::Activation { input, act } => Op::Activation { input: m(input), act },
+            Op::Mul { a, b, round } => Op::Mul { a: m(a), b: m(b), round },
+            Op::Add { a, b, round } => Op::Add { a: m(a), b: m(b), round },
+            Op::OneMinus { input, round } => Op::OneMinus { input: m(input), round },
+            Op::Requant { input, round } => Op::Requant { input: m(input), round },
+            Op::Halve { input } => Op::Halve { input: m(input) },
+            Op::SigmoidPost { input } => Op::SigmoidPost { input: m(input) },
+        }
+    }
+}
+
+/// One node: an op, the [`QFormat`] of the value it produces, and a
+/// human-readable label (for inputs, the label is the input name).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub fmt: QFormat,
+    pub label: String,
+}
+
+/// A typed dataflow graph for one cell step. Build with the `input` /
+/// `tanh` / `sigmoid` / `mul` / … methods (each returns the new
+/// [`NodeId`]), name the results with [`mark_output`], then
+/// [`validate`] before executing.
+///
+/// [`mark_output`]: CellGraph::mark_output
+/// [`validate`]: CellGraph::validate
+#[derive(Clone, Debug)]
+pub struct CellGraph {
+    name: String,
+    nodes: Vec<Node>,
+    outputs: Vec<(String, NodeId)>,
+}
+
+impl CellGraph {
+    pub fn new(name: impl Into<String>) -> CellGraph {
+        CellGraph { name: name.into(), nodes: Vec::new(), outputs: Vec::new() }
+    }
+
+    pub(crate) fn push(&mut self, op: Op, fmt: QFormat, label: impl Into<String>) -> NodeId {
+        let label = label.into();
+        for d in op.operands() {
+            assert!(
+                d.0 < self.nodes.len(),
+                "operand {d} of '{label}' is not in the graph yet"
+            );
+        }
+        self.nodes.push(Node { op, fmt, label });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// External input named `name`, carrying `fmt` raw words.
+    pub fn input(&mut self, name: impl Into<String>, fmt: QFormat) -> NodeId {
+        self.push(Op::Input, fmt, name)
+    }
+
+    /// Generic activation node; the node format is the spec's output.
+    pub fn activation(&mut self, label: impl Into<String>, input: NodeId, act: ActSpec) -> NodeId {
+        self.push(Op::Activation { input, act }, act.spec.io.output, label)
+    }
+
+    pub fn tanh(&mut self, label: impl Into<String>, input: NodeId, spec: MethodSpec) -> NodeId {
+        self.activation(label, input, ActSpec::tanh(spec))
+    }
+
+    pub fn sigmoid(&mut self, label: impl Into<String>, input: NodeId, spec: MethodSpec) -> NodeId {
+        self.activation(label, input, ActSpec::sigmoid(spec))
+    }
+
+    pub fn mul(
+        &mut self,
+        label: impl Into<String>,
+        a: NodeId,
+        b: NodeId,
+        dst: QFormat,
+        round: Round,
+    ) -> NodeId {
+        self.push(Op::Mul { a, b, round }, dst, label)
+    }
+
+    pub fn add(
+        &mut self,
+        label: impl Into<String>,
+        a: NodeId,
+        b: NodeId,
+        dst: QFormat,
+        round: Round,
+    ) -> NodeId {
+        self.push(Op::Add { a, b, round }, dst, label)
+    }
+
+    pub fn one_minus(
+        &mut self,
+        label: impl Into<String>,
+        input: NodeId,
+        dst: QFormat,
+        round: Round,
+    ) -> NodeId {
+        self.push(Op::OneMinus { input, round }, dst, label)
+    }
+
+    pub fn requant(
+        &mut self,
+        label: impl Into<String>,
+        input: NodeId,
+        dst: QFormat,
+        round: Round,
+    ) -> NodeId {
+        self.push(Op::Requant { input, round }, dst, label)
+    }
+
+    /// Exact `x/2` by reinterpretation; the node format is forced to
+    /// `halve_fmt` of the operand's.
+    pub fn halve(&mut self, label: impl Into<String>, input: NodeId) -> NodeId {
+        let fmt = halve_fmt(self.fmt_of(input));
+        self.push(Op::Halve { input }, fmt, label)
+    }
+
+    /// `(1 + t) / 2` into `out`; `input` must produce `S1.(out_frac+1)`.
+    pub fn sigmoid_post(
+        &mut self,
+        label: impl Into<String>,
+        input: NodeId,
+        out: QFormat,
+    ) -> NodeId {
+        self.push(Op::SigmoidPost { input }, out, label)
+    }
+
+    /// Name `id` as a graph output.
+    pub fn mark_output(&mut self, name: impl Into<String>, id: NodeId) {
+        assert!(id.0 < self.nodes.len(), "output id {id} is not in the graph");
+        self.outputs.push((name.into(), id));
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn fmt_of(&self, id: NodeId) -> QFormat {
+        self.nodes[id.0].fmt
+    }
+
+    pub fn outputs(&self) -> &[(String, NodeId)] {
+        &self.outputs
+    }
+
+    /// The id of the output named `name`, if any.
+    pub fn output(&self, name: &str) -> Option<NodeId> {
+        self.outputs.iter().find(|(n, _)| n == name).map(|&(_, id)| id)
+    }
+
+    /// External inputs in node order: `(name, id, format)`.
+    pub fn inputs(&self) -> Vec<(&str, NodeId, QFormat)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| matches!(n.op, Op::Input))
+            .map(|(i, n)| (n.label.as_str(), NodeId(i), n.fmt))
+            .collect()
+    }
+
+    /// The distinct *tanh* `MethodSpec`s the graph needs from a backend
+    /// (a coordinator must serve exactly these). Unfused sigmoid nodes
+    /// are excluded: they evaluate through the scalar golden wrapper
+    /// until `rewrite::fuse_sigmoid` lowers them onto tanh kernels.
+    pub fn activation_specs(&self) -> Vec<MethodSpec> {
+        let mut specs: Vec<MethodSpec> = Vec::new();
+        for node in &self.nodes {
+            if let Op::Activation { act, .. } = &node.op {
+                if act.kind == ActKind::Tanh && !specs.contains(&act.spec) {
+                    specs.push(act.spec);
+                }
+            }
+        }
+        specs
+    }
+
+    /// Structural validation: topological operand order (which rules
+    /// out cycles), per-op format agreement, spec well-formedness,
+    /// unique input/output names, and at least one output.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut input_names: Vec<&str> = Vec::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            for d in node.op.operands() {
+                if d.0 >= i {
+                    return Err(format!(
+                        "node {i} '{}' depends on {d}: operands must precede users \
+                         (cycle or forward reference)",
+                        node.label
+                    ));
+                }
+            }
+            match &node.op {
+                Op::Input => {
+                    if node.label.is_empty() {
+                        return Err(format!("input node {i} has an empty name"));
+                    }
+                    if input_names.contains(&node.label.as_str()) {
+                        return Err(format!("duplicate input name '{}'", node.label));
+                    }
+                    input_names.push(node.label.as_str());
+                }
+                Op::Activation { input, act } => {
+                    MethodSpec::new(act.spec.params, act.spec.io, act.spec.domain)
+                        .map_err(|e| format!("activation '{}': bad spec: {e}", node.label))?;
+                    let got = self.fmt_of(*input);
+                    if got != act.spec.io.input {
+                        return Err(format!(
+                            "activation '{}' expects {} input, operand {input} carries {got}",
+                            node.label, act.spec.io.input
+                        ));
+                    }
+                    if node.fmt != act.spec.io.output {
+                        return Err(format!(
+                            "activation '{}' node format {} != spec output {}",
+                            node.label, node.fmt, act.spec.io.output
+                        ));
+                    }
+                }
+                Op::OneMinus { input, .. } => {
+                    let src = self.fmt_of(*input);
+                    if src.width() > 61 {
+                        return Err(format!(
+                            "one_minus '{}': operand format {src} too wide for the exact \
+                             widened complement (width {} > 61)",
+                            node.label,
+                            src.width()
+                        ));
+                    }
+                }
+                Op::Halve { input } => {
+                    let want = halve_fmt(self.fmt_of(*input));
+                    if node.fmt != want {
+                        return Err(format!(
+                            "halve '{}' must carry {want}, declared {}",
+                            node.label, node.fmt
+                        ));
+                    }
+                }
+                Op::SigmoidPost { input } => {
+                    let want = QFormat::new(1, node.fmt.frac_bits + 1);
+                    let got = self.fmt_of(*input);
+                    if got != want {
+                        return Err(format!(
+                            "sigmoid_post '{}' expects a {want} tanh operand, got {got}",
+                            node.label
+                        ));
+                    }
+                }
+                Op::Mul { .. } | Op::Add { .. } | Op::Requant { .. } => {}
+            }
+        }
+        if self.outputs.is_empty() {
+            return Err(format!("graph '{}' has no outputs", self.name));
+        }
+        let mut out_names: Vec<&str> = Vec::new();
+        for (name, id) in &self.outputs {
+            if id.0 >= self.nodes.len() {
+                return Err(format!("output '{name}' points at missing node {id}"));
+            }
+            if out_names.contains(&name.as_str()) {
+                return Err(format!("duplicate output name '{name}'"));
+            }
+            out_names.push(name.as_str());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::MethodId;
+
+    fn spec() -> MethodSpec {
+        MethodSpec::table1(MethodId::Pwl)
+    }
+
+    #[test]
+    fn builder_produces_a_valid_graph() {
+        let s = spec();
+        let mut g = CellGraph::new("t");
+        let x = g.input("x", s.io.input);
+        let t = g.tanh("t", x, s);
+        let y = g.input("y", s.io.output);
+        let p = g.mul("p", t, y, s.io.output, Round::NearestAway);
+        g.mark_output("p", p);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.inputs().len(), 2);
+        assert_eq!(g.output("p"), Some(p));
+        assert_eq!(g.fmt_of(t), s.io.output);
+        g.validate().expect("valid graph");
+        assert_eq!(g.activation_specs(), vec![s]);
+    }
+
+    #[test]
+    fn validate_rejects_format_mismatch_and_missing_output() {
+        let s = spec();
+        let mut g = CellGraph::new("bad");
+        // Feed the activation an output-format operand: input mismatch.
+        let x = g.input("x", s.io.output);
+        let t = g.push(Op::Activation { input: x, act: ActSpec::tanh(s) }, s.io.output, "t");
+        g.mark_output("t", t);
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("expects"), "unexpected error: {err}");
+
+        let g2 = CellGraph::new("empty-out");
+        // No outputs at all (and no nodes): must refuse.
+        assert!(g2.validate().unwrap_err().contains("no outputs"));
+    }
+
+    #[test]
+    fn validate_rejects_forward_references() {
+        let s = spec();
+        let mut g = CellGraph::new("fwd");
+        let x = g.input("x", s.io.input);
+        let t = g.tanh("t", x, s);
+        g.mark_output("t", t);
+        // Corrupt the activation to point at itself.
+        g.nodes[t.0].op = Op::Activation { input: t, act: ActSpec::tanh(s) };
+        let err = g.validate().unwrap_err();
+        assert!(err.contains("precede"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_names() {
+        let s = spec();
+        let mut g = CellGraph::new("dup");
+        let a = g.input("x", s.io.input);
+        let _b = g.input("x", s.io.input);
+        let t = g.tanh("t", a, s);
+        g.mark_output("t", t);
+        assert!(g.validate().unwrap_err().contains("duplicate input"));
+    }
+
+    #[test]
+    fn sigmoid_nodes_do_not_demand_backend_specs() {
+        let s = spec();
+        let mut g = CellGraph::new("sig");
+        let x = g.input("x", s.io.input);
+        let y = g.sigmoid("y", x, s);
+        g.mark_output("y", y);
+        g.validate().expect("valid");
+        assert!(g.activation_specs().is_empty());
+    }
+}

@@ -1,0 +1,154 @@
+//! Raw-word fixed-point elementwise primitives for cell graphs.
+//!
+//! The graph executor carries bare `i64` raw words between nodes (the
+//! same representation the compiled kernels and the backends speak), so
+//! the elementwise ops need raw-in/raw-out forms. Every helper here is
+//! a thin wrapper over the scalar [`crate::fixed`] reference semantics
+//! — [`fx_mul`], [`fx_add`], [`Fx::convert`] — and is therefore
+//! bit-exact against them *by construction*; `tests/property.rs` pins
+//! each one against its `Fx` reference over full-format grids anyway,
+//! including the saturation edges and every rounding mode.
+//!
+//! Two helpers have no one-call `Fx` equivalent and are documented
+//! where they differ:
+//!
+//! - [`one_minus_raw`] computes `1 − x` through a two-integer-bit-wider
+//!   intermediate. `fx_sub(Fx::one(dst), x, …)` would be wrong for
+//!   fraction-only formats: `Fx::one(S.15)` already saturates to
+//!   `1 − 2⁻¹⁵` *before* the subtract. Widening first keeps the
+//!   subtraction exact; the single rounding/clamp happens at the final
+//!   conversion, like every other op.
+//! - [`sigmoid_post_raw`] is the `(1 + t) / 2` tail of the
+//!   sigmoid-from-tanh identity, bit-identical to the corresponding
+//!   lines of [`crate::approx::sigmoid::SigmoidFromTanh::eval_fx`].
+
+use crate::fixed::{fx_add, fx_mul, Fx, QFormat, Round};
+
+/// Fixed-point multiply on raw words: exact wide product, one
+/// rounding/saturation into `dst` — precisely [`fx_mul`].
+#[inline]
+pub fn mul_raw(a: i64, a_fmt: QFormat, b: i64, b_fmt: QFormat, dst: QFormat, round: Round) -> i64 {
+    fx_mul(Fx::from_raw(a, a_fmt), Fx::from_raw(b, b_fmt), dst, round).raw()
+}
+
+/// Fixed-point add on raw words: both operands converted to `dst`,
+/// then a saturating add — precisely [`fx_add`].
+#[inline]
+pub fn add_raw(a: i64, a_fmt: QFormat, b: i64, b_fmt: QFormat, dst: QFormat, round: Round) -> i64 {
+    fx_add(Fx::from_raw(a, a_fmt), Fx::from_raw(b, b_fmt), dst, round).raw()
+}
+
+/// Format conversion on raw words — precisely [`Fx::convert`]: exact
+/// when widening, one rounding + clamp when narrowing, identity when
+/// `src == dst`.
+#[inline]
+pub fn requant_raw(v: i64, src: QFormat, dst: QFormat, round: Round) -> i64 {
+    Fx::from_raw(v, src).convert(dst, round).raw()
+}
+
+/// `1 − x` on raw words (the GRU update-gate complement). The
+/// subtraction runs in `S(int+2).(frac)` where it is exact for every
+/// representable `x` (including `x = min_raw`, whose complement exceeds
+/// one extra integer bit); the only rounding/clamp is the final
+/// conversion into `dst`. Requires `src.width() ≤ 61` (validated by
+/// [`super::CellGraph::validate`]).
+#[inline]
+pub fn one_minus_raw(v: i64, src: QFormat, dst: QFormat, round: Round) -> i64 {
+    let wide = QFormat::new(src.int_bits + 2, src.frac_bits);
+    let diff = (1i64 << src.frac_bits) - v;
+    Fx::from_raw(diff, wide).convert(dst, round).raw()
+}
+
+/// The format an `x/2` reinterpretation produces: one integer bit
+/// traded for one fraction bit, same raw word — the sigmoid identity's
+/// input shift, exact with zero hardware
+/// ([`crate::approx::sigmoid::SigmoidFromTanh::eval_fx`]).
+#[inline]
+pub fn halve_fmt(fmt: QFormat) -> QFormat {
+    QFormat::new(fmt.int_bits.saturating_sub(1), fmt.frac_bits + 1)
+}
+
+/// The `(1 + t) / 2` tail of `σ(x) = (1 + tanh(x/2)) / 2`: increment by
+/// 1.0 in `t_fmt`, then one round-to-nearest-even shift into `out` —
+/// line-for-line the integer steps of
+/// [`crate::approx::sigmoid::SigmoidFromTanh::eval_fx`], so the fused
+/// graph form is bit-identical to the scalar wrapper. Requires
+/// `t_fmt.frac_bits + 1 ≥ out.frac_bits` (holds for the validated
+/// `t_fmt = S1.(out.frac+1)` by construction).
+#[inline]
+pub fn sigmoid_post_raw(t: i64, t_fmt: QFormat, out: QFormat) -> i64 {
+    debug_assert!(t_fmt.frac_bits + 1 >= out.frac_bits);
+    let raw = (1i64 << t_fmt.frac_bits) + t;
+    let shifted =
+        Round::NearestEven.shift_right(raw as i128, 1 + t_fmt.frac_bits - out.frac_bits) as i64;
+    Fx::from_raw(shifted, out).raw()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_and_add_match_fx_spot_checks() {
+        let (a, b, dst) = (QFormat::S_15, QFormat::S2_13, QFormat::S2_13);
+        for round in [Round::Trunc, Round::NearestAway, Round::NearestEven] {
+            for (x, y) in [(0, 0), (1, -1), (12345, 6789), (a.max_raw(), b.min_raw())] {
+                let fx = fx_mul(Fx::from_raw(x, a), Fx::from_raw(y, b), dst, round);
+                assert_eq!(mul_raw(x, a, y, b, dst, round), fx.raw());
+                let fa = fx_add(Fx::from_raw(x, a), Fx::from_raw(y, b), dst, round);
+                assert_eq!(add_raw(x, a, y, b, dst, round), fa.raw());
+            }
+        }
+    }
+
+    #[test]
+    fn one_minus_is_exact_where_the_naive_fx_form_saturates() {
+        // 1 − 0 = 1.0 saturates in S.15 (to max_raw) — but only at the
+        // final conversion, not before the subtract.
+        let f = QFormat::S_15;
+        assert_eq!(one_minus_raw(0, f, f, Round::NearestAway), f.max_raw());
+        // 1 − max = one ulp: exact.
+        assert_eq!(one_minus_raw(f.max_raw(), f, f, Round::NearestAway), 1);
+        // 1 − (−1.0) = 2.0: needs the wide intermediate, clamps at dst.
+        assert_eq!(one_minus_raw(f.min_raw(), f, f, Round::NearestAway), f.max_raw());
+        // In a roomier destination the same complement is exact.
+        let d = QFormat::S2_13;
+        assert_eq!(
+            one_minus_raw(f.min_raw(), f, d, Round::NearestAway),
+            2 << d.frac_bits
+        );
+    }
+
+    #[test]
+    fn requant_round_trips_when_widening() {
+        let (narrow, wide) = (QFormat::S_7, QFormat::S3_12);
+        for v in narrow.min_raw()..=narrow.max_raw() {
+            let up = requant_raw(v, narrow, wide, Round::Trunc);
+            assert_eq!(requant_raw(up, wide, narrow, Round::Trunc), v);
+        }
+    }
+
+    #[test]
+    fn halve_fmt_preserves_the_raw_range_for_signed_int_formats() {
+        let f = QFormat::S3_12;
+        let h = halve_fmt(f);
+        assert_eq!(h, QFormat::new(2, 13));
+        assert_eq!(h.max_raw(), f.max_raw());
+        assert_eq!(h.min_raw(), f.min_raw());
+        // Reinterpreting the same raw halves the value exactly.
+        let x = Fx::from_f64(3.5, f);
+        assert_eq!(Fx::from_raw(x.raw(), h).to_f64(), 1.75);
+    }
+
+    #[test]
+    fn sigmoid_post_maps_tanh_range_into_0_1() {
+        let out = QFormat::S_15;
+        let t_fmt = QFormat::new(1, out.frac_bits + 1);
+        // t = 0 → σ = 0.5 exactly.
+        assert_eq!(sigmoid_post_raw(0, t_fmt, out), 1 << (out.frac_bits - 1));
+        // t = −1.0 → σ = 0; t = +max → σ ≈ 1 (clamped to max).
+        assert_eq!(sigmoid_post_raw(-(1 << t_fmt.frac_bits), t_fmt, out), 0);
+        let hi = sigmoid_post_raw(t_fmt.max_raw(), t_fmt, out);
+        assert_eq!(hi, out.max_raw());
+    }
+}

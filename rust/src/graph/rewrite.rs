@@ -1,0 +1,311 @@
+//! Graph rewrite passes, in the spirit of tract's `ModelPatch`:
+//! functional graph-to-graph transforms that rebuild the node list with
+//! an old-id → new-id map, so the input graph is never mutated and
+//! every pass preserves topological order by construction.
+//!
+//! The passes are semantics-preserving at the *bit* level:
+//!
+//! - [`fuse_sigmoid`] lowers each sigmoid activation onto the shared
+//!   tanh kernel path: `Halve` (exact reinterpretation) → tanh
+//!   `Activation` on the derived spec
+//!   ([`SigmoidKernel::derived_tanh_spec`]) → [`super::Op::SigmoidPost`]. The
+//!   expansion is line-for-line the integer datapath of
+//!   `SigmoidFromTanh::eval_fx`, so fused and unfused graphs are
+//!   bit-identical (asserted in `tests/property.rs`) — but the fused
+//!   form's tanh goes through the backend / [`Registry`] instead of a
+//!   fresh scalar model per node per execute.
+//! - [`merge_requants`] drops identity conversions and collapses
+//!   requant chains whose inner step is exact (widening both fields):
+//!   only there is `convert(convert(x, mid), dst)` guaranteed equal to
+//!   `convert(x, dst)` — a lossy inner step would legitimize double
+//!   rounding, so it is left alone.
+//! - [`dedup`] merges structurally identical non-input nodes (same op
+//!   after remapping, same format) — e.g. all three LSTM sigmoid gates
+//!   share one fused `Halve` shape per distinct operand, and identical
+//!   pre-activation routings collapse to one activation evaluation.
+//! - [`prune`] removes nodes no output (transitively) uses.
+//!
+//! [`optimize`] runs all four in that order and re-validates.
+//!
+//! [`SigmoidKernel::derived_tanh_spec`]: crate::approx::SigmoidKernel::derived_tanh_spec
+//! [`Registry`]: crate::approx::Registry
+
+use crate::approx::{ActKind, SigmoidKernel};
+
+use super::{CellGraph, NodeId, Op};
+
+/// What `optimize` did, for logs and tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RewriteStats {
+    /// Sigmoid activations lowered onto shared tanh kernels.
+    pub fused_sigmoids: usize,
+    /// Requant nodes dropped (identity) or collapsed (exact chains).
+    pub merged_requants: usize,
+    /// Structurally identical nodes merged.
+    pub deduped_nodes: usize,
+    /// Dead nodes removed.
+    pub pruned_nodes: usize,
+}
+
+/// Lowers every sigmoid activation onto the tanh kernel path. Returns
+/// the rewritten graph and the number of sigmoids fused.
+pub fn fuse_sigmoid(g: &CellGraph) -> Result<(CellGraph, usize), String> {
+    let mut out = CellGraph::new(g.name());
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.len());
+    let mut fused = 0;
+    for node in g.nodes() {
+        let id = match &node.op {
+            Op::Activation { input, act } if act.kind == ActKind::Sigmoid => {
+                let derived = SigmoidKernel::derived_tanh_spec(&act.spec)
+                    .map_err(|e| format!("fusing sigmoid '{}': {e}", node.label))?;
+                let x = map[input.index()];
+                let h = out.halve(format!("{}.half", node.label), x);
+                let t = out.tanh(format!("{}.tanh", node.label), h, derived);
+                fused += 1;
+                out.sigmoid_post(node.label.clone(), t, node.fmt)
+            }
+            op => out.push(op.remap(&map), node.fmt, node.label.clone()),
+        };
+        map.push(id);
+    }
+    for (name, id) in g.outputs() {
+        out.mark_output(name.clone(), map[id.index()]);
+    }
+    Ok((out, fused))
+}
+
+/// Drops identity requants and collapses requant-of-requant chains
+/// whose inner conversion is exact (destination widens both bit
+/// fields). Returns the rewritten graph and the number of requants
+/// eliminated.
+pub fn merge_requants(g: &CellGraph) -> (CellGraph, usize) {
+    let mut out = CellGraph::new(g.name());
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.len());
+    let mut merged = 0;
+    for node in g.nodes() {
+        let id = match &node.op {
+            Op::Requant { input, round } => {
+                let src = map[input.index()];
+                if out.fmt_of(src) == node.fmt {
+                    // Identity conversion: forward users to the operand.
+                    merged += 1;
+                    src
+                } else {
+                    // If the operand is itself a requant that only
+                    // widened (exact), read through it.
+                    let through = match &out.node(src).op {
+                        Op::Requant { input: grand, .. } => {
+                            let (gf, sf) = (out.fmt_of(*grand), out.fmt_of(src));
+                            let exact_inner =
+                                sf.int_bits >= gf.int_bits && sf.frac_bits >= gf.frac_bits;
+                            if exact_inner {
+                                Some(*grand)
+                            } else {
+                                None
+                            }
+                        }
+                        _ => None,
+                    };
+                    match through {
+                        Some(grand) => {
+                            merged += 1;
+                            out.push(
+                                Op::Requant { input: grand, round: *round },
+                                node.fmt,
+                                node.label.clone(),
+                            )
+                        }
+                        None => out.push(
+                            Op::Requant { input: src, round: *round },
+                            node.fmt,
+                            node.label.clone(),
+                        ),
+                    }
+                }
+            }
+            op => out.push(op.remap(&map), node.fmt, node.label.clone()),
+        };
+        map.push(id);
+    }
+    for (name, id) in g.outputs() {
+        out.mark_output(name.clone(), map[id.index()]);
+    }
+    (out, merged)
+}
+
+/// Merges structurally identical non-input nodes: same post-remap op,
+/// same format. Inputs are the external interface and never merge.
+pub fn dedup(g: &CellGraph) -> (CellGraph, usize) {
+    let mut out = CellGraph::new(g.name());
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.len());
+    let mut deduped = 0;
+    for node in g.nodes() {
+        let op = node.op.remap(&map);
+        let existing = if matches!(op, Op::Input) {
+            None
+        } else {
+            out.nodes().iter().position(|n| n.op == op && n.fmt == node.fmt)
+        };
+        let id = match existing {
+            Some(i) => {
+                deduped += 1;
+                NodeId(i)
+            }
+            None => out.push(op, node.fmt, node.label.clone()),
+        };
+        map.push(id);
+    }
+    for (name, id) in g.outputs() {
+        out.mark_output(name.clone(), map[id.index()]);
+    }
+    (out, deduped)
+}
+
+/// Removes nodes no output transitively uses (inputs are kept: they are
+/// the graph's external interface even when ignored).
+pub fn prune(g: &CellGraph) -> (CellGraph, usize) {
+    let mut live = vec![false; g.len()];
+    for (_, id) in g.outputs() {
+        live[id.index()] = true;
+    }
+    // Operands precede users, so one reverse scan propagates liveness.
+    for i in (0..g.len()).rev() {
+        if live[i] {
+            for d in g.nodes()[i].op.operands() {
+                live[d.index()] = true;
+            }
+        }
+    }
+    for (i, n) in g.nodes().iter().enumerate() {
+        if matches!(n.op, Op::Input) {
+            live[i] = true;
+        }
+    }
+    let mut out = CellGraph::new(g.name());
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.len());
+    let mut pruned = 0;
+    for (i, node) in g.nodes().iter().enumerate() {
+        if live[i] {
+            let id = out.push(node.op.remap(&map), node.fmt, node.label.clone());
+            map.push(id);
+        } else {
+            pruned += 1;
+            // Never read: only live nodes' operands are dereferenced,
+            // and operands of live nodes are live.
+            map.push(NodeId(usize::MAX));
+        }
+    }
+    for (name, id) in g.outputs() {
+        out.mark_output(name.clone(), map[id.index()]);
+    }
+    (out, pruned)
+}
+
+/// The full pass pipeline: fuse sigmoids, merge requants, dedup, prune,
+/// then re-validate the result.
+pub fn optimize(g: &CellGraph) -> Result<(CellGraph, RewriteStats), String> {
+    let (g, fused_sigmoids) = fuse_sigmoid(g)?;
+    let (g, merged_requants) = merge_requants(&g);
+    let (g, deduped_nodes) = dedup(&g);
+    let (g, pruned_nodes) = prune(&g);
+    g.validate()?;
+    Ok((g, RewriteStats { fused_sigmoids, merged_requants, deduped_nodes, pruned_nodes }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{MethodId, MethodSpec};
+    use crate::fixed::{QFormat, Round};
+    use crate::graph::cell::{lstm_cell, CellConfig};
+
+    fn spec() -> MethodSpec {
+        MethodSpec::table1(MethodId::Pwl)
+    }
+
+    #[test]
+    fn fuse_replaces_sigmoids_with_tanh_triplets() {
+        let g = lstm_cell(&CellConfig::table1_lstm()).unwrap();
+        let (f, stats) = optimize(&g).unwrap();
+        assert_eq!(stats.fused_sigmoids, 3);
+        // No sigmoid activations remain; the derived tanh spec joins
+        // the backend-facing spec set.
+        for n in f.nodes() {
+            if let Op::Activation { act, .. } = &n.op {
+                assert_eq!(act.kind, crate::approx::ActKind::Tanh, "node '{}'", n.label);
+            }
+        }
+        // gate tanh + state tanh + derived sigmoid tanh = 3 specs.
+        assert_eq!(f.activation_specs().len(), 3);
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn dedup_collapses_identical_gate_routings() {
+        // Route the same pre-activation into two sigmoid gates: after
+        // fusion + dedup they must share one halve/tanh/post chain.
+        let s = spec();
+        let mut g = CellGraph::new("twin");
+        let x = g.input("x", s.io.input);
+        let a = g.sigmoid("a", x, s);
+        let b = g.sigmoid("b", x, s);
+        g.mark_output("a", a);
+        g.mark_output("b", b);
+        let (opt, stats) = optimize(&g).unwrap();
+        assert_eq!(stats.fused_sigmoids, 2);
+        assert_eq!(stats.deduped_nodes, 3, "halve + tanh + post all merge");
+        assert_eq!(opt.output("a"), opt.output("b"));
+        assert_eq!(opt.len(), 4);
+    }
+
+    #[test]
+    fn merge_drops_identity_and_collapses_exact_chains() {
+        let s = spec();
+        let mut g = CellGraph::new("rq");
+        let x = g.input("x", QFormat::S_15);
+        // Identity requant.
+        let a = g.requant("same", x, QFormat::S_15, Round::NearestAway);
+        // Exact widening then narrowing: collapses to one conversion.
+        let w = g.requant("widen", a, QFormat::new(2, 16), Round::Trunc);
+        let n = g.requant("narrow", w, QFormat::S_7, Round::NearestAway);
+        g.mark_output("y", n);
+        let (opt, stats) = optimize(&g).unwrap();
+        assert_eq!(stats.merged_requants, 2);
+        assert_eq!(stats.pruned_nodes, 1, "the read-through widen goes dead");
+        // input + the single surviving requant.
+        assert_eq!(opt.len(), 2);
+        // Lossy inner steps must NOT collapse (double rounding).
+        let mut h = CellGraph::new("lossy");
+        let x = h.input("x", QFormat::S3_12);
+        let mid = h.requant("narrow1", x, QFormat::S_7, Round::NearestAway);
+        let fin = h.requant("narrow2", mid, QFormat::S_15, Round::NearestAway);
+        h.mark_output("y", fin);
+        let (opt2, merged) = merge_requants(&h);
+        assert_eq!(merged, 0, "lossy chains stay as-is");
+        assert_eq!(opt2.len(), 3);
+    }
+
+    #[test]
+    fn prune_removes_dead_nodes_but_keeps_inputs() {
+        let s = spec();
+        let mut g = CellGraph::new("dead");
+        let x = g.input("x", s.io.input);
+        let y = g.input("y", s.io.input);
+        let t = g.tanh("t", x, s);
+        let _dead = g.tanh("dead", y, s);
+        g.mark_output("t", t);
+        let (opt, pruned) = prune(&g);
+        assert_eq!(pruned, 1);
+        assert_eq!(opt.inputs().len(), 2, "unused inputs survive");
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn optimize_is_idempotent_on_the_lstm_graph() {
+        let g = lstm_cell(&CellConfig::table1_lstm()).unwrap();
+        let (once, _) = optimize(&g).unwrap();
+        let (twice, stats) = optimize(&once).unwrap();
+        assert_eq!(stats, RewriteStats::default(), "second pass finds nothing");
+        assert_eq!(once.len(), twice.len());
+    }
+}

@@ -1,0 +1,336 @@
+//! Cell graphs as served workloads: every activation batch of a cell
+//! step round-trips through the sharded [`Coordinator`], so graph
+//! traffic exercises admission control, batching, sharding and the
+//! spec-keyed kernel cache exactly like flat tanh traffic does — this
+//! is the `lstm` bench scenario's engine.
+//!
+//! Verification protocol (per step, per sequence, deterministic):
+//!
+//! 1. the step's served outputs are compared **bit-for-bit** against a
+//!    direct [`FreshKernelSink`] execution of the same graph on the
+//!    same raw inputs (cache-bypassing golden kernels — the coordinator
+//!    round trip must be lossless);
+//! 2. every gate output is compared against the f64 reference
+//!    ([`execute_ref`]) of the same quantized inputs, under the
+//!    [`CellConfig::budget`]. The reference reads the *served previous
+//!    state* each step, so the budget bounds per-step error without
+//!    letting float/fixed trajectories drift apart over long sequences.
+//!
+//! The carried cell state is the served `c_next`, making consecutive
+//! steps a genuine recurrence over served values.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::approx::MethodSpec;
+use crate::backend::{dequantize_output, quantize_input, ErrorCode};
+use crate::coordinator::Coordinator;
+use crate::fixed::{Fx, QFormat};
+use crate::util::prng::Prng;
+
+use super::cell::CellConfig;
+use super::exec::{execute_raw, execute_ref, ActivationSink, FreshKernelSink};
+use super::CellGraph;
+
+/// How many times one activation batch retries `Overloaded` admission
+/// before giving up (20 µs backoff per retry, matching the scenario
+/// runner's pacing).
+const OVERLOAD_RETRIES: usize = 500_000;
+
+/// [`ActivationSink`] that evaluates through a live [`Coordinator`]:
+/// raw lanes are dequantized to the f32 wire form, submitted as a
+/// normal request, and the reply is re-quantized to raw words. Both
+/// hops are exact for every format the spec layer admits (raw
+/// magnitudes < 2²⁴ round-trip through f32 losslessly), so serving
+/// adds no numeric error — asserted by the bit-identity check in
+/// [`run_lstm_cells`].
+pub struct CoordinatorSink<'a> {
+    coord: &'a Coordinator,
+    requests: AtomicU64,
+    elements: AtomicU64,
+    retries: AtomicU64,
+}
+
+impl<'a> CoordinatorSink<'a> {
+    pub fn new(coord: &'a Coordinator) -> CoordinatorSink<'a> {
+        CoordinatorSink {
+            coord,
+            requests: AtomicU64::new(0),
+            elements: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+        }
+    }
+
+    /// Requests successfully served through the coordinator.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Elements (lanes × activations) served.
+    pub fn elements(&self) -> u64 {
+        self.elements.load(Ordering::Relaxed)
+    }
+
+    /// Overloaded admissions that were retried.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+}
+
+impl ActivationSink for CoordinatorSink<'_> {
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), String> {
+        if self.coord.specs().contains(spec) {
+            Ok(())
+        } else {
+            Err(format!(
+                "coordinator does not serve spec '{spec}' (serving: {})",
+                self.coord
+                    .specs()
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+
+    fn eval(&self, spec: &MethodSpec, input: &[i64], output: &mut [i64]) -> Result<(), String> {
+        let values = dequantize_output(input, spec.io.input);
+        let mut reply = None;
+        for _ in 0..OVERLOAD_RETRIES {
+            match self.coord.evaluate_spec(spec, values.clone()) {
+                Ok(v) => {
+                    reply = Some(v);
+                    break;
+                }
+                Err(e) if e.code == ErrorCode::Overloaded => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                Err(e) => return Err(format!("serving '{spec}': {e}")),
+            }
+        }
+        let reply = reply.ok_or_else(|| format!("serving '{spec}': overload retry budget spent"))?;
+        if reply.len() != input.len() {
+            return Err(format!(
+                "serving '{spec}': reply carries {} lanes, expected {}",
+                reply.len(),
+                input.len()
+            ));
+        }
+        output.copy_from_slice(&quantize_input(&reply, spec.io.output));
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.elements.fetch_add(input.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Shape of an `lstm` scenario run: `sequences` independent cell-state
+/// recurrences, each stepped `steps` times over `lanes` parallel cells.
+#[derive(Clone, Copy, Debug)]
+pub struct CellRunConfig {
+    pub sequences: usize,
+    pub steps: usize,
+    pub lanes: usize,
+    pub seed: u64,
+}
+
+impl CellRunConfig {
+    /// The bench-default shape, scaled like the flat scenarios: `scale`
+    /// multiplies the step count (0.1 in smoke runs, 1.0 in full runs).
+    pub fn scaled(seed: u64, scale: f64) -> CellRunConfig {
+        CellRunConfig {
+            sequences: 4,
+            steps: (((32.0 * scale) as usize).max(1)).min(10_000),
+            lanes: 64,
+            seed,
+        }
+    }
+}
+
+/// Aggregated result of [`run_lstm_cells`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CellRunStats {
+    /// Cell steps executed (sequences × steps).
+    pub cell_steps: u64,
+    /// Steps that passed both verification layers (== cell_steps on
+    /// success; the run errors out otherwise).
+    pub verified: u64,
+    /// Max |served − f64 reference| over every gate, lane and step.
+    pub gate_max_err: f64,
+    /// Coordinator requests issued (activation batches).
+    pub requests: u64,
+    /// Elements served (lanes × activations).
+    pub elements: u64,
+    /// Overloaded admissions retried.
+    pub retries: u64,
+}
+
+/// Drives `run.sequences` concurrent LSTM recurrences through the
+/// coordinator, verifying every step (see module docs). The
+/// coordinator must be serving `graph.activation_specs()`; pass the
+/// *rewritten* graph ([`super::rewrite::optimize`]) so sigmoid gates
+/// ride the shared tanh kernels.
+pub fn run_lstm_cells(
+    coord: &Coordinator,
+    cfg: &CellConfig,
+    graph: &CellGraph,
+    run: &CellRunConfig,
+) -> Result<CellRunStats, String> {
+    graph.validate()?;
+    if run.lanes == 0 || run.steps == 0 || run.sequences == 0 {
+        return Err("lstm run needs nonzero sequences, steps and lanes".to_string());
+    }
+    let sink = CoordinatorSink::new(coord);
+    let fresh = FreshKernelSink::for_graph(graph);
+    let in_fmts: HashMap<&str, QFormat> =
+        graph.inputs().into_iter().map(|(n, _, f)| (n, f)).collect();
+    for name in ["i_pre", "f_pre", "g_pre", "o_pre", "c_prev"] {
+        if !in_fmts.contains_key(name) {
+            return Err(format!("graph '{}' lacks LSTM input '{name}'", graph.name()));
+        }
+    }
+    if graph.output("c_next").is_none() {
+        return Err(format!("graph '{}' lacks a c_next output", graph.name()));
+    }
+    let pre_fmt = in_fmts["i_pre"];
+
+    let per_seq: Vec<Result<(u64, f64), String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..run.sequences)
+            .map(|t| {
+                let (sink, fresh, in_fmts) = (&sink, &fresh, &in_fmts);
+                scope.spawn(move || -> Result<(u64, f64), String> {
+                    let mut prng = Prng::new(
+                        run.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(t as u64 + 1),
+                    );
+                    let mut c: Vec<i64> = vec![0; run.lanes];
+                    let mut max_err = 0.0f64;
+                    let mut steps = 0u64;
+                    for _ in 0..run.steps {
+                        let draw = |p: &mut Prng| -> Vec<i64> {
+                            (0..run.lanes)
+                                .map(|_| Fx::from_f64(p.f64_in(-6.0, 6.0), pre_fmt).raw())
+                                .collect()
+                        };
+                        let inputs: Vec<(&str, Vec<i64>)> = vec![
+                            ("i_pre", draw(&mut prng)),
+                            ("f_pre", draw(&mut prng)),
+                            ("g_pre", draw(&mut prng)),
+                            ("o_pre", draw(&mut prng)),
+                            ("c_prev", c.clone()),
+                        ];
+                        let served = execute_raw(graph, &inputs, sink)?;
+                        let direct = execute_raw(graph, &inputs, fresh)?;
+                        for ((name, a), (_, b)) in served.iter().zip(&direct) {
+                            if a != b {
+                                return Err(format!(
+                                    "served output '{name}' diverges bit-wise from the \
+                                     direct golden execution"
+                                ));
+                            }
+                        }
+                        let ref_inputs: Vec<(&str, Vec<f64>)> = inputs
+                            .iter()
+                            .map(|(n, v)| {
+                                let ulp = in_fmts[n].ulp();
+                                (*n, v.iter().map(|&r| r as f64 * ulp).collect())
+                            })
+                            .collect();
+                        let reference = execute_ref(graph, &ref_inputs)?;
+                        for ((name, raws), (_, refs)) in served.iter().zip(&reference) {
+                            let ulp = graph.fmt_of(graph.output(name).unwrap()).ulp();
+                            for (&r, &x) in raws.iter().zip(refs) {
+                                let err = (r as f64 * ulp - x).abs();
+                                if err > cfg.budget {
+                                    return Err(format!(
+                                        "gate '{name}' err {err:.3e} exceeds budget {:.1e} \
+                                         (seq {t}, step {steps})",
+                                        cfg.budget
+                                    ));
+                                }
+                                max_err = max_err.max(err);
+                            }
+                        }
+                        c = served
+                            .iter()
+                            .find(|(n, _)| n.as_str() == "c_next")
+                            .map(|(_, v)| v.clone())
+                            .expect("checked above");
+                        steps += 1;
+                    }
+                    Ok((steps, max_err))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err("cell sequence worker panicked".into())))
+            .collect()
+    });
+
+    let mut stats = CellRunStats {
+        requests: sink.requests(),
+        elements: sink.elements(),
+        retries: sink.retries(),
+        ..CellRunStats::default()
+    };
+    for r in per_seq {
+        let (steps, err) = r?;
+        stats.cell_steps += steps;
+        stats.verified += steps;
+        stats.gate_max_err = stats.gate_max_err.max(err);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, RoutePolicy};
+    use crate::graph::cell::lstm_cell;
+    use crate::graph::rewrite::optimize;
+
+    #[test]
+    fn lstm_cells_serve_end_to_end_through_the_coordinator() {
+        let cfg = CellConfig::table1_lstm();
+        let graph = lstm_cell(&cfg).unwrap();
+        let (fused, stats) = optimize(&graph).unwrap();
+        assert_eq!(stats.fused_sigmoids, 3);
+        let backend = crate::backend::by_name("golden", 256).unwrap();
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                shards: 2,
+                route: RoutePolicy::RoundRobin,
+                specs: fused.activation_specs(),
+                ..CoordinatorConfig::default()
+            },
+        )
+        .unwrap();
+        let run = CellRunConfig { sequences: 2, steps: 3, lanes: 16, seed: 0xC0FFEE };
+        let out = run_lstm_cells(&coord, &cfg, &fused, &run).unwrap();
+        assert_eq!(out.cell_steps, 6);
+        assert_eq!(out.verified, 6);
+        assert!(out.gate_max_err > 0.0 && out.gate_max_err <= cfg.budget);
+        // 5 activation nodes per step (i/f/o sigmoid-tanh, g, tanh_c).
+        assert_eq!(out.requests, 6 * 5);
+        assert_eq!(out.elements, 6 * 5 * 16);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unserved_specs_are_reported_not_mangled() {
+        let cfg = CellConfig::table1_lstm();
+        let graph = lstm_cell(&cfg).unwrap();
+        let (fused, _) = optimize(&graph).unwrap();
+        // Coordinator serving only the default Table I specs: the
+        // derived sigmoid/state specs are missing.
+        let backend = crate::backend::by_name("golden", 256).unwrap();
+        let coord = Coordinator::start(backend, CoordinatorConfig::default()).unwrap();
+        let run = CellRunConfig { sequences: 1, steps: 1, lanes: 4, seed: 1 };
+        let err = run_lstm_cells(&coord, &cfg, &fused, &run).unwrap_err();
+        assert!(err.contains("does not serve"), "{err}");
+        coord.shutdown();
+    }
+}

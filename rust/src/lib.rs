@@ -73,6 +73,16 @@
 //!   batch fill rate, failure-kind counters and simulated-cycle
 //!   aggregation, and backpressure; workers execute on any
 //!   [`backend::EvalBackend`], ensured per served spec at startup.
+//! - [`graph`] — typed LSTM/GRU cell dataflow graphs over specs: a
+//!   small IR ([`graph::CellGraph`]) of `MethodSpec`-addressed
+//!   activations (tanh, and sigmoid via `σ(x) = (1 + tanh(x/2))/2`)
+//!   plus fixed-point elementwise ops with explicit `QFormat` edges;
+//!   validation, tract-`ModelPatch`-style rewrite passes
+//!   (sigmoid-into-tanh fusion onto shared Registry kernels, requant
+//!   merging, dedup, prune — all bit-preserving), execution over any
+//!   backend or the live coordinator ([`graph::run_lstm_cells`]), and
+//!   f64-reference per-gate error budgets. Drives the `lstm` serve
+//!   scenario (see EXPERIMENTS.md §Cell graphs).
 //! - [`explore`] — design-space exploration / Pareto frontier over
 //!   specs (method × parameter × output format), every frontier row
 //!   addressable by its spec string. Cost columns resolve through
@@ -116,6 +126,7 @@ pub mod cost;
 pub mod error;
 pub mod explore;
 pub mod fixed;
+pub mod graph;
 pub mod hw;
 pub mod report;
 pub mod runtime;

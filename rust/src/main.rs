@@ -19,6 +19,8 @@
 //! tanh-vlsi serve   --backend hw --scenario steady  cycle-accurate serving
 //! tanh-vlsi serve   --scenario flood --sockets 8    …replayed over 8 real TCP
 //!                                                  connections (json|binary|mixed)
+//! tanh-vlsi serve   --scenario lstm                whole LSTM cell steps via the
+//!                                                  graph layer (fused sigmoids)
 //! tanh-vlsi netcheck                               wire-protocol regression probes
 //! tanh-vlsi pipeline --method lambert --x 1.0      cycle-level datapath
 //! ```
@@ -55,6 +57,7 @@ use tanh_vlsi::explore::{
     explore_specs_probed, pareto_frontier_by, sweep_specs, ExploreConfig, Objective,
 };
 use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::graph::{lstm_cell, optimize, run_lstm_cells, CellConfig, CellRunConfig};
 use tanh_vlsi::hw::{pipeline_for, table1_pipeline};
 use tanh_vlsi::report;
 use tanh_vlsi::util::cli::{App, Command};
@@ -113,7 +116,7 @@ fn app() -> App {
                 // backend_unavailable otherwise).
                 .opt("backend", "golden|hw|pjrt", Some("golden"))
                 .opt("batch", "compiled batch size", Some("1024"))
-                .opt("scenario", "steady|bursty|zipf|flood|maxbatch|all (deterministic load)", None)
+                .opt("scenario", "steady|bursty|zipf|flood|maxbatch|lstm|all (deterministic load)", None)
                 .opt("seed", "scenario PRNG seed", Some("42"))
                 .opt("scale", "scenario request-count multiplier (TANH_SMOKE=1 default: 0.1)", Some("1.0"))
                 .opt("shards", "worker shards per method", Some("2"))
@@ -534,6 +537,14 @@ fn cmd_serve_scenarios(
     println!("serving {} spec(s): {}", served.len(), served.join(", "));
     let mut log = BenchLog::new();
     for name in names {
+        // The lstm scenario serves whole cell steps through the graph
+        // layer rather than a flat activation trace — its own driver
+        // (a cell graph per request mix makes no sense as a Trace).
+        if name == "lstm" {
+            let row = run_lstm_scenario(p, &backend, backend_name, batch, &cfg, seed, scale)?;
+            log.push_row(row);
+            continue;
+        }
         let trace = scenario::build_trace(name, seed, batch, scale, &cfg.specs)?;
         let coord =
             Coordinator::start(backend.clone(), cfg.clone()).map_err(|e| e.to_string())?;
@@ -639,6 +650,91 @@ fn cmd_serve_scenarios(
     let rows = scenario::validate_serve_log(&text)?;
     println!("\nwrote {rows} scenario row(s) to {out_path} (schema OK)");
     Ok(())
+}
+
+/// The `lstm` scenario: whole LSTM cell steps served through the
+/// coordinator via the graph layer. The cell graph is rewritten
+/// (sigmoid-into-tanh fusion, requant merge, dedup, prune) so all gate
+/// nonlinearities ride shared Registry tanh kernels; every step is
+/// verified bit-exactly against a direct golden execution and against
+/// the f64 reference under the cell's per-gate error budget.
+#[allow(clippy::too_many_arguments)]
+fn run_lstm_scenario(
+    p: &tanh_vlsi::util::cli::Parsed,
+    backend: &Arc<dyn EvalBackend>,
+    backend_name: &str,
+    batch: usize,
+    cfg: &CoordinatorConfig,
+    seed: u64,
+    scale: f64,
+) -> Result<tanh_vlsi::util::json::Json, String> {
+    // --spec selects the gate design point (first spec if several were
+    // given); the default is the Table I PWL operating point.
+    let cell_cfg = match p.get("spec") {
+        Some(_) => CellConfig::with_spec(cfg.specs[0]),
+        None => CellConfig::table1_lstm(),
+    };
+    let graph = lstm_cell(&cell_cfg)?;
+    let (fused, rw) = optimize(&graph)?;
+    println!(
+        "scenario lstm     seed {seed}: gate spec {} (budget {:.1e}); rewrites: \
+         {} sigmoids fused, {} requants merged, {} deduped, {} pruned",
+        cell_cfg.spec, cell_cfg.budget, rw.fused_sigmoids, rw.merged_requants,
+        rw.deduped_nodes, rw.pruned_nodes,
+    );
+    let mut coord_cfg = cfg.clone();
+    coord_cfg.specs = fused.activation_specs();
+    let coord =
+        Coordinator::start(backend.clone(), coord_cfg).map_err(|e| e.to_string())?;
+    let shards_per_method = coord.shards_per_method();
+    let mut run = CellRunConfig::scaled(seed, scale);
+    run.lanes = run.lanes.min(batch.max(1));
+    let start = std::time::Instant::now();
+    let stats = run_lstm_cells(&coord, &cell_cfg, &fused, &run)?;
+    let wall = start.elapsed();
+    let out = scenario::ScenarioOutcome {
+        name: "lstm".into(),
+        seed,
+        specs: fused.activation_specs().iter().map(|s| s.to_string()).collect(),
+        submitted: stats.requests,
+        completed: stats.requests,
+        failed: 0,
+        retries: stats.retries,
+        elements: stats.elements,
+        verified: stats.requests,
+        wall,
+        metrics: coord.metrics(),
+        net: None,
+        cells: Some(scenario::CellStats {
+            cell_steps: stats.cell_steps,
+            gate_max_err: stats.gate_max_err,
+        }),
+    };
+    let secs = wall.as_secs_f64().max(1e-9);
+    println!(
+        "  {} cell steps ({} sequences × {} steps × {} lanes) in {:.3}s on \
+         '{backend_name}' × {} shards/method: {:.0} steps/s, {:.2} Mact/s",
+        stats.cell_steps,
+        run.sequences,
+        run.steps,
+        run.lanes,
+        secs,
+        shards_per_method,
+        stats.cell_steps as f64 / secs,
+        stats.elements as f64 / secs / 1e6,
+    );
+    println!(
+        "  {} activation requests served ({} elements, {} backpressure retries); \
+         every step bit-exact vs direct golden execution",
+        stats.requests, stats.elements, stats.retries,
+    );
+    println!(
+        "  per-gate max |served − f64 reference| = {:.3e} (budget {:.1e})",
+        stats.gate_max_err, cell_cfg.budget,
+    );
+    let row = out.to_json(backend_name, shards_per_method, batch);
+    coord.shutdown();
+    Ok(row)
 }
 
 /// Legacy mode: `--requests N` windowed synthetic load.

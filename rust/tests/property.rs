@@ -16,7 +16,7 @@ use tanh_vlsi::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, PendingBatch, Request, RequestErrorKind,
 };
 use tanh_vlsi::error::{measure_with_threads, InputGrid};
-use tanh_vlsi::fixed::{Fx, QFormat};
+use tanh_vlsi::fixed::{fx_add, fx_mul, Fx, QFormat, Round};
 use tanh_vlsi::hw::table1_pipeline;
 use tanh_vlsi::util::proptest::{prop_check, Prng};
 
@@ -853,4 +853,185 @@ fn coordinator_backpressure_rejects_when_flooded() {
     }
     assert!(coord.metrics().rejected as usize >= rejected);
     coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Cell-graph elementwise ops: bit-exact against an independent scalar
+// reference over full-format grids.
+// ---------------------------------------------------------------------------
+
+/// Independent rounding reference: real-valued result scaled into the
+/// destination's raw grid, rounded per mode, clamped. Built from f64
+/// arithmetic (exact for every grid below — values are dyadic rationals
+/// far inside 2^53) rather than `Round::shift_right`, so it would catch
+/// a bug in the bit-twiddled shifts too.
+fn quantize_ref(value: f64, dst: QFormat, round: Round) -> i64 {
+    let scaled = value * (1i64 << dst.frac_bits) as f64;
+    let rounded = match round {
+        Round::Trunc => scaled.floor(),
+        Round::NearestAway => scaled.round(),
+        Round::NearestEven => {
+            let f = scaled.floor();
+            let d = scaled - f;
+            if d < 0.5 {
+                f
+            } else if d > 0.5 {
+                f + 1.0
+            } else if (f as i64) % 2 == 0 {
+                f
+            } else {
+                f + 1.0
+            }
+        }
+    };
+    (rounded as i64).clamp(dst.min_raw(), dst.max_raw())
+}
+
+const ROUNDS: [Round; 3] = [Round::Trunc, Round::NearestAway, Round::NearestEven];
+
+#[test]
+fn graph_mul_bit_exact_on_full_grids() {
+    // Exact wide product, single rounding into dst: every (a, b) pair
+    // of the full S2.5 × S.7 grids, every mode, three destinations
+    // (narrowing-with-ties, saturating, and exact pass-through).
+    use tanh_vlsi::graph::ops::mul_raw;
+    let (af, bf) = (QFormat::S2_5, QFormat::S_7);
+    for dst in [QFormat::S_7, QFormat::S2_5, QFormat::S3_12] {
+        for round in ROUNDS {
+            for a in af.min_raw()..=af.max_raw() {
+                for b in bf.min_raw()..=bf.max_raw() {
+                    let product = (a as f64 * af.ulp()) * (b as f64 * bf.ulp());
+                    let want = quantize_ref(product, dst, round);
+                    let got = mul_raw(a, af, b, bf, dst, round);
+                    assert_eq!(got, want, "{a}×{b} ({af}×{bf}→{dst}, {})", round.name());
+                    // And the wrapper contract: identical to fx_mul.
+                    let fx = fx_mul(Fx::from_raw(a, af), Fx::from_raw(b, bf), dst, round);
+                    assert_eq!(got, fx.raw());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_add_bit_exact_on_full_grids() {
+    // fx_add semantics are per-operand conversion *then* a saturating
+    // add — the reference mirrors that two-step shape exactly (a
+    // single-rounding model would be wrong for narrowing dsts).
+    use tanh_vlsi::graph::ops::add_raw;
+    let (af, bf) = (QFormat::S2_5, QFormat::S_7);
+    for dst in [QFormat::S_7, QFormat::S2_5] {
+        for round in ROUNDS {
+            for a in af.min_raw()..=af.max_raw() {
+                for b in bf.min_raw()..=bf.max_raw() {
+                    let qa = quantize_ref(a as f64 * af.ulp(), dst, round);
+                    let qb = quantize_ref(b as f64 * bf.ulp(), dst, round);
+                    let want = (qa + qb).clamp(dst.min_raw(), dst.max_raw());
+                    let got = add_raw(a, af, b, bf, dst, round);
+                    assert_eq!(got, want, "{a}+{b} ({af}+{bf}→{dst}, {})", round.name());
+                    let fx = fx_add(Fx::from_raw(a, af), Fx::from_raw(b, bf), dst, round);
+                    assert_eq!(got, fx.raw());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_requant_bit_exact_on_full_grids() {
+    // Every raw word of each source format through every destination
+    // and mode: covers exact widening (all modes agree), narrowing
+    // ties (rem == half hits every 2^(sh-1)-th word), and saturation
+    // (S3.12's ±6+ range into S.7's ±1).
+    use tanh_vlsi::graph::ops::requant_raw;
+    let pairs = [
+        (QFormat::S3_12, QFormat::S_7),
+        (QFormat::S_7, QFormat::S3_12),
+        (QFormat::S_15, QFormat::S2_5),
+        (QFormat::S2_5, QFormat::S_15),
+        (QFormat::S2_13, QFormat::S2_13),
+    ];
+    for (src, dst) in pairs {
+        for round in ROUNDS {
+            for v in src.min_raw()..=src.max_raw() {
+                let want = quantize_ref(v as f64 * src.ulp(), dst, round);
+                let got = requant_raw(v, src, dst, round);
+                assert_eq!(got, want, "raw {v} ({src}→{dst}, {})", round.name());
+                let fx = Fx::from_raw(v, src).convert(dst, round);
+                assert_eq!(got, fx.raw());
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_one_minus_bit_exact_on_full_grids() {
+    // 1 − x runs exact in a widened intermediate, then one rounding:
+    // the reference is a single quantization of the exact complement.
+    // Includes x = min_raw (complement ≈ +2, needs the wide form) and
+    // the saturating fraction-only destinations.
+    use tanh_vlsi::graph::ops::one_minus_raw;
+    for src in [QFormat::S_7, QFormat::S2_5] {
+        for dst in [QFormat::S_7, QFormat::S2_5, QFormat::S3_12] {
+            for round in ROUNDS {
+                for v in src.min_raw()..=src.max_raw() {
+                    let want = quantize_ref(1.0 - v as f64 * src.ulp(), dst, round);
+                    let got = one_minus_raw(v, src, dst, round);
+                    assert_eq!(got, want, "1 − raw {v} ({src}→{dst}, {})", round.name());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cell-graph rewrites: the fused (shared-tanh-kernel) LSTM graph is
+// bit-identical to the unfused reference semantics.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_lstm_graph_is_bit_identical_and_shares_registry_kernels() {
+    use tanh_vlsi::graph::{
+        execute_raw, lstm_cell, optimize, BackendSink, CellConfig, FreshKernelSink,
+    };
+    let cfg = CellConfig::table1_lstm();
+    let unfused = lstm_cell(&cfg).unwrap();
+    let (fused, stats) = optimize(&unfused).unwrap();
+    assert_eq!(stats.fused_sigmoids, 3);
+
+    prop_check("fused == unfused bit-for-bit", 20, |g: &mut Prng| {
+        let lanes = g.i64_in(1, 64) as usize;
+        let inputs: Vec<(&str, Vec<i64>)> = unfused
+            .inputs()
+            .into_iter()
+            .map(|(name, _, fmt)| {
+                let range = if name == "c_prev" { 1.9 } else { 6.0 };
+                let vals = (0..lanes)
+                    .map(|_| Fx::from_f64(g.f64_in(-range, range), fmt).raw())
+                    .collect();
+                (name, vals)
+            })
+            .collect();
+        // Unfused: fresh scalar sigmoid wrappers + private kernels.
+        let a = execute_raw(&unfused, &inputs, &FreshKernelSink::for_graph(&unfused))?;
+        // Fused: everything through the registry-backed golden backend.
+        let backend = GoldenBackend::new();
+        let b = execute_raw(&fused, &inputs, &BackendSink::new(&backend))?;
+        if a != b {
+            return Err(format!("fused run diverged on {lanes} lanes"));
+        }
+        Ok(())
+    });
+
+    // The fusion's whole point: the derived sigmoid tanh spec is served
+    // from the shared registry like any other spec — one compile, hits
+    // after (exercised again via a second backend over the same specs).
+    let reg = tanh_vlsi::approx::Registry::global();
+    let before = reg.stats();
+    for spec in fused.activation_specs() {
+        reg.kernel(&spec);
+        reg.kernel(&spec);
+    }
+    let after = reg.stats();
+    assert!(after.hits >= before.hits + fused.activation_specs().len() as u64);
 }

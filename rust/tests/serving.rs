@@ -539,3 +539,86 @@ fn server_stops_cleanly_with_connections_open_and_coordinator_survives() {
         c.shutdown();
     }
 }
+
+#[test]
+fn lstm_cell_steps_serve_end_to_end_with_schema_valid_bench_rows() {
+    // The cell-graph acceptance criterion, end to end: whole LSTM cell
+    // steps served through a 2-shard coordinator with the rewrite
+    // passes applied (sigmoid gates fused onto shared tanh kernels),
+    // every step bit-exact against a direct golden execution and every
+    // gate within the declared error budget of the f64 reference — and
+    // the resulting BENCH_serve.json row (cell columns included)
+    // validates against the schema.
+    use tanh_vlsi::bench::scenario::{CellStats, ScenarioOutcome};
+    use tanh_vlsi::graph::{lstm_cell, optimize, run_lstm_cells, CellConfig, CellRunConfig};
+    use tanh_vlsi::util::json::Json;
+
+    let cfg = CellConfig::table1_lstm();
+    let (fused, rw) = optimize(&lstm_cell(&cfg).unwrap()).unwrap();
+    assert_eq!(rw.fused_sigmoids, 3, "all three sigmoid gates must fuse");
+    let batch = 256;
+    let coord = Coordinator::start(
+        Arc::new(GoldenBackend::new()),
+        CoordinatorConfig {
+            shards: 2,
+            specs: fused.activation_specs(),
+            ..CoordinatorConfig::with_batch(batch)
+        },
+    )
+    .unwrap();
+    assert!(coord.shards_per_method() >= 2);
+
+    let run = CellRunConfig { sequences: 3, steps: 4, lanes: 32, seed: 0xBEEF };
+    let start = std::time::Instant::now();
+    let stats = run_lstm_cells(&coord, &cfg, &fused, &run).unwrap();
+    let wall = start.elapsed();
+    assert_eq!(stats.cell_steps, 12);
+    assert_eq!(stats.verified, 12, "every step double-verified");
+    assert!(
+        stats.gate_max_err > 0.0 && stats.gate_max_err <= cfg.budget,
+        "gate_max_err {} outside (0, {}]",
+        stats.gate_max_err,
+        cfg.budget
+    );
+    // 5 activation nodes per step: three fused sigmoid tanh evals, the
+    // g gate tanh, and tanh(c_next).
+    assert_eq!(stats.requests, 12 * 5);
+    assert_eq!(stats.elements, 12 * 5 * 32);
+    // The coordinator really served that traffic.
+    let m = coord.metrics();
+    assert_eq!(m.requests, stats.requests);
+    assert_eq!(m.failed_requests, 0);
+
+    let out = ScenarioOutcome {
+        name: "lstm".into(),
+        seed: run.seed,
+        specs: fused.activation_specs().iter().map(|s| s.to_string()).collect(),
+        submitted: stats.requests,
+        completed: stats.requests,
+        failed: 0,
+        retries: stats.retries,
+        elements: stats.elements,
+        verified: stats.requests,
+        wall,
+        metrics: m,
+        net: None,
+        cells: Some(CellStats {
+            cell_steps: stats.cell_steps,
+            gate_max_err: stats.gate_max_err,
+        }),
+    };
+    let row = out.to_json("golden", coord.shards_per_method(), batch);
+    let mut log = BenchLog::new();
+    log.push_row(row.clone());
+    assert_eq!(validate_serve_log(&log.to_json()).unwrap(), 1);
+    let text = row.to_string_compact();
+    assert!(text.contains("\"cell_steps\":12"), "{text}");
+    assert!(text.contains("\"gate_max_err\":"), "{text}");
+    // A cell row claiming steps but a zero error observable is hollow
+    // (the reference was never consulted) and must be rejected.
+    let mut hollow = out.clone();
+    hollow.cells = Some(CellStats { cell_steps: 12, gate_max_err: 0.0 });
+    let bad = Json::arr(vec![hollow.to_json("golden", 2, batch)]).to_string_compact();
+    assert!(validate_serve_log(&bad).unwrap_err().contains("gate_max_err"));
+    coord.shutdown();
+}
