@@ -242,4 +242,32 @@ else
 fi
 rm -f err.txt BENCH_serve_pjrt.json
 
+echo "== tier-1: rtl netlist smoke =="
+# The verilog command now elaborates any supported datapath through the
+# rtl netlist subsystem (one printer for all six, self-parsing header).
+"$BIN" verilog --spec pwl:step=1/32:in=s2.13:out=s.15 --out rtl_smoke.v
+grep -q 'module tanh_rtl (clk, x, y);' rtl_smoke.v \
+  || { echo "tier-1 FAIL: verilog emission lacks the netlist module"; exit 1; }
+grep -q '// stages: ' rtl_smoke.v \
+  || { echo "tier-1 FAIL: verilog emission lacks the netlist header"; exit 1; }
+# Unsupported datapaths answer typed errors, not silently broken RTL.
+if "$BIN" verilog --spec pwl:step=1/3 2>err.txt; then
+  echo "tier-1 FAIL: bogus verilog spec was accepted"; exit 1
+fi
+grep -q 'reciprocal power of two' err.txt \
+  || { echo "tier-1 FAIL: verilog rejection lost its typed message"; exit 1; }
+# The netlist cost tier: every explored point is elaborated to its RTL
+# cell graph, audited bit-exact against its golden kernel (the probe
+# refuses to price a divergent netlist — including the smoke spec's
+# pwl:step=1/32:in=s2.13 shape swept above), and priced cell by cell.
+"$BIN" explore --backend hw --cost netlist --stride 64 > explore_rtl.txt
+grep -q "on 'netlist' costs" explore_rtl.txt \
+  || { echo "tier-1 FAIL: explore did not run on the netlist cost tier"; exit 1; }
+grep -Eq 'netlist *$' explore_rtl.txt \
+  || { echo "tier-1 FAIL: explore rows lack the netlist cost source"; exit 1; }
+if grep -q ', 0 netlist' explore_rtl.txt; then
+  echo "tier-1 FAIL: frontier has zero netlist-costed points"; exit 1
+fi
+rm -f err.txt rtl_smoke.v explore_rtl.txt
+
 echo "== tier-1: OK =="

@@ -30,14 +30,21 @@ pub enum CostSource {
     /// critical path read from the stages, area summed over the
     /// instantiated units, cycles/element from a streaming probe.
     Measured,
+    /// Derived from the elaborated RTL netlist
+    /// ([`crate::rtl::elaborate`]): area summed cell by cell, critical
+    /// path as the longest combinational path between register ranks,
+    /// latency as the registered stage count. The finest-grained tier —
+    /// it prices the actual emitted structure, not a stage-level model.
+    Netlist,
 }
 
 impl CostSource {
-    /// Stable report/CLI spelling (`analytic` / `measured`).
+    /// Stable report/CLI spelling (`analytic` / `measured` / `netlist`).
     pub fn as_str(self) -> &'static str {
         match self {
             CostSource::Analytic => "analytic",
             CostSource::Measured => "measured",
+            CostSource::Netlist => "netlist",
         }
     }
 }
@@ -134,5 +141,6 @@ mod tests {
     fn cost_source_spellings_are_stable() {
         assert_eq!(CostSource::Analytic.to_string(), "analytic");
         assert_eq!(CostSource::Measured.to_string(), "measured");
+        assert_eq!(CostSource::Netlist.to_string(), "netlist");
     }
 }

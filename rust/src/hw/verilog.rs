@@ -1,210 +1,100 @@
-//! Synthesizable Verilog emission for the paper's datapaths — the
-//! "VLSI implementation" deliverable in its native form.
+//! Verilog emission for the paper's datapaths — the "VLSI
+//! implementation" deliverable in its native form.
 //!
-//! The generator walks the same configuration objects as the golden
-//! models (so LUT contents are bit-identical to what `eval_fx`
-//! computes) and emits a pipelined RTL module per method. Two emitters
-//! are provided:
+//! Historically this module hand-wrote RTL for the PWL datapath only,
+//! which drifted from the simulated pipeline (the other five methods
+//! had no emission at all, and nothing checked the hand-written text
+//! against the arithmetic). It is now a thin façade over the netlist
+//! subsystem: [`emit_spec`] elaborates the spec with
+//! [`crate::rtl::elaborate`] — the same lowering the netlist simulator
+//! and the `netlist` cost tier price — and prints it with
+//! [`crate::rtl::verilog::emit`]. One printer, all six datapaths, and
+//! the emission re-parses into a structurally identical netlist
+//! ([`crate::rtl::verilog::parse`]).
 //!
-//! - [`emit_pwl`] — the Fig 3 PWL datapath: sign split, split-index
-//!   decode, hardwired endpoint LUT (as a `case` bitmap, §IV.B), the
-//!   delta/multiply/accumulate stages and the sign merge; 5 pipeline
-//!   stages matching `hw::pwl_pipeline`.
-//! - [`emit_lut_rom`] — a standalone hardwired ROM (reused by the PWL
-//!   module and available for the Taylor/Catmull-Rom anchor tables).
-//!
-//! The output is plain Verilog-2001 (no vendor primitives) and is
-//! checked structurally by the test suite: port list, LUT entry count,
-//! stage-register count and a behavioural spot-check of the LUT
-//! contents against the golden model.
-
-use std::fmt::Write as _;
+//! Specs the Fig 3/4/5 block diagrams cannot express return the hw
+//! backend's own typed "unsupported" error instead of silently
+//! emitting a datapath that was never simulated.
 
 use crate::approx::pwl::Pwl;
-use crate::approx::TanhApprox;
+use crate::approx::{IoSpec, MethodParams, MethodSpec, TanhApprox};
 use crate::fixed::QFormat;
 
-/// Emits a hardwired ROM module: `name(input [abits-1:0] addr, output
-/// reg [dbits-1:0] data)` with one `case` arm per entry (the paper's
-/// "bitmapping (combinatorial) logic instead of a memory cut").
-pub fn emit_lut_rom(name: &str, entries: &[i64], dbits: u32) -> String {
-    let abits = (entries.len() as f64).log2().ceil().max(1.0) as u32;
-    let mut v = String::new();
-    let _ = writeln!(v, "// auto-generated by tanh-vlsi — hardwired LUT ({} entries)", entries.len());
-    let _ = writeln!(v, "module {name} (");
-    let _ = writeln!(v, "    input  wire [{}:0] addr,", abits - 1);
-    let _ = writeln!(v, "    output reg  [{}:0] data", dbits - 1);
-    let _ = writeln!(v, ");");
-    let _ = writeln!(v, "  always @* begin");
-    let _ = writeln!(v, "    case (addr)");
-    for (i, e) in entries.iter().enumerate() {
-        // two's complement into dbits
-        let mask = if dbits >= 64 { u64::MAX } else { (1u64 << dbits) - 1 };
-        let word = (*e as u64) & mask;
-        let _ = writeln!(v, "      {abits}'d{i}: data = {dbits}'h{word:X};");
-    }
-    let _ = writeln!(v, "      default: data = {dbits}'h{:X};", {
-        let mask = if dbits >= 64 { u64::MAX } else { (1u64 << dbits) - 1 };
-        (*entries.last().unwrap() as u64) & mask
-    });
-    let _ = writeln!(v, "    endcase");
-    let _ = writeln!(v, "  end");
-    let _ = writeln!(v, "endmodule");
-    v
+/// Emits structural Verilog for any supported design point. Errors
+/// with the hw backend's typed "unsupported" message for specs the
+/// block diagrams cannot lower.
+pub fn emit_spec(spec: &MethodSpec) -> Result<String, String> {
+    let design = crate::rtl::elaborate(spec)?;
+    Ok(crate::rtl::verilog::emit(&design))
 }
 
-/// Emits the full pipelined PWL tanh module (Fig 3): S(in) → S(out),
-/// valid-in/valid-out handshake, 5-stage pipeline.
-pub fn emit_pwl(pwl: &Pwl, input: QFormat, output: QFormat) -> String {
-    let in_w = input.width();
-    let out_w = output.width();
-    let step_shift = (1.0 / pwl.step()).log2() as u32;
-    let t_bits = input.frac_bits - step_shift;
-    let idx_bits = ((pwl.lut().len() as f64).log2().ceil()).max(1.0) as u32;
-    let entries: Vec<i64> = (0..pwl.lut().len()).map(|i| pwl.lut().at(i).raw()).collect();
-    let domain_raw = (pwl.domain_max() * (1i64 << input.frac_bits) as f64) as i64;
-    let max_out = output.max_raw();
-
-    let mut v = String::new();
-    let _ = writeln!(v, "// auto-generated by tanh-vlsi — PWL tanh datapath (paper Fig 3)");
-    let _ = writeln!(v, "// step = {}, domain = ±{}, {} LUT entries", pwl.step(), pwl.domain_max(), entries.len());
-    let _ = writeln!(v, "module tanh_pwl (");
-    let _ = writeln!(v, "    input  wire                clk,");
-    let _ = writeln!(v, "    input  wire                rst_n,");
-    let _ = writeln!(v, "    input  wire                in_valid,");
-    let _ = writeln!(v, "    input  wire signed [{}:0] x,      // {input}", in_w - 1);
-    let _ = writeln!(v, "    output reg                 out_valid,");
-    let _ = writeln!(v, "    output reg  signed [{}:0] y       // {output}", out_w - 1);
-    let _ = writeln!(v, ");");
-    let _ = writeln!(v, "  // stage 0: sign split + saturation compare");
-    let _ = writeln!(v, "  reg                 s0_neg, s0_sat, s0_v;");
-    let _ = writeln!(v, "  reg  [{}:0]        s0_mag;", in_w - 2);
-    let _ = writeln!(v, "  wire [{}:0]        mag_w = x[{}] ? (~x + 1'b1) : x[{}:0];", in_w - 2, in_w - 1, in_w - 2);
-    let _ = writeln!(v, "  always @(posedge clk) begin");
-    let _ = writeln!(v, "    s0_neg <= x[{}];", in_w - 1);
-    let _ = writeln!(v, "    s0_mag <= mag_w;");
-    let _ = writeln!(v, "    s0_sat <= (mag_w >= {domain_raw});");
-    let _ = writeln!(v, "    s0_v   <= in_valid;");
-    let _ = writeln!(v, "  end");
-    let _ = writeln!(v, "  // stage 1: LUT fetch (even/odd banks fetch y0 and y1 in parallel)");
-    let _ = writeln!(v, "  wire [{}:0] idx = s0_mag[{}:{}];", idx_bits - 1, in_w - 2, t_bits);
-    let _ = writeln!(v, "  wire [{}:0] lut_y0, lut_y1;", out_w - 1);
-    let _ = writeln!(v, "  tanh_pwl_lut u_lut0 (.addr(idx), .data(lut_y0));");
-    let _ = writeln!(v, "  tanh_pwl_lut u_lut1 (.addr(idx + 1'b1), .data(lut_y1));");
-    let _ = writeln!(v, "  reg  [{}:0] s1_y0, s1_y1;", out_w - 1);
-    let _ = writeln!(v, "  reg  [{}:0] s1_t;", t_bits - 1);
-    let _ = writeln!(v, "  reg         s1_neg, s1_sat, s1_v;");
-    let _ = writeln!(v, "  always @(posedge clk) begin");
-    let _ = writeln!(v, "    s1_y0 <= lut_y0;  s1_y1 <= lut_y1;");
-    let _ = writeln!(v, "    s1_t  <= s0_mag[{}:0];", t_bits - 1);
-    let _ = writeln!(v, "    s1_neg <= s0_neg; s1_sat <= s0_sat; s1_v <= s0_v;");
-    let _ = writeln!(v, "  end");
-    let _ = writeln!(v, "  // stage 2: delta");
-    let _ = writeln!(v, "  reg signed [{}:0] s2_delta;", out_w);
-    let _ = writeln!(v, "  reg        [{}:0] s2_y0;", out_w - 1);
-    let _ = writeln!(v, "  reg        [{}:0] s2_t;", t_bits - 1);
-    let _ = writeln!(v, "  reg               s2_neg, s2_sat, s2_v;");
-    let _ = writeln!(v, "  always @(posedge clk) begin");
-    let _ = writeln!(v, "    s2_delta <= $signed({{1'b0, s1_y1}}) - $signed({{1'b0, s1_y0}});");
-    let _ = writeln!(v, "    s2_y0 <= s1_y0;  s2_t <= s1_t;");
-    let _ = writeln!(v, "    s2_neg <= s1_neg; s2_sat <= s1_sat; s2_v <= s1_v;");
-    let _ = writeln!(v, "  end");
-    let _ = writeln!(v, "  // stage 3: multiply (delta × t), wide product kept");
-    let _ = writeln!(v, "  reg signed [{}:0] s3_prod;", out_w + t_bits);
-    let _ = writeln!(v, "  reg        [{}:0] s3_y0;", out_w - 1);
-    let _ = writeln!(v, "  reg               s3_neg, s3_sat, s3_v;");
-    let _ = writeln!(v, "  always @(posedge clk) begin");
-    let _ = writeln!(v, "    s3_prod <= s2_delta * $signed({{1'b0, s2_t}});");
-    let _ = writeln!(v, "    s3_y0 <= s2_y0;");
-    let _ = writeln!(v, "    s3_neg <= s2_neg; s3_sat <= s2_sat; s3_v <= s2_v;");
-    let _ = writeln!(v, "  end");
-    let _ = writeln!(v, "  // stage 4: accumulate + round-half-even narrow + sign/saturate");
-    let _ = writeln!(v, "  wire signed [{}:0] acc = (s3_y0 <<< {t_bits}) + s3_prod;", out_w + t_bits + 1);
-    let _ = writeln!(v, "  wire signed [{}:0] fl  = acc >>> {t_bits};", out_w + 1);
-    let _ = writeln!(v, "  wire [{}:0] rem = acc[{}:0];", t_bits - 1, t_bits - 1);
-    let _ = writeln!(v, "  wire half = (rem == {t_bits}'d{});", 1i64 << (t_bits - 1));
-    let _ = writeln!(v, "  wire up = (rem > {t_bits}'d{}) | (half & fl[0]);", 1i64 << (t_bits - 1));
-    let _ = writeln!(v, "  wire signed [{}:0] rounded = fl + {{{}'b0, up}};", out_w + 1, out_w + 1);
-    let _ = writeln!(v, "  wire signed [{}:0] clamped = rounded < 0 ? {}'d0 :", out_w + 1, out_w + 2);
-    let _ = writeln!(v, "       (rounded > {max_out} ? {max_out} : rounded);");
-    let _ = writeln!(v, "  wire signed [{}:0] mag_out = s3_sat ? {max_out} : clamped[{}:0];", out_w - 1, out_w - 1);
-    let _ = writeln!(v, "  always @(posedge clk or negedge rst_n) begin");
-    let _ = writeln!(v, "    if (!rst_n) begin y <= 0; out_valid <= 1'b0; end");
-    let _ = writeln!(v, "    else begin");
-    let _ = writeln!(v, "      y <= s3_neg ? (~mag_out + 1'b1) : mag_out;");
-    let _ = writeln!(v, "      out_valid <= s3_v;");
-    let _ = writeln!(v, "    end");
-    let _ = writeln!(v, "  end");
-    let _ = writeln!(v, "endmodule");
-    let _ = writeln!(v);
-    v.push_str(&emit_lut_rom("tanh_pwl_lut", &entries, out_w));
-    v
+/// Compatibility wrapper for the original PWL-only entry point: emits
+/// the Fig 3 PWL datapath for the given I/O formats. Now returns a
+/// typed error for configurations the datapath cannot express (e.g. a
+/// step that is not a reciprocal power of two) where the old emitter
+/// silently produced broken index wiring.
+pub fn emit_pwl(pwl: &Pwl, input: QFormat, output: QFormat) -> Result<String, String> {
+    let spec = MethodSpec::new(
+        MethodParams::Pwl { step: pwl.step() },
+        IoSpec { input, output },
+        pwl.domain_max(),
+    )?;
+    emit_spec(&spec)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::approx::reference::tanh_ref;
+    use crate::approx::MethodId;
 
-    fn emitted() -> String {
-        emit_pwl(&Pwl::table1(), QFormat::S3_12, QFormat::S_15)
+    #[test]
+    fn all_six_table1_datapaths_emit_and_reparse() {
+        for spec in MethodSpec::table1_all() {
+            let v = emit_spec(&spec).expect("Table I specs emit");
+            assert!(v.contains("module tanh_rtl (clk, x, y);"), "{spec}");
+            assert!(v.contains("endmodule"), "{spec}");
+            let design = crate::rtl::elaborate(&spec).unwrap();
+            let back = crate::rtl::verilog::parse(&v).expect("own emission parses");
+            assert_eq!(back, design, "{spec}: emission drifted from the netlist");
+        }
     }
 
     #[test]
-    fn has_module_and_ports() {
-        let v = emitted();
-        assert!(v.contains("module tanh_pwl ("));
-        assert!(v.contains("input  wire                clk"));
-        assert!(v.contains("output reg  signed [15:0] y"));
-        assert!(v.contains("endmodule"));
+    fn pwl_wrapper_matches_emit_spec() {
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let via_wrapper =
+            emit_pwl(&Pwl::table1(), QFormat::S3_12, QFormat::S_15).unwrap();
+        assert_eq!(via_wrapper, emit_spec(&spec).unwrap());
     }
 
     #[test]
-    fn lut_has_every_entry() {
-        let v = emitted();
-        let pwl = Pwl::table1();
-        let case_arms = v.matches(": data = 16'h").count();
-        // every entry + default
-        assert_eq!(case_arms, pwl.lut().len() + 1);
+    fn unsupported_datapaths_error_typed_instead_of_emitting() {
+        // A 9-term Taylor expansion has no Fig 3 Horner chain.
+        let bogus = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = emit_spec(&bogus).unwrap_err();
+        assert!(err.contains("unsupported by hw backend"), "{err}");
+
+        // A non-power-of-two step has no split-index bit field.
+        let err = emit_pwl(&Pwl::new(0.3, 6.0), QFormat::S3_12, QFormat::S_15)
+            .unwrap_err();
+        assert!(err.contains("reciprocal power of two"), "{err}");
     }
 
     #[test]
-    fn lut_contents_match_golden_model() {
-        // Spot-check: the case arm for index 64 must encode
-        // quantize(tanh(1.0)).
-        let v = emitted();
-        let pwl = Pwl::table1();
-        let want = pwl.lut().at(64).raw();
-        let expected_line = format!("'d64: data = 16'h{:X};", (want as u64) & 0xFFFF);
-        assert!(v.contains(&expected_line), "missing {expected_line}");
-        // and the value is tanh(1.0) in S.15
-        let tanh1 = (tanh_ref(1.0) * 32768.0).round() as i64;
-        assert!((want - tanh1).abs() <= 1);
-    }
-
-    #[test]
-    fn five_pipeline_stages_of_registers() {
-        // 4 internal stage registers + output register = 5 clocked
-        // always blocks, matching hw::pwl_pipeline's latency of 5.
-        let v = emitted();
-        let clocked = v.matches("always @(posedge clk").count();
-        assert_eq!(clocked, 5);
-    }
-
-    #[test]
-    fn rom_module_standalone() {
-        let rom = emit_lut_rom("my_rom", &[0, 100, -1], 8);
-        assert!(rom.contains("module my_rom ("));
-        assert!(rom.contains("2'd0: data = 8'h0;"));
-        assert!(rom.contains("2'd1: data = 8'h64;"));
-        assert!(rom.contains("2'd2: data = 8'hFF;")); // two's complement -1
-        assert!(rom.contains("default:"));
-    }
-
-    #[test]
-    fn saturation_constant_is_papers_max() {
-        let v = emitted();
-        // ±(1 − 2⁻¹⁵) = 32767
-        assert!(v.contains("32767"));
+    fn emitted_lut_contents_match_the_golden_model() {
+        // The ROM case arm for index 64 must encode quantize(tanh(1.0))
+        // — the same spot-check the old hand-written emitter carried.
+        let v = emit_spec(&MethodSpec::table1(MethodId::Pwl)).unwrap();
+        let want = Pwl::table1().lut().at(64).raw();
+        let lit = if want < 0 {
+            format!("64: data = -16'sd{};", want.unsigned_abs())
+        } else {
+            format!("64: data = 16'sd{want};")
+        };
+        assert!(v.contains(&lit), "missing ROM arm '{lit}'");
     }
 }

@@ -53,6 +53,14 @@
 //! - [`hw`] — cycle-level pipelined datapath simulator for the block
 //!   diagrams of Fig 3 (polynomial), Fig 4 (velocity factor) and Fig 5
 //!   (continued fraction), including Table II's multi-bit VF lookup.
+//! - [`rtl`] — structural netlist tier below [`hw`]: the same design
+//!   points elaborated into a cell/net graph ([`rtl::Design`]) with
+//!   registered stage boundaries, simulated flushed or cycle-accurate
+//!   ([`rtl::simulate`]), printed as structural Verilog and re-parsed
+//!   from our own emission ([`rtl::verilog`]), and priced cell by cell
+//!   as the `netlist` cost tier ([`rtl::NetlistProbe`],
+//!   `explore --backend hw --cost netlist`). Equivalence is pinned
+//!   bit-exact: netlist == hw pipeline == golden kernel.
 //! - [`runtime`] — PJRT wrapper that loads the JAX/Pallas-AOT'd HLO
 //!   artifacts and executes them from rust (stubbed by
 //!   [`runtime::xla_shim`] when the bindings are not linked).
@@ -129,6 +137,7 @@ pub mod fixed;
 pub mod graph;
 pub mod hw;
 pub mod report;
+pub mod rtl;
 pub mod runtime;
 pub mod util;
 

@@ -94,6 +94,10 @@ fn app() -> App {
                 // every point and measures depth/critical path/area off
                 // the audited pipeline (rows labeled by cost source).
                 .opt("backend", "cost probe: golden (analytic) | hw (measured)", Some("golden"))
+                // netlist elaborates every point to its RTL cell graph
+                // and prices the structure itself (summed cell area,
+                // longest comb path between register ranks).
+                .opt("cost", "cost tier: probe (backend-native) | netlist (elaborated RTL)", Some("probe"))
                 .opt("objectives", "comma-separated Pareto axes: err|rms|area|cycles|cyc/elt|delay", Some("err,area,cycles")),
             Command::new("pipeline", "run the cycle-level datapath for one input")
                 .opt("method", "method name", Some("pwl"))
@@ -103,8 +107,9 @@ fn app() -> App {
                 .opt("out", "output file", Some("target/paper/REPORT.md"))
                 .opt("spec", "comma-separated specs for a named-design-points section", None)
                 .flag("quick", "skip the slow Fig 2 / exploration sections"),
-            Command::new("verilog", "emit synthesizable Verilog for the PWL datapath")
+            Command::new("verilog", "emit structural Verilog for any supported datapath")
                 .opt("out", "output file (default: stdout)", None)
+                .opt("spec", "design-point spec to emit (overrides --step)", None)
                 .opt("step", "PWL step size (reciprocal power of two)", Some("0.015625")),
             Command::new("serve", "run the sharded coordinator under synthetic or scenario load")
                 .opt("requests", "number of requests (legacy path, no --scenario)", Some("1000"))
@@ -355,15 +360,25 @@ fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     // steady-state cycles/element off the real datapath. PJRT has no
     // cost model to probe.
     let backend_name = p.get_or("backend", "golden");
-    let probe: Box<dyn CostProbe> = match backend_name {
-        "golden" => Box::new(backend::GoldenBackend::new()),
-        "hw" => Box::new(backend::HwBackend::new()),
-        other => {
+    // --cost netlist overrides the backend-native probe: every design
+    // point is elaborated to its RTL cell graph and priced structurally
+    // (cell-summed area, longest comb path between register ranks),
+    // with the netlist audited against the golden kernel first.
+    let cost_tier = p.get_or("cost", "probe");
+    let probe: Box<dyn CostProbe> = match (cost_tier, backend_name) {
+        ("netlist", "golden" | "hw") => Box::new(tanh_vlsi::rtl::NetlistProbe::new()),
+        ("probe", "golden") => Box::new(backend::GoldenBackend::new()),
+        ("probe", "hw") => Box::new(backend::HwBackend::new()),
+        ("probe" | "netlist", other) => {
             return Err(format!(
                 "explore supports --backend golden|hw, not '{other}' (pjrt has no cost probe)"
             ))
         }
+        (other, _) => {
+            return Err(format!("explore supports --cost probe|netlist, not '{other}'"))
+        }
     };
+    let cost_name = if cost_tier == "netlist" { "netlist" } else { backend_name };
     let specs = match p.get("spec") {
         // Explicit design points: evaluate exactly these.
         Some(arg) => parse_specs(arg)?,
@@ -381,15 +396,17 @@ fn cmd_explore(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     let points = explore_specs_probed(&specs, stride, probe.as_ref())?;
     let frontier = pareto_frontier_by(&points, &objectives);
     let measured = frontier.iter().filter(|p| p.cost_source == CostSource::Measured).count();
+    let netlist = frontier.iter().filter(|p| p.cost_source == CostSource::Netlist).count();
     let names: Vec<&str> = objectives.iter().map(|o| o.name()).collect();
     println!(
-        "explored {} design points on '{backend_name}' costs; Pareto frontier over ({}) \
-         has {} points ({} measured, {} analytic):\n",
+        "explored {} design points on '{cost_name}' costs; Pareto frontier over ({}) \
+         has {} points ({} measured, {} netlist, {} analytic):\n",
         points.len(),
         names.join(", "),
         frontier.len(),
         measured,
-        frontier.len() - measured,
+        netlist,
+        frontier.len() - measured - netlist,
     );
     let mut t = tanh_vlsi::util::table::TextTable::new(&[
         "spec", "max err", "area (GE)", "latency", "cyc/elt", "stage FO4", "cost",
@@ -464,9 +481,21 @@ fn cmd_report(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
 }
 
 fn cmd_verilog(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
-    let step: f64 = p.parse_or("step", 1.0 / 64.0)?;
-    let pwl = tanh_vlsi::approx::pwl::Pwl::new(step, 6.0);
-    let text = tanh_vlsi::hw::verilog::emit_pwl(&pwl, QFormat::S3_12, QFormat::S_15);
+    // --spec emits any supported design point; --step keeps the
+    // original PWL-only shorthand.
+    let spec = match p.get("spec") {
+        Some(arg) => MethodSpec::parse(arg)
+            .map_err(|e| format!("bad spec '{arg}': {e}\n\n{}", spec::GRAMMAR))?,
+        None => {
+            let step: f64 = p.parse_or("step", 1.0 / 64.0)?;
+            MethodSpec::new(
+                tanh_vlsi::approx::MethodParams::Pwl { step },
+                tanh_vlsi::approx::IoSpec::table1(),
+                6.0,
+            )?
+        }
+    };
+    let text = tanh_vlsi::hw::verilog::emit_spec(&spec)?;
     match p.get("out") {
         Some(path) => {
             std::fs::write(path, &text).map_err(|e| e.to_string())?;

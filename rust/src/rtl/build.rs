@@ -1,0 +1,306 @@
+//! Netlist construction: a builder with *traced* fixed-point values.
+//!
+//! [`TFx`] and [`TWide`] are the netlist shadows of [`Fx`] and
+//! [`crate::fixed::FxWide`]: a net id plus the format/fraction
+//! bookkeeping. The arithmetic helpers on [`Builder`] replicate the
+//! `fixed` substrate *operation by operation* — every place `Fx`
+//! clamps, a [`CellKind::Clamp`] is emitted; every place `FxWide`
+//! narrows, a rounding [`CellKind::Shr`] is emitted with the same
+//! [`Round`] mode — so the elaborated graph computes bit-identical
+//! words to the golden datapath models by construction.
+
+use super::ir::{Cell, CellKind, Design, NetId};
+use crate::fixed::{Fx, QFormat, Round};
+
+/// Widths above the input port are bounded so pathological chains
+/// cannot overflow the `u32` bookkeeping; `i128` simulation is exact
+/// well past this.
+const MAX_W: u32 = 120;
+
+/// A traced [`Fx`]: a net known to hold an in-range raw word of
+/// format `fmt`.
+#[derive(Clone, Copy, Debug)]
+pub struct TFx {
+    /// The net carrying the raw word.
+    pub net: NetId,
+    /// Its fixed-point format.
+    pub fmt: QFormat,
+}
+
+/// A traced [`crate::fixed::FxWide`]: a net holding an unclamped wide
+/// word with `frac` fraction bits.
+#[derive(Clone, Copy, Debug)]
+pub struct TWide {
+    /// The net carrying the wide word.
+    pub net: NetId,
+    /// Fraction bits of the wide word.
+    pub frac: u32,
+    /// Conservative width bound in bits (wire declaration / pricing).
+    pub width: u32,
+}
+
+/// Incremental netlist builder enforcing the canonical net naming
+/// (`cells[k].out == k + 1`, net 0 = input).
+pub struct Builder {
+    name: String,
+    in_fmt: QFormat,
+    out_fmt: QFormat,
+    cells: Vec<Cell>,
+    ranks: u32,
+}
+
+impl Builder {
+    /// Starts a design; returns the builder and the input port as a
+    /// traced value.
+    pub fn new(name: &str, in_fmt: QFormat, out_fmt: QFormat) -> (Builder, TFx) {
+        let b = Builder {
+            name: name.to_string(),
+            in_fmt,
+            out_fmt,
+            cells: Vec::new(),
+            ranks: 0,
+        };
+        (b, TFx { net: 0, fmt: in_fmt })
+    }
+
+    /// Appends a cell; its output net is the next dense index.
+    pub fn push(&mut self, kind: CellKind, inputs: Vec<NetId>, width: u32) -> NetId {
+        let out = self.cells.len() + 1;
+        self.cells.push(Cell { kind, inputs, out, width: width.clamp(1, MAX_W) });
+        out
+    }
+
+    /// A constant word.
+    pub fn konst(&mut self, value: i128, width: u32) -> NetId {
+        self.push(CellKind::Const { value }, vec![], width)
+    }
+
+    /// A constant [`Fx`] as a traced value.
+    pub fn fx_const(&mut self, v: Fx) -> TFx {
+        let net = self.konst(v.raw() as i128, v.format().width());
+        TFx { net, fmt: v.format() }
+    }
+
+    /// A constant wide word.
+    pub fn wide_const(&mut self, raw: i128, frac: u32, width: u32) -> TWide {
+        TWide { net: self.konst(raw, width), frac, width }
+    }
+
+    /// Marks a pipeline stage boundary. Callers then [`Builder::reg`]
+    /// every live signal; `stages` becomes `ranks + 1` at
+    /// [`Builder::finish`].
+    pub fn rank(&mut self) {
+        self.ranks += 1;
+    }
+
+    /// Registers a raw net (one flop bank of the current rank).
+    pub fn reg_net(&mut self, n: NetId, width: u32) -> NetId {
+        self.push(CellKind::Reg, vec![n], width)
+    }
+
+    /// Registers a traced [`Fx`].
+    pub fn reg(&mut self, a: TFx) -> TFx {
+        TFx { net: self.reg_net(a.net, a.fmt.width()), fmt: a.fmt }
+    }
+
+    /// Registers a traced wide word.
+    pub fn reg_wide(&mut self, a: TWide) -> TWide {
+        TWide { net: self.reg_net(a.net, a.width), frac: a.frac, width: a.width }
+    }
+
+    /// Registers a single-bit control net.
+    pub fn reg_bit(&mut self, n: NetId) -> NetId {
+        self.reg_net(n, 1)
+    }
+
+    /// Clamps a raw net to a format's representable range
+    /// (`Fx::from_raw` saturation).
+    pub fn clamp_to(&mut self, n: NetId, fmt: QFormat) -> NetId {
+        self.push(
+            CellKind::Clamp { lo: fmt.min_raw() as i128, hi: fmt.max_raw() as i128 },
+            vec![n],
+            fmt.width(),
+        )
+    }
+
+    /// `Fx::convert`: align fraction bits (rounding on narrowing),
+    /// then saturate to the destination range.
+    pub fn convert(&mut self, a: TFx, dst: QFormat, round: Round) -> TFx {
+        if a.fmt == dst {
+            return a;
+        }
+        let (sf, df) = (a.fmt.frac_bits, dst.frac_bits);
+        let shifted = if df >= sf {
+            if df > sf {
+                self.push(CellKind::Shl { sh: df - sf }, vec![a.net], a.fmt.width() + (df - sf))
+            } else {
+                a.net
+            }
+        } else {
+            self.push(CellKind::Shr { sh: sf - df, mode: round }, vec![a.net], a.fmt.width())
+        };
+        TFx { net: self.clamp_to(shifted, dst), fmt: dst }
+    }
+
+    /// `fixed::fx_add`: convert both operands, add, saturate.
+    pub fn fx_add(&mut self, a: TFx, b: TFx, dst: QFormat, round: Round) -> TFx {
+        let a = self.convert(a, dst, round);
+        let b = self.convert(b, dst, round);
+        let s = self.push(CellKind::Add, vec![a.net, b.net], dst.width() + 1);
+        TFx { net: self.clamp_to(s, dst), fmt: dst }
+    }
+
+    /// `fixed::fx_sub`.
+    pub fn fx_sub(&mut self, a: TFx, b: TFx, dst: QFormat, round: Round) -> TFx {
+        let a = self.convert(a, dst, round);
+        let b = self.convert(b, dst, round);
+        let s = self.push(CellKind::Sub, vec![a.net, b.net], dst.width() + 1);
+        TFx { net: self.clamp_to(s, dst), fmt: dst }
+    }
+
+    /// `Fx::neg` (negate, saturate).
+    pub fn neg(&mut self, a: TFx) -> TFx {
+        let n = self.push(CellKind::Neg, vec![a.net], a.fmt.width() + 1);
+        TFx { net: self.clamp_to(n, a.fmt), fmt: a.fmt }
+    }
+
+    /// `FxWide::from_fx` — free retagging.
+    pub fn wide_from_fx(&self, a: TFx) -> TWide {
+        TWide { net: a.net, frac: a.fmt.frac_bits, width: a.fmt.width() }
+    }
+
+    /// `fixed::fx_mul_wide`: full-width product, fractions add.
+    pub fn mul_wide(&mut self, a: TFx, b: TFx) -> TWide {
+        let width = a.fmt.width() + b.fmt.width();
+        let net = self.push(CellKind::Mul, vec![a.net, b.net], width);
+        TWide { net, frac: a.fmt.frac_bits + b.fmt.frac_bits, width }
+    }
+
+    /// `FxWide::add`: align the smaller fraction up, then add (exact,
+    /// no saturation at wide precision).
+    pub fn wide_add(&mut self, a: TWide, b: TWide) -> TWide {
+        let frac = a.frac.max(b.frac);
+        let an = self.wide_align(a, frac);
+        let bn = self.wide_align(b, frac);
+        let width = an.width.max(bn.width) + 1;
+        let net = self.push(CellKind::Add, vec![an.net, bn.net], width);
+        TWide { net, frac, width }
+    }
+
+    fn wide_align(&mut self, a: TWide, frac: u32) -> TWide {
+        if frac == a.frac {
+            return a;
+        }
+        let sh = frac - a.frac;
+        let net = self.push(CellKind::Shl { sh }, vec![a.net], a.width + sh);
+        TWide { net, frac, width: a.width + sh }
+    }
+
+    /// Wide negation (`FxWide::mul` by `{raw: -1, frac: 0}` in the
+    /// golden Newton-Raphson code).
+    pub fn wide_neg(&mut self, a: TWide) -> TWide {
+        let net = self.push(CellKind::Neg, vec![a.net], a.width + 1);
+        TWide { net, frac: a.frac, width: a.width + 1 }
+    }
+
+    /// `FxWide::narrow`: rounding shift to the destination fraction,
+    /// then saturate to its range.
+    pub fn narrow(&mut self, a: TWide, dst: QFormat, round: Round) -> TFx {
+        let df = dst.frac_bits;
+        let shifted = if a.frac >= df {
+            if a.frac > df {
+                self.push(CellKind::Shr { sh: a.frac - df, mode: round }, vec![a.net], a.width)
+            } else {
+                a.net
+            }
+        } else {
+            self.push(CellKind::Shl { sh: df - a.frac }, vec![a.net], a.width + (df - a.frac))
+        };
+        TFx { net: self.clamp_to(shifted, dst), fmt: dst }
+    }
+
+    /// `fixed::fx_mul` = wide product + narrow.
+    pub fn fx_mul(&mut self, a: TFx, b: TFx, dst: QFormat, round: Round) -> TFx {
+        let w = self.mul_wide(a, b);
+        self.narrow(w, dst, round)
+    }
+
+    /// Format-preserving 2-to-1 select (both arms must share `a.fmt`).
+    pub fn mux(&mut self, sel: NetId, a: TFx, b: TFx) -> TFx {
+        debug_assert_eq!(a.fmt, b.fmt, "mux arms must share a format");
+        let net = self.push(CellKind::Mux, vec![sel, a.net, b.net], a.fmt.width());
+        TFx { net, fmt: a.fmt }
+    }
+
+    /// Raw-net 2-to-1 select.
+    pub fn mux_net(&mut self, sel: NetId, a: NetId, b: NetId, width: u32) -> NetId {
+        self.push(CellKind::Mux, vec![sel, a, b], width)
+    }
+
+    /// Finalizes the design. The output must already be in the
+    /// declared output format.
+    pub fn finish(self, output: TFx) -> Design {
+        debug_assert_eq!(output.fmt, self.out_fmt, "output format mismatch");
+        let d = Design {
+            name: self.name,
+            in_fmt: self.in_fmt,
+            out_fmt: self.out_fmt,
+            stages: self.ranks + 1,
+            output: output.net,
+            cells: self.cells,
+        };
+        debug_assert!(d.validate().is_ok(), "{:?}", d.validate());
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{fx_add, fx_mul, FxWide};
+    use crate::rtl::sim::eval_flush;
+
+    /// The builder ops must match the fixed substrate bit-for-bit;
+    /// here on a little add/mul/narrow chain over a dense input grid.
+    #[test]
+    fn traced_ops_match_fixed_substrate() {
+        let in_fmt = QFormat::new(2, 5);
+        let out_fmt = QFormat::new(0, 7);
+        let c = Fx::from_f64(0.7, QFormat::new(1, 6));
+        let (mut b, x) = Builder::new("t", in_fmt, out_fmt);
+        let s = b.fx_add(x, x, QFormat::new(2, 5), Round::NearestAway);
+        let cc = b.fx_const(c);
+        let m = b.fx_mul(s, cc, QFormat::new(1, 6), Round::NearestEven);
+        b.rank();
+        let m = b.reg(m);
+        let y = b.convert(m, out_fmt, Round::NearestAway);
+        let d = b.finish(y);
+        assert_eq!(d.stages, 2);
+        for raw in in_fmt.min_raw()..=in_fmt.max_raw() {
+            let x = Fx::from_raw(raw, in_fmt);
+            let s = fx_add(x, x, QFormat::new(2, 5), Round::NearestAway);
+            let m = fx_mul(s, c, QFormat::new(1, 6), Round::NearestEven);
+            let want = m.convert(out_fmt, Round::NearestAway);
+            assert_eq!(eval_flush(&d, raw), want.raw(), "raw={raw}");
+        }
+    }
+
+    #[test]
+    fn wide_add_aligns_fractions_like_fxwide() {
+        let f1 = QFormat::new(1, 3);
+        let f2 = QFormat::new(1, 6);
+        let a = Fx::from_raw(5, f1);
+        let c = Fx::from_raw(-17, f2);
+        let (mut b, x) = Builder::new("w", f1, f2);
+        let _ = x;
+        let ta = b.fx_const(a);
+        let tc = b.fx_const(c);
+        let wa = b.wide_from_fx(ta);
+        let wc = b.wide_from_fx(tc);
+        let sum = b.wide_add(wa, wc);
+        let y = b.narrow(sum, f2, Round::NearestAway);
+        let d = b.finish(y);
+        let want = FxWide::from_fx(a).add(FxWide::from_fx(c)).narrow(f2, Round::NearestAway);
+        assert_eq!(eval_flush(&d, 0), want.raw());
+    }
+}

@@ -1,0 +1,664 @@
+//! The elaborator: lowers a [`MethodSpec`] to a structural netlist
+//! [`Design`] mirroring the Fig 3/4/5 datapath arithmetic cell by
+//! cell.
+//!
+//! Guard policy: elaboration first runs [`crate::hw::pipeline_for`],
+//! so a spec the block diagrams cannot express fails here with the
+//! *same* typed "unsupported by hw backend" message the hw lowering
+//! produces — no second error vocabulary. The lowered pipeline's
+//! latency then cross-checks the elaborated stage count: the netlist
+//! registers exactly the ranks the cycle-accurate `Pipeline` has.
+//!
+//! Equivalence strategy: the pipeline's stage closures are opaque, so
+//! instead of walking them this module re-derives each datapath from
+//! the same golden configuration objects (`Pwl`, `Taylor`,
+//! `CatmullRom`, `Velocity`, `Lambert`) using the [`Builder`]'s traced
+//! ops — which replicate `fixed`'s convert/narrow/clamp semantics
+//! exactly — and the property tests pin the chain netlist == pipeline
+//! == golden kernel bit-exact over the full domain grids.
+
+use super::build::{Builder, TFx};
+use super::ir::{CellKind, Design, NetId};
+use crate::approx::catmull_rom::CatmullRom;
+use crate::approx::lambert::Lambert;
+use crate::approx::newton::{NR_FMT, NR_ITERS};
+use crate::approx::pwl::Pwl;
+use crate::approx::taylor::Taylor;
+use crate::approx::velocity::Velocity;
+use crate::approx::{MethodParams, MethodSpec};
+use crate::fixed::{Fx, QFormat, Round};
+
+/// Internal format of the velocity-factor divider output T and the
+/// 1 − T² refinement (mirrors the hw datapath's private constant).
+const T_FMT: QFormat = QFormat::new(1, 24);
+
+/// Elaborates a design point into a structural netlist. Errors with
+/// the hw backend's own typed "unsupported" message for specs the
+/// block diagrams cannot express.
+pub fn elaborate(spec: &MethodSpec) -> Result<Design, String> {
+    // Same guards, same wording, and the latency cross-check below.
+    let pipe = crate::hw::pipeline_for(spec)?;
+    let d = match spec.params {
+        MethodParams::Pwl { step } => elab_pwl(spec, &pipe.name, step),
+        MethodParams::Taylor { step, terms } => elab_taylor(spec, &pipe.name, step, terms),
+        MethodParams::CatmullRom { step } => elab_catmull(spec, &pipe.name, step),
+        MethodParams::Velocity { threshold } => elab_velocity(spec, &pipe.name, threshold),
+        MethodParams::Lambert { terms } => elab_lambert(spec, &pipe.name, terms),
+    };
+    d.validate()?;
+    if d.stages as usize != pipe.latency() {
+        return Err(format!(
+            "rtl elaboration of '{spec}' produced {} stages but the lowered pipeline \
+             has {} — elaborator drift",
+            d.stages,
+            pipe.latency()
+        ));
+    }
+    Ok(d)
+}
+
+/// Minimal signed width holding a constant.
+fn const_width(v: i128) -> u32 {
+    if v == 0 {
+        1
+    } else {
+        129 - v.abs().leading_zeros()
+    }
+}
+
+/// Shared front end (`sign_split_input`): sign bit, |x| with
+/// saturation clamp, and the domain-saturation compare.
+fn front_end(b: &mut Builder, x: TFx, domain: f64) -> (NetId, NetId, TFx) {
+    let w = x.fmt.width();
+    let neg = b.push(CellKind::IsNeg, vec![x.net], 1);
+    let nx = b.push(CellKind::Neg, vec![x.net], w + 1);
+    let ax = b.mux_net(neg, nx, x.net, w + 1);
+    let mag = TFx { net: b.clamp_to(ax, x.fmt), fmt: x.fmt };
+    // mag.to_f64() >= domain  ⇔  raw >= ceil(domain · 2^frac) (integer raw).
+    let thresh = (domain * (1i64 << x.fmt.frac_bits) as f64).ceil() as i128;
+    let tc = b.konst(thresh, const_width(thresh));
+    let sat = b.push(CellKind::CmpGe, vec![mag.net, tc], 1);
+    (neg, sat, mag)
+}
+
+/// Shared back end (`sign_merge_stage`): saturate, floor at zero,
+/// restore the sign — in exactly the golden order.
+fn sign_merge(b: &mut Builder, neg: NetId, sat: NetId, y: TFx, out: QFormat) -> TFx {
+    debug_assert_eq!(y.fmt, out);
+    let w = out.width();
+    let maxv = b.konst(out.max_raw() as i128, w);
+    let ym = b.mux_net(sat, maxv, y.net, w);
+    let yneg = b.push(CellKind::IsNeg, vec![ym], 1);
+    let zero = b.konst(0, w);
+    let yz = b.mux_net(yneg, zero, ym, w);
+    let ny = b.push(CellKind::Neg, vec![yz], w + 1);
+    let nyc = b.clamp_to(ny, out);
+    TFx { net: b.mux_net(neg, nyc, yz, w), fmt: out }
+}
+
+/// `UniformLut::split_index`: the index bit-field select and the
+/// intra-segment fraction.
+fn split_index(b: &mut Builder, mag: TFx, step: f64) -> (NetId, TFx) {
+    let step_shift = (1.0 / step).log2() as u32;
+    let t_bits = mag.fmt.frac_bits - step_shift;
+    let idx =
+        b.push(CellKind::Shr { sh: t_bits, mode: Round::Trunc }, vec![mag.net], mag.fmt.width());
+    let mask = (1i128 << t_bits) - 1;
+    let t_net = b.push(CellKind::And { mask }, vec![mag.net], t_bits.max(1));
+    (idx, TFx { net: t_net, fmt: QFormat::new(0, t_bits) })
+}
+
+/// One LUT ROM over the golden entries.
+fn rom(b: &mut Builder, entries: &[i64], addr: NetId, fmt: QFormat) -> TFx {
+    let net =
+        b.push(CellKind::Rom { entries: entries.to_vec() }, vec![addr], fmt.width());
+    TFx { net, fmt }
+}
+
+// ---------------------------------------------------------------- PWL
+
+fn elab_pwl(spec: &MethodSpec, name: &str, step: f64) -> Design {
+    let g = Pwl::new(step, spec.domain);
+    let out = spec.io.output;
+    let (mut b, x) = Builder::new(name, spec.io.input, out);
+    let (neg, sat, mag) = front_end(&mut b, x, spec.domain);
+
+    // fetch: split index + parallel endpoint LUTs.
+    let (idx, t) = split_index(&mut b, mag, step);
+    let entries: Vec<i64> = (0..g.lut().len()).map(|i| g.lut().at(i).raw()).collect();
+    let lut_fmt = g.lut().format();
+    let y0 = rom(&mut b, &entries, idx, lut_fmt);
+    let one = b.konst(1, 2);
+    let idx1 = b.push(CellKind::Add, vec![idx, one], mag.fmt.width());
+    let y1 = rom(&mut b, &entries, idx1, lut_fmt);
+    b.rank();
+    let (y0, y1, t) = (b.reg(y0), b.reg(y1), b.reg(t));
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // delta = Fx::from_raw(y1 - y0, lut_fmt).
+    let dn = b.push(CellKind::Sub, vec![y1.net, y0.net], lut_fmt.width() + 1);
+    let delta = TFx { net: b.clamp_to(dn, lut_fmt), fmt: lut_fmt };
+    b.rank();
+    let (delta, y0, t) = (b.reg(delta), b.reg(y0), b.reg(t));
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // multiply: wide delta × t product.
+    let prod = b.mul_wide(delta, t);
+    b.rank();
+    let prod = b.reg_wide(prod);
+    let y0 = b.reg(y0);
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // accumulate: y0 + prod, narrowed round-half-even.
+    let y0w = b.wide_from_fx(y0);
+    let acc = b.wide_add(y0w, prod);
+    let y = b.narrow(acc, out, Round::NearestEven);
+    b.rank();
+    let y = b.reg(y);
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    let yf = sign_merge(&mut b, neg, sat, y, out);
+    b.finish(yf)
+}
+
+// ------------------------------------------------------------- Taylor
+
+fn elab_taylor(spec: &MethodSpec, name: &str, step: f64, terms: usize) -> Design {
+    let g = Taylor::new(step, terms, spec.domain);
+    let int = crate::approx::taylor::INT_FMT;
+    let out = spec.io.output;
+    let (mut b, x) = Builder::new(name, spec.io.input, out);
+    let (neg, sat, mag) = front_end(&mut b, x, spec.domain);
+
+    // fetch: split_fx — centered dx and the anchor LUT.
+    let (idx, tfrac) = split_index(&mut b, mag, step);
+    let t_bits = tfrac.fmt.frac_bits;
+    let step_shift = (1.0 / step).log2() as u32;
+    let half = b.konst(1i128 << (t_bits - 1), t_bits.max(1) + 1);
+    let dxr = b.push(CellKind::Sub, vec![tfrac.net, half], t_bits + 2);
+    let dx_fmt = QFormat::new(0, t_bits + step_shift);
+    let dx = TFx { net: b.clamp_to(dxr, dx_fmt), fmt: dx_fmt };
+    let entries: Vec<i64> = (0..g.lut().len()).map(|i| g.lut().at(i).raw()).collect();
+    let anchor = rom(&mut b, &entries, idx, g.lut().format());
+    b.rank();
+    let (anchor, dx) = (b.reg(anchor), b.reg(dx));
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // coeff: coeffs_fx(anchor) — T, 1−T², c2, (c3).
+    let t = b.convert(anchor, int, Round::NearestEven);
+    let one = b.fx_const(Fx::from_raw(1i64 << 26, int));
+    let t2 = b.fx_mul(t, t, int, Round::NearestAway);
+    let d1 = b.fx_sub(one, t2, int, Round::NearestAway);
+    let c2m = b.fx_mul(t, d1, int, Round::NearestAway);
+    let c2 = b.neg(c2m);
+    let c3 = if terms == 4 {
+        let three = b.fx_const(Fx::from_f64(3.0, int));
+        let tt2 = b.fx_mul(three, t2, int, Round::NearestAway);
+        let gq = b.fx_sub(one, tt2, int, Round::NearestAway);
+        let c3a = b.fx_mul(d1, gq, int, Round::NearestAway);
+        let third = b.fx_const(Fx::from_f64(1.0 / 3.0, int));
+        let c3b = b.fx_mul(c3a, third, int, Round::NearestAway);
+        Some(b.neg(c3b))
+    } else {
+        None
+    };
+    b.rank();
+    let (t, d1, dx) = (b.reg(t), b.reg(d1), b.reg(dx));
+    let mut acc = b.reg(c2);
+    let c3 = c3.map(|c| b.reg(c));
+    let (mut neg, mut sat) = (b.reg_bit(neg), b.reg_bit(sat));
+    let (mut t, mut d1, mut dx) = (t, d1, dx);
+
+    // horner3 (cubic only): acc = dx·c3 + c2.
+    if let Some(c3) = c3 {
+        let w = b.mul_wide(dx, c3);
+        let accw = b.wide_from_fx(acc);
+        let s = b.wide_add(w, accw);
+        let stepped = b.narrow(s, int, Round::NearestAway);
+        b.rank();
+        acc = b.reg(stepped);
+        t = b.reg(t);
+        d1 = b.reg(d1);
+        dx = b.reg(dx);
+        neg = b.reg_bit(neg);
+        sat = b.reg_bit(sat);
+    }
+
+    // horner2: acc = dx·acc + d1.
+    let w = b.mul_wide(dx, acc);
+    let d1w = b.wide_from_fx(d1);
+    let s = b.wide_add(w, d1w);
+    let acc2 = b.narrow(s, int, Round::NearestAway);
+    b.rank();
+    let acc2 = b.reg(acc2);
+    let t = b.reg(t);
+    let dx = b.reg(dx);
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // horner1: y = dx·acc + T, narrowed round-half-even to the output.
+    let w = b.mul_wide(dx, acc2);
+    let tw = b.wide_from_fx(t);
+    let s = b.wide_add(w, tw);
+    let y = b.narrow(s, out, Round::NearestEven);
+    b.rank();
+    let y = b.reg(y);
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    let yf = sign_merge(&mut b, neg, sat, y, out);
+    b.finish(yf)
+}
+
+// -------------------------------------------------------- Catmull-Rom
+
+fn elab_catmull(spec: &MethodSpec, name: &str, step: f64) -> Design {
+    let g = CatmullRom::new(step, spec.domain);
+    let cr = crate::approx::catmull_rom::INT_FMT;
+    let out = spec.io.output;
+    let (mut b, x) = Builder::new(name, spec.io.input, out);
+    let (neg, sat, mag) = front_end(&mut b, x, spec.domain);
+
+    // fetch: the four control points around segment k = idx.
+    let (idx, t) = split_index(&mut b, mag, step);
+    let entries: Vec<i64> = (0..g.lut().len()).map(|i| g.lut().at(i).raw()).collect();
+    let lut_fmt = g.lut().format();
+    let zero = b.konst(0, 2);
+    let sel0 = b.push(CellKind::CmpEq, vec![idx, zero], 1);
+    let one = b.konst(1, 2);
+    let im1 = b.push(CellKind::Sub, vec![idx, one], mag.fmt.width());
+    let rm1 = rom(&mut b, &entries, im1, lut_fmt);
+    // k = 0 reflects across the origin: p(−1) = −lut[1], a constant.
+    let pm1 = b.konst(g.p(-1).raw() as i128, lut_fmt.width());
+    let p0 = TFx { net: b.mux_net(sel0, pm1, rm1.net, lut_fmt.width()), fmt: lut_fmt };
+    let p1 = rom(&mut b, &entries, idx, lut_fmt);
+    let i1 = b.push(CellKind::Add, vec![idx, one], mag.fmt.width());
+    let p2 = rom(&mut b, &entries, i1, lut_fmt);
+    let two = b.konst(2, 3);
+    let i2 = b.push(CellKind::Add, vec![idx, two], mag.fmt.width());
+    let p3 = rom(&mut b, &entries, i2, lut_fmt);
+    b.rank();
+    let (p0, p1, p2, p3, t) = (b.reg(p0), b.reg(p1), b.reg(p2), b.reg(p3), b.reg(t));
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // t-vector: basis_fx(t).
+    let tc = b.convert(t, cr, Round::NearestEven);
+    let t2 = b.fx_mul(tc, tc, cr, Round::NearestAway);
+    let t3 = b.fx_mul(t2, tc, cr, Round::NearestAway);
+    let mut basis = |b: &mut Builder, terms: &[(TFx, f64)], plus_one: bool| -> TFx {
+        let mut acc = None;
+        for &(v, c) in terms {
+            let cc = b.fx_const(Fx::from_f64(c, cr));
+            let w = b.mul_wide(v, cc);
+            acc = Some(match acc {
+                None => w,
+                Some(a) => b.wide_add(a, w),
+            });
+        }
+        let mut acc = acc.expect("basis terms");
+        if plus_one {
+            let onec = b.fx_const(Fx::from_f64(1.0, cr));
+            let onew = b.wide_from_fx(onec);
+            acc = b.wide_add(acc, onew);
+        }
+        b.narrow(acc, cr, Round::NearestAway)
+    };
+    let b0 = basis(&mut b, &[(t3, -0.5), (t2, 1.0), (tc, -0.5)], false);
+    let b1 = basis(&mut b, &[(t3, 1.5), (t2, -2.5)], true);
+    let b2 = basis(&mut b, &[(t3, -1.5), (t2, 2.0), (tc, 0.5)], false);
+    let b3 = basis(&mut b, &[(t3, 0.5), (t2, -0.5)], false);
+    b.rank();
+    let (b0, b1, b2, b3) = (b.reg(b0), b.reg(b1), b.reg(b2), b.reg(b3));
+    let (p0, p1, p2, p3) = (b.reg(p0), b.reg(p1), b.reg(p2), b.reg(p3));
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // mac: Σ bᵢ·pᵢ at CR precision, narrowed round-half-even.
+    let mut acc = None;
+    for (bi, pi) in [(b0, p0), (b1, p1), (b2, p2), (b3, p3)] {
+        let pc = b.convert(pi, cr, Round::NearestEven);
+        let w = b.mul_wide(bi, pc);
+        acc = Some(match acc {
+            None => w,
+            Some(a) => b.wide_add(a, w),
+        });
+    }
+    let y = b.narrow(acc.expect("mac terms"), out, Round::NearestEven);
+    b.rank();
+    let y = b.reg(y);
+    let (neg, sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    let yf = sign_merge(&mut b, neg, sat, y, out);
+    b.finish(yf)
+}
+
+// ------------------------------------------- Newton-Raphson (shared)
+
+/// `newton::normalize_den` as cells: MSB priority-encode, normalizing
+/// barrel shift into Q1.30, and the one-step renormalization.
+fn nl_normalize_den(b: &mut Builder, den: TFx) -> (TFx, NetId) {
+    let p = b.push(CellKind::Msb, vec![den.net], 7);
+    // e = p + 1 − frac_bits.
+    let kc = b.konst(1 - den.fmt.frac_bits as i128, 8);
+    let e0 = b.push(CellKind::Add, vec![p, kc], 8);
+    // m_raw: shift so the MSB lands at bit 30 (amount = p − 29).
+    let mant0 = b.push(
+        CellKind::NormShift { base: -29, mode: Round::NearestAway },
+        vec![den.net, p],
+        NR_FMT.width(),
+    );
+    // Rounding can carry past 2^30: renormalize one step.
+    let lim = b.konst(1i128 << 30, 32);
+    let ge = b.push(CellKind::CmpGe, vec![mant0, lim], 1);
+    let mant1 = b.push(CellKind::Shr { sh: 1, mode: Round::Trunc }, vec![mant0], NR_FMT.width());
+    let mant = b.mux_net(ge, mant1, mant0, NR_FMT.width());
+    let one = b.konst(1, 2);
+    let e1 = b.push(CellKind::Add, vec![e0, one], 8);
+    let e = b.mux_net(ge, e1, e0, 8);
+    (TFx { net: mant, fmt: NR_FMT }, e)
+}
+
+/// `newton::nr_seed`: 48/17 − 32/17·m.
+fn nl_nr_seed(b: &mut Builder, mant: TFx) -> TFx {
+    let c1 = b.fx_const(Fx::from_f64(48.0 / 17.0, QFormat::new(2, 29)));
+    let c2 = b.fx_const(Fx::from_f64(32.0 / 17.0, QFormat::new(2, 29)));
+    let w = b.mul_wide(c2, mant);
+    let wn = b.wide_neg(w);
+    let c1w = b.wide_from_fx(c1);
+    let s = b.wide_add(c1w, wn);
+    b.narrow(s, NR_FMT, Round::NearestAway)
+}
+
+/// `newton::nr_step`: x·(2 − m·x).
+fn nl_nr_step(b: &mut Builder, mant: TFx, x: TFx) -> TFx {
+    let bx = b.mul_wide(mant, x);
+    let bxn = b.wide_neg(bx);
+    let two = b.wide_const(2i128 << 30, 30, 33);
+    let s = b.wide_add(two, bxn);
+    let corr = b.narrow(s, QFormat::new(2, 29), Round::NearestAway);
+    let w = b.mul_wide(x, corr);
+    b.narrow(w, NR_FMT, Round::NearestAway)
+}
+
+/// `newton::finish_div`: num·recip with the exponent-recovery
+/// normalizing shift, saturated into `out`.
+fn nl_finish_div(b: &mut Builder, num: TFx, recip: TFx, e: NetId, out: QFormat) -> TFx {
+    let w = b.mul_wide(num, recip);
+    let base = (w.frac - out.frac_bits) as i32;
+    let ns = b.push(
+        CellKind::NormShift { base, mode: Round::NearestAway },
+        vec![w.net, e],
+        w.width,
+    );
+    TFx { net: b.clamp_to(ns, out), fmt: out }
+}
+
+// ----------------------------------------------------------- Velocity
+
+fn elab_velocity(spec: &MethodSpec, name: &str, threshold: f64) -> Design {
+    let g = Velocity::new(threshold, spec.domain);
+    let wf = g.wide_format();
+    let m_shift = g.threshold_shift();
+    let out = spec.io.output;
+    let in_fmt = spec.io.input;
+    let frac = in_fmt.frac_bits;
+    let (mut b, x) = Builder::new(name, in_fmt, out);
+    let (neg, sat, mag) = front_end(&mut b, x, spec.domain);
+
+    // split: coarse bits ≥ θ and the sub-threshold residue.
+    let res_bits = frac.saturating_sub(m_shift);
+    let mask = (1i128 << res_bits) - 1;
+    let residue = b.push(CellKind::And { mask }, vec![mag.net], res_bits.max(1));
+    let coarse = b.push(CellKind::Sub, vec![mag.net, residue], in_fmt.width());
+    let f0 = b.fx_const(Fx::one(wf));
+    b.rank();
+    let mut coarse = b.reg_net(coarse, in_fmt.width());
+    let mut residue = b.reg_net(residue, res_bits.max(1));
+    let mut f = b.reg(f0);
+    let (mut neg, mut sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // vfmul chain: one conditional register multiply per stored factor.
+    let ks: Vec<i32> = (-(m_shift as i32)..=g.kmax()).rev().collect();
+    let nstages = ks.len();
+    for (i, k) in ks.into_iter().enumerate() {
+        let bitpos = k + frac as i32;
+        if bitpos >= 0 {
+            let sh = b.push(
+                CellKind::Shr { sh: bitpos as u32, mode: Round::Trunc },
+                vec![coarse],
+                in_fmt.width(),
+            );
+            let bit = b.push(CellKind::And { mask: 1 }, vec![sh], 1);
+            let vfc = b.fx_const(g.registers()[i]);
+            let fm = b.fx_mul(f, vfc, wf, Round::NearestAway);
+            f = b.mux(bit, fm, f);
+        }
+        b.rank();
+        if i + 1 < nstages {
+            coarse = b.reg_net(coarse, in_fmt.width());
+        }
+        residue = b.reg_net(residue, res_bits.max(1));
+        f = b.reg(f);
+        neg = b.reg_bit(neg);
+        sat = b.reg_bit(sat);
+    }
+
+    // addsub: num = F − 1, den = F + 1.
+    let one = b.fx_const(Fx::one(wf));
+    let num = b.fx_sub(f, one, wf, Round::NearestAway);
+    let den = b.fx_add(f, one, wf, Round::NearestAway);
+    b.rank();
+    let num = b.reg(num);
+    let den = b.reg(den);
+    residue = b.reg_net(residue, res_bits.max(1));
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // normalize den into Q1.30 mantissa × 2^e.
+    let (mant, e) = nl_normalize_den(&mut b, den);
+    b.rank();
+    let mant = b.reg(mant);
+    let mut e = b.reg_net(e, 8);
+    let mut num = b.reg(num);
+    residue = b.reg_net(residue, res_bits.max(1));
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // nr-seed.
+    let seed = nl_nr_seed(&mut b, mant);
+    b.rank();
+    let mut recip = b.reg(seed);
+    let mut mant = b.reg(mant);
+    e = b.reg_net(e, 8);
+    num = b.reg(num);
+    residue = b.reg_net(residue, res_bits.max(1));
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // nr-iter × NR_ITERS.
+    for it in 0..NR_ITERS {
+        let next = nl_nr_step(&mut b, mant, recip);
+        b.rank();
+        recip = b.reg(next);
+        if it + 1 < NR_ITERS {
+            mant = b.reg(mant);
+        }
+        e = b.reg_net(e, 8);
+        num = b.reg(num);
+        residue = b.reg_net(residue, res_bits.max(1));
+        neg = b.reg_bit(neg);
+        sat = b.reg_bit(sat);
+    }
+
+    // recover: T = (F−1)/(F+1), with the exact-zero short circuit.
+    let val = nl_finish_div(&mut b, num, recip, e, T_FMT);
+    let zero = b.konst(0, 2);
+    let numz = b.push(CellKind::CmpEq, vec![num.net, zero], 1);
+    let tzero = b.fx_const(Fx::zero(T_FMT));
+    let t = b.mux(numz, tzero, val);
+    b.rank();
+    let t = b.reg(t);
+    residue = b.reg_net(residue, res_bits.max(1));
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // refine: y = T + b·(1 − T²), round-half-even into the output.
+    let bfx = TFx { net: residue, fmt: QFormat::new(0, frac) };
+    let t2 = b.fx_mul(t, t, T_FMT, Round::NearestAway);
+    let onet = b.fx_const(Fx::one(T_FMT));
+    let d1 = b.fx_sub(onet, t2, T_FMT, Round::NearestAway);
+    let w = b.mul_wide(bfx, d1);
+    let tw = b.wide_from_fx(t);
+    let s = b.wide_add(w, tw);
+    let y = b.narrow(s, out, Round::NearestEven);
+    b.rank();
+    let y = b.reg(y);
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    let yf = sign_merge(&mut b, neg, sat, y, out);
+    b.finish(yf)
+}
+
+// ------------------------------------------------------------ Lambert
+
+fn elab_lambert(spec: &MethodSpec, name: &str, k_terms: usize) -> Design {
+    let g = Lambert::new(k_terms, spec.domain);
+    let wf = g.wide_format();
+    let kk = 2 * k_terms as i64 + 1;
+    let out = spec.io.output;
+    let (mut b, x) = Builder::new(name, spec.io.input, out);
+    let (neg, sat, mag) = front_end(&mut b, x, spec.domain);
+
+    // square: x², plus the recurrence seeds T₋₁ = 1, T₀ = 2K+1.
+    let x2w = b.mul_wide(mag, mag);
+    let x2 = b.narrow(x2w, wf, Round::NearestAway);
+    let tm1_0 = b.fx_const(Fx::one(wf));
+    let t0_0 = b.fx_const(Fx::from_f64(kk as f64, wf));
+    b.rank();
+    let mut x2 = b.reg(x2);
+    let mut xk = b.reg(mag);
+    let mut tm1 = b.reg(tm1_0);
+    let mut t0 = b.reg(t0_0);
+    let (mut neg, mut sat) = (b.reg_bit(neg), b.reg_bit(sat));
+
+    // continued-fraction recurrence: Tₙ = c·Tₙ₋₁ + x²·Tₙ₋₂.
+    for n in 1..=k_terms {
+        let c = (kk - 2 * n as i64) as f64;
+        let cfx = b.fx_const(Fx::from_f64(c, wf));
+        let w1 = b.mul_wide(cfx, t0);
+        let w2 = b.mul_wide(x2, tm1);
+        let s = b.wide_add(w1, w2);
+        let t = b.narrow(s, wf, Round::NearestAway);
+        tm1 = t0;
+        t0 = t;
+        b.rank();
+        if n < k_terms {
+            x2 = b.reg(x2);
+        }
+        xk = b.reg(xk);
+        tm1 = b.reg(tm1);
+        t0 = b.reg(t0);
+        neg = b.reg_bit(neg);
+        sat = b.reg_bit(sat);
+    }
+
+    // numerator: num = x·T_{K−1}; a non-positive denominator flags the
+    // out-of-range fallback.
+    let num = b.fx_mul(xk, tm1, wf, Round::NearestAway);
+    let den = t0;
+    let one = b.konst(1, 2);
+    let ge1 = b.push(CellKind::CmpGe, vec![den.net, one], 1);
+    let bad = b.push(CellKind::Not, vec![ge1], 1);
+    b.rank();
+    let num = b.reg(num);
+    let den = b.reg(den);
+    let mut bad = b.reg_bit(bad);
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // normalize (with the bad-denominator constant fallback 0.5·2¹).
+    let (mant_n, e_n) = nl_normalize_den(&mut b, den);
+    let mant_bad = b.konst((1i64 << 29) as i128, NR_FMT.width());
+    let mant = TFx {
+        net: b.mux_net(bad, mant_bad, mant_n.net, NR_FMT.width()),
+        fmt: NR_FMT,
+    };
+    let e_bad = b.konst(1, 2);
+    let e = b.mux_net(bad, e_bad, e_n, 8);
+    b.rank();
+    let mant = b.reg(mant);
+    let mut e = b.reg_net(e, 8);
+    let mut num = b.reg(num);
+    bad = b.reg_bit(bad);
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // nr-seed.
+    let seed = nl_nr_seed(&mut b, mant);
+    b.rank();
+    let mut recip = b.reg(seed);
+    let mut mant = b.reg(mant);
+    e = b.reg_net(e, 8);
+    num = b.reg(num);
+    bad = b.reg_bit(bad);
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    // nr-iter × NR_ITERS.
+    for it in 0..NR_ITERS {
+        let next = nl_nr_step(&mut b, mant, recip);
+        b.rank();
+        recip = b.reg(next);
+        if it + 1 < NR_ITERS {
+            mant = b.reg(mant);
+        }
+        e = b.reg_net(e, 8);
+        num = b.reg(num);
+        bad = b.reg_bit(bad);
+        neg = b.reg_bit(neg);
+        sat = b.reg_bit(sat);
+    }
+
+    // finish: y = num/den (or the saturated maximum when flagged).
+    let val = nl_finish_div(&mut b, num, recip, e, out);
+    let maxv = b.fx_const(Fx::max(out));
+    let y = b.mux(bad, maxv, val);
+    b.rank();
+    let y = b.reg(y);
+    neg = b.reg_bit(neg);
+    sat = b.reg_bit(sat);
+
+    let yf = sign_merge(&mut b, neg, sat, y, out);
+    b.finish(yf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::MethodSpec;
+
+    #[test]
+    fn table1_specs_elaborate_with_pipeline_latency() {
+        for spec in MethodSpec::table1_all() {
+            let d = elaborate(&spec).expect("Table I specs elaborate");
+            let pipe = crate::hw::pipeline_for(&spec).unwrap();
+            assert_eq!(d.stages as usize, pipe.latency(), "{spec}");
+            assert_eq!(d.name, pipe.name, "{spec}");
+            assert!(d.validate().is_ok(), "{spec}");
+            // d − 1 register ranks, each holding ≥ 3 signals (a value
+            // plus the neg/sat controls).
+            assert!(d.reg_count() >= 3 * (pipe.latency() - 1), "{spec}");
+        }
+    }
+
+    #[test]
+    fn unsupported_specs_error_with_hw_wording() {
+        use crate::approx::{IoSpec, MethodParams};
+        let bogus = MethodSpec {
+            params: MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 },
+            io: IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = elaborate(&bogus).unwrap_err();
+        assert!(err.contains("unsupported by hw backend"), "{err}");
+        assert!(err.contains("Horner"), "{err}");
+    }
+}

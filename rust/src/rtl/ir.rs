@@ -1,0 +1,364 @@
+//! The structural netlist IR: nets, primitive cells, and the priced
+//! design graph the elaborator produces and the Verilog printer /
+//! parser round-trip.
+//!
+//! The IR is deliberately tiny — one module, one clock, one input word
+//! and one output word — because every Fig 3/4/5 datapath is exactly
+//! that shape. Nets are dense indices: net 0 is the input port, and
+//! net `k` (k ≥ 1) is *defined* as the output of cell `k − 1`
+//! (builder invariant, enforced by [`Design::validate`]). That makes
+//! structural equality of two [`Design`]s (`==`, derived) the same
+//! thing as cell/net graph isomorphism under the canonical naming,
+//! which is what the Verilog round-trip test pins.
+//!
+//! Cells are two-valued (no X/Z) and wide: each net carries one signed
+//! integer word (simulated as `i128`), not individual bits — the right
+//! granularity for datapath RTL, and the same word-level semantics the
+//! [`crate::fixed`] substrate defines. Rounding cells carry their
+//! [`Round`] mode so the simulator can defer to the *same*
+//! [`Round::shift_right`] the golden models use: the equivalence chain
+//! is exact by construction, not by reimplementation.
+
+use crate::cost::UnitLibrary;
+use crate::fixed::{QFormat, Round};
+
+/// Dense net index. Net 0 is the module input; net `k` (k ≥ 1) is the
+/// output of cell `k − 1`.
+pub type NetId = usize;
+
+/// The primitive cell library. Word-level, two-valued, combinational
+/// except [`CellKind::Reg`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellKind {
+    /// Constant word (no inputs).
+    Const {
+        /// The driven value.
+        value: i128,
+    },
+    /// `a + b`.
+    Add,
+    /// `a - b`.
+    Sub,
+    /// `a * b` (full-width product).
+    Mul,
+    /// `-a`.
+    Neg,
+    /// `sel != 0 ? a : b` — inputs `[sel, a, b]`.
+    Mux,
+    /// `a >= b` (signed) → 1/0.
+    CmpGe,
+    /// `a == b` → 1/0.
+    CmpEq,
+    /// `a < 0` → 1/0 (the sign bit — free wiring).
+    IsNeg,
+    /// `a == 0 ? 1 : 0`.
+    Not,
+    /// Constant left shift.
+    Shl {
+        /// Shift amount in bits.
+        sh: u32,
+    },
+    /// Constant *rounding* right shift — the hardware form of
+    /// [`Round::shift_right`]. `Trunc` is free wiring; the nearest
+    /// modes cost an increment adder.
+    Shr {
+        /// Shift amount in bits.
+        sh: u32,
+        /// Rounding mode applied to the discarded bits.
+        mode: Round,
+    },
+    /// Bitwise AND with a constant mask (bit-field select — free).
+    And {
+        /// The mask.
+        mask: i128,
+    },
+    /// Saturation to `[lo, hi]` — the [`crate::fixed::Fx`] range clamp.
+    Clamp {
+        /// Inclusive lower bound.
+        lo: i128,
+        /// Inclusive upper bound.
+        hi: i128,
+    },
+    /// Hardwired LUT ROM (the paper's "bitmapping logic"): `addr` is
+    /// clamped to `[0, entries.len() − 1]`, matching
+    /// [`crate::approx::lut::UniformLut::at`]'s guard-entry clamp.
+    Rom {
+        /// The table contents (raw fixed-point words).
+        entries: Vec<i64>,
+    },
+    /// Priority encoder: bit position of the highest set bit
+    /// (`floor(log2 v)`); 0 for `v <= 0`.
+    Msb,
+    /// Variable normalizing shift — inputs `[value, exp]`: with
+    /// `amount = base + exp`, rounding-shift right by `amount` when
+    /// `amount >= 0`, else shift left by `−amount`. One barrel shifter
+    /// implements both the mantissa normalization and the
+    /// exponent-recovery shift of the Newton-Raphson divider.
+    NormShift {
+        /// Compile-time bias added to the runtime exponent.
+        base: i32,
+        /// Rounding mode for right shifts.
+        mode: Round,
+    },
+    /// Stage-boundary register (D flip-flop bank, `q <= d`).
+    Reg,
+}
+
+impl CellKind {
+    /// Stable printer/parser mnemonic (the `tv_<kind>` instance name).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            CellKind::Const { .. } => "const",
+            CellKind::Add => "add",
+            CellKind::Sub => "sub",
+            CellKind::Mul => "mul",
+            CellKind::Neg => "neg",
+            CellKind::Mux => "mux",
+            CellKind::CmpGe => "cmpge",
+            CellKind::CmpEq => "cmpeq",
+            CellKind::IsNeg => "isneg",
+            CellKind::Not => "not",
+            CellKind::Shl { .. } => "shl",
+            CellKind::Shr { .. } => "shr",
+            CellKind::And { .. } => "and",
+            CellKind::Clamp { .. } => "clamp",
+            CellKind::Rom { .. } => "rom",
+            CellKind::Msb => "msb",
+            CellKind::NormShift { .. } => "normshift",
+            CellKind::Reg => "reg",
+        }
+    }
+}
+
+/// One instantiated primitive: kind, input nets, output net, and the
+/// output word width in bits (used for wire declarations and the
+/// area/delay pricing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    /// What the cell computes.
+    pub kind: CellKind,
+    /// Input nets, in positional order (see [`CellKind`] docs).
+    pub inputs: Vec<NetId>,
+    /// The single output net (always `cell index + 1`).
+    pub out: NetId,
+    /// Output word width in bits.
+    pub width: u32,
+}
+
+/// An elaborated datapath: the cell graph plus the pipeline metadata
+/// needed to run and price it. Derived `PartialEq` is structural
+/// identity under the canonical net naming — the round-trip test's
+/// isomorphism check.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Design {
+    /// Module name (matches the lowered pipeline's name).
+    pub name: String,
+    /// Input port format.
+    pub in_fmt: QFormat,
+    /// Output port format.
+    pub out_fmt: QFormat,
+    /// Pipeline depth in cycles: the number of combinational segments
+    /// (register ranks + 1), equal to the lowered pipeline's latency.
+    pub stages: u32,
+    /// The net driving the output port.
+    pub output: NetId,
+    /// All cells, in topological creation order.
+    pub cells: Vec<Cell>,
+}
+
+impl Design {
+    /// Total net count (input net + one per cell).
+    pub fn net_count(&self) -> usize {
+        self.cells.len() + 1
+    }
+
+    /// Number of register (stage-boundary flop) cells.
+    pub fn reg_count(&self) -> usize {
+        self.cells.iter().filter(|c| matches!(c.kind, CellKind::Reg)).count()
+    }
+
+    /// Checks the structural invariants the builder guarantees:
+    /// `cells[k].out == k + 1`, every input net already defined
+    /// (topological order), and the output net in range.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, c) in self.cells.iter().enumerate() {
+            if c.out != i + 1 {
+                return Err(format!("cell {i} drives net {} (want {})", c.out, i + 1));
+            }
+            for &n in &c.inputs {
+                if n > i {
+                    return Err(format!("cell {i} reads undefined net {n}"));
+                }
+            }
+            if c.width == 0 || c.width > 127 {
+                return Err(format!("cell {i} has width {}", c.width));
+            }
+        }
+        if self.output >= self.net_count() {
+            return Err(format!("output net {} out of range", self.output));
+        }
+        Ok(())
+    }
+
+    /// Gate-equivalent area of one cell under the unit library.
+    pub fn cell_area(lib: &UnitLibrary, cell: &Cell) -> f64 {
+        let w = cell.width;
+        match &cell.kind {
+            // Pure wiring: constants, bit selects, constant shifts.
+            CellKind::Const { .. } | CellKind::Shl { .. } | CellKind::And { .. } => 0.0,
+            CellKind::IsNeg => 0.0,
+            // Truncation is wiring; nearest rounding needs the
+            // increment adder on the kept bits.
+            CellKind::Shr { mode, .. } => {
+                if *mode == Round::Trunc {
+                    0.0
+                } else {
+                    lib.adder_area(w)
+                }
+            }
+            CellKind::Add | CellKind::Sub | CellKind::Neg => lib.adder_area(w),
+            // Saturation: two comparisons folded into one adder-class
+            // block plus the select muxes.
+            CellKind::Clamp { .. } => lib.adder_area(w) + lib.mux2_ge_per_bit * w as f64,
+            CellKind::CmpGe | CellKind::CmpEq => lib.adder_area(w),
+            // A w-bit product has ~w/2-bit operands in this IR (the
+            // cell width is the full product width).
+            CellKind::Mul => lib.mult_area(operand_bits(w)),
+            CellKind::Mux => lib.mux2_ge_per_bit * w as f64,
+            CellKind::Not => lib.mux2_ge_per_bit,
+            CellKind::Rom { entries } => lib.lut_area(entries.len(), w),
+            CellKind::Msb => lib.shifter_area(w),
+            CellKind::NormShift { mode, .. } => {
+                let round = if *mode == Round::Trunc { 0.0 } else { lib.adder_area(w) };
+                lib.shifter_area(w) + round
+            }
+            CellKind::Reg => lib.reg_ge_per_bit * w as f64,
+        }
+    }
+
+    /// Unit (FO4) delay through one cell.
+    pub fn cell_delay(lib: &UnitLibrary, cell: &Cell) -> f64 {
+        let w = cell.width;
+        match &cell.kind {
+            CellKind::Const { .. }
+            | CellKind::Shl { .. }
+            | CellKind::And { .. }
+            | CellKind::IsNeg => 0.0,
+            CellKind::Shr { mode, .. } => {
+                if *mode == Round::Trunc {
+                    0.0
+                } else {
+                    lib.adder_delay(w)
+                }
+            }
+            CellKind::Add | CellKind::Sub | CellKind::Neg | CellKind::Clamp { .. } => {
+                lib.adder_delay(w)
+            }
+            CellKind::CmpGe | CellKind::CmpEq => lib.adder_delay(w),
+            CellKind::Mul => lib.mult_delay(operand_bits(w)),
+            CellKind::Mux | CellKind::Not => 1.0,
+            CellKind::Rom { entries } => lib.lut_delay(entries.len()),
+            CellKind::Msb => 1.0 + (w.max(2) as f64).log2(),
+            CellKind::NormShift { mode, .. } => {
+                let round = if *mode == Round::Trunc { 0.0 } else { lib.adder_delay(w) };
+                1.0 + (w.max(2) as f64).log2() + round
+            }
+            CellKind::Reg => 0.0,
+        }
+    }
+
+    /// Summed gate-equivalent area over every instantiated cell
+    /// (including the register ranks).
+    pub fn area_ge(&self, lib: &UnitLibrary) -> f64 {
+        self.cells.iter().map(|c| Design::cell_area(lib, c)).sum()
+    }
+
+    /// Longest register-to-register combinational path (FO4): dynamic
+    /// programming over the topological creation order, with register
+    /// outputs restarting the path at depth 0.
+    pub fn critical_delay(&self, lib: &UnitLibrary) -> f64 {
+        let mut depth = vec![0.0f64; self.net_count()];
+        let mut worst = 0.0f64;
+        for c in &self.cells {
+            let arrive = c.inputs.iter().map(|&n| depth[n]).fold(0.0f64, f64::max);
+            depth[c.out] = match c.kind {
+                // The path ends at the register's D input…
+                CellKind::Reg => 0.0,
+                _ => arrive + Design::cell_delay(lib, c),
+            };
+            // …so account it before restarting.
+            if matches!(c.kind, CellKind::Reg) {
+                worst = worst.max(arrive);
+            } else {
+                worst = worst.max(depth[c.out]);
+            }
+        }
+        worst
+    }
+}
+
+/// Operand width of a full-width product cell (see [`CellKind::Mul`]).
+fn operand_bits(product_width: u32) -> u32 {
+    ((product_width + 1) / 2).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Design {
+        // x -> +1 -> reg -> clamp -> y
+        Design {
+            name: "tiny".into(),
+            in_fmt: QFormat::new(3, 12),
+            out_fmt: QFormat::new(3, 12),
+            stages: 2,
+            output: 4,
+            cells: vec![
+                Cell { kind: CellKind::Const { value: 1 }, inputs: vec![], out: 1, width: 2 },
+                Cell { kind: CellKind::Add, inputs: vec![0, 1], out: 2, width: 17 },
+                Cell { kind: CellKind::Reg, inputs: vec![2], out: 3, width: 17 },
+                Cell {
+                    kind: CellKind::Clamp { lo: -4096, hi: 4095 },
+                    inputs: vec![3],
+                    out: 4,
+                    width: 16,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_canonical_and_rejects_broken() {
+        let d = tiny();
+        assert!(d.validate().is_ok());
+        let mut bad = d.clone();
+        bad.cells[1].inputs = vec![5];
+        assert!(bad.validate().is_err());
+        let mut bad2 = d.clone();
+        bad2.cells[2].out = 9;
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn pricing_is_positive_and_registers_cut_the_critical_path() {
+        let lib = UnitLibrary::default();
+        let d = tiny();
+        assert!(d.area_ge(&lib) > 0.0);
+        // With the register between them, the worst segment is
+        // max(add, clamp), not their sum.
+        let add_d = Design::cell_delay(&lib, &d.cells[1]);
+        let clamp_d = Design::cell_delay(&lib, &d.cells[3]);
+        let crit = d.critical_delay(&lib);
+        assert!((crit - add_d.max(clamp_d)).abs() < 1e-9, "crit {crit}");
+        // Remove the register: the path is now the sum.
+        let mut flat = d.clone();
+        flat.cells[2].kind = CellKind::Shl { sh: 0 };
+        assert!((flat.critical_delay(&lib) - (add_d + clamp_d)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reg_count_counts_only_registers() {
+        assert_eq!(tiny().reg_count(), 1);
+    }
+}

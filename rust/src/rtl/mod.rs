@@ -1,0 +1,140 @@
+//! RTL netlist subsystem: the structural tier below the hw pipeline.
+//!
+//! The hw backend lowers every supported spec into a cycle-accurate
+//! [`crate::hw::Pipeline`] whose stages are opaque Rust closures —
+//! faithful in timing and arithmetic, but with no *structure* to
+//! price or print. This module closes the loop down to cells:
+//!
+//! - [`elaborate`] lowers the same design points into a [`Design`] —
+//!   a flat netlist of arithmetic cells ([`CellKind`]) over numbered
+//!   nets, with explicit register ranks at the stage boundaries.
+//! - [`sim`] evaluates a netlist either flushed ([`eval_flush`], the
+//!   raw→raw transfer function) or clocked ([`simulate`],
+//!   cycle-accurate with simultaneous rank latching).
+//! - [`verilog`] prints the netlist as structural Verilog — one
+//!   printer for all six datapaths — and parses our own emission back
+//!   ([`verilog::parse`]), so the round trip is checked for exact
+//!   cell/net isomorphism.
+//! - [`NetlistProbe`] prices the elaborated structure cell by cell
+//!   (summed GE area, longest combinational path between ranks) and
+//!   serves it through [`CostProbe`] as the `netlist` cost tier —
+//!   `explore --backend hw --cost netlist` on the CLI.
+//!
+//! The equivalence chain is pinned by tests, bit-exact on raw words
+//! over the full Table I domain grids: netlist flush == netlist
+//! clocked == hw pipeline == golden kernel. The probe additionally
+//! audits a strided slice of that chain on every cost query, so a
+//! drifted netlist can never be priced silently.
+
+pub mod build;
+pub mod elab;
+pub mod ir;
+pub mod sim;
+pub mod verilog;
+
+pub use elab::elaborate;
+pub use ir::{Cell, CellKind, Design, NetId};
+pub use sim::{eval_flush, simulate};
+
+use crate::approx::MethodSpec;
+use crate::backend::{BackendError, CostProbe, CostSource, DesignCost};
+use crate::cost::UnitLibrary;
+
+/// Number of strided audit points the probe replays through the
+/// golden kernel before pricing a netlist.
+const AUDIT_PROBES: i64 = 251;
+
+/// Prices design points off their elaborated RTL netlist.
+///
+/// `probe_cost` errors `unknown_spec` for specs the block diagrams
+/// cannot express (so explorer fallbacks stay labeled `analytic`),
+/// and errors `internal` if the elaborated netlist disagrees with the
+/// golden kernel on any audit point — a mispriced netlist is a bug,
+/// not a cost.
+pub struct NetlistProbe {
+    lib: UnitLibrary,
+}
+
+impl NetlistProbe {
+    pub fn new() -> NetlistProbe {
+        NetlistProbe { lib: UnitLibrary::default() }
+    }
+}
+
+impl Default for NetlistProbe {
+    fn default() -> Self {
+        NetlistProbe::new()
+    }
+}
+
+impl CostProbe for NetlistProbe {
+    fn probe_cost(&self, spec: &MethodSpec) -> Result<DesignCost, BackendError> {
+        let design = elaborate(spec).map_err(BackendError::unknown_spec)?;
+        let kernel = crate::backend::golden_kernel(spec)?;
+        // Strided audit across the full input range: the netlist must
+        // reproduce the golden kernel bit-exact before it is priced.
+        let (lo, hi) = (spec.io.input.min_raw(), spec.io.input.max_raw());
+        let stride = ((hi - lo) / (AUDIT_PROBES - 1)).max(1);
+        let mut x = lo;
+        while x <= hi {
+            let got = eval_flush(&design, x);
+            let want = kernel.eval_raw(x);
+            if got != want {
+                return Err(BackendError::internal(format!(
+                    "netlist for '{spec}' disagrees with the golden kernel at raw \
+                     {x}: netlist {got}, golden {want}"
+                )));
+            }
+            x += stride;
+        }
+        Ok(DesignCost {
+            source: CostSource::Netlist,
+            latency_cycles: design.stages,
+            stage_delay_fo4: design.critical_delay(&self.lib),
+            area_ge: design.area_ge(&self.lib),
+            cycles_per_element: 1.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{MethodId, MethodSpec};
+    use crate::backend::ErrorCode;
+
+    #[test]
+    fn probe_prices_table1_rows_with_netlist_provenance() {
+        let probe = NetlistProbe::new();
+        for spec in MethodSpec::table1_all() {
+            let cost = probe.probe_cost(&spec).expect("Table I rows elaborate");
+            assert_eq!(cost.source, CostSource::Netlist, "{spec}");
+            assert!(cost.area_ge > 0.0, "{spec}: zero netlist area");
+            assert!(cost.stage_delay_fo4 > 0.0, "{spec}: zero critical path");
+            assert!(cost.latency_cycles > 0, "{spec}");
+            assert_eq!(cost.cycles_per_element, 1.0, "{spec}");
+        }
+    }
+
+    #[test]
+    fn probe_rejects_unsupported_specs_as_unknown() {
+        let probe = NetlistProbe::new();
+        let bogus = MethodSpec {
+            params: crate::approx::MethodParams::Lambert { terms: 40 },
+            io: crate::approx::IoSpec::table1(),
+            domain: 6.0,
+        };
+        let err = probe.probe_cost(&bogus).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
+        assert!(err.message.contains("unsupported by hw backend"), "{err}");
+    }
+
+    #[test]
+    fn netlist_latency_matches_the_measured_pipeline() {
+        let probe = NetlistProbe::new();
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let cost = probe.probe_cost(&spec).unwrap();
+        let pipe = crate::hw::pipeline_for(&spec).unwrap();
+        assert_eq!(cost.latency_cycles as usize, pipe.latency());
+    }
+}

@@ -1,0 +1,227 @@
+//! Two-valued netlist simulation: a flush (combinational) evaluator
+//! and a cycle-accurate clocked evaluator over the registered stage
+//! boundaries.
+//!
+//! Both simulators walk the cells in creation order — the builder
+//! guarantees that order is topological — and both defer every
+//! rounding decision to [`Round::shift_right`], the *same* function
+//! the golden fixed-point models call. The equivalence chain
+//! (netlist == pipeline == golden kernel) is therefore exact by
+//! construction wherever the elaborated cell graph mirrors the golden
+//! arithmetic, and the property tests pin that it does.
+
+use super::ir::{Cell, CellKind, Design};
+use crate::fixed::Round;
+
+/// Evaluates one combinational cell given its input values.
+fn eval_cell(cell: &Cell, vals: &[i128]) -> i128 {
+    let a = |i: usize| vals[cell.inputs[i]];
+    match &cell.kind {
+        CellKind::Const { value } => *value,
+        CellKind::Add => a(0) + a(1),
+        CellKind::Sub => a(0) - a(1),
+        CellKind::Mul => a(0) * a(1),
+        CellKind::Neg => -a(0),
+        CellKind::Mux => {
+            if a(0) != 0 {
+                a(1)
+            } else {
+                a(2)
+            }
+        }
+        CellKind::CmpGe => (a(0) >= a(1)) as i128,
+        CellKind::CmpEq => (a(0) == a(1)) as i128,
+        CellKind::IsNeg => (a(0) < 0) as i128,
+        CellKind::Not => (a(0) == 0) as i128,
+        CellKind::Shl { sh } => a(0) << sh,
+        CellKind::Shr { sh, mode } => mode.shift_right(a(0), *sh),
+        CellKind::And { mask } => a(0) & mask,
+        CellKind::Clamp { lo, hi } => a(0).clamp(*lo, *hi),
+        CellKind::Rom { entries } => {
+            // Negative addresses only occur on speculative (muxed-out)
+            // paths; clamp both ends like UniformLut::at's guard.
+            let idx = a(0).clamp(0, entries.len() as i128 - 1) as usize;
+            entries[idx] as i128
+        }
+        CellKind::Msb => {
+            let v = a(0);
+            if v <= 0 {
+                0
+            } else {
+                (127 - v.leading_zeros()) as i128
+            }
+        }
+        CellKind::NormShift { base, mode } => {
+            let amount = *base + a(1) as i32;
+            if amount >= 0 {
+                mode.shift_right(a(0), amount as u32)
+            } else {
+                a(0) << ((-amount) as u32)
+            }
+        }
+        CellKind::Reg => unreachable!("Reg handled by the caller"),
+    }
+}
+
+/// Flush evaluation: registers become wires and the whole design is
+/// evaluated combinationally for one input word. This is the netlist's
+/// `raw → raw` transfer function — what the equivalence tests compare
+/// against `Pipeline::eval` and the golden kernel.
+pub fn eval_flush(design: &Design, x: i64) -> i64 {
+    let mut vals = vec![0i128; design.net_count()];
+    vals[0] = x as i128;
+    for cell in &design.cells {
+        vals[cell.out] = match cell.kind {
+            CellKind::Reg => vals[cell.inputs[0]],
+            _ => eval_cell(cell, &vals),
+        };
+    }
+    vals[design.output] as i64
+}
+
+/// Cycle-accurate clocked simulation: feeds one input per cycle,
+/// latches every register rank simultaneously at each clock edge, and
+/// returns the outputs plus the cycle count (`stages + n − 1`, the
+/// fully pipelined schedule). Bit-exact with [`eval_flush`] per input
+/// — the cross-check the tests pin.
+pub fn simulate(design: &Design, xs: &[i64]) -> (Vec<i64>, u64) {
+    let n = xs.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let stages = design.stages as usize;
+    let cycles = stages + n - 1;
+    let mut vals = vec![0i128; design.net_count()];
+    let mut out = Vec::with_capacity(n);
+    let regs: Vec<usize> = design
+        .cells
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| matches!(c.kind, CellKind::Reg))
+        .map(|(i, _)| i)
+        .collect();
+    for cycle in 0..cycles {
+        // Clock edge: snapshot every D input first, then latch — a
+        // rank feeding the next rank directly must not shoot through.
+        let next: Vec<i128> =
+            regs.iter().map(|&i| vals[design.cells[i].inputs[0]]).collect();
+        for (&i, v) in regs.iter().zip(next) {
+            vals[design.cells[i].out] = v;
+        }
+        // Drive the input port (zeros once the stream drains).
+        vals[0] = if cycle < n { xs[cycle] as i128 } else { 0 };
+        // Propagate the combinational cells.
+        for cell in &design.cells {
+            if !matches!(cell.kind, CellKind::Reg) {
+                vals[cell.out] = eval_cell(cell, &vals);
+            }
+        }
+        if cycle + 1 >= stages {
+            out.push(vals[design.output] as i64);
+        }
+    }
+    (out, cycles as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::QFormat;
+
+    /// y = clamp(x + 1) behind one register rank (2 stages).
+    fn incr_design() -> Design {
+        Design {
+            name: "incr".into(),
+            in_fmt: QFormat::new(3, 12),
+            out_fmt: QFormat::new(3, 12),
+            stages: 2,
+            output: 4,
+            cells: vec![
+                Cell { kind: CellKind::Const { value: 1 }, inputs: vec![], out: 1, width: 2 },
+                Cell { kind: CellKind::Reg, inputs: vec![0], out: 2, width: 16 },
+                Cell { kind: CellKind::Add, inputs: vec![2, 1], out: 3, width: 17 },
+                Cell {
+                    kind: CellKind::Clamp { lo: -4096, hi: 4095 },
+                    inputs: vec![3],
+                    out: 4,
+                    width: 16,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn flush_and_clocked_agree_with_pipelined_cycle_count() {
+        let d = incr_design();
+        let xs: Vec<i64> = vec![0, 5, -7, 4094, 4095, -4096];
+        let (ys, cycles) = simulate(&d, &xs);
+        assert_eq!(cycles, d.stages as u64 + xs.len() as u64 - 1);
+        assert_eq!(ys.len(), xs.len());
+        for (&x, &y) in xs.iter().zip(&ys) {
+            assert_eq!(y, eval_flush(&d, x), "x={x}");
+            assert_eq!(y, (x + 1).min(4095), "x={x}");
+        }
+    }
+
+    #[test]
+    fn rounding_cells_defer_to_round_shift_right() {
+        for (mode, want) in
+            [(Round::Trunc, 2), (Round::NearestAway, 3), (Round::NearestEven, 2)]
+        {
+            let d = Design {
+                name: "shr".into(),
+                in_fmt: QFormat::new(3, 12),
+                out_fmt: QFormat::new(3, 12),
+                stages: 1,
+                output: 1,
+                cells: vec![Cell {
+                    kind: CellKind::Shr { sh: 1, mode },
+                    inputs: vec![0],
+                    out: 1,
+                    width: 16,
+                }],
+            };
+            assert_eq!(eval_flush(&d, 5), want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn normshift_matches_the_shift_identity() {
+        // NormShift(base=-2)(v, e): amount = e - 2.
+        let d = Design {
+            name: "ns".into(),
+            in_fmt: QFormat::new(6, 8),
+            out_fmt: QFormat::new(6, 8),
+            stages: 1,
+            output: 2,
+            cells: vec![
+                Cell { kind: CellKind::Const { value: 3 }, inputs: vec![], out: 1, width: 4 },
+                Cell {
+                    kind: CellKind::NormShift { base: -2, mode: Round::NearestAway },
+                    inputs: vec![0, 1],
+                    out: 2,
+                    width: 16,
+                },
+            ],
+        };
+        // amount = 1: 13 >> 1 rounding away = 7.
+        assert_eq!(eval_flush(&d, 13), 7);
+    }
+
+    #[test]
+    fn msb_is_floor_log2_and_zero_for_nonpositive() {
+        let d = Design {
+            name: "msb".into(),
+            in_fmt: QFormat::new(6, 8),
+            out_fmt: QFormat::new(6, 8),
+            stages: 1,
+            output: 1,
+            cells: vec![Cell { kind: CellKind::Msb, inputs: vec![0], out: 1, width: 7 }],
+        };
+        assert_eq!(eval_flush(&d, 1), 0);
+        assert_eq!(eval_flush(&d, 2), 1);
+        assert_eq!(eval_flush(&d, 255), 7);
+        assert_eq!(eval_flush(&d, 0), 0);
+        assert_eq!(eval_flush(&d, -9), 0);
+    }
+}

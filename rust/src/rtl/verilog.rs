@@ -1,0 +1,631 @@
+//! Structural Verilog round trip: a deterministic printer from the
+//! netlist IR and a line-oriented parser that re-reads our own
+//! emission back into a [`Design`].
+//!
+//! One printer serves all six datapaths — the IR is the single source
+//! of truth, so `hw verilog` output can no longer drift from the
+//! simulated pipeline. The parser is deliberately narrow: it consumes
+//! exactly the shape `emit` produces (one cell instance per line,
+//! `n<k>` net names, `u<i>` instance names, per-ROM case modules) and
+//! the round-trip test `parse(&emit(d)) == d` is the cell/net
+//! isomorphism check — both sides use the derived structural equality
+//! on [`Design`].
+//!
+//! Layout of an emission:
+//!
+//! ```text
+//! // tanh-vlsi rtl netlist          header: name/in/out/stages/cells
+//! module tanh_rtl (clk, x, y);      one instance per IR cell
+//!   ...
+//! endmodule
+//! module tv_rom_c<i> (addr, data);  one case-arm module per ROM cell
+//! module tv_add ...                 behavioral reference primitives
+//! ```
+
+use super::ir::{Cell, CellKind, Design};
+use crate::fixed::{QFormat, Round};
+use std::fmt::Write as _;
+
+/// Stable wire encoding of a rounding mode.
+fn mode_code(mode: Round) -> u8 {
+    match mode {
+        Round::Trunc => 0,
+        Round::NearestAway => 1,
+        Round::NearestEven => 2,
+    }
+}
+
+fn mode_parse(code: i128) -> Result<Round, String> {
+    match code {
+        0 => Ok(Round::Trunc),
+        1 => Ok(Round::NearestAway),
+        2 => Ok(Round::NearestEven),
+        other => Err(format!("bad MODE code {other}")),
+    }
+}
+
+/// Signed sized Verilog literal for a ROM entry.
+fn rom_literal(v: i64, width: u32) -> String {
+    if v < 0 {
+        format!("-{width}'sd{}", v.unsigned_abs())
+    } else {
+        format!("{width}'sd{v}")
+    }
+}
+
+fn wire_decl(net: usize, width: u32) -> String {
+    if width == 1 {
+        format!("  wire n{net};")
+    } else {
+        format!("  wire signed [{}:0] n{net};", width - 1)
+    }
+}
+
+/// Emits the design as structural Verilog.
+pub fn emit(d: &Design) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "// tanh-vlsi rtl netlist");
+    let _ = writeln!(s, "// name: {}", d.name);
+    let _ = writeln!(s, "// in: {}", d.in_fmt);
+    let _ = writeln!(s, "// out: {}", d.out_fmt);
+    let _ = writeln!(s, "// stages: {}", d.stages);
+    let _ = writeln!(s, "// cells: {}", d.cells.len());
+    let _ = writeln!(s, "module tanh_rtl (clk, x, y);");
+    let _ = writeln!(s, "  input wire clk;");
+    let _ = writeln!(s, "  input wire signed [{}:0] x;", d.in_fmt.width() - 1);
+    let _ = writeln!(s, "  output wire signed [{}:0] y;", d.out_fmt.width() - 1);
+    let _ = writeln!(s, "{}", wire_decl(0, d.in_fmt.width()));
+    for cell in &d.cells {
+        let _ = writeln!(s, "{}", wire_decl(cell.out, cell.width));
+    }
+    let _ = writeln!(s, "  assign n0 = x;");
+    for (i, cell) in d.cells.iter().enumerate() {
+        let w = cell.width;
+        let line = match &cell.kind {
+            CellKind::Const { value } => format!(
+                "tv_const #(.W({w}), .V({value})) u{i} (.y(n{}));",
+                cell.out
+            ),
+            CellKind::Add | CellKind::Sub | CellKind::Mul | CellKind::CmpGe | CellKind::CmpEq => {
+                format!(
+                    "tv_{} #(.W({w})) u{i} (.a(n{}), .b(n{}), .y(n{}));",
+                    cell.kind.mnemonic(),
+                    cell.inputs[0],
+                    cell.inputs[1],
+                    cell.out
+                )
+            }
+            CellKind::Neg | CellKind::IsNeg | CellKind::Not | CellKind::Msb => format!(
+                "tv_{} #(.W({w})) u{i} (.a(n{}), .y(n{}));",
+                cell.kind.mnemonic(),
+                cell.inputs[0],
+                cell.out
+            ),
+            CellKind::Mux => format!(
+                "tv_mux #(.W({w})) u{i} (.s(n{}), .a(n{}), .b(n{}), .y(n{}));",
+                cell.inputs[0], cell.inputs[1], cell.inputs[2], cell.out
+            ),
+            CellKind::Shl { sh } => format!(
+                "tv_shl #(.W({w}), .SH({sh})) u{i} (.a(n{}), .y(n{}));",
+                cell.inputs[0], cell.out
+            ),
+            CellKind::Shr { sh, mode } => format!(
+                "tv_shr #(.W({w}), .SH({sh}), .MODE({})) u{i} (.a(n{}), .y(n{}));",
+                mode_code(*mode),
+                cell.inputs[0],
+                cell.out
+            ),
+            CellKind::And { mask } => format!(
+                "tv_and #(.W({w}), .MASK({mask})) u{i} (.a(n{}), .y(n{}));",
+                cell.inputs[0], cell.out
+            ),
+            CellKind::Clamp { lo, hi } => format!(
+                "tv_clamp #(.W({w}), .LO({lo}), .HI({hi})) u{i} (.a(n{}), .y(n{}));",
+                cell.inputs[0], cell.out
+            ),
+            CellKind::Rom { .. } => format!(
+                "tv_rom_c{i} u{i} (.addr(n{}), .data(n{}));",
+                cell.inputs[0], cell.out
+            ),
+            CellKind::NormShift { base, mode } => format!(
+                "tv_normshift #(.W({w}), .BASE({base}), .MODE({})) u{i} (.a(n{}), .e(n{}), .y(n{}));",
+                mode_code(*mode),
+                cell.inputs[0],
+                cell.inputs[1],
+                cell.out
+            ),
+            CellKind::Reg => format!(
+                "tv_reg #(.W({w})) u{i} (.clk(clk), .d(n{}), .q(n{}));",
+                cell.inputs[0], cell.out
+            ),
+        };
+        let _ = writeln!(s, "  {line}");
+    }
+    let _ = writeln!(s, "  assign y = n{};", d.output);
+    let _ = writeln!(s, "endmodule");
+
+    // One case-arm module per ROM instance.
+    for (i, cell) in d.cells.iter().enumerate() {
+        if let CellKind::Rom { entries } = &cell.kind {
+            let _ = writeln!(s, "module tv_rom_c{i} (addr, data);");
+            let _ = writeln!(s, "  input wire signed [126:0] addr;");
+            let _ = writeln!(s, "  output reg signed [{}:0] data;", cell.width - 1);
+            let _ = writeln!(s, "  always @* begin");
+            let _ = writeln!(s, "    case (addr)");
+            for (j, &v) in entries.iter().enumerate() {
+                let _ = writeln!(s, "      {j}: data = {};", rom_literal(v, cell.width));
+            }
+            let last = *entries.last().expect("ROM has entries");
+            let _ = writeln!(s, "      default: data = {};", rom_literal(last, cell.width));
+            let _ = writeln!(s, "    endcase");
+            let _ = writeln!(s, "  end");
+            let _ = writeln!(s, "endmodule");
+        }
+    }
+
+    // Behavioral reference primitives for the kinds this design uses.
+    // The parser ignores everything from here on.
+    let mut used: Vec<&'static str> = d
+        .cells
+        .iter()
+        .map(|c| c.kind.mnemonic())
+        .filter(|m| *m != "rom")
+        .collect();
+    used.sort_unstable();
+    used.dedup();
+    for m in used {
+        let _ = writeln!(s, "{}", primitive_module(m));
+    }
+    s
+}
+
+/// Behavioral reference implementation for one primitive.
+fn primitive_module(mnemonic: &str) -> &'static str {
+    match mnemonic {
+        "const" => "module tv_const #(parameter W = 1, parameter signed [126:0] V = 0) (y);\n  output wire signed [W-1:0] y;\n  assign y = V;\nendmodule",
+        "add" => "module tv_add #(parameter W = 1) (a, b, y);\n  input wire signed [126:0] a, b;\n  output wire signed [W-1:0] y;\n  assign y = a + b;\nendmodule",
+        "sub" => "module tv_sub #(parameter W = 1) (a, b, y);\n  input wire signed [126:0] a, b;\n  output wire signed [W-1:0] y;\n  assign y = a - b;\nendmodule",
+        "mul" => "module tv_mul #(parameter W = 1) (a, b, y);\n  input wire signed [126:0] a, b;\n  output wire signed [W-1:0] y;\n  assign y = a * b;\nendmodule",
+        "neg" => "module tv_neg #(parameter W = 1) (a, y);\n  input wire signed [126:0] a;\n  output wire signed [W-1:0] y;\n  assign y = -a;\nendmodule",
+        "mux" => "module tv_mux #(parameter W = 1) (s, a, b, y);\n  input wire s;\n  input wire signed [126:0] a, b;\n  output wire signed [W-1:0] y;\n  assign y = s ? a : b;\nendmodule",
+        "cmpge" => "module tv_cmpge #(parameter W = 1) (a, b, y);\n  input wire signed [126:0] a, b;\n  output wire y;\n  assign y = (a >= b);\nendmodule",
+        "cmpeq" => "module tv_cmpeq #(parameter W = 1) (a, b, y);\n  input wire signed [126:0] a, b;\n  output wire y;\n  assign y = (a == b);\nendmodule",
+        "isneg" => "module tv_isneg #(parameter W = 1) (a, y);\n  input wire signed [126:0] a;\n  output wire y;\n  assign y = (a < 0);\nendmodule",
+        "not" => "module tv_not #(parameter W = 1) (a, y);\n  input wire signed [126:0] a;\n  output wire y;\n  assign y = (a == 0);\nendmodule",
+        "shl" => "module tv_shl #(parameter W = 1, parameter SH = 0) (a, y);\n  input wire signed [126:0] a;\n  output wire signed [W-1:0] y;\n  assign y = a <<< SH;\nendmodule",
+        "shr" => "module tv_shr #(parameter W = 1, parameter SH = 0, parameter MODE = 0) (a, y);\n  input wire signed [126:0] a;\n  output wire signed [W-1:0] y;\n  wire signed [126:0] fl = a >>> SH;\n  wire signed [126:0] rem = a - (fl <<< SH);\n  wire signed [126:0] half = (SH == 0) ? 127'sd0 : (127'sd1 <<< (SH - 1));\n  assign y = (SH == 0 || MODE == 0) ? fl\n           : (MODE == 1) ? ((a < 0) ? -(((-a) + half) >>> SH) : ((a + half) >>> SH))\n           : ((rem > half || (rem == half && fl[0])) ? fl + 127'sd1 : fl);\nendmodule",
+        "and" => "module tv_and #(parameter W = 1, parameter signed [126:0] MASK = 0) (a, y);\n  input wire signed [126:0] a;\n  output wire signed [W-1:0] y;\n  assign y = a & MASK;\nendmodule",
+        "clamp" => "module tv_clamp #(parameter W = 1, parameter signed [126:0] LO = 0, parameter signed [126:0] HI = 0) (a, y);\n  input wire signed [126:0] a;\n  output wire signed [W-1:0] y;\n  assign y = (a < LO) ? LO : (a > HI) ? HI : a;\nendmodule",
+        "msb" => "module tv_msb #(parameter W = 7) (a, y);\n  input wire signed [126:0] a;\n  output wire signed [W-1:0] y;\n  reg [7:0] pos;\n  integer i;\n  always @* begin\n    pos = 8'd0;\n    for (i = 0; i < 126; i = i + 1) if (a[i]) pos = i[7:0];\n  end\n  assign y = (a <= 0) ? {W{1'b0}} : pos;\nendmodule",
+        "normshift" => "module tv_normshift #(parameter W = 1, parameter signed [31:0] BASE = 0, parameter MODE = 0) (a, e, y);\n  input wire signed [126:0] a;\n  input wire signed [31:0] e;\n  output wire signed [W-1:0] y;\n  wire signed [31:0] amt = BASE + e;\n  wire signed [126:0] fl = a >>> amt;\n  wire signed [126:0] rem = a - (fl <<< amt);\n  wire signed [126:0] half = (amt <= 0) ? 127'sd0 : (127'sd1 <<< (amt - 1));\n  assign y = (amt < 0) ? (a <<< (-amt))\n           : (amt == 0 || MODE == 0) ? fl\n           : (MODE == 1) ? ((a < 0) ? -(((-a) + half) >>> amt) : ((a + half) >>> amt))\n           : ((rem > half || (rem == half && fl[0])) ? fl + 127'sd1 : fl);\nendmodule",
+        "reg" => "module tv_reg #(parameter W = 1) (clk, d, q);\n  input wire clk;\n  input wire signed [W-1:0] d;\n  output reg signed [W-1:0] q;\n  always @(posedge clk) q <= d;\nendmodule",
+        other => unreachable!("no primitive for '{other}'"),
+    }
+}
+
+// ------------------------------------------------------------ parser
+
+/// Splits `".a(n1), .b(n2)"` into top-level comma-separated items.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut start) = (0usize, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let tail = s[start..].trim();
+    if !tail.is_empty() {
+        out.push(tail);
+    }
+    out
+}
+
+/// Parses one `.key(value)` pair.
+fn parse_pair(item: &str) -> Result<(&str, &str), String> {
+    let item = item.trim();
+    let rest = item
+        .strip_prefix('.')
+        .ok_or_else(|| format!("expected '.key(value)', got '{item}'"))?;
+    let open = rest.find('(').ok_or_else(|| format!("missing '(' in '{item}'"))?;
+    let close = rest.rfind(')').ok_or_else(|| format!("missing ')' in '{item}'"))?;
+    Ok((rest[..open].trim(), rest[open + 1..close].trim()))
+}
+
+fn parse_net(s: &str) -> Result<usize, String> {
+    s.strip_prefix('n')
+        .and_then(|d| d.parse().ok())
+        .ok_or_else(|| format!("expected net 'n<k>', got '{s}'"))
+}
+
+fn parse_i128(s: &str) -> Result<i128, String> {
+    s.parse().map_err(|_| format!("bad integer '{s}'"))
+}
+
+/// Finds the span enclosed by the paren at `from` (which must be '('),
+/// returning (inner, index after the closing paren).
+fn paren_span(s: &str, from: usize) -> Result<(&str, usize), String> {
+    debug_assert_eq!(&s[from..from + 1], "(");
+    let mut depth = 0usize;
+    for (i, c) in s[from..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((&s[from + 1..from + i], from + i + 1));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(format!("unbalanced parens in '{s}'"))
+}
+
+struct Instance<'a> {
+    module: &'a str,
+    index: usize,
+    params: Vec<(&'a str, i128)>,
+    ports: Vec<(&'a str, &'a str)>,
+}
+
+fn parse_instance(line: &str) -> Result<Instance<'_>, String> {
+    let line = line.trim().trim_end_matches(';');
+    let sp = line.find(char::is_whitespace).ok_or("truncated instance line")?;
+    let module = &line[..sp];
+    let mut rest = line[sp..].trim_start();
+    let mut params = Vec::new();
+    if let Some(stripped) = rest.strip_prefix('#') {
+        let (inner, after) = paren_span(stripped, 0)?;
+        for item in split_top(inner) {
+            let (k, v) = parse_pair(item)?;
+            params.push((k, parse_i128(v)?));
+        }
+        rest = stripped[after..].trim_start();
+    }
+    let usp = rest.find(char::is_whitespace).ok_or("missing instance name")?;
+    let index: usize = rest[..usp]
+        .strip_prefix('u')
+        .and_then(|d| d.parse().ok())
+        .ok_or_else(|| format!("expected instance 'u<i>', got '{}'", &rest[..usp]))?;
+    let rest = rest[usp..].trim_start();
+    if !rest.starts_with('(') {
+        return Err(format!("missing port list in '{line}'"));
+    }
+    let (inner, _) = paren_span(rest, 0)?;
+    let mut ports = Vec::new();
+    for item in split_top(inner) {
+        let (k, v) = parse_pair(item)?;
+        ports.push((k, v));
+    }
+    Ok(Instance { module, index, params, ports })
+}
+
+impl<'a> Instance<'a> {
+    fn param(&self, key: &str) -> Result<i128, String> {
+        self.params
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| format!("u{}: missing parameter .{key}", self.index))
+    }
+
+    fn port(&self, key: &str) -> Result<&'a str, String> {
+        self.ports
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| format!("u{}: missing port .{key}", self.index))
+    }
+
+    fn net(&self, key: &str) -> Result<usize, String> {
+        parse_net(self.port(key)?)
+    }
+}
+
+/// Parses a `<w>'sd<v>` (optionally negated) sized literal.
+fn parse_rom_literal(s: &str) -> Result<i64, String> {
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let pos = body.find("'sd").ok_or_else(|| format!("bad ROM literal '{s}'"))?;
+    let mag: i64 =
+        body[pos + 3..].parse().map_err(|_| format!("bad ROM literal '{s}'"))?;
+    Ok(if neg { -mag } else { mag })
+}
+
+/// Parses our own structural emission back into a [`Design`]. Narrow
+/// by design: accepts exactly the shape [`emit`] produces.
+pub fn parse(src: &str) -> Result<Design, String> {
+    let mut name = None;
+    let mut in_fmt = None;
+    let mut out_fmt = None;
+    let mut stages = None;
+    let mut cell_count = None;
+    let mut widths: Vec<(usize, u32)> = Vec::new();
+    let mut output = None;
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut roms: Vec<(usize, Vec<i64>)> = Vec::new();
+
+    let mut lines = src.lines();
+    // Header + main module.
+    for line in lines.by_ref() {
+        let t = line.trim();
+        if let Some(v) = t.strip_prefix("// name: ") {
+            name = Some(v.to_string());
+        } else if let Some(v) = t.strip_prefix("// in: ") {
+            in_fmt = Some(QFormat::parse(v).ok_or_else(|| format!("bad in format '{v}'"))?);
+        } else if let Some(v) = t.strip_prefix("// out: ") {
+            out_fmt = Some(QFormat::parse(v).ok_or_else(|| format!("bad out format '{v}'"))?);
+        } else if let Some(v) = t.strip_prefix("// stages: ") {
+            stages = Some(v.parse::<u32>().map_err(|_| format!("bad stage count '{v}'"))?);
+        } else if let Some(v) = t.strip_prefix("// cells: ") {
+            cell_count = Some(v.parse::<usize>().map_err(|_| format!("bad cell count '{v}'"))?);
+        } else if let Some(v) = t.strip_prefix("wire signed [") {
+            let close = v.find(":0] n").ok_or_else(|| format!("bad wire decl '{t}'"))?;
+            let hi: u32 = v[..close].parse().map_err(|_| format!("bad wire decl '{t}'"))?;
+            let net = parse_net(v[close + 4..].trim_end_matches(';'))?;
+            widths.push((net, hi + 1));
+        } else if let Some(v) = t.strip_prefix("wire n") {
+            let net: usize = v
+                .trim_end_matches(';')
+                .parse()
+                .map_err(|_| format!("bad wire decl '{t}'"))?;
+            widths.push((net, 1));
+        } else if let Some(v) = t.strip_prefix("assign y = ") {
+            output = Some(parse_net(v.trim_end_matches(';'))?);
+        } else if t.starts_with("tv_") {
+            let inst = parse_instance(t)?;
+            if inst.index != cells.len() {
+                return Err(format!(
+                    "instance u{} out of order (expected u{})",
+                    inst.index,
+                    cells.len()
+                ));
+            }
+            let (kind, inputs) = decode_instance(&inst)?;
+            let out_port = match inst.module {
+                "tv_reg" => "q",
+                m if m.starts_with("tv_rom_c") => "data",
+                _ => "y",
+            };
+            let out = inst.net(out_port)?;
+            let width = widths
+                .iter()
+                .find(|(n, _)| *n == out)
+                .map(|(_, w)| *w)
+                .ok_or_else(|| format!("u{}: no wire declared for n{out}", inst.index))?;
+            cells.push(Cell { kind, inputs, out, width });
+        } else if t == "endmodule" {
+            break;
+        }
+    }
+    // ROM case modules (behavioral primitives are ignored).
+    let mut current: Option<(usize, Vec<i64>)> = None;
+    for line in lines {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("module tv_rom_c") {
+            let idx: usize = rest
+                .split_whitespace()
+                .next()
+                .and_then(|w| w.parse().ok())
+                .ok_or_else(|| format!("bad ROM module header '{t}'"))?;
+            current = Some((idx, Vec::new()));
+        } else if let Some((idx, mut entries)) = current.take() {
+            if t == "endmodule" {
+                roms.push((idx, entries));
+            } else {
+                if let Some(pos) = t.find(": data = ") {
+                    let arm = &t[..pos];
+                    if arm != "default" {
+                        let j: usize =
+                            arm.parse().map_err(|_| format!("bad ROM case arm '{t}'"))?;
+                        if j != entries.len() {
+                            return Err(format!("ROM c{idx} case arms out of order at {j}"));
+                        }
+                        let lit = t[pos + 9..].trim_end_matches(';');
+                        entries.push(parse_rom_literal(lit)?);
+                    }
+                }
+                current = Some((idx, entries));
+            }
+        }
+    }
+    for (idx, entries) in roms {
+        let cell = cells
+            .get_mut(idx)
+            .ok_or_else(|| format!("ROM module c{idx} has no matching instance"))?;
+        match &mut cell.kind {
+            CellKind::Rom { entries: e } => *e = entries,
+            other => {
+                return Err(format!("ROM module c{idx} names a {} cell", other.mnemonic()))
+            }
+        }
+    }
+    for cell in &cells {
+        if let CellKind::Rom { entries } = &cell.kind {
+            if entries.is_empty() {
+                return Err(format!("ROM feeding n{} has no case module", cell.out));
+            }
+        }
+    }
+
+    let d = Design {
+        name: name.ok_or("missing '// name:' header")?,
+        in_fmt: in_fmt.ok_or("missing '// in:' header")?,
+        out_fmt: out_fmt.ok_or("missing '// out:' header")?,
+        stages: stages.ok_or("missing '// stages:' header")?,
+        output: output.ok_or("missing 'assign y' output binding")?,
+        cells,
+    };
+    if let Some(want) = cell_count {
+        if d.cells.len() != want {
+            return Err(format!(
+                "header declares {want} cells but {} instances were parsed",
+                d.cells.len()
+            ));
+        }
+    }
+    d.validate()?;
+    Ok(d)
+}
+
+/// Maps one parsed instance to its cell kind and input nets.
+fn decode_instance(inst: &Instance<'_>) -> Result<(CellKind, Vec<usize>), String> {
+    let two = |i: &Instance<'_>| -> Result<Vec<usize>, String> {
+        Ok(vec![i.net("a")?, i.net("b")?])
+    };
+    let one = |i: &Instance<'_>| -> Result<Vec<usize>, String> { Ok(vec![i.net("a")?]) };
+    Ok(match inst.module {
+        "tv_const" => (CellKind::Const { value: inst.param("V")? }, vec![]),
+        "tv_add" => (CellKind::Add, two(inst)?),
+        "tv_sub" => (CellKind::Sub, two(inst)?),
+        "tv_mul" => (CellKind::Mul, two(inst)?),
+        "tv_neg" => (CellKind::Neg, one(inst)?),
+        "tv_mux" => (
+            CellKind::Mux,
+            vec![inst.net("s")?, inst.net("a")?, inst.net("b")?],
+        ),
+        "tv_cmpge" => (CellKind::CmpGe, two(inst)?),
+        "tv_cmpeq" => (CellKind::CmpEq, two(inst)?),
+        "tv_isneg" => (CellKind::IsNeg, one(inst)?),
+        "tv_not" => (CellKind::Not, one(inst)?),
+        "tv_shl" => (CellKind::Shl { sh: inst.param("SH")? as u32 }, one(inst)?),
+        "tv_shr" => (
+            CellKind::Shr {
+                sh: inst.param("SH")? as u32,
+                mode: mode_parse(inst.param("MODE")?)?,
+            },
+            one(inst)?,
+        ),
+        "tv_and" => (CellKind::And { mask: inst.param("MASK")? }, one(inst)?),
+        "tv_clamp" => (
+            CellKind::Clamp { lo: inst.param("LO")?, hi: inst.param("HI")? },
+            one(inst)?,
+        ),
+        "tv_msb" => (CellKind::Msb, one(inst)?),
+        "tv_normshift" => (
+            CellKind::NormShift {
+                base: inst.param("BASE")? as i32,
+                mode: mode_parse(inst.param("MODE")?)?,
+            },
+            vec![inst.net("a")?, inst.net("e")?],
+        ),
+        "tv_reg" => (CellKind::Reg, vec![inst.net("d")?]),
+        m if m.starts_with("tv_rom_c") => {
+            (CellKind::Rom { entries: Vec::new() }, vec![inst.net("addr")?])
+        }
+        other => return Err(format!("unknown primitive '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A design exercising every cell kind once.
+    fn kitchen_sink() -> Design {
+        let cells = vec![
+            Cell { kind: CellKind::Const { value: -3 }, inputs: vec![], out: 1, width: 4 },
+            Cell { kind: CellKind::Add, inputs: vec![0, 1], out: 2, width: 17 },
+            Cell { kind: CellKind::Sub, inputs: vec![2, 1], out: 3, width: 18 },
+            Cell { kind: CellKind::Mul, inputs: vec![3, 1], out: 4, width: 22 },
+            Cell { kind: CellKind::Neg, inputs: vec![4], out: 5, width: 23 },
+            Cell { kind: CellKind::IsNeg, inputs: vec![5], out: 6, width: 1 },
+            Cell { kind: CellKind::Mux, inputs: vec![6, 5, 4], out: 7, width: 23 },
+            Cell { kind: CellKind::CmpGe, inputs: vec![7, 1], out: 8, width: 1 },
+            Cell { kind: CellKind::CmpEq, inputs: vec![7, 1], out: 9, width: 1 },
+            Cell { kind: CellKind::Not, inputs: vec![9], out: 10, width: 1 },
+            Cell { kind: CellKind::Shl { sh: 2 }, inputs: vec![7], out: 11, width: 25 },
+            Cell {
+                kind: CellKind::Shr { sh: 3, mode: Round::NearestEven },
+                inputs: vec![11],
+                out: 12,
+                width: 22,
+            },
+            Cell { kind: CellKind::And { mask: 255 }, inputs: vec![12], out: 13, width: 8 },
+            Cell {
+                kind: CellKind::Clamp { lo: -100, hi: 100 },
+                inputs: vec![13],
+                out: 14,
+                width: 8,
+            },
+            Cell {
+                kind: CellKind::Rom { entries: vec![0, -7, 42] },
+                inputs: vec![13],
+                out: 15,
+                width: 16,
+            },
+            Cell { kind: CellKind::Msb, inputs: vec![15], out: 16, width: 7 },
+            Cell {
+                kind: CellKind::NormShift { base: -29, mode: Round::NearestAway },
+                inputs: vec![15, 16],
+                out: 17,
+                width: 32,
+            },
+            Cell { kind: CellKind::Reg, inputs: vec![17], out: 18, width: 32 },
+            Cell {
+                kind: CellKind::Clamp { lo: -32768, hi: 32767 },
+                inputs: vec![18],
+                out: 19,
+                width: 16,
+            },
+        ];
+        Design {
+            name: "kitchen-sink".into(),
+            in_fmt: QFormat::new(3, 12),
+            out_fmt: QFormat::new(0, 15),
+            stages: 2,
+            output: 19,
+            cells,
+        }
+    }
+
+    #[test]
+    fn kitchen_sink_round_trips_exactly() {
+        let d = kitchen_sink();
+        assert!(d.validate().is_ok());
+        let v = emit(&d);
+        let back = parse(&v).expect("own emission parses");
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn emission_is_deterministic_and_structural() {
+        let d = kitchen_sink();
+        let v = emit(&d);
+        assert_eq!(v, emit(&d));
+        assert!(v.starts_with("// tanh-vlsi rtl netlist\n"));
+        assert!(v.contains("module tanh_rtl (clk, x, y);"));
+        assert!(v.contains("tv_rom_c14 u14 (.addr(n13), .data(n15));"));
+        assert!(v.contains("module tv_rom_c14 (addr, data);"));
+        assert!(v.contains("-16'sd7"));
+        assert!(v.contains("module tv_reg"));
+    }
+
+    #[test]
+    fn tampered_emissions_are_rejected() {
+        let d = kitchen_sink();
+        let v = emit(&d);
+        // Instance order is part of the contract.
+        let swapped = v.replacen("u1 ", "u2 ", 1);
+        assert!(parse(&swapped).is_err());
+        // A forward reference violates topological order.
+        let fwd = v.replace("(.a(n0), .b(n1), .y(n2))", "(.a(n5), .b(n1), .y(n2))");
+        assert!(parse(&fwd).is_err());
+    }
+
+    #[test]
+    fn rom_literals_round_trip_signs() {
+        assert_eq!(parse_rom_literal("16'sd42").unwrap(), 42);
+        assert_eq!(parse_rom_literal("-16'sd7").unwrap(), -7);
+        assert!(parse_rom_literal("junk").is_err());
+    }
+}

@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use tanh_vlsi::approx::{
-    build, eval_odd_saturating, table1_suite, IoSpec, MethodId, MethodSpec, TanhApprox,
+    build, eval_odd_saturating, table1_suite, ActSpec, IoSpec, MethodId, MethodSpec, TanhApprox,
 };
 use tanh_vlsi::backend::{
     Availability, BackendError, ErrorCode, EvalBackend, EvalStats, GoldenBackend, HwBackend,
@@ -418,6 +418,65 @@ fn prop_spec_rejections() {
         "nope:step=1/2",
     ] {
         assert!(MethodSpec::parse(bad).is_err(), "'{bad}' should be rejected");
+    }
+}
+
+#[test]
+fn prop_act_spec_display_parse_round_trip() {
+    // The activation-level contract on top of the method contract: for
+    // any valid inner design point and either activation kind,
+    // `ActSpec::parse(act.to_string()) == act` — the `sig:` prefix
+    // survives exactly one round and never stacks.
+    let formats = [
+        IoSpec::table1(),
+        IoSpec { input: QFormat::S2_13, output: QFormat::S_15 },
+        IoSpec { input: QFormat::S2_5, output: QFormat::S_7 },
+    ];
+    let domains = [4.0, 6.0, 8.0];
+    prop_check("ActSpec::parse(act.to_string()) == act", 300, |g: &mut Prng| {
+        let id = *g.choose(&MethodId::all());
+        let io = *g.choose(&formats);
+        let domain = *g.choose(&domains);
+        let frac = io.input.frac_bits as i64;
+        let param = match id {
+            MethodId::Lambert => g.i64_in(1, 16) as f64,
+            MethodId::TaylorQuadratic | MethodId::TaylorCubic => {
+                (2f64).powi(-g.i64_in(1, frac - 1) as i32)
+            }
+            _ => (2f64).powi(-g.i64_in(0, frac) as i32),
+        };
+        let spec = MethodSpec::with_param(id, param, io, domain)
+            .map_err(|e| format!("{id:?} param {param}: {e}"))?;
+        let sigmoid = g.bool(0.5);
+        let act = if sigmoid { ActSpec::sigmoid(spec) } else { ActSpec::tanh(spec) };
+        let text = act.to_string();
+        if sigmoid != text.starts_with("sig:") {
+            return Err(format!("'{text}' mislabels kind {:?}", act.kind));
+        }
+        let back = ActSpec::parse(&text)
+            .map_err(|e| format!("'{text}' failed to re-parse: {e}"))?;
+        if back != act {
+            return Err(format!("'{text}' round-tripped to '{back}'"));
+        }
+        if back.spec != spec {
+            return Err(format!("'{text}' lost its inner design point"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_act_spec_rejections() {
+    // A stacked or malformed inner spec must be an error, not a
+    // silently-corrected activation.
+    for bad in [
+        "sig:sig:pwl:step=1/64", // the prefix never stacks
+        "sig:nope:step=1/2",     // unknown inner method
+        "sig:",                  // empty inner spec
+        "sig:pwl:step=1/3",      // inner step not a reciprocal power of two
+        "sig:table1:Z",          // unknown Table I row
+    ] {
+        assert!(ActSpec::parse(bad).is_err(), "'{bad}' should be rejected");
     }
 }
 

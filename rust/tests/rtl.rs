@@ -1,0 +1,179 @@
+//! RTL netlist equivalence chain: the elaborated cell graph must match
+//! the cycle-accurate hw pipeline and the compiled golden kernel
+//! bit-exact on raw fixed-point words — over the *complete* Table I
+//! input grids, plus variant (non-Table-I) and seeded random design
+//! points — and the emitted Verilog must re-parse into a structurally
+//! identical netlist.
+
+use tanh_vlsi::approx::{IoSpec, MethodParams, MethodSpec, TanhApprox};
+use tanh_vlsi::backend::{CostProbe, CostSource, ErrorCode};
+use tanh_vlsi::explore::explore_specs_probed;
+use tanh_vlsi::fixed::Fx;
+use tanh_vlsi::hw::pipeline_for;
+use tanh_vlsi::rtl::{elaborate, eval_flush, simulate, verilog, NetlistProbe};
+use tanh_vlsi::util::proptest::{prop_check, Prng};
+
+/// Non-Table-I design points the hw lowering supports — same variants
+/// the hw backend's own tests exercise.
+const VARIANT_SPECS: [&str; 6] = [
+    "pwl:step=1/32:in=s2.13:out=s.15",
+    "taylor1:step=1/32",
+    "taylor2:step=1/16:out=s.7",
+    "catmull:step=1/8:dom=4",
+    "velocity:threshold=1/64",
+    "lambert:terms=9",
+];
+
+/// Asserts netlist == golden kernel on every `stride`-th raw input,
+/// and netlist == hw pipeline on a coarser sub-stride.
+fn assert_chain(spec: &MethodSpec, stride: i64) {
+    let design = elaborate(spec).unwrap_or_else(|e| panic!("elaborate '{spec}': {e}"));
+    let kernel = spec.build().compile(spec.io);
+    let pipe = pipeline_for(spec).expect("supported spec lowers");
+    assert_eq!(design.stages as usize, pipe.latency(), "{spec}");
+    let (lo, hi) = (spec.io.input.min_raw(), spec.io.input.max_raw());
+    let mut x = lo;
+    let mut n = 0u64;
+    while x <= hi {
+        let got = eval_flush(&design, x);
+        let want = kernel.eval_raw(x);
+        assert_eq!(
+            got, want,
+            "{spec}: netlist {got} != golden {want} at raw {x}"
+        );
+        // The pipeline side of the chain on a coarser sub-stride (its
+        // equality with the kernel is already pinned exhaustively by
+        // the hw backend's own audit tests).
+        if n % 17 == 0 {
+            let pw = pipe.eval(Fx::from_raw(x, spec.io.input)).raw();
+            assert_eq!(got, pw, "{spec}: netlist {got} != pipeline {pw} at raw {x}");
+        }
+        n += 1;
+        x += stride;
+    }
+}
+
+#[test]
+fn netlist_matches_kernel_and_pipeline_on_full_table1_grids() {
+    // The tentpole invariant: every raw input word of every Table I
+    // spec, netlist == golden kernel (stride 1 = complete grid).
+    for spec in MethodSpec::table1_all() {
+        assert_chain(&spec, 1);
+    }
+}
+
+#[test]
+fn variant_specs_stay_bit_exact() {
+    for s in VARIANT_SPECS {
+        let spec = MethodSpec::parse(s).unwrap_or_else(|e| panic!("'{s}': {e}"));
+        assert_chain(&spec, 3);
+    }
+}
+
+#[test]
+fn seeded_random_specs_stay_bit_exact() {
+    // Randomized non-Table-I points: domains deliberately != 6.0 so no
+    // draw collides with a Table I row.
+    let domains = [4.0, 5.0, 8.0];
+    prop_check("netlist == kernel on random specs", 8, |g: &mut Prng| {
+        let domain = *g.choose(&domains);
+        let spec = match g.i64_in(0, 5) {
+            0 => format!("pwl:step=1/{}:dom={domain}", 1 << g.i64_in(3, 7)),
+            1 => format!("taylor1:step=1/{}:dom={domain}", 1 << g.i64_in(3, 6)),
+            2 => format!("taylor2:step=1/{}:dom={domain}", 1 << g.i64_in(3, 6)),
+            3 => format!("catmull:step=1/{}:dom={domain}", 1 << g.i64_in(3, 6)),
+            4 => format!("velocity:threshold=1/{}:dom={domain}", 1 << g.i64_in(4, 8)),
+            _ => format!("lambert:terms={}:dom={domain}", g.i64_in(1, 16)),
+        };
+        let spec = MethodSpec::parse(&spec).map_err(|e| format!("'{spec}': {e}"))?;
+        let design = elaborate(&spec).map_err(|e| format!("elaborate '{spec}': {e}"))?;
+        let kernel = spec.build().compile(spec.io);
+        let (lo, hi) = (spec.io.input.min_raw(), spec.io.input.max_raw());
+        let mut x = lo;
+        while x <= hi {
+            let got = eval_flush(&design, x);
+            let want = kernel.eval_raw(x);
+            if got != want {
+                return Err(format!("{spec}: netlist {got} != golden {want} at raw {x}"));
+            }
+            x += 89;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn clocked_simulation_matches_flush_on_the_pipelined_schedule() {
+    for spec in MethodSpec::table1_all() {
+        let design = elaborate(&spec).unwrap();
+        let (lo, hi) = (spec.io.input.min_raw(), spec.io.input.max_raw());
+        let xs: Vec<i64> = (lo..=hi).step_by(257).collect();
+        let (ys, cycles) = simulate(&design, &xs);
+        assert_eq!(ys.len(), xs.len(), "{spec}");
+        // Fully pipelined: one result per cycle after the fill.
+        assert_eq!(cycles, design.stages as u64 + xs.len() as u64 - 1, "{spec}");
+        for (&x, &y) in xs.iter().zip(&ys) {
+            assert_eq!(y, eval_flush(&design, x), "{spec}: clocked != flush at raw {x}");
+        }
+    }
+}
+
+#[test]
+fn verilog_round_trips_variant_netlists() {
+    // The Table I six round-trip in hw::verilog's own tests; variants
+    // cover the remaining datapath shapes (different widths, domains,
+    // register counts).
+    for s in VARIANT_SPECS {
+        let spec = MethodSpec::parse(s).unwrap();
+        let design = elaborate(&spec).unwrap();
+        let v = verilog::emit(&design);
+        let back = verilog::parse(&v).unwrap_or_else(|e| panic!("'{s}': {e}"));
+        assert_eq!(back, design, "'{s}': emission drifted from the netlist");
+    }
+}
+
+#[test]
+fn unsupported_specs_error_typed_never_elaborate() {
+    // Structurally bogus points (constructed directly — MethodSpec::new
+    // would already reject them) must fail with the hw backend's typed
+    // wording, not panic or emit garbage.
+    let cases: [(MethodParams, &str); 3] = [
+        (MethodParams::Taylor { step: 1.0 / 8.0, terms: 9 }, "Horner"),
+        (MethodParams::Pwl { step: 0.3 }, "reciprocal power of two"),
+        (MethodParams::Lambert { terms: 40 }, "1..=16"),
+    ];
+    for (params, needle) in cases {
+        let bogus = MethodSpec { params, io: IoSpec::table1(), domain: 6.0 };
+        let err = elaborate(&bogus).unwrap_err();
+        assert!(err.contains("unsupported by hw backend"), "{err}");
+        assert!(err.contains(needle), "'{err}' missing '{needle}'");
+    }
+}
+
+#[test]
+fn explore_rows_carry_the_netlist_cost_tier() {
+    let probe = NetlistProbe::new();
+    let specs = MethodSpec::table1_all();
+    let points = explore_specs_probed(&specs, 64, &probe).expect("probing succeeds");
+    assert_eq!(points.len(), specs.len());
+    for pt in &points {
+        assert_eq!(pt.cost_source, CostSource::Netlist, "{}", pt.spec);
+        assert!(pt.area_ge > 0.0, "{}: zero netlist area", pt.spec);
+        assert!(pt.stage_delay_fo4 > 0.0, "{}: zero critical path", pt.spec);
+        assert!(pt.latency_cycles > 0, "{}", pt.spec);
+    }
+}
+
+#[test]
+fn probe_errors_are_typed_for_the_analytic_fallback() {
+    // The explorer's labeled-fallback contract hinges on the probe
+    // answering `unknown_spec` (not `internal`) for unsupported points.
+    let probe = NetlistProbe::new();
+    let bogus = MethodSpec {
+        params: MethodParams::Velocity { threshold: 0.3 },
+        io: IoSpec::table1(),
+        domain: 6.0,
+    };
+    let err = probe.probe_cost(&bogus).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownSpec);
+}

@@ -1,0 +1,77 @@
+//! Golden Verilog snapshots for the six Table I datapaths.
+//!
+//! The emitted RTL is fully deterministic (elaboration walks the same
+//! golden configuration objects in a fixed order, the printer is
+//! canonical), so the complete emission of each Table I spec is pinned
+//! under `tests/fixtures/rtl/` and byte-diffed — an elaboration or
+//! printer change that alters any cell, net or ROM entry fails here
+//! instead of needing eyeballs over thousands of lines of Verilog.
+//!
+//! Same protocol as the report fixtures: a missing fixture is seeded
+//! and reported (commit it); an intentional change is accepted with
+//! `TANH_UPDATE_FIXTURES=1` and reviewed as a fixture diff in the PR.
+
+use std::path::PathBuf;
+
+use tanh_vlsi::approx::MethodSpec;
+use tanh_vlsi::rtl::{elaborate, verilog};
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("rtl")
+        .join(name)
+}
+
+fn check_fixture(name: &str, actual: &str) {
+    let path = fixture_path(name);
+    let update = std::env::var("TANH_UPDATE_FIXTURES").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        eprintln!(
+            "rtl_fixtures: wrote {} ({} bytes){}",
+            path.display(),
+            actual.len(),
+            if update { "" } else { " — seeded missing fixture; commit it" }
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    if expected == actual {
+        return;
+    }
+    for (i, (e, a)) in expected.lines().zip(actual.lines()).enumerate() {
+        assert_eq!(
+            a,
+            e,
+            "{name} drifted at line {} (TANH_UPDATE_FIXTURES=1 to accept an intended change)",
+            i + 1
+        );
+    }
+    panic!(
+        "{name} drifted: {} vs {} lines (TANH_UPDATE_FIXTURES=1 to accept an intended change)",
+        actual.lines().count(),
+        expected.lines().count()
+    );
+}
+
+/// Fixture file name for one Table I row, derived from the lowered
+/// pipeline name (e.g. `pwl/fig3` → `table1_pwl.v`).
+fn fixture_name(design_name: &str) -> String {
+    let method = design_name.split('/').next().unwrap_or(design_name);
+    format!("table1_{}.v", method.replace('-', "_"))
+}
+
+#[test]
+fn table1_rtl_emissions_match_fixtures() {
+    for spec in MethodSpec::table1_all() {
+        let design = elaborate(&spec).expect("Table I specs elaborate");
+        let v = verilog::emit(&design);
+        // The snapshot must itself round-trip before it is pinned.
+        let back = verilog::parse(&v).expect("own emission parses");
+        assert_eq!(back, design, "{spec}: emission drifted from the netlist");
+        check_fixture(&fixture_name(&design.name), &v);
+    }
+}
