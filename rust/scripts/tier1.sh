@@ -112,6 +112,19 @@ grep -q 'oversized-line.*bad_request' netcheck.txt \
   || { echo "tier-1 FAIL: oversized JSON line not rejected as bad_request"; exit 1; }
 grep -q 'oversized-bin-frame.*bad_request' netcheck.txt \
   || { echo "tier-1 FAIL: oversized binary frame not rejected as bad_request"; exit 1; }
+# Wire-truncation regressions: (4) a reply body past the length-prefix
+# cap must be refused by the checked frame builder (never encoded with
+# a wrapped u32 prefix), naming the limit; (5) a served-spec list past
+# the u16 binary address space must fail spec-id table construction
+# (never alias ids via `as u16`), naming both sizes.
+grep -q 'reply-frame-cap.*bad_request' netcheck.txt \
+  || { echo "tier-1 FAIL: oversized reply body not refused by the frame builder"; exit 1; }
+grep -q 'reply-frame-cap.*4096-byte limit' netcheck.txt \
+  || { echo "tier-1 FAIL: reply-frame rejection does not name the cap"; exit 1; }
+grep -q 'spec-id-overflow.*bad_request' netcheck.txt \
+  || { echo "tier-1 FAIL: oversized spec list not refused at id-table build"; exit 1; }
+grep -q 'spec-id-overflow.*65537' netcheck.txt \
+  || { echo "tier-1 FAIL: spec-id rejection does not name the overflowing size"; exit 1; }
 rm -f netcheck.txt
 
 echo "== tier-1: non-Table-I spec smoke =="
@@ -167,6 +180,41 @@ fi
 grep -q '"cell_steps": 0' BENCH_serve.json \
   || { echo "tier-1 FAIL: flat scenario rows lack the cell columns"; exit 1; }
 rm -f BENCH_serve_lstm.json
+
+echo "== tier-1: streaming-session serve smoke =="
+# Session-stateful pulse streaming over 4 real TCP connections in mixed
+# framing: sessions open against served specs (binary 0xB9/0xBA/0xBB or
+# JSON open/pulse/close), pulses stream through pinned warm state, and
+# the binary verifies every pulse reply bit-exact against a cold golden
+# replay. The row schema is the same BENCH_serve.json schema plus the
+# session columns (sessions, pulses, pulse percentiles,
+# stream_cycles_per_element — the last legitimately 0.0 on the golden
+# backend, so only presence is checked for it here; the hw
+# cycles-per-element win is pinned by tests/streaming.rs).
+TANH_SMOKE=1 "$BIN" serve --scenario stream-steady --seed 42 --shards 2 \
+  --sockets 4 --framing mixed --out BENCH_serve_stream.json
+for key in sessions pulses pulse_p50_us pulse_p95_us pulse_p99_us \
+           stream_cycles_per_element; do
+  grep -q "\"$key\"" BENCH_serve_stream.json \
+    || { echo "tier-1 FAIL: BENCH_serve_stream.json missing key '$key'"; exit 1; }
+done
+if grep -Eq '"sessions": 0(,|$)' BENCH_serve_stream.json; then
+  echo "tier-1 FAIL: streaming smoke opened zero sessions"; exit 1
+fi
+if grep -Eq '"pulses": 0(,|$)' BENCH_serve_stream.json; then
+  echo "tier-1 FAIL: streaming smoke streamed zero pulses"; exit 1
+fi
+if grep -Eq '"pulse_p99_us": 0(\.0)?(,|$)' BENCH_serve_stream.json; then
+  echo "tier-1 FAIL: streaming smoke reports a zero pulse latency tail"; exit 1
+fi
+if grep -Eq '"verified": 0(,|$)' BENCH_serve_stream.json; then
+  echo "tier-1 FAIL: streaming smoke verified zero pulse replies"; exit 1
+fi
+# The per-request rows must keep carrying the session columns as zeros
+# (uniform schema): spot-check the canonical log written above.
+grep -q '"sessions": 0' BENCH_serve.json \
+  || { echo "tier-1 FAIL: per-request rows lack the session columns"; exit 1; }
+rm -f BENCH_serve_stream.json
 
 echo "== tier-1: hw-backend serve smoke =="
 # The same steady scenario on the cycle-accurate hw backend: every

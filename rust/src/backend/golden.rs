@@ -8,7 +8,7 @@ use crate::approx::{CompiledKernel, MethodSpec};
 
 use super::{
     analytic_cost, golden_kernel, Availability, BackendError, CostProbe, DesignCost, EvalBackend,
-    EvalStats,
+    EvalStats, EvalStream,
 };
 
 /// The reference backend: serves any spec through its compiled integer
@@ -83,6 +83,40 @@ impl EvalBackend for GoldenBackend {
         // metrics can count packed batches.
         kernel.eval_slice_packed(input, out);
         Ok(EvalStats { packed: kernel.lane_width().is_some(), ..EvalStats::default() })
+    }
+
+    fn native_stream(
+        &self,
+        spec: &MethodSpec,
+    ) -> Result<Option<Box<dyn EvalStream>>, BackendError> {
+        // Kernels are pure functions, so a golden "stream" carries no
+        // state and zero delay — but holding the kernel Arc directly
+        // skips the per-pulse map lookup the stateless fallback would
+        // pay, and enforces the same ensure-first strictness.
+        Ok(Some(Box::new(GoldenStream { kernel: self.kernel(spec)? })))
+    }
+}
+
+/// Zero-delay stream over one compiled kernel: every pulse is an
+/// independent (packed, when the formats qualify) slice evaluation.
+struct GoldenStream {
+    kernel: Arc<CompiledKernel>,
+}
+
+impl EvalStream for GoldenStream {
+    fn delay(&self) -> usize {
+        0
+    }
+
+    fn feed(
+        &mut self,
+        input: &[i64],
+        out: &mut Vec<i64>,
+    ) -> Result<EvalStats, BackendError> {
+        let start = out.len();
+        out.resize(start + input.len(), 0);
+        self.kernel.eval_slice_packed(input, &mut out[start..]);
+        Ok(EvalStats { packed: self.kernel.lane_width().is_some(), ..EvalStats::default() })
     }
 }
 
@@ -167,6 +201,31 @@ mod tests {
         let err = b.ensure(&bogus).unwrap_err();
         assert_eq!(err.code, ErrorCode::UnknownSpec);
         assert!(err.message.contains("invalid spec"), "{err}");
+    }
+
+    #[test]
+    fn golden_stream_is_zero_delay_and_matches_eval_raw() {
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        let b = GoldenBackend::for_specs(&[spec]);
+        let mut stream = crate::backend::open_stream(
+            &(Arc::new(GoldenBackend::for_specs(&[spec])) as Arc<dyn EvalBackend>),
+            &spec,
+        )
+        .unwrap();
+        assert_eq!(stream.delay(), 0);
+        let input: Vec<i64> = (-6..6).map(|i| i * 700).collect();
+        let mut got = Vec::new();
+        // Two pulses concatenate exactly like one flat eval_raw call.
+        stream.feed(&input[..5], &mut got).unwrap();
+        stream.feed(&input[5..], &mut got).unwrap();
+        let mut want = vec![0i64; input.len()];
+        b.eval_raw(&spec, &input, &mut want).unwrap();
+        assert_eq!(got, want);
+        // Streams honor ensure-first strictness like eval_raw does.
+        let other = MethodSpec::table1(MethodId::Taylor);
+        let backend: Arc<dyn EvalBackend> = Arc::new(GoldenBackend::for_specs(&[spec]));
+        let err = crate::backend::open_stream(&backend, &other).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownSpec);
     }
 
     #[test]

@@ -4,15 +4,16 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
+use std::thread::ThreadId;
 
 use crate::approx::MethodSpec;
 use crate::cost::UnitLibrary;
-use crate::fixed::Fx;
+use crate::fixed::{Fx, QFormat};
 use crate::hw::{pipeline_for, Pipeline, StreamState};
 
 use super::{
     golden_kernel, Availability, BackendError, CostProbe, CostSource, DesignCost, EvalBackend,
-    EvalStats,
+    EvalStats, EvalStream,
 };
 
 /// Cross-check stride of [`HwBackend::ensure`]'s lowering audit
@@ -24,10 +25,20 @@ const AUDIT_PROBES: i64 = 251;
 const COST_PROBE_BATCH: usize = 64;
 
 /// One ensured spec: its lowered pipeline plus the persistent
-/// streaming state that keeps it warm across `eval_raw` calls.
+/// streaming state that keeps it warm across `eval_raw` calls — **one
+/// stream per calling thread**, not one shared stream per spec. A
+/// single shared `Mutex<StreamState>` let two coordinator shards
+/// interleave their feeds into the same register file: each shard's
+/// issue/delivery bookkeeping then counted the *other* shard's
+/// elements, so per-batch incremental cycles (and the
+/// `sim_cycles_per_element` metric built on them) were corrupted under
+/// concurrency. Keying by [`ThreadId`] gives every worker its own
+/// warm datapath: same-thread batches still overlap drains (warm
+/// feeds cost exactly `N` cycles), and each thread pays its own fill
+/// latency exactly once.
 struct HwEntry {
     pipeline: Arc<Pipeline>,
-    stream: Mutex<StreamState>,
+    streams: Mutex<HashMap<ThreadId, StreamState>>,
 }
 
 /// The hardware-pipeline backend: every served spec is lowered to its
@@ -113,15 +124,16 @@ impl EvalBackend for HwBackend {
                 )));
             }
         }
-        let stream = Mutex::new(pipeline.stream_state());
         // Entry API, not insert: a concurrent ensure for the same spec
         // may have won the race while we audited — keep its (possibly
-        // already warm) stream instead of replacing it with a cold one.
-        self.entries
-            .write()
-            .unwrap()
-            .entry(*spec)
-            .or_insert_with(|| Arc::new(HwEntry { pipeline: Arc::new(pipeline), stream }));
+        // already warm) streams instead of replacing them with cold
+        // ones.
+        self.entries.write().unwrap().entry(*spec).or_insert_with(|| {
+            Arc::new(HwEntry {
+                pipeline: Arc::new(pipeline),
+                streams: Mutex::new(HashMap::new()),
+            })
+        });
         Ok(())
     }
 
@@ -138,16 +150,65 @@ impl EvalBackend for HwBackend {
         }
         let inp = spec.io.input;
         let fxs: Vec<Fx> = input.iter().map(|&raw| Fx::from_raw(raw, inp)).collect();
-        // One stream per spec, shared by every shard serving it (one
-        // physical datapath per design point): the lock serializes
-        // feeds, and the warm registers make each feed cost N cycles
-        // instead of simulate's per-call latency + N − 1 re-fill.
-        let mut stream = entry.stream.lock().unwrap();
+        // One stream per calling thread (see HwEntry): take the state
+        // out of the map so concurrent workers feed their own streams
+        // in parallel — the map lock is held only for the lookup and
+        // the put-back, never across the simulation itself.
+        let tid = std::thread::current().id();
+        let mut stream = entry
+            .streams
+            .lock()
+            .unwrap()
+            .remove(&tid)
+            .unwrap_or_else(|| entry.pipeline.stream_state());
         let fed = entry.pipeline.feed(&mut stream, &fxs);
-        drop(stream);
+        entry.streams.lock().unwrap().insert(tid, stream);
         for (slot, y) in out.iter_mut().zip(&fed.outputs) {
             *slot = y.raw();
         }
+        Ok(EvalStats { sim_cycles: fed.cycles, ..EvalStats::default() })
+    }
+
+    fn native_stream(
+        &self,
+        spec: &MethodSpec,
+    ) -> Result<Option<Box<dyn EvalStream>>, BackendError> {
+        let entry = self.entry(spec)?;
+        let st = entry.pipeline.stream_state();
+        Ok(Some(Box::new(HwStream {
+            input: spec.io.input,
+            pipeline: entry.pipeline.clone(),
+            st,
+        })))
+    }
+}
+
+/// A private warm pipeline stream: the session-stateful substrate the
+/// coordinator's streaming mode hands each client session. Unlike the
+/// per-thread serving streams above, this state is owned by exactly
+/// one session, so fill latency is paid once per *session* no matter
+/// which pulses land on which batches.
+struct HwStream {
+    input: QFormat,
+    pipeline: Arc<Pipeline>,
+    st: StreamState,
+}
+
+impl EvalStream for HwStream {
+    fn delay(&self) -> usize {
+        // Outputs lag inputs by the register stages between them: the
+        // pulse-model delay of this datapath.
+        self.pipeline.latency() - 1
+    }
+
+    fn feed(
+        &mut self,
+        input: &[i64],
+        out: &mut Vec<i64>,
+    ) -> Result<EvalStats, BackendError> {
+        let fxs: Vec<Fx> = input.iter().map(|&raw| Fx::from_raw(raw, self.input)).collect();
+        let fed = self.pipeline.feed(&mut self.st, &fxs);
+        out.extend(fed.outputs.iter().map(|y| y.raw()));
         Ok(EvalStats { sim_cycles: fed.cycles, ..EvalStats::default() })
     }
 }
@@ -212,6 +273,84 @@ mod tests {
         let stats2 = b.eval_raw(&spec, &input, &mut out2).unwrap();
         assert_eq!(stats2.sim_cycles, input.len() as u64);
         assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn concurrent_threads_get_private_streams() {
+        // Regression: with one shared Mutex<StreamState> per spec, two
+        // concurrent shards interleaved feeds into the same register
+        // file — only the globally-first feed was cold, so a thread's
+        // own first batch could report warm `N` cycles and the
+        // per-shard cycle bookkeeping was corrupted. Per-thread streams
+        // restore the invariant: EVERY thread's first feed pays the
+        // fill latency, every later same-thread feed costs exactly N,
+        // and all bits stay golden.
+        let b = Arc::new(HwBackend::new());
+        let spec = MethodSpec::table1(MethodId::Pwl);
+        b.ensure(&spec).unwrap();
+        let latency = b.pipeline(&spec).unwrap().latency();
+        let kernel = golden_kernel(&spec).unwrap();
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        std::thread::scope(|s| {
+            for t in 0..4i64 {
+                let b = b.clone();
+                let kernel = kernel.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    let input: Vec<i64> = (0..16).map(|i| (i + t) * 321 - 2500).collect();
+                    let mut out = vec![0i64; input.len()];
+                    barrier.wait();
+                    for batch in 0..3 {
+                        let stats = b.eval_raw(&spec, &input, &mut out).unwrap();
+                        let want = if batch == 0 {
+                            (latency + input.len() - 1) as u64
+                        } else {
+                            input.len() as u64
+                        };
+                        assert_eq!(stats.sim_cycles, want, "thread {t} batch {batch}");
+                        for (&raw, &y) in input.iter().zip(&out) {
+                            assert_eq!(y, kernel.eval_raw(raw), "thread {t} raw {raw}");
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn native_stream_is_private_and_reports_pipeline_delay() {
+        let b = HwBackend::new();
+        let spec = MethodSpec::table1(MethodId::Velocity);
+        b.ensure(&spec).unwrap();
+        let pipe = b.pipeline(&spec).unwrap();
+        let mut stream = b.native_stream(&spec).unwrap().expect("hw has native streams");
+        assert_eq!(stream.delay(), pipe.latency() - 1);
+        let kernel = golden_kernel(&spec).unwrap();
+        let pulses: Vec<Vec<i64>> =
+            (0..4).map(|p| (0..8).map(|i| (p * 8 + i) * 400 - 6000).collect()).collect();
+        let mut got = Vec::new();
+        let mut cycles = 0u64;
+        for (k, pulse) in pulses.iter().enumerate() {
+            let before = got.len();
+            let stats = stream.feed(pulse, &mut got).unwrap();
+            assert_eq!(got.len() - before, pulse.len());
+            cycles += stats.sim_cycles;
+            // Fill latency charged to the first pulse only.
+            let want = if k == 0 { pipe.latency() as u64 + 7 } else { 8 };
+            assert_eq!(stats.sim_cycles, want, "pulse {k}");
+        }
+        // Total: stages + pulses·P − 1 — the session delay-accounting
+        // identity the streaming tests assert end to end.
+        assert_eq!(cycles, (pipe.latency() + 4 * 8 - 1) as u64);
+        for (&raw, &y) in pulses.iter().flatten().zip(&got) {
+            assert_eq!(y, kernel.eval_raw(raw));
+        }
+        // Opening the stream did not warm the serving streams: this
+        // thread's next eval_raw still pays a cold fill.
+        let input = [0i64; 4];
+        let mut out = [0i64; 4];
+        let stats = b.eval_raw(&spec, &input, &mut out).unwrap();
+        assert_eq!(stats.sim_cycles, (pipe.latency() + 3) as u64);
     }
 
     #[test]

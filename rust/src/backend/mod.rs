@@ -249,10 +249,92 @@ pub trait EvalBackend: Send + Sync + 'static {
     /// is fixed-shape (PJRT graphs are compiled per batch shape).
     /// `None` (the default) means any length is accepted. The
     /// coordinator aligns its batcher to this at startup, so a shape
-    /// mismatch is impossible rather than a per-request failure.
+    /// mismatch is impossible rather than a per-batch failure.
     fn fixed_batch(&self) -> Option<usize> {
         None
     }
+
+    /// Backend-native stateful stream for one spec, if this backend
+    /// has one — the hook behind [`open_stream`]. The hw backend
+    /// returns a stream wrapping a private pipeline [`crate::hw::
+    /// StreamState`] (fill latency paid once per stream, registers warm
+    /// across pulses, `delay() == latency − 1`); the default `Ok(None)`
+    /// lets [`open_stream`] fall back to a stateless zero-delay adapter
+    /// over `eval_raw`. Only specs previously `ensure`d are valid.
+    fn native_stream(
+        &self,
+        _spec: &MethodSpec,
+    ) -> Result<Option<Box<dyn EvalStream>>, BackendError> {
+        Ok(None)
+    }
+}
+
+/// A stateful evaluation stream — the substrate behind the
+/// coordinator's streaming sessions ([`crate::coordinator`]). Repeated
+/// [`EvalStream::feed`] calls see *continuing* state, so a long
+/// sequence split into pulses pays any fill cost once, not once per
+/// pulse. Streams are single-owner (`Send`, not `Sync`): the session
+/// layer pins each one to a stable shard worker.
+pub trait EvalStream: Send {
+    /// How many trailing output elements lag behind the fed input at
+    /// any pulse boundary (the pipeline-depth delay of tract's pulse
+    /// model). `feed` itself returns every element the substrate
+    /// produced — for the hw backend that includes speculatively
+    /// drained in-flight slots, so the *session* layer withholds the
+    /// last `delay()` elements until close/flush to keep pulse replies
+    /// causal. Zero for stateless substrates.
+    fn delay(&self) -> usize;
+
+    /// Feeds one pulse of raw input words (`spec.io.input` encoding),
+    /// appending the produced output words (`spec.io.output` encoding)
+    /// to `out` — exactly `input.len()` of them, in order. The
+    /// returned [`EvalStats`] cycle count is incremental: a warm hw
+    /// stream reports `input.len()` cycles per pulse, with the
+    /// `latency − 1` fill charged to the first pulse only.
+    fn feed(&mut self, input: &[i64], out: &mut Vec<i64>)
+        -> Result<EvalStats, BackendError>;
+}
+
+/// Stateless [`EvalStream`] adapter: every pulse is an independent
+/// `eval_raw` call, zero delay. What [`open_stream`] hands out for
+/// backends without a native stream (golden kernels are pure functions
+/// — "state" would buy nothing).
+struct StatelessStream {
+    backend: Arc<dyn EvalBackend>,
+    spec: MethodSpec,
+}
+
+impl EvalStream for StatelessStream {
+    fn delay(&self) -> usize {
+        0
+    }
+
+    fn feed(
+        &mut self,
+        input: &[i64],
+        out: &mut Vec<i64>,
+    ) -> Result<EvalStats, BackendError> {
+        let mut buf = vec![0i64; input.len()];
+        let stats = self.backend.eval_raw(&self.spec, input, &mut buf)?;
+        out.extend_from_slice(&buf);
+        Ok(stats)
+    }
+}
+
+/// Opens a stateful evaluation stream for `spec` on `backend`: the
+/// backend's native stream when it has one
+/// ([`EvalBackend::native_stream`]), a stateless zero-delay `eval_raw`
+/// adapter otherwise. Free function (not a trait method) because the
+/// fallback must hold the backend beyond this call's borrow — callers
+/// already share backends as `Arc<dyn EvalBackend>`.
+pub fn open_stream(
+    backend: &Arc<dyn EvalBackend>,
+    spec: &MethodSpec,
+) -> Result<Box<dyn EvalStream>, BackendError> {
+    if let Some(native) = backend.native_stream(spec)? {
+        return Ok(native);
+    }
+    Ok(Box::new(StatelessStream { backend: backend.clone(), spec: *spec }))
 }
 
 /// Shared `eval_raw` precondition: `out` must be exactly as long as

@@ -2,12 +2,15 @@
 //! crate set): warmup + timed iterations + robust statistics, with the
 //! paper-table renderers layered on top in `rust/benches/*.rs`, plus
 //! the deterministic serving-load scenarios ([`scenario`]) behind
-//! `tanh-vlsi serve --scenario` and the tier-1 smoke, and their
+//! `tanh-vlsi serve --scenario` and the tier-1 smoke, their
 //! concurrent-socket replay driver ([`sockets`]) that pushes the same
-//! traces through real TCP connections in both wire framings.
+//! traces through real TCP connections in both wire framings, and the
+//! streaming-session scenarios ([`stream`]) that pulse long sequences
+//! through server-side warm sessions with cold-replay verification.
 
 mod harness;
 pub mod scenario;
 pub mod sockets;
+pub mod stream;
 
 pub use harness::{bench, bench_n, BenchLog, BenchResult, Bencher};

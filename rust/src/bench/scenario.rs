@@ -323,6 +323,31 @@ pub struct ScenarioOutcome {
     /// through the graph layer ([`crate::graph::run_lstm_cells`]);
     /// `None` for flat activation traces.
     pub cells: Option<CellStats>,
+    /// Streaming-session observables when the run pulsed open sessions
+    /// ([`crate::bench::stream`]); `None` for per-request traces.
+    pub stream: Option<StreamStats>,
+}
+
+/// What a streaming-session scenario run observed
+/// ([`crate::bench::stream`]): session/pulse counts, the per-pulse
+/// round-trip histogram merged across sessions, and the steady-state
+/// cycles-per-element of the warm streams.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    /// Sessions opened (and closed or torn down) by the run.
+    pub sessions: u64,
+    /// Pulses fed across every session.
+    pub pulses: u64,
+    /// Per-pulse round-trip latency (µs), merged across sessions
+    /// (exact merge, like the shard metrics).
+    pub pulse_latency: LatencyHistogram,
+    /// Simulated cycles per streamed element across the run's session
+    /// work — on the hw backend this must not exceed the per-batch
+    /// re-fill baseline `(depth + P − 1) / P`, and sits near 1.0 for
+    /// long warm sessions.
+    pub stream_cycles_per_element: f64,
+    /// Sessions the idle-timeout sweep evicted during the run.
+    pub evicted: u64,
 }
 
 /// What an `lstm` scenario run observed at the cell-graph layer.
@@ -415,6 +440,25 @@ impl ScenarioOutcome {
             // Cell-graph columns: zeros for flat activation traces.
             ("cell_steps", Json::i(self.cells.map_or(0, |c| c.cell_steps) as i64)),
             ("gate_max_err", Json::n(self.cells.map_or(0.0, |c| c.gate_max_err))),
+            // Streaming-session columns: zeros for per-request traces.
+            ("sessions", Json::i(self.stream.as_ref().map_or(0, |s| s.sessions) as i64)),
+            ("pulses", Json::i(self.stream.as_ref().map_or(0, |s| s.pulses) as i64)),
+            (
+                "pulse_p50_us",
+                Json::n(self.stream.as_ref().map_or(0.0, |s| s.pulse_latency.p50())),
+            ),
+            (
+                "pulse_p95_us",
+                Json::n(self.stream.as_ref().map_or(0.0, |s| s.pulse_latency.p95())),
+            ),
+            (
+                "pulse_p99_us",
+                Json::n(self.stream.as_ref().map_or(0.0, |s| s.pulse_latency.p99())),
+            ),
+            (
+                "stream_cycles_per_element",
+                Json::n(self.stream.as_ref().map_or(0.0, |s| s.stream_cycles_per_element)),
+            ),
         ])
     }
 
@@ -453,7 +497,13 @@ impl ScenarioOutcome {
 /// `lstm` scenario's whole-cell-step count and its worst per-gate
 /// error against the f64 reference; flat activation rows fill them
 /// with zeros.
-pub const SERVE_ROW_KEYS: [&str; 36] = [
+///
+/// The streaming-session columns (`sessions` through
+/// `stream_cycles_per_element`) carry the `stream-*` scenarios'
+/// session/pulse counts, client-observed per-pulse round-trip
+/// percentiles, and the warm streams' steady-state cycles per element;
+/// per-request rows fill them with zeros.
+pub const SERVE_ROW_KEYS: [&str; 42] = [
     "name",
     "scenario",
     "seed",
@@ -490,6 +540,12 @@ pub const SERVE_ROW_KEYS: [&str; 36] = [
     "conn_max_us",
     "cell_steps",
     "gate_max_err",
+    "sessions",
+    "pulses",
+    "pulse_p50_us",
+    "pulse_p95_us",
+    "pulse_p99_us",
+    "stream_cycles_per_element",
 ];
 
 /// Validates a `BENCH_serve.json` document: a non-empty array whose
@@ -544,6 +600,23 @@ pub fn validate_serve_log(text: &str) -> Result<usize, String> {
             if !(err > 0.0) {
                 return Err(format!(
                     "BENCH_serve.json row {i}: {steps} cell steps but zero gate_max_err"
+                ));
+            }
+        }
+        // Streaming rows must carry real session observables: pulses
+        // flowed and their round-trip latency was measured.
+        let sessions = row.get("sessions").and_then(Json::num).unwrap_or(0.0);
+        if sessions > 0.0 {
+            let pulses = row.get("pulses").and_then(Json::num).unwrap_or(0.0);
+            if !(pulses > 0.0) {
+                return Err(format!(
+                    "BENCH_serve.json row {i}: {sessions} sessions but zero pulses"
+                ));
+            }
+            let p99 = row.get("pulse_p99_us").and_then(Json::num).unwrap_or(0.0);
+            if !(p99 > 0.0) {
+                return Err(format!(
+                    "BENCH_serve.json row {i}: streaming run with zero pulse_p99_us"
                 ));
             }
         }
@@ -693,6 +766,7 @@ pub fn run_trace(
         metrics: coord.metrics(),
         net: None,
         cells: None,
+        stream: None,
     })
 }
 
@@ -813,6 +887,7 @@ mod tests {
             metrics: MetricsSnapshot::default(),
             net: None,
             cells: None,
+            stream: None,
         };
         let row = outcome.to_json("golden", 2, 1024);
         let text = Json::arr(vec![row.clone()]).to_string_pretty();
@@ -878,6 +953,7 @@ mod tests {
             metrics: MetricsSnapshot::default(),
             net: None,
             cells: None,
+            stream: None,
         };
         let text = outcome.deterministic_fields().to_string_compact();
         assert!(!text.contains("wall"), "{text}");

@@ -138,12 +138,7 @@ pub fn run_trace_sockets(
     // Binary frames address specs by registered id (position in the
     // coordinator's served list); resolve the mapping once, up front,
     // so an unserved trace spec fails the run before any socket opens.
-    let spec_ids: HashMap<MethodSpec, u16> = coord
-        .specs()
-        .iter()
-        .enumerate()
-        .map(|(i, s)| (*s, i as u16))
-        .collect();
+    let spec_ids = spec_id_table(coord.specs())?;
     if opts.framing != Framing::Json {
         for spec in &trace.specs {
             if !spec_ids.contains_key(spec) {
@@ -221,6 +216,7 @@ pub fn run_trace_sockets(
             conn_latency: latency,
         }),
         cells: None,
+        stream: None,
     })
 }
 
@@ -338,6 +334,24 @@ fn run_conn(
             .map_err(|_| "writer thread panicked".to_string())??;
         Ok(stats)
     })
+}
+
+/// Builds the binary-framing spec-id table: id `k` is the k-th entry
+/// of the served-spec list. Regression: the table used to be built
+/// with an unchecked `i as u16`, so a list past 65536 entries silently
+/// aliased spec 65536 onto id 0 (and so on) — every binary frame for
+/// the wrapped ids addressed the wrong design point. A list larger
+/// than the u16 address space is now a hard error at table build.
+pub fn spec_id_table(specs: &[MethodSpec]) -> Result<HashMap<MethodSpec, u16>, String> {
+    let cap = u16::MAX as usize + 1;
+    if specs.len() > cap {
+        return Err(format!(
+            "served-spec list of {} entries exceeds the {cap} binary spec ids \
+             (u16 address space); serve fewer specs or split the deployment",
+            specs.len()
+        ));
+    }
+    Ok(specs.iter().enumerate().map(|(i, s)| (*s, i as u16)).collect())
 }
 
 enum Reply {
@@ -492,6 +506,25 @@ mod tests {
         assert_eq!(out.metrics.requests, out.completed);
         server.stop();
         Arc::try_unwrap(coord).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn spec_id_table_rejects_lists_past_the_u16_address_space() {
+        // Regression: `i as u16` truncation — a 65537-entry list used
+        // to alias its tail onto ids 0, 1, … silently. The boundary:
+        // 65536 entries fill the address space exactly and pass; one
+        // more is a hard error naming both sizes.
+        let spec = crate::approx::MethodSpec::table1_all()[0];
+        assert!(spec_id_table(&vec![spec; 65536]).is_ok());
+        let err = spec_id_table(&vec![spec; 65537]).unwrap_err();
+        assert!(err.contains("65537"), "must name the list size: {err}");
+        assert!(err.contains("65536"), "must name the id space: {err}");
+        // The happy path still numbers specs by list position.
+        let specs = crate::approx::MethodSpec::table1_all();
+        let table = spec_id_table(&specs).unwrap();
+        assert_eq!(table.len(), specs.len());
+        assert_eq!(table[&specs[0]], 0);
+        assert_eq!(table[&specs[specs.len() - 1]], (specs.len() - 1) as u16);
     }
 
     #[test]

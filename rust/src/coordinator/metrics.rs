@@ -113,6 +113,15 @@ pub struct MetricsSnapshot {
     /// Reply bytes the net front-end has written to sockets
     /// (server-global gauge, max-merged).
     pub net_bytes_out: u64,
+    /// Streaming sessions currently open on the coordinator — a
+    /// coordinator-global **gauge** (from the session table), filled by
+    /// `Coordinator::metrics`, zero in per-shard snapshots, max-merged
+    /// like the other gauges.
+    pub sessions_open: u64,
+    /// Streaming sessions evicted by the idle-timeout sweep since
+    /// start (coordinator-global gauge, max-merged). Explicit closes
+    /// and connection-drop teardowns are not evictions.
+    pub sessions_evicted: u64,
 }
 
 impl MetricsSnapshot {
@@ -208,6 +217,10 @@ impl MetricsSnapshot {
         self.active_conns = self.active_conns.max(other.active_conns);
         self.net_bytes_in = self.net_bytes_in.max(other.net_bytes_in);
         self.net_bytes_out = self.net_bytes_out.max(other.net_bytes_out);
+        // Session gauges live on the coordinator's session table (one
+        // per coordinator), same max-merge rationale.
+        self.sessions_open = self.sessions_open.max(other.sessions_open);
+        self.sessions_evicted = self.sessions_evicted.max(other.sessions_evicted);
         self
     }
 }
@@ -298,6 +311,10 @@ impl ServerMetrics {
             active_conns: 0,
             net_bytes_in: 0,
             net_bytes_out: 0,
+            // Session gauges are coordinator-global: filled by
+            // `Coordinator::metrics` from the session table.
+            sessions_open: 0,
+            sessions_evicted: 0,
         }
     }
 }
@@ -459,6 +476,20 @@ mod tests {
         // Per-shard snapshots leave them zero.
         let s = ServerMetrics::default().snapshot();
         assert_eq!((s.accepted_conns, s.active_conns, s.net_bytes_in, s.net_bytes_out), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn session_gauges_merge_by_max_not_sum() {
+        // One session table per coordinator: two snapshots carrying its
+        // gauges must not double them.
+        let a = MetricsSnapshot { sessions_open: 5, sessions_evicted: 2, ..Default::default() };
+        let b = MetricsSnapshot { sessions_open: 3, sessions_evicted: 4, ..Default::default() };
+        let m = a.merge(&b);
+        assert_eq!(m.sessions_open, 5);
+        assert_eq!(m.sessions_evicted, 4);
+        // Per-shard snapshots leave them zero.
+        let s = ServerMetrics::default().snapshot();
+        assert_eq!((s.sessions_open, s.sessions_evicted), (0, 0));
     }
 
     #[test]

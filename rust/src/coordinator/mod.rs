@@ -43,6 +43,16 @@
 //! - Backpressure: `submit` fails fast once the routed shard holds
 //!   `max_queue` pending elements (the caller sheds load instead of the
 //!   coordinator dying of memory).
+//! - **Streaming sessions** ([`session`]): a client opens a session
+//!   against a served spec (or an LSTM cell graph), feeds fixed pulses
+//!   of a long sequence, and the server keeps per-session state warm —
+//!   a backend [`crate::backend::EvalStream`] (hw pipeline registers)
+//!   or the cell's carried `c` — across pulses, with explicit delay
+//!   accounting (`issued`/`delivered`; `close` flushes the tail). All
+//!   of a session's work is pinned to shard `id % shards`, so state
+//!   never migrates; the table enforces a max-sessions cap
+//!   (`overloaded`) and idle-timeout eviction, observable as the
+//!   `sessions_open`/`sessions_evicted` gauges.
 //! - The TCP front-end ([`NetServer`]) is a single nonblocking event
 //!   thread owning per-connection state machines — many concurrent
 //!   clients, pipelined requests with in-order replies, per-connection
@@ -72,13 +82,17 @@ mod metrics;
 pub mod net;
 mod request;
 mod server;
+mod session;
 
 pub use batcher::{BatcherConfig, PendingBatch};
 pub use histogram::LatencyHistogram;
 pub use metrics::{MetricsSnapshot, ServerMetrics};
 pub use net::{
-    bin_request_frame, reply_values, BinClient, NetClient, NetConfig, NetGaugesSnapshot,
-    NetServer, BIN_REPLY_MAGIC, BIN_REQUEST_MAGIC,
+    bin_close_frame, bin_open_frame, bin_request_frame, reply_raws, reply_values,
+    try_bin_pulse_frame, try_bin_reply_frame, try_bin_request_frame, BinClient, NetClient,
+    NetConfig, NetGaugesSnapshot, NetServer, BIN_CLOSE_MAGIC, BIN_MAX_BODY, BIN_OPEN_MAGIC,
+    BIN_PULSE_MAGIC, BIN_REPLY_MAGIC, BIN_REQUEST_MAGIC,
 };
 pub use request::{Request, RequestError, RequestErrorKind, RequestResult};
 pub use server::{Coordinator, CoordinatorConfig, RoutePolicy};
+pub use session::{PulseOutcome, SessionConfig, SessionInfo};

@@ -55,8 +55,53 @@
 //! conventions, bit-exact for the ≤ 24-bit formats the paper's design
 //! points use. The error `status` byte is
 //! [`crate::backend::ErrorCode::as_u8`] (0 is reserved for ok).
-//! Binary connections are eval-only; commands stay on the JSON
-//! protocol.
+//! Binary connections carry evals and session frames; commands stay on
+//! the JSON protocol.
+//!
+//! ## Streaming sessions
+//!
+//! Both framings speak the session protocol
+//! ([`super::session`]): open once, pulse a long sequence through
+//! warm server-side state, close to flush the delay-window tail.
+//! Session payloads are **raw fixed-point words in both framings**
+//! (JSON wraps them in integer-valued numbers) — streaming is the
+//! raw-addressed fast path, and a cell session's gate pre-activations
+//! have no single float format to decode against. Out-of-range raws
+//! saturate to the format range (the substrate's own convention),
+//! unlike eval frames, which reject them.
+//!
+//! JSON commands:
+//!
+//! ```text
+//! → {"cmd": "open", "spec": "pwl:step=1/32:in=s2.13:out=s.15"}
+//! ← {"ok": true, "session": 7, "delay": 3}
+//! → {"cmd": "open", "cell": "lstm", "lanes": 64}
+//! ← {"ok": true, "session": 8, "delay": 0}
+//! → {"cmd": "pulse", "session": 7, "values": [4096, -8192]}
+//! ← {"ok": true, "values": [...], "issued": 2, "delivered": 0}
+//! → {"cmd": "close", "session": 7}
+//! ← {"ok": true, "values": [...], "issued": 2, "delivered": 2}
+//! ```
+//!
+//! Binary session frames (all integers little-endian; replies use the
+//! eval reply framing, ok payloads below):
+//!
+//! ```text
+//! open:   0xB9 | body_len: u32 | spec_id: u16 | reserved: u16
+//!     ok reply payload: session id: u64 | delay: u64
+//! pulse:  0xBA | body_len: u32 | session id: u64 | N × input raw: i64
+//!     ok reply payload: M × output raw: i64   (delay window applied)
+//! close:  0xBB | body_len: u32 | session id: u64
+//!     ok reply payload: M × output raw: i64   (the flushed tail)
+//! ```
+//!
+//! Any of the four request magics as the first byte of a connection
+//! selects binary mode (cell sessions open over JSON only — they are
+//! not spec-addressed). A connection owns the sessions it opened:
+//! when it drops without closing them, the server aborts them
+//! (flushing nothing to nobody), so state cannot leak. Sessions also
+//! die by idle timeout ([`super::SessionConfig`]); the `metrics`
+//! command reports both gauges (`sessions_open`, `sessions_evicted`).
 //!
 //! ## Backpressure & frame caps
 //!
@@ -108,6 +153,7 @@ use crate::util::json::{self, Json};
 use super::metrics::MetricsSnapshot;
 use super::request::{RequestError, RequestResult};
 use super::server::Coordinator;
+use super::session::PulseOutcome;
 
 /// First byte of every binary request frame — and, as the first byte
 /// of a connection, the framing negotiation: no JSON document starts
@@ -115,9 +161,23 @@ use super::server::Coordinator;
 pub const BIN_REQUEST_MAGIC: u8 = 0xB7;
 /// First byte of every binary reply frame.
 pub const BIN_REPLY_MAGIC: u8 = 0xB8;
+/// First byte of a binary session-open frame.
+pub const BIN_OPEN_MAGIC: u8 = 0xB9;
+/// First byte of a binary session-pulse frame.
+pub const BIN_PULSE_MAGIC: u8 = 0xBA;
+/// First byte of a binary session-close frame.
+pub const BIN_CLOSE_MAGIC: u8 = 0xBB;
 
 /// Bytes of frame header (magic + u32 body length).
 const BIN_HEADER: usize = 5;
+
+/// Hard ceiling on a binary frame body: the length prefix is a `u32`,
+/// so a larger body cannot be framed at all. The checked builders
+/// enforce it (or a smaller injected limit) **before** the `as u32`
+/// cast — the unchecked cast used to truncate silently, emitting a
+/// frame whose length prefix disagreed with its payload and
+/// desynchronizing every later frame on the stream.
+pub const BIN_MAX_BODY: usize = u32::MAX as usize;
 
 /// Tuning knobs for the event loop. The defaults suit the scenario
 /// harness and production-ish loads; tests shrink them to exercise the
@@ -282,7 +342,19 @@ fn event_loop(
         for conn in conns.iter_mut() {
             progressed |= conn.pump(&coord, &cfg, &gauges);
         }
-        conns.retain(|c| !c.done());
+        // Reap finished connections, aborting any streaming sessions
+        // they still own — the connection IS the session's lease.
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].done() {
+                let mut conn = conns.swap_remove(i);
+                for id in conn.sessions.drain(..) {
+                    coord.session_abort(id);
+                }
+            } else {
+                i += 1;
+            }
+        }
         gauges.active.store(conns.len() as u64, Ordering::Relaxed);
         if !progressed {
             std::thread::sleep(Duration::from_micros(500));
@@ -306,6 +378,8 @@ enum Mode {
 enum Work {
     Reply(Vec<u8>),
     Eval(EvalReq),
+    Pulse(PulseReq),
+    Close(CloseReq),
 }
 
 struct EvalReq {
@@ -317,10 +391,24 @@ struct EvalReq {
     first_try: Option<Instant>,
 }
 
+struct PulseReq {
+    id: u64,
+    input: Vec<i64>,
+    binary: bool,
+    /// Same overload give-up dance as [`EvalReq::first_try`].
+    first_try: Option<Instant>,
+}
+
+struct CloseReq {
+    id: u64,
+    binary: bool,
+}
+
 /// A submitted-or-rendered reply waiting its turn on the wire.
 enum Pending {
     Ready(Vec<u8>),
     Wait { rx: mpsc::Receiver<RequestResult>, out_fmt: QFormat, binary: bool },
+    WaitPulse { rx: mpsc::Receiver<Result<PulseOutcome, RequestError>>, binary: bool },
 }
 
 /// Per-connection state machine.
@@ -331,6 +419,10 @@ struct Conn {
     work: VecDeque<Work>,
     inflight: VecDeque<Pending>,
     wbuf: Vec<u8>,
+    /// Streaming sessions this connection opened and has not yet
+    /// closed — aborted by the event loop when the connection dies, so
+    /// a vanished client cannot leak server-side state.
+    sessions: Vec<u64>,
     /// Peer closed its write side; drain what we have, then close.
     eof: bool,
     /// Fatal protocol error queued; close once everything flushes.
@@ -348,6 +440,7 @@ impl Conn {
             work: VecDeque::new(),
             inflight: VecDeque::new(),
             wbuf: Vec::new(),
+            sessions: Vec::new(),
             eof: false,
             closing: false,
             dead: false,
@@ -421,8 +514,7 @@ impl Conn {
             return false;
         }
         if self.mode == Mode::Undecided {
-            self.mode =
-                if self.rbuf[0] == BIN_REQUEST_MAGIC { Mode::Binary } else { Mode::Json };
+            self.mode = if is_bin_request_magic(self.rbuf[0]) { Mode::Binary } else { Mode::Json };
         }
         match self.mode {
             Mode::Json => self.decode_json(coord, cfg, gauges),
@@ -448,7 +540,7 @@ impl Conn {
                 return true;
             }
             let work = match std::str::from_utf8(&line) {
-                Ok(text) => classify_line(text, coord, gauges),
+                Ok(text) => classify_line(text, coord, gauges, &mut self.sessions),
                 Err(_) => Work::Reply(json_reply(&err(
                     ErrorCode::BadRequest,
                     "request line is not valid utf-8".into(),
@@ -468,7 +560,8 @@ impl Conn {
     fn decode_binary(&mut self, coord: &Coordinator, cfg: &NetConfig) -> bool {
         let mut progressed = false;
         while self.rbuf.len() >= BIN_HEADER {
-            if self.rbuf[0] != BIN_REQUEST_MAGIC {
+            let magic = self.rbuf[0];
+            if !is_bin_request_magic(magic) {
                 self.protocol_error(cfg, true);
                 return true;
             }
@@ -483,10 +576,56 @@ impl Conn {
                 break;
             }
             let frame: Vec<u8> = self.rbuf.drain(..BIN_HEADER + len).collect();
-            self.work.push_back(classify_binary(&frame[BIN_HEADER..], coord));
+            let body = &frame[BIN_HEADER..];
+            let work = match magic {
+                BIN_OPEN_MAGIC => self.classify_open(body, coord),
+                BIN_PULSE_MAGIC => classify_pulse(body),
+                BIN_CLOSE_MAGIC => classify_close(body),
+                _ => classify_binary(body, coord),
+            };
+            self.work.push_back(work);
             progressed = true;
         }
         progressed
+    }
+
+    /// Decodes and executes a binary session-open frame (body:
+    /// `spec_id u16 | reserved u16`). Open is synchronous on the
+    /// coordinator, so the reply (ok payload `session id u64 |
+    /// delay u64`) renders at decode time; the id is recorded for
+    /// connection-drop teardown.
+    fn classify_open(&mut self, body: &[u8], coord: &Coordinator) -> Work {
+        if body.len() != 4 {
+            return Work::Reply(bin_err_frame(
+                ErrorCode::BadRequest,
+                &format!(
+                    "open frame body must be 4 bytes (spec_id u16 + reserved u16), got {}",
+                    body.len()
+                ),
+            ));
+        }
+        let spec_id = u16::from_le_bytes([body[0], body[1]]) as usize;
+        let specs = coord.specs();
+        let Some(spec) = specs.get(spec_id) else {
+            return Work::Reply(bin_err_frame(
+                ErrorCode::UnknownSpec,
+                &format!(
+                    "spec id {spec_id} is not registered (serving {} specs, ids in the \
+                     metrics 'specs' order)",
+                    specs.len()
+                ),
+            ));
+        };
+        match coord.open_session(spec) {
+            Ok(info) => {
+                self.sessions.push(info.id);
+                let mut payload = Vec::with_capacity(16);
+                payload.extend_from_slice(&info.id.to_le_bytes());
+                payload.extend_from_slice(&(info.delay as u64).to_le_bytes());
+                Work::Reply(bin_frame(0, &payload))
+            }
+            Err(e) => Work::Reply(bin_err_frame(e.code, &e.message)),
+        }
     }
 
     /// Queues the oversized-frame `bad_request` reply and flags the
@@ -518,6 +657,67 @@ impl Conn {
                 Some(Work::Reply(_)) => {
                     let Some(Work::Reply(bytes)) = self.work.pop_front() else { unreachable!() };
                     self.inflight.push_back(Pending::Ready(bytes));
+                    progressed = true;
+                }
+                Some(Work::Pulse(req)) => {
+                    if self.inflight.len() >= cfg.max_inflight_per_conn {
+                        break;
+                    }
+                    match coord.session_pulse(req.id, req.input.clone()) {
+                        Ok(rx) => {
+                            let Some(Work::Pulse(req)) = self.work.pop_front() else {
+                                unreachable!()
+                            };
+                            self.inflight
+                                .push_back(Pending::WaitPulse { rx, binary: req.binary });
+                            progressed = true;
+                        }
+                        Err(e) if e.code == ErrorCode::Overloaded => {
+                            let give_up = match req.first_try {
+                                None => {
+                                    req.first_try = Some(Instant::now());
+                                    false
+                                }
+                                Some(t) => t.elapsed() >= cfg.overload_give_up,
+                            };
+                            if !give_up {
+                                break;
+                            }
+                            let Some(Work::Pulse(req)) = self.work.pop_front() else {
+                                unreachable!()
+                            };
+                            self.inflight.push_back(Pending::Ready(render_error(
+                                req.binary, e.code, &e.message,
+                            )));
+                            progressed = true;
+                        }
+                        Err(e) => {
+                            let Some(Work::Pulse(req)) = self.work.pop_front() else {
+                                unreachable!()
+                            };
+                            self.inflight.push_back(Pending::Ready(render_error(
+                                req.binary, e.code, &e.message,
+                            )));
+                            progressed = true;
+                        }
+                    }
+                }
+                Some(Work::Close(_)) => {
+                    if self.inflight.len() >= cfg.max_inflight_per_conn {
+                        break;
+                    }
+                    let Some(Work::Close(req)) = self.work.pop_front() else { unreachable!() };
+                    // The id stops being this connection's to abort
+                    // whether or not the close lands (an already-dead
+                    // id stays dead).
+                    self.sessions.retain(|&s| s != req.id);
+                    let pending = match coord.session_close(req.id) {
+                        Ok(rx) => Pending::WaitPulse { rx, binary: req.binary },
+                        Err(e) => {
+                            Pending::Ready(render_error(req.binary, e.code, &e.message))
+                        }
+                    };
+                    self.inflight.push_back(pending);
                     progressed = true;
                 }
                 Some(Work::Eval(req)) => {
@@ -608,6 +808,29 @@ impl Conn {
                         progressed = true;
                     }
                 },
+                Some(Pending::WaitPulse { rx, .. }) => match rx.try_recv() {
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Ok(result) => {
+                        let Some(Pending::WaitPulse { binary, .. }) = self.inflight.pop_front()
+                        else {
+                            unreachable!()
+                        };
+                        self.wbuf.extend_from_slice(&render_pulse(binary, result));
+                        progressed = true;
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        let Some(Pending::WaitPulse { binary, .. }) = self.inflight.pop_front()
+                        else {
+                            unreachable!()
+                        };
+                        self.wbuf.extend_from_slice(&render_error(
+                            binary,
+                            ErrorCode::Internal,
+                            "worker dropped reply",
+                        ));
+                        progressed = true;
+                    }
+                },
             }
         }
         progressed
@@ -645,9 +868,16 @@ impl Conn {
 }
 
 /// Classifies one JSON request line into deferred work: commands and
-/// malformed requests render immediately; evals carry their resolved
-/// spec to the submit step.
-fn classify_line(line: &str, coord: &Coordinator, gauges: &NetGauges) -> Work {
+/// malformed requests render immediately; evals and session pulses
+/// carry their resolved addressing to the submit step. `sessions` is
+/// the connection's owned-session list — `open` records ids there for
+/// connection-drop teardown.
+fn classify_line(
+    line: &str,
+    coord: &Coordinator,
+    gauges: &NetGauges,
+    sessions: &mut Vec<u64>,
+) -> Work {
     let reply = |j: Json| Work::Reply(json_reply(&j));
     let doc = match json::parse(line) {
         Ok(d) => d,
@@ -681,6 +911,12 @@ fn classify_line(line: &str, coord: &Coordinator, gauges: &NetGauges) -> Work {
         return match cmd {
             "metrics" => reply(metrics_doc(coord, gauges)),
             "ping" => reply(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+            "open" => classify_open_json(&doc, coord, sessions),
+            "pulse" => classify_pulse_json(&doc),
+            "close" => match session_id_field(&doc) {
+                Ok(id) => Work::Close(CloseReq { id, binary: false }),
+                Err(e) => reply(err(ErrorCode::BadRequest, e)),
+            },
             other => reply(err(ErrorCode::BadRequest, format!("unknown cmd '{other}'"))),
         };
     }
@@ -782,6 +1018,128 @@ fn classify_binary(body: &[u8], coord: &Coordinator) -> Work {
     Work::Eval(EvalReq { spec: *spec, values, binary: true, first_try: None })
 }
 
+/// True for the four request magics that select (and are valid in)
+/// binary mode.
+fn is_bin_request_magic(b: u8) -> bool {
+    matches!(b, BIN_REQUEST_MAGIC | BIN_OPEN_MAGIC | BIN_PULSE_MAGIC | BIN_CLOSE_MAGIC)
+}
+
+/// Classifies one binary pulse frame body: `session id u64 |
+/// N × input raw i64`.
+fn classify_pulse(body: &[u8]) -> Work {
+    if body.len() < 8 || (body.len() - 8) % 8 != 0 {
+        return Work::Reply(bin_err_frame(
+            ErrorCode::BadRequest,
+            &format!(
+                "pulse frame body must be a session id u64 plus whole i64 words, got {} bytes",
+                body.len()
+            ),
+        ));
+    }
+    let id = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let input: Vec<i64> = body[8..]
+        .chunks_exact(8)
+        .map(|w| i64::from_le_bytes(w.try_into().unwrap()))
+        .collect();
+    Work::Pulse(PulseReq { id, input, binary: true, first_try: None })
+}
+
+/// Classifies one binary close frame body: `session id u64`.
+fn classify_close(body: &[u8]) -> Work {
+    if body.len() != 8 {
+        return Work::Reply(bin_err_frame(
+            ErrorCode::BadRequest,
+            &format!("close frame body must be 8 bytes (session id u64), got {}", body.len()),
+        ));
+    }
+    Work::Close(CloseReq {
+        id: u64::from_le_bytes(body.try_into().unwrap()),
+        binary: true,
+    })
+}
+
+/// Handles the JSON `open` command: `"spec"` opens a spec stream,
+/// `"cell": "lstm"` + `"lanes"` opens a cell session. Open is
+/// synchronous, so the reply renders here; the id is recorded in the
+/// connection's owned-session list.
+fn classify_open_json(doc: &Json, coord: &Coordinator, sessions: &mut Vec<u64>) -> Work {
+    let reply = |j: Json| Work::Reply(json_reply(&j));
+    let opened = if let Some(spec_str) = doc.get("spec").and_then(|s| s.str()) {
+        match MethodSpec::parse(spec_str) {
+            Ok(spec) => coord.open_session(&spec),
+            Err(e) => return reply(err(ErrorCode::BadRequest, e)),
+        }
+    } else if let Some(cell) = doc.get("cell").and_then(|c| c.str()) {
+        if cell != "lstm" {
+            return reply(err(
+                ErrorCode::BadRequest,
+                format!("unknown cell kind '{cell}' (serving: lstm)"),
+            ));
+        }
+        let lanes = match doc.get("lanes").and_then(|l| l.num()) {
+            Some(l) if l >= 1.0 && l <= 65536.0 && l.fract() == 0.0 => l as usize,
+            _ => {
+                return reply(err(
+                    ErrorCode::BadRequest,
+                    "'lanes' must be an integer in 1..=65536".into(),
+                ))
+            }
+        };
+        coord.open_cell_session(lanes)
+    } else {
+        return reply(err(
+            ErrorCode::BadRequest,
+            "open needs a 'spec' string or 'cell': \"lstm\"".into(),
+        ));
+    };
+    match opened {
+        Ok(info) => {
+            sessions.push(info.id);
+            reply(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("session", Json::i(info.id as i64)),
+                ("delay", Json::i(info.delay as i64)),
+            ]))
+        }
+        Err(e) => reply(err(e.code, e.message)),
+    }
+}
+
+/// Extracts the `"session"` id field of a pulse/close command.
+fn session_id_field(doc: &Json) -> Result<u64, String> {
+    match doc.get("session").and_then(|s| s.num()) {
+        Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+        _ => Err("'session' must be a non-negative integer session id".into()),
+    }
+}
+
+/// Handles the JSON `pulse` command: raw integer words in `values`
+/// (session payloads are raw-addressed in both framings — see the
+/// module doc).
+fn classify_pulse_json(doc: &Json) -> Work {
+    let reply = |j: Json| Work::Reply(json_reply(&j));
+    let id = match session_id_field(doc) {
+        Ok(id) => id,
+        Err(e) => return reply(err(ErrorCode::BadRequest, e)),
+    };
+    let Some(raw_values) = doc.get("values").and_then(|v| v.as_arr()) else {
+        return reply(err(ErrorCode::BadRequest, "missing 'values' array".into()));
+    };
+    let mut input = Vec::with_capacity(raw_values.len());
+    for (i, v) in raw_values.iter().enumerate() {
+        match v.num() {
+            Some(x) if x.is_finite() && x.fract() == 0.0 => input.push(x as i64),
+            _ => {
+                return reply(err(
+                    ErrorCode::BadRequest,
+                    format!("values[{i}] must be an integer raw word"),
+                ))
+            }
+        }
+    }
+    Work::Pulse(PulseReq { id, input, binary: false, first_try: None })
+}
+
 /// The `cmd: metrics` reply document: coordinator snapshot (with the
 /// net gauges folded in) + served spec list.
 fn metrics_doc(coord: &Coordinator, gauges: &NetGauges) -> Json {
@@ -817,6 +1175,8 @@ fn metrics_doc(coord: &Coordinator, gauges: &NetGauges) -> Json {
         ("active_conns", Json::i(m.active_conns as i64)),
         ("bytes_in", Json::i(m.net_bytes_in as i64)),
         ("bytes_out", Json::i(m.net_bytes_out as i64)),
+        ("sessions_open", Json::i(m.sessions_open as i64)),
+        ("sessions_evicted", Json::i(m.sessions_evicted as i64)),
         (
             "specs",
             Json::arr(coord.specs().iter().map(|s| Json::s(s.to_string())).collect()),
@@ -868,14 +1228,57 @@ fn render_error(binary: bool, code: ErrorCode, msg: &str) -> Vec<u8> {
     }
 }
 
-fn bin_frame(status: u8, payload: &[u8]) -> Vec<u8> {
+/// Renders a finished pulse (or close flush) in the connection's
+/// framing: the released raw output words, plus the cumulative
+/// `issued`/`delivered` counters on the JSON side.
+fn render_pulse(binary: bool, result: Result<PulseOutcome, RequestError>) -> Vec<u8> {
+    match result {
+        Ok(out) => {
+            if binary {
+                bin_ok_frame(&out.outputs)
+            } else {
+                json_reply(&Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("values", Json::arr(out.outputs.iter().map(|&r| Json::i(r)).collect())),
+                    ("issued", Json::i(out.issued as i64)),
+                    ("delivered", Json::i(out.delivered as i64)),
+                ]))
+            }
+        }
+        Err(e) => render_error(binary, e.code, &e.message),
+    }
+}
+
+/// Checked encoder for one binary reply frame: enforces `limit` (and
+/// the `u32` length-prefix ceiling, [`BIN_MAX_BODY`]) on the body
+/// **before** the length cast. Regression: the unchecked `as u32`
+/// cast truncated oversize bodies silently, so the emitted length
+/// prefix disagreed with the payload and every later frame on the
+/// stream desynchronized. Production passes [`BIN_MAX_BODY`]; tests
+/// inject a small limit (a > 4 GiB body is unallocatable in a test).
+pub fn try_bin_reply_frame(status: u8, payload: &[u8], limit: usize) -> Result<Vec<u8>, String> {
     let body_len = 1 + payload.len();
+    let cap = limit.min(BIN_MAX_BODY);
+    if body_len > cap {
+        return Err(format!("reply frame body of {body_len} bytes exceeds the {cap}-byte limit"));
+    }
     let mut out = Vec::with_capacity(BIN_HEADER + body_len);
     out.push(BIN_REPLY_MAGIC);
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
     out.push(status);
     out.extend_from_slice(payload);
-    out
+    Ok(out)
+}
+
+/// Server-side reply framing: an unframeable body degrades to a typed
+/// `bad_request` error frame naming the limit, never to a frame with a
+/// truncated length prefix.
+fn bin_frame(status: u8, payload: &[u8]) -> Vec<u8> {
+    match try_bin_reply_frame(status, payload, BIN_MAX_BODY) {
+        Ok(frame) => frame,
+        Err(msg) => try_bin_reply_frame(ErrorCode::BadRequest.as_u8(), msg.as_bytes(), BIN_MAX_BODY)
+            .expect("error detail always fits a frame"),
+    }
 }
 
 fn bin_ok_frame(raws: &[i64]) -> Vec<u8> {
@@ -890,10 +1293,20 @@ fn bin_err_frame(code: ErrorCode, msg: &str) -> Vec<u8> {
     bin_frame(code.as_u8(), msg.as_bytes())
 }
 
-/// Encodes one binary request frame (shared by [`BinClient`] and the
-/// socket driver).
-pub fn bin_request_frame(spec_id: u16, raws: &[i64]) -> Vec<u8> {
+/// Checked encoder for one binary eval request frame — same length
+/// discipline as [`try_bin_reply_frame`].
+pub fn try_bin_request_frame(
+    spec_id: u16,
+    raws: &[i64],
+    limit: usize,
+) -> Result<Vec<u8>, String> {
     let body_len = 4 + raws.len() * 8;
+    let cap = limit.min(BIN_MAX_BODY);
+    if body_len > cap {
+        return Err(format!(
+            "request frame body of {body_len} bytes exceeds the {cap}-byte limit"
+        ));
+    }
     let mut out = Vec::with_capacity(BIN_HEADER + body_len);
     out.push(BIN_REQUEST_MAGIC);
     out.extend_from_slice(&(body_len as u32).to_le_bytes());
@@ -902,6 +1315,52 @@ pub fn bin_request_frame(spec_id: u16, raws: &[i64]) -> Vec<u8> {
     for r in raws {
         out.extend_from_slice(&r.to_le_bytes());
     }
+    Ok(out)
+}
+
+/// Encodes one binary request frame (shared by [`BinClient`] and the
+/// socket driver).
+pub fn bin_request_frame(spec_id: u16, raws: &[i64]) -> Vec<u8> {
+    try_bin_request_frame(spec_id, raws, BIN_MAX_BODY)
+        .expect("request body exceeds the u32 length-prefix ceiling")
+}
+
+/// Encodes one binary session-open frame (body: `spec_id u16 |
+/// reserved u16`).
+pub fn bin_open_frame(spec_id: u16) -> Vec<u8> {
+    let mut out = Vec::with_capacity(BIN_HEADER + 4);
+    out.push(BIN_OPEN_MAGIC);
+    out.extend_from_slice(&4u32.to_le_bytes());
+    out.extend_from_slice(&spec_id.to_le_bytes());
+    out.extend_from_slice(&[0u8, 0u8]); // reserved
+    out
+}
+
+/// Checked encoder for one binary session-pulse frame (body:
+/// `session id u64 | N × input raw i64`) — same length discipline as
+/// [`try_bin_reply_frame`].
+pub fn try_bin_pulse_frame(session: u64, raws: &[i64], limit: usize) -> Result<Vec<u8>, String> {
+    let body_len = 8 + raws.len() * 8;
+    let cap = limit.min(BIN_MAX_BODY);
+    if body_len > cap {
+        return Err(format!("pulse frame body of {body_len} bytes exceeds the {cap}-byte limit"));
+    }
+    let mut out = Vec::with_capacity(BIN_HEADER + body_len);
+    out.push(BIN_PULSE_MAGIC);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&session.to_le_bytes());
+    for r in raws {
+        out.extend_from_slice(&r.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Encodes one binary session-close frame (body: `session id u64`).
+pub fn bin_close_frame(session: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(BIN_HEADER + 8);
+    out.push(BIN_CLOSE_MAGIC);
+    out.extend_from_slice(&8u32.to_le_bytes());
+    out.extend_from_slice(&session.to_le_bytes());
     out
 }
 
@@ -954,6 +1413,77 @@ impl NetClient {
         let resp = self.call(&req)?;
         reply_values(&resp)
     }
+
+    /// Opens a streaming session against a served spec string; returns
+    /// `(session id, delay)`.
+    pub fn open_session(&mut self, spec: &str) -> Result<(u64, u64), String> {
+        let req = Json::obj(vec![("cmd", Json::s("open")), ("spec", Json::s(spec))]);
+        let resp = self.call(&req)?;
+        session_info(&resp)
+    }
+
+    /// Opens an LSTM cell-graph session `lanes` cells wide; returns
+    /// `(session id, delay)` (delay is always 0 for cells).
+    pub fn open_cell_session(&mut self, lanes: usize) -> Result<(u64, u64), String> {
+        let req = Json::obj(vec![
+            ("cmd", Json::s("open")),
+            ("cell", Json::s("lstm")),
+            ("lanes", Json::i(lanes as i64)),
+        ]);
+        let resp = self.call(&req)?;
+        session_info(&resp)
+    }
+
+    /// Feeds one pulse of raw input words; returns the released output
+    /// raws (delay window applied).
+    pub fn pulse(&mut self, session: u64, raws: &[i64]) -> Result<Vec<i64>, String> {
+        let req = Json::obj(vec![
+            ("cmd", Json::s("pulse")),
+            ("session", Json::i(session as i64)),
+            ("values", Json::arr(raws.iter().map(|&r| Json::i(r)).collect())),
+        ]);
+        let resp = self.call(&req)?;
+        reply_raws(&resp)
+    }
+
+    /// Closes a session; returns the flushed delay-window tail.
+    pub fn close_session(&mut self, session: u64) -> Result<Vec<i64>, String> {
+        let req =
+            Json::obj(vec![("cmd", Json::s("close")), ("session", Json::i(session as i64))]);
+        let resp = self.call(&req)?;
+        reply_raws(&resp)
+    }
+}
+
+/// Extracts `(session id, delay)` from a successful `open` reply.
+fn session_info(resp: &Json) -> Result<(u64, u64), String> {
+    if resp.get("ok").map(|o| *o == Json::Bool(true)) != Some(true) {
+        let code = resp.get("code").and_then(|c| c.str()).unwrap_or("internal");
+        let detail = resp.get("error").and_then(|e| e.str()).unwrap_or("unknown error");
+        return Err(format!("{code}: {detail}"));
+    }
+    let id = resp.get("session").and_then(|v| v.num()).ok_or("open reply missing 'session'")?;
+    let delay = resp.get("delay").and_then(|v| v.num()).ok_or("open reply missing 'delay'")?;
+    Ok((id as u64, delay as u64))
+}
+
+/// Extracts the raw-word `values` of a successful session reply (the
+/// integer-valued mirror of [`reply_values`]).
+pub fn reply_raws(resp: &Json) -> Result<Vec<i64>, String> {
+    if resp.get("ok").map(|o| *o == Json::Bool(true)) != Some(true) {
+        let code = resp.get("code").and_then(|c| c.str()).unwrap_or("internal");
+        let detail = resp.get("error").and_then(|e| e.str()).unwrap_or("unknown error");
+        return Err(format!("{code}: {detail}"));
+    }
+    let arr = resp.get("values").and_then(|v| v.as_arr()).ok_or("missing values")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        match v.num() {
+            Some(x) if x.fract() == 0.0 => out.push(x as i64),
+            _ => return Err(format!("reply values[{i}] is not an integer raw word")),
+        }
+    }
+    Ok(out)
 }
 
 /// Extracts the `values` of a successful JSON reply, strictly: every
@@ -1033,6 +1563,34 @@ impl BinClient {
     /// Evaluates one batch of raw input words, blocking for the reply.
     pub fn evaluate_raw(&mut self, spec_id: u16, raws: &[i64]) -> Result<Vec<i64>, String> {
         self.send(spec_id, raws)?;
+        self.recv()
+    }
+
+    /// Opens a streaming session against a registered spec id; returns
+    /// `(session id, delay)`.
+    pub fn open(&mut self, spec_id: u16) -> Result<(u64, u64), String> {
+        self.stream.write_all(&bin_open_frame(spec_id)).map_err(|e| e.to_string())?;
+        let words = self.recv()?;
+        if words.len() != 2 {
+            return Err(format!(
+                "open reply carried {} words, want 2 (session id, delay)",
+                words.len()
+            ));
+        }
+        Ok((words[0] as u64, words[1] as u64))
+    }
+
+    /// Feeds one pulse of raw input words; returns the released output
+    /// raws (delay window applied).
+    pub fn pulse(&mut self, session: u64, raws: &[i64]) -> Result<Vec<i64>, String> {
+        let frame = try_bin_pulse_frame(session, raws, BIN_MAX_BODY)?;
+        self.stream.write_all(&frame).map_err(|e| e.to_string())?;
+        self.recv()
+    }
+
+    /// Closes a session; returns the flushed delay-window tail.
+    pub fn close(&mut self, session: u64) -> Result<Vec<i64>, String> {
+        self.stream.write_all(&bin_close_frame(session)).map_err(|e| e.to_string())?;
         self.recv()
     }
 }
@@ -1415,5 +1973,149 @@ mod tests {
         );
         hw_srv.stop();
         golden_srv.stop();
+    }
+
+    #[test]
+    fn frame_builders_enforce_the_length_prefix_cap() {
+        // Regression: `body_len as u32` used to truncate oversize
+        // bodies silently, emitting a frame whose length prefix
+        // disagreed with its payload. A > 4 GiB body is unallocatable
+        // in a test, so the checked builders take the limit as a
+        // parameter; production passes BIN_MAX_BODY.
+        let raws = vec![0i64; 16];
+        let err = try_bin_request_frame(0, &raws, 64).unwrap_err();
+        assert!(err.contains("64-byte"), "must name the limit: {err}");
+        assert!(err.contains("132"), "must name the body size: {err}");
+        let err = try_bin_pulse_frame(1, &raws, 64).unwrap_err();
+        assert!(err.contains("64-byte"), "{err}");
+        let err = try_bin_reply_frame(0, &[0u8; 100], 64).unwrap_err();
+        assert!(err.contains("64-byte"), "{err}");
+        // At the limit, the frames encode with an honest prefix.
+        let frame = try_bin_request_frame(3, &raws, 132).unwrap();
+        assert_eq!(frame[0], BIN_REQUEST_MAGIC);
+        assert_eq!(u32::from_le_bytes(frame[1..5].try_into().unwrap()), 132);
+        assert_eq!(frame.len(), BIN_HEADER + 132);
+        let frame = try_bin_pulse_frame(7, &raws, 136).unwrap();
+        assert_eq!(frame[0], BIN_PULSE_MAGIC);
+        assert_eq!(u32::from_le_bytes(frame[1..5].try_into().unwrap()), 136);
+        let frame = try_bin_reply_frame(0, &[0u8; 63], 64).unwrap();
+        assert_eq!(frame[0], BIN_REPLY_MAGIC);
+        assert_eq!(u32::from_le_bytes(frame[1..5].try_into().unwrap()), 64);
+    }
+
+    #[test]
+    fn json_session_open_pulse_close_roundtrip() {
+        let (server, coord) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let spec = coord.specs()[0];
+        let (id, delay) = client.open_session(&spec.to_string()).unwrap();
+        assert_eq!(delay, 0, "golden streams are unbuffered");
+        assert_eq!(coord.sessions_open(), 1);
+        let raws: Vec<i64> = [0.5f64, -0.5, 0.125, 3.75]
+            .iter()
+            .map(|&x| Fx::from_f64(x, spec.io.input).raw())
+            .collect();
+        let kernel = spec.build().compile(spec.io);
+        let mut want = vec![0i64; raws.len()];
+        kernel.eval_slice_raw(&raws, &mut want);
+        // Two pulses on the same session, each released in full
+        // (delay 0), bit-exact vs the golden kernel.
+        assert_eq!(client.pulse(id, &raws).unwrap(), want);
+        assert_eq!(client.pulse(id, &raws).unwrap(), want);
+        // Session gauges ride the metrics command.
+        let m = client.call(&Json::obj(vec![("cmd", Json::s("metrics"))])).unwrap();
+        assert!(m.get("sessions_open").unwrap().num().unwrap() >= 1.0, "{m:?}");
+        assert_eq!(m.get("sessions_evicted").unwrap().num(), Some(0.0), "{m:?}");
+        // Close flushes an empty tail (nothing was held back) and
+        // unbinds the id.
+        assert!(client.close_session(id).unwrap().is_empty());
+        assert_eq!(coord.sessions_open(), 0);
+        let err = client.pulse(id, &raws).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
+        assert!(err.contains("unknown session"), "{err}");
+        // Cell sessions speak the same commands: one pulse is a step
+        // of 4·lanes gate pre-activations owing `lanes` h words.
+        let (cid, cdelay) = client.open_cell_session(4).unwrap();
+        assert_eq!(cdelay, 0);
+        let h = client.pulse(cid, &vec![0i64; 16]).unwrap();
+        assert_eq!(h.len(), 4);
+        // A wrong-width pulse is a typed bad_request, not a hang.
+        let err = client.pulse(cid, &vec![0i64; 3]).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
+        client.close_session(cid).unwrap();
+        // Open-side errors carry the stable codes too.
+        let err = client.open_session("pwl:step=1/32").unwrap_err();
+        assert!(err.starts_with("unknown_spec:"), "{err}");
+        let err = client.open_session("pwl:step=1/3").unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
+        server.stop();
+    }
+
+    #[test]
+    fn binary_session_streams_with_delay_accounting() {
+        use crate::backend::HwBackend;
+        let specs = vec![MethodSpec::table1(MethodId::Pwl)];
+        let cfg = CoordinatorConfig { specs: specs.clone(), ..CoordinatorConfig::with_batch(64) };
+        let coord = Arc::new(Coordinator::start(Arc::new(HwBackend::new()), cfg).unwrap());
+        let server = NetServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+        let spec = specs[0];
+        let mut client = BinClient::connect(server.addr()).unwrap();
+        let (id, delay) = client.open(0).unwrap();
+        let delay = delay as usize;
+        assert!(
+            (1..32).contains(&delay),
+            "hw pipeline must report a positive reply lag, got {delay}"
+        );
+        // 4 pulses of 8 through one warm session: replies lag the feed
+        // by exactly `delay` elements, and close releases the tail.
+        let xs: Vec<i64> = (0..8)
+            .map(|i| Fx::from_f64(i as f64 * 0.31 - 1.2, spec.io.input).raw())
+            .collect();
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.extend(client.pulse(id, &xs).unwrap());
+        }
+        assert_eq!(got.len(), 32 - delay, "delay window must hold back the tail");
+        let tail = client.close(id).unwrap();
+        assert_eq!(tail.len(), delay, "close must flush exactly the delay window");
+        got.extend(tail);
+        // The whole released sequence is the bit-exact output of the
+        // concatenated feed.
+        let flat: Vec<i64> = (0..4).flat_map(|_| xs.clone()).collect();
+        let kernel = spec.build().compile(spec.io);
+        let mut want = vec![0i64; flat.len()];
+        kernel.eval_slice_raw(&flat, &mut want);
+        assert_eq!(got, want, "pulse replies must be the exact output prefix");
+        // A closed id answers bad_request; an unregistered spec id
+        // cannot open; the connection survives both.
+        let err = client.pulse(id, &xs).unwrap_err();
+        assert!(err.starts_with("bad_request:"), "{err}");
+        let err = client.open(99).unwrap_err();
+        assert!(err.starts_with("unknown_spec:"), "{err}");
+        let (id2, _) = client.open(0).unwrap();
+        assert_eq!(client.pulse(id2, &xs).unwrap().len(), 8 - delay.min(8));
+        server.stop();
+    }
+
+    #[test]
+    fn connection_drop_tears_down_owned_sessions() {
+        let (server, coord) = start_server();
+        let spec = coord.specs()[0].to_string();
+        {
+            let mut client = NetClient::connect(server.addr()).unwrap();
+            client.open_session(&spec).unwrap();
+            client.open_session(&spec).unwrap();
+            assert_eq!(coord.sessions_open(), 2);
+        } // both TcpStreams drop here without close commands
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while coord.sessions_open() != 0 {
+            assert!(
+                Instant::now() < deadline,
+                "sessions not torn down after connection drop ({} still open)",
+                coord.sessions_open()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        server.stop();
     }
 }

@@ -30,11 +30,16 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::approx::{MethodId, MethodSpec, Registry};
-use crate::backend::{eval_f32, Availability, BackendError, ErrorCode, EvalBackend};
+use crate::backend::{eval_f32, open_stream, Availability, BackendError, ErrorCode, EvalBackend};
+use crate::graph::cell::CellConfig;
+use crate::graph::serve::CellSession;
 
 use super::batcher::{BatcherConfig, PendingBatch};
 use super::metrics::{MetricsSnapshot, ServerMetrics};
 use super::request::{Request, RequestError, RequestResult};
+use super::session::{
+    PulseOutcome, SessionConfig, SessionEntry, SessionInfo, SessionKind, SessionManager,
+};
 
 /// How the router picks a shard within a method's pool.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -72,6 +77,8 @@ pub struct CoordinatorConfig {
     /// Duplicates are dropped; an empty list falls back to the six
     /// Table I specs.
     pub specs: Vec<MethodSpec>,
+    /// Streaming-session table limits (cap + idle eviction).
+    pub sessions: SessionConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -81,6 +88,7 @@ impl Default for CoordinatorConfig {
             shards: 2,
             route: RoutePolicy::RoundRobin,
             specs: MethodSpec::table1_all(),
+            sessions: SessionConfig::default(),
         }
     }
 }
@@ -95,10 +103,29 @@ impl CoordinatorConfig {
     }
 }
 
+/// Everything a shard worker can be asked to do. Eval requests batch;
+/// session jobs execute immediately (their state is private, so there
+/// is nothing to pack) and carry the session entry with them, keeping
+/// the worker loop allocation-free on the routing side.
+enum ShardJob {
+    Eval(Request),
+    Pulse {
+        entry: Arc<SessionEntry>,
+        input: Vec<i64>,
+        enqueued_at: Instant,
+        reply: mpsc::Sender<Result<PulseOutcome, RequestError>>,
+    },
+    Close {
+        entry: Arc<SessionEntry>,
+        enqueued_at: Instant,
+        reply: mpsc::Sender<Result<PulseOutcome, RequestError>>,
+    },
+}
+
 /// One batcher/worker pair: its queue sender, queued-element gauge and
 /// private metrics.
 struct Shard {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<ShardJob>,
     depth: Arc<AtomicUsize>,
     metrics: Arc<ServerMetrics>,
 }
@@ -117,7 +144,9 @@ pub struct Coordinator {
     next_id: AtomicU64,
     cfg: BatcherConfig,
     route: RoutePolicy,
+    backend: Arc<dyn EvalBackend>,
     backend_name: &'static str,
+    sessions: SessionManager,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -172,7 +201,7 @@ impl Coordinator {
         for &spec in &specs {
             let mut pool = Vec::with_capacity(shards);
             for shard_idx in 0..shards {
-                let (tx, rx) = mpsc::channel::<Request>();
+                let (tx, rx) = mpsc::channel::<ShardJob>();
                 let depth = Arc::new(AtomicUsize::new(0));
                 let metrics = Arc::new(ServerMetrics::default());
                 let handle = spawn_worker(
@@ -195,7 +224,9 @@ impl Coordinator {
             next_id: AtomicU64::new(0),
             cfg: batcher_cfg,
             route: cfg.route,
+            backend,
             backend_name,
+            sessions: SessionManager::new(cfg.sessions),
             workers: Mutex::new(workers),
         })
     }
@@ -259,7 +290,7 @@ impl Coordinator {
             reply: reply_tx,
         };
         shard.depth.fetch_add(len, Ordering::Relaxed);
-        match shard.tx.send(req) {
+        match shard.tx.send(ShardJob::Eval(req)) {
             Ok(()) => {
                 shard.metrics.record_submitted();
                 Ok(reply_rx)
@@ -316,11 +347,160 @@ impl Coordinator {
         result.outcome
     }
 
+    /// Opens a streaming session against a served spec: subsequent
+    /// [`Coordinator::session_pulse`] calls continue one warm backend
+    /// stream ([`open_stream`]), pinned to shard `id % shards` of the
+    /// spec's pool so the state never migrates. The returned
+    /// [`SessionInfo::delay`] is how many output elements replies lag
+    /// the feed until close flushes.
+    pub fn open_session(&self, spec: &MethodSpec) -> Result<SessionInfo, RequestError> {
+        let pool = self.pools.get(spec).ok_or_else(|| {
+            let served: Vec<String> = self.specs.iter().map(|s| s.to_string()).collect();
+            RequestError::admission(
+                ErrorCode::UnknownSpec,
+                format!("spec '{spec}' is not served (serving: {})", served.join(", ")),
+            )
+        })?;
+        let stream = open_stream(&self.backend, spec)
+            .map_err(|e| RequestError::admission(e.code, e.message))?;
+        let delay = stream.delay();
+        let id = self.sessions.next_id();
+        let shard = (id as usize) % pool.shards.len();
+        let entry = Arc::new(SessionEntry::new(id, *spec, shard, delay, SessionKind::Spec(stream)));
+        self.sessions.insert(entry)?;
+        Ok(SessionInfo { id, delay })
+    }
+
+    /// Opens an LSTM cell-graph session (Table I operating point):
+    /// each pulse is one cell step of `4·lanes` gate pre-activations
+    /// (`i|f|g|o` concatenated, raw words), each reply the step's
+    /// `lanes` of `h_next`; the cell state `c` is carried server-side.
+    /// Zero delay.
+    pub fn open_cell_session(&self, lanes: usize) -> Result<SessionInfo, RequestError> {
+        let cell = CellSession::open(self.backend.as_ref(), &CellConfig::table1_lstm(), lanes)
+            .map_err(|e| RequestError::admission(e.code, e.message))?;
+        let id = self.sessions.next_id();
+        // Cell steps run directly over the backend, so any pool's
+        // worker can host them; the first served pool provides the
+        // stable executor thread.
+        let pool_spec = self.specs[0];
+        let shard = (id as usize) % self.pools[&pool_spec].shards.len();
+        let entry = Arc::new(SessionEntry::new(id, pool_spec, shard, 0, SessionKind::Cell(cell)));
+        self.sessions.insert(entry)?;
+        Ok(SessionInfo { id, delay: 0 })
+    }
+
+    /// Feeds one pulse of raw input words to a session; the reply (the
+    /// released continuation of the output sequence, delay window
+    /// applied) arrives on the returned channel. Backpressure and
+    /// shutdown mirror [`Coordinator::submit_spec`].
+    pub fn session_pulse(
+        &self,
+        id: u64,
+        input: Vec<i64>,
+    ) -> Result<mpsc::Receiver<Result<PulseOutcome, RequestError>>, RequestError> {
+        if input.is_empty() {
+            return Err(RequestError::admission(ErrorCode::BadRequest, "empty pulse"));
+        }
+        let entry = self.sessions.get(id)?;
+        let shard = &self.pools[&entry.pool].shards[entry.shard];
+        let depth = shard.depth.load(Ordering::Relaxed);
+        if depth + input.len() > self.cfg.max_queue {
+            shard.metrics.record_rejected();
+            return Err(RequestError::admission(
+                ErrorCode::Overloaded,
+                format!("backpressure: shard queue at {depth} elements"),
+            ));
+        }
+        let (tx, rx) = mpsc::channel();
+        let len = input.len();
+        shard.depth.fetch_add(len, Ordering::Relaxed);
+        let job = ShardJob::Pulse { entry, input, enqueued_at: Instant::now(), reply: tx };
+        match shard.tx.send(job) {
+            Ok(()) => {
+                shard.metrics.record_submitted();
+                Ok(rx)
+            }
+            Err(_) => {
+                shard.depth.fetch_sub(len, Ordering::Relaxed);
+                Err(RequestError::admission(ErrorCode::Internal, "worker shut down"))
+            }
+        }
+    }
+
+    /// Closes a session: unbinds the id immediately (new pulses see
+    /// `unknown session`) and flushes the delay-window tail on the
+    /// pinned worker, **after** any still-queued pulses — the reply
+    /// carries the final outputs.
+    pub fn session_close(
+        &self,
+        id: u64,
+    ) -> Result<mpsc::Receiver<Result<PulseOutcome, RequestError>>, RequestError> {
+        let entry = self.sessions.remove(id).ok_or_else(|| {
+            RequestError::admission(
+                ErrorCode::BadRequest,
+                format!("unknown session {id} (closed, evicted, or never opened)"),
+            )
+        })?;
+        let shard = &self.pools[&entry.pool].shards[entry.shard];
+        let (tx, rx) = mpsc::channel();
+        match shard.tx.send(ShardJob::Close { entry, enqueued_at: Instant::now(), reply: tx }) {
+            Ok(()) => {
+                shard.metrics.record_submitted();
+                Ok(rx)
+            }
+            Err(_) => Err(RequestError::admission(ErrorCode::Internal, "worker shut down")),
+        }
+    }
+
+    /// Blocking convenience: pulse and wait for the released outputs.
+    pub fn session_pulse_blocking(
+        &self,
+        id: u64,
+        input: Vec<i64>,
+    ) -> Result<PulseOutcome, RequestError> {
+        let rx = self.session_pulse(id, input)?;
+        rx.recv()
+            .map_err(|_| RequestError::backend(ErrorCode::Internal, "worker dropped reply"))?
+    }
+
+    /// Blocking convenience: close and wait for the flushed tail.
+    pub fn session_close_blocking(&self, id: u64) -> Result<PulseOutcome, RequestError> {
+        let rx = self.session_close(id)?;
+        rx.recv()
+            .map_err(|_| RequestError::backend(ErrorCode::Internal, "worker dropped reply"))?
+    }
+
+    /// Connection-drop teardown: close without waiting for the tail.
+    /// A no-op for ids already closed or evicted.
+    pub fn session_abort(&self, id: u64) {
+        // Dropping the receiver is deliberate: the worker's flush
+        // reply goes nowhere, which is exactly right for a vanished
+        // client.
+        let _ = self.session_close(id);
+    }
+
+    /// Currently open streaming sessions (the `sessions_open` gauge).
+    pub fn sessions_open(&self) -> usize {
+        self.sessions.open_count()
+    }
+
+    /// Sessions evicted by the idle timeout since start.
+    pub fn sessions_evicted(&self) -> u64 {
+        self.sessions.evicted()
+    }
+
+    /// Runs the idle-eviction sweep now (it also runs lazily on every
+    /// open); returns how many sessions were evicted.
+    pub fn sweep_sessions(&self) -> usize {
+        self.sessions.sweep(Instant::now())
+    }
+
     /// Merged metrics across every shard of every spec (exact fold of
     /// the per-shard snapshots, histogram included), plus the global
     /// kernel-cache counters ([`Registry::global`]) — the observable
     /// for the shared-cache win (compiles == distinct specs, not
-    /// shards × specs).
+    /// shards × specs) — and the coordinator-global session gauges.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut merged = MetricsSnapshot::default();
         for pool in self.pools.values() {
@@ -331,6 +511,8 @@ impl Coordinator {
         let cache = Registry::global().stats();
         merged.kernel_cache_hits = cache.hits;
         merged.kernel_compiles = cache.compiles;
+        merged.sessions_open = self.sessions.open_count() as u64;
+        merged.sessions_evicted = self.sessions.evicted();
         merged
     }
 
@@ -379,7 +561,7 @@ impl Coordinator {
 fn spawn_worker(
     spec: MethodSpec,
     shard_idx: usize,
-    rx: mpsc::Receiver<Request>,
+    rx: mpsc::Receiver<ShardJob>,
     depth: Arc<AtomicUsize>,
     backend: Arc<dyn EvalBackend>,
     cfg: BatcherConfig,
@@ -394,8 +576,8 @@ fn spawn_worker(
                 // deadline when a partial batch is open.
                 let timeout = if pending.is_empty() { cfg.max_wait * 50 } else { cfg.max_wait };
                 match rx.recv_timeout(timeout) {
-                    Ok(req) => {
-                        admit(req, &mut pending, &spec, &backend, &cfg, &metrics, &depth);
+                    Ok(job) => {
+                        handle(job, shard_idx, &mut pending, &spec, &backend, &cfg, &metrics, &depth);
                         // Greedy drain: requests that queued up while
                         // the previous batch executed are packed NOW
                         // rather than one-per-loop — without this,
@@ -403,8 +585,11 @@ fn spawn_worker(
                         // request flushes as its own batch (perf log
                         // iteration 1: batch efficiency 6% → see
                         // EXPERIMENTS.md §Perf).
-                        while let Ok(req) = rx.try_recv() {
-                            admit(req, &mut pending, &spec, &backend, &cfg, &metrics, &depth);
+                        while let Ok(job) = rx.try_recv() {
+                            handle(
+                                job, shard_idx, &mut pending, &spec, &backend, &cfg, &metrics,
+                                &depth,
+                            );
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -419,6 +604,55 @@ fn spawn_worker(
             }
         })
         .expect("spawning worker thread")
+}
+
+/// Dispatches one shard job. Eval requests batch through the pending
+/// buffer; session pulses and closes execute immediately — their state
+/// is session-private, so batching buys nothing, and the session's
+/// total order is the queue order.
+#[allow(clippy::too_many_arguments)]
+fn handle(
+    job: ShardJob,
+    shard_idx: usize,
+    pending: &mut PendingBatch,
+    spec: &MethodSpec,
+    backend: &Arc<dyn EvalBackend>,
+    cfg: &BatcherConfig,
+    metrics: &Arc<ServerMetrics>,
+    depth: &Arc<AtomicUsize>,
+) {
+    match job {
+        ShardJob::Eval(req) => admit(req, pending, spec, backend, cfg, metrics, depth),
+        ShardJob::Pulse { entry, input, enqueued_at, reply } => {
+            depth.fetch_sub(input.len(), Ordering::Relaxed);
+            // A pulse is a fully-packed single-request batch: capacity
+            // == useful elements, so the fill-rate and
+            // cycles-per-element observables stay meaningful.
+            metrics.record_batch(input.len(), input.len());
+            match entry.pulse(backend, &input, shard_idx) {
+                Ok(out) => {
+                    let latency_us = enqueued_at.elapsed().as_micros() as u64;
+                    metrics.record_sim_cycles(out.sim_cycles);
+                    metrics.record_request(input.len(), latency_us);
+                    let _ = reply.send(Ok(out));
+                }
+                Err(e) => {
+                    let latency_us = enqueued_at.elapsed().as_micros() as u64;
+                    metrics.record_error();
+                    metrics.record_backend_failed_request(latency_us);
+                    let _ = reply.send(Err(RequestError::backend(e.code, e.message)));
+                }
+            }
+        }
+        ShardJob::Close { entry, enqueued_at, reply } => {
+            let out = entry.flush(shard_idx);
+            let latency_us = enqueued_at.elapsed().as_micros() as u64;
+            // Zero elements: the tail's elements were counted by the
+            // pulses that fed them.
+            metrics.record_request(0, latency_us);
+            let _ = reply.send(Ok(out));
+        }
+    }
 }
 
 /// Adds a request to the shard's pending batch, flushing first when it

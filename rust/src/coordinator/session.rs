@@ -1,0 +1,288 @@
+//! Streaming sessions: server-held per-client state, pulsed.
+//!
+//! A session binds a client to warm state on the server — an
+//! [`EvalStream`] for a served spec (the hw backend keeps its pipeline
+//! registers filled between pulses), or an LSTM cell recurrence's
+//! `(h, c)` state ([`CellSession`]) — and every pulse of a long
+//! sequence continues where the previous one left off, so fill cost is
+//! paid once per session instead of once per request. This is tract's
+//! pulse model applied to the serving layer: an explicit pulse axis
+//! with **delay accounting**.
+//!
+//! Delay accounting: a pipelined substrate cannot answer the last
+//! `delay` elements of what it has been fed until more input (or a
+//! flush) pushes them out, so a session tracks `issued` (output
+//! elements owed) against `delivered` (elements released), and each
+//! pulse releases exactly `issued − delay − delivered` elements —
+//! replies lag the feed by the pipeline depth, and `close` flushes the
+//! tail at zero extra cycles. A flushed session that fed `k` pulses of
+//! `P` elements through a depth-`stages` pipeline cost exactly
+//! `stages + k·P − 1` simulated cycles (fill once, then one retire per
+//! cycle) — the identity the streaming tests pin.
+//!
+//! Lifecycle: `open` (lazy idle sweep, then a hard cap answering
+//! `overloaded`) → `pulse`* → `close` (or connection-drop teardown, or
+//! idle-timeout eviction). All of a session's work executes on one
+//! pinned shard worker — `id % shards` — so the state never migrates
+//! across threads and pulses of one session are totally ordered.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::approx::MethodSpec;
+use crate::backend::{BackendError, ErrorCode, EvalBackend, EvalStream};
+use crate::graph::serve::CellSession;
+
+use super::request::RequestError;
+
+/// Session-table tuning knobs ([`super::CoordinatorConfig::sessions`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Hard cap on concurrently open sessions; `open` answers
+    /// `overloaded` past it (after the idle sweep has run).
+    pub max_sessions: usize,
+    /// Sessions idle longer than this are evicted by the lazy sweep
+    /// (runs on every open, and on demand via
+    /// `Coordinator::sweep_sessions`).
+    pub idle_timeout: Duration,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { max_sessions: 4096, idle_timeout: Duration::from_secs(60) }
+    }
+}
+
+/// What a client learns when its session opens.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionInfo {
+    /// Session id — the address every pulse/close carries.
+    pub id: u64,
+    /// How many output elements replies lag behind the feed until
+    /// `close` flushes (pipeline depth − 1 on hw; 0 on stateless
+    /// substrates and cell sessions).
+    pub delay: usize,
+}
+
+/// One pulse (or flush) reply.
+#[derive(Clone, Debug, Default)]
+pub struct PulseOutcome {
+    /// Output words released by this pulse, delay window applied: the
+    /// continuation of the session's output sequence, in order.
+    pub outputs: Vec<i64>,
+    /// Output elements the session owes replies for, cumulative.
+    pub issued: u64,
+    /// Output elements released to the client, cumulative
+    /// (`issued − delay` while streaming; `issued` after a flush).
+    pub delivered: u64,
+    /// Incremental simulated cycles this pulse occupied the backend
+    /// (zero for a flush: the tail was already computed).
+    pub sim_cycles: u64,
+    /// Shard index that executed the pulse — stable for a session's
+    /// whole life (asserted by the no-migration tests).
+    pub shard: usize,
+}
+
+/// What a session computes per pulse.
+pub(crate) enum SessionKind {
+    /// A backend evaluation stream over one served spec: pulse in,
+    /// same number of output elements owed.
+    Spec(Box<dyn EvalStream>),
+    /// An LSTM cell recurrence: a pulse is one step of `4·lanes` gate
+    /// pre-activations, owing `lanes` elements of `h_next`.
+    Cell(CellSession),
+}
+
+struct SessionCore {
+    kind: SessionKind,
+    issued: u64,
+    delivered: u64,
+    /// Produced-but-unreleased outputs (the delay window tail).
+    pending: VecDeque<i64>,
+    last_used: Instant,
+}
+
+/// One open session. Shared (`Arc`) between the table and in-flight
+/// shard jobs; the `core` mutex is uncontended in steady state because
+/// all of a session's jobs execute on its one pinned worker.
+pub(crate) struct SessionEntry {
+    pub id: u64,
+    /// Pool key whose `shard`-th worker the session is pinned to.
+    pub pool: MethodSpec,
+    pub shard: usize,
+    pub delay: usize,
+    core: Mutex<SessionCore>,
+}
+
+impl SessionEntry {
+    pub(crate) fn new(
+        id: u64,
+        pool: MethodSpec,
+        shard: usize,
+        delay: usize,
+        kind: SessionKind,
+    ) -> SessionEntry {
+        SessionEntry {
+            id,
+            pool,
+            shard,
+            delay,
+            core: Mutex::new(SessionCore {
+                kind,
+                issued: 0,
+                delivered: 0,
+                pending: VecDeque::new(),
+                last_used: Instant::now(),
+            }),
+        }
+    }
+
+    /// Executes one pulse (on the pinned worker thread): feeds the
+    /// substrate, then releases output up to `issued − delay`.
+    pub(crate) fn pulse(
+        &self,
+        backend: &Arc<dyn EvalBackend>,
+        input: &[i64],
+        shard: usize,
+    ) -> Result<PulseOutcome, BackendError> {
+        let mut core = self.core.lock().unwrap();
+        core.last_used = Instant::now();
+        let (owed, sim_cycles) = match &mut core.kind {
+            SessionKind::Spec(stream) => {
+                let mut produced = Vec::with_capacity(input.len());
+                let stats = stream.feed(input, &mut produced)?;
+                let owed = produced.len() as u64;
+                core.pending.extend(produced);
+                (owed, stats.sim_cycles)
+            }
+            SessionKind::Cell(cell) => {
+                // Cell steps execute directly over the backend on this
+                // worker thread — NOT back through the coordinator,
+                // which would deadlock the worker on its own queue.
+                let (h, cycles) = cell
+                    .pulse(backend.as_ref(), input)
+                    .map_err(|e| BackendError::new(ErrorCode::BadRequest, e))?;
+                let owed = h.len() as u64;
+                core.pending.extend(h);
+                (owed, cycles)
+            }
+        };
+        core.issued += owed;
+        let target = core.issued.saturating_sub(self.delay as u64);
+        let n = (target.saturating_sub(core.delivered) as usize).min(core.pending.len());
+        let outputs: Vec<i64> = core.pending.drain(..n).collect();
+        core.delivered += outputs.len() as u64;
+        Ok(PulseOutcome {
+            outputs,
+            issued: core.issued,
+            delivered: core.delivered,
+            sim_cycles,
+            shard,
+        })
+    }
+
+    /// Releases the delay-window tail (close). Zero extra cycles: the
+    /// tail was computed when its pulse fed the pipeline.
+    pub(crate) fn flush(&self, shard: usize) -> PulseOutcome {
+        let mut core = self.core.lock().unwrap();
+        core.last_used = Instant::now();
+        let outputs: Vec<i64> = core.pending.drain(..).collect();
+        core.delivered += outputs.len() as u64;
+        PulseOutcome {
+            outputs,
+            issued: core.issued,
+            delivered: core.delivered,
+            sim_cycles: 0,
+            shard,
+        }
+    }
+
+    fn last_used(&self) -> Instant {
+        self.core.lock().unwrap().last_used
+    }
+}
+
+/// The coordinator's session table.
+pub(crate) struct SessionManager {
+    cfg: SessionConfig,
+    next: AtomicU64,
+    evicted: AtomicU64,
+    map: Mutex<HashMap<u64, Arc<SessionEntry>>>,
+}
+
+impl SessionManager {
+    pub(crate) fn new(cfg: SessionConfig) -> SessionManager {
+        SessionManager {
+            cfg,
+            next: AtomicU64::new(1),
+            evicted: AtomicU64::new(0),
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Allocates the next session id (the pin `id % shards` needs it
+    /// before the entry exists).
+    pub(crate) fn next_id(&self) -> u64 {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Admits an opened session: lazy idle sweep first, then the hard
+    /// cap — a full table answers `overloaded`, the retryable code.
+    pub(crate) fn insert(&self, entry: Arc<SessionEntry>) -> Result<(), RequestError> {
+        self.sweep(Instant::now());
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= self.cfg.max_sessions {
+            return Err(RequestError::admission(
+                ErrorCode::Overloaded,
+                format!(
+                    "session table full ({} open, cap {})",
+                    map.len(),
+                    self.cfg.max_sessions
+                ),
+            ));
+        }
+        map.insert(entry.id, entry);
+        Ok(())
+    }
+
+    pub(crate) fn get(&self, id: u64) -> Result<Arc<SessionEntry>, RequestError> {
+        self.map.lock().unwrap().get(&id).cloned().ok_or_else(|| {
+            RequestError::admission(
+                ErrorCode::BadRequest,
+                format!("unknown session {id} (closed, evicted, or never opened)"),
+            )
+        })
+    }
+
+    /// Unbinds an id (close path). Jobs already queued with the entry
+    /// `Arc` still complete in order; new pulses see `unknown session`.
+    pub(crate) fn remove(&self, id: u64) -> Option<Arc<SessionEntry>> {
+        self.map.lock().unwrap().remove(&id)
+    }
+
+    /// Evicts sessions idle past the timeout; returns how many.
+    pub(crate) fn sweep(&self, now: Instant) -> usize {
+        let timeout = self.cfg.idle_timeout;
+        let mut map = self.map.lock().unwrap();
+        let before = map.len();
+        map.retain(|_, e| now.saturating_duration_since(e.last_used()) < timeout);
+        let evicted = before - map.len();
+        if evicted > 0 {
+            self.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+        evicted
+    }
+
+    /// Currently open sessions (the `sessions_open` gauge).
+    pub(crate) fn open_count(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Idle-timeout evictions since start (the `sessions_evicted`
+    /// gauge).
+    pub(crate) fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+}

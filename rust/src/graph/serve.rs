@@ -24,13 +24,14 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::approx::MethodSpec;
-use crate::backend::{dequantize_output, quantize_input, ErrorCode};
+use crate::backend::{dequantize_output, quantize_input, BackendError, ErrorCode, EvalBackend};
 use crate::coordinator::Coordinator;
 use crate::fixed::{Fx, QFormat};
 use crate::util::prng::Prng;
 
-use super::cell::CellConfig;
+use super::cell::{lstm_cell, CellConfig};
 use super::exec::{execute_raw, execute_ref, ActivationSink, FreshKernelSink};
+use super::rewrite::optimize;
 use super::CellGraph;
 
 /// How many times one activation batch retries `Overloaded` admission
@@ -122,6 +123,120 @@ impl ActivationSink for CoordinatorSink<'_> {
         output.copy_from_slice(&quantize_input(&reply, spec.io.output));
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(input.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Server-held LSTM cell state for one streaming session: the client
+/// feeds one cell step per pulse as `4·lanes` raw gate pre-activations
+/// (`i|f|g|o` concatenated, gate input format), the server carries the
+/// cell state `c` across pulses, and each pulse replies with the
+/// step's `h_next` lanes (gate output format). Zero delay: the
+/// recurrence is sequential, so every pulse's reply is complete —
+/// there is no pipeline skew to account for.
+pub struct CellSession {
+    graph: CellGraph,
+    lanes: usize,
+    c: Vec<i64>,
+    steps: u64,
+}
+
+impl CellSession {
+    /// Builds the optimized LSTM step graph for `cfg` (sigmoid gates
+    /// fused onto shared tanh kernels) and ensures its activation
+    /// specs on `backend`. Typed failure when the backend cannot
+    /// express a spec, so wire clients see `unknown_spec`, not a
+    /// mangled string.
+    pub fn open(
+        backend: &dyn EvalBackend,
+        cfg: &CellConfig,
+        lanes: usize,
+    ) -> Result<CellSession, BackendError> {
+        if lanes == 0 {
+            return Err(BackendError::bad_request("cell session needs at least one lane"));
+        }
+        let graph = lstm_cell(cfg).map_err(BackendError::bad_request)?;
+        let (fused, _) = optimize(&graph).map_err(BackendError::internal)?;
+        for spec in fused.activation_specs() {
+            backend.ensure(&spec).map_err(|e| {
+                BackendError::new(e.code, format!("cell session spec '{spec}': {}", e.message))
+            })?;
+        }
+        Ok(CellSession { graph: fused, lanes, c: vec![0; lanes], steps: 0 })
+    }
+
+    /// Lanes per step — each pulse must carry `4·lanes` words and each
+    /// reply carries `lanes`.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Cell steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The carried cell state (raw words in the state format) — what
+    /// cold-replay verification compares against.
+    pub fn state(&self) -> &[i64] {
+        &self.c
+    }
+
+    /// One pulse = one cell step over `backend`. Returns the served
+    /// `h_next` lanes plus the simulated cycles the step's activation
+    /// batches occupied the backend, and advances the carried state to
+    /// the served `c_next`.
+    pub fn pulse(
+        &mut self,
+        backend: &dyn EvalBackend,
+        pre: &[i64],
+    ) -> Result<(Vec<i64>, u64), String> {
+        if pre.len() != 4 * self.lanes {
+            return Err(format!(
+                "cell pulse carries {} words, expected 4·lanes = {}",
+                pre.len(),
+                4 * self.lanes
+            ));
+        }
+        let l = self.lanes;
+        let inputs: Vec<(&str, Vec<i64>)> = vec![
+            ("i_pre", pre[..l].to_vec()),
+            ("f_pre", pre[l..2 * l].to_vec()),
+            ("g_pre", pre[2 * l..3 * l].to_vec()),
+            ("o_pre", pre[3 * l..].to_vec()),
+            ("c_prev", self.c.clone()),
+        ];
+        let sink = TallySink { backend, sim_cycles: std::cell::Cell::new(0) };
+        let out = execute_raw(&self.graph, &inputs, &sink)?;
+        let mut h = None;
+        for (name, v) in out {
+            match name.as_str() {
+                "c_next" => self.c = v,
+                "h_next" => h = Some(v),
+                _ => {}
+            }
+        }
+        self.steps += 1;
+        Ok((h.expect("lstm graph exports h_next"), sink.sim_cycles.get()))
+    }
+}
+
+/// [`super::exec::BackendSink`] variant that tallies the backend's
+/// reported simulated cycles, so streamed cell steps land in the
+/// coordinator's `sim_cycles` accounting like flat spec pulses do.
+struct TallySink<'a> {
+    backend: &'a dyn EvalBackend,
+    sim_cycles: std::cell::Cell<u64>,
+}
+
+impl ActivationSink for TallySink<'_> {
+    fn ensure(&self, spec: &MethodSpec) -> Result<(), String> {
+        self.backend.ensure(spec).map_err(|e| e.to_string())
+    }
+
+    fn eval(&self, spec: &MethodSpec, input: &[i64], output: &mut [i64]) -> Result<(), String> {
+        let stats = self.backend.eval_raw(spec, input, output).map_err(|e| e.to_string())?;
+        self.sim_cycles.set(self.sim_cycles.get() + stats.sim_cycles);
         Ok(())
     }
 }
@@ -317,6 +432,48 @@ mod tests {
         assert_eq!(out.requests, 6 * 5);
         assert_eq!(out.elements, 6 * 5 * 16);
         coord.shutdown();
+    }
+
+    #[test]
+    fn cell_session_carries_state_and_matches_direct_recurrence() {
+        let cfg = CellConfig::table1_lstm();
+        let backend = crate::backend::GoldenBackend::new();
+        let lanes = 8usize;
+        let mut sess = CellSession::open(&backend, &cfg, lanes).unwrap();
+        assert_eq!(sess.lanes(), lanes);
+        assert_eq!(sess.state(), &vec![0i64; lanes][..]);
+        // Cold replay reference: the same fused graph over fresh
+        // kernels with an explicitly-carried c.
+        let graph = optimize(&lstm_cell(&cfg).unwrap()).unwrap().0;
+        let fresh = FreshKernelSink::for_graph(&graph);
+        let mut c = vec![0i64; lanes];
+        let mut prng = Prng::new(0xBEEF);
+        for step in 0..5 {
+            let pre: Vec<i64> = (0..4 * lanes)
+                .map(|_| Fx::from_f64(prng.f64_in(-6.0, 6.0), cfg.spec.io.input).raw())
+                .collect();
+            let (h, _cycles) = sess.pulse(&backend, &pre).unwrap();
+            let inputs: Vec<(&str, Vec<i64>)> = vec![
+                ("i_pre", pre[..lanes].to_vec()),
+                ("f_pre", pre[lanes..2 * lanes].to_vec()),
+                ("g_pre", pre[2 * lanes..3 * lanes].to_vec()),
+                ("o_pre", pre[3 * lanes..].to_vec()),
+                ("c_prev", c.clone()),
+            ];
+            let direct = execute_raw(&graph, &inputs, &fresh).unwrap();
+            let want_h = direct.iter().find(|(n, _)| n == "h_next").unwrap().1.clone();
+            c = direct.iter().find(|(n, _)| n == "c_next").unwrap().1.clone();
+            assert_eq!(h, want_h, "step {step}: session h_next diverges from cold replay");
+            assert_eq!(sess.state(), &c[..], "step {step}: carried state diverges");
+        }
+        assert_eq!(sess.steps(), 5);
+        // A wrong-size pulse is rejected without touching the state.
+        let before = sess.state().to_vec();
+        assert!(sess.pulse(&backend, &[0i64; 3]).unwrap_err().contains("4·lanes"));
+        assert_eq!(sess.state(), &before[..]);
+        // Zero lanes is a typed bad_request at open.
+        let err = CellSession::open(&backend, &cfg, 0).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
     }
 
     #[test]

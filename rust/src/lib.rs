@@ -71,9 +71,12 @@
 //!   lowered to the cycle-accurate Fig 3/4/5 datapaths, bit-exact,
 //!   streamed through warm per-spec pipelines with incremental
 //!   simulated-cycle accounting), and `pjrt` (AOT graphs, cleanly
-//!   `Unavailable` under the shim). Everything that executes —
-//!   the coordinator's workers, the CLI's `--backend` flag, sweeps,
-//!   scenario replays — goes through it.
+//!   `Unavailable` under the shim). Backends additionally expose
+//!   client-holdable warm streams ([`backend::EvalStream`] via
+//!   [`backend::open_stream`]) with explicit delay accounting — the
+//!   substrate of the coordinator's streaming sessions. Everything
+//!   that executes — the coordinator's workers, the CLI's `--backend`
+//!   flag, sweeps, scenario replays — goes through it.
 //! - [`coordinator`] — activation-accelerator service: request router
 //!   over per-**spec** worker-shard pools (round-robin or
 //!   least-loaded), dynamic batcher per shard, per-shard metrics with a
@@ -81,6 +84,11 @@
 //!   batch fill rate, failure-kind counters and simulated-cycle
 //!   aggregation, and backpressure; workers execute on any
 //!   [`backend::EvalBackend`], ensured per served spec at startup.
+//!   Streaming **sessions** pin warm per-session state (hw pipeline
+//!   registers, LSTM cell state) to one shard for pulse-by-pulse
+//!   sequence serving with delay accounting, a max-sessions cap and
+//!   idle eviction, over both wire framings (see EXPERIMENTS.md
+//!   §Streaming sessions).
 //! - [`graph`] — typed LSTM/GRU cell dataflow graphs over specs: a
 //!   small IR ([`graph::CellGraph`]) of `MethodSpec`-addressed
 //!   activations (tanh, and sigmoid via `σ(x) = (1 + tanh(x/2))/2`)
@@ -105,7 +113,9 @@
 //!   `BENCH_throughput.json` log (see EXPERIMENTS.md §Perf), and
 //!   [`bench::scenario`]: deterministic seeded load scenarios replayed
 //!   by `tanh-vlsi serve --scenario` into `BENCH_serve.json` (see
-//!   EXPERIMENTS.md §Serve-load protocol).
+//!   EXPERIMENTS.md §Serve-load protocol), plus [`bench::stream`]:
+//!   streaming-session scenarios (`stream-steady`/`-jitter`/`-many`)
+//!   whose pulse replies verify bit-exact against cold golden replays.
 //! - [`util`] — CLI parsing, JSON/CSV writers, PRNG, property-test
 //!   runner: small substrates the offline image forces us to own.
 //!

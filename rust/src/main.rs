@@ -19,6 +19,7 @@
 //! tanh-vlsi serve   --backend hw --scenario steady  cycle-accurate serving
 //! tanh-vlsi serve   --scenario flood --sockets 8    …replayed over 8 real TCP
 //!                                                  connections (json|binary|mixed)
+//! tanh-vlsi serve   --scenario stream-steady       session-stateful pulse streaming
 //! tanh-vlsi serve   --scenario lstm                whole LSTM cell steps via the
 //!                                                  graph layer (fused sigmoids)
 //! tanh-vlsi netcheck                               wire-protocol regression probes
@@ -49,6 +50,7 @@ use tanh_vlsi::approx::{spec, MethodId, MethodSpec, Registry};
 use tanh_vlsi::backend::{self, CostProbe, CostSource, EvalBackend};
 use tanh_vlsi::bench::scenario::{self, RunOptions, Verify, SCENARIO_NAMES};
 use tanh_vlsi::bench::sockets::{run_trace_sockets, Framing, SocketRunOptions};
+use tanh_vlsi::bench::stream::{build_stream_plan, run_stream, run_stream_sockets};
 use tanh_vlsi::bench::BenchLog;
 use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, NetServer, RoutePolicy};
 use tanh_vlsi::cost::UnitLibrary;
@@ -121,7 +123,12 @@ fn app() -> App {
                 // backend_unavailable otherwise).
                 .opt("backend", "golden|hw|pjrt", Some("golden"))
                 .opt("batch", "compiled batch size", Some("1024"))
-                .opt("scenario", "steady|bursty|zipf|flood|maxbatch|lstm|all (deterministic load)", None)
+                .opt(
+                    "scenario",
+                    "steady|bursty|zipf|flood|maxbatch|lstm|stream-steady|stream-jitter|\
+                     stream-many|all (deterministic load)",
+                    None,
+                )
                 .opt("seed", "scenario PRNG seed", Some("42"))
                 .opt("scale", "scenario request-count multiplier (TANH_SMOKE=1 default: 0.1)", Some("1.0"))
                 .opt("shards", "worker shards per method", Some("2"))
@@ -574,6 +581,65 @@ fn cmd_serve_scenarios(
             log.push_row(row);
             continue;
         }
+        // Streaming scenarios pulse long sequences through server-side
+        // sessions instead of replaying one-shot requests — their own
+        // driver (in-process, or over real sockets with --sockets).
+        if name.starts_with("stream-") {
+            let plan = build_stream_plan(name, seed, batch, scale, &cfg.specs)?;
+            let coord =
+                Coordinator::start(backend.clone(), cfg.clone()).map_err(|e| e.to_string())?;
+            let shards_per_method = coord.shards_per_method();
+            let (out, coord) = if sockets > 0 {
+                let coord = Arc::new(coord);
+                let server = NetServer::start(coord.clone(), "127.0.0.1:0")
+                    .map_err(|e| format!("starting net front-end: {e}"))?;
+                let result = run_stream_sockets(&coord, &server, &plan, sockets, framing);
+                server.stop();
+                let coord = Arc::try_unwrap(coord)
+                    .map_err(|_| "net front-end still holds the coordinator".to_string())?;
+                (result?, coord)
+            } else {
+                (run_stream(&coord, &plan)?, coord)
+            };
+            let s = out.stream.as_ref().expect("stream driver fills session stats");
+            let secs = out.wall.as_secs_f64().max(1e-9);
+            println!(
+                "scenario {name:13} seed {seed}: {} sessions, {} pulses ({} elements) in \
+                 {:.3}s on '{backend_name}' × {} shards/method",
+                s.sessions, s.pulses, out.elements, secs, shards_per_method,
+            );
+            if let Some(net) = &out.net {
+                println!(
+                    "  sockets: {} connections ({} framing), {} B in / {} B out",
+                    net.connections, net.framing, net.bytes_in, net.bytes_out,
+                );
+            }
+            println!(
+                "  pulse round-trip µs: p50 {:.0}  p95 {:.0}  p99 {:.0};  {:.0} pulses/s, \
+                 {:.2} Mact/s;  {} backpressure retries, {} evicted",
+                s.pulse_latency.p50(),
+                s.pulse_latency.p95(),
+                s.pulse_latency.p99(),
+                s.pulses as f64 / secs,
+                out.elements as f64 / secs / 1e6,
+                out.retries,
+                s.evicted,
+            );
+            if s.stream_cycles_per_element > 0.0 {
+                println!(
+                    "  warm-stream steady state: {:.3} simulated cycles/element \
+                     (per-batch re-fill would pay the pipeline depth every pulse)",
+                    s.stream_cycles_per_element,
+                );
+            }
+            println!(
+                "  verified {}/{} pulse replies bit-exact against the cold golden replay",
+                out.verified, out.completed
+            );
+            log.push_row(out.to_json(backend_name, shards_per_method, batch));
+            coord.shutdown();
+            continue;
+        }
         let trace = scenario::build_trace(name, seed, batch, scale, &cfg.specs)?;
         let coord =
             Coordinator::start(backend.clone(), cfg.clone()).map_err(|e| e.to_string())?;
@@ -738,6 +804,7 @@ fn run_lstm_scenario(
             cell_steps: stats.cell_steps,
             gate_max_err: stats.gate_max_err,
         }),
+        stream: None,
     };
     let secs = wall.as_secs_f64().max(1e-9);
     println!(
@@ -827,8 +894,10 @@ fn cmd_serve_legacy(
 }
 
 /// `netcheck`: fires the wire-protocol regression payloads (the bugs
-/// fixed in the nonblocking front-end rework) at a live loopback
-/// server and prints each reply — tier1.sh greps the output for the
+/// fixed in the nonblocking front-end rework, plus the wire-layer
+/// truncation bugs: the unchecked u32 reply length prefix and the
+/// `as u16` spec-id table) at a live loopback server and prints each
+/// reply — tier1.sh greps the output for the
 /// expected `bad_request` rejections. Exits nonzero if the server
 /// misbehaves at the transport level; the reply *content* judgment is
 /// left to the caller's greps so a regression shows the actual reply.
@@ -836,7 +905,10 @@ fn cmd_netcheck(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
     use std::io::{BufRead, BufReader, Read, Write};
     use std::net::TcpStream;
     use tanh_vlsi::backend::ErrorCode;
-    use tanh_vlsi::coordinator::{NetConfig, BIN_REPLY_MAGIC, BIN_REQUEST_MAGIC};
+    use tanh_vlsi::bench::sockets::spec_id_table;
+    use tanh_vlsi::coordinator::{
+        try_bin_reply_frame, NetConfig, BIN_REPLY_MAGIC, BIN_REQUEST_MAGIC,
+    };
 
     let batch: usize = p.parse_or("batch", 256usize)?;
     let backend = backend::by_name("golden", batch)?;
@@ -896,6 +968,25 @@ fn cmd_netcheck(p: &tanh_vlsi::util::cli::Parsed) -> Result<(), String> {
         "oversized-bin-frame  {{\"code\":\"{code}\",\"error\":\"{}\"}}",
         String::from_utf8_lossy(&body[1..])
     );
+    // Wire-truncation bugfix 1: a reply body past the length-prefix cap
+    // must be refused by the frame builder, never encoded with a
+    // wrapped u32 prefix. Probed at the library layer with an
+    // injectable cap (a >4 GiB body is unallocatable here); the
+    // server's encoder routes through this same checked builder.
+    let cap_err = match try_bin_reply_frame(0, &[0u8; 8192], 4096) {
+        Err(e) => e,
+        Ok(_) => return Err("reply-frame-cap probe: oversized body encoded anyway".into()),
+    };
+    println!("reply-frame-cap      {{\"code\":\"bad_request\",\"error\":\"{cap_err}\"}}");
+    // Wire-truncation bugfix 2: a served-spec list past the u16 binary
+    // address space must fail table construction, never wrap `as u16`
+    // and alias two specs onto one id.
+    let too_many = vec![MethodSpec::table1(MethodId::Pwl); (u16::MAX as usize) + 2];
+    let table_err = match spec_id_table(&too_many) {
+        Err(e) => e,
+        Ok(_) => return Err("spec-id-overflow probe: 65537 specs got u16 ids".into()),
+    };
+    println!("spec-id-overflow     {{\"code\":\"bad_request\",\"error\":\"{table_err}\"}}");
 
     server.stop();
     if let Ok(c) = Arc::try_unwrap(coord) {

@@ -606,6 +606,7 @@ fn lstm_cell_steps_serve_end_to_end_with_schema_valid_bench_rows() {
             cell_steps: stats.cell_steps,
             gate_max_err: stats.gate_max_err,
         }),
+        stream: None,
     };
     let row = out.to_json("golden", coord.shards_per_method(), batch);
     let mut log = BenchLog::new();

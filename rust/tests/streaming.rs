@@ -1,0 +1,268 @@
+//! Integration tests for the coordinator's streaming-session layer:
+//! exact delay accounting on the cycle-accurate hw backend, shard
+//! pinning for a session's whole life, idle-timeout eviction and the
+//! max-sessions cap, interleaved-session bit-exactness against a cold
+//! golden replay, and the headline win — a warm session's steady-state
+//! simulated cycles per element beating the per-batch re-fill
+//! baseline measured off the same backend.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tanh_vlsi::approx::{MethodId, MethodSpec};
+use tanh_vlsi::backend::{ErrorCode, GoldenBackend, HwBackend};
+use tanh_vlsi::coordinator::{Coordinator, CoordinatorConfig, SessionConfig};
+use tanh_vlsi::fixed::Fx;
+
+/// Raw input words for a spec from f64 test points.
+fn raws(spec: &MethodSpec, xs: &[f64]) -> Vec<i64> {
+    xs.iter().map(|&x| Fx::from_f64(x, spec.io.input).raw()).collect()
+}
+
+/// Cold golden replay: the full expected output sequence through a
+/// freshly compiled kernel (cache-bypassing).
+fn cold(spec: &MethodSpec, input: &[i64]) -> Vec<i64> {
+    let kernel = spec.build().compile(spec.io);
+    let mut out = vec![0i64; input.len()];
+    kernel.eval_slice_raw(input, &mut out);
+    out
+}
+
+/// Deterministic in-range test points spread over the tanh domain.
+fn points(n: usize, phase: usize) -> Vec<f64> {
+    (0..n).map(|i| -4.0 + ((i + phase) % 33) as f64 * 0.25).collect()
+}
+
+#[test]
+fn hw_session_delay_accounting_is_exact() {
+    let spec = MethodSpec::table1(MethodId::Pwl);
+    let cfg = CoordinatorConfig { specs: vec![spec], ..CoordinatorConfig::with_batch(64) };
+    let coord = Coordinator::start(Arc::new(HwBackend::new()), cfg).unwrap();
+    let info = coord.open_session(&spec).unwrap();
+    // The hw stream's advertised delay is the pipeline depth minus one
+    // (the first output emerges after `stages` cycles).
+    let depth = info.delay as u64 + 1;
+    assert!(info.delay > 0, "hw pipelines are staged; delay must be visible");
+    let (p, k) = (16usize, 5usize);
+    let mut input = Vec::new();
+    let mut got = Vec::new();
+    let mut cycles = 0u64;
+    for i in 0..k {
+        let pulse = raws(&spec, &points(p, i * p));
+        input.extend_from_slice(&pulse);
+        let out = coord.session_pulse_blocking(info.id, pulse).unwrap();
+        // The reply lag never exceeds the advertised delay window.
+        assert!(out.issued - out.delivered <= info.delay as u64, "{out:?}");
+        assert_eq!(out.issued, ((i + 1) * p) as u64);
+        cycles += out.sim_cycles;
+        got.extend_from_slice(&out.outputs);
+    }
+    let tail = coord.session_close_blocking(info.id).unwrap();
+    // The flush releases already-computed words: zero new cycles, and
+    // the ledger balances.
+    assert_eq!(tail.sim_cycles, 0, "flush must not re-occupy the datapath");
+    assert_eq!(tail.issued, tail.delivered);
+    got.extend_from_slice(&tail.outputs);
+    // The delay identity: k pulses of P elements through a
+    // depth-`stages` pipeline cost exactly stages + k·P − 1 cycles —
+    // the fill is paid once per session, not once per pulse.
+    assert_eq!(cycles, depth + (k * p) as u64 - 1);
+    // And the streamed sequence is bit-exact against the cold replay.
+    assert_eq!(got, cold(&spec, &input));
+    assert_eq!(coord.sessions_open(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn sessions_pin_to_one_shard_for_life() {
+    let cfg = CoordinatorConfig { shards: 3, ..CoordinatorConfig::with_batch(64) };
+    let coord = Coordinator::start(Arc::new(GoldenBackend::new()), cfg).unwrap();
+    let specs = coord.specs().to_vec();
+    let mut session_shards = Vec::new();
+    let mut ids = Vec::new();
+    for (i, spec) in specs.iter().take(6).enumerate() {
+        let info = coord.open_session(spec).unwrap();
+        let mut shard = None;
+        for j in 0..8 {
+            let out = coord
+                .session_pulse_blocking(info.id, raws(spec, &points(4, i + j)))
+                .unwrap();
+            match shard {
+                None => shard = Some(out.shard),
+                Some(s) => assert_eq!(s, out.shard, "session {} migrated shards", info.id),
+            }
+        }
+        session_shards.push(shard.unwrap());
+        ids.push(info.id);
+    }
+    // Consecutive session ids spread over the pool (`id % shards`), so
+    // streaming load doesn't all pile onto one worker.
+    let distinct: std::collections::HashSet<usize> = session_shards.iter().copied().collect();
+    assert!(distinct.len() > 1, "6 sessions all landed on one shard: {session_shards:?}");
+    for id in ids {
+        coord.session_close_blocking(id).unwrap();
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn idle_sessions_are_evicted_and_answer_unknown() {
+    let cfg = CoordinatorConfig {
+        sessions: SessionConfig {
+            max_sessions: 4096,
+            idle_timeout: Duration::from_millis(40),
+        },
+        ..CoordinatorConfig::with_batch(64)
+    };
+    let coord = Coordinator::start(Arc::new(GoldenBackend::new()), cfg).unwrap();
+    let spec = coord.specs()[0];
+    let info = coord.open_session(&spec).unwrap();
+    assert_eq!(coord.sessions_open(), 1);
+    std::thread::sleep(Duration::from_millis(80));
+    assert_eq!(coord.sweep_sessions(), 1, "idle session must be evicted");
+    assert_eq!(coord.sessions_evicted(), 1);
+    assert_eq!(coord.sessions_open(), 0);
+    // An evicted id answers the same typed error as a never-opened one.
+    let err = coord.session_pulse_blocking(info.id, vec![0i64; 4]).unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("unknown session"), "{err}");
+    // The table still works after eviction: fresh sessions open and
+    // stream normally.
+    let info2 = coord.open_session(&spec).unwrap();
+    assert!(info2.id > info.id);
+    let out = coord.session_pulse_blocking(info2.id, raws(&spec, &points(4, 0))).unwrap();
+    assert_eq!(out.outputs, cold(&spec, &raws(&spec, &points(4, 0))));
+    coord.session_close_blocking(info2.id).unwrap();
+    coord.shutdown();
+}
+
+#[test]
+fn session_table_cap_answers_overloaded() {
+    let cfg = CoordinatorConfig {
+        sessions: SessionConfig {
+            max_sessions: 4,
+            idle_timeout: Duration::from_secs(3600),
+        },
+        ..CoordinatorConfig::with_batch(64)
+    };
+    let coord = Coordinator::start(Arc::new(GoldenBackend::new()), cfg).unwrap();
+    let spec = coord.specs()[0];
+    let ids: Vec<u64> = (0..4).map(|_| coord.open_session(&spec).unwrap().id).collect();
+    let err = coord.open_session(&spec).unwrap_err();
+    assert_eq!(err.code, ErrorCode::Overloaded, "{err}");
+    assert!(err.message.contains("session table full"), "{err}");
+    // Closing one frees a slot immediately.
+    coord.session_close_blocking(ids[0]).unwrap();
+    let info = coord.open_session(&spec).unwrap();
+    for id in ids.into_iter().skip(1).chain([info.id]) {
+        coord.session_close_blocking(id).unwrap();
+    }
+    assert_eq!(coord.sessions_open(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn interleaved_hw_sessions_stay_bit_exact_vs_cold_replay() {
+    // Several sessions over two specs, pulsed interleaved with ragged
+    // widths on a sharded hw coordinator: per-session state (pipeline
+    // registers, delay ledgers) must never bleed across sessions.
+    let specs =
+        vec![MethodSpec::table1(MethodId::Pwl), MethodSpec::table1(MethodId::TaylorCubic)];
+    let cfg =
+        CoordinatorConfig { specs: specs.clone(), shards: 2, ..CoordinatorConfig::with_batch(64) };
+    let coord = Coordinator::start(Arc::new(HwBackend::new()), cfg).unwrap();
+    struct Run {
+        id: u64,
+        spec: MethodSpec,
+        input: Vec<i64>,
+        got: Vec<i64>,
+    }
+    let mut runs: Vec<Run> = (0..6)
+        .map(|i| {
+            let spec = specs[i % specs.len()];
+            let info = coord.open_session(&spec).unwrap();
+            Run { id: info.id, spec, input: Vec::new(), got: Vec::new() }
+        })
+        .collect();
+    for round in 0..10 {
+        for (i, run) in runs.iter_mut().enumerate() {
+            // Ragged pulse widths, different per session and round.
+            let width = 1 + (i + round * 3) % 9;
+            let pulse = raws(&run.spec, &points(width, i * 17 + round * 5));
+            run.input.extend_from_slice(&pulse);
+            let out = coord.session_pulse_blocking(run.id, pulse).unwrap();
+            run.got.extend_from_slice(&out.outputs);
+        }
+    }
+    for run in runs {
+        let tail = coord.session_close_blocking(run.id).unwrap();
+        let mut got = run.got;
+        got.extend_from_slice(&tail.outputs);
+        assert_eq!(
+            got,
+            cold(&run.spec, &run.input),
+            "session {} ({}) diverged from its cold replay",
+            run.id,
+            run.spec
+        );
+    }
+    assert_eq!(coord.sessions_open(), 0);
+    coord.shutdown();
+}
+
+#[test]
+fn warm_stream_matches_the_warm_worker_and_beats_per_batch_refill() {
+    let spec = MethodSpec::table1(MethodId::Pwl);
+    let p = 32usize;
+    let k = 24usize;
+    // Reference: the same workload as independent P-element requests on
+    // a single-shard hw coordinator. The worker's per-thread stream is
+    // itself warm across batches (the seed's streaming-worker win), so
+    // its steady-state cycles/element is the best the batch path does.
+    let cfg = CoordinatorConfig {
+        specs: vec![spec],
+        shards: 1,
+        ..CoordinatorConfig::with_batch(p)
+    };
+    let batch_coord = Coordinator::start(Arc::new(HwBackend::new()), cfg.clone()).unwrap();
+    for i in 0..k {
+        let values: Vec<f32> = points(p, i * p).iter().map(|&x| x as f32).collect();
+        batch_coord.evaluate_spec(&spec, values).unwrap();
+    }
+    let warm_worker = batch_coord.metrics().sim_cycles_per_element();
+    assert!(warm_worker > 1.0, "the first batch pays the fill tax, got {warm_worker}");
+    batch_coord.shutdown();
+
+    // Streamed: one warm session fed the same elements as k pulses.
+    let coord = Coordinator::start(Arc::new(HwBackend::new()), cfg).unwrap();
+    let info = coord.open_session(&spec).unwrap();
+    let mut cycles = 0u64;
+    for i in 0..k {
+        let out = coord.session_pulse_blocking(info.id, raws(&spec, &points(p, i * p))).unwrap();
+        cycles += out.sim_cycles;
+    }
+    let tail = coord.session_close_blocking(info.id).unwrap();
+    cycles += tail.sim_cycles;
+    let stream_cpe = cycles as f64 / (k * p) as f64;
+    // Sessions are never worse than the warm batch worker (here the
+    // cycle ledgers agree exactly: one fill per session vs one fill
+    // per worker thread)…
+    assert!(
+        stream_cpe <= warm_worker,
+        "warm session ({stream_cpe} cycles/element) must not lose to the \
+         warm batch worker ({warm_worker})"
+    );
+    // …and strictly beat a per-batch re-fill substrate, which would
+    // pay the pipeline depth again on every P-element pulse.
+    let depth = info.delay as f64 + 1.0;
+    let refill = (depth + p as f64 - 1.0) / p as f64;
+    assert!(
+        stream_cpe < refill,
+        "warm session ({stream_cpe} cycles/element) must beat per-batch \
+         re-fill ({refill} cycles/element)"
+    );
+    // The session pays the depth exactly once over its k·P elements.
+    let expected = (depth + (k * p) as f64 - 1.0) / (k * p) as f64;
+    assert!((stream_cpe - expected).abs() < 1e-12, "got {stream_cpe}, want {expected}");
+    coord.shutdown();
+}
